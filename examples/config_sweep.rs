@@ -1,0 +1,70 @@
+//! Configuration sweep: the Figure-4 ablations in miniature. Runs a
+//! join-heavy query under the on-prem presets A→E and the cloud presets
+//! F→I, printing runtime plus the mechanism-level counters that explain
+//! each step (wire bytes, compression CPU time, store requests,
+//! pre-load hits).
+//!
+//! ```sh
+//! cargo run --release --example config_sweep [sf]
+//! ```
+//!
+//! The shaped simulation (`time_scale`) is enabled so the modeled
+//! fabric/storage speeds — not the host CPU — dominate, as in the
+//! paper's testbeds. The full bench (`cargo bench --bench fig4_configs`)
+//! runs the whole suite; this example is the quick visual.
+
+use std::sync::Arc;
+
+use theseus::cluster::{Cluster, Gateway};
+use theseus::config::WorkerConfig;
+use theseus::runtime::KernelRegistry;
+use theseus::sim::SimContext;
+use theseus::storage::object_store::{ObjectStore, SimObjectStore};
+use theseus::util::human_bytes;
+use theseus::workload::{tpch_suite, TpchGen};
+
+fn main() -> theseus::Result<()> {
+    let sf: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.005);
+    let registry = KernelRegistry::shared().ok();
+    let q = tpch_suite().into_iter().find(|q| q.id == "q3").unwrap();
+
+    println!("== Fig-4-style sweep: {} at sf={sf}, 4 workers ==\n", q.id);
+    println!(
+        "{:<8} {:>12} {:>12} {:>12} {:>10} {:>10}",
+        "preset", "time", "wire", "compress", "store-req", "preloads"
+    );
+    for preset in ['A', 'B', 'C', 'D', 'E', 'F', 'G', 'H', 'I'] {
+        let mut cfg = WorkerConfig::preset(preset)?;
+        cfg.num_workers = 4;
+        cfg.time_scale = 0.02; // compress modeled hours into seconds
+        let sim = SimContext::new(cfg.profile.clone(), cfg.time_scale);
+        let store_impl = SimObjectStore::in_memory(&sim);
+        let store: Arc<dyn ObjectStore> = store_impl.clone();
+        TpchGen::new(sf).write_all(&store)?;
+
+        let cluster = Cluster::launch(cfg, store, registry.clone())?;
+        let gw = Gateway::new(cluster);
+        let r = gw.submit(&q.logical())?;
+        let compress: std::time::Duration =
+            r.worker_stats.iter().map(|s| s.compress_time).sum();
+        let preloads: u64 = r
+            .worker_stats
+            .iter()
+            .map(|s| s.preload_byte_ranges + s.preload_promotions)
+            .sum();
+        println!(
+            "{:<8} {:>12?} {:>12} {:>12?} {:>10} {:>10}",
+            preset,
+            r.elapsed,
+            human_bytes(r.total_wire_bytes() as usize),
+            compress,
+            store_impl.request_count(),
+            preloads,
+        );
+    }
+    println!("\n(A–E are on-prem network ablations; F–I are cloud storage ablations.)");
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Quickstart: generate a tiny TPC-H dataset, launch a 2-worker
+//! cluster, and run one query through the full three-layer stack.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use theseus::cluster::client::connect;
+use theseus::config::WorkerConfig;
+use theseus::exec::plan::{AggFn, AggSpec, Pred};
+use theseus::planner::Logical;
+use theseus::runtime::KernelRegistry;
+use theseus::sim::SimContext;
+use theseus::storage::object_store::{ObjectStore, SimObjectStore};
+use theseus::workload::TpchGen;
+
+fn main() -> theseus::Result<()> {
+    // 1. a place for data: the in-memory object store, shaped like S3
+    let cfg = WorkerConfig { num_workers: 2, ..WorkerConfig::default() };
+    let sim = SimContext::new(cfg.profile.clone(), cfg.time_scale);
+    let store: Arc<dyn ObjectStore> = SimObjectStore::in_memory(&sim);
+
+    // 2. data: TPC-H at a small scale factor (6k lineitem rows)
+    let bytes = TpchGen::new(0.001).write_all(&store)?;
+    println!("generated TPC-H sf=0.001 ({bytes} bytes of THS files)");
+
+    // 3. the engine: 2 workers, AOT kernels if artifacts are built
+    let registry = KernelRegistry::shared().ok();
+    if registry.is_none() {
+        println!("note: no artifacts found, using host fallbacks (run `make artifacts`)");
+    }
+    let client = connect(cfg, store, registry)?;
+
+    // 4. a query: revenue by return flag for early ship dates
+    let q = Logical::scan("lineitem", &["l_returnflag", "l_extendedprice", "l_shipdate"])
+        .filter(Pred::RangeI64 { col: "l_shipdate".into(), lo: 8036, hi: 9500 })
+        .aggregate(
+            "l_returnflag",
+            vec![
+                AggSpec::new(AggFn::Sum, "l_extendedprice"),
+                AggSpec::new(AggFn::Count, "l_extendedprice"),
+            ],
+        )
+        .sort("l_returnflag", false);
+
+    let r = client.query(&q)?;
+    println!("\nresult ({} rows in {:?}):", r.batch.rows(), r.elapsed);
+    println!("flag\tsum(price)\tcount");
+    for i in 0..r.batch.rows() {
+        let flag = r.batch.column("l_returnflag")?.data.as_i64()?[i];
+        let sum = r.batch.column("sum_l_extendedprice")?.data.as_f64()?[i];
+        let cnt = r.batch.column("count_l_extendedprice")?.data.as_f64()?[i];
+        println!("{flag}\t{sum:.2}\t{cnt}");
+    }
+    for s in &r.worker_stats {
+        println!(
+            "worker {}: {} tasks, {} spills, {} wire bytes",
+            s.worker_id, s.tasks_executed, s.spills, s.net_bytes_wire
+        );
+    }
+    Ok(())
+}

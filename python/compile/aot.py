@@ -1,0 +1,88 @@
+"""AOT pipeline: lower every L2 stage to HLO *text* + emit a manifest.
+
+HLO text — not ``lowered.compile().serialize()`` — is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids
+which xla_extension 0.5.1 (what the Rust ``xla`` crate links) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Outputs:
+  artifacts/<stage>.hlo.txt          one per model.STAGES entry
+  artifacts/manifest.tsv             stage name + I/O specs, parsed by
+                                     rust/src/runtime/manifest.rs
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels import (BATCH_ROWS, BLOCK_ROWS, BLOOM_BITS, NUM_BUCKETS,  # noqa: E402
+                      NUM_PARTS)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_str(s) -> str:
+    """'f32[8192]' / 'i64[1]' — the grammar runtime/manifest.rs parses."""
+    name = {"float32": "f32", "int64": "i64", "int32": "i32",
+            "uint32": "u32", "uint64": "u64"}[str(s.dtype)]
+    dims = ",".join(str(d) for d in s.shape)
+    return f"{name}[{dims}]"
+
+
+def lower_stage(name: str, fn, example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    out_shapes = jax.eval_shape(fn, *example_args)
+    return text, [_spec_str(s) for s in example_args], \
+        [_spec_str(s) for s in out_shapes]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated stage subset (for iteration)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    rows = []
+    for name, (fn, ex) in model.STAGES.items():
+        if only and name not in only:
+            continue
+        text, ins, outs = lower_stage(name, fn, ex)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        rows.append((name, ins, outs))
+        print(f"  {name}: {len(text)} chars, in={ins} out={outs}")
+
+    manifest = os.path.join(args.out_dir, "manifest.tsv")
+    header = (f"# theseus AOT manifest\tbatch_rows={BATCH_ROWS}"
+              f"\tblock_rows={BLOCK_ROWS}\tnum_parts={NUM_PARTS}"
+              f"\tnum_buckets={NUM_BUCKETS}\tbloom_bits={BLOOM_BITS}\n")
+    with open(manifest, "w") as f:
+        f.write(header)
+        for name, ins, outs in rows:
+            f.write(f"{name}\t{';'.join(ins)}\t{';'.join(outs)}\n")
+    print(f"wrote {manifest} ({len(rows)} stages)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Layer-1 Pallas kernels for the Theseus compute hot spots.
+
+Every kernel is written with ``interpret=True`` so that the lowered HLO
+contains plain XLA ops executable by the PJRT CPU client in the Rust
+runtime (real-TPU Mosaic lowering is compile-only in this environment;
+see DESIGN.md §Hardware-Adaptation).
+
+Fixed shapes: HLO is static-shape, so the Rust coordinator pads every
+batch to ``BATCH_ROWS`` and passes the true row count out-of-band (the
+mask column). This mirrors the paper's batch sizing discipline (§3.1):
+"large enough to amortize GPU kernel launch overhead and small enough to
+allow multiple GPU streams to run simultaneously".
+"""
+
+BATCH_ROWS = 8192      # rows per device batch (padded)
+BLOCK_ROWS = 1024      # Pallas block size (VMEM tile)
+NUM_PARTS = 16         # exchange hash-partition fanout
+NUM_BUCKETS = 1024     # pre-aggregation hash buckets
+BLOOM_BITS = 16384     # LIP bloom filter width (unpacked u32 cells)
+
+from . import filter as filter_kernel   # noqa: E402,F401
+from . import hashing                    # noqa: E402,F401
+from . import agg                        # noqa: E402,F401
+from . import bloom                      # noqa: E402,F401
+from . import ref                        # noqa: E402,F401

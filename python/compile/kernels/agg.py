@@ -1,0 +1,108 @@
+"""Bucketed pre-aggregation Pallas kernel (L1).
+
+Grid-accumulation reduction: the grid walks ``BLOCK_ROWS`` tiles of the
+input while every grid step maps to the *same* output block, so the
+kernel accumulates per-bucket partial sums/counts across tiles — the
+Pallas idiom for a reduction kernel (the TPU analogue of a CUDA
+atomic-add histogram kernel; see DESIGN.md §Hardware-Adaptation).
+
+The coordinator merges per-batch partials and resolves bucket collisions
+with the true group keys (exec/operators/aggregate.rs), exactly like a
+two-phase GPU hash aggregation with a device pre-aggregate pass.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import BATCH_ROWS, BLOCK_ROWS, NUM_BUCKETS
+
+
+def _preagg_kernel(bucket_ref, val_ref, mask_ref, sum_ref, cnt_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    b = bucket_ref[...]
+    m = mask_ref[...]
+    v = val_ref[...] * m.astype(val_ref.dtype)
+    g = sum_ref.shape[0]
+    sum_ref[...] += jnp.zeros((g,), val_ref.dtype).at[b].add(v)
+    cnt_ref[...] += jnp.zeros((g,), jnp.int32).at[b].add(m)
+
+
+def preagg_sum_count(buckets, vals, mask, *, g=NUM_BUCKETS, n=BATCH_ROWS,
+                     block=BLOCK_ROWS):
+    """Per-bucket (sum f32[g], count i32[g]) of masked values.
+
+    Padding rows must carry ``mask == 0``; they then contribute nothing
+    to either output (bucket 0 receives +0.0 / +0).
+    """
+    grid = (n // block,)
+    return pl.pallas_call(
+        _preagg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((g,), lambda i: (0,)),
+            pl.BlockSpec((g,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g,), jnp.float32),
+            jax.ShapeDtypeStruct((g,), jnp.int32),
+        ],
+        interpret=True,
+    )(buckets, vals, mask)
+
+
+def _minmax_kernel(bucket_ref, val_ref, mask_ref, min_ref, max_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        min_ref[...] = jnp.full_like(min_ref, jnp.inf)
+        max_ref[...] = jnp.full_like(max_ref, -jnp.inf)
+
+    b = bucket_ref[...]
+    m = mask_ref[...] != 0
+    v = val_ref[...]
+    g = min_ref.shape[0]
+    vmin = jnp.where(m, v, jnp.inf)
+    vmax = jnp.where(m, v, -jnp.inf)
+    min_ref[...] = jnp.minimum(min_ref[...],
+                               jnp.full((g,), jnp.inf, v.dtype).at[b].min(vmin))
+    max_ref[...] = jnp.maximum(max_ref[...],
+                               jnp.full((g,), -jnp.inf, v.dtype).at[b].max(vmax))
+
+
+def preagg_min_max(buckets, vals, mask, *, g=NUM_BUCKETS, n=BATCH_ROWS,
+                   block=BLOCK_ROWS):
+    """Per-bucket (min f32[g], max f32[g]); empty buckets hold ±inf."""
+    grid = (n // block,)
+    return pl.pallas_call(
+        _minmax_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((g,), lambda i: (0,)),
+            pl.BlockSpec((g,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g,), jnp.float32),
+            jax.ShapeDtypeStruct((g,), jnp.float32),
+        ],
+        interpret=True,
+    )(buckets, vals, mask)

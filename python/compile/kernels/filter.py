@@ -1,0 +1,75 @@
+"""Predicate-filter Pallas kernel (L1).
+
+Computes an ``i32`` 0/1 selection mask for a range predicate
+``lo <= x < hi`` over one column, combined with the incoming validity
+mask. This is the device half of the Filter operator (§3.1): the mask is
+returned to the coordinator, which performs the (memory-bound) gather
+when materializing the output batch.
+
+The kernel is gridded over ``BLOCK_ROWS`` tiles so each tile fits a VMEM
+block; scalars ride along as (1,)-shaped operands mapped to block (0,).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import BATCH_ROWS, BLOCK_ROWS
+
+
+def _range_mask_kernel(col_ref, lo_ref, hi_ref, mask_ref, out_ref):
+    x = col_ref[...]
+    lo = lo_ref[0]
+    hi = hi_ref[0]
+    keep = (x >= lo) & (x < hi)
+    out_ref[...] = jnp.where(keep, 1, 0).astype(jnp.int32) * mask_ref[...]
+
+
+def range_mask(col, lo, hi, mask, *, n=BATCH_ROWS, block=BLOCK_ROWS):
+    """0/1 i32 mask for ``lo <= col < hi`` AND ``mask != 0``.
+
+    Args:
+      col:  f32[n] or i64[n] column values (padding rows are don't-care).
+      lo:   same-dtype (1,) lower bound (inclusive).
+      hi:   same-dtype (1,) upper bound (exclusive).
+      mask: i32[n] incoming validity mask (0 for padding rows).
+    Returns:
+      i32[n] selection mask.
+    """
+    grid = (n // block,)
+    return pl.pallas_call(
+        _range_mask_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(col, lo, hi, mask)
+
+
+def _eq_mask_kernel(col_ref, val_ref, mask_ref, out_ref):
+    keep = col_ref[...] == val_ref[0]
+    out_ref[...] = jnp.where(keep, 1, 0).astype(jnp.int32) * mask_ref[...]
+
+
+def eq_mask(col, val, mask, *, n=BATCH_ROWS, block=BLOCK_ROWS):
+    """0/1 i32 mask for ``col == val`` AND ``mask != 0`` (dictionary-coded
+    string equality predicates are pushed down as integer codes)."""
+    grid = (n // block,)
+    return pl.pallas_call(
+        _eq_mask_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(col, val, mask)

@@ -1,0 +1,99 @@
+"""Hash / partition Pallas kernel (L1).
+
+SplitMix64-finalizer hash of i64 join/exchange keys. The same finalizer
+is implemented bit-for-bit in Rust (``rust/src/util/hash.rs``) so that
+the CPU baseline engine, the bucket-overflow finalize step, and the
+device kernels agree on every partition decision.
+
+Used by the Adaptive Exchange operator (§3.2) to hash-partition batches
+across workers, and by the pre-aggregation / join stages to derive
+bucket ids.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import BATCH_ROWS, BLOCK_ROWS
+
+_SPLITMIX_C0 = 0x9E3779B97F4A7C15
+_SPLITMIX_C1 = 0xBF58476D1CE4E5B9
+_SPLITMIX_C2 = 0x94D049BB133111EB
+
+
+def splitmix64(x):
+    """SplitMix64 finalizer over uint64 lanes (vectorized)."""
+    z = (x + jnp.uint64(_SPLITMIX_C0)).astype(jnp.uint64)
+    z = (z ^ (z >> jnp.uint64(30))) * jnp.uint64(_SPLITMIX_C1)
+    z = (z ^ (z >> jnp.uint64(27))) * jnp.uint64(_SPLITMIX_C2)
+    return z ^ (z >> jnp.uint64(31))
+
+
+def _hash_kernel(keys_ref, out_ref):
+    k = keys_ref[...].astype(jnp.uint64)
+    out_ref[...] = splitmix64(k)
+
+
+def hash_keys(keys, *, n=BATCH_ROWS, block=BLOCK_ROWS):
+    """u64[n] SplitMix64 hash of i64[n] keys."""
+    grid = (n // block,)
+    return pl.pallas_call(
+        _hash_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint64),
+        interpret=True,
+    )(keys)
+
+
+def _partition_kernel(keys_ref, mask_ref, part_ref, *, parts):
+    h = splitmix64(keys_ref[...].astype(jnp.uint64))
+    p = (h & jnp.uint64(parts - 1)).astype(jnp.int32)
+    # Padding rows are routed to partition 0 but carry mask 0; the
+    # coordinator drops them during compaction.
+    part_ref[...] = jnp.where(mask_ref[...] != 0, p, 0)
+
+
+def partition_ids(keys, mask, *, parts, n=BATCH_ROWS, block=BLOCK_ROWS):
+    """i32[n] partition id in [0, parts) for each key; parts must be 2^k."""
+    assert parts & (parts - 1) == 0, "parts must be a power of two"
+    grid = (n // block,)
+    import functools
+    return pl.pallas_call(
+        functools.partial(_partition_kernel, parts=parts),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(keys, mask)
+
+
+def _bucket_kernel(keys_ref, mask_ref, out_ref, *, buckets):
+    h = splitmix64(keys_ref[...].astype(jnp.uint64))
+    # Use the *high* bits for bucketing so bucket ids stay independent of
+    # the low-bit partition ids (avoids correlated skew after exchange).
+    b = ((h >> jnp.uint64(32)) & jnp.uint64(buckets - 1)).astype(jnp.int32)
+    out_ref[...] = jnp.where(mask_ref[...] != 0, b, 0)
+
+
+def bucket_ids(keys, mask, *, buckets, n=BATCH_ROWS, block=BLOCK_ROWS):
+    """i32[n] aggregation/join bucket id in [0, buckets) per key."""
+    assert buckets & (buckets - 1) == 0
+    grid = (n // block,)
+    import functools
+    return pl.pallas_call(
+        functools.partial(_bucket_kernel, buckets=buckets),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(keys, mask)

@@ -1,0 +1,82 @@
+"""Pure-numpy oracle for every L1 kernel — the correctness ground truth.
+
+pytest (python/tests/) asserts kernel == ref across hypothesis-generated
+shapes, dtypes, and values; the Rust side re-asserts the same SplitMix64
+constants via artifacts executed through PJRT (rust/tests/).
+"""
+
+import numpy as np
+
+_SPLITMIX_C0 = np.uint64(0x9E3779B97F4A7C15)
+_SPLITMIX_C1 = np.uint64(0xBF58476D1CE4E5B9)
+_SPLITMIX_C2 = np.uint64(0x94D049BB133111EB)
+_SECOND_HASH_SEED = np.uint64(0xA24BAED4963EE407)
+
+
+def splitmix64(x: np.ndarray) -> np.ndarray:
+    with np.errstate(over="ignore"):
+        z = (x.astype(np.uint64) + _SPLITMIX_C0)
+        z = (z ^ (z >> np.uint64(30))) * _SPLITMIX_C1
+        z = (z ^ (z >> np.uint64(27))) * _SPLITMIX_C2
+        return z ^ (z >> np.uint64(31))
+
+
+def range_mask(col, lo, hi, mask):
+    keep = (col >= lo) & (col < hi)
+    return (keep.astype(np.int32) * mask.astype(np.int32)).astype(np.int32)
+
+
+def eq_mask(col, val, mask):
+    return ((col == val).astype(np.int32) * mask.astype(np.int32)).astype(
+        np.int32)
+
+
+def partition_ids(keys, mask, parts):
+    h = splitmix64(keys.astype(np.uint64))
+    p = (h & np.uint64(parts - 1)).astype(np.int32)
+    return np.where(mask != 0, p, 0).astype(np.int32)
+
+
+def bucket_ids(keys, mask, buckets):
+    h = splitmix64(keys.astype(np.uint64))
+    b = ((h >> np.uint64(32)) & np.uint64(buckets - 1)).astype(np.int32)
+    return np.where(mask != 0, b, 0).astype(np.int32)
+
+
+def preagg_sum_count(buckets, vals, mask, g):
+    sums = np.zeros(g, np.float32)
+    cnts = np.zeros(g, np.int32)
+    np.add.at(sums, buckets, vals.astype(np.float32) * mask)
+    np.add.at(cnts, buckets, mask.astype(np.int32))
+    return sums, cnts
+
+
+def preagg_min_max(buckets, vals, mask, g):
+    mins = np.full(g, np.inf, np.float32)
+    maxs = np.full(g, -np.inf, np.float32)
+    sel = mask != 0
+    np.minimum.at(mins, buckets[sel], vals[sel].astype(np.float32))
+    np.maximum.at(maxs, buckets[sel], vals[sel].astype(np.float32))
+    return mins, maxs
+
+
+def _hash2(keys):
+    k = keys.astype(np.uint64)
+    return splitmix64(k), splitmix64(k ^ _SECOND_HASH_SEED)
+
+
+def bloom_build(keys, mask, bits):
+    h1, h2 = _hash2(keys)
+    cells = np.zeros(bits, np.uint32)
+    sel = mask != 0
+    cells[(h1[sel] % np.uint64(bits)).astype(np.int64)] = 1
+    cells[(h2[sel] % np.uint64(bits)).astype(np.int64)] = 1
+    return cells
+
+
+def bloom_probe(keys, mask, cells):
+    bits = np.uint64(cells.shape[0])
+    h1, h2 = _hash2(keys)
+    hit = (cells[(h1 % bits).astype(np.int64)] != 0) & (
+        cells[(h2 % bits).astype(np.int64)] != 0)
+    return (hit.astype(np.int32) * mask.astype(np.int32)).astype(np.int32)

@@ -1,0 +1,115 @@
+"""Layer-2 stage graphs: the JAX compute functions the Rust Compute
+Executor dispatches to, each composed from the L1 Pallas kernels.
+
+One *stage* == one AOT HLO artifact == one PJRT executable in the Rust
+``runtime::KernelRegistry``. Shapes are static (see kernels/__init__);
+``aot.py`` lowers every entry of ``STAGES`` and emits a manifest the
+Rust side parses.
+
+Stage catalogue (operator → stage):
+  Filter                → filter_range_f32 / filter_range_i64 / filter_eq_i64
+  Adaptive Exchange     → hash_partition (ids + histogram)
+  Hash Aggregate        → bucket_preagg (ids + masked sum/count/min/max)
+  Adaptive Join (LIP)   → bloom_build / bloom_probe
+  fused scan filter     → filter_hash_fused (perf-pass: one launch
+                          instead of two for filter→exchange pipelines)
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (BATCH_ROWS, BLOOM_BITS, NUM_BUCKETS, NUM_PARTS, agg,
+                      bloom, filter as filt, hashing)
+
+N = BATCH_ROWS
+
+
+# --------------------------------------------------------------------------
+# stage functions (all return tuples — lowered with return_tuple=True)
+# --------------------------------------------------------------------------
+
+def filter_range_f32(col, lo, hi, mask):
+    return (filt.range_mask(col, lo, hi, mask),)
+
+
+def filter_range_i64(col, lo, hi, mask):
+    return (filt.range_mask(col, lo, hi, mask),)
+
+
+def filter_eq_i64(col, val, mask):
+    return (filt.eq_mask(col, val, mask),)
+
+
+def hash_partition(keys, mask):
+    """Partition ids + per-partition histogram for the Adaptive Exchange.
+
+    The histogram feeds the exchange's *size estimation* phase (§3.2):
+    workers broadcast estimated per-partition bytes derived from these
+    counts before deciding hash-partition vs broadcast.
+    """
+    part = hashing.partition_ids(keys, mask, parts=NUM_PARTS)
+    hist = jnp.zeros((NUM_PARTS,), jnp.int32).at[part].add(mask)
+    return part, hist
+
+
+def bucket_preagg(keys, vals, mask):
+    """Bucket ids + per-bucket sum/count/min/max — the device
+    pre-aggregation pass of the two-phase hash aggregate."""
+    b = hashing.bucket_ids(keys, mask, buckets=NUM_BUCKETS)
+    sums, cnts = agg.preagg_sum_count(b, vals, mask)
+    mins, maxs = agg.preagg_min_max(b, vals, mask)
+    return b, sums, cnts, mins, maxs
+
+
+def bloom_build(keys, mask):
+    return (bloom.bloom_build(keys, mask),)
+
+
+def bloom_probe(keys, mask, cells):
+    return (bloom.bloom_probe(keys, mask, cells),)
+
+
+def filter_hash_fused(col, lo, hi, keys, mask):
+    """Fused Filter → Exchange-hash stage: the filter mask feeds the
+    partitioner in one launch, saving one device round-trip per batch on
+    the scan→filter→exchange spine of most TPC-H plans (perf pass)."""
+    m = filt.range_mask(col, lo, hi, mask)
+    part = hashing.partition_ids(keys, m, parts=NUM_PARTS)
+    hist = jnp.zeros((NUM_PARTS,), jnp.int32).at[part].add(m)
+    return m, part, hist
+
+
+# --------------------------------------------------------------------------
+# lowering specs
+# --------------------------------------------------------------------------
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i64(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int64)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _u32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint32)
+
+
+#: name -> (fn, example_args). Every entry becomes artifacts/<name>.hlo.txt.
+STAGES = {
+    "filter_range_f32": (filter_range_f32, (_f32(N), _f32(1), _f32(1), _i32(N))),
+    "filter_range_i64": (filter_range_i64, (_i64(N), _i64(1), _i64(1), _i32(N))),
+    "filter_eq_i64": (filter_eq_i64, (_i64(N), _i64(1), _i32(N))),
+    "hash_partition": (hash_partition, (_i64(N), _i32(N))),
+    "bucket_preagg": (bucket_preagg, (_i64(N), _f32(N), _i32(N))),
+    "bloom_build": (bloom_build, (_i64(N), _i32(N))),
+    "bloom_probe": (bloom_probe, (_i64(N), _i32(N), _u32(BLOOM_BITS))),
+    "filter_hash_fused": (filter_hash_fused,
+                          (_f32(N), _f32(1), _f32(1), _i64(N), _i32(N))),
+}

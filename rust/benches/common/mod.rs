@@ -1,0 +1,81 @@
+//! Shared bench harness: cluster setup, suite timing, table printing.
+//!
+//! All benches run in *scaled modeled time* (`time_scale > 0`): wall
+//! clock then reflects the calibrated device/wire/storage speeds of the
+//! paper's testbeds rather than this host's CPU, so configuration
+//! ratios — the quantity every figure reports — carry over. Absolute
+//! seconds are not comparable to the paper's (its clusters are ~3
+//! orders of magnitude larger); *shapes* are.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use theseus::cluster::{Cluster, Gateway, QueryResult};
+use theseus::config::WorkerConfig;
+use theseus::runtime::KernelRegistry;
+use theseus::sim::SimContext;
+use theseus::storage::object_store::{ObjectStore, SimObjectStore};
+use theseus::workload::{QueryDef, TpchGen};
+
+/// Scale a hardware profile's bandwidths down by `f` (latencies
+/// unchanged). Benches run datasets ~1e6-1e7x smaller than the paper's;
+/// unscaled multi-GiB/s modeled links would make every transfer free
+/// and erase the fabric effects the figures measure. Dividing bandwidth
+/// by the data scale-down restores the paper's data:fabric ratio.
+pub fn scale_fabric(p: &mut theseus::sim::HwProfile, f: f64) {
+    let s = |spec: &mut theseus::sim::LinkSpec| {
+        spec.bytes_per_sec = ((spec.bytes_per_sec as f64 / f) as u64).max(1);
+    };
+    s(&mut p.pcie);
+    s(&mut p.net_tcp);
+    if let Some(r) = p.net_rdma.as_mut() {
+        s(r);
+    }
+    s(&mut p.storage);
+    s(&mut p.device_compute);
+}
+
+/// Generate TPC-H into a fresh store shaped by `cfg`.
+pub fn tpch_store(cfg: &WorkerConfig, sf: f64) -> Arc<SimObjectStore> {
+    let sim = SimContext::new(cfg.profile.clone(), cfg.time_scale);
+    let store = SimObjectStore::in_memory(&sim);
+    let dynstore: Arc<dyn ObjectStore> = store.clone();
+    TpchGen::new(sf).write_all(&dynstore).expect("datagen");
+    store
+}
+
+/// Run a suite sequentially (as §4 does); returns (total, per-query).
+pub fn run_suite(
+    gw: &Gateway,
+    suite: &[QueryDef],
+) -> (Duration, Vec<(String, QueryResult)>) {
+    let mut total = Duration::ZERO;
+    let mut per = Vec::new();
+    for q in suite {
+        let r = gw.submit(&q.logical()).unwrap_or_else(|e| panic!("{}: {e}", q.id));
+        total += r.elapsed;
+        per.push((q.id.to_string(), r));
+    }
+    (total, per)
+}
+
+/// Launch a cluster + gateway over `store`.
+pub fn gateway(cfg: WorkerConfig, store: Arc<SimObjectStore>) -> Gateway {
+    let registry = KernelRegistry::shared().ok();
+    let cluster =
+        Cluster::launch(cfg, store, registry).expect("cluster launch");
+    Gateway::new(cluster)
+}
+
+/// `12.3%` / `4.46x`-style delta formatting vs a baseline duration.
+pub fn delta_pct(base: Duration, d: Duration) -> String {
+    if base.is_zero() {
+        return "-".into();
+    }
+    let pct = 100.0 * (base.as_secs_f64() - d.as_secs_f64()) / base.as_secs_f64();
+    format!("{pct:+.1}%")
+}
+
+pub fn secs(d: Duration) -> String {
+    format!("{:.3}s", d.as_secs_f64())
+}

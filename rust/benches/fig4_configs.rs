@@ -1,0 +1,134 @@
+//! Figure 4 reproduction: TPC-H suite runtime under the configuration
+//! ladder — on-prem A→E (network/pinned-pool ablations) and cloud F→I
+//! (datasource/pre-loading ablations).
+//!
+//! Paper shape to reproduce (§4.1):
+//!   A→B  network compression on TCP helps        (−18%)
+//!   B→C  pinned fixed-size buffers help          (−17%)
+//!   C→D  RDMA helps a little while compressing   (−6%)
+//!   D→E  dropping compression on RDMA helps more (−19%)  (A→E ≈ 2x)
+//!   F→G  custom object-store datasource          (−75%)
+//!   G→H  byte-range pre-loading                  (−20%)
+//!   H→I  compute-task pre-loading                (−19%)
+//!
+//! Run: `cargo bench --bench fig4_configs` (optionally `SF=0.005`).
+
+mod common;
+
+use common::{delta_pct, gateway, run_suite, secs, tpch_store};
+use theseus::config::WorkerConfig;
+use theseus::storage::object_store::ObjectStore;
+use theseus::workload::tpch_suite;
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Fabric scale-downs restoring the paper's data:bandwidth ratios for
+/// our ~1e6x-smaller datasets (see common::scale_fabric). The IPoIB-TCP
+/// path is scaled harder than GPUDirect RDMA: on the real hardware the
+/// TCP path is bottlenecked by per-byte host CPU work (which our scaled
+/// wall-clock can't charge), while RDMA bypasses the host entirely —
+/// the asymmetry *is* the D/E phenomenon under test.
+const TCP_SCALE: f64 = 2000.0;
+const RDMA_SCALE: f64 = 100.0;
+const PCIE_SCALE: f64 = 500.0;
+
+fn main() {
+    let sf = env_f64("SF", 0.003);
+    let workers = env_f64("WORKERS", 4.0) as usize;
+    let suite = tpch_suite();
+    let onprem_scale = env_f64("ONPREM_SCALE", 0.3);
+    // Cloud: storage latency dominates (S3-like 15 ms first-byte).
+    let cloud_scale = env_f64("CLOUD_SCALE", 0.3);
+
+    println!("== Fig 4: TPC-H suite runtime by configuration ==");
+    println!("sf={sf}, {workers} workers, suite of {} queries\n", suite.len());
+
+    println!("-- on-prem (A-E), time_scale={onprem_scale} --");
+    println!(
+        "{:<3} {:<42} {:>10} {:>8} {:>8}",
+        "cfg", "description", "total", "vs A", "vs prev"
+    );
+    let mut base = None;
+    let mut prev = None;
+    for (letter, desc) in [
+        ('A', "baseline: TCP, no compression, no pinned pool"),
+        ('B', "A + network compression"),
+        ('C', "B + pinned fixed-size buffer pool"),
+        ('D', "C + GPUDirect-RDMA fabric"),
+        ('E', "D - compression (free the CPU cycles)"),
+    ] {
+        let mut cfg = WorkerConfig::preset(letter).unwrap();
+        cfg.num_workers = workers;
+        cfg.time_scale = onprem_scale;
+        // keep the real-TCP medium out of the on-prem compare: shaping
+        // is the ablated quantity (see network module docs)
+        if cfg.transport == theseus::config::TransportKind::Tcp {
+            cfg.transport = theseus::config::TransportKind::Inproc;
+        }
+        // restore the paper's data:fabric ratio
+        let p = &mut cfg.profile;
+        p.net_tcp.bytes_per_sec = (p.net_tcp.bytes_per_sec as f64 / TCP_SCALE) as u64;
+        if let Some(r) = p.net_rdma.as_mut() {
+            r.bytes_per_sec = (r.bytes_per_sec as f64 / RDMA_SCALE) as u64;
+        }
+        p.pcie.bytes_per_sec = (p.pcie.bytes_per_sec as f64 / PCIE_SCALE) as u64;
+        let store = tpch_store(&cfg, sf);
+        let gw = gateway(cfg, store);
+        let (total, _) = run_suite(&gw, &suite);
+        let vs_a = base.map(|b| delta_pct(b, total)).unwrap_or_else(|| "-".into());
+        let vs_p = prev.map(|p| delta_pct(p, total)).unwrap_or_else(|| "-".into());
+        println!("{:<3} {:<42} {:>10} {:>8} {:>8}", letter, desc, secs(total), vs_a, vs_p);
+        base.get_or_insert(total);
+        prev = Some(total);
+    }
+    if let (Some(a), Some(e)) = (base, prev) {
+        println!(
+            "A -> E combined speedup: {:.2}x (paper: ~2x)\n",
+            a.as_secs_f64() / e.as_secs_f64()
+        );
+    }
+
+    println!("-- cloud (F-I), time_scale={cloud_scale} --");
+    println!(
+        "{:<3} {:<42} {:>10} {:>8} {:>8}",
+        "cfg", "description", "total", "vs F", "vs prev"
+    );
+    let mut base = None;
+    let mut prev = None;
+    for (letter, desc) in [
+        ('F', "generic datasource, no pre-loading"),
+        ('G', "custom object-store datasource"),
+        ('H', "G + byte-range pre-loading"),
+        ('I', "H + compute-task pre-loading"),
+    ] {
+        let mut cfg = WorkerConfig::preset(letter).unwrap();
+        cfg.num_workers = workers;
+        cfg.time_scale = cloud_scale;
+        cfg.transport = theseus::config::TransportKind::Inproc;
+        // pre-loading needs enough I/O threads to stay ahead of the
+        // compute executor ("all executors have a number of
+        // configurable CPU threads", §3.3)
+        cfg.preload_threads = 4;
+        let store = tpch_store(&cfg, sf);
+        let reqs_before = store.request_count();
+        let gw = gateway(cfg, store.clone());
+        let (total, _) = run_suite(&gw, &suite);
+        let reqs = store.request_count() - reqs_before;
+        let vs_f = base.map(|b| delta_pct(b, total)).unwrap_or_else(|| "-".into());
+        let vs_p = prev.map(|p| delta_pct(p, total)).unwrap_or_else(|| "-".into());
+        println!(
+            "{:<3} {:<42} {:>10} {:>8} {:>8}   ({reqs} store requests)",
+            letter, desc, secs(total), vs_f, vs_p
+        );
+        base.get_or_insert(total);
+        prev = Some(total);
+    }
+    if let (Some(f), Some(i)) = (base, prev) {
+        println!(
+            "F -> I combined speedup: {:.2}x",
+            f.as_secs_f64() / i.as_secs_f64()
+        );
+    }
+}

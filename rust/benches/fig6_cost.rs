@@ -1,0 +1,123 @@
+//! Figure 6 + Table 1 reproduction: performance vs cost of Theseus on
+//! GPU cloud nodes against a Photon-like CPU engine on memory-heavy
+//! CPU nodes, at matched cluster $/hour.
+//!
+//! Paper shape to reproduce (§4.3):
+//!  * Table 1's cluster pairings, $/h and memory totals (exact);
+//!  * Theseus wins at every scale factor and cluster size;
+//!  * the margin grows with scale: +12.3% at the smallest pairing to
+//!    ~4.46x at the largest.
+//!
+//! The Photon stand-in is our single-threaded CPU engine; a Photon
+//! *cluster* of N nodes is modeled as baseline_time / (N * 0.85)
+//! (85% parallel efficiency — generous to the comparator; see
+//! DESIGN.md substitution #3). Theseus runtimes are measured, with the
+//! paper's cloud node counts mapped 4:1 onto local workers.
+//!
+//! Run: `cargo bench --bench fig6_cost`.
+
+mod common;
+
+use common::{gateway, run_suite, tpch_store};
+use theseus::config::WorkerConfig;
+use theseus::sim::cost::{CostModel, G6_4XLARGE, R7GD_12XLARGE, TABLE1_PAIRS};
+use theseus::sim::HwProfile;
+use theseus::workload::{tpch_suite, CpuEngine};
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+const PHOTON_PARALLEL_EFF: f64 = 0.85;
+
+fn main() {
+    let time_scale = env_f64("TIME_SCALE", 0.05);
+    // "1k / 3k / 10k / 30k" scaled down by ~1e6
+    let sfs = [0.001, 0.003, 0.01, 0.03];
+    let sf_names = ["1k~", "3k~", "10k~", "30k~"];
+    let suite = tpch_suite();
+
+    // ---------------- Table 1
+    println!("== Table 1: cluster pairings ==");
+    println!(
+        "{:>8} {:>10} {:>10} | {:>8} {:>10} {:>10}",
+        "Theseus", "Memory", "Cost", "Photon", "Memory", "Cost"
+    );
+    for (t_nodes, p_nodes) in TABLE1_PAIRS {
+        let t = CostModel::new(G6_4XLARGE, t_nodes);
+        let p = CostModel::new(R7GD_12XLARGE, p_nodes);
+        println!(
+            "{:>8} {:>9}G {:>8.2}$ | {:>8} {:>9}G {:>8.2}$",
+            t_nodes,
+            t.total_memory_gib(),
+            t.usd_per_hour(),
+            p_nodes,
+            p.total_memory_gib(),
+            p.usd_per_hour()
+        );
+    }
+
+    // ---------------- Figure 6
+    println!("\n== Fig 6: TPC-H suite, performance vs cost (time_scale={time_scale}) ==");
+    println!(
+        "{:<5} {:>7} {:>7} {:>12} {:>12} {:>12} {:>10}",
+        "SF", "t-nodes", "p-nodes", "theseus", "photon-like", "$/run ratio", "at-parity"
+    );
+    for (i, &sf) in sfs.iter().enumerate() {
+        // measure the CPU baseline once per sf (single node)
+        let probe_cfg = WorkerConfig {
+            profile: HwProfile::cloud(),
+            time_scale,
+            ..WorkerConfig::default()
+        };
+        let store = tpch_store(&probe_cfg, sf);
+        let engine = CpuEngine::new(store);
+        let mut single_node = std::time::Duration::ZERO;
+        for q in &suite {
+            single_node += engine.run(&q.logical()).unwrap().elapsed;
+        }
+
+        for (pair, (t_nodes, p_nodes)) in TABLE1_PAIRS.into_iter().enumerate() {
+            // map the paper's {8,16,32} cloud nodes to {2,4,8} workers.
+            // The fabric is deliberately NOT scaled down here: this
+            // figure compares engine against engine, and the baseline's
+            // compute runs at real CPU speed — scaling only Theseus's
+            // modeled device would break the GPU:CPU throughput ratio
+            // the figure is about. Caveat (EXPERIMENTS.md): with all
+            // workers sharing one host core, the largest local cluster
+            // under-scales; the per-pairing SF gradient is the claim
+            // under test.
+            let workers = (t_nodes / 4) as usize;
+            let cfg = WorkerConfig {
+                num_workers: workers,
+                profile: HwProfile::cloud(),
+                time_scale,
+                device_capacity: 48 << 20,
+                ..WorkerConfig::default()
+            };
+            let store = tpch_store(&cfg, sf);
+            let gw = gateway(cfg, store);
+            let (t_total, _) = run_suite(&gw, &suite);
+
+            let p_total = single_node.as_secs_f64()
+                / (p_nodes as f64 * PHOTON_PARALLEL_EFF);
+            let t_cost = CostModel::new(G6_4XLARGE, t_nodes);
+            let p_cost = CostModel::new(R7GD_12XLARGE, p_nodes);
+            let parity =
+                t_cost.speedup_at_cost_parity(t_total.as_secs_f64(), &p_cost, p_total);
+            let dollar_ratio = p_cost.usd_for_run(p_total)
+                / t_cost.usd_for_run(t_total.as_secs_f64()).max(1e-12);
+            println!(
+                "{:<5} {:>7} {:>7} {:>11.3}s {:>11.3}s {:>11.2}x {:>9.2}x",
+                if pair == 0 { sf_names[i] } else { "" },
+                t_nodes,
+                p_nodes,
+                t_total.as_secs_f64(),
+                p_total,
+                dollar_ratio,
+                parity,
+            );
+        }
+    }
+    println!("\n(paper: Theseus ahead at every point; 12.3% at the smallest pairing,\n 4.46x at the largest — margin grows with scale)");
+}

@@ -1,0 +1,127 @@
+//! Tiny argument parser for the `theseus` launcher binary.
+//!
+//! Grammar: `theseus <command> [--flag value]... [--switch]...`
+//! No external dependency; flags are declared by the caller.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]). `switch_names` lists flags
+    /// that take no value.
+    pub fn parse<I, S>(raw: I, switch_names: &[&str]) -> Result<Args>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut it = raw.into_iter().map(Into::into).peekable();
+        let command = it.next().unwrap_or_default();
+        let mut args = Args { command, ..Default::default() };
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if switch_names.contains(&name) {
+                    args.switches.push(name.to_string());
+                } else {
+                    let v = it.next().ok_or_else(|| {
+                        Error::Config(format!("flag --{name} needs a value"))
+                    })?;
+                    args.flags.insert(name.to_string(), v);
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::Config(format!("--{name}: {e}"))),
+        }
+    }
+
+    pub fn flag_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::Config(format!("--{name}: {e}"))),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_command_flags_switches_positional() {
+        let a = Args::parse(
+            vec!["query", "--workers", "4", "--verbose", "q1", "--scale=0.1"],
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.command, "query");
+        assert_eq!(a.flag("workers"), Some("4"));
+        assert_eq!(a.flag("scale"), Some("0.1"));
+        assert!(a.switch("verbose"));
+        assert_eq!(a.positional(), &["q1".to_string()]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse(vec!["x", "--n", "12", "--f", "2.5"], &[]).unwrap();
+        assert_eq!(a.flag_usize("n", 0).unwrap(), 12);
+        assert_eq!(a.flag_f64("f", 0.0).unwrap(), 2.5);
+        assert_eq!(a.flag_usize("missing", 7).unwrap(), 7);
+        assert_eq!(a.flag_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(vec!["x", "--n"], &[]).is_err());
+    }
+
+    #[test]
+    fn bad_typed_value_is_error() {
+        let a = Args::parse(vec!["x", "--n", "abc"], &[]).unwrap();
+        assert!(a.flag_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn empty_args_give_empty_command() {
+        let a = Args::parse(Vec::<String>::new(), &[]).unwrap();
+        assert_eq!(a.command, "");
+    }
+}

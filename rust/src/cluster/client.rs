@@ -1,0 +1,429 @@
+//! Cluster launcher, Gateway, and Client (§3).
+//!
+//! [`Cluster::launch`] brings up N workers in one process over the
+//! configured fabric (in-proc channels or real loopback TCP, both
+//! shaped by the profile's link specs). [`Gateway`] plans logical
+//! queries and submits the physical plan to every worker — "every
+//! worker receives the same physical execution plan with a different
+//! subset of files to scan" — then gathers and merges worker outputs
+//! for the [`Client`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::{TransportKind, WorkerConfig};
+use crate::exec::operators::sort::sort_batch;
+use crate::exec::PhysicalPlan;
+use crate::network::{Endpoint, InprocHub, TcpCluster};
+use crate::planner::{gather_mode, GatherMode, Logical, Planner};
+use crate::runtime::KernelRegistry;
+use crate::sim::SimContext;
+use crate::storage::object_store::ObjectStore;
+use crate::types::RecordBatch;
+use crate::Result;
+
+use super::worker::Worker;
+
+/// Per-worker post-query statistics (bench reporting).
+#[derive(Clone, Debug, Default)]
+pub struct WorkerStats {
+    pub worker_id: usize,
+    pub tasks_executed: u64,
+    pub task_retries: u64,
+    pub spills: u64,
+    pub spilled_bytes: u64,
+    pub preload_byte_ranges: u64,
+    pub preload_promotions: u64,
+    pub net_bytes_precompress: u64,
+    pub net_bytes_wire: u64,
+    pub compress_time: Duration,
+    pub device_peak_bytes: usize,
+}
+
+/// A completed query.
+#[derive(Clone, Debug)]
+pub struct QueryResult {
+    pub batch: RecordBatch,
+    pub elapsed: Duration,
+    pub worker_stats: Vec<WorkerStats>,
+}
+
+impl QueryResult {
+    pub fn total_spills(&self) -> u64 {
+        self.worker_stats.iter().map(|s| s.spills).sum()
+    }
+
+    pub fn total_wire_bytes(&self) -> u64 {
+        self.worker_stats.iter().map(|s| s.net_bytes_wire).sum()
+    }
+}
+
+/// N workers over one fabric.
+pub struct Cluster {
+    pub workers: Vec<Arc<Worker>>,
+    query_seq: AtomicU64,
+    pub config: Arc<WorkerConfig>,
+}
+
+impl Cluster {
+    /// Launch `config.num_workers` workers over `store`.
+    ///
+    /// `registry = None` uses host fallbacks (unit tests); pass
+    /// `Some(KernelRegistry::shared()?)` for the AOT device path.
+    pub fn launch(
+        config: WorkerConfig,
+        store: Arc<dyn ObjectStore>,
+        registry: Option<KernelRegistry>,
+    ) -> Result<Cluster> {
+        config.validate()?;
+        let config = Arc::new(config);
+        let n = config.num_workers;
+        // compile every AOT stage up front (engine-init time, not query
+        // time — the paper's workers initialize kernels at startup)
+        if let Some(r) = &registry {
+            r.warmup_all()?;
+        }
+        let sim = SimContext::new(config.profile.clone(), config.time_scale);
+
+        let endpoints: Vec<Arc<dyn Endpoint>> = match config.transport {
+            TransportKind::Tcp => TcpCluster::listen(n, &sim, TransportKind::Tcp)?
+                .into_endpoints()
+                .into_iter()
+                .map(|e| Arc::new(e) as Arc<dyn Endpoint>)
+                .collect(),
+            kind => {
+                let hub = InprocHub::new(n, &sim, kind);
+                hub.endpoints()
+                    .into_iter()
+                    .map(|e| Arc::new(e) as Arc<dyn Endpoint>)
+                    .collect()
+            }
+        };
+
+        let workers = endpoints
+            .into_iter()
+            .enumerate()
+            .map(|(id, ep)| {
+                Worker::start(id, config.clone(), store.clone(), ep, registry.clone())
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Cluster { workers, query_seq: AtomicU64::new(1), config })
+    }
+
+    /// Run one physical plan across all workers; gather per `mode`.
+    pub fn run_plan(
+        &self,
+        plan: &PhysicalPlan,
+        timeout: Duration,
+    ) -> Result<QueryResult> {
+        let qid = self.query_seq.fetch_add(1, Ordering::Relaxed);
+        let start = Instant::now();
+        // baseline counters so stats are per-query deltas
+        let base: Vec<_> = self.workers.iter().map(|w| snapshot(w)).collect();
+
+        let plan = Arc::new(plan.clone());
+        let results: Vec<Result<RecordBatch>> = std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .workers
+                .iter()
+                .map(|w| {
+                    let w = w.clone();
+                    let plan = plan.clone();
+                    s.spawn(move || w.run_query(&plan, qid, timeout))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let mut parts = Vec::new();
+        for r in results {
+            parts.push(r?);
+        }
+        let merged = gather(&plan, parts)?;
+        let elapsed = start.elapsed();
+        let worker_stats = self
+            .workers
+            .iter()
+            .zip(base)
+            .map(|(w, b)| delta(w, b))
+            .collect();
+        for w in &self.workers {
+            w.reset();
+        }
+        Ok(QueryResult { batch: merged, elapsed, worker_stats })
+    }
+
+    pub fn stop(&self) {
+        for w in &self.workers {
+            w.stop();
+        }
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn snapshot(w: &Worker) -> WorkerStats {
+    let (pre, wire) = w.network.compression_ratio_inputs();
+    WorkerStats {
+        worker_id: w.ctx.worker_id,
+        tasks_executed: w.compute.executed(),
+        task_retries: w.compute.retries(),
+        // every demotion below the intended tier: OOM push fallbacks +
+        // memory-executor spills (§4.2's "spilling")
+        spills: w.ctx.env.demotions(),
+        spilled_bytes: w.memory.spilled_bytes(),
+        preload_byte_ranges: w.preload.byte_range_loads(),
+        preload_promotions: w.preload.promotions(),
+        net_bytes_precompress: pre,
+        net_bytes_wire: wire,
+        compress_time: w.network.compress_time(),
+        device_peak_bytes: w.ctx.env.arena.peak(),
+    }
+}
+
+fn delta(w: &Worker, base: WorkerStats) -> WorkerStats {
+    let now = snapshot(w);
+    WorkerStats {
+        worker_id: now.worker_id,
+        tasks_executed: now.tasks_executed - base.tasks_executed,
+        task_retries: now.task_retries - base.task_retries,
+        spills: now.spills - base.spills,
+        spilled_bytes: now.spilled_bytes - base.spilled_bytes,
+        preload_byte_ranges: now.preload_byte_ranges - base.preload_byte_ranges,
+        preload_promotions: now.preload_promotions - base.preload_promotions,
+        net_bytes_precompress: now.net_bytes_precompress - base.net_bytes_precompress,
+        net_bytes_wire: now.net_bytes_wire - base.net_bytes_wire,
+        compress_time: now.compress_time.saturating_sub(base.compress_time),
+        device_peak_bytes: now.device_peak_bytes,
+    }
+}
+
+/// Client-side gather-merge of per-worker root outputs.
+fn gather(plan: &PhysicalPlan, parts: Vec<RecordBatch>) -> Result<RecordBatch> {
+    let all = RecordBatch::concat(&parts)?;
+    Ok(match gather_mode(plan) {
+        GatherMode::Concat => all,
+        GatherMode::Sort { by, desc } => {
+            if all.is_empty() {
+                all
+            } else {
+                sort_batch(&all, &by, desc)?
+            }
+        }
+        GatherMode::Limit { n } => {
+            let take = (n as usize).min(all.rows());
+            all.slice(0, take)?
+        }
+        GatherMode::SortLimit { by, desc, n } => {
+            if all.is_empty() {
+                all
+            } else {
+                let sorted = sort_batch(&all, &by, desc)?;
+                let take = (n as usize).min(sorted.rows());
+                sorted.slice(0, take)?
+            }
+        }
+    })
+}
+
+/// Gateway: Planner + Cluster.
+pub struct Gateway {
+    pub cluster: Cluster,
+    pub planner: Planner,
+    /// Per-query wall-clock timeout.
+    pub timeout: Duration,
+}
+
+impl Gateway {
+    pub fn new(cluster: Cluster) -> Gateway {
+        let planner = Planner::new(cluster.config.num_workers);
+        Gateway { cluster, planner, timeout: Duration::from_secs(300) }
+    }
+
+    /// Plan + execute a logical query.
+    pub fn submit(&self, q: &Logical) -> Result<QueryResult> {
+        let plan = self.planner.plan(q)?;
+        self.cluster.run_plan(&plan, self.timeout)
+    }
+
+    /// Execute a pre-built physical plan (bench harness path).
+    pub fn submit_plan(&self, plan: &PhysicalPlan) -> Result<QueryResult> {
+        self.cluster.run_plan(plan, self.timeout)
+    }
+}
+
+/// The user-facing handle.
+pub struct Client {
+    gateway: Arc<Gateway>,
+}
+
+impl Client {
+    pub fn new(gateway: Arc<Gateway>) -> Client {
+        Client { gateway }
+    }
+
+    pub fn query(&self, q: &Logical) -> Result<QueryResult> {
+        self.gateway.submit(q)
+    }
+
+    pub fn gateway(&self) -> &Gateway {
+        &self.gateway
+    }
+}
+
+/// Convenience: launch a full stack (cluster + gateway + client) in one
+/// call — the quickstart path.
+pub fn connect(
+    config: WorkerConfig,
+    store: Arc<dyn ObjectStore>,
+    registry: Option<KernelRegistry>,
+) -> Result<Client> {
+    let cluster = Cluster::launch(config, store, registry)?;
+    Ok(Client::new(Arc::new(Gateway::new(cluster))))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::plan::{AggFn, AggSpec, Pred};
+    use crate::sim::SimContext;
+    use crate::storage::compression::Codec;
+    use crate::storage::format::FileWriter;
+    use crate::storage::object_store::SimObjectStore;
+    use crate::types::{Column, DType, Field, RecordBatch, Schema};
+    use crate::util::rng::Rng;
+
+    /// Two tables: fact(k, v) and dim(k, w) for join tests.
+    fn store_with_tables(rows: usize) -> Arc<SimObjectStore> {
+        let store = SimObjectStore::in_memory(&SimContext::test());
+        let mut rng = Rng::new(7);
+        let fact_schema = Schema::new(vec![
+            Field::new("k", DType::Int64),
+            Field::new("v", DType::Float32),
+        ]);
+        for f in 0..2 {
+            let batch = RecordBatch::new(vec![
+                Column::i64("k", (0..rows).map(|_| rng.gen_i64(0, 49)).collect()),
+                Column::f32("v", (0..rows).map(|i| i as f32).collect()),
+            ])
+            .unwrap();
+            let mut w = FileWriter::new(fact_schema.clone(), Codec::Zstd { level: 1 }, 256);
+            w.write(batch).unwrap();
+            store
+                .put(&format!("fact/{f}.ths"), &w.finish().unwrap())
+                .unwrap();
+        }
+        let dim_schema = Schema::new(vec![
+            Field::new("dk", DType::Int64),
+            Field::new("w", DType::Int64),
+        ]);
+        let batch = RecordBatch::new(vec![
+            Column::i64("dk", (0..50).collect()),
+            Column::i64("w", (0..50).map(|i| i * 100).collect()),
+        ])
+        .unwrap();
+        let mut w = FileWriter::new(dim_schema, Codec::None, 64);
+        w.write(batch).unwrap();
+        store.put("dim/0.ths", &w.finish().unwrap()).unwrap();
+        store
+    }
+
+    fn cfg(workers: usize) -> WorkerConfig {
+        WorkerConfig {
+            num_workers: workers,
+            compute_threads: 2,
+            ..WorkerConfig::test()
+        }
+    }
+
+    #[test]
+    fn single_worker_scan_agg() {
+        let store = store_with_tables(500);
+        let client = connect(cfg(1), store, None).unwrap();
+        let q = Logical::scan("fact", &["k", "v"])
+            .aggregate("k", vec![AggSpec::new(AggFn::Count, "v")]);
+        let r = client.query(&q).unwrap();
+        assert_eq!(r.batch.rows(), 50);
+        let counts = r.batch.column("count_v").unwrap().data.as_f64().unwrap();
+        let total: f64 = counts.iter().sum();
+        assert_eq!(total, 1000.0);
+    }
+
+    #[test]
+    fn two_workers_exchange_and_agg() {
+        let store = store_with_tables(500);
+        let client = connect(cfg(2), store, None).unwrap();
+        let q = Logical::scan("fact", &["k", "v"])
+            .aggregate("k", vec![AggSpec::new(AggFn::Count, "v")])
+            .sort("k", false);
+        let r = client.query(&q).unwrap();
+        assert_eq!(r.batch.rows(), 50, "each key once after exchange");
+        let counts = r.batch.column("count_v").unwrap().data.as_f64().unwrap();
+        assert_eq!(counts.iter().sum::<f64>(), 1000.0);
+        let keys = r.batch.column("k").unwrap().data.as_i64().unwrap();
+        assert!(keys.windows(2).all(|w| w[0] < w[1]), "gather sort");
+    }
+
+    #[test]
+    fn join_across_workers_with_lip() {
+        let store = store_with_tables(400);
+        let client = connect(cfg(2), store, None).unwrap();
+        // build = dim, probe = fact; sum joined weights per key
+        let q = Logical::scan("dim", &["dk", "w"])
+            .join(Logical::scan("fact", &["k", "v"]), "dk", "k", true)
+            .aggregate("dk", vec![AggSpec::new(AggFn::Count, "w"), AggSpec::new(AggFn::Max, "w")])
+            .sort("dk", false);
+        let r = client.query(&q).unwrap();
+        assert_eq!(r.batch.rows(), 50);
+        let counts = r.batch.column("count_w").unwrap().data.as_f64().unwrap();
+        assert_eq!(counts.iter().sum::<f64>(), 800.0, "every fact row joins once");
+        let maxs = r.batch.column("max_w").unwrap().data.as_f64().unwrap();
+        let keys = r.batch.column("dk").unwrap().data.as_i64().unwrap();
+        for (i, &k) in keys.iter().enumerate() {
+            assert_eq!(maxs[i], (k * 100) as f64);
+        }
+    }
+
+    #[test]
+    fn filter_pushdown_and_limit() {
+        let store = store_with_tables(300);
+        let client = connect(cfg(2), store, None).unwrap();
+        let q = Logical::scan("fact", &["k", "v"])
+            .filter(Pred::RangeI64 { col: "k".into(), lo: 0, hi: 10 })
+            .aggregate("k", vec![AggSpec::new(AggFn::Count, "v")])
+            .sort("k", false)
+            .limit(5);
+        let r = client.query(&q).unwrap();
+        assert_eq!(r.batch.rows(), 5);
+        let keys = r.batch.column("k").unwrap().data.as_i64().unwrap();
+        assert_eq!(keys, &[0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn sequential_queries_reuse_cluster() {
+        let store = store_with_tables(200);
+        let client = connect(cfg(2), store, None).unwrap();
+        for _ in 0..3 {
+            let q = Logical::scan("fact", &["k", "v"])
+                .aggregate("k", vec![AggSpec::new(AggFn::Sum, "v")]);
+            let r = client.query(&q).unwrap();
+            assert_eq!(r.batch.rows(), 50);
+        }
+    }
+
+    #[test]
+    fn stats_are_reported() {
+        let store = store_with_tables(300);
+        let client = connect(cfg(2), store, None).unwrap();
+        let q = Logical::scan("fact", &["k", "v"])
+            .aggregate("k", vec![AggSpec::new(AggFn::Sum, "v")]);
+        let r = client.query(&q).unwrap();
+        assert_eq!(r.worker_stats.len(), 2);
+        assert!(r.worker_stats.iter().all(|s| s.tasks_executed > 0));
+        assert!(r.total_wire_bytes() > 0, "exchange must touch the wire");
+    }
+}

@@ -1,0 +1,18 @@
+//! Cluster runtime (§3): Client, Gateway (+Planner), and Workers.
+//!
+//! "A Theseus cluster has four core components: a Client, a Gateway, a
+//! Planner (based on Apache Calcite), and Workers. ... When the client
+//! submits a query, the planner creates the query plan, and then every
+//! worker receives the same physical execution plan with a different
+//! subset of files to scan."
+//!
+//! [`worker::Worker`] is the §3.3 worker process: four executors around
+//! one device; [`client::Cluster`] launches N of them over a shared
+//! fabric; [`client::Gateway`] plans and submits queries;
+//! [`client::Client`] is the user-facing handle.
+
+pub mod client;
+pub mod worker;
+
+pub use client::{Client, Cluster, Gateway, QueryResult, WorkerStats};
+pub use worker::Worker;

@@ -1,0 +1,221 @@
+//! One Theseus worker: the four executors (§3.3) wired around a device
+//! arena, a pinned pool, a spill store, a datasource, and a fabric
+//! endpoint. The worker's driver loop polls the query DAG for ready
+//! tasks and feeds the Compute Executor until the DAG completes.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::{DatasourceKind, WorkerConfig};
+use crate::exec::{PhysicalPlan, QueryDag, WorkerCtx};
+use crate::executors::compute::{ComputeExecutor, TaskQueue};
+use crate::executors::memory::{HolderRegistry, MemoryExecutor};
+use crate::executors::network::{NetworkExecutor, Outbox, Router};
+use crate::executors::preload::{PreloadExecutor, PreloadModes};
+use crate::memory::batch_holder::MemEnv;
+use crate::memory::{DeviceArena, MemoryGovernor, PinnedPool, SpillStore};
+use crate::network::Endpoint;
+use crate::runtime::KernelRegistry;
+use crate::sim::SimContext;
+use crate::storage::datasource::{CustomObjectStoreDatasource, Datasource, GenericDatasource};
+use crate::storage::object_store::ObjectStore;
+use crate::types::RecordBatch;
+use crate::{Error, Result};
+
+pub struct Worker {
+    pub ctx: WorkerCtx,
+    pub queue: Arc<TaskQueue>,
+    pub compute: Arc<ComputeExecutor>,
+    pub memory: Arc<MemoryExecutor>,
+    pub preload: Arc<PreloadExecutor>,
+    pub network: Arc<NetworkExecutor>,
+    pub router: Arc<Router>,
+    pub holders: Arc<HolderRegistry>,
+    stopped: AtomicBool,
+}
+
+impl Worker {
+    /// Bring up a worker over `endpoint`. `registry = None` uses host
+    /// fallbacks for device stages (tests); real deployments pass the
+    /// shared AOT registry.
+    pub fn start(
+        worker_id: usize,
+        config: Arc<WorkerConfig>,
+        store: Arc<dyn ObjectStore>,
+        endpoint: Arc<dyn Endpoint>,
+        registry: Option<KernelRegistry>,
+    ) -> Result<Arc<Worker>> {
+        config.validate()?;
+        let sim = SimContext::new(config.profile.clone(), config.time_scale);
+
+        // ---- memory tiers
+        let arena = DeviceArena::new(config.device_capacity);
+        let pinned = if config.pinned_pool {
+            Some(PinnedPool::new(config.pinned_buf_size, config.pinned_buffers)?)
+        } else {
+            None
+        };
+        let env = MemEnv {
+            arena: arena.clone(),
+            pinned: pinned.clone(),
+            spill: Arc::new(SpillStore::temp(&format!("w{worker_id}"))?),
+            pcie: sim.throttle(&sim.profile.pcie),
+            disk: sim.throttle(&crate::sim::LinkSpec::new(30, 2 * crate::sim::GIB)),
+            pageable_penalty: sim.profile.pageable_penalty,
+            spill_codec: config.spill_codec,
+            demotions: Arc::new(std::sync::atomic::AtomicU64::new(0)),
+        };
+        let governor = MemoryGovernor::new(arena.clone());
+
+        // ---- datasource
+        let (datasource, custom): (Arc<dyn Datasource>, Option<Arc<CustomObjectStoreDatasource>>) =
+            match config.datasource {
+                DatasourceKind::Generic => {
+                    (Arc::new(GenericDatasource::new(store.clone())), None)
+                }
+                DatasourceKind::Custom => {
+                    let c = Arc::new(CustomObjectStoreDatasource::new(
+                        store.clone(),
+                        config.coalesce_gap,
+                        pinned.clone(),
+                    ));
+                    (c.clone(), Some(c))
+                }
+            };
+
+        // ---- network executor
+        let outbox = Arc::new(Outbox::new(128));
+        let router = Arc::new(Router::new());
+        let network = NetworkExecutor::start(
+            endpoint,
+            outbox.clone(),
+            router.clone(),
+            config.net_compression,
+            config.network_threads,
+        );
+
+        // ---- compute executor
+        let ctx = WorkerCtx {
+            worker_id,
+            config: config.clone(),
+            env,
+            governor: governor.clone(),
+            registry,
+            datasource: datasource.clone(),
+            store,
+            outbox,
+            device_compute: sim.throttle(&sim.profile.device_compute),
+            metrics: Arc::new(crate::metrics::Metrics::default()),
+        };
+        let queue = TaskQueue::new();
+        let compute = ComputeExecutor::start(ctx.clone(), queue.clone(), config.compute_threads);
+
+        // ---- memory executor (+ reservation pressure wiring)
+        let holders = HolderRegistry::new();
+        let memory = MemoryExecutor::start(
+            holders.clone(),
+            arena,
+            queue.clone(),
+            config.spill_watermark,
+            config.memory_threads,
+        );
+        {
+            let m = memory.clone();
+            governor.set_pressure_handler(move |need| m.spill_for(need));
+        }
+
+        // ---- pre-load executor
+        let preload = PreloadExecutor::start(
+            queue.clone(),
+            datasource,
+            custom,
+            PreloadModes {
+                byte_range: config.byte_range_preload,
+                task: config.task_preload,
+            },
+            config.preload_threads,
+        );
+
+        Ok(Arc::new(Worker {
+            ctx,
+            queue,
+            compute,
+            memory,
+            preload,
+            network,
+            router,
+            holders,
+            stopped: AtomicBool::new(false),
+        }))
+    }
+
+    /// Execute `plan`; returns this worker's share of the result. The
+    /// driver loop is the paper's Operator-polling: ready tasks go to
+    /// the Compute Executor's priority queue; the other three executors
+    /// work the same queue from their own angles.
+    pub fn run_query(
+        &self,
+        plan: &PhysicalPlan,
+        query_id: u64,
+        timeout: Duration,
+    ) -> Result<RecordBatch> {
+        let dag = QueryDag::build(plan, &self.ctx, &self.router, &self.holders, query_id)?;
+        let deadline = Instant::now() + timeout;
+        loop {
+            if self.stopped.load(Ordering::Relaxed) {
+                return Err(Error::Shutdown);
+            }
+            if let Some(e) = self.compute.take_failure() {
+                return Err(e);
+            }
+            let tasks = dag.poll(&self.ctx)?;
+            let had_tasks = !tasks.is_empty();
+            for t in tasks {
+                self.queue.submit(t);
+            }
+            if dag.all_done() && self.queue.quiescent() {
+                // drain the root holder into the result
+                let mut parts = Vec::new();
+                while let Some(db) = dag.output.pop_device()? {
+                    parts.push(db.batch.clone());
+                }
+                return RecordBatch::concat(&parts);
+            }
+            if Instant::now() >= deadline {
+                return Err(Error::internal(format!(
+                    "query {query_id} timed out on worker {} (queue {} in-flight {})",
+                    self.ctx.worker_id,
+                    self.queue.len(),
+                    self.queue.in_flight(),
+                )));
+            }
+            if !had_tasks {
+                std::thread::sleep(Duration::from_micros(500));
+            }
+        }
+    }
+
+    /// Per-query cleanup between runs (holders are per-DAG and die with
+    /// it; the registry list must be reset so stale holders don't pin
+    /// memory accounting).
+    pub fn reset(&self) {
+        self.holders.clear();
+    }
+
+    pub fn stop(&self) {
+        if self.stopped.swap(true, Ordering::Relaxed) {
+            return;
+        }
+        self.compute.stop();
+        self.preload.stop();
+        self.memory.stop();
+        self.network.stop();
+    }
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}

@@ -1,0 +1,408 @@
+//! Configuration: every knob §4.1 turns, plus the named presets A–I
+//! that reproduce Figure 4.
+//!
+//! The file format is a TOML subset (`key = value` lines with optional
+//! `[section]` headers, `#` comments, strings, ints, floats, bools)
+//! parsed by [`toml_lite`] — no external dependency, explicit grammar.
+
+pub mod toml_lite;
+
+pub use toml_lite::TomlLite;
+
+use crate::sim::HwProfile;
+use crate::storage::compression::Codec;
+use crate::{Error, Result};
+
+/// Which network back-end the Network Executor uses (§3.3.5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// POSIX TCP (IPoIB on the on-prem fabric). Fig-4 configs A–C.
+    Tcp,
+    /// UCX/GPUDirect-RDMA-like: higher bandwidth, lower per-message
+    /// cost. Fig-4 configs D–E.
+    Rdma,
+    /// In-process channels shaped like Tcp (single-process clusters).
+    Inproc,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "tcp" => TransportKind::Tcp,
+            "rdma" => TransportKind::Rdma,
+            "inproc" => TransportKind::Inproc,
+            _ => return Err(Error::Config(format!("unknown transport '{s}'"))),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Tcp => "tcp",
+            TransportKind::Rdma => "rdma",
+            TransportKind::Inproc => "inproc",
+        }
+    }
+}
+
+/// Which datasource implementation scans use (§3.3.4, Fig-4 F→G).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasourceKind {
+    Generic,
+    Custom,
+}
+
+impl DatasourceKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "generic" => DatasourceKind::Generic,
+            "custom" => DatasourceKind::Custom,
+            _ => return Err(Error::Config(format!("unknown datasource '{s}'"))),
+        })
+    }
+}
+
+/// Full worker configuration.
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    // ---- topology
+    /// Workers in the cluster (every worker knows the fanout).
+    pub num_workers: usize,
+    /// Executor thread counts ("All executors have a number of
+    /// configurable CPU threads", §3.3).
+    pub compute_threads: usize,
+    pub memory_threads: usize,
+    pub preload_threads: usize,
+    pub network_threads: usize,
+
+    // ---- memory
+    /// Device (simulated GPU) memory per worker, bytes.
+    pub device_capacity: usize,
+    /// Pinned pool: enabled, buffer size, buffer count (§3.4; Fig-4 C).
+    pub pinned_pool: bool,
+    pub pinned_buf_size: usize,
+    pub pinned_buffers: usize,
+    /// Memory-executor spill watermark (fraction of device capacity).
+    pub spill_watermark: f64,
+    /// Codec for host→disk spills.
+    pub spill_codec: Codec,
+    /// Reservation wait deadline, ms.
+    pub reservation_timeout_ms: u64,
+
+    // ---- batching
+    /// Rows per device batch (padded to the AOT shape).
+    pub batch_rows: usize,
+    /// Adaptive Exchange: broadcast instead of hash-partition when the
+    /// estimated total bytes are below this (§3.2).
+    pub broadcast_threshold: usize,
+    /// Adaptive Exchange: batches to accumulate before estimating.
+    pub exchange_estimate_batches: usize,
+
+    // ---- network executor
+    /// Compress batches before sending (Fig-4 B, E toggles this).
+    pub net_compression: Option<Codec>,
+    pub transport: TransportKind,
+
+    // ---- pre-load executor (§3.3.3; Fig-4 H, I)
+    pub byte_range_preload: bool,
+    pub task_preload: bool,
+    /// Coalesce byte ranges closer than this many bytes.
+    pub coalesce_gap: u64,
+
+    // ---- storage
+    pub datasource: DatasourceKind,
+
+    // ---- simulation
+    pub profile: HwProfile,
+    pub time_scale: f64,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        WorkerConfig {
+            num_workers: 1,
+            compute_threads: 2,
+            memory_threads: 1,
+            preload_threads: 1,
+            network_threads: 1,
+            device_capacity: 256 << 20,
+            pinned_pool: true,
+            pinned_buf_size: 256 << 10,
+            pinned_buffers: 256,
+            spill_watermark: 0.85,
+            spill_codec: Codec::None,
+            reservation_timeout_ms: 10_000,
+            batch_rows: 8192,
+            broadcast_threshold: 256 << 10,
+            exchange_estimate_batches: 4,
+            net_compression: Some(Codec::Zstd { level: 1 }),
+            transport: TransportKind::Inproc,
+            byte_range_preload: true,
+            task_preload: true,
+            coalesce_gap: 1 << 20,
+            datasource: DatasourceKind::Custom,
+            profile: HwProfile::test(),
+            time_scale: 0.0,
+        }
+    }
+}
+
+impl WorkerConfig {
+    /// Minimal config for unit tests: tiny memory, instant simulation.
+    pub fn test() -> Self {
+        WorkerConfig {
+            device_capacity: 64 << 20,
+            pinned_buf_size: 64 << 10,
+            pinned_buffers: 128,
+            ..Default::default()
+        }
+    }
+
+    // --------------------------------------------------- Fig-4 presets
+
+    /// On-prem config A: no pinned pool, no net compression, TCP.
+    pub fn fig4_a() -> Self {
+        WorkerConfig {
+            pinned_pool: false,
+            net_compression: None,
+            transport: TransportKind::Tcp,
+            byte_range_preload: false,
+            task_preload: true,
+            profile: HwProfile::on_prem(),
+            ..Default::default()
+        }
+    }
+
+    /// B = A + network compression.
+    pub fn fig4_b() -> Self {
+        WorkerConfig { net_compression: Some(Codec::Zstd { level: 1 }), ..Self::fig4_a() }
+    }
+
+    /// C = B + pinned fixed-size buffer pool.
+    pub fn fig4_c() -> Self {
+        WorkerConfig { pinned_pool: true, ..Self::fig4_b() }
+    }
+
+    /// D = C + GPUDirect RDMA transport.
+    pub fn fig4_d() -> Self {
+        WorkerConfig { transport: TransportKind::Rdma, ..Self::fig4_c() }
+    }
+
+    /// E = D − compression (free the CPU cycles; Fig-4's final win).
+    pub fn fig4_e() -> Self {
+        WorkerConfig { net_compression: None, ..Self::fig4_d() }
+    }
+
+    /// Cloud config F: generic datasource, no pre-loading.
+    pub fn fig4_f() -> Self {
+        WorkerConfig {
+            datasource: DatasourceKind::Generic,
+            byte_range_preload: false,
+            task_preload: false,
+            transport: TransportKind::Tcp,
+            profile: HwProfile::cloud(),
+            ..Default::default()
+        }
+    }
+
+    /// G = F with the custom object-store datasource.
+    pub fn fig4_g() -> Self {
+        WorkerConfig { datasource: DatasourceKind::Custom, ..Self::fig4_f() }
+    }
+
+    /// H = G + byte-range pre-loading.
+    pub fn fig4_h() -> Self {
+        WorkerConfig { byte_range_preload: true, ..Self::fig4_g() }
+    }
+
+    /// I = H + compute-task pre-loading.
+    pub fn fig4_i() -> Self {
+        WorkerConfig { task_preload: true, ..Self::fig4_h() }
+    }
+
+    /// Look a preset up by its Figure-4 letter.
+    pub fn preset(letter: char) -> Result<Self> {
+        Ok(match letter.to_ascii_uppercase() {
+            'A' => Self::fig4_a(),
+            'B' => Self::fig4_b(),
+            'C' => Self::fig4_c(),
+            'D' => Self::fig4_d(),
+            'E' => Self::fig4_e(),
+            'F' => Self::fig4_f(),
+            'G' => Self::fig4_g(),
+            'H' => Self::fig4_h(),
+            'I' => Self::fig4_i(),
+            c => return Err(Error::Config(format!("unknown preset '{c}'"))),
+        })
+    }
+
+    /// Apply `key = value` overrides from a parsed TOML-lite document.
+    /// Recognized keys mirror the field names; `[worker]` section is
+    /// optional.
+    pub fn apply(&mut self, doc: &TomlLite) -> Result<()> {
+        let get = |k: &str| doc.get("worker", k).or_else(|| doc.get("", k));
+        macro_rules! set_usize {
+            ($field:ident) => {
+                if let Some(v) = get(stringify!($field)) {
+                    self.$field = v.as_int()? as usize;
+                }
+            };
+        }
+        set_usize!(num_workers);
+        set_usize!(compute_threads);
+        set_usize!(memory_threads);
+        set_usize!(preload_threads);
+        set_usize!(network_threads);
+        set_usize!(device_capacity);
+        set_usize!(pinned_buf_size);
+        set_usize!(pinned_buffers);
+        set_usize!(batch_rows);
+        if let Some(v) = get("pinned_pool") {
+            self.pinned_pool = v.as_bool()?;
+        }
+        if let Some(v) = get("spill_watermark") {
+            self.spill_watermark = v.as_float()?;
+        }
+        if let Some(v) = get("time_scale") {
+            self.time_scale = v.as_float()?;
+        }
+        if let Some(v) = get("reservation_timeout_ms") {
+            self.reservation_timeout_ms = v.as_int()? as u64;
+        }
+        if let Some(v) = get("coalesce_gap") {
+            self.coalesce_gap = v.as_int()? as u64;
+        }
+        if let Some(v) = get("byte_range_preload") {
+            self.byte_range_preload = v.as_bool()?;
+        }
+        if let Some(v) = get("task_preload") {
+            self.task_preload = v.as_bool()?;
+        }
+        if let Some(v) = get("transport") {
+            self.transport = TransportKind::parse(&v.as_str()?)?;
+        }
+        if let Some(v) = get("datasource") {
+            self.datasource = DatasourceKind::parse(&v.as_str()?)?;
+        }
+        if let Some(v) = get("net_compression") {
+            self.net_compression = match v.as_str()?.as_str() {
+                "none" | "off" => None,
+                "zstd" => Some(Codec::Zstd { level: 1 }),
+                "lz4" | "lz4like" => Some(Codec::Lz4Like),
+                other => {
+                    return Err(Error::Config(format!("unknown codec '{other}'")))
+                }
+            };
+        }
+        if let Some(v) = get("profile") {
+            self.profile = match v.as_str()?.as_str() {
+                "on-prem" | "on_prem" => HwProfile::on_prem(),
+                "cloud" => HwProfile::cloud(),
+                "test" => HwProfile::test(),
+                other => {
+                    return Err(Error::Config(format!("unknown profile '{other}'")))
+                }
+            };
+        }
+        self.validate()
+    }
+
+    /// Load from a TOML-lite file.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("{path}: {e}")))?;
+        let doc = TomlLite::parse(&text)?;
+        let mut cfg = WorkerConfig::default();
+        cfg.apply(&doc)?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.num_workers == 0 {
+            return Err(Error::Config("num_workers must be >= 1".into()));
+        }
+        if self.compute_threads == 0 {
+            return Err(Error::Config("compute_threads must be >= 1".into()));
+        }
+        if !(0.0..=1.0).contains(&self.spill_watermark) {
+            return Err(Error::Config("spill_watermark must be in [0,1]".into()));
+        }
+        if self.batch_rows == 0 {
+            return Err(Error::Config("batch_rows must be >= 1".into()));
+        }
+        if self.pinned_pool && (self.pinned_buf_size == 0 || self.pinned_buffers == 0) {
+            return Err(Error::Config("pinned pool dimensions must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_differ_as_the_paper_describes() {
+        let a = WorkerConfig::fig4_a();
+        let b = WorkerConfig::fig4_b();
+        let c = WorkerConfig::fig4_c();
+        let d = WorkerConfig::fig4_d();
+        let e = WorkerConfig::fig4_e();
+        assert!(!a.pinned_pool && a.net_compression.is_none());
+        assert!(b.net_compression.is_some());
+        assert!(c.pinned_pool);
+        assert_eq!(d.transport, TransportKind::Rdma);
+        assert!(e.net_compression.is_none() && e.transport == TransportKind::Rdma);
+    }
+
+    #[test]
+    fn cloud_presets_step_f_to_i() {
+        let f = WorkerConfig::fig4_f();
+        let g = WorkerConfig::fig4_g();
+        let h = WorkerConfig::fig4_h();
+        let i = WorkerConfig::fig4_i();
+        assert_eq!(f.datasource, DatasourceKind::Generic);
+        assert!(!f.byte_range_preload && !f.task_preload);
+        assert_eq!(g.datasource, DatasourceKind::Custom);
+        assert!(h.byte_range_preload && !h.task_preload);
+        assert!(i.byte_range_preload && i.task_preload);
+    }
+
+    #[test]
+    fn preset_lookup_by_letter() {
+        assert!(WorkerConfig::preset('a').is_ok());
+        assert!(WorkerConfig::preset('I').is_ok());
+        assert!(WorkerConfig::preset('z').is_err());
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let doc = TomlLite::parse(
+            "[worker]\ncompute_threads = 7\ntransport = \"rdma\"\n\
+             net_compression = \"none\"\nspill_watermark = 0.5\n",
+        )
+        .unwrap();
+        let mut cfg = WorkerConfig::default();
+        cfg.apply(&doc).unwrap();
+        assert_eq!(cfg.compute_threads, 7);
+        assert_eq!(cfg.transport, TransportKind::Rdma);
+        assert!(cfg.net_compression.is_none());
+        assert_eq!(cfg.spill_watermark, 0.5);
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut cfg = WorkerConfig::default();
+        cfg.num_workers = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = WorkerConfig::default();
+        cfg.spill_watermark = 1.5;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn bad_enum_values_are_config_errors() {
+        let doc = TomlLite::parse("transport = \"carrier-pigeon\"\n").unwrap();
+        let mut cfg = WorkerConfig::default();
+        assert!(matches!(cfg.apply(&doc), Err(Error::Config(_))));
+    }
+}

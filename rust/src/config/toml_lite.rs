@@ -1,0 +1,206 @@
+//! TOML-subset parser: sections, `key = value`, strings / ints /
+//! floats / bools, `#` comments. Enough for worker config files without
+//! an offline dependency.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// A parsed scalar.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<String> {
+        match self {
+            TomlValue::Str(s) => Ok(s.clone()),
+            other => Err(Error::Config(format!("expected string, got {other:?}"))),
+        }
+    }
+
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            TomlValue::Int(v) => Ok(*v),
+            other => Err(Error::Config(format!("expected int, got {other:?}"))),
+        }
+    }
+
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(v) => Ok(*v),
+            TomlValue::Int(v) => Ok(*v as f64),
+            other => Err(Error::Config(format!("expected float, got {other:?}"))),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(v) => Ok(*v),
+            other => Err(Error::Config(format!("expected bool, got {other:?}"))),
+        }
+    }
+}
+
+/// Parsed document: `(section, key) -> value`. Keys outside any section
+/// use the empty-string section.
+#[derive(Clone, Debug, Default)]
+pub struct TomlLite {
+    entries: BTreeMap<(String, String), TomlValue>,
+}
+
+impl TomlLite {
+    pub fn parse(text: &str) -> Result<TomlLite> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(Error::Config(format!(
+                        "line {}: unterminated section header",
+                        lineno + 1
+                    )));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            let key = key.trim().to_string();
+            if key.is_empty() {
+                return Err(Error::Config(format!("line {}: empty key", lineno + 1)));
+            }
+            let value = parse_value(value.trim()).map_err(|e| {
+                Error::Config(format!("line {}: {e}", lineno + 1))
+            })?;
+            entries.insert((section.clone(), key), value);
+        }
+        Ok(TomlLite { entries })
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// All keys of a section (introspection / error messages).
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.entries
+            .keys()
+            .filter(|(s, _)| s == section)
+            .map(|(_, k)| k.as_str())
+            .collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' inside a quoted string is not a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            return Err(format!("unterminated string: {s}"));
+        }
+        return Ok(TomlValue::Str(s[1..s.len() - 1].to_string()));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    // ints may use _ separators, like TOML
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if let Ok(v) = cleaned.parse::<i64>() {
+        return Ok(TomlValue::Int(v));
+    }
+    if let Ok(v) = cleaned.parse::<f64>() {
+        return Ok(TomlValue::Float(v));
+    }
+    Err(format!("cannot parse value: {s}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_scalar_kinds() {
+        let doc = TomlLite::parse(
+            "name = \"theseus\"\nthreads = 8\nscale = 0.25\nfast = true\nbig = 1_000_000\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "name").unwrap().as_str().unwrap(), "theseus");
+        assert_eq!(doc.get("", "threads").unwrap().as_int().unwrap(), 8);
+        assert_eq!(doc.get("", "scale").unwrap().as_float().unwrap(), 0.25);
+        assert!(doc.get("", "fast").unwrap().as_bool().unwrap());
+        assert_eq!(doc.get("", "big").unwrap().as_int().unwrap(), 1_000_000);
+    }
+
+    #[test]
+    fn sections_scope_keys() {
+        let doc = TomlLite::parse("a = 1\n[worker]\na = 2\n[net]\na = 3\n").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_int().unwrap(), 1);
+        assert_eq!(doc.get("worker", "a").unwrap().as_int().unwrap(), 2);
+        assert_eq!(doc.get("net", "a").unwrap().as_int().unwrap(), 3);
+        assert!(doc.get("worker", "b").is_none());
+    }
+
+    #[test]
+    fn comments_stripped_except_in_strings() {
+        let doc =
+            TomlLite::parse("x = 1 # comment\ns = \"a # b\" # real comment\n").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_int().unwrap(), 1);
+        assert_eq!(doc.get("", "s").unwrap().as_str().unwrap(), "a # b");
+    }
+
+    #[test]
+    fn int_coerces_to_float_not_reverse() {
+        let doc = TomlLite::parse("i = 3\nf = 3.5\n").unwrap();
+        assert_eq!(doc.get("", "i").unwrap().as_float().unwrap(), 3.0);
+        assert!(doc.get("", "f").unwrap().as_int().is_err());
+    }
+
+    #[test]
+    fn malformed_lines_error_with_line_numbers() {
+        for bad in ["just words\n", "[unterminated\n", "x = \n", "= 3\n"] {
+            let e = TomlLite::parse(bad).unwrap_err().to_string();
+            assert!(e.contains("line 1"), "{bad:?} -> {e}");
+        }
+    }
+
+    #[test]
+    fn keys_listing() {
+        let doc = TomlLite::parse("[w]\nb = 1\na = 2\n").unwrap();
+        assert_eq!(doc.keys("w"), vec!["a", "b"]);
+        assert!(doc.keys("nope").is_empty());
+    }
+}

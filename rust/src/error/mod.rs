@@ -1,0 +1,109 @@
+//! Crate-wide error type.
+//!
+//! Every subsystem funnels into [`Error`]; [`Error::is_retryable`]
+//! distinguishes the paper's OOM-retry path (§3.3.2: "Compute tasks that
+//! run out of memory can be retried ... and be divided up") from hard
+//! failures.
+
+use thiserror::Error;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Unified error for all Theseus subsystems.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Device (simulated GPU) memory could not satisfy an allocation or
+    /// reservation. The Compute Executor retries or splits the task.
+    #[error("device memory exhausted: requested {requested} bytes (capacity {capacity}, in use {in_use})")]
+    DeviceOom {
+        requested: usize,
+        capacity: usize,
+        in_use: usize,
+    },
+
+    /// Pinned host pool exhausted (distinct from device OOM: spilling to
+    /// disk, not splitting, is the remedy).
+    #[error("pinned host pool exhausted: requested {requested} buffers, {available} free")]
+    PinnedExhausted { requested: usize, available: usize },
+
+    /// Memory reservation could not be granted within the deadline.
+    #[error("memory reservation timed out after {waited_ms} ms for {requested} bytes on {tier}")]
+    ReservationTimeout {
+        requested: usize,
+        tier: &'static str,
+        waited_ms: u64,
+    },
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("file format error: {0}")]
+    Format(String),
+
+    #[error("plan error: {0}")]
+    Plan(String),
+
+    #[error("network error: {0}")]
+    Network(String),
+
+    #[error("object store error: {0}")]
+    ObjectStore(String),
+
+    #[error("xla/pjrt error: {0}")]
+    Xla(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("executor shut down")]
+    Shutdown,
+
+    #[error("query cancelled: {0}")]
+    Cancelled(String),
+
+    #[error("{0}")]
+    Internal(String),
+}
+
+impl Error {
+    /// True if the Compute Executor should retry (possibly after
+    /// splitting the task) rather than fail the query.
+    pub fn is_retryable(&self) -> bool {
+        matches!(
+            self,
+            Error::DeviceOom { .. }
+                | Error::PinnedExhausted { .. }
+                | Error::ReservationTimeout { .. }
+        )
+    }
+
+    pub fn internal(msg: impl Into<String>) -> Self {
+        Error::Internal(msg.into())
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oom_is_retryable() {
+        let e = Error::DeviceOom { requested: 1, capacity: 0, in_use: 0 };
+        assert!(e.is_retryable());
+        assert!(!Error::Format("x".into()).is_retryable());
+    }
+
+    #[test]
+    fn display_includes_sizes() {
+        let e = Error::DeviceOom { requested: 42, capacity: 100, in_use: 99 };
+        let s = e.to_string();
+        assert!(s.contains("42") && s.contains("100") && s.contains("99"));
+    }
+}

@@ -1,0 +1,431 @@
+//! DAG instantiation: a [`PhysicalPlan`] becomes operators wired by
+//! Batch Holders (§3.1, Figure 1: "Batch Holders are conceptually
+//! instantiated as edges of the DAG, where data can accumulate before
+//! processing by a next operation").
+//!
+//! Exchange nodes additionally register a receive channel with the
+//! Network Executor's router; their output holder is the channel's
+//! holder, fed by peers. Channel ids are `(query_id << 16) | node_id`
+//! so concurrent queries never collide.
+
+use std::sync::Arc;
+
+use crate::exec::operators::{
+    ExchangeOp, FilterOp, HashAggOp, HashJoinOp, LimitOp, Operator, ProjectOp, ScanOp,
+    SortOp,
+};
+use crate::exec::plan::{ExchangeRole, OpSpec, PhysicalPlan};
+use crate::exec::{Task, WorkerCtx};
+use crate::executors::memory::HolderRegistry;
+use crate::executors::network::{ChannelRx, Router};
+use crate::memory::BatchHolder;
+use crate::storage::format::FileFooter;
+use crate::{Error, Result};
+
+/// A worker's instantiated query.
+pub struct QueryDag {
+    pub query_id: u64,
+    pub operators: Vec<Arc<dyn Operator>>,
+    /// The root's output: the worker-local query result.
+    pub output: BatchHolder,
+    /// Channels registered on the router (unregistered on drop).
+    channels: Vec<u32>,
+    router: Arc<Router>,
+    /// Exchange ops by node id (bench introspection: mode decisions).
+    pub exchanges: Vec<(usize, Arc<ExchangeOp>)>,
+    /// Join ops by node id (LIP metrics).
+    pub joins: Vec<(usize, Arc<HashJoinOp>)>,
+    /// Scan ops by node id (progress reporting).
+    pub scans: Vec<(usize, Arc<ScanOp>)>,
+}
+
+impl QueryDag {
+    /// Instantiate `plan` for this worker.
+    pub fn build(
+        plan: &PhysicalPlan,
+        ctx: &WorkerCtx,
+        router: &Arc<Router>,
+        holders: &Arc<HolderRegistry>,
+        query_id: u64,
+    ) -> Result<QueryDag> {
+        plan.validate()?;
+        let depths = plan.depths();
+        let max_inflight = ctx.config.compute_threads * 2;
+        let mut outputs: Vec<BatchHolder> = Vec::with_capacity(plan.len());
+        let mut operators: Vec<Arc<dyn Operator>> = Vec::with_capacity(plan.len());
+        let mut channels = Vec::new();
+        let mut exchanges = Vec::new();
+        let mut joins = Vec::new();
+        let mut scans = Vec::new();
+
+        // Pre-pass: LIP shares — for every lip join, the probe-side
+        // input (if it is an exchange) gets the slot the join will
+        // publish its build bloom into (§5).
+        let mut lip_of: std::collections::HashMap<usize, crate::exec::operators::join::LipShare> =
+            std::collections::HashMap::new();
+        for node in &plan.nodes {
+            if let OpSpec::HashJoin { lip: true, .. } = &node.spec {
+                let probe_input = node.inputs[1];
+                if matches!(plan.nodes[probe_input].spec, OpSpec::Exchange { .. }) {
+                    let share: crate::exec::operators::join::LipShare =
+                        Arc::new(std::sync::RwLock::new(None));
+                    lip_of.insert(probe_input, share.clone());
+                    lip_of.insert(node.id, share);
+                }
+            }
+        }
+
+        // Pre-pass: one ChannelRx per exchange node, registered before
+        // any operator runs (peers may send as soon as they start) and
+        // resolvable for Probe→Build partner wiring.
+        let mut rx_of: std::collections::HashMap<usize, Arc<ChannelRx>> =
+            std::collections::HashMap::new();
+        for node in &plan.nodes {
+            if let OpSpec::Exchange { .. } = &node.spec {
+                let channel = ((query_id as u32) << 16) | node.id as u32;
+                let h = BatchHolder::new(
+                    format!("q{query_id}.op{}.exchange.rx", node.id),
+                    ctx.env.clone(),
+                );
+                holders.register(node.id, h.clone());
+                let rx = Arc::new(ChannelRx::new(h, ctx.num_workers()));
+                router.register(channel, rx.clone());
+                channels.push(channel);
+                rx_of.insert(node.id, rx);
+            }
+        }
+
+        for node in &plan.nodes {
+            let prio = depths[node.id] as i64 * 1000;
+            let hname = |suffix: &str| {
+                format!("q{query_id}.op{}.{}.{suffix}", node.id, node.spec.name())
+            };
+            let out = match &node.spec {
+                // exchange output is its network-fed channel holder
+                OpSpec::Exchange { .. } => rx_of[&node.id].holder.clone(),
+                _ => {
+                    let h = BatchHolder::new(hname("out"), ctx.env.clone());
+                    holders.register(node.id, h.clone());
+                    h
+                }
+            };
+
+            let op: Arc<dyn Operator> = match &node.spec {
+                OpSpec::Scan { table, cols, pred } => {
+                    let footers = table_footers(ctx, table)?;
+                    let schema = footers
+                        .first()
+                        .map(|(_, f)| f.schema.clone())
+                        .ok_or_else(|| {
+                            Error::Plan(format!("table '{table}' has no files"))
+                        })?;
+                    let col_idx: Vec<usize> = cols
+                        .iter()
+                        .map(|c| schema.index_of(c))
+                        .collect::<Result<_>>()?;
+                    let units = ScanOp::plan_units(
+                        &footers,
+                        pred.as_ref(),
+                        ctx.worker_id,
+                        ctx.num_workers(),
+                    );
+                    let op = Arc::new(ScanOp::new(
+                        node.id,
+                        prio,
+                        max_inflight,
+                        out.clone(),
+                        units,
+                        col_idx,
+                    ));
+                    scans.push((node.id, op.clone()));
+                    op
+                }
+                OpSpec::Filter { pred } => Arc::new(FilterOp::new(
+                    node.id,
+                    prio,
+                    max_inflight,
+                    outputs[node.inputs[0]].clone(),
+                    out.clone(),
+                    pred.clone(),
+                )),
+                OpSpec::Project { cols } => Arc::new(ProjectOp::new(
+                    node.id,
+                    prio,
+                    max_inflight,
+                    outputs[node.inputs[0]].clone(),
+                    out.clone(),
+                    cols.clone(),
+                )),
+                OpSpec::Exchange { key, role } => {
+                    let channel = ((query_id as u32) << 16) | node.id as u32;
+                    let rx = rx_of[&node.id].clone();
+                    let partner_rx = match role {
+                        ExchangeRole::Probe { partner } => {
+                            Some(rx_of.get(partner).cloned().ok_or_else(|| {
+                                Error::Plan(format!(
+                                    "probe exchange {} names missing partner {partner}",
+                                    node.id
+                                ))
+                            })?)
+                        }
+                        _ => None,
+                    };
+                    let pending =
+                        BatchHolder::new(hname("pending"), ctx.env.clone());
+                    holders.register(node.id, pending.clone());
+                    let op = Arc::new(ExchangeOp::new(
+                        node.id,
+                        prio,
+                        max_inflight,
+                        outputs[node.inputs[0]].clone(),
+                        pending,
+                        rx,
+                        channel,
+                        key.clone(),
+                        *role,
+                        partner_rx,
+                        lip_of.get(&node.id).cloned(),
+                    ));
+                    exchanges.push((node.id, op.clone()));
+                    op
+                }
+                OpSpec::HashAgg { group_by, aggs } => Arc::new(HashAggOp::new(
+                    node.id,
+                    prio,
+                    max_inflight,
+                    outputs[node.inputs[0]].clone(),
+                    out.clone(),
+                    group_by.clone(),
+                    aggs.clone(),
+                )),
+                OpSpec::HashJoin { left_on, right_on, lip } => {
+                    let op = Arc::new(HashJoinOp::new(
+                        node.id,
+                        prio,
+                        max_inflight,
+                        outputs[node.inputs[0]].clone(),
+                        outputs[node.inputs[1]].clone(),
+                        out.clone(),
+                        left_on.clone(),
+                        right_on.clone(),
+                        *lip,
+                        lip_of.get(&node.id).cloned(),
+                    ));
+                    joins.push((node.id, op.clone()));
+                    op
+                }
+                OpSpec::Sort { by, desc } => Arc::new(SortOp::new(
+                    node.id,
+                    prio,
+                    max_inflight,
+                    outputs[node.inputs[0]].clone(),
+                    out.clone(),
+                    by.clone(),
+                    *desc,
+                )),
+                OpSpec::Limit { n } => Arc::new(LimitOp::new(
+                    node.id,
+                    prio,
+                    outputs[node.inputs[0]].clone(),
+                    out.clone(),
+                    *n,
+                )),
+            };
+            outputs.push(out);
+            operators.push(op);
+        }
+
+        Ok(QueryDag {
+            query_id,
+            operators,
+            output: outputs.last().unwrap().clone(),
+            channels,
+            router: router.clone(),
+            exchanges,
+            joins,
+            scans,
+        })
+    }
+
+    /// Poll every unfinished operator for ready tasks.
+    pub fn poll(&self, ctx: &WorkerCtx) -> Result<Vec<Task>> {
+        let mut tasks = Vec::new();
+        for op in &self.operators {
+            if !op.is_done() {
+                tasks.extend(op.poll(ctx)?);
+            }
+        }
+        Ok(tasks)
+    }
+
+    /// All operators done (the root holder may still hold results).
+    pub fn all_done(&self) -> bool {
+        self.operators.iter().all(|o| o.is_done()) && self.output.is_finished()
+    }
+
+    /// Scan progress: (done, total) units.
+    pub fn scan_progress(&self) -> (usize, usize) {
+        self.scans
+            .iter()
+            .fold((0, 0), |(d, t), (_, s)| (d + s.units_done(), t + s.total_units()))
+    }
+}
+
+impl Drop for QueryDag {
+    fn drop(&mut self) {
+        for &c in &self.channels {
+            self.router.unregister(c);
+        }
+    }
+}
+
+fn table_footers(
+    ctx: &WorkerCtx,
+    table: &str,
+) -> Result<Vec<(String, Arc<FileFooter>)>> {
+    let keys = ctx.store.list(&format!("{table}/"))?;
+    if keys.is_empty() {
+        return Err(Error::Plan(format!("table '{table}' has no files")));
+    }
+    keys.into_iter()
+        .map(|k| {
+            let f = ctx.datasource.footer(&k)?;
+            Ok((k, f))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::plan::{AggFn, AggSpec, Pred};
+    use crate::storage::compression::Codec;
+    use crate::storage::format::FileWriter;
+    use crate::storage::object_store::ObjectStore;
+    use crate::types::{Column, DType, Field, RecordBatch, Schema};
+
+    fn ctx_with_table() -> WorkerCtx {
+        let ctx = WorkerCtx::test();
+        let schema = Schema::new(vec![
+            Field::new("k", DType::Int64),
+            Field::new("v", DType::Float32),
+        ]);
+        let batch = RecordBatch::new(vec![
+            Column::i64("k", (0..500).collect()),
+            Column::f32("v", (0..500).map(|i| i as f32).collect()),
+        ])
+        .unwrap();
+        let mut w = FileWriter::new(schema, Codec::None, 128);
+        w.write(batch).unwrap();
+        ctx.store.put("t/0.ths", &w.finish().unwrap()).unwrap();
+        ctx
+    }
+
+    fn plan_scan_filter_agg() -> PhysicalPlan {
+        let mut p = PhysicalPlan::new();
+        let s = p.add(
+            OpSpec::Scan {
+                table: "t".into(),
+                cols: vec!["k".into(), "v".into()],
+                pred: None,
+            },
+            vec![],
+        );
+        let f = p.add(
+            OpSpec::Filter { pred: Pred::RangeI64 { col: "k".into(), lo: 0, hi: 250 } },
+            vec![s],
+        );
+        p.add(
+            OpSpec::HashAgg {
+                group_by: "k".into(),
+                aggs: vec![AggSpec::new(AggFn::Sum, "v")],
+            },
+            vec![f],
+        );
+        p
+    }
+
+    #[test]
+    fn builds_and_names_operators() {
+        let ctx = ctx_with_table();
+        let router = Arc::new(Router::new());
+        let holders = HolderRegistry::new();
+        let dag =
+            QueryDag::build(&plan_scan_filter_agg(), &ctx, &router, &holders, 1).unwrap();
+        assert_eq!(dag.operators.len(), 3);
+        assert_eq!(dag.operators[0].name(), "scan");
+        assert_eq!(dag.operators[2].name(), "hash_agg");
+        assert!(!dag.all_done());
+    }
+
+    #[test]
+    fn single_worker_inline_execution_to_completion() {
+        let ctx = ctx_with_table();
+        let router = Arc::new(Router::new());
+        let holders = HolderRegistry::new();
+        let dag =
+            QueryDag::build(&plan_scan_filter_agg(), &ctx, &router, &holders, 2).unwrap();
+        // inline driver
+        for _ in 0..500 {
+            let tasks = dag.poll(&ctx).unwrap();
+            for t in tasks {
+                (t.run)(&ctx).unwrap();
+            }
+            if dag.all_done() {
+                break;
+            }
+        }
+        assert!(dag.all_done(), "dag did not converge");
+        let result = dag.output.pop_device().unwrap().unwrap();
+        assert_eq!(result.rows(), 250); // k in [0,250) grouped by k
+        let (done, total) = dag.scan_progress();
+        assert_eq!((done, total), (4, 4));
+    }
+
+    #[test]
+    fn exchange_nodes_register_channels() {
+        let ctx = ctx_with_table();
+        let router = Arc::new(Router::new());
+        let holders = HolderRegistry::new();
+        let mut p = PhysicalPlan::new();
+        let s = p.add(
+            OpSpec::Scan { table: "t".into(), cols: vec!["k".into()], pred: None },
+            vec![],
+        );
+        p.add(
+            OpSpec::Exchange { key: "k".into(), role: ExchangeRole::Shuffle },
+            vec![s],
+        );
+        let dag = QueryDag::build(&p, &ctx, &router, &holders, 3).unwrap();
+        let channel = (3u32 << 16) | 1;
+        assert!(router.channel(channel).is_some());
+        drop(dag);
+        assert!(router.channel(channel).is_none(), "channel leaked");
+    }
+
+    #[test]
+    fn missing_table_is_plan_error() {
+        let ctx = WorkerCtx::test();
+        let router = Arc::new(Router::new());
+        let holders = HolderRegistry::new();
+        let mut p = PhysicalPlan::new();
+        p.add(
+            OpSpec::Scan { table: "nope".into(), cols: vec!["k".into()], pred: None },
+            vec![],
+        );
+        assert!(QueryDag::build(&p, &ctx, &router, &holders, 1).is_err());
+    }
+
+    #[test]
+    fn missing_column_is_plan_error() {
+        let ctx = ctx_with_table();
+        let router = Arc::new(Router::new());
+        let holders = HolderRegistry::new();
+        let mut p = PhysicalPlan::new();
+        p.add(
+            OpSpec::Scan { table: "t".into(), cols: vec!["zzz".into()], pred: None },
+            vec![],
+        );
+        assert!(QueryDag::build(&p, &ctx, &router, &holders, 1).is_err());
+    }
+}

@@ -1,0 +1,85 @@
+//! Query execution: physical plans, the operator DAG, and the task
+//! abstraction the four executors cooperate over (§3.1–§3.3).
+
+pub mod dag;
+pub mod operators;
+pub mod plan;
+pub mod task;
+
+pub use dag::QueryDag;
+pub use operators::Operator;
+pub use plan::{AggFn, AggSpec, OpSpec, PhysicalPlan, PlanNode, Pred};
+pub use task::{Prefetch, Staging, StagingState, Task};
+
+use std::sync::Arc;
+
+use crate::config::WorkerConfig;
+use crate::memory::batch_holder::MemEnv;
+use crate::memory::MemoryGovernor;
+use crate::metrics::Metrics;
+use crate::runtime::KernelRegistry;
+use crate::sim::Throttle;
+use crate::storage::datasource::Datasource;
+use crate::storage::object_store::ObjectStore;
+
+/// Everything an operator/task needs from its worker. Cheap to clone.
+#[derive(Clone)]
+pub struct WorkerCtx {
+    pub worker_id: usize,
+    pub config: Arc<WorkerConfig>,
+    pub env: MemEnv,
+    pub governor: MemoryGovernor,
+    /// `None` runs operators on their host fallback paths (unit tests
+    /// without built artifacts); workers always set it.
+    pub registry: Option<KernelRegistry>,
+    pub datasource: Arc<dyn Datasource>,
+    pub store: Arc<dyn ObjectStore>,
+    /// Outbound network queue (drained by the Network Executor).
+    pub outbox: Arc<crate::executors::network::Outbox>,
+    /// Paces the modeled portion of device compute (the PJRT CPU path
+    /// under-costs a real GPU; see DESIGN.md §Hardware-Adaptation).
+    pub device_compute: Throttle,
+    pub metrics: Arc<Metrics>,
+}
+
+impl WorkerCtx {
+    /// Single-worker test context over an in-memory store, no AOT
+    /// registry (host fallbacks), instant simulation.
+    pub fn test() -> WorkerCtx {
+        let config = Arc::new(WorkerConfig::test());
+        Self::test_with(config)
+    }
+
+    pub fn test_with(config: Arc<WorkerConfig>) -> WorkerCtx {
+        use crate::sim::SimContext;
+        let ctx = SimContext::new(config.profile.clone(), config.time_scale);
+        let store = crate::storage::object_store::SimObjectStore::in_memory(&ctx);
+        let env = MemEnv::test(config.device_capacity);
+        let governor = MemoryGovernor::new(env.arena.clone());
+        WorkerCtx {
+            worker_id: 0,
+            config,
+            env,
+            governor,
+            registry: None,
+            datasource: Arc::new(crate::storage::datasource::GenericDatasource::new(
+                store.clone(),
+            )),
+            store,
+            outbox: Arc::new(crate::executors::network::Outbox::new(1)),
+            device_compute: ctx.throttle(&ctx.profile.device_compute),
+            metrics: Arc::new(Metrics::default()),
+        }
+    }
+
+    /// Test context with the real AOT registry (requires artifacts).
+    pub fn test_with_registry() -> crate::Result<WorkerCtx> {
+        let mut ctx = WorkerCtx::test();
+        ctx.registry = Some(KernelRegistry::shared()?);
+        Ok(ctx)
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.config.num_workers
+    }
+}

@@ -1,0 +1,419 @@
+//! Hash aggregation: device pre-aggregation + exact host finalize.
+//!
+//! Per batch, the device `bucket_preagg` stage hashes the group key
+//! into `num_buckets` buckets and reduces sum/count/min/max per bucket
+//! in one launch. The host then checks *bucket injectivity* for the
+//! batch (each touched bucket maps to exactly one distinct key): when
+//! injective — the common case for the low-to-medium-cardinality group
+//! keys OLAP aggregates see — the per-bucket partials merge directly
+//! into the global table; a collision falls back to exact host
+//! aggregation for that batch, so results are always exact.
+//!
+//! Sums accumulate in f64 on the host regardless of the device's f32
+//! partials? No — when the device path is taken the partials are f32;
+//! columns needing exact decimal totals take the host path (i64/f64
+//! values). This mirrors the paper's precision note (§4: 128-bit
+//! decimals) scaled to our dtype set; see DESIGN.md §Substitutions.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::exec::operators::{kernels, OpCommon, Operator};
+use crate::exec::plan::{AggFn, AggSpec};
+use crate::exec::task::{Prefetch, Task};
+use crate::exec::WorkerCtx;
+use crate::memory::BatchHolder;
+use crate::types::{Column, ColumnData, DType, RecordBatch};
+use crate::Result;
+
+/// Running state of one (key, agg-column) pair.
+#[derive(Clone, Copy, Debug, Default)]
+struct AggState {
+    sum: f64,
+    count: i64,
+    min: f64,
+    max: f64,
+    init: bool,
+}
+
+impl AggState {
+    fn absorb(&mut self, v: f64, n: i64) {
+        self.sum += v;
+        self.count += n;
+        if !self.init {
+            self.min = f64::INFINITY;
+            self.max = f64::NEG_INFINITY;
+            self.init = true;
+        }
+    }
+
+    fn observe_min_max(&mut self, mn: f64, mx: f64) {
+        if !self.init {
+            self.min = f64::INFINITY;
+            self.max = f64::NEG_INFINITY;
+            self.init = true;
+        }
+        self.min = self.min.min(mn);
+        self.max = self.max.max(mx);
+    }
+}
+
+type GroupTable = HashMap<i64, Vec<AggState>>;
+
+pub struct HashAggOp {
+    common: Arc<OpCommon>,
+    input: BatchHolder,
+    output: BatchHolder,
+    group_by: Arc<String>,
+    aggs: Arc<Vec<AggSpec>>,
+    groups: Arc<Mutex<GroupTable>>,
+    device_batches: Arc<AtomicU64>,
+    host_batches: Arc<AtomicU64>,
+}
+
+impl HashAggOp {
+    pub fn new(
+        id: usize,
+        base_priority: i64,
+        max_inflight: usize,
+        input: BatchHolder,
+        output: BatchHolder,
+        group_by: String,
+        aggs: Vec<AggSpec>,
+    ) -> HashAggOp {
+        HashAggOp {
+            common: Arc::new(OpCommon::new(id, base_priority, max_inflight)),
+            input,
+            output,
+            group_by: Arc::new(group_by),
+            aggs: Arc::new(aggs),
+            groups: Arc::new(Mutex::new(HashMap::new())),
+            device_batches: Arc::new(AtomicU64::new(0)),
+            host_batches: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// (device-preagg batches, host-fallback batches) — ablation metric.
+    pub fn path_counts(&self) -> (u64, u64) {
+        (
+            self.device_batches.load(Ordering::Relaxed),
+            self.host_batches.load(Ordering::Relaxed),
+        )
+    }
+}
+
+impl Operator for HashAggOp {
+    fn id(&self) -> usize {
+        self.common.id
+    }
+
+    fn name(&self) -> &'static str {
+        "hash_agg"
+    }
+
+    fn poll(&self, _ctx: &WorkerCtx) -> Result<Vec<Task>> {
+        if self.common.is_done() {
+            return Ok(Vec::new());
+        }
+        let mut tasks = Vec::new();
+        let mut budget = self.input.len().min(
+            self.common
+                .max_inflight
+                .saturating_sub(self.common.inflight()),
+        );
+        while budget > 0 {
+            budget -= 1;
+            self.common.issue();
+            let input = self.input.clone();
+            let group_by = self.group_by.clone();
+            let aggs = self.aggs.clone();
+            let groups = self.groups.clone();
+            let dev = self.device_batches.clone();
+            let host = self.host_batches.clone();
+            let run = self.common.track(move |ctx: &WorkerCtx| {
+                let db = match input.pop_device()? {
+                    Some(db) => db,
+                    None => return Ok(()),
+                };
+                absorb_batch(ctx, &db.batch, &group_by, &aggs, &groups, &dev, &host)?;
+                Ok(())
+            });
+            tasks.push(
+                Task::new(self.common.id, self.common.base_priority, run)
+                    .with_prefetch(Prefetch::Promote { holder: self.input.clone() }),
+            );
+        }
+        // finalize
+        if self.input.is_exhausted() && self.common.inflight() == 0 {
+            let groups = std::mem::take(&mut *self.groups.lock().unwrap());
+            let out = finalize(&self.group_by, &self.aggs, groups)?;
+            if !out.is_empty() {
+                self.output.push_batch(out)?;
+            }
+            self.output.finish();
+            self.common.mark_done();
+        }
+        Ok(tasks)
+    }
+
+    fn is_done(&self) -> bool {
+        self.common.is_done()
+    }
+}
+
+fn absorb_batch(
+    ctx: &WorkerCtx,
+    batch: &RecordBatch,
+    group_by: &str,
+    aggs: &[AggSpec],
+    groups: &Arc<Mutex<GroupTable>>,
+    dev_ctr: &AtomicU64,
+    host_ctr: &AtomicU64,
+) -> Result<()> {
+    let keys = kernels::key_column(batch, group_by)?;
+
+    // Try the device pre-agg path: single f32 agg column, registry
+    // available, batch injective into buckets.
+    if aggs.len() == 1 {
+        if let Some(vals) = kernels::f32_column(batch, &aggs[0].col) {
+            if let Some(chunks) = kernels::bucket_preagg(ctx, keys, &vals)? {
+                let n = kernels::batch_rows(ctx);
+                let mut merged_all = true;
+                for (ci, pre) in chunks.iter().enumerate() {
+                    let base = ci * n;
+                    let len = pre.bucket_of_row.len();
+                    // bucket -> unique key check for this chunk
+                    let mut bucket_key: HashMap<i32, i64> = HashMap::new();
+                    let mut injective = true;
+                    for (i, &b) in pre.bucket_of_row.iter().enumerate() {
+                        match bucket_key.entry(b) {
+                            std::collections::hash_map::Entry::Vacant(e) => {
+                                e.insert(keys[base + i]);
+                            }
+                            std::collections::hash_map::Entry::Occupied(e) => {
+                                if *e.get() != keys[base + i] {
+                                    injective = false;
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    if injective {
+                        let mut g = groups.lock().unwrap();
+                        for (&bucket, &key) in &bucket_key {
+                            let st = &mut g
+                                .entry(key)
+                                .or_insert_with(|| vec![AggState::default(); 1])[0];
+                            let b = bucket as usize;
+                            st.absorb(pre.sums[b] as f64, pre.counts[b] as i64);
+                            if pre.counts[b] > 0 {
+                                st.observe_min_max(pre.mins[b] as f64, pre.maxs[b] as f64);
+                            }
+                        }
+                        dev_ctr.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        // exact host fallback for this chunk
+                        let full = agg_values(batch, &aggs[0])?;
+                        host_chunk(
+                            &keys[base..base + len],
+                            &[(0, full[base..base + len].to_vec())],
+                            1,
+                            groups,
+                        );
+                        host_ctr.fetch_add(1, Ordering::Relaxed);
+                        merged_all = false;
+                    }
+                }
+                let _ = merged_all;
+                return Ok(());
+            }
+        }
+    }
+
+    // Host path: exact aggregation over all agg columns.
+    let cols: Vec<(usize, Vec<f64>)> = aggs
+        .iter()
+        .enumerate()
+        .map(|(i, a)| Ok((i, agg_values(batch, a)?)))
+        .collect::<Result<_>>()?;
+    host_chunk(keys, &cols, aggs.len(), groups);
+    host_ctr.fetch_add(1, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Numeric view of an agg column (counts ignore the values anyway).
+fn agg_values(batch: &RecordBatch, spec: &AggSpec) -> Result<Vec<f64>> {
+    let c = batch.column(&spec.col)?;
+    Ok(match &c.data {
+        ColumnData::I64(v) => v.iter().map(|&x| x as f64).collect(),
+        ColumnData::F32(v) => v.iter().map(|&x| x as f64).collect(),
+        ColumnData::F64(v) => v.clone(),
+    })
+}
+
+/// Exact host aggregation: `cols` values are aligned 1:1 with `keys`.
+fn host_chunk(
+    keys: &[i64],
+    cols: &[(usize, Vec<f64>)],
+    n_aggs: usize,
+    groups: &Arc<Mutex<GroupTable>>,
+) {
+    let mut g = groups.lock().unwrap();
+    for (row, &k) in keys.iter().enumerate() {
+        let states = g
+            .entry(k)
+            .or_insert_with(|| vec![AggState::default(); n_aggs]);
+        for (ai, vals) in cols {
+            let v = vals[row];
+            let st = &mut states[*ai];
+            st.absorb(v, 1);
+            st.observe_min_max(v, v);
+        }
+    }
+}
+
+/// Build the output batch: group key + one column per agg.
+fn finalize(group_by: &str, aggs: &[AggSpec], groups: GroupTable) -> Result<RecordBatch> {
+    let mut keys: Vec<i64> = groups.keys().copied().collect();
+    keys.sort_unstable(); // deterministic output
+    let mut columns = vec![Column::new(
+        group_by.to_string(),
+        DType::Int64,
+        ColumnData::I64(keys.clone()),
+    )];
+    for (ai, spec) in aggs.iter().enumerate() {
+        let data: Vec<f64> = keys
+            .iter()
+            .map(|k| {
+                let st = groups[k][ai];
+                match spec.func {
+                    AggFn::Sum => st.sum,
+                    AggFn::Count => st.count as f64,
+                    AggFn::Min => st.min,
+                    AggFn::Max => st.max,
+                }
+            })
+            .collect();
+        columns.push(Column::new(
+            spec.name.clone(),
+            DType::Float64,
+            ColumnData::F64(data),
+        ));
+    }
+    RecordBatch::new(columns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::batch_holder::MemEnv;
+
+    fn drive(op: &HashAggOp, ctx: &WorkerCtx) {
+        for _ in 0..200 {
+            for t in op.poll(ctx).unwrap() {
+                (t.run)(ctx).unwrap();
+            }
+            if op.is_done() {
+                break;
+            }
+        }
+    }
+
+    fn setup(aggs: Vec<AggSpec>) -> (WorkerCtx, BatchHolder, HashAggOp) {
+        let ctx = WorkerCtx::test();
+        let env = MemEnv::test(16 << 20);
+        let input = BatchHolder::new("in", env.clone());
+        let output = BatchHolder::new("out", env);
+        let op = HashAggOp::new(1, 0, 2, input.clone(), output, "g".into(), aggs);
+        (ctx, input, op)
+    }
+
+    fn result(op: &HashAggOp) -> RecordBatch {
+        op.output.pop_device().unwrap().unwrap().batch.clone()
+    }
+
+    #[test]
+    fn sum_count_min_max_exact() {
+        let (ctx, input, op) = setup(vec![
+            AggSpec::new(AggFn::Sum, "v"),
+            AggSpec::new(AggFn::Count, "v"),
+            AggSpec::new(AggFn::Min, "v"),
+            AggSpec::new(AggFn::Max, "v"),
+        ]);
+        // two batches, groups 0..4, v = row index
+        for lo in [0i64, 100] {
+            input
+                .push_batch(
+                    RecordBatch::new(vec![
+                        Column::i64("g", (lo..lo + 100).map(|i| i % 4).collect()),
+                        Column::f64("v", (lo..lo + 100).map(|i| i as f64).collect()),
+                    ])
+                    .unwrap(),
+                )
+                .unwrap();
+        }
+        input.finish();
+        drive(&op, &ctx);
+        let out = result(&op);
+        assert_eq!(out.rows(), 4);
+        let g = out.column("g").unwrap().data.as_i64().unwrap().to_vec();
+        assert_eq!(g, vec![0, 1, 2, 3]);
+        let sums = out.column("sum_v").unwrap().data.as_f64().unwrap();
+        let counts = out.column("count_v").unwrap().data.as_f64().unwrap();
+        let mins = out.column("min_v").unwrap().data.as_f64().unwrap();
+        let maxs = out.column("max_v").unwrap().data.as_f64().unwrap();
+        // group 0: rows 0,4,..,96 and 100,104,...,196
+        let expect_sum: f64 = (0..200).filter(|i| i % 4 == 0).map(|i| i as f64).sum();
+        assert_eq!(sums[0], expect_sum);
+        assert_eq!(counts[0], 50.0);
+        assert_eq!(mins[0], 0.0);
+        assert_eq!(maxs[0], 196.0);
+    }
+
+    #[test]
+    fn empty_input_yields_empty_finished_output() {
+        let (ctx, input, op) = setup(vec![AggSpec::new(AggFn::Sum, "v")]);
+        input.finish();
+        drive(&op, &ctx);
+        assert!(op.is_done());
+        assert!(op.output.is_exhausted());
+    }
+
+    #[test]
+    fn device_path_used_with_registry() {
+        let Ok(ctx) = WorkerCtx::test_with_registry() else {
+            return;
+        };
+        let env = MemEnv::test(64 << 20);
+        let input = BatchHolder::new("in", env.clone());
+        let output = BatchHolder::new("out", env);
+        let op = HashAggOp::new(
+            1,
+            0,
+            2,
+            input.clone(),
+            output,
+            "g".into(),
+            vec![AggSpec::new(AggFn::Sum, "v")],
+        );
+        // low-cardinality keys: injective bucketing is near-certain
+        input
+            .push_batch(
+                RecordBatch::new(vec![
+                    Column::i64("g", (0..1000).map(|i| i % 3).collect()),
+                    Column::f32("v", (0..1000).map(|i| i as f32).collect()),
+                ])
+                .unwrap(),
+            )
+            .unwrap();
+        input.finish();
+        drive(&op, &ctx);
+        let (dev, host) = op.path_counts();
+        assert!(dev > 0, "device preagg unused (dev={dev}, host={host})");
+        let out = op.output.pop_device().unwrap().unwrap();
+        let sums = out.batch.column("sum_v").unwrap().data.as_f64().unwrap();
+        let want: f64 = (0..1000).filter(|i| i % 3 == 0).map(|i| i as f64).sum();
+        assert!((sums[0] - want).abs() < 1.0, "{} vs {want}", sums[0]);
+    }
+}

@@ -1,0 +1,362 @@
+//! Adaptive Exchange (§3.2).
+//!
+//! "An Adaptive Exchange operator exists as a pair, one for each side
+//! of a join. ... First, it waits to accumulate enough input batches to
+//! estimate the total bytes it will receive, and broadcasts that
+//! information to paired Adaptive Exchange operators in all workers.
+//! These operators are adaptive because based on the estimates, they
+//! decide whether to hash partition or broadcast the data in the second
+//! phase. ... The algorithm using an estimate of the data sizes to
+//! arrive instead of waiting for all the data to arrive minimizes
+//! interruption of data flow through the DAG by allowing phase two
+//! tasks to be scheduled sooner."
+//!
+//! Phases: `Accumulate` (stage the first K batches in a spillable
+//! holder and count bytes) → `WaitEstimates` (estimate broadcast to all
+//! peers, wait for theirs) → `Stream` (hash-partition or broadcast each
+//! batch through the Network Executor) → `Done` (Finish sent to all
+//! peers). The receiving side is the [`ChannelRx`] holder the worker
+//! registered for this operator's channel; it finishes when every
+//! peer's Finish arrives.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::exec::operators::{kernels, OpCommon, Operator};
+use crate::exec::plan::ExchangeRole;
+use crate::exec::task::{Prefetch, Task};
+use crate::exec::WorkerCtx;
+use crate::executors::network::ChannelRx;
+use crate::memory::BatchHolder;
+use crate::types::RecordBatch;
+use crate::Result;
+
+/// Phase-two routing decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExchangeMode {
+    /// Rows routed to `hash(key) % workers`.
+    HashPartition,
+    /// Every batch goes to every worker (small join build side).
+    Broadcast,
+    /// Rows stay on this worker (probe side of a broadcast join).
+    PassThrough,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    Accumulate,
+    WaitEstimates,
+    Stream,
+    Done,
+}
+
+/// Growth factor applied to early-seen bytes when the input hasn't
+/// finished (the paper estimates from a prefix; upstream totals are
+/// unknown at this point in the DAG).
+const EST_GROWTH: f64 = 4.0;
+
+pub struct ExchangeOp {
+    common: Arc<OpCommon>,
+    input: BatchHolder,
+    /// Batches staged during estimation (spillable, like any holder).
+    pending: BatchHolder,
+    /// This exchange's receive side.
+    rx: Arc<ChannelRx>,
+    /// Wire channel id (shared by the operator pair across workers).
+    channel: u32,
+    key: Arc<String>,
+    role: ExchangeRole,
+    /// For `Probe` role: the paired Build exchange's receive side,
+    /// whose estimates drive the broadcast/partition decision.
+    partner_rx: Option<Arc<ChannelRx>>,
+    /// LIP (§5): once the downstream join publishes its build bloom
+    /// here, probe batches are pre-filtered *before* crossing the wire.
+    lip_filter: Option<crate::exec::operators::join::LipShare>,
+    lip_cut_rows: Arc<AtomicU64>,
+    state: Mutex<Phase>,
+    mode: Mutex<Option<ExchangeMode>>,
+    seen_bytes: Arc<AtomicU64>,
+    seen_batches: Arc<AtomicU64>,
+    sent_batches: Arc<AtomicU64>,
+}
+
+impl ExchangeOp {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: usize,
+        base_priority: i64,
+        max_inflight: usize,
+        input: BatchHolder,
+        pending: BatchHolder,
+        rx: Arc<ChannelRx>,
+        channel: u32,
+        key: String,
+        role: ExchangeRole,
+        partner_rx: Option<Arc<ChannelRx>>,
+        lip_filter: Option<crate::exec::operators::join::LipShare>,
+    ) -> ExchangeOp {
+        ExchangeOp {
+            common: Arc::new(OpCommon::new(id, base_priority, max_inflight)),
+            input,
+            pending,
+            rx,
+            channel,
+            key: Arc::new(key),
+            role,
+            partner_rx,
+            lip_filter,
+            lip_cut_rows: Arc::new(AtomicU64::new(0)),
+            state: Mutex::new(Phase::Accumulate),
+            mode: Mutex::new(None),
+            seen_bytes: Arc::new(AtomicU64::new(0)),
+            seen_batches: Arc::new(AtomicU64::new(0)),
+            sent_batches: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// The decided mode, once known (bench assertions).
+    pub fn mode(&self) -> Option<ExchangeMode> {
+        *self.mode.lock().unwrap()
+    }
+
+    pub fn sent_batches(&self) -> u64 {
+        self.sent_batches.load(Ordering::Relaxed)
+    }
+
+    /// Probe rows eliminated before the wire by LIP (§5 metric).
+    pub fn lip_cut_rows(&self) -> u64 {
+        self.lip_cut_rows.load(Ordering::Relaxed)
+    }
+
+    /// Route one batch according to `mode`.
+    fn route(
+        ctx: &WorkerCtx,
+        mode: ExchangeMode,
+        channel: u32,
+        key: &str,
+        batch: &RecordBatch,
+        sent: &AtomicU64,
+    ) -> Result<()> {
+        let workers = ctx.num_workers();
+        match mode {
+            ExchangeMode::Broadcast => {
+                for dst in 0..workers {
+                    ctx.outbox.send_batch(dst, channel, batch)?;
+                    sent.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            ExchangeMode::PassThrough => {
+                ctx.outbox.send_batch(ctx.worker_id, channel, batch)?;
+                sent.fetch_add(1, Ordering::Relaxed);
+            }
+            ExchangeMode::HashPartition => {
+                let keys = kernels::key_column(batch, key)?;
+                let parts = ctx
+                    .registry
+                    .as_ref()
+                    .map(|r| r.manifest().num_parts as u32)
+                    .unwrap_or(16);
+                let ids = kernels::partition_ids(ctx, keys, parts)?;
+                // rows for partition p go to worker p % workers
+                let mut by_dst: Vec<Vec<u32>> = vec![Vec::new(); workers];
+                for (row, &p) in ids.iter().enumerate() {
+                    by_dst[p as usize % workers].push(row as u32);
+                }
+                for (dst, idx) in by_dst.into_iter().enumerate() {
+                    if idx.is_empty() {
+                        continue;
+                    }
+                    let sub = batch.take(&idx)?;
+                    ctx.outbox.send_batch(dst, channel, &sub)?;
+                    sent.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Operator for ExchangeOp {
+    fn id(&self) -> usize {
+        self.common.id
+    }
+
+    fn name(&self) -> &'static str {
+        "exchange"
+    }
+
+    fn poll(&self, ctx: &WorkerCtx) -> Result<Vec<Task>> {
+        let phase = *self.state.lock().unwrap();
+        let mut tasks = Vec::new();
+        match phase {
+            Phase::Accumulate => {
+                // stage arrivals; count bytes
+                let mut budget = self.input.len().min(
+                    self.common
+                        .max_inflight
+                        .saturating_sub(self.common.inflight()),
+                );
+                while budget > 0 {
+                    budget -= 1;
+                    self.common.issue();
+                    let input = self.input.clone();
+                    let pending = self.pending.clone();
+                    let seen_bytes = self.seen_bytes.clone();
+                    let seen_batches = self.seen_batches.clone();
+                    let run = self.common.track(move |_ctx: &WorkerCtx| {
+                        if let Some(enc) = input.pop_encoded()? {
+                            seen_bytes.fetch_add(enc.len() as u64, Ordering::Relaxed);
+                            seen_batches.fetch_add(1, Ordering::Relaxed);
+                            pending.push_encoded(enc)?;
+                        }
+                        Ok(())
+                    });
+                    tasks.push(Task::new(self.common.id, self.common.base_priority, run));
+                }
+                // transition?
+                let enough = self.seen_batches.load(Ordering::Relaxed)
+                    >= ctx.config.exchange_estimate_batches as u64;
+                if (enough || self.input.is_exhausted()) && self.common.inflight() == 0 {
+                    let seen = self.seen_bytes.load(Ordering::Relaxed);
+                    let estimate = if self.input.is_exhausted() {
+                        seen
+                    } else {
+                        (seen as f64 * EST_GROWTH) as u64
+                    };
+                    for dst in 0..ctx.num_workers() {
+                        ctx.outbox.send_estimate(dst, self.channel, estimate)?;
+                    }
+                    *self.state.lock().unwrap() = Phase::WaitEstimates;
+                }
+            }
+            Phase::WaitEstimates => {
+                // Which channel's estimates decide? Build/Shuffle: our
+                // own; Probe: the paired build exchange's (all workers
+                // see identical estimate sets, so every worker reaches
+                // the same decision independently).
+                let decider = self.partner_rx.as_ref().unwrap_or(&self.rx);
+                let (count, total) = decider.estimates();
+                if count >= ctx.num_workers() {
+                    let small = total as usize <= ctx.config.broadcast_threshold;
+                    let mode = match self.role {
+                        ExchangeRole::Shuffle => ExchangeMode::HashPartition,
+                        ExchangeRole::Build if small => ExchangeMode::Broadcast,
+                        ExchangeRole::Build => ExchangeMode::HashPartition,
+                        ExchangeRole::Probe { .. } if small => ExchangeMode::PassThrough,
+                        ExchangeRole::Probe { .. } => ExchangeMode::HashPartition,
+                    };
+                    *self.mode.lock().unwrap() = Some(mode);
+                    ctx.metrics
+                        .counter(match mode {
+                            ExchangeMode::Broadcast => "exchange.broadcast",
+                            ExchangeMode::HashPartition => "exchange.partition",
+                            ExchangeMode::PassThrough => "exchange.passthrough",
+                        })
+                        .inc();
+                    *self.state.lock().unwrap() = Phase::Stream;
+                }
+            }
+            Phase::Stream => {
+                let mode = self.mode.lock().unwrap().expect("mode decided");
+                // LIP hold-off (§5): in PassThrough mode the rows stay
+                // local and the build side (broadcast, small) completes
+                // quickly — waiting for its bloom costs little and lets
+                // every probe row be pre-filtered. The join always
+                // publishes once its build input is exhausted, so this
+                // cannot stall indefinitely.
+                if mode == ExchangeMode::PassThrough {
+                    if let Some(share) = &self.lip_filter {
+                        if share.read().unwrap().is_none() {
+                            return Ok(tasks);
+                        }
+                    }
+                }
+                let avail = self.pending.len() + self.input.len();
+                let mut budget = avail.min(
+                    self.common
+                        .max_inflight
+                        .saturating_sub(self.common.inflight()),
+                );
+                while budget > 0 {
+                    budget -= 1;
+                    self.common.issue();
+                    let pending = self.pending.clone();
+                    let input = self.input.clone();
+                    let channel = self.channel;
+                    let key = self.key.clone();
+                    let sent = self.sent_batches.clone();
+                    let lip = self.lip_filter.clone();
+                    let lip_cut = self.lip_cut_rows.clone();
+                    let run = self.common.track(move |ctx: &WorkerCtx| {
+                        // drain staged batches first (FIFO overall)
+                        let db = match pending.pop_device()? {
+                            Some(db) => Some(db),
+                            None => input.pop_device()?,
+                        };
+                        if let Some(db) = db {
+                            // LIP pre-filter: drop rows that cannot join
+                            // before they cost wire bytes (§5). Only
+                            // sound in PassThrough mode: the build side
+                            // was broadcast, so the local join's bloom
+                            // covers the *entire* build relation. In
+                            // HashPartition mode each worker's bloom
+                            // covers only its partition and would drop
+                            // joinable rows.
+                            let mut batch = db.batch.clone();
+                            drop(db);
+                            if let (Some(share), ExchangeMode::PassThrough) = (&lip, mode) {
+                                let cells = share.read().unwrap().clone();
+                                if let Some(cells) = cells {
+                                    let keys = kernels::key_column(&batch, &key)?;
+                                    let mask = kernels::bloom_probe(ctx, keys, &cells)?;
+                                    let before = batch.rows();
+                                    batch = batch.compact(&mask)?;
+                                    lip_cut.fetch_add(
+                                        (before - batch.rows()) as u64,
+                                        Ordering::Relaxed,
+                                    );
+                                }
+                            }
+                            if !batch.is_empty() {
+                                Self::route(ctx, mode, channel, &key, &batch, &sent)?;
+                            }
+                        }
+                        Ok(())
+                    });
+                    tasks.push(
+                        Task::new(self.common.id, self.common.base_priority, run)
+                            .with_prefetch(Prefetch::Promote {
+                                holder: self.pending.clone(),
+                            }),
+                    );
+                }
+                if self.input.is_exhausted()
+                    && self.pending.is_empty()
+                    && self.common.inflight() == 0
+                {
+                    for dst in 0..ctx.num_workers() {
+                        ctx.outbox.send_finish(dst, self.channel)?;
+                    }
+                    *self.state.lock().unwrap() = Phase::Done;
+                    self.common.mark_done();
+                }
+            }
+            Phase::Done => {}
+        }
+        Ok(tasks)
+    }
+
+    fn is_done(&self) -> bool {
+        self.common.is_done()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_constants() {
+        assert_ne!(ExchangeMode::Broadcast, ExchangeMode::HashPartition);
+    }
+}

@@ -1,0 +1,302 @@
+//! Filter and Project operators.
+//!
+//! Filter "can schedule tasks as soon as batches arrive at their
+//! input" (§3.1): each task pops one batch, evaluates the predicate
+//! mask on the device (AOT filter stage), compacts on the host, and
+//! pushes the survivors. Project is the trivial column subset.
+
+use std::sync::Arc;
+
+use crate::exec::operators::{kernels, OpCommon, Operator};
+use crate::exec::plan::Pred;
+use crate::exec::task::{Prefetch, Task};
+use crate::exec::WorkerCtx;
+use crate::memory::batch_holder::DeviceBatch;
+use crate::memory::BatchHolder;
+use crate::Result;
+
+pub struct FilterOp {
+    common: Arc<OpCommon>,
+    input: BatchHolder,
+    output: BatchHolder,
+    pred: Arc<Pred>,
+}
+
+impl FilterOp {
+    pub fn new(
+        id: usize,
+        base_priority: i64,
+        max_inflight: usize,
+        input: BatchHolder,
+        output: BatchHolder,
+        pred: Pred,
+    ) -> FilterOp {
+        FilterOp {
+            common: Arc::new(OpCommon::new(id, base_priority, max_inflight)),
+            input,
+            output,
+            pred: Arc::new(pred),
+        }
+    }
+}
+
+impl Operator for FilterOp {
+    fn id(&self) -> usize {
+        self.common.id
+    }
+
+    fn name(&self) -> &'static str {
+        "filter"
+    }
+
+    fn poll(&self, _ctx: &WorkerCtx) -> Result<Vec<Task>> {
+        if self.common.is_done() {
+            return Ok(Vec::new());
+        }
+        let mut tasks = Vec::new();
+        // one task per currently-visible batch, bounded by max_inflight
+        let available = self.input.len();
+        let mut budget = available.min(
+            self.common
+                .max_inflight
+                .saturating_sub(self.common.inflight()),
+        );
+        while budget > 0 {
+            budget -= 1;
+            self.common.issue();
+            let input = self.input.clone();
+            let output = self.output.clone();
+            let pred = self.pred.clone();
+            let run = self.common.track(move |ctx: &WorkerCtx| {
+                let db: DeviceBatch = match input.pop_device()? {
+                    Some(db) => db,
+                    None => return Ok(()), // another task drained it
+                };
+                let mask = kernels::pred_mask(ctx, &db.batch, &pred)?;
+                let kept = db.batch.compact(&mask)?;
+                drop(db); // release input device bytes before pushing
+                if !kept.is_empty() {
+                    output.push_batch(kept)?;
+                }
+                Ok(())
+            });
+            tasks.push(
+                Task::new(self.common.id, self.common.base_priority, run)
+                    .with_prefetch(Prefetch::Promote { holder: self.input.clone() }),
+            );
+        }
+        if self.input.is_exhausted() && self.common.inflight() == 0 {
+            self.output.finish();
+            self.common.mark_done();
+        }
+        Ok(tasks)
+    }
+
+    fn is_done(&self) -> bool {
+        self.common.is_done()
+    }
+}
+
+pub struct ProjectOp {
+    common: Arc<OpCommon>,
+    input: BatchHolder,
+    output: BatchHolder,
+    cols: Arc<Vec<String>>,
+}
+
+impl ProjectOp {
+    pub fn new(
+        id: usize,
+        base_priority: i64,
+        max_inflight: usize,
+        input: BatchHolder,
+        output: BatchHolder,
+        cols: Vec<String>,
+    ) -> ProjectOp {
+        ProjectOp {
+            common: Arc::new(OpCommon::new(id, base_priority, max_inflight)),
+            input,
+            output,
+            cols: Arc::new(cols),
+        }
+    }
+}
+
+impl Operator for ProjectOp {
+    fn id(&self) -> usize {
+        self.common.id
+    }
+
+    fn name(&self) -> &'static str {
+        "project"
+    }
+
+    fn poll(&self, _ctx: &WorkerCtx) -> Result<Vec<Task>> {
+        if self.common.is_done() {
+            return Ok(Vec::new());
+        }
+        let mut tasks = Vec::new();
+        let mut budget = self.input.len().min(
+            self.common
+                .max_inflight
+                .saturating_sub(self.common.inflight()),
+        );
+        while budget > 0 {
+            budget -= 1;
+            self.common.issue();
+            let input = self.input.clone();
+            let output = self.output.clone();
+            let cols = self.cols.clone();
+            let run = self.common.track(move |_ctx: &WorkerCtx| {
+                let db = match input.pop_device()? {
+                    Some(db) => db,
+                    None => return Ok(()),
+                };
+                let names: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+                let projected = db.batch.project(&names)?;
+                drop(db);
+                output.push_batch(projected)?;
+                Ok(())
+            });
+            tasks.push(Task::new(self.common.id, self.common.base_priority, run));
+        }
+        if self.input.is_exhausted() && self.common.inflight() == 0 {
+            self.output.finish();
+            self.common.mark_done();
+        }
+        Ok(tasks)
+    }
+
+    fn is_done(&self) -> bool {
+        self.common.is_done()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::batch_holder::MemEnv;
+    use crate::types::{Column, RecordBatch};
+
+    fn batch(lo: i64, n: i64) -> RecordBatch {
+        RecordBatch::new(vec![
+            Column::i64("k", (lo..lo + n).collect()),
+            Column::f32("v", (0..n).map(|i| i as f32).collect()),
+        ])
+        .unwrap()
+    }
+
+    fn drive(op: &dyn Operator, ctx: &WorkerCtx) {
+        for _ in 0..100 {
+            let tasks = op.poll(ctx).unwrap();
+            for t in tasks {
+                (t.run)(ctx).unwrap();
+            }
+            if op.is_done() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn filter_keeps_matching_rows() {
+        let ctx = WorkerCtx::test();
+        let env = MemEnv::test(8 << 20);
+        let input = BatchHolder::new("in", env.clone());
+        let output = BatchHolder::new("out", env);
+        input.push_batch(batch(0, 100)).unwrap();
+        input.push_batch(batch(100, 100)).unwrap();
+        input.finish();
+        let op = FilterOp::new(
+            1,
+            1000,
+            2,
+            input,
+            output.clone(),
+            Pred::RangeI64 { col: "k".into(), lo: 50, hi: 150 },
+        );
+        drive(&op, &ctx);
+        assert!(op.is_done());
+        assert!(output.is_finished());
+        let mut rows = 0;
+        let mut keys = Vec::new();
+        while let Some(db) = output.pop_device().unwrap() {
+            rows += db.rows();
+            keys.extend_from_slice(db.batch.column("k").unwrap().data.as_i64().unwrap());
+        }
+        assert_eq!(rows, 100);
+        keys.sort_unstable();
+        assert_eq!(keys, (50..150).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn filter_drops_empty_batches() {
+        let ctx = WorkerCtx::test();
+        let env = MemEnv::test(8 << 20);
+        let input = BatchHolder::new("in", env.clone());
+        let output = BatchHolder::new("out", env);
+        input.push_batch(batch(0, 50)).unwrap();
+        input.finish();
+        let op = FilterOp::new(
+            1,
+            0,
+            1,
+            input,
+            output.clone(),
+            Pred::EqI64 { col: "k".into(), val: 9999 },
+        );
+        drive(&op, &ctx);
+        assert!(output.is_exhausted());
+    }
+
+    #[test]
+    fn filter_waits_for_input_finish() {
+        let ctx = WorkerCtx::test();
+        let env = MemEnv::test(8 << 20);
+        let input = BatchHolder::new("in", env.clone());
+        let output = BatchHolder::new("out", env);
+        input.push_batch(batch(0, 10)).unwrap();
+        let op = FilterOp::new(
+            1,
+            0,
+            1,
+            input.clone(),
+            output.clone(),
+            Pred::RangeI64 { col: "k".into(), lo: 0, hi: 100 },
+        );
+        drive(&op, &ctx);
+        assert!(!op.is_done(), "must not finish before input does");
+        input.finish();
+        drive(&op, &ctx);
+        assert!(op.is_done());
+    }
+
+    #[test]
+    fn project_subsets_and_orders_columns() {
+        let ctx = WorkerCtx::test();
+        let env = MemEnv::test(8 << 20);
+        let input = BatchHolder::new("in", env.clone());
+        let output = BatchHolder::new("out", env);
+        input.push_batch(batch(0, 20)).unwrap();
+        input.finish();
+        let op = ProjectOp::new(2, 0, 1, input, output.clone(), vec!["v".into()]);
+        drive(&op, &ctx);
+        let db = output.pop_device().unwrap().unwrap();
+        assert_eq!(db.batch.num_columns(), 1);
+        assert_eq!(db.batch.columns[0].name, "v");
+    }
+
+    #[test]
+    fn project_missing_column_is_permanent_error() {
+        let ctx = WorkerCtx::test();
+        let env = MemEnv::test(8 << 20);
+        let input = BatchHolder::new("in", env.clone());
+        let output = BatchHolder::new("out", env);
+        input.push_batch(batch(0, 5)).unwrap();
+        input.finish();
+        let op = ProjectOp::new(2, 0, 1, input, output, vec!["nope".into()]);
+        let tasks = op.poll(&ctx).unwrap();
+        let e = (tasks[0].run)(&ctx).unwrap_err();
+        assert!(!e.is_retryable());
+    }
+}

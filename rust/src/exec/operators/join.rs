@@ -1,0 +1,291 @@
+//! Adaptive Join (§3.2) with optional Lookahead Information Passing
+//! (§5).
+//!
+//! Inner equi-join. Input 0 is the build side, input 1 the probe side
+//! (both normally fed by the paired Adaptive Exchanges). The operator
+//! "must wait until some data has arrived from both" inputs — here the
+//! build phase consumes the entire build side (classic hash join), then
+//! probe tasks stream.
+//!
+//! With `lip` enabled, the build phase also constructs a bloom filter
+//! over the build keys (device `bloom_build` stage) and every probe
+//! batch is pre-filtered with `bloom_probe` before the hash-table
+//! lookups — the paper reports ~50% runtime cuts on join-heavy queries
+//! from passing this lookahead information down.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::exec::operators::{kernels, OpCommon, Operator};
+use crate::exec::task::{Prefetch, Task};
+use crate::exec::WorkerCtx;
+use crate::memory::BatchHolder;
+use crate::types::{Column, RecordBatch};
+use crate::{Error, Result};
+
+/// Shared LIP slot: the join publishes its build-side bloom filter
+/// here; the probe-side exchange (§5 Lookahead Information Passing)
+/// applies it *before* rows cross the wire. Empty until the build
+/// completes — rows exchanged earlier simply go unfiltered.
+pub type LipShare = Arc<RwLock<Option<Arc<Vec<u32>>>>>;
+
+/// Immutable build-side table after the build phase.
+struct BuildTable {
+    /// All build rows, concatenated.
+    batch: RecordBatch,
+    /// key -> row indices.
+    index: std::collections::HashMap<i64, Vec<u32>>,
+    /// LIP bloom cells (empty when lip disabled).
+    bloom: Vec<u32>,
+}
+
+pub struct HashJoinOp {
+    common: Arc<OpCommon>,
+    build_input: BatchHolder,
+    probe_input: BatchHolder,
+    output: BatchHolder,
+    left_on: Arc<String>,
+    right_on: Arc<String>,
+    lip: bool,
+    /// Where to publish the build bloom for the probe exchange.
+    lip_share: Option<LipShare>,
+    /// Build batches accumulated so far.
+    staged: Arc<Mutex<Vec<RecordBatch>>>,
+    built: Arc<RwLock<Option<Arc<BuildTable>>>>,
+    probed_rows: Arc<AtomicU64>,
+    bloom_filtered: Arc<AtomicU64>,
+}
+
+impl HashJoinOp {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: usize,
+        base_priority: i64,
+        max_inflight: usize,
+        build_input: BatchHolder,
+        probe_input: BatchHolder,
+        output: BatchHolder,
+        left_on: String,
+        right_on: String,
+        lip: bool,
+        lip_share: Option<LipShare>,
+    ) -> HashJoinOp {
+        HashJoinOp {
+            common: Arc::new(OpCommon::new(id, base_priority, max_inflight)),
+            build_input,
+            probe_input,
+            output,
+            left_on: Arc::new(left_on),
+            right_on: Arc::new(right_on),
+            lip,
+            lip_share,
+            staged: Arc::new(Mutex::new(Vec::new())),
+            built: Arc::new(RwLock::new(None)),
+            probed_rows: Arc::new(AtomicU64::new(0)),
+            bloom_filtered: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Probe rows eliminated by the bloom pre-filter (LIP ablation
+    /// metric).
+    pub fn bloom_filtered_rows(&self) -> u64 {
+        self.bloom_filtered.load(Ordering::Relaxed)
+    }
+
+    pub fn probed_rows(&self) -> u64 {
+        self.probed_rows.load(Ordering::Relaxed)
+    }
+
+    fn build_ready(&self) -> bool {
+        self.built.read().unwrap().is_some()
+    }
+}
+
+impl Operator for HashJoinOp {
+    fn id(&self) -> usize {
+        self.common.id
+    }
+
+    fn name(&self) -> &'static str {
+        "hash_join"
+    }
+
+    fn poll(&self, ctx: &WorkerCtx) -> Result<Vec<Task>> {
+        if self.common.is_done() {
+            return Ok(Vec::new());
+        }
+        let mut tasks = Vec::new();
+
+        if !self.build_ready() {
+            // ---- build phase: drain build input into `staged`
+            let mut budget = self.build_input.len().min(
+                self.common
+                    .max_inflight
+                    .saturating_sub(self.common.inflight()),
+            );
+            while budget > 0 {
+                budget -= 1;
+                self.common.issue();
+                let input = self.build_input.clone();
+                let staged = self.staged.clone();
+                let run = self.common.track(move |_ctx: &WorkerCtx| {
+                    if let Some(db) = input.pop_device()? {
+                        staged.lock().unwrap().push(db.batch.clone());
+                    }
+                    Ok(())
+                });
+                tasks.push(
+                    Task::new(self.common.id, self.common.base_priority + 100, run)
+                        .with_prefetch(Prefetch::Promote {
+                            holder: self.build_input.clone(),
+                        }),
+                );
+            }
+            // transition: build side fully consumed -> construct table
+            if self.build_input.is_exhausted() && self.common.inflight() == 0 {
+                let staged = std::mem::take(&mut *self.staged.lock().unwrap());
+                let batch = RecordBatch::concat(&staged)?;
+                let keys: Vec<i64> = if batch.is_empty() {
+                    Vec::new()
+                } else {
+                    kernels::key_column(&batch, &self.left_on)?.to_vec()
+                };
+                let mut index: std::collections::HashMap<i64, Vec<u32>> =
+                    std::collections::HashMap::with_capacity(keys.len());
+                for (i, &k) in keys.iter().enumerate() {
+                    index.entry(k).or_default().push(i as u32);
+                }
+                let bloom = if self.lip {
+                    let bits = ctx
+                        .registry
+                        .as_ref()
+                        .map(|r| r.manifest().bloom_bits)
+                        .unwrap_or(16384);
+                    // an empty build side yields all-zero cells: the
+                    // correct lookahead info (inner join -> empty)
+                    kernels::bloom_build(ctx, &keys, bits)?
+                } else {
+                    Vec::new()
+                };
+                // publish the lookahead information for the probe-side
+                // exchange (§5) — always once built, so a waiting probe
+                // exchange is never stranded. When the exchange applies
+                // the filter, re-probing here would be redundant work:
+                // every arriving row already passed the bloom.
+                let bloom = match &self.lip_share {
+                    Some(share) => {
+                        *share.write().unwrap() = Some(Arc::new(bloom));
+                        Vec::new()
+                    }
+                    None => bloom,
+                };
+                *self.built.write().unwrap() =
+                    Some(Arc::new(BuildTable { batch, index, bloom }));
+            }
+            return Ok(tasks);
+        }
+
+        // ---- probe phase
+        let mut budget = self.probe_input.len().min(
+            self.common
+                .max_inflight
+                .saturating_sub(self.common.inflight()),
+        );
+        while budget > 0 {
+            budget -= 1;
+            self.common.issue();
+            let probe = self.probe_input.clone();
+            let output = self.output.clone();
+            let built = self.built.clone();
+            let right_on = self.right_on.clone();
+            let probed = self.probed_rows.clone();
+            let bloomed = self.bloom_filtered.clone();
+            let run = self.common.track(move |ctx: &WorkerCtx| {
+                let db = match probe.pop_device()? {
+                    Some(db) => db,
+                    None => return Ok(()),
+                };
+                let table = built
+                    .read()
+                    .unwrap()
+                    .clone()
+                    .ok_or_else(|| Error::internal("probe before build"))?;
+                let out = probe_batch(ctx, &table, &db.batch, &right_on, &probed, &bloomed)?;
+                drop(db);
+                if !out.is_empty() {
+                    output.push_batch(out)?;
+                }
+                Ok(())
+            });
+            tasks.push(
+                Task::new(self.common.id, self.common.base_priority, run).with_prefetch(
+                    Prefetch::Promote { holder: self.probe_input.clone() },
+                ),
+            );
+        }
+        if self.probe_input.is_exhausted() && self.common.inflight() == 0 {
+            self.output.finish();
+            self.common.mark_done();
+        }
+        Ok(tasks)
+    }
+
+    fn is_done(&self) -> bool {
+        self.common.is_done()
+    }
+}
+
+/// Join one probe batch against the build table.
+fn probe_batch(
+    ctx: &WorkerCtx,
+    table: &BuildTable,
+    probe: &RecordBatch,
+    right_on: &str,
+    probed: &AtomicU64,
+    bloomed: &AtomicU64,
+) -> Result<RecordBatch> {
+    let keys = kernels::key_column(probe, right_on)?;
+    probed.fetch_add(keys.len() as u64, Ordering::Relaxed);
+
+    // LIP pre-filter
+    let candidate: Vec<u32> = if !table.bloom.is_empty() {
+        let mask = kernels::bloom_probe(ctx, keys, &table.bloom)?;
+        let kept: Vec<u32> = (0..keys.len() as u32)
+            .filter(|&i| mask[i as usize] != 0)
+            .collect();
+        bloomed.fetch_add((keys.len() - kept.len()) as u64, Ordering::Relaxed);
+        kept
+    } else {
+        (0..keys.len() as u32).collect()
+    };
+
+    // hash lookups
+    let mut probe_idx = Vec::new();
+    let mut build_idx = Vec::new();
+    for &i in &candidate {
+        if let Some(rows) = table.index.get(&keys[i as usize]) {
+            for &b in rows {
+                probe_idx.push(i);
+                build_idx.push(b);
+            }
+        }
+    }
+    if probe_idx.is_empty() {
+        return Ok(RecordBatch::empty());
+    }
+    ctx.device_compute
+        .acquire(probe_idx.len() * (probe.schema_shape().row_width() + 8));
+
+    // gather: probe columns + build columns (probe-side key kept;
+    // build-side duplicate key column dropped)
+    let probe_side = probe.take(&probe_idx)?;
+    let build_side = table.batch.take(&build_idx)?;
+    let mut columns: Vec<Column> = probe_side.columns;
+    for c in build_side.columns {
+        if columns.iter().any(|e| e.name == c.name) {
+            continue; // drop duplicate (the equi-key and any same-named col)
+        }
+        columns.push(c);
+    }
+    RecordBatch::new(columns)
+}

@@ -1,0 +1,384 @@
+//! Device-stage wrappers: chunk a batch to the AOT shape, call the
+//! PJRT executable, fall back to host scalar code when no registry is
+//! available (unit tests) or the dtype has no stage.
+//!
+//! Every wrapper charges the modeled device-compute throttle for the
+//! bytes it processes — the PJRT CPU path under-costs a real GPU, so
+//! the throttle restores the paper's device/wire/storage speed *ratios*
+//! (DESIGN.md §Hardware-Adaptation).
+
+use crate::exec::plan::Pred;
+use crate::exec::WorkerCtx;
+use crate::runtime::Value;
+use crate::types::{ColumnData, DType, RecordBatch};
+use crate::util::hash;
+use crate::{Error, Result};
+
+/// Rows per device launch (the AOT static shape).
+pub fn batch_rows(ctx: &WorkerCtx) -> usize {
+    ctx.registry
+        .as_ref()
+        .map(|r| r.manifest().batch_rows)
+        .unwrap_or(ctx.config.batch_rows)
+}
+
+fn charge(ctx: &WorkerCtx, bytes: usize) {
+    ctx.device_compute.acquire(bytes);
+}
+
+// ---------------------------------------------------------------- filter
+
+/// Evaluate `pred` over `batch`, returning a 0/1 keep-mask.
+pub fn pred_mask(ctx: &WorkerCtx, batch: &RecordBatch, pred: &Pred) -> Result<Vec<i32>> {
+    let rows = batch.rows();
+    let mut mask = vec![1i32; rows];
+    for conjunct in pred.conjuncts() {
+        apply_conjunct(ctx, batch, conjunct, &mut mask)?;
+    }
+    Ok(mask)
+}
+
+fn apply_conjunct(
+    ctx: &WorkerCtx,
+    batch: &RecordBatch,
+    pred: &Pred,
+    mask: &mut [i32],
+) -> Result<()> {
+    let rows = batch.rows();
+    match pred {
+        Pred::RangeF32 { col, lo, hi } => {
+            let c = batch.column(col)?;
+            let v = c.data.as_f32()?;
+            charge(ctx, rows * 4);
+            if let Some(reg) = &ctx.registry {
+                let n = reg.manifest().batch_rows;
+                for start in (0..rows).step_by(n) {
+                    let len = n.min(rows - start);
+                    let out = reg.execute(
+                        "filter_range_f32",
+                        &[
+                            Value::F32(v[start..start + len].to_vec()),
+                            Value::scalar_f32(*lo),
+                            Value::scalar_f32(*hi),
+                            Value::I32(mask[start..start + len].to_vec()),
+                        ],
+                    )?;
+                    mask[start..start + len]
+                        .copy_from_slice(&out[0].as_i32()?[..len]);
+                }
+            } else {
+                for i in 0..rows {
+                    if !(v[i] >= *lo && v[i] < *hi) {
+                        mask[i] = 0;
+                    }
+                }
+            }
+        }
+        Pred::RangeI64 { col, lo, hi } => {
+            let c = batch.column(col)?;
+            let v = c.data.as_i64()?;
+            charge(ctx, rows * 8);
+            if let Some(reg) = &ctx.registry {
+                let n = reg.manifest().batch_rows;
+                for start in (0..rows).step_by(n) {
+                    let len = n.min(rows - start);
+                    let out = reg.execute(
+                        "filter_range_i64",
+                        &[
+                            Value::I64(v[start..start + len].to_vec()),
+                            Value::I64(vec![*lo]),
+                            Value::I64(vec![*hi]),
+                            Value::I32(mask[start..start + len].to_vec()),
+                        ],
+                    )?;
+                    mask[start..start + len]
+                        .copy_from_slice(&out[0].as_i32()?[..len]);
+                }
+            } else {
+                for i in 0..rows {
+                    if !(v[i] >= *lo && v[i] < *hi) {
+                        mask[i] = 0;
+                    }
+                }
+            }
+        }
+        Pred::EqI64 { col, val } => {
+            let c = batch.column(col)?;
+            let v = c.data.as_i64()?;
+            charge(ctx, rows * 8);
+            if let Some(reg) = &ctx.registry {
+                let n = reg.manifest().batch_rows;
+                for start in (0..rows).step_by(n) {
+                    let len = n.min(rows - start);
+                    let out = reg.execute(
+                        "filter_eq_i64",
+                        &[
+                            Value::I64(v[start..start + len].to_vec()),
+                            Value::I64(vec![*val]),
+                            Value::I32(mask[start..start + len].to_vec()),
+                        ],
+                    )?;
+                    mask[start..start + len]
+                        .copy_from_slice(&out[0].as_i32()?[..len]);
+                }
+            } else {
+                for i in 0..rows {
+                    if v[i] != *val {
+                        mask[i] = 0;
+                    }
+                }
+            }
+        }
+        Pred::And(a, b) => {
+            apply_conjunct(ctx, batch, a, mask)?;
+            apply_conjunct(ctx, batch, b, mask)?;
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------- partition
+
+/// Hash-partition ids for exchange keys; `parts` must match the AOT
+/// fanout when the registry path is used.
+pub fn partition_ids(ctx: &WorkerCtx, keys: &[i64], parts: u32) -> Result<Vec<i32>> {
+    charge(ctx, keys.len() * 8);
+    if let Some(reg) = &ctx.registry {
+        if parts as usize == reg.manifest().num_parts {
+            let n = reg.manifest().batch_rows;
+            let mut out = Vec::with_capacity(keys.len());
+            for start in (0..keys.len()).step_by(n) {
+                let len = n.min(keys.len() - start);
+                let r = reg.execute(
+                    "hash_partition",
+                    &[
+                        Value::I64(keys[start..start + len].to_vec()),
+                        Value::I32(vec![1; len]),
+                    ],
+                )?;
+                out.extend_from_slice(&r[0].as_i32()?[..len]);
+            }
+            return Ok(out);
+        }
+    }
+    Ok(keys
+        .iter()
+        .map(|&k| hash::partition_id(k, parts) as i32)
+        .collect())
+}
+
+// ----------------------------------------------------------------- bloom
+
+/// Build a bloom filter over `keys` (OR-merged across launches).
+pub fn bloom_build(ctx: &WorkerCtx, keys: &[i64], bits: usize) -> Result<Vec<u32>> {
+    charge(ctx, keys.len() * 8);
+    if let Some(reg) = &ctx.registry {
+        if bits == reg.manifest().bloom_bits {
+            let n = reg.manifest().batch_rows;
+            let mut cells = vec![0u32; bits];
+            for start in (0..keys.len()).step_by(n) {
+                let len = n.min(keys.len() - start);
+                let r = reg.execute(
+                    "bloom_build",
+                    &[
+                        Value::I64(keys[start..start + len].to_vec()),
+                        Value::I32(vec![1; len]),
+                    ],
+                )?;
+                for (c, &v) in cells.iter_mut().zip(r[0].as_u32()?) {
+                    *c |= v;
+                }
+            }
+            return Ok(cells);
+        }
+    }
+    let mut cells = vec![0u32; bits];
+    for &k in keys {
+        let (a, b) = hash::bloom_lanes(k, bits as u64);
+        cells[a] = 1;
+        cells[b] = 1;
+    }
+    Ok(cells)
+}
+
+/// Probe: 1 where the key may be present.
+pub fn bloom_probe(ctx: &WorkerCtx, keys: &[i64], cells: &[u32]) -> Result<Vec<i32>> {
+    charge(ctx, keys.len() * 8);
+    if let Some(reg) = &ctx.registry {
+        if cells.len() == reg.manifest().bloom_bits {
+            let n = reg.manifest().batch_rows;
+            let mut out = Vec::with_capacity(keys.len());
+            for start in (0..keys.len()).step_by(n) {
+                let len = n.min(keys.len() - start);
+                let r = reg.execute(
+                    "bloom_probe",
+                    &[
+                        Value::I64(keys[start..start + len].to_vec()),
+                        Value::I32(vec![1; len]),
+                        Value::U32(cells.to_vec()),
+                    ],
+                )?;
+                out.extend_from_slice(&r[0].as_i32()?[..len]);
+            }
+            return Ok(out);
+        }
+    }
+    Ok(keys
+        .iter()
+        .map(|&k| {
+            let (a, b) = hash::bloom_lanes(k, cells.len() as u64);
+            (cells[a] != 0 && cells[b] != 0) as i32
+        })
+        .collect())
+}
+
+// ------------------------------------------------------------------ agg
+
+/// Device pre-aggregation result for one launch.
+pub struct PreAgg {
+    pub bucket_of_row: Vec<i32>,
+    pub sums: Vec<f32>,
+    pub counts: Vec<i32>,
+    pub mins: Vec<f32>,
+    pub maxs: Vec<f32>,
+}
+
+/// Run the device pre-aggregation over (keys, f32 vals). Returns `None`
+/// when no registry (callers host-aggregate instead).
+pub fn bucket_preagg(
+    ctx: &WorkerCtx,
+    keys: &[i64],
+    vals: &[f32],
+) -> Result<Option<Vec<PreAgg>>> {
+    charge(ctx, keys.len() * 12);
+    let reg = match &ctx.registry {
+        Some(r) => r,
+        None => return Ok(None),
+    };
+    let n = reg.manifest().batch_rows;
+    let mut out = Vec::new();
+    for start in (0..keys.len()).step_by(n) {
+        let len = n.min(keys.len() - start);
+        let r = reg.execute(
+            "bucket_preagg",
+            &[
+                Value::I64(keys[start..start + len].to_vec()),
+                Value::F32(vals[start..start + len].to_vec()),
+                Value::I32(vec![1; len]),
+            ],
+        )?;
+        out.push(PreAgg {
+            bucket_of_row: r[0].as_i32()?[..len].to_vec(),
+            sums: r[1].as_f32()?.to_vec(),
+            counts: r[2].as_i32()?.to_vec(),
+            mins: r[3].as_f32()?.to_vec(),
+            maxs: r[4].as_f32()?.to_vec(),
+        });
+    }
+    Ok(Some(out))
+}
+
+// ------------------------------------------------------------- utilities
+
+/// Extract i64-backed key column or fail with a plan error.
+pub fn key_column<'a>(batch: &'a RecordBatch, col: &str) -> Result<&'a [i64]> {
+    let c = batch.column(col)?;
+    if c.dtype == DType::Float32 || c.dtype == DType::Float64 {
+        return Err(Error::Plan(format!(
+            "column '{col}' is {}, not a valid hash key",
+            c.dtype
+        )));
+    }
+    c.data.as_i64()
+}
+
+/// Value column as f32 for the device agg path (f32 columns only).
+pub fn f32_column(batch: &RecordBatch, col: &str) -> Option<Vec<f32>> {
+    batch
+        .column(col)
+        .ok()
+        .and_then(|c| match &c.data {
+            ColumnData::F32(v) => Some(v.clone()),
+            _ => None,
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Column;
+
+    fn batch() -> RecordBatch {
+        RecordBatch::new(vec![
+            Column::i64("k", (0..100).collect()),
+            Column::f32("v", (0..100).map(|i| i as f32).collect()),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn host_fallback_pred_mask() {
+        let ctx = WorkerCtx::test();
+        let b = batch();
+        let pred = Pred::RangeI64 { col: "k".into(), lo: 10, hi: 20 }
+            .and(Pred::RangeF32 { col: "v".into(), lo: 0.0, hi: 15.0 });
+        let m = pred_mask(&ctx, &b, &pred).unwrap();
+        let kept: Vec<usize> = (0..100).filter(|&i| m[i] != 0).collect();
+        assert_eq!(kept, (10..15).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn host_fallback_partition_matches_util_hash() {
+        let ctx = WorkerCtx::test();
+        let keys: Vec<i64> = (0..50).map(|i| i * 13).collect();
+        let ids = partition_ids(&ctx, &keys, 8).unwrap();
+        for (i, &k) in keys.iter().enumerate() {
+            assert_eq!(ids[i] as u32, hash::partition_id(k, 8));
+        }
+    }
+
+    #[test]
+    fn host_fallback_bloom_no_false_negatives() {
+        let ctx = WorkerCtx::test();
+        let keys: Vec<i64> = (0..100).map(|i| i * 3 + 1).collect();
+        let cells = bloom_build(&ctx, &keys, 4096).unwrap();
+        let hits = bloom_probe(&ctx, &keys, &cells).unwrap();
+        assert!(hits.iter().all(|&h| h == 1));
+    }
+
+    #[test]
+    fn device_paths_match_host_fallbacks() {
+        // Requires artifacts; the registry path must agree with host.
+        let Ok(dev) = WorkerCtx::test_with_registry() else {
+            return;
+        };
+        let host = WorkerCtx::test();
+        let b = batch();
+        let pred = Pred::RangeF32 { col: "v".into(), lo: 5.0, hi: 50.0 };
+        assert_eq!(
+            pred_mask(&dev, &b, &pred).unwrap(),
+            pred_mask(&host, &b, &pred).unwrap()
+        );
+        let keys: Vec<i64> = (0..200).map(|i| i * 7 - 3).collect();
+        assert_eq!(
+            partition_ids(&dev, &keys, 16).unwrap(),
+            partition_ids(&host, &keys, 16).unwrap()
+        );
+        let bits = dev.registry.as_ref().unwrap().manifest().bloom_bits;
+        let dc = bloom_build(&dev, &keys, bits).unwrap();
+        let hc = bloom_build(&host, &keys, bits).unwrap();
+        assert_eq!(dc, hc);
+        assert_eq!(
+            bloom_probe(&dev, &keys, &dc).unwrap(),
+            bloom_probe(&host, &keys, &hc).unwrap()
+        );
+    }
+
+    #[test]
+    fn key_column_rejects_floats() {
+        let b = batch();
+        assert!(key_column(&b, "k").is_ok());
+        assert!(key_column(&b, "v").is_err());
+        assert!(key_column(&b, "nope").is_err());
+    }
+}

@@ -1,0 +1,116 @@
+//! Physical operators (§3.1–§3.2).
+//!
+//! Operators are polled state machines: the worker driver calls
+//! [`Operator::poll`] repeatedly; ready work is returned as [`Task`]s
+//! for the Compute Executor, and phase transitions (exchange estimation,
+//! join build→probe, aggregation finalize) happen inside `poll` when
+//! their conditions are met. Tasks communicate back through the shared
+//! operator state; all pops from batch holders are restartable, so a
+//! task failing with a retryable OOM re-runs safely (§3.3.2).
+
+pub mod agg;
+pub mod exchange;
+pub mod filter;
+pub mod join;
+pub mod kernels;
+pub mod scan;
+pub mod sort;
+
+pub use agg::HashAggOp;
+pub use exchange::ExchangeOp;
+pub use filter::{FilterOp, ProjectOp};
+pub use join::HashJoinOp;
+pub use scan::ScanOp;
+pub use sort::{LimitOp, SortOp};
+
+use crate::exec::{Task, WorkerCtx};
+use crate::Result;
+
+/// The driver-facing operator interface.
+pub trait Operator: Send + Sync {
+    /// Plan-node id.
+    fn id(&self) -> usize;
+
+    fn name(&self) -> &'static str;
+
+    /// Generate ready tasks. Must be cheap; called at driver frequency.
+    fn poll(&self, ctx: &WorkerCtx) -> Result<Vec<Task>>;
+
+    /// All work done and output finished.
+    fn is_done(&self) -> bool;
+}
+
+/// Bookkeeping every operator shares: concurrency-limited task issue.
+pub(crate) struct OpCommon {
+    pub id: usize,
+    /// Compute priority base (depth * 1000).
+    pub base_priority: i64,
+    /// Tasks issued but not completed.
+    pub inflight: std::sync::atomic::AtomicUsize,
+    /// Max concurrent tasks for this operator.
+    pub max_inflight: usize,
+    pub done: std::sync::atomic::AtomicBool,
+}
+
+impl OpCommon {
+    pub fn new(id: usize, base_priority: i64, max_inflight: usize) -> Self {
+        OpCommon {
+            id,
+            base_priority,
+            inflight: Default::default(),
+            max_inflight: max_inflight.max(1),
+            done: Default::default(),
+        }
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(std::sync::atomic::Ordering::Acquire)
+    }
+
+    pub fn can_issue(&self) -> bool {
+        self.inflight() < self.max_inflight
+    }
+
+    pub fn issue(&self) {
+        self.inflight.fetch_add(1, std::sync::atomic::Ordering::AcqRel);
+    }
+
+    /// Returns a guard that decrements inflight when the task finishes
+    /// (success or failure — a retried task re-runs the same closure,
+    /// which re-increments via this wrapper running again? No: retries
+    /// re-run the closure only, so the guard lives inside the closure).
+    pub fn track<F>(self: &std::sync::Arc<Self>, f: F) -> crate::exec::task::TaskFn
+    where
+        F: Fn(&WorkerCtx) -> Result<()> + Send + Sync + 'static,
+    {
+        let me = self.clone();
+        std::sync::Arc::new(move |ctx: &WorkerCtx| {
+            let r = f(ctx);
+            if r.is_ok() {
+                me.inflight.fetch_sub(1, std::sync::atomic::Ordering::AcqRel);
+            }
+            // on Err the compute executor re-queues the same closure;
+            // inflight stays held so poll doesn't over-issue.
+            r
+        })
+    }
+
+    pub fn mark_done(&self) {
+        self.done.store(true, std::sync::atomic::Ordering::Release);
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done.load(std::sync::atomic::Ordering::Acquire)
+    }
+}
+
+/// Drop-guard variant used when a task may legitimately fail forever:
+/// decrements on drop. (Unused for now; kept private.)
+#[allow(dead_code)]
+pub(crate) struct InflightGuard<'a>(pub &'a OpCommon);
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.inflight.fetch_sub(1, std::sync::atomic::Ordering::AcqRel);
+    }
+}

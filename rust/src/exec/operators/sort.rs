@@ -1,0 +1,299 @@
+//! Sort and Limit operators (host-side: these run on small post-
+//! aggregation results in the query shapes we reproduce, as in the
+//! paper's TPC-H plans where ORDER BY follows GROUP BY).
+
+use std::sync::{Arc, Mutex};
+
+use crate::exec::operators::{OpCommon, Operator};
+use crate::exec::task::Task;
+use crate::exec::WorkerCtx;
+use crate::memory::BatchHolder;
+use crate::types::{ColumnData, RecordBatch};
+use crate::{Error, Result};
+
+pub struct SortOp {
+    common: Arc<OpCommon>,
+    input: BatchHolder,
+    output: BatchHolder,
+    by: Arc<String>,
+    desc: bool,
+    staged: Arc<Mutex<Vec<RecordBatch>>>,
+}
+
+impl SortOp {
+    pub fn new(
+        id: usize,
+        base_priority: i64,
+        max_inflight: usize,
+        input: BatchHolder,
+        output: BatchHolder,
+        by: String,
+        desc: bool,
+    ) -> SortOp {
+        SortOp {
+            common: Arc::new(OpCommon::new(id, base_priority, max_inflight)),
+            input,
+            output,
+            by: Arc::new(by),
+            desc,
+            staged: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+}
+
+impl Operator for SortOp {
+    fn id(&self) -> usize {
+        self.common.id
+    }
+
+    fn name(&self) -> &'static str {
+        "sort"
+    }
+
+    fn poll(&self, _ctx: &WorkerCtx) -> Result<Vec<Task>> {
+        if self.common.is_done() {
+            return Ok(Vec::new());
+        }
+        let mut tasks = Vec::new();
+        let mut budget = self.input.len().min(
+            self.common
+                .max_inflight
+                .saturating_sub(self.common.inflight()),
+        );
+        while budget > 0 {
+            budget -= 1;
+            self.common.issue();
+            let input = self.input.clone();
+            let staged = self.staged.clone();
+            let run = self.common.track(move |_ctx| {
+                if let Some(db) = input.pop_device()? {
+                    staged.lock().unwrap().push(db.batch.clone());
+                }
+                Ok(())
+            });
+            tasks.push(Task::new(self.common.id, self.common.base_priority, run));
+        }
+        if self.input.is_exhausted() && self.common.inflight() == 0 {
+            let staged = std::mem::take(&mut *self.staged.lock().unwrap());
+            let all = RecordBatch::concat(&staged)?;
+            if !all.is_empty() {
+                let sorted = sort_batch(&all, &self.by, self.desc)?;
+                self.output.push_batch(sorted)?;
+            }
+            self.output.finish();
+            self.common.mark_done();
+        }
+        Ok(tasks)
+    }
+
+    fn is_done(&self) -> bool {
+        self.common.is_done()
+    }
+}
+
+/// Stable sort of a batch by one column.
+pub fn sort_batch(batch: &RecordBatch, by: &str, desc: bool) -> Result<RecordBatch> {
+    let col = batch.column(by)?;
+    let mut idx: Vec<u32> = (0..batch.rows() as u32).collect();
+    match &col.data {
+        ColumnData::I64(v) => idx.sort_by_key(|&i| v[i as usize]),
+        ColumnData::F32(v) => idx.sort_by(|&a, &b| {
+            v[a as usize]
+                .partial_cmp(&v[b as usize])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        }),
+        ColumnData::F64(v) => idx.sort_by(|&a, &b| {
+            v[a as usize]
+                .partial_cmp(&v[b as usize])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        }),
+    }
+    if desc {
+        idx.reverse();
+    }
+    batch.take(&idx)
+}
+
+pub struct LimitOp {
+    common: Arc<OpCommon>,
+    input: BatchHolder,
+    output: BatchHolder,
+    n: u64,
+    emitted: Arc<Mutex<u64>>,
+}
+
+impl LimitOp {
+    pub fn new(
+        id: usize,
+        base_priority: i64,
+        input: BatchHolder,
+        output: BatchHolder,
+        n: u64,
+    ) -> LimitOp {
+        LimitOp {
+            common: Arc::new(OpCommon::new(id, base_priority, 1)), // ordered
+            input,
+            output,
+            n,
+            emitted: Arc::new(Mutex::new(0)),
+        }
+    }
+}
+
+impl Operator for LimitOp {
+    fn id(&self) -> usize {
+        self.common.id
+    }
+
+    fn name(&self) -> &'static str {
+        "limit"
+    }
+
+    fn poll(&self, _ctx: &WorkerCtx) -> Result<Vec<Task>> {
+        if self.common.is_done() {
+            return Ok(Vec::new());
+        }
+        let mut tasks = Vec::new();
+        if self.input.len() > 0 && self.common.can_issue() {
+            self.common.issue();
+            let input = self.input.clone();
+            let output = self.output.clone();
+            let emitted = self.emitted.clone();
+            let n = self.n;
+            let run = self.common.track(move |_ctx| {
+                // single-task op: drain what's available, stop at n
+                while let Some(db) = input.pop_device()? {
+                    let mut e = emitted.lock().unwrap();
+                    if *e >= n {
+                        break; // drop the rest
+                    }
+                    let take = ((n - *e) as usize).min(db.rows());
+                    let out = if take == db.rows() {
+                        db.batch.clone()
+                    } else {
+                        db.batch.slice(0, take)?
+                    };
+                    *e += take as u64;
+                    drop(e);
+                    output.push_batch(out)?;
+                }
+                Ok(())
+            });
+            tasks.push(Task::new(self.common.id, self.common.base_priority, run));
+        }
+        let done_early = *self.emitted.lock().unwrap() >= self.n;
+        if (self.input.is_exhausted() || done_early) && self.common.inflight() == 0 {
+            self.output.finish();
+            self.common.mark_done();
+        }
+        Ok(tasks)
+    }
+
+    fn is_done(&self) -> bool {
+        self.common.is_done()
+    }
+}
+
+/// Validate that a sort/limit column exists in a schema-shaped batch —
+/// a cheap plan-time check used by the DAG builder.
+pub fn check_column(batch: &RecordBatch, name: &str) -> Result<()> {
+    batch
+        .column(name)
+        .map(|_| ())
+        .map_err(|_| Error::Plan(format!("sort column '{name}' missing")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::batch_holder::MemEnv;
+    use crate::types::Column;
+
+    fn drive(op: &dyn Operator, ctx: &WorkerCtx) {
+        for _ in 0..100 {
+            for t in op.poll(ctx).unwrap() {
+                (t.run)(ctx).unwrap();
+            }
+            if op.is_done() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn sort_orders_across_batches() {
+        let ctx = WorkerCtx::test();
+        let env = MemEnv::test(8 << 20);
+        let input = BatchHolder::new("in", env.clone());
+        let output = BatchHolder::new("out", env);
+        input
+            .push_batch(
+                RecordBatch::new(vec![Column::i64("k", vec![5, 1, 9])]).unwrap(),
+            )
+            .unwrap();
+        input
+            .push_batch(
+                RecordBatch::new(vec![Column::i64("k", vec![3, 7])]).unwrap(),
+            )
+            .unwrap();
+        input.finish();
+        let op = SortOp::new(1, 0, 2, input, output.clone(), "k".into(), false);
+        drive(&op, &ctx);
+        let out = output.pop_device().unwrap().unwrap();
+        assert_eq!(out.batch.column("k").unwrap().data.as_i64().unwrap(), &[1, 3, 5, 7, 9]);
+    }
+
+    #[test]
+    fn sort_desc_f64() {
+        let b = RecordBatch::new(vec![
+            Column::f64("v", vec![1.5, -2.0, 3.25]),
+            Column::i64("id", vec![1, 2, 3]),
+        ])
+        .unwrap();
+        let s = sort_batch(&b, "v", true).unwrap();
+        assert_eq!(s.column("id").unwrap().data.as_i64().unwrap(), &[3, 1, 2]);
+    }
+
+    #[test]
+    fn limit_truncates_and_finishes_early() {
+        let ctx = WorkerCtx::test();
+        let env = MemEnv::test(8 << 20);
+        let input = BatchHolder::new("in", env.clone());
+        let output = BatchHolder::new("out", env);
+        for lo in [0i64, 10, 20] {
+            input
+                .push_batch(
+                    RecordBatch::new(vec![Column::i64("k", (lo..lo + 10).collect())])
+                        .unwrap(),
+                )
+                .unwrap();
+        }
+        input.finish();
+        let op = LimitOp::new(1, 0, input, output.clone(), 15);
+        drive(&op, &ctx);
+        assert!(op.is_done());
+        let mut rows = 0;
+        let mut keys = Vec::new();
+        while let Some(db) = output.pop_device().unwrap() {
+            rows += db.rows();
+            keys.extend_from_slice(db.batch.column("k").unwrap().data.as_i64().unwrap());
+        }
+        assert_eq!(rows, 15);
+        assert_eq!(keys, (0..15).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn limit_zero_emits_nothing() {
+        let ctx = WorkerCtx::test();
+        let env = MemEnv::test(8 << 20);
+        let input = BatchHolder::new("in", env.clone());
+        let output = BatchHolder::new("out", env);
+        input
+            .push_batch(RecordBatch::new(vec![Column::i64("k", vec![1])]).unwrap())
+            .unwrap();
+        input.finish();
+        let op = LimitOp::new(1, 0, input, output.clone(), 0);
+        drive(&op, &ctx);
+        assert!(output.is_exhausted());
+    }
+}

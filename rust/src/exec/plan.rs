@@ -1,0 +1,620 @@
+//! Physical plans: what the Planner emits and every worker executes.
+//!
+//! "every worker receives the same physical execution plan with a
+//! different subset of files to scan" (§3). A [`PhysicalPlan`] is a DAG
+//! of [`PlanNode`]s in topological order (inputs precede users); binary
+//! serde lets the Gateway ship it to workers in a control frame.
+
+use crate::types::schema::DType;
+use crate::util::bytes::{Reader, Writer};
+use crate::{Error, Result};
+
+/// Filter predicate (conjunctions of column comparisons).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Pred {
+    /// `lo <= col < hi` over any i64-backed column.
+    RangeI64 { col: String, lo: i64, hi: i64 },
+    /// `lo <= col < hi` over f32.
+    RangeF32 { col: String, lo: f32, hi: f32 },
+    /// `col == val` over any i64-backed column (incl. dict codes).
+    EqI64 { col: String, val: i64 },
+    And(Box<Pred>, Box<Pred>),
+}
+
+impl Pred {
+    pub fn and(self, other: Pred) -> Pred {
+        Pred::And(Box::new(self), Box::new(other))
+    }
+
+    /// Columns the predicate touches.
+    pub fn columns(&self) -> Vec<&str> {
+        match self {
+            Pred::RangeI64 { col, .. }
+            | Pred::RangeF32 { col, .. }
+            | Pred::EqI64 { col, .. } => vec![col],
+            Pred::And(a, b) => {
+                let mut v = a.columns();
+                v.extend(b.columns());
+                v
+            }
+        }
+    }
+
+    /// Flatten the conjunction tree into leaves.
+    pub fn conjuncts(&self) -> Vec<&Pred> {
+        match self {
+            Pred::And(a, b) => {
+                let mut v = a.conjuncts();
+                v.extend(b.conjuncts());
+                v
+            }
+            leaf => vec![leaf],
+        }
+    }
+
+    fn encode(&self, w: &mut Writer) {
+        match self {
+            Pred::RangeI64 { col, lo, hi } => {
+                w.u8(0);
+                w.str(col);
+                w.i64(*lo);
+                w.i64(*hi);
+            }
+            Pred::RangeF32 { col, lo, hi } => {
+                w.u8(1);
+                w.str(col);
+                w.f32(*lo);
+                w.f32(*hi);
+            }
+            Pred::EqI64 { col, val } => {
+                w.u8(2);
+                w.str(col);
+                w.i64(*val);
+            }
+            Pred::And(a, b) => {
+                w.u8(3);
+                a.encode(w);
+                b.encode(w);
+            }
+        }
+    }
+
+    fn decode(r: &mut Reader) -> Result<Pred> {
+        Ok(match r.u8()? {
+            0 => Pred::RangeI64 { col: r.str()?, lo: r.i64()?, hi: r.i64()? },
+            1 => Pred::RangeF32 { col: r.str()?, lo: r.f32()?, hi: r.f32()? },
+            2 => Pred::EqI64 { col: r.str()?, val: r.i64()? },
+            3 => Pred::And(Box::new(Pred::decode(r)?), Box::new(Pred::decode(r)?)),
+            t => return Err(Error::Format(format!("bad pred tag {t}"))),
+        })
+    }
+}
+
+/// Aggregate functions over one column.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggFn {
+    Sum,
+    Count,
+    Min,
+    Max,
+}
+
+impl AggFn {
+    pub fn name(self) -> &'static str {
+        match self {
+            AggFn::Sum => "sum",
+            AggFn::Count => "count",
+            AggFn::Min => "min",
+            AggFn::Max => "max",
+        }
+    }
+
+    fn tag(self) -> u8 {
+        match self {
+            AggFn::Sum => 0,
+            AggFn::Count => 1,
+            AggFn::Min => 2,
+            AggFn::Max => 3,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<Self> {
+        Ok(match t {
+            0 => AggFn::Sum,
+            1 => AggFn::Count,
+            2 => AggFn::Min,
+            3 => AggFn::Max,
+            _ => return Err(Error::Format(format!("bad aggfn tag {t}"))),
+        })
+    }
+}
+
+/// One aggregate output: `func(col) as name`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AggSpec {
+    pub func: AggFn,
+    pub col: String,
+    pub name: String,
+}
+
+impl AggSpec {
+    pub fn new(func: AggFn, col: impl Into<String>) -> AggSpec {
+        let col = col.into();
+        let name = format!("{}_{}", func.name(), col);
+        AggSpec { func, col, name }
+    }
+}
+
+/// What an Exchange is redistributing for — this decides which adaptive
+/// modes are legal (§3.2: the pair "decide whether to hash partition or
+/// broadcast the data").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExchangeRole {
+    /// Aggregation shuffle: hash-partition always (broadcast would
+    /// duplicate groups).
+    Shuffle,
+    /// Join build side: may broadcast itself when small.
+    Build,
+    /// Join probe side: passes through locally when its partner (the
+    /// build side) broadcasts; hash-partitions otherwise. `partner` is
+    /// the plan-node id of the paired Build exchange.
+    Probe { partner: usize },
+}
+
+impl ExchangeRole {
+    fn tag(self) -> u8 {
+        match self {
+            ExchangeRole::Shuffle => 0,
+            ExchangeRole::Build => 1,
+            ExchangeRole::Probe { .. } => 2,
+        }
+    }
+}
+
+/// Operator specification.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OpSpec {
+    /// Table scan over the worker's file assignment. `pred` enables
+    /// row-group pruning via footer stats (the predicate itself is
+    /// applied by a downstream Filter).
+    Scan { table: String, cols: Vec<String>, pred: Option<Pred> },
+    /// Row filter (device mask kernel + host compaction).
+    Filter { pred: Pred },
+    /// Column projection.
+    Project { cols: Vec<String> },
+    /// Adaptive exchange on a hash key (§3.2): estimate, broadcast the
+    /// estimate, then hash-partition / broadcast / pass-through per the
+    /// role's rules.
+    Exchange { key: String, role: ExchangeRole },
+    /// Hash aggregation: device pre-agg + exact host finalize.
+    HashAgg { group_by: String, aggs: Vec<AggSpec> },
+    /// Inner equi-join; input 0 is the build side, input 1 the probe.
+    /// `lip` enables Lookahead Information Passing (bloom pushdown, §5).
+    HashJoin { left_on: String, right_on: String, lip: bool },
+    /// Total order by one column.
+    Sort { by: String, desc: bool },
+    /// Keep the first `n` rows.
+    Limit { n: u64 },
+}
+
+impl OpSpec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpSpec::Scan { .. } => "scan",
+            OpSpec::Filter { .. } => "filter",
+            OpSpec::Project { .. } => "project",
+            OpSpec::Exchange { .. } => "exchange",
+            OpSpec::HashAgg { .. } => "hash_agg",
+            OpSpec::HashJoin { .. } => "hash_join",
+            OpSpec::Sort { .. } => "sort",
+            OpSpec::Limit { .. } => "limit",
+        }
+    }
+
+    /// How many inputs this operator requires.
+    pub fn arity(&self) -> usize {
+        match self {
+            OpSpec::Scan { .. } => 0,
+            OpSpec::HashJoin { .. } => 2,
+            _ => 1,
+        }
+    }
+
+    fn encode(&self, w: &mut Writer) {
+        match self {
+            OpSpec::Scan { table, cols, pred } => {
+                w.u8(0);
+                w.str(table);
+                w.u32(cols.len() as u32);
+                for c in cols {
+                    w.str(c);
+                }
+                match pred {
+                    None => w.u8(0),
+                    Some(p) => {
+                        w.u8(1);
+                        p.encode(w);
+                    }
+                }
+            }
+            OpSpec::Filter { pred } => {
+                w.u8(1);
+                pred.encode(w);
+            }
+            OpSpec::Project { cols } => {
+                w.u8(2);
+                w.u32(cols.len() as u32);
+                for c in cols {
+                    w.str(c);
+                }
+            }
+            OpSpec::Exchange { key, role } => {
+                w.u8(3);
+                w.str(key);
+                w.u8(role.tag());
+                if let ExchangeRole::Probe { partner } = role {
+                    w.u32(*partner as u32);
+                }
+            }
+            OpSpec::HashAgg { group_by, aggs } => {
+                w.u8(4);
+                w.str(group_by);
+                w.u32(aggs.len() as u32);
+                for a in aggs {
+                    w.u8(a.func.tag());
+                    w.str(&a.col);
+                    w.str(&a.name);
+                }
+            }
+            OpSpec::HashJoin { left_on, right_on, lip } => {
+                w.u8(5);
+                w.str(left_on);
+                w.str(right_on);
+                w.u8(*lip as u8);
+            }
+            OpSpec::Sort { by, desc } => {
+                w.u8(6);
+                w.str(by);
+                w.u8(*desc as u8);
+            }
+            OpSpec::Limit { n } => {
+                w.u8(7);
+                w.u64(*n);
+            }
+        }
+    }
+
+    fn decode(r: &mut Reader) -> Result<OpSpec> {
+        Ok(match r.u8()? {
+            0 => {
+                let table = r.str()?;
+                let n = r.u32()? as usize;
+                let cols = (0..n).map(|_| r.str()).collect::<Result<_>>()?;
+                let pred = if r.u8()? == 1 { Some(Pred::decode(r)?) } else { None };
+                OpSpec::Scan { table, cols, pred }
+            }
+            1 => OpSpec::Filter { pred: Pred::decode(r)? },
+            2 => {
+                let n = r.u32()? as usize;
+                OpSpec::Project { cols: (0..n).map(|_| r.str()).collect::<Result<_>>()? }
+            }
+            3 => {
+                let key = r.str()?;
+                let role = match r.u8()? {
+                    0 => ExchangeRole::Shuffle,
+                    1 => ExchangeRole::Build,
+                    2 => ExchangeRole::Probe { partner: r.u32()? as usize },
+                    t => return Err(Error::Format(format!("bad exchange role {t}"))),
+                };
+                OpSpec::Exchange { key, role }
+            }
+            4 => {
+                let group_by = r.str()?;
+                let n = r.u32()? as usize;
+                let aggs = (0..n)
+                    .map(|_| {
+                        Ok(AggSpec {
+                            func: AggFn::from_tag(r.u8()?)?,
+                            col: r.str()?,
+                            name: r.str()?,
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                OpSpec::HashAgg { group_by, aggs }
+            }
+            5 => OpSpec::HashJoin {
+                left_on: r.str()?,
+                right_on: r.str()?,
+                lip: r.u8()? != 0,
+            },
+            6 => OpSpec::Sort { by: r.str()?, desc: r.u8()? != 0 },
+            7 => OpSpec::Limit { n: r.u64()? },
+            t => return Err(Error::Format(format!("bad opspec tag {t}"))),
+        })
+    }
+}
+
+/// One DAG node.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanNode {
+    pub id: usize,
+    pub spec: OpSpec,
+    /// Ids of input nodes (must be < id: topological order).
+    pub inputs: Vec<usize>,
+}
+
+/// The whole plan. Node `len - 1` is the root whose output is the query
+/// result.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct PhysicalPlan {
+    pub nodes: Vec<PlanNode>,
+}
+
+impl PhysicalPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a node; returns its id.
+    pub fn add(&mut self, spec: OpSpec, inputs: Vec<usize>) -> usize {
+        let id = self.nodes.len();
+        self.nodes.push(PlanNode { id, spec, inputs });
+        id
+    }
+
+    pub fn root(&self) -> Result<&PlanNode> {
+        self.nodes
+            .last()
+            .ok_or_else(|| Error::Plan("empty plan".into()))
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Structural validation: ids sequential, inputs topological, arity
+    /// correct, exactly one root (no unused outputs).
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes.is_empty() {
+            return Err(Error::Plan("empty plan".into()));
+        }
+        let mut used = vec![false; self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.id != i {
+                return Err(Error::Plan(format!("node {i} has id {}", n.id)));
+            }
+            if n.inputs.len() != n.spec.arity() {
+                return Err(Error::Plan(format!(
+                    "node {i} ({}) has {} inputs, needs {}",
+                    n.spec.name(),
+                    n.inputs.len(),
+                    n.spec.arity()
+                )));
+            }
+            for &inp in &n.inputs {
+                if inp >= i {
+                    return Err(Error::Plan(format!(
+                        "node {i} uses input {inp} (not topological)"
+                    )));
+                }
+                used[inp] = true;
+            }
+        }
+        for (i, &u) in used.iter().enumerate().take(self.nodes.len() - 1) {
+            if !u {
+                return Err(Error::Plan(format!("node {i} output is never consumed")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Consumers of each node (DAG-aware task priorities use depth).
+    pub fn consumers(&self) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                out[i].push(n.id);
+            }
+        }
+        out
+    }
+
+    /// Distance of each node from the root (root = 0). Deeper nodes get
+    /// higher compute priority: they unblock the most downstream work.
+    pub fn depths(&self) -> Vec<usize> {
+        let mut d = vec![0usize; self.nodes.len()];
+        for n in self.nodes.iter().rev() {
+            for &i in &n.inputs {
+                d[i] = d[i].max(d[n.id] + 1);
+            }
+        }
+        d
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u32(self.nodes.len() as u32);
+        for n in &self.nodes {
+            n.spec.encode(&mut w);
+            w.u32(n.inputs.len() as u32);
+            for &i in &n.inputs {
+                w.u32(i as u32);
+            }
+        }
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<PhysicalPlan> {
+        let mut r = Reader::new(buf);
+        let n = r.u32()? as usize;
+        let mut plan = PhysicalPlan::new();
+        for _ in 0..n {
+            let spec = OpSpec::decode(&mut r)?;
+            let ni = r.u32()? as usize;
+            let inputs = (0..ni)
+                .map(|_| Ok(r.u32()? as usize))
+                .collect::<Result<_>>()?;
+            plan.add(spec, inputs);
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Pretty-print (logs / `theseus explain`).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for n in &self.nodes {
+            let inputs: Vec<String> = n.inputs.iter().map(|i| format!("#{i}")).collect();
+            s.push_str(&format!(
+                "#{:<3} {:<10} <- [{}]  {:?}\n",
+                n.id,
+                n.spec.name(),
+                inputs.join(", "),
+                n.spec
+            ));
+        }
+        s
+    }
+}
+
+/// The dtype a filter stage needs for a predicate column (drives stage
+/// selection in the Filter operator).
+pub fn pred_stage_dtype(dtype: DType) -> &'static str {
+    if dtype == DType::Float32 {
+        "f32"
+    } else {
+        "i64"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_plan() -> PhysicalPlan {
+        let mut p = PhysicalPlan::new();
+        let scan_a = p.add(
+            OpSpec::Scan {
+                table: "orders".into(),
+                cols: vec!["o_orderkey".into(), "o_totalprice".into()],
+                pred: None,
+            },
+            vec![],
+        );
+        let scan_b = p.add(
+            OpSpec::Scan {
+                table: "lineitem".into(),
+                cols: vec!["l_orderkey".into(), "l_quantity".into()],
+                pred: Some(Pred::RangeI64 { col: "l_quantity".into(), lo: 0, hi: 2500 }),
+            },
+            vec![],
+        );
+        let filt = p.add(
+            OpSpec::Filter {
+                pred: Pred::RangeI64 { col: "l_quantity".into(), lo: 0, hi: 2500 },
+            },
+            vec![scan_b],
+        );
+        let ex_a = p.add(
+            OpSpec::Exchange { key: "o_orderkey".into(), role: ExchangeRole::Build },
+            vec![scan_a],
+        );
+        let ex_b = p.add(
+            OpSpec::Exchange {
+                key: "l_orderkey".into(),
+                role: ExchangeRole::Probe { partner: ex_a },
+            },
+            vec![filt],
+        );
+        let join = p.add(
+            OpSpec::HashJoin {
+                left_on: "o_orderkey".into(),
+                right_on: "l_orderkey".into(),
+                lip: true,
+            },
+            vec![ex_a, ex_b],
+        );
+        let agg = p.add(
+            OpSpec::HashAgg {
+                group_by: "o_orderkey".into(),
+                aggs: vec![AggSpec::new(AggFn::Sum, "l_quantity")],
+            },
+            vec![join],
+        );
+        p.add(OpSpec::Sort { by: "sum_l_quantity".into(), desc: true }, vec![agg]);
+        p
+    }
+
+    #[test]
+    fn sample_validates() {
+        sample_plan().validate().unwrap();
+    }
+
+    #[test]
+    fn serde_roundtrip() {
+        let p = sample_plan();
+        let buf = p.encode();
+        let got = PhysicalPlan::decode(&buf).unwrap();
+        assert_eq!(got, p);
+    }
+
+    #[test]
+    fn validation_catches_bad_arity_and_order() {
+        let mut p = PhysicalPlan::new();
+        p.add(OpSpec::Limit { n: 5 }, vec![]); // limit needs 1 input
+        assert!(p.validate().is_err());
+
+        let mut p = PhysicalPlan::new();
+        p.nodes.push(PlanNode {
+            id: 0,
+            spec: OpSpec::Limit { n: 1 },
+            inputs: vec![0], // self-reference
+        });
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn validation_catches_dangling_output() {
+        let mut p = PhysicalPlan::new();
+        p.add(
+            OpSpec::Scan { table: "t".into(), cols: vec!["a".into()], pred: None },
+            vec![],
+        );
+        p.add(
+            OpSpec::Scan { table: "u".into(), cols: vec!["b".into()], pred: None },
+            vec![],
+        );
+        // node 0 never consumed and is not the root
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn depths_favor_upstream() {
+        let p = sample_plan();
+        let d = p.depths();
+        // scans are deepest, root is 0
+        assert_eq!(d[p.nodes.len() - 1], 0);
+        assert!(d[0] >= 3);
+        assert!(d[1] >= 4, "{d:?}");
+    }
+
+    #[test]
+    fn pred_helpers() {
+        let p = Pred::EqI64 { col: "a".into(), val: 1 }
+            .and(Pred::RangeF32 { col: "b".into(), lo: 0.0, hi: 1.0 });
+        assert_eq!(p.columns(), vec!["a", "b"]);
+        assert_eq!(p.conjuncts().len(), 2);
+    }
+
+    #[test]
+    fn render_mentions_every_node() {
+        let s = sample_plan().render();
+        for name in ["scan", "filter", "exchange", "hash_join", "hash_agg", "sort"] {
+            assert!(s.contains(name), "{name} missing from render");
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! The task abstraction shared by the Compute and Pre-load Executors.
+//!
+//! A [`Task`] is a unit of operator work (§3.1: "Operators spawn tasks
+//! that work on a specific step of the physical query plan"). Tasks are
+//! *restartable*: their closure either completes or fails without
+//! consuming inputs (holder pops restore their slot on failure), so the
+//! Compute Executor can retry retryable failures (§3.3.2).
+//!
+//! A task may expose a [`Prefetch`] describing the I/O it will need;
+//! the Pre-load Executor scans queued tasks for these (§3.3.3) and
+//! materializes data ahead of execution, without ever blocking the
+//! Compute Executor (Insight B: if the data is not staged by the time
+//! the task runs, the task fetches it itself).
+
+use std::sync::{Arc, Mutex};
+
+use crate::exec::WorkerCtx;
+use crate::memory::BatchHolder;
+use crate::storage::datasource::ByteRange;
+use crate::Result;
+
+/// State of a byte-range staging cell.
+#[derive(Debug, Default)]
+pub enum StagingState {
+    /// Nothing fetched yet.
+    #[default]
+    Empty,
+    /// The Pre-load Executor is fetching.
+    InProgress,
+    /// Fetched pages, ready for the compute task.
+    Done(Vec<Vec<u8>>),
+}
+
+/// Shared staging cell between a scan task and the pre-loader.
+pub type Staging = Arc<Mutex<StagingState>>;
+
+/// Pre-loadable I/O of a queued task.
+#[derive(Clone)]
+pub enum Prefetch {
+    /// Byte-Range Pre-loading (§3.3.3): fetch these ranges of `key`
+    /// into `staging` ahead of the scan task.
+    ByteRanges { key: String, ranges: Vec<ByteRange>, staging: Staging },
+    /// Compute-Task Pre-loading: promote the next batch of `holder`
+    /// toward device so the task's pop doesn't stall on disk.
+    Promote { holder: BatchHolder },
+}
+
+/// The work closure: restartable, thread-safe.
+pub type TaskFn = Arc<dyn Fn(&WorkerCtx) -> Result<()> + Send + Sync>;
+
+/// One schedulable unit.
+#[derive(Clone)]
+pub struct Task {
+    /// Operator (plan node) this task belongs to.
+    pub op: usize,
+    /// Higher runs earlier. Convention: `depth * 1000 + bonus`, where
+    /// depth is the node's distance from the root (upstream work
+    /// unblocks more of the DAG) and bonus captures input-tier
+    /// readiness (§3.3.1: priorities can consider "the memory tier that
+    /// the input data resides in").
+    pub priority: i64,
+    /// Retry count so far.
+    pub attempts: u32,
+    /// What the pre-loader may do for this task.
+    pub prefetch: Option<Prefetch>,
+    /// The work.
+    pub run: TaskFn,
+}
+
+impl Task {
+    pub fn new(op: usize, priority: i64, run: TaskFn) -> Task {
+        Task { op, priority, attempts: 0, prefetch: None, run }
+    }
+
+    pub fn with_prefetch(mut self, p: Prefetch) -> Task {
+        self.prefetch = Some(p);
+        self
+    }
+}
+
+impl std::fmt::Debug for Task {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Task(op {}, prio {}, attempts {}, prefetch {})",
+            self.op,
+            self.priority,
+            self.attempts,
+            match &self.prefetch {
+                None => "none",
+                Some(Prefetch::ByteRanges { .. }) => "byte-ranges",
+                Some(Prefetch::Promote { .. }) => "promote",
+            }
+        )
+    }
+}
+
+/// Take staged pages if the pre-loader finished them; otherwise note
+/// that the compute task will fetch on its own.
+pub fn take_staged(staging: &Staging) -> Option<Vec<Vec<u8>>> {
+    let mut s = staging.lock().unwrap();
+    match std::mem::take(&mut *s) {
+        StagingState::Done(pages) => Some(pages),
+        other => {
+            *s = other; // leave Empty/InProgress in place
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn staging_take_semantics() {
+        let s: Staging = Arc::new(Mutex::new(StagingState::Empty));
+        assert!(take_staged(&s).is_none());
+        *s.lock().unwrap() = StagingState::InProgress;
+        assert!(take_staged(&s).is_none());
+        assert!(matches!(*s.lock().unwrap(), StagingState::InProgress));
+        *s.lock().unwrap() = StagingState::Done(vec![vec![1, 2]]);
+        assert_eq!(take_staged(&s).unwrap(), vec![vec![1, 2]]);
+        // consumed: second take sees Empty
+        assert!(take_staged(&s).is_none());
+    }
+
+    #[test]
+    fn task_is_cloneable_and_runnable() {
+        let ran = Arc::new(std::sync::atomic::AtomicU32::new(0));
+        let r2 = ran.clone();
+        let t = Task::new(
+            3,
+            5000,
+            Arc::new(move |_ctx| {
+                r2.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                Ok(())
+            }),
+        );
+        let ctx = WorkerCtx::test();
+        (t.run)(&ctx).unwrap();
+        let t2 = t.clone();
+        (t2.run)(&ctx).unwrap();
+        assert_eq!(ran.load(std::sync::atomic::Ordering::Relaxed), 2);
+        assert_eq!(t2.op, 3);
+    }
+}

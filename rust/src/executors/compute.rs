@@ -1,0 +1,397 @@
+//! Compute Executor (§3.3.1): a DAG-aware priority queue drained by a
+//! configurable pool of threads, with OOM retry.
+//!
+//! "The Compute Executor can prioritize tasks in its queue based on
+//! different configurable schemes that can take into account a wide
+//! variety of factors, including where in the query graph the task came
+//! from and the memory tier that the input data resides in. Each
+//! Compute Executor thread controls a separate CUDA stream" — here,
+//! each thread issues PJRT executions independently (the CPU client
+//! runs them on its own pool, our stream analog).
+//!
+//! Failed tasks with retryable errors (device OOM, reservation timeout,
+//! pinned exhaustion) are re-queued with a decayed priority; the
+//! operator's memory history is updated by the task itself.
+
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::exec::{Task, WorkerCtx};
+use crate::Error;
+
+const MAX_ATTEMPTS: u32 = 6;
+
+struct Queued {
+    priority: i64,
+    /// FIFO tiebreak: smaller sequence first.
+    seq: u64,
+    task: Task,
+}
+
+impl PartialEq for Queued {
+    fn eq(&self, other: &Self) -> bool {
+        self.priority == other.priority && self.seq == other.seq
+    }
+}
+impl Eq for Queued {}
+impl PartialOrd for Queued {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Queued {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.priority
+            .cmp(&other.priority)
+            .then(other.seq.cmp(&self.seq)) // max-heap: older first on tie
+    }
+}
+
+/// The shared queue. The Pre-load and Memory Executors hold references
+/// to inspect it (Insight B).
+pub struct TaskQueue {
+    heap: Mutex<BinaryHeap<Queued>>,
+    ready: Condvar,
+    seq: AtomicU64,
+    /// Tasks currently executing (quiescence detection).
+    in_flight: AtomicU64,
+}
+
+impl Default for TaskQueue {
+    fn default() -> Self {
+        TaskQueue {
+            heap: Mutex::new(BinaryHeap::new()),
+            ready: Condvar::new(),
+            seq: AtomicU64::new(0),
+            in_flight: AtomicU64::new(0),
+        }
+    }
+}
+
+impl TaskQueue {
+    pub fn new() -> Arc<TaskQueue> {
+        Arc::new(TaskQueue::default())
+    }
+
+    pub fn submit(&self, task: Task) {
+        let q = Queued {
+            priority: task.priority,
+            seq: self.seq.fetch_add(1, Ordering::Relaxed),
+            task,
+        };
+        self.heap.lock().unwrap().push(q);
+        self.ready.notify_one();
+    }
+
+    fn pop(&self, timeout: Duration) -> Option<Task> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut heap = self.heap.lock().unwrap();
+        loop {
+            if let Some(q) = heap.pop() {
+                self.in_flight.fetch_add(1, Ordering::AcqRel);
+                return Some(q.task);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self.ready.wait_timeout(heap, deadline - now).unwrap();
+            heap = guard;
+        }
+    }
+
+    fn task_done(&self) {
+        self.in_flight.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::Acquire)
+    }
+
+    /// Queue fully drained and nothing executing.
+    pub fn quiescent(&self) -> bool {
+        let heap = self.heap.lock().unwrap();
+        heap.is_empty() && self.in_flight.load(Ordering::Acquire) == 0
+    }
+
+    /// Visit every queued (not in-flight) task — the inspection hook
+    /// the Pre-load and Memory Executors use. Unordered.
+    pub fn for_each_queued(&self, mut f: impl FnMut(&Task)) {
+        let heap = self.heap.lock().unwrap();
+        for q in heap.iter() {
+            f(&q.task);
+        }
+    }
+
+    /// Highest queued priority per operator (Memory Executor: avoid
+    /// spilling holders feeding imminent tasks).
+    pub fn op_priorities(&self) -> std::collections::HashMap<usize, i64> {
+        let heap = self.heap.lock().unwrap();
+        let mut m = std::collections::HashMap::new();
+        for q in heap.iter() {
+            let e = m.entry(q.task.op).or_insert(i64::MIN);
+            *e = (*e).max(q.task.priority);
+        }
+        m
+    }
+}
+
+/// The executor: `threads` workers draining the queue.
+pub struct ComputeExecutor {
+    queue: Arc<TaskQueue>,
+    shutdown: Arc<AtomicBool>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    executed: Arc<AtomicU64>,
+    retries: Arc<AtomicU64>,
+    /// First non-retryable failure (aborts the query).
+    failure: Arc<Mutex<Option<Error>>>,
+}
+
+impl ComputeExecutor {
+    pub fn start(ctx: WorkerCtx, queue: Arc<TaskQueue>, threads: usize) -> Arc<ComputeExecutor> {
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let ex = Arc::new(ComputeExecutor {
+            queue: queue.clone(),
+            shutdown: shutdown.clone(),
+            handles: Mutex::new(Vec::new()),
+            executed: Arc::new(AtomicU64::new(0)),
+            retries: Arc::new(AtomicU64::new(0)),
+            failure: Arc::new(Mutex::new(None)),
+        });
+        let mut handles = Vec::new();
+        for t in 0..threads.max(1) {
+            let queue = queue.clone();
+            let stop = shutdown.clone();
+            let ctx = ctx.clone();
+            let executed = ex.executed.clone();
+            let retries = ex.retries.clone();
+            let failure = ex.failure.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("theseus-compute-{}-{t}", ctx.worker_id))
+                    .spawn(move || {
+                        while !stop.load(Ordering::Relaxed) {
+                            let mut task = match queue.pop(Duration::from_millis(20)) {
+                                Some(t) => t,
+                                None => continue,
+                            };
+                            let r = (task.run)(&ctx);
+                            queue.task_done();
+                            match r {
+                                Ok(()) => {
+                                    executed.fetch_add(1, Ordering::Relaxed);
+                                }
+                                Err(e) if e.is_retryable() && task.attempts < MAX_ATTEMPTS => {
+                                    retries.fetch_add(1, Ordering::Relaxed);
+                                    task.attempts += 1;
+                                    // decay priority so other work makes
+                                    // room (the memory executor gets a
+                                    // chance to spill)
+                                    task.priority -= 10 * task.attempts as i64;
+                                    // brief backoff before re-queue
+                                    std::thread::sleep(Duration::from_millis(
+                                        2 << task.attempts.min(5),
+                                    ));
+                                    queue.submit(task);
+                                }
+                                Err(e) => {
+                                    log::error!(
+                                        "task op {} failed permanently: {e}",
+                                        task.op
+                                    );
+                                    failure.lock().unwrap().get_or_insert(e);
+                                }
+                            }
+                        }
+                    })
+                    .expect("spawn compute"),
+            );
+        }
+        *ex.handles.lock().unwrap() = handles;
+        ex
+    }
+
+    pub fn queue(&self) -> &Arc<TaskQueue> {
+        &self.queue
+    }
+
+    pub fn executed(&self) -> u64 {
+        self.executed.load(Ordering::Relaxed)
+    }
+
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    /// First permanent failure, if any (take clears it).
+    pub fn take_failure(&self) -> Option<Error> {
+        self.failure.lock().unwrap().take()
+    }
+
+    pub fn has_failure(&self) -> bool {
+        self.failure.lock().unwrap().is_some()
+    }
+
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ComputeExecutor {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    fn task(op: usize, prio: i64, f: impl Fn(&WorkerCtx) -> crate::Result<()> + Send + Sync + 'static) -> Task {
+        Task::new(op, prio, Arc::new(f))
+    }
+
+    #[test]
+    fn priority_order_with_fifo_ties() {
+        let q = TaskQueue::new();
+        let order = Arc::new(Mutex::new(Vec::new()));
+        for (op, prio) in [(0usize, 10i64), (1, 30), (2, 10), (3, 20)] {
+            let order = order.clone();
+            q.submit(task(op, prio, move |_| {
+                order.lock().unwrap().push(op);
+                Ok(())
+            }));
+        }
+        // drain single-threaded for determinism
+        let ctx = WorkerCtx::test();
+        while let Some(t) = q.pop(Duration::from_millis(1)) {
+            (t.run)(&ctx).unwrap();
+            q.task_done();
+        }
+        assert_eq!(*order.lock().unwrap(), vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn executor_runs_everything() {
+        let q = TaskQueue::new();
+        let counter = Arc::new(AtomicU32::new(0));
+        let ex = ComputeExecutor::start(WorkerCtx::test(), q.clone(), 4);
+        for i in 0..100 {
+            let c = counter.clone();
+            q.submit(task(i % 5, i as i64, move |_| {
+                c.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }));
+        }
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while !q.quiescent() && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+        assert_eq!(ex.executed(), 100);
+        assert!(!ex.has_failure());
+        ex.stop();
+    }
+
+    #[test]
+    fn retryable_errors_retry_then_succeed() {
+        let q = TaskQueue::new();
+        let ex = ComputeExecutor::start(WorkerCtx::test(), q.clone(), 2);
+        let fails = Arc::new(AtomicU32::new(2)); // fail twice, then ok
+        let done = Arc::new(AtomicU32::new(0));
+        let f2 = fails.clone();
+        let d2 = done.clone();
+        q.submit(task(0, 0, move |_| {
+            if f2.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1))
+                .is_ok()
+            {
+                Err(Error::DeviceOom { requested: 1, capacity: 0, in_use: 0 })
+            } else {
+                d2.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+        }));
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while done.load(Ordering::Relaxed) == 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(done.load(Ordering::Relaxed), 1);
+        assert!(ex.retries() >= 2);
+        assert!(!ex.has_failure());
+        ex.stop();
+    }
+
+    #[test]
+    fn permanent_failure_is_captured() {
+        let q = TaskQueue::new();
+        let ex = ComputeExecutor::start(WorkerCtx::test(), q.clone(), 1);
+        q.submit(task(0, 0, |_| Err(Error::internal("boom"))));
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while !ex.has_failure() && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let e = ex.take_failure().unwrap();
+        assert!(e.to_string().contains("boom"));
+        ex.stop();
+    }
+
+    #[test]
+    fn retry_gives_up_after_max_attempts() {
+        let q = TaskQueue::new();
+        let ex = ComputeExecutor::start(WorkerCtx::test(), q.clone(), 1);
+        q.submit(task(0, 0, |_| {
+            Err(Error::DeviceOom { requested: 1, capacity: 0, in_use: 0 })
+        }));
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while !ex.has_failure() && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(ex.has_failure(), "should surface OOM after max retries");
+        ex.stop();
+    }
+
+    #[test]
+    fn queue_inspection_sees_pending_tasks() {
+        let q = TaskQueue::new();
+        q.submit(task(7, 100, |_| Ok(())));
+        q.submit(task(7, 50, |_| Ok(())));
+        q.submit(task(2, 80, |_| Ok(())));
+        let mut seen = 0;
+        q.for_each_queued(|t| {
+            assert!(t.op == 7 || t.op == 2);
+            seen += 1;
+        });
+        assert_eq!(seen, 3);
+        let prios = q.op_priorities();
+        assert_eq!(prios[&7], 100);
+        assert_eq!(prios[&2], 80);
+    }
+
+    #[test]
+    fn quiescent_requires_empty_and_idle() {
+        let q = TaskQueue::new();
+        assert!(q.quiescent());
+        q.submit(task(0, 0, |_| Ok(())));
+        assert!(!q.quiescent());
+        let t = q.pop(Duration::from_millis(10)).unwrap();
+        assert!(!q.quiescent(), "in-flight task counts");
+        let ctx = WorkerCtx::test();
+        (t.run)(&ctx).unwrap();
+        q.task_done();
+        assert!(q.quiescent());
+    }
+}

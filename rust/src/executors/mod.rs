@@ -1,0 +1,26 @@
+//! The four asynchronous control mechanisms of a Theseus worker
+//! (§3.3): Compute, Memory, Pre-load, and Network Executors.
+//!
+//! "Each worker process instantiates four executors ... All executors
+//! have a number of configurable CPU threads on which they execute
+//! their tasks in parallel. Submitted tasks are executed
+//! asynchronously."
+//!
+//! The executors *cooperate* rather than compete (Insight B):
+//! * the Pre-load Executor inspects the Compute Executor's queue and
+//!   stages data for queued tasks without ever blocking them;
+//! * the Memory Executor inspects the same queue to avoid spilling
+//!   batches a near-term task needs, and serves the reservation
+//!   pressure callbacks of the governor;
+//! * the Network Executor drains the operators' transmission buffer at
+//!   its own rate, with backpressure bounded by the buffer.
+
+pub mod compute;
+pub mod memory;
+pub mod network;
+pub mod preload;
+
+pub use compute::ComputeExecutor;
+pub use memory::MemoryExecutor;
+pub use network::{NetworkExecutor, Outbox, Router};
+pub use preload::PreloadExecutor;

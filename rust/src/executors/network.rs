@@ -1,0 +1,630 @@
+//! Network Executor (§3.3.5): drains the transmission buffer, optionally
+//! compresses, sends; receives frames and routes them to the registered
+//! per-channel holders.
+//!
+//! "To send data to other workers, tasks utilize the Network Executor.
+//! This involves pushing batches of data along with destination
+//! information to a Batch Holder, which the Network Executor then pulls
+//! from to send the message."
+//!
+//! Compression "trades computational resources and increased latency
+//! for higher network throughput" — the Fig-4 B/E ablation: worth it on
+//! the TCP fabric, counterproductive once RDMA raises wire bandwidth.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::Duration;
+
+use crate::memory::BatchHolder;
+use crate::network::{Endpoint, Frame, FrameKind};
+use crate::storage::compression::Codec;
+use crate::types::RecordBatch;
+use crate::{Error, Result};
+
+/// One outbound message.
+pub enum Outbound {
+    /// Encoded batch for (dst, channel).
+    Data { dst: usize, channel: u32, encoded: Vec<u8> },
+    /// End-of-stream for (dst, channel).
+    Finish { dst: usize, channel: u32 },
+    /// Size estimate broadcast (§3.2).
+    Estimate { dst: usize, channel: u32, bytes: u64 },
+}
+
+impl Outbound {
+    fn dst(&self) -> usize {
+        match self {
+            Outbound::Data { dst, .. }
+            | Outbound::Finish { dst, .. }
+            | Outbound::Estimate { dst, .. } => *dst,
+        }
+    }
+}
+
+/// Bounded transmission buffer operators push into (the paper's
+/// Network-Executor-side Batch Holder). Bounded => backpressure: a full
+/// buffer blocks the pushing compute task, pacing producers to the
+/// fabric's rate.
+pub struct Outbox {
+    q: Mutex<VecDeque<Outbound>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+    closed: AtomicBool,
+    pushed: AtomicU64,
+}
+
+impl Outbox {
+    pub fn new(capacity: usize) -> Outbox {
+        Outbox {
+            q: Mutex::new(VecDeque::new()),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity: capacity.max(1),
+            closed: AtomicBool::new(false),
+            pushed: AtomicU64::new(0),
+        }
+    }
+
+    /// Queue a batch for a peer (blocks when the buffer is full).
+    pub fn send_batch(&self, dst: usize, channel: u32, batch: &RecordBatch) -> Result<()> {
+        self.push(Outbound::Data { dst, channel, encoded: batch.encode() })
+    }
+
+    /// Queue pre-encoded batch bytes.
+    pub fn send_encoded(&self, dst: usize, channel: u32, encoded: Vec<u8>) -> Result<()> {
+        self.push(Outbound::Data { dst, channel, encoded })
+    }
+
+    pub fn send_finish(&self, dst: usize, channel: u32) -> Result<()> {
+        self.push(Outbound::Finish { dst, channel })
+    }
+
+    pub fn send_estimate(&self, dst: usize, channel: u32, bytes: u64) -> Result<()> {
+        self.push(Outbound::Estimate { dst, channel, bytes })
+    }
+
+    fn push(&self, m: Outbound) -> Result<()> {
+        let mut q = self.q.lock().unwrap();
+        while q.len() >= self.capacity {
+            if self.closed.load(Ordering::Relaxed) {
+                return Err(Error::Shutdown);
+            }
+            let (guard, _) = self
+                .not_full
+                .wait_timeout(q, Duration::from_millis(50))
+                .unwrap();
+            q = guard;
+        }
+        if self.closed.load(Ordering::Relaxed) {
+            return Err(Error::Shutdown);
+        }
+        q.push_back(m);
+        self.pushed.fetch_add(1, Ordering::Relaxed);
+        drop(q);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Pop the next message for a destination handled by `lane`
+    /// (`dst % lanes == lane` keeps per-destination FIFO order with
+    /// multiple sender threads).
+    fn pop_for_lane(&self, lane: usize, lanes: usize, timeout: Duration) -> Option<Outbound> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if let Some(pos) = q.iter().position(|m| m.dst() % lanes == lane) {
+                let m = q.remove(pos).unwrap();
+                drop(q);
+                self.not_full.notify_one();
+                return Some(m);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline || self.closed.load(Ordering::Relaxed) {
+                return None;
+            }
+            let (guard, _) = self.not_empty.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn pushed(&self) -> u64 {
+        self.pushed.load(Ordering::Relaxed)
+    }
+
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Relaxed);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+/// Receiving side of one exchange channel.
+pub struct ChannelRx {
+    /// Incoming batches land here (host tier — the receive path never
+    /// competes with compute for device memory).
+    pub holder: BatchHolder,
+    /// Workers that sent Finish.
+    finishes: AtomicUsize,
+    /// Size estimates received so far (sender worker -> bytes).
+    estimates: Mutex<HashMap<usize, u64>>,
+    expected_senders: usize,
+}
+
+impl ChannelRx {
+    pub fn new(holder: BatchHolder, expected_senders: usize) -> ChannelRx {
+        ChannelRx {
+            holder,
+            finishes: AtomicUsize::new(0),
+            estimates: Mutex::new(HashMap::new()),
+            expected_senders,
+        }
+    }
+
+    /// All senders finished (the holder has been marked finished too).
+    pub fn all_finished(&self) -> bool {
+        self.finishes.load(Ordering::Acquire) >= self.expected_senders
+    }
+
+    pub fn finishes(&self) -> usize {
+        self.finishes.load(Ordering::Acquire)
+    }
+
+    /// Estimates received: (count, total bytes).
+    pub fn estimates(&self) -> (usize, u64) {
+        let e = self.estimates.lock().unwrap();
+        (e.len(), e.values().sum())
+    }
+
+    pub fn expected_senders(&self) -> usize {
+        self.expected_senders
+    }
+}
+
+/// Channel registry: frames are routed by their `channel` id.
+///
+/// Workers build their query DAGs at slightly different times, so a
+/// fast peer's estimate/data frames can arrive *before* this worker has
+/// registered the channel. Such early frames are buffered (bounded) and
+/// delivered on registration — without this, a racing exchange pair
+/// deadlocks waiting for an estimate that was dropped.
+#[derive(Default)]
+pub struct Router {
+    channels: RwLock<HashMap<u32, Arc<ChannelRx>>>,
+    /// Early frames for channels not yet registered.
+    pending: Mutex<HashMap<u32, Vec<Frame>>>,
+    /// Control frames (plan distribution, lifecycle) for the cluster.
+    control: Mutex<VecDeque<Frame>>,
+    control_ready: Condvar,
+    dropped: AtomicU64,
+}
+
+/// Max buffered early frames per channel (beyond this something is
+/// wrong — a dead downstream — and frames are counted dropped).
+const MAX_PENDING_PER_CHANNEL: usize = 4096;
+
+impl Router {
+    pub fn new() -> Router {
+        Router::default()
+    }
+
+    pub fn register(&self, channel: u32, rx: Arc<ChannelRx>) {
+        self.channels.write().unwrap().insert(channel, rx);
+        // deliver any frames that raced ahead of registration
+        let early = self.pending.lock().unwrap().remove(&channel);
+        if let Some(frames) = early {
+            for f in frames {
+                if let Err(e) = self.route(f) {
+                    log::warn!("replaying early frame on channel {channel}: {e}");
+                }
+            }
+        }
+    }
+
+    pub fn unregister(&self, channel: u32) {
+        self.channels.write().unwrap().remove(&channel);
+        self.pending.lock().unwrap().remove(&channel);
+    }
+
+    pub fn channel(&self, channel: u32) -> Option<Arc<ChannelRx>> {
+        self.channels.read().unwrap().get(&channel).cloned()
+    }
+
+    /// Frames that arrived for unregistered channels (bug indicator).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Deliver one inbound frame.
+    pub fn route(&self, frame: Frame) -> Result<()> {
+        match frame.kind {
+            FrameKind::Control => {
+                self.control.lock().unwrap().push_back(frame);
+                self.control_ready.notify_one();
+                Ok(())
+            }
+            kind => {
+                let rx = match self.channel(frame.channel) {
+                    Some(rx) => rx,
+                    None => {
+                        // early frame: buffer until the DAG registers
+                        // the channel (bounded)
+                        let mut pending = self.pending.lock().unwrap();
+                        let q = pending.entry(frame.channel).or_default();
+                        if q.len() < MAX_PENDING_PER_CHANNEL {
+                            q.push(frame);
+                        } else {
+                            self.dropped.fetch_add(1, Ordering::Relaxed);
+                        }
+                        return Ok(());
+                    }
+                };
+                match kind {
+                    FrameKind::Data => {
+                        let decoded = Codec::decompress(&frame.payload)?;
+                        rx.holder.push_encoded(decoded)?;
+                        Ok(())
+                    }
+                    FrameKind::Finish => {
+                        let n = rx.finishes.fetch_add(1, Ordering::AcqRel) + 1;
+                        if n >= rx.expected_senders {
+                            rx.holder.finish();
+                        }
+                        Ok(())
+                    }
+                    FrameKind::SizeEstimate => {
+                        let bytes = frame.estimate_bytes()?;
+                        rx.estimates.lock().unwrap().insert(frame.src, bytes);
+                        Ok(())
+                    }
+                    FrameKind::Control => unreachable!(),
+                }
+            }
+        }
+    }
+
+    /// Next control frame, if any.
+    pub fn recv_control(&self, timeout: Duration) -> Option<Frame> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut q = self.control.lock().unwrap();
+        loop {
+            if let Some(f) = q.pop_front() {
+                return Some(f);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self.control_ready.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+        }
+    }
+}
+
+/// The executor: sender lanes + one receiver thread.
+pub struct NetworkExecutor {
+    outbox: Arc<Outbox>,
+    router: Arc<Router>,
+    shutdown: Arc<AtomicBool>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    sent_bytes_precompress: Arc<AtomicU64>,
+    sent_bytes_wire: Arc<AtomicU64>,
+    compress_ns: Arc<AtomicU64>,
+}
+
+impl NetworkExecutor {
+    /// Start `threads` sender lanes + 1 receiver over `endpoint`.
+    pub fn start(
+        endpoint: Arc<dyn Endpoint>,
+        outbox: Arc<Outbox>,
+        router: Arc<Router>,
+        compression: Option<Codec>,
+        threads: usize,
+    ) -> Arc<NetworkExecutor> {
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let ex = Arc::new(NetworkExecutor {
+            outbox: outbox.clone(),
+            router: router.clone(),
+            shutdown: shutdown.clone(),
+            handles: Mutex::new(Vec::new()),
+            sent_bytes_precompress: Arc::new(AtomicU64::new(0)),
+            sent_bytes_wire: Arc::new(AtomicU64::new(0)),
+            compress_ns: Arc::new(AtomicU64::new(0)),
+        });
+        let lanes = threads.max(1);
+        let me = endpoint.worker_id();
+        let mut handles = Vec::new();
+        for lane in 0..lanes {
+            let outbox = outbox.clone();
+            let endpoint = endpoint.clone();
+            let stop = shutdown.clone();
+            let pre = ex.sent_bytes_precompress.clone();
+            let wire = ex.sent_bytes_wire.clone();
+            let cns = ex.compress_ns.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("theseus-netsend-{me}-{lane}"))
+                    .spawn(move || {
+                        while !stop.load(Ordering::Relaxed) {
+                            let m = match outbox.pop_for_lane(
+                                lane,
+                                lanes,
+                                Duration::from_millis(50),
+                            ) {
+                                Some(m) => m,
+                                None => continue,
+                            };
+                            let frame = match m {
+                                Outbound::Data { dst, channel, encoded } => {
+                                    pre.fetch_add(encoded.len() as u64, Ordering::Relaxed);
+                                    let t0 = std::time::Instant::now();
+                                    let payload = compression
+                                        .unwrap_or(Codec::None)
+                                        .compress(&encoded);
+                                    cns.fetch_add(
+                                        t0.elapsed().as_nanos() as u64,
+                                        Ordering::Relaxed,
+                                    );
+                                    wire.fetch_add(payload.len() as u64, Ordering::Relaxed);
+                                    Frame::data(me, dst, channel, payload)
+                                }
+                                Outbound::Finish { dst, channel } => {
+                                    Frame::finish(me, dst, channel)
+                                }
+                                Outbound::Estimate { dst, channel, bytes } => {
+                                    Frame::size_estimate(me, dst, channel, bytes)
+                                }
+                            };
+                            if let Err(e) = endpoint.send(frame) {
+                                log::warn!("netsend: {e}");
+                            }
+                        }
+                    })
+                    .expect("spawn netsend"),
+            );
+        }
+        {
+            let endpoint = endpoint.clone();
+            let router = router.clone();
+            let stop = shutdown.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("theseus-netrecv-{me}"))
+                    .spawn(move || {
+                        while !stop.load(Ordering::Relaxed) {
+                            match endpoint.recv_timeout(Duration::from_millis(50)) {
+                                Ok(Some(f)) => {
+                                    if let Err(e) = router.route(f) {
+                                        log::warn!("netrecv route: {e}");
+                                    }
+                                }
+                                Ok(None) => {}
+                                Err(e) => log::warn!("netrecv: {e}"),
+                            }
+                        }
+                    })
+                    .expect("spawn netrecv"),
+            );
+        }
+        *ex.handles.lock().unwrap() = handles;
+        ex
+    }
+
+    pub fn outbox(&self) -> &Arc<Outbox> {
+        &self.outbox
+    }
+
+    pub fn router(&self) -> &Arc<Router> {
+        &self.router
+    }
+
+    /// (bytes before compression, bytes on the wire).
+    pub fn compression_ratio_inputs(&self) -> (u64, u64) {
+        (
+            self.sent_bytes_precompress.load(Ordering::Relaxed),
+            self.sent_bytes_wire.load(Ordering::Relaxed),
+        )
+    }
+
+    /// CPU time spent compressing (the resource Fig-4 E reclaims).
+    pub fn compress_time(&self) -> Duration {
+        Duration::from_nanos(self.compress_ns.load(Ordering::Relaxed))
+    }
+
+    /// Wait until the outbox drains (query epilogue), then keep threads
+    /// running for the next query.
+    pub fn flush(&self, timeout: Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        while !self.outbox.is_empty() {
+            if std::time::Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        true
+    }
+
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        self.outbox.close();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetworkExecutor {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        self.outbox.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TransportKind;
+    use crate::memory::batch_holder::MemEnv;
+    use crate::network::InprocHub;
+    use crate::sim::SimContext;
+    use crate::types::Column;
+
+    fn batch(rows: usize) -> RecordBatch {
+        RecordBatch::new(vec![Column::i64("k", (0..rows as i64).collect())]).unwrap()
+    }
+
+    fn two_workers(
+        compression: Option<Codec>,
+    ) -> (Vec<Arc<NetworkExecutor>>, Vec<Arc<Router>>) {
+        let hub = InprocHub::new(2, &SimContext::test(), TransportKind::Tcp);
+        let eps = hub.endpoints();
+        let mut exes = Vec::new();
+        let mut routers = Vec::new();
+        for ep in eps {
+            let router = Arc::new(Router::new());
+            let outbox = Arc::new(Outbox::new(16));
+            routers.push(router.clone());
+            exes.push(NetworkExecutor::start(
+                Arc::new(ep),
+                outbox,
+                router,
+                compression,
+                1,
+            ));
+        }
+        (exes, routers)
+    }
+
+    #[test]
+    fn batch_crosses_and_lands_in_holder() {
+        let (exes, routers) = two_workers(Some(Codec::Zstd { level: 1 }));
+        let holder = BatchHolder::new("rx", MemEnv::test(1 << 20));
+        routers[1].register(7, Arc::new(ChannelRx::new(holder.clone(), 1)));
+
+        let b = batch(100);
+        exes[0].outbox().send_batch(1, 7, &b).unwrap();
+        exes[0].outbox().send_finish(1, 7).unwrap();
+
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while !holder.is_finished() && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(holder.is_finished());
+        let got = holder.pop_device().unwrap().unwrap();
+        assert_eq!(got.batch, b);
+        for e in &exes {
+            e.stop();
+        }
+    }
+
+    #[test]
+    fn finish_requires_all_senders() {
+        let (exes, routers) = two_workers(None);
+        let holder = BatchHolder::new("rx", MemEnv::test(1 << 20));
+        let rx = Arc::new(ChannelRx::new(holder.clone(), 2));
+        routers[0].register(3, rx.clone());
+
+        // one finish (from worker 1) is not enough
+        exes[1].outbox().send_finish(0, 3).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        assert!(!rx.all_finished());
+        // self-finish completes it
+        exes[0].outbox().send_finish(0, 3).unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while !rx.all_finished() && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(rx.all_finished());
+        assert!(holder.is_finished());
+        for e in &exes {
+            e.stop();
+        }
+    }
+
+    #[test]
+    fn estimates_collect() {
+        let (exes, routers) = two_workers(None);
+        let holder = BatchHolder::new("rx", MemEnv::test(1 << 20));
+        let rx = Arc::new(ChannelRx::new(holder, 2));
+        routers[1].register(9, rx.clone());
+        exes[0].outbox().send_estimate(1, 9, 1000).unwrap();
+        exes[1].outbox().send_estimate(1, 9, 2000).unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while rx.estimates().0 < 2 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(rx.estimates(), (2, 3000));
+        for e in &exes {
+            e.stop();
+        }
+    }
+
+    #[test]
+    fn compression_shrinks_wire_bytes() {
+        let (exes, routers) = two_workers(Some(Codec::Zstd { level: 1 }));
+        let holder = BatchHolder::new("rx", MemEnv::test(1 << 20));
+        routers[1].register(1, Arc::new(ChannelRx::new(holder.clone(), 1)));
+        // compressible batch
+        let b = RecordBatch::new(vec![Column::i64("k", vec![42; 8192])]).unwrap();
+        exes[0].outbox().send_batch(1, 1, &b).unwrap();
+        assert!(exes[0].flush(Duration::from_secs(2)));
+        std::thread::sleep(Duration::from_millis(50));
+        let (pre, wire) = exes[0].compression_ratio_inputs();
+        assert!(wire < pre / 4, "compression ineffective: {wire} vs {pre}");
+        assert!(exes[0].compress_time() > Duration::ZERO);
+        for e in &exes {
+            e.stop();
+        }
+    }
+
+    #[test]
+    fn early_frames_buffer_until_registration() {
+        // Frames sent before the receiver registers the channel (a
+        // worker built its DAG faster) must be delivered afterwards —
+        // not dropped — or the exchange pair deadlocks.
+        let (exes, routers) = two_workers(None);
+        let b = batch(5);
+        exes[0].outbox().send_batch(1, 999, &b).unwrap();
+        exes[0].outbox().send_estimate(1, 999, 4242).unwrap();
+        exes[0].outbox().send_finish(1, 999).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(routers[1].dropped(), 0, "early frames must buffer");
+
+        // late registration: everything replays
+        let holder = BatchHolder::new("late", MemEnv::test(1 << 20));
+        let rx = Arc::new(ChannelRx::new(holder.clone(), 1));
+        routers[1].register(999, rx.clone());
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while !rx.all_finished() && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(rx.all_finished());
+        assert_eq!(rx.estimates(), (1, 4242));
+        assert_eq!(holder.pop_device().unwrap().unwrap().batch, b);
+        for e in &exes {
+            e.stop();
+        }
+    }
+
+    #[test]
+    fn outbox_backpressure_blocks_then_unblocks() {
+        let outbox = Arc::new(Outbox::new(2));
+        outbox.send_finish(0, 0).unwrap();
+        outbox.send_finish(0, 0).unwrap();
+        let o2 = outbox.clone();
+        let h = std::thread::spawn(move || o2.send_finish(0, 0).is_ok());
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(!h.is_finished(), "push should block while full");
+        outbox.pop_for_lane(0, 1, Duration::from_millis(10)).unwrap();
+        assert!(h.join().unwrap());
+    }
+}

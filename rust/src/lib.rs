@@ -1,0 +1,44 @@
+//! # Theseus — distributed accelerator-native query engine (reproduction)
+//!
+//! Reproduction of "Theseus: A Distributed and Scalable GPU-Accelerated
+//! Query Processing Platform Optimized for Efficient Data Movement"
+//! (CS.DC 2025, Voltron Data / CMU).
+//!
+//! Three-layer architecture:
+//!  * **L3 (this crate)** — the distributed coordinator: four asynchronous
+//!    executors (Compute, Memory, Pre-load, Network), Batch Holders,
+//!    operator DAG, adaptive exchange, memory reservation + spilling, the
+//!    fixed-size page-locked buffer pool, and the cluster runtime
+//!    (Client / Gateway / Planner / Workers).
+//!  * **L2 (python/compile/model.py)** — JAX compute stages for the query
+//!    operators, AOT-lowered to HLO text artifacts.
+//!  * **L1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!    hot spots (filter, hash partition, aggregation, bloom/LIP),
+//!    interpret-mode lowered into the same HLO.
+//!
+//! The "GPU" in this reproduction is a simulated device: a capacity-tracked
+//! device-memory arena whose compute is performed by the AOT-compiled XLA
+//! executables through the PJRT CPU client (`runtime` module), with
+//! PCIe/NVLink/network data movement modeled by a calibrated
+//! bandwidth+latency simulator (`sim` module). See DESIGN.md
+//! §Hardware-Adaptation for the mapping.
+
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod error;
+pub mod exec;
+pub mod executors;
+pub mod memory;
+pub mod metrics;
+pub mod network;
+pub mod planner;
+pub mod runtime;
+pub mod sim;
+pub mod storage;
+pub mod testing;
+pub mod types;
+pub mod util;
+pub mod workload;
+
+pub use error::{Error, Result};

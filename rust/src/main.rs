@@ -1,0 +1,266 @@
+//! `theseus` — cluster launcher and query driver.
+//!
+//! ```text
+//! theseus datagen  --benchmark tpch --sf 0.01 --dir /tmp/tpch
+//! theseus query    --benchmark tpch --sf 0.005 --query q3 --workers 4
+//! theseus suite    --benchmark tpch --sf 0.005 --workers 4 --preset E
+//! theseus explain  --benchmark tpch --query q5 --workers 4
+//! theseus baseline --benchmark tpch --sf 0.005 --query q3
+//! theseus info
+//! ```
+//!
+//! Data can live in-memory (default: generated per run) or on disk via
+//! `--dir`. `--preset A..I` selects the Figure-4 configurations;
+//! individual knobs are settable with `--config file.toml`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use theseus::cli::Args;
+use theseus::cluster::{Cluster, Gateway};
+use theseus::config::WorkerConfig;
+use theseus::planner::Planner;
+use theseus::runtime::KernelRegistry;
+use theseus::sim::SimContext;
+use theseus::storage::object_store::{ObjectStore, SimObjectStore};
+use theseus::util::human_bytes;
+use theseus::workload::tpcds::TpcdsGen;
+use theseus::workload::{tpcds_lite_suite, tpch_suite, CpuEngine, QueryDef, TpchGen};
+use theseus::{Error, Result};
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() {
+        eprintln!("{}", USAGE);
+        std::process::exit(2);
+    }
+    match run(raw) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+const USAGE: &str = "usage: theseus <datagen|query|suite|explain|info|baseline> \
+[--benchmark tpch|tpcds] [--sf F] [--query ID] [--workers N] [--preset A..I] \
+[--config file.toml] [--dir PATH] [--no-aot] [--lip off]";
+
+fn run(raw: Vec<String>) -> Result<()> {
+    let args = Args::parse(raw, &["no-aot", "verbose"])?;
+    match args.command.as_str() {
+        "datagen" => datagen(&args),
+        "query" => query(&args),
+        "suite" => suite(&args),
+        "explain" => explain(&args),
+        "baseline" => baseline(&args),
+        "info" => info(),
+        other => Err(Error::Config(format!("unknown command '{other}'\n{USAGE}"))),
+    }
+}
+
+fn config_from(args: &Args) -> Result<WorkerConfig> {
+    let mut cfg = match args.flag("preset") {
+        Some(p) => WorkerConfig::preset(p.chars().next().unwrap_or('?'))?,
+        None => WorkerConfig::default(),
+    };
+    if let Some(path) = args.flag("config") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("{path}: {e}")))?;
+        cfg.apply(&theseus::config::TomlLite::parse(&text)?)?;
+    }
+    cfg.num_workers = args.flag_usize("workers", cfg.num_workers)?;
+    cfg.time_scale = args.flag_f64("time-scale", cfg.time_scale)?;
+    Ok(cfg)
+}
+
+fn store_from(args: &Args, cfg: &WorkerConfig) -> Result<Arc<SimObjectStore>> {
+    let sim = SimContext::new(cfg.profile.clone(), cfg.time_scale);
+    Ok(match args.flag("dir") {
+        Some(d) => SimObjectStore::at_dir(d, &sim),
+        None => SimObjectStore::in_memory(&sim),
+    })
+}
+
+fn generate(args: &Args, store: &Arc<dyn ObjectStore>) -> Result<()> {
+    let sf = args.flag_f64("sf", 0.001)?;
+    match args.flag_or("benchmark", "tpch") {
+        "tpch" => {
+            let bytes = TpchGen::new(sf).write_all(store)?;
+            println!("tpch sf={sf}: wrote {}", human_bytes(bytes as usize));
+        }
+        "tpcds" => {
+            let bytes = TpcdsGen::new(sf).write_all(store)?;
+            println!("tpcds sf={sf}: wrote {}", human_bytes(bytes as usize));
+        }
+        other => return Err(Error::Config(format!("unknown benchmark '{other}'"))),
+    }
+    Ok(())
+}
+
+fn suite_for(args: &Args) -> Result<Vec<QueryDef>> {
+    Ok(match args.flag_or("benchmark", "tpch") {
+        "tpch" => tpch_suite(),
+        "tpcds" => tpcds_lite_suite(),
+        other => return Err(Error::Config(format!("unknown benchmark '{other}'"))),
+    })
+}
+
+fn find_query(args: &Args) -> Result<QueryDef> {
+    let id = args
+        .flag("query")
+        .ok_or_else(|| Error::Config("--query required".into()))?;
+    suite_for(args)?
+        .into_iter()
+        .find(|q| q.id == id)
+        .ok_or_else(|| Error::Config(format!("no query '{id}' in suite")))
+}
+
+fn registry(args: &Args) -> Option<KernelRegistry> {
+    if args.switch("no-aot") {
+        return None;
+    }
+    match KernelRegistry::shared() {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("warning: AOT registry unavailable ({e}); using host fallbacks");
+            None
+        }
+    }
+}
+
+fn datagen(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let store = store_from(args, &cfg)?;
+    if args.flag("dir").is_none() {
+        return Err(Error::Config(
+            "datagen without --dir writes to memory and is lost; pass --dir".into(),
+        ));
+    }
+    generate(args, &(store as Arc<dyn ObjectStore>))
+}
+
+fn query(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let store: Arc<dyn ObjectStore> = store_from(args, &cfg)?;
+    if args.flag("dir").is_none() {
+        generate(args, &store)?;
+    }
+    let q = find_query(args)?;
+    let reg = registry(args);
+    let cluster = Cluster::launch(cfg, store, reg)?;
+    let mut gw = Gateway::new(cluster);
+    if args.flag("lip") == Some("off") {
+        gw.planner.lip_enabled = false;
+    }
+    let r = gw.submit(&q.logical())?;
+    println!(
+        "{}: {} rows in {:?} ({} spills, {} wire)",
+        q.id,
+        r.batch.rows(),
+        r.elapsed,
+        r.total_spills(),
+        human_bytes(r.total_wire_bytes() as usize),
+    );
+    print_batch(&r.batch, 10);
+    Ok(())
+}
+
+fn suite(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let store: Arc<dyn ObjectStore> = store_from(args, &cfg)?;
+    if args.flag("dir").is_none() {
+        generate(args, &store)?;
+    }
+    let reg = registry(args);
+    let cluster = Cluster::launch(cfg, store, reg)?;
+    let gw = Gateway::new(cluster);
+    let mut total = Duration::ZERO;
+    println!("{:<6} {:>8} {:>12} {:>8} {:>12}", "query", "rows", "time", "spills", "wire");
+    for q in suite_for(args)? {
+        let r = gw.submit(&q.logical())?;
+        total += r.elapsed;
+        println!(
+            "{:<6} {:>8} {:>12?} {:>8} {:>12}",
+            q.id,
+            r.batch.rows(),
+            r.elapsed,
+            r.total_spills(),
+            human_bytes(r.total_wire_bytes() as usize),
+        );
+    }
+    println!("total: {total:?}");
+    Ok(())
+}
+
+fn explain(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let q = find_query(args)?;
+    let plan = Planner::new(cfg.num_workers).plan(&q.logical())?;
+    println!("-- {} (derived from {}) --", q.id, q.derived_from);
+    print!("{}", plan.render());
+    Ok(())
+}
+
+fn baseline(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let store: Arc<dyn ObjectStore> = store_from(args, &cfg)?;
+    if args.flag("dir").is_none() {
+        generate(args, &store)?;
+    }
+    let engine = CpuEngine::new(store);
+    let q = find_query(args)?;
+    let r = engine.run(&q.logical())?;
+    println!("{} (cpu baseline): {} rows in {:?}", q.id, r.batch.rows(), r.elapsed);
+    print_batch(&r.batch, 10);
+    Ok(())
+}
+
+fn info() -> Result<()> {
+    println!(
+        "theseus {} — distributed accelerator-native query engine",
+        env!("CARGO_PKG_VERSION")
+    );
+    match theseus::runtime::Manifest::discover() {
+        Ok(m) => {
+            println!(
+                "artifacts: {} stages (batch_rows={}, parts={}, buckets={}, bloom_bits={})",
+                m.stages.len(),
+                m.batch_rows,
+                m.num_parts,
+                m.num_buckets,
+                m.bloom_bits
+            );
+            for s in m.stages.values() {
+                println!("  {}: {} in, {} out", s.name, s.inputs.len(), s.outputs.len());
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn print_batch(batch: &theseus::types::RecordBatch, limit: usize) {
+    if batch.is_empty() {
+        println!("(empty result)");
+        return;
+    }
+    let names: Vec<&str> = batch.columns.iter().map(|c| c.name.as_str()).collect();
+    println!("{}", names.join("\t"));
+    for row in 0..batch.rows().min(limit) {
+        let cells: Vec<String> = batch
+            .columns
+            .iter()
+            .map(|c| match &c.data {
+                theseus::types::ColumnData::I64(v) => v[row].to_string(),
+                theseus::types::ColumnData::F32(v) => format!("{:.2}", v[row]),
+                theseus::types::ColumnData::F64(v) => format!("{:.2}", v[row]),
+            })
+            .collect();
+        println!("{}", cells.join("\t"));
+    }
+    if batch.rows() > limit {
+        println!("... ({} rows total)", batch.rows());
+    }
+}

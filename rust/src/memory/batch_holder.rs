@@ -1,0 +1,720 @@
+//! Batch Holder (§3.1): "an abstraction of a data container that
+//! guarantees that inputs can always be stored somewhere in the system,
+//! even when the intended target memory is full. Its data may be moved
+//! to a larger memory (including storage) when resources are scarce."
+//!
+//! Holders are the DAG's edges: operators push output batches in,
+//! downstream operators (via the Compute Executor) pop them out, and the
+//! Memory Executor demotes their contents across tiers under pressure.
+//! Unlike CUDA Unified Memory, the holder can move data to *storage*,
+//! change its format (compress on spill), and explicitly promote data
+//! back ahead of a kernel launch (the Pre-load Executor's job, §3.3.3).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::memory::{DeviceAlloc, DeviceArena, PinnedPool, PinnedSlab, SpillStore, Tier};
+use crate::sim::Throttle;
+use crate::storage::compression::Codec;
+use crate::types::RecordBatch;
+use crate::{Error, Result};
+
+/// A device-resident batch: the payload plus its arena accounting.
+pub struct DeviceBatch {
+    pub batch: RecordBatch,
+    _alloc: DeviceAlloc,
+}
+
+impl DeviceBatch {
+    /// Account `batch` against the arena (fails with retryable OOM).
+    pub fn new(arena: &DeviceArena, batch: RecordBatch) -> Result<DeviceBatch> {
+        let alloc = arena.alloc(batch.byte_size())?;
+        Ok(DeviceBatch { batch, _alloc: alloc })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.batch.rows()
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.batch.byte_size()
+    }
+}
+
+impl std::fmt::Debug for DeviceBatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "DeviceBatch({} rows, {} bytes)", self.rows(), self.byte_size())
+    }
+}
+
+/// Shared memory environment of one worker: the three tiers plus the
+/// modeled links between them.
+#[derive(Clone)]
+pub struct MemEnv {
+    pub arena: DeviceArena,
+    /// `None` reproduces Fig-4 config A (no pinned pool: host copies pay
+    /// the pageable penalty).
+    pub pinned: Option<PinnedPool>,
+    pub spill: Arc<SpillStore>,
+    /// Host <-> device link (PCIe).
+    pub pcie: Throttle,
+    /// Host <-> disk link (local NVMe-ish).
+    pub disk: Throttle,
+    /// Extra PCIe time multiplier for pageable (non-pinned) copies.
+    pub pageable_penalty: f64,
+    /// Codec applied when demoting host -> disk.
+    pub spill_codec: Codec,
+    /// Worker-wide demotion count: every time data lands (or is moved)
+    /// below its intended tier — OOM push fallbacks and Memory-Executor
+    /// spills alike. This is the §4.2 "spilling" the benches report.
+    pub demotions: Arc<std::sync::atomic::AtomicU64>,
+}
+
+impl MemEnv {
+    /// Test environment: instant links, small arena, pinned pool on.
+    pub fn test(device_capacity: usize) -> MemEnv {
+        let ctx = crate::sim::SimContext::test();
+        MemEnv {
+            arena: DeviceArena::new(device_capacity),
+            pinned: Some(PinnedPool::new(16 * 1024, 64).unwrap()),
+            spill: Arc::new(SpillStore::temp("memenv").unwrap()),
+            pcie: ctx.throttle(&ctx.profile.pcie),
+            disk: ctx.throttle(&ctx.profile.storage),
+            pageable_penalty: ctx.profile.pageable_penalty,
+            spill_codec: Codec::None,
+            demotions: Arc::new(std::sync::atomic::AtomicU64::new(0)),
+        }
+    }
+
+    pub fn demotions(&self) -> u64 {
+        self.demotions.load(Ordering::Relaxed)
+    }
+
+    /// Charge a host<->device copy of `n` bytes, pinned or pageable.
+    pub fn charge_pcie(&self, n: usize, pinned: bool) {
+        if pinned {
+            self.pcie.acquire(n);
+        } else {
+            // Pageable copies stage through an internal buffer at
+            // reduced throughput (CUDA best-practices §10).
+            self.pcie.acquire((n as f64 * self.pageable_penalty) as usize);
+        }
+    }
+}
+
+/// One stored batch at some tier.
+enum Slot {
+    Device(DeviceBatch),
+    /// Encoded batch bytes in the pinned pool.
+    HostPinned(PinnedSlab),
+    /// Encoded batch bytes in pageable host memory.
+    HostPageable(Vec<u8>),
+    /// Compressed encoded bytes on disk.
+    Disk(crate::memory::spill::SpillSlot),
+}
+
+impl Slot {
+    fn tier(&self) -> Tier {
+        match self {
+            Slot::Device(_) => Tier::Device,
+            Slot::HostPinned(_) | Slot::HostPageable(_) => Tier::Host,
+            Slot::Disk(_) => Tier::Disk,
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        match self {
+            Slot::Device(b) => b.byte_size(),
+            Slot::HostPinned(s) => s.len(),
+            Slot::HostPageable(v) => v.len(),
+            Slot::Disk(s) => s.len as usize,
+        }
+    }
+}
+
+/// Per-tier occupancy snapshot.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HolderStats {
+    pub device_batches: usize,
+    pub device_bytes: usize,
+    pub host_batches: usize,
+    pub host_bytes: usize,
+    pub disk_batches: usize,
+    pub disk_bytes: usize,
+}
+
+impl HolderStats {
+    pub fn total_batches(&self) -> usize {
+        self.device_batches + self.host_batches + self.disk_batches
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.device_bytes + self.host_bytes + self.disk_bytes
+    }
+}
+
+/// The holder itself. Cheaply cloneable; all clones share state.
+#[derive(Clone)]
+pub struct BatchHolder {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    name: String,
+    env: MemEnv,
+    slots: Mutex<VecDeque<Slot>>,
+    /// Upstream has promised no more pushes.
+    finished: AtomicBool,
+    /// Lifetime totals (exchange size estimation input, §3.2).
+    pushed_batches: AtomicU64,
+    pushed_bytes: AtomicU64,
+    spill_demotions: AtomicU64,
+    promotions: AtomicU64,
+}
+
+impl BatchHolder {
+    pub fn new(name: impl Into<String>, env: MemEnv) -> Self {
+        BatchHolder {
+            inner: Arc::new(Inner {
+                name: name.into(),
+                env,
+                slots: Mutex::new(VecDeque::new()),
+                finished: AtomicBool::new(false),
+                pushed_batches: AtomicU64::new(0),
+                pushed_bytes: AtomicU64::new(0),
+                spill_demotions: AtomicU64::new(0),
+                promotions: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.inner.name
+    }
+
+    pub fn env(&self) -> &MemEnv {
+        &self.inner.env
+    }
+
+    // ------------------------------------------------------------- push
+
+    /// Store a device-resident batch. If the arena cannot hold it the
+    /// batch is demoted straight to host (or disk) — the holder's
+    /// guarantee that a push never fails for lack of the *intended*
+    /// memory. Returns the tier actually used.
+    pub fn push_device(&self, batch: DeviceBatch) -> Result<Tier> {
+        self.note_push(batch.byte_size());
+        self.store(Slot::Device(batch), true)
+    }
+
+    /// Store a batch that is *not* yet accounted on device: tries to
+    /// account it (device preferred), else demotes to host — the
+    /// holder's never-fail guarantee. Scan / receive path.
+    pub fn push_batch(&self, batch: RecordBatch) -> Result<Tier> {
+        self.note_push(batch.byte_size());
+        match self.inner.env.arena.alloc(batch.byte_size()) {
+            Ok(alloc) => {
+                self.store(Slot::Device(DeviceBatch { batch, _alloc: alloc }), false)
+            }
+            Err(Error::DeviceOom { .. }) => {
+                self.inner
+                    .env
+                    .demotions
+                    .fetch_add(1, Ordering::Relaxed);
+                let slot = self.host_slot(batch.encode())?;
+                self.store(slot, false)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Store encoded batch bytes directly at host tier (network receive,
+    /// byte-range pre-load staging).
+    pub fn push_encoded(&self, bytes: Vec<u8>) -> Result<Tier> {
+        self.note_push(bytes.len());
+        let slot = self.host_slot(bytes)?;
+        let tier = slot.tier();
+        self.inner.slots.lock().unwrap().push_back(slot);
+        Ok(tier)
+    }
+
+    /// Store a batch preferring host tier (pre-load staging that should
+    /// not consume device memory).
+    pub fn push_batch_host(&self, batch: RecordBatch) -> Result<Tier> {
+        self.push_encoded(batch.encode())
+    }
+
+    fn note_push(&self, bytes: usize) {
+        self.inner.pushed_batches.fetch_add(1, Ordering::Relaxed);
+        self.inner.pushed_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    fn store(&self, slot: Slot, charged: bool) -> Result<Tier> {
+        let tier = slot.tier();
+        let _ = charged;
+        self.inner.slots.lock().unwrap().push_back(slot);
+        Ok(tier)
+    }
+
+    /// Encode to a host slot: pinned pool first, pageable fallback.
+    fn host_slot(&self, bytes: Vec<u8>) -> Result<Slot> {
+        if let Some(pool) = &self.inner.env.pinned {
+            if let Ok(slab) = PinnedSlab::write(pool, &bytes) {
+                return Ok(Slot::HostPinned(slab));
+            }
+        }
+        Ok(Slot::HostPageable(bytes))
+    }
+
+    // -------------------------------------------------------------- pop
+
+    /// Pop the next batch, materialized on device (the compute-task
+    /// input path: "loading input batches from batch holders into GPU
+    /// memory", §3.3.1). Returns `Ok(None)` when currently empty;
+    /// a retryable OOM if the arena cannot take the batch.
+    pub fn pop_device(&self) -> Result<Option<DeviceBatch>> {
+        let slot = match self.inner.slots.lock().unwrap().pop_front() {
+            Some(s) => s,
+            None => return Ok(None),
+        };
+        match self.materialize_device(slot) {
+            Ok(db) => Ok(Some(db)),
+            Err((Some(slot), e)) => {
+                // Put it back at the front so order is preserved; the
+                // compute executor treats the OOM as retryable.
+                self.inner.slots.lock().unwrap().push_front(slot);
+                Err(e)
+            }
+            Err((None, e)) => Err(e),
+        }
+    }
+
+    /// Pop the next batch as encoded host bytes (network-send path; no
+    /// device memory involved).
+    pub fn pop_encoded(&self) -> Result<Option<Vec<u8>>> {
+        let slot = match self.inner.slots.lock().unwrap().pop_front() {
+            Some(s) => s,
+            None => return Ok(None),
+        };
+        let env = &self.inner.env;
+        Ok(Some(match slot {
+            Slot::Device(db) => {
+                let bytes = db.batch.encode();
+                env.charge_pcie(bytes.len(), env.pinned.is_some());
+                bytes
+            }
+            Slot::HostPinned(s) => s.read(),
+            Slot::HostPageable(v) => v,
+            Slot::Disk(s) => {
+                let raw = env.spill.read(s)?;
+                env.disk.acquire(raw.len());
+                env.spill.free(s);
+                Codec::decompress(&raw)?
+            }
+        }))
+    }
+
+    fn materialize_device(
+        &self,
+        slot: Slot,
+    ) -> std::result::Result<DeviceBatch, (Option<Slot>, Error)> {
+        let env = &self.inner.env;
+        match slot {
+            Slot::Device(db) => Ok(db),
+            Slot::HostPinned(s) => {
+                let bytes = s.read();
+                let batch = RecordBatch::decode(&bytes).map_err(|e| (None, e))?;
+                match DeviceBatch::new(&env.arena, batch) {
+                    Ok(db) => {
+                        env.charge_pcie(bytes.len(), true);
+                        self.inner.promotions.fetch_add(1, Ordering::Relaxed);
+                        Ok(db)
+                    }
+                    Err(e) => Err((Some(Slot::HostPinned(s)), e)),
+                }
+            }
+            Slot::HostPageable(v) => {
+                let batch = RecordBatch::decode(&v).map_err(|e| (None, e))?;
+                match DeviceBatch::new(&env.arena, batch) {
+                    Ok(db) => {
+                        env.charge_pcie(v.len(), false);
+                        self.inner.promotions.fetch_add(1, Ordering::Relaxed);
+                        Ok(db)
+                    }
+                    Err(e) => Err((Some(Slot::HostPageable(v)), e)),
+                }
+            }
+            Slot::Disk(s) => {
+                let raw = env.spill.read(s).map_err(|e| (Some(Slot::Disk(s)), e))?;
+                env.disk.acquire(raw.len());
+                let bytes = Codec::decompress(&raw).map_err(|e| (None, e))?;
+                let batch = RecordBatch::decode(&bytes).map_err(|e| (None, e))?;
+                match DeviceBatch::new(&env.arena, batch) {
+                    Ok(db) => {
+                        env.spill.free(s);
+                        env.charge_pcie(bytes.len(), env.pinned.is_some());
+                        self.inner.promotions.fetch_add(1, Ordering::Relaxed);
+                        Ok(db)
+                    }
+                    Err(e) => Err((Some(Slot::Disk(s)), e)),
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------ spill/promote
+
+    /// Demote the *newest* device-tier batch one tier (LIFO spill: the
+    /// oldest batches are next to be consumed, so spilling from the back
+    /// implements "avoid spilling data for which compute tasks are close
+    /// to being executed", §3.3.2). Returns bytes freed on device, 0 if
+    /// nothing to spill.
+    pub fn spill_one(&self) -> Result<usize> {
+        // Find the last device slot while holding the lock, take it out.
+        let taken = {
+            let mut slots = self.inner.slots.lock().unwrap();
+            let idx = slots.iter().rposition(|s| s.tier() == Tier::Device);
+            idx.map(|i| (i, slots.remove(i).unwrap()))
+        };
+        let (idx, slot) = match taken {
+            Some(x) => x,
+            None => return Ok(0),
+        };
+        let env = &self.inner.env;
+        let db = match slot {
+            Slot::Device(db) => db,
+            _ => unreachable!(),
+        };
+        let freed = db.byte_size();
+        let bytes = db.batch.encode();
+        env.charge_pcie(bytes.len(), env.pinned.is_some());
+        drop(db); // release arena accounting before storing host copy
+        let new_slot = self.host_slot(bytes)?;
+        {
+            let mut slots = self.inner.slots.lock().unwrap();
+            let at = idx.min(slots.len()); // deque may have shrunk concurrently
+            slots.insert(at, new_slot);
+        }
+        self.inner.spill_demotions.fetch_add(1, Ordering::Relaxed);
+        self.inner.env.demotions.fetch_add(1, Ordering::Relaxed);
+        Ok(freed)
+    }
+
+    /// Demote the newest host-tier batch to disk (compressing with the
+    /// env's spill codec). Returns host bytes freed.
+    pub fn spill_host_one(&self) -> Result<usize> {
+        let taken = {
+            let mut slots = self.inner.slots.lock().unwrap();
+            let idx = slots.iter().rposition(|s| s.tier() == Tier::Host);
+            idx.map(|i| (i, slots.remove(i).unwrap()))
+        };
+        let (idx, slot) = match taken {
+            Some(x) => x,
+            None => return Ok(0),
+        };
+        let env = &self.inner.env;
+        let bytes = match slot {
+            Slot::HostPinned(s) => s.read(),
+            Slot::HostPageable(v) => v,
+            _ => unreachable!(),
+        };
+        let freed = bytes.len();
+        let compressed = env.spill_codec.compress(&bytes);
+        env.disk.acquire(compressed.len());
+        let disk_slot = env.spill.write(&compressed)?;
+        {
+            let mut slots = self.inner.slots.lock().unwrap();
+            let at = idx.min(slots.len());
+            slots.insert(at, Slot::Disk(disk_slot));
+        }
+        self.inner.spill_demotions.fetch_add(1, Ordering::Relaxed);
+        self.inner.env.demotions.fetch_add(1, Ordering::Relaxed);
+        Ok(freed)
+    }
+
+    /// Promote the oldest non-device batch to host (Pre-load Executor's
+    /// Compute-Task Pre-loading stages disk data at host so the compute
+    /// pop only pays the PCIe hop). Returns true if something moved.
+    pub fn promote_one_to_host(&self) -> Result<bool> {
+        let taken = {
+            let mut slots = self.inner.slots.lock().unwrap();
+            let idx = slots.iter().position(|s| s.tier() == Tier::Disk);
+            idx.map(|i| (i, slots.remove(i).unwrap()))
+        };
+        let (idx, slot) = match taken {
+            Some(x) => x,
+            None => return Ok(false),
+        };
+        let env = &self.inner.env;
+        let s = match slot {
+            Slot::Disk(s) => s,
+            _ => unreachable!(),
+        };
+        let raw = env.spill.read(s)?;
+        env.disk.acquire(raw.len());
+        let bytes = Codec::decompress(&raw)?;
+        env.spill.free(s);
+        let new_slot = self.host_slot(bytes)?;
+        {
+            let mut slots = self.inner.slots.lock().unwrap();
+            let at = idx.min(slots.len());
+            slots.insert(at, new_slot);
+        }
+        self.inner.promotions.fetch_add(1, Ordering::Relaxed);
+        Ok(true)
+    }
+
+    // ------------------------------------------------------------ state
+
+    pub fn len(&self) -> usize {
+        self.inner.slots.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Mark that no more batches will be pushed.
+    pub fn finish(&self) {
+        self.inner.finished.store(true, Ordering::Release);
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.inner.finished.load(Ordering::Acquire)
+    }
+
+    /// Finished and drained: downstream operator can complete.
+    pub fn is_exhausted(&self) -> bool {
+        self.is_finished() && self.is_empty()
+    }
+
+    /// Lifetime pushed bytes (the Adaptive Exchange estimates total
+    /// input from this after a few batches, §3.2).
+    pub fn bytes_pushed(&self) -> u64 {
+        self.inner.pushed_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn batches_pushed(&self) -> u64 {
+        self.inner.pushed_batches.load(Ordering::Relaxed)
+    }
+
+    pub fn spill_demotions(&self) -> u64 {
+        self.inner.spill_demotions.load(Ordering::Relaxed)
+    }
+
+    pub fn promotions(&self) -> u64 {
+        self.inner.promotions.load(Ordering::Relaxed)
+    }
+
+    /// Per-tier occupancy (the Memory Executor's watermark input).
+    pub fn stats(&self) -> HolderStats {
+        let slots = self.inner.slots.lock().unwrap();
+        let mut st = HolderStats::default();
+        for s in slots.iter() {
+            let b = s.bytes();
+            match s.tier() {
+                Tier::Device => {
+                    st.device_batches += 1;
+                    st.device_bytes += b;
+                }
+                Tier::Host => {
+                    st.host_batches += 1;
+                    st.host_bytes += b;
+                }
+                Tier::Disk => {
+                    st.disk_batches += 1;
+                    st.disk_bytes += b;
+                }
+            }
+        }
+        st
+    }
+}
+
+impl std::fmt::Debug for BatchHolder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let st = self.stats();
+        write!(
+            f,
+            "BatchHolder('{}', dev {}/{}B, host {}/{}B, disk {}/{}B{})",
+            self.name(),
+            st.device_batches,
+            st.device_bytes,
+            st.host_batches,
+            st.host_bytes,
+            st.disk_batches,
+            st.disk_bytes,
+            if self.is_finished() { ", finished" } else { "" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Column;
+
+    fn batch(rows: usize) -> RecordBatch {
+        RecordBatch::new(vec![
+            Column::i64("k", (0..rows as i64).collect()),
+            Column::f32("v", (0..rows).map(|i| i as f32).collect()),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn push_pop_device_fifo() {
+        let h = BatchHolder::new("t", MemEnv::test(1 << 20));
+        h.push_batch(batch(10)).unwrap();
+        h.push_batch(batch(20)).unwrap();
+        let a = h.pop_device().unwrap().unwrap();
+        assert_eq!(a.rows(), 10);
+        let b = h.pop_device().unwrap().unwrap();
+        assert_eq!(b.rows(), 20);
+        assert!(h.pop_device().unwrap().is_none());
+    }
+
+    #[test]
+    fn arena_accounting_tracks_pops() {
+        let env = MemEnv::test(1 << 20);
+        let h = BatchHolder::new("t", env.clone());
+        h.push_batch(batch(100)).unwrap();
+        let before = env.arena.in_use();
+        assert!(before > 0);
+        let db = h.pop_device().unwrap().unwrap();
+        assert_eq!(env.arena.in_use(), before);
+        drop(db);
+        assert_eq!(env.arena.in_use(), 0);
+    }
+
+    #[test]
+    fn spill_frees_device_and_roundtrips() {
+        let env = MemEnv::test(1 << 20);
+        let h = BatchHolder::new("t", env.clone());
+        h.push_batch(batch(50)).unwrap();
+        h.push_batch(batch(60)).unwrap();
+        let freed = h.spill_one().unwrap();
+        assert!(freed > 0);
+        assert_eq!(h.stats().device_batches, 1);
+        assert_eq!(h.stats().host_batches, 1);
+        // order preserved: pop gives 50-row batch first
+        assert_eq!(h.pop_device().unwrap().unwrap().rows(), 50);
+        assert_eq!(h.pop_device().unwrap().unwrap().rows(), 60);
+    }
+
+    #[test]
+    fn spill_prefers_newest_device_batch() {
+        let env = MemEnv::test(1 << 20);
+        let h = BatchHolder::new("t", env.clone());
+        h.push_batch(batch(10)).unwrap();
+        h.push_batch(batch(20)).unwrap();
+        h.spill_one().unwrap();
+        let st = h.stats();
+        // the 20-row (newer) batch went to host
+        assert_eq!(st.device_bytes, batch(10).byte_size());
+    }
+
+    #[test]
+    fn full_demotion_chain_to_disk_and_back() {
+        let env = MemEnv::test(1 << 20);
+        let h = BatchHolder::new("t", env.clone());
+        h.push_batch(batch(40)).unwrap();
+        h.spill_one().unwrap();
+        assert_eq!(h.stats().host_batches, 1);
+        h.spill_host_one().unwrap();
+        assert_eq!(h.stats().disk_batches, 1);
+        assert!(env.spill.live_bytes() > 0);
+        // promote disk -> host, then pop to device
+        assert!(h.promote_one_to_host().unwrap());
+        assert_eq!(h.stats().host_batches, 1);
+        let db = h.pop_device().unwrap().unwrap();
+        assert_eq!(db.batch, batch(40));
+    }
+
+    #[test]
+    fn pop_from_disk_directly_works() {
+        let env = MemEnv::test(1 << 20);
+        let h = BatchHolder::new("t", env.clone());
+        h.push_batch(batch(7)).unwrap();
+        h.spill_one().unwrap();
+        h.spill_host_one().unwrap();
+        let db = h.pop_device().unwrap().unwrap();
+        assert_eq!(db.batch, batch(7));
+        assert_eq!(env.spill.live_bytes(), 0, "slot freed after reload");
+    }
+
+    #[test]
+    fn oom_pop_preserves_batch_and_is_retryable() {
+        // Arena too small to materialize the host-tier batch.
+        let env = MemEnv::test(64);
+        let h = BatchHolder::new("t", env.clone());
+        h.push_batch_host(batch(100)).unwrap();
+        let e = h.pop_device().unwrap_err();
+        assert!(e.is_retryable());
+        assert_eq!(h.len(), 1, "slot restored after failed pop");
+        // encoded pop still drains it without device memory
+        let bytes = h.pop_encoded().unwrap().unwrap();
+        assert_eq!(RecordBatch::decode(&bytes).unwrap(), batch(100));
+    }
+
+    #[test]
+    fn push_encoded_receives_network_frames() {
+        let env = MemEnv::test(1 << 20);
+        let h = BatchHolder::new("rx", env);
+        let tier = h.push_encoded(batch(30).encode()).unwrap();
+        assert_eq!(tier, Tier::Host);
+        assert_eq!(h.pop_device().unwrap().unwrap().rows(), 30);
+    }
+
+    #[test]
+    fn finish_semantics() {
+        let h = BatchHolder::new("t", MemEnv::test(1 << 20));
+        h.push_batch(batch(5)).unwrap();
+        assert!(!h.is_exhausted());
+        h.finish();
+        assert!(h.is_finished());
+        assert!(!h.is_exhausted());
+        h.pop_device().unwrap();
+        assert!(h.is_exhausted());
+    }
+
+    #[test]
+    fn pushed_bytes_accumulate_for_estimation() {
+        let h = BatchHolder::new("t", MemEnv::test(1 << 20));
+        let b = batch(10);
+        let sz = b.byte_size() as u64;
+        h.push_batch(b).unwrap();
+        h.push_batch(batch(10)).unwrap();
+        assert_eq!(h.bytes_pushed(), 2 * sz);
+        assert_eq!(h.batches_pushed(), 2);
+    }
+
+    #[test]
+    fn spill_codec_compresses_on_disk() {
+        let mut env = MemEnv::test(1 << 20);
+        env.spill_codec = Codec::Zstd { level: 1 };
+        let h = BatchHolder::new("t", env.clone());
+        // highly compressible batch
+        let b = RecordBatch::new(vec![Column::i64("k", vec![7; 4096])]).unwrap();
+        let raw = b.byte_size() as u64;
+        h.push_batch_host(b.clone()).unwrap();
+        h.spill_host_one().unwrap();
+        assert!(env.spill.live_bytes() < raw / 4, "{}", env.spill.live_bytes());
+        assert_eq!(h.pop_device().unwrap().unwrap().batch, b);
+    }
+
+    #[test]
+    fn stats_snapshot_consistent() {
+        let h = BatchHolder::new("t", MemEnv::test(1 << 20));
+        for _ in 0..3 {
+            h.push_batch(batch(10)).unwrap();
+        }
+        h.spill_one().unwrap();
+        let st = h.stats();
+        assert_eq!(st.total_batches(), 3);
+        assert_eq!(st.device_batches, 2);
+        assert_eq!(st.host_batches, 1);
+        assert!(st.total_bytes() > 0);
+    }
+}

@@ -1,0 +1,219 @@
+//! Capacity-tracked device ("GPU") memory arena.
+//!
+//! The simulated A100/L4: allocations are real host memory, but every
+//! byte is accounted against a configurable capacity so that the memory
+//! executor, reservations, and spilling face the same pressure the paper
+//! engineers for. Transfers into/out of the arena are paced by the PCIe
+//! [`crate::sim::Throttle`] at the call sites (batch holder / runtime).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::{Error, Result};
+
+/// Shared accounting state of one device's memory.
+#[derive(Clone)]
+pub struct DeviceArena {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    capacity: usize,
+    in_use: AtomicU64,
+    /// High-water mark, for reports.
+    peak: AtomicU64,
+    /// Lifetime totals.
+    allocs: AtomicU64,
+    failures: AtomicU64,
+}
+
+impl DeviceArena {
+    pub fn new(capacity: usize) -> Self {
+        DeviceArena {
+            inner: Arc::new(Inner {
+                capacity,
+                in_use: AtomicU64::new(0),
+                peak: AtomicU64::new(0),
+                allocs: AtomicU64::new(0),
+                failures: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.inner.in_use.load(Ordering::Relaxed) as usize
+    }
+
+    pub fn free(&self) -> usize {
+        self.capacity().saturating_sub(self.in_use())
+    }
+
+    pub fn peak(&self) -> usize {
+        self.inner.peak.load(Ordering::Relaxed) as usize
+    }
+
+    pub fn alloc_count(&self) -> u64 {
+        self.inner.allocs.load(Ordering::Relaxed)
+    }
+
+    pub fn failure_count(&self) -> u64 {
+        self.inner.failures.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of capacity in use (memory-executor watermark input).
+    pub fn utilization(&self) -> f64 {
+        if self.inner.capacity == 0 {
+            return 1.0;
+        }
+        self.in_use() as f64 / self.inner.capacity as f64
+    }
+
+    /// Account an `n`-byte device allocation. Returns a guard that
+    /// releases the bytes on drop, or [`Error::DeviceOom`] (retryable —
+    /// the compute executor will spill/split/retry, §3.3.2).
+    pub fn alloc(&self, n: usize) -> Result<DeviceAlloc> {
+        let inner = &self.inner;
+        // CAS loop: in_use + n must not exceed capacity.
+        let mut cur = inner.in_use.load(Ordering::Relaxed);
+        loop {
+            let next = cur as usize + n;
+            if next > inner.capacity {
+                inner.failures.fetch_add(1, Ordering::Relaxed);
+                return Err(Error::DeviceOom {
+                    requested: n,
+                    capacity: inner.capacity,
+                    in_use: cur as usize,
+                });
+            }
+            match inner.in_use.compare_exchange_weak(
+                cur,
+                next as u64,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+        inner.allocs.fetch_add(1, Ordering::Relaxed);
+        inner.peak.fetch_max(self.in_use() as u64, Ordering::Relaxed);
+        Ok(DeviceAlloc { arena: self.clone(), bytes: n })
+    }
+
+    fn release(&self, n: usize) {
+        self.inner.in_use.fetch_sub(n as u64, Ordering::AcqRel);
+    }
+}
+
+/// RAII guard for accounted device bytes.
+pub struct DeviceAlloc {
+    arena: DeviceArena,
+    bytes: usize,
+}
+
+impl DeviceAlloc {
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Shrink the accounted size (a compute task over-reserved; return
+    /// the unneeded bytes early).
+    pub fn shrink_to(&mut self, n: usize) {
+        if n < self.bytes {
+            self.arena.release(self.bytes - n);
+            self.bytes = n;
+        }
+    }
+}
+
+impl Drop for DeviceAlloc {
+    fn drop(&mut self) {
+        self.arena.release(self.bytes);
+    }
+}
+
+impl std::fmt::Debug for DeviceAlloc {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "DeviceAlloc({} bytes)", self.bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_and_release_accounting() {
+        let a = DeviceArena::new(1000);
+        let g1 = a.alloc(400).unwrap();
+        let g2 = a.alloc(500).unwrap();
+        assert_eq!(a.in_use(), 900);
+        assert_eq!(a.free(), 100);
+        drop(g1);
+        assert_eq!(a.in_use(), 500);
+        drop(g2);
+        assert_eq!(a.in_use(), 0);
+        assert_eq!(a.peak(), 900);
+    }
+
+    #[test]
+    fn oom_is_reported_with_sizes() {
+        let a = DeviceArena::new(100);
+        let _g = a.alloc(80).unwrap();
+        match a.alloc(30) {
+            Err(Error::DeviceOom { requested, capacity, in_use }) => {
+                assert_eq!((requested, capacity, in_use), (30, 100, 80));
+            }
+            other => panic!("expected OOM, got {other:?}"),
+        }
+        assert_eq!(a.failure_count(), 1);
+    }
+
+    #[test]
+    fn shrink_returns_bytes() {
+        let a = DeviceArena::new(100);
+        let mut g = a.alloc(100).unwrap();
+        assert!(a.alloc(1).is_err());
+        g.shrink_to(40);
+        assert_eq!(a.in_use(), 40);
+        let _g2 = a.alloc(60).unwrap();
+    }
+
+    #[test]
+    fn concurrent_alloc_never_oversubscribes() {
+        let a = DeviceArena::new(10_000);
+        let hs: Vec<_> = (0..8)
+            .map(|_| {
+                let a = a.clone();
+                std::thread::spawn(move || {
+                    let mut held = Vec::new();
+                    for _ in 0..100 {
+                        if let Ok(g) = a.alloc(100) {
+                            assert!(a.in_use() <= a.capacity());
+                            held.push(g);
+                            if held.len() > 5 {
+                                held.clear();
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(a.in_use(), 0);
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let a = DeviceArena::new(100);
+        assert_eq!(a.utilization(), 0.0);
+        let _g = a.alloc(50).unwrap();
+        assert!((a.utilization() - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,75 @@
+//! Memory subsystem: the three tiers the paper moves data across
+//! (§3.1, §3.4) and the machinery for doing so safely.
+//!
+//! * [`device::DeviceArena`] — capacity-tracked "GPU" memory (DESIGN.md
+//!   §Hardware-Adaptation: real allocations accounted against a
+//!   configurable capacity, standing in for the 80 GiB of an A100).
+//! * [`pinned::PinnedPool`] — the paper's fixed-size page-locked host
+//!   buffer pool (§3.4, Figure 3B): pre-allocated at engine init,
+//!   `mlock(2)`-backed when permitted, also used as network bounce
+//!   buffers and pre-load staging.
+//! * [`spill::SpillStore`] — storage tier: spill files on local disk.
+//! * [`batch_holder::BatchHolder`] — the paper's Batch Holder: "a data
+//!   container that guarantees that inputs can always be stored
+//!   somewhere in the system, even when the intended target memory is
+//!   full" (§3.1).
+//! * [`reservation::MemoryGovernor`] — reservations + per-operator
+//!   consumption history (§3.3.2).
+
+pub mod batch_holder;
+pub mod device;
+pub mod pinned;
+pub mod reservation;
+pub mod spill;
+
+pub use batch_holder::{BatchHolder, HolderStats};
+pub use device::{DeviceAlloc, DeviceArena};
+pub use pinned::{PinnedBuf, PinnedPool, PinnedSlab};
+pub use reservation::{MemoryGovernor, OpMemoryHistory, Reservation};
+pub use spill::SpillStore;
+
+/// Where a piece of data currently lives. Ordered by "distance" from the
+/// device: spilling demotes rightward, pre-loading promotes leftward.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Tier {
+    Device,
+    Host,
+    Disk,
+}
+
+impl Tier {
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Device => "device",
+            Tier::Host => "host",
+            Tier::Disk => "disk",
+        }
+    }
+
+    /// The tier data is demoted to when this one is under pressure.
+    pub fn spill_target(self) -> Option<Tier> {
+        match self {
+            Tier::Device => Some(Tier::Host),
+            Tier::Host => Some(Tier::Disk),
+            Tier::Disk => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_ordering_matches_distance() {
+        assert!(Tier::Device < Tier::Host);
+        assert!(Tier::Host < Tier::Disk);
+    }
+
+    #[test]
+    fn spill_chain_terminates() {
+        assert_eq!(Tier::Device.spill_target(), Some(Tier::Host));
+        assert_eq!(Tier::Host.spill_target(), Some(Tier::Disk));
+        assert_eq!(Tier::Disk.spill_target(), None);
+    }
+}

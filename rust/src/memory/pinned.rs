@@ -1,0 +1,413 @@
+//! Fixed-size page-locked host buffer pool (§3.4, Figure 3B).
+//!
+//! "Large amounts of page-locked memory are slow to allocate ... the
+//! engine has a pool of pre-allocated fixed-size page-locked buffers
+//! which is allocated during engine initialization. Data from all
+//! columns is placed into these buffers, allowing a single column's
+//! contents to overlap multiple buffers. This approach provides
+//! resilience to memory fragmentation at the cost of a small unused
+//! block of memory per batch."
+//!
+//! The buffers here are real: backed by one contiguous region allocated
+//! once at pool construction and `mlock(2)`ed when the RLIMIT permits
+//! (gracefully degrading to plain memory otherwise — the *layout*
+//! discipline, which is what the paper's Figure 3B is about, is
+//! identical either way). The same pool doubles as the network bounce
+//! buffer and pre-load staging area, exactly as in §3.4.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::{Error, Result};
+
+/// Shared pool of fixed-size buffers carved from one pinned region.
+#[derive(Clone)]
+pub struct PinnedPool {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    buf_size: usize,
+    /// Base of the contiguous region (never reallocated).
+    region: Region,
+    free: Mutex<Vec<u32>>,
+    available: Condvar,
+    total: usize,
+    mlocked: bool,
+    acquires: std::sync::atomic::AtomicU64,
+    exhaustions: std::sync::atomic::AtomicU64,
+}
+
+/// One contiguous, optionally mlocked allocation.
+struct Region {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// The region is only accessed through disjoint per-buffer slices handed
+// out under the free-list lock; the raw pointer itself is immutable.
+unsafe impl Send for Region {}
+unsafe impl Sync for Region {}
+
+impl Drop for Region {
+    fn drop(&mut self) {
+        unsafe {
+            libc::munlock(self.ptr as *const libc::c_void, self.len);
+            let layout = std::alloc::Layout::from_size_align(self.len, 4096).unwrap();
+            std::alloc::dealloc(self.ptr, layout);
+        }
+    }
+}
+
+impl PinnedPool {
+    /// Allocate `buffers` buffers of `buf_size` bytes each, up front.
+    /// Attempts to `mlock` the region; falls back to unpinned memory if
+    /// the rlimit forbids it (check [`PinnedPool::is_mlocked`]).
+    pub fn new(buf_size: usize, buffers: usize) -> Result<Self> {
+        assert!(buf_size > 0 && buffers > 0);
+        let len = buf_size * buffers;
+        let layout = std::alloc::Layout::from_size_align(len, 4096)
+            .map_err(|e| Error::internal(format!("pinned layout: {e}")))?;
+        let ptr = unsafe { std::alloc::alloc_zeroed(layout) };
+        if ptr.is_null() {
+            return Err(Error::internal("pinned pool allocation failed"));
+        }
+        let mlocked =
+            unsafe { libc::mlock(ptr as *const libc::c_void, len) == 0 };
+        Ok(PinnedPool {
+            inner: Arc::new(Inner {
+                buf_size,
+                region: Region { ptr, len },
+                free: Mutex::new((0..buffers as u32).rev().collect()),
+                available: Condvar::new(),
+                total: buffers,
+                mlocked,
+                acquires: Default::default(),
+                exhaustions: Default::default(),
+            }),
+        })
+    }
+
+    pub fn buf_size(&self) -> usize {
+        self.inner.buf_size
+    }
+
+    pub fn total_buffers(&self) -> usize {
+        self.inner.total
+    }
+
+    pub fn free_buffers(&self) -> usize {
+        self.inner.free.lock().unwrap().len()
+    }
+
+    pub fn is_mlocked(&self) -> bool {
+        self.inner.mlocked
+    }
+
+    pub fn acquire_count(&self) -> u64 {
+        self.inner.acquires.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    pub fn exhaustion_count(&self) -> u64 {
+        self.inner.exhaustions.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Take one buffer, failing immediately if the pool is dry (the
+    /// caller decides whether to spill or wait).
+    pub fn try_acquire(&self) -> Result<PinnedBuf> {
+        let mut free = self.inner.free.lock().unwrap();
+        match free.pop() {
+            Some(idx) => {
+                self.inner
+                    .acquires
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                Ok(PinnedBuf { pool: self.clone(), idx })
+            }
+            None => {
+                self.inner
+                    .exhaustions
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                Err(Error::PinnedExhausted { requested: 1, available: 0 })
+            }
+        }
+    }
+
+    /// Take one buffer, blocking until one frees up or `timeout`.
+    pub fn acquire_timeout(&self, timeout: std::time::Duration) -> Result<PinnedBuf> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut free = self.inner.free.lock().unwrap();
+        loop {
+            if let Some(idx) = free.pop() {
+                self.inner
+                    .acquires
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                return Ok(PinnedBuf { pool: self.clone(), idx });
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                self.inner
+                    .exhaustions
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                return Err(Error::PinnedExhausted { requested: 1, available: 0 });
+            }
+            let (guard, _) = self
+                .inner
+                .available
+                .wait_timeout(free, deadline - now)
+                .unwrap();
+            free = guard;
+        }
+    }
+
+    fn release(&self, idx: u32) {
+        let mut free = self.inner.free.lock().unwrap();
+        debug_assert!(!free.contains(&idx), "double release of pinned buf {idx}");
+        free.push(idx);
+        drop(free);
+        self.inner.available.notify_one();
+    }
+
+    fn slice_ptr(&self, idx: u32) -> *mut u8 {
+        debug_assert!((idx as usize) < self.inner.total);
+        unsafe { self.inner.region.ptr.add(idx as usize * self.inner.buf_size) }
+    }
+}
+
+/// Exclusive handle to one fixed-size buffer; returns to the pool on
+/// drop.
+pub struct PinnedBuf {
+    pool: PinnedPool,
+    idx: u32,
+}
+
+impl PinnedBuf {
+    pub fn len(&self) -> usize {
+        self.pool.inner.buf_size
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(self.pool.slice_ptr(self.idx), self.len()) }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [u8] {
+        unsafe {
+            std::slice::from_raw_parts_mut(self.pool.slice_ptr(self.idx), self.len())
+        }
+    }
+}
+
+impl Drop for PinnedBuf {
+    fn drop(&mut self) {
+        self.pool.release(self.idx);
+    }
+}
+
+impl std::fmt::Debug for PinnedBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PinnedBuf#{}({} bytes)", self.idx, self.len())
+    }
+}
+
+/// A logical byte region spanning one or more pool buffers — the Figure
+/// 3B layout, where "a single column's contents [can] overlap multiple
+/// buffers" and the final buffer's tail is "a small unused block".
+pub struct PinnedSlab {
+    bufs: Vec<PinnedBuf>,
+    len: usize,
+}
+
+impl PinnedSlab {
+    /// Copy `data` into freshly acquired pool buffers.
+    pub fn write(pool: &PinnedPool, data: &[u8]) -> Result<PinnedSlab> {
+        let bs = pool.buf_size();
+        let need = data.len().div_ceil(bs).max(1);
+        let avail = pool.free_buffers();
+        if need > avail {
+            return Err(Error::PinnedExhausted { requested: need, available: avail });
+        }
+        let mut bufs = Vec::with_capacity(need);
+        for chunk_idx in 0..need {
+            let mut b = pool.try_acquire()?;
+            let off = chunk_idx * bs;
+            let n = bs.min(data.len() - off.min(data.len()));
+            if n > 0 {
+                b.as_mut_slice()[..n].copy_from_slice(&data[off..off + n]);
+            }
+            bufs.push(b);
+        }
+        Ok(PinnedSlab { bufs, len: data.len() })
+    }
+
+    /// Logical byte length (excludes the unused tail of the last
+    /// buffer).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Bytes of pool capacity held (`buffers * buf_size`) — the
+    /// fragmentation-free accounting unit.
+    pub fn held_bytes(&self) -> usize {
+        self.bufs.len() * self.bufs.first().map_or(0, |b| b.len())
+    }
+
+    /// Unused tail bytes (the Figure-3B trade-off, reported by stats).
+    pub fn waste(&self) -> usize {
+        self.held_bytes() - self.len
+    }
+
+    pub fn num_buffers(&self) -> usize {
+        self.bufs.len()
+    }
+
+    /// Reassemble the logical bytes (device upload / network send path).
+    pub fn read(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.len);
+        let mut remaining = self.len;
+        for b in &self.bufs {
+            let n = remaining.min(b.len());
+            out.extend_from_slice(&b.as_slice()[..n]);
+            remaining -= n;
+        }
+        out
+    }
+
+    /// Visit the logical bytes buffer-by-buffer without reassembling
+    /// (zero-copy scatter path for the network executor).
+    pub fn for_each_chunk(&self, mut f: impl FnMut(&[u8])) {
+        let mut remaining = self.len;
+        for b in &self.bufs {
+            let n = remaining.min(b.len());
+            if n == 0 {
+                break;
+            }
+            f(&b.as_slice()[..n]);
+            remaining -= n;
+        }
+    }
+}
+
+impl std::fmt::Debug for PinnedSlab {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "PinnedSlab({} bytes in {} bufs, {} waste)",
+            self.len,
+            self.bufs.len(),
+            self.waste()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_release_cycle() {
+        let p = PinnedPool::new(1024, 4).unwrap();
+        assert_eq!(p.free_buffers(), 4);
+        let a = p.try_acquire().unwrap();
+        let b = p.try_acquire().unwrap();
+        assert_eq!(p.free_buffers(), 2);
+        drop(a);
+        assert_eq!(p.free_buffers(), 3);
+        drop(b);
+        assert_eq!(p.free_buffers(), 4);
+    }
+
+    #[test]
+    fn exhaustion_is_typed_error() {
+        let p = PinnedPool::new(64, 1).unwrap();
+        let _a = p.try_acquire().unwrap();
+        assert!(matches!(
+            p.try_acquire(),
+            Err(Error::PinnedExhausted { .. })
+        ));
+        assert_eq!(p.exhaustion_count(), 1);
+    }
+
+    #[test]
+    fn buffers_are_disjoint_and_writable() {
+        let p = PinnedPool::new(128, 3).unwrap();
+        let mut a = p.try_acquire().unwrap();
+        let mut b = p.try_acquire().unwrap();
+        a.as_mut_slice().fill(0xAA);
+        b.as_mut_slice().fill(0xBB);
+        assert!(a.as_slice().iter().all(|&x| x == 0xAA));
+        assert!(b.as_slice().iter().all(|&x| x == 0xBB));
+    }
+
+    #[test]
+    fn slab_roundtrip_spanning_buffers() {
+        let p = PinnedPool::new(100, 8).unwrap();
+        let data: Vec<u8> = (0..=255u8).cycle().take(350).collect();
+        let slab = PinnedSlab::write(&p, &data).unwrap();
+        assert_eq!(slab.num_buffers(), 4); // 350 / 100 -> 4 buffers
+        assert_eq!(slab.len(), 350);
+        assert_eq!(slab.waste(), 50);
+        assert_eq!(slab.read(), data);
+        drop(slab);
+        assert_eq!(p.free_buffers(), 8);
+    }
+
+    #[test]
+    fn slab_empty_data_takes_one_buffer() {
+        let p = PinnedPool::new(64, 2).unwrap();
+        let slab = PinnedSlab::write(&p, &[]).unwrap();
+        assert_eq!(slab.len(), 0);
+        assert!(slab.is_empty());
+        assert_eq!(slab.read(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn slab_fails_cleanly_when_pool_too_small() {
+        let p = PinnedPool::new(64, 2).unwrap();
+        let data = vec![1u8; 64 * 3];
+        match PinnedSlab::write(&p, &data) {
+            Err(Error::PinnedExhausted { requested, available }) => {
+                assert_eq!((requested, available), (3, 2));
+            }
+            other => panic!("{other:?}"),
+        }
+        // nothing leaked
+        assert_eq!(p.free_buffers(), 2);
+    }
+
+    #[test]
+    fn chunk_iteration_matches_read() {
+        let p = PinnedPool::new(50, 4).unwrap();
+        let data: Vec<u8> = (0..120u8).collect();
+        let slab = PinnedSlab::write(&p, &data).unwrap();
+        let mut got = Vec::new();
+        slab.for_each_chunk(|c| got.extend_from_slice(c));
+        assert_eq!(got, data);
+    }
+
+    #[test]
+    fn blocking_acquire_wakes_on_release() {
+        let p = PinnedPool::new(32, 1).unwrap();
+        let held = p.try_acquire().unwrap();
+        let p2 = p.clone();
+        let h = std::thread::spawn(move || {
+            p2.acquire_timeout(std::time::Duration::from_secs(2)).is_ok()
+        });
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        drop(held);
+        assert!(h.join().unwrap());
+    }
+
+    #[test]
+    fn timeout_expires_when_pool_stays_dry() {
+        let p = PinnedPool::new(32, 1).unwrap();
+        let _held = p.try_acquire().unwrap();
+        let r = p.acquire_timeout(std::time::Duration::from_millis(30));
+        assert!(matches!(r, Err(Error::PinnedExhausted { .. })));
+    }
+}

@@ -1,0 +1,409 @@
+//! Memory reservations + per-operator consumption history (§3.3.2).
+//!
+//! "Before they execute, Compute Executor tasks are required to reserve
+//! (not allocate) memory with the Memory Executor. ... These memory
+//! reservations help prevent out-of-memory errors while compute tasks
+//! perform allocations during execution. Each Operator keeps track of
+//! actual memory consumption of previously executed compute tasks,
+//! which feed into a heuristic that determines how much memory to
+//! reserve ... Compute tasks that run out of memory can be retried,
+//! improve their estimations on subsequent runs, and be divided up."
+//!
+//! A [`Reservation`] is accounting-only: it carves headroom out of the
+//! device arena's *reservable* budget without touching the arena's
+//! in-use counter; task allocations then draw real arena bytes inside
+//! that headroom. When a reservation cannot be granted, the governor
+//! invokes its pressure callback (wired to the Memory Executor's spill
+//! task) and waits up to a deadline.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::memory::DeviceArena;
+use crate::{Error, Result};
+
+/// Grants and tracks reservations against one device arena.
+#[derive(Clone)]
+pub struct MemoryGovernor {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    arena: DeviceArena,
+    reserved: Mutex<usize>,
+    freed: Condvar,
+    /// Called (outside the lock) when a reservation can't be granted;
+    /// expected to trigger spilling. Returns bytes it *tried* to free.
+    pressure: Mutex<Option<Box<dyn Fn(usize) -> usize + Send + Sync>>>,
+    grants: AtomicU64,
+    waits: AtomicU64,
+    timeouts: AtomicU64,
+}
+
+impl MemoryGovernor {
+    pub fn new(arena: DeviceArena) -> Self {
+        MemoryGovernor {
+            inner: Arc::new(Inner {
+                arena,
+                reserved: Mutex::new(0),
+                freed: Condvar::new(),
+                pressure: Mutex::new(None),
+                grants: AtomicU64::new(0),
+                waits: AtomicU64::new(0),
+                timeouts: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Install the spill trigger (the Memory Executor registers itself
+    /// here — Insight B: reservations ask spilling for help rather than
+    /// competing with it).
+    pub fn set_pressure_handler(
+        &self,
+        f: impl Fn(usize) -> usize + Send + Sync + 'static,
+    ) {
+        *self.inner.pressure.lock().unwrap() = Some(Box::new(f));
+    }
+
+    pub fn arena(&self) -> &DeviceArena {
+        &self.inner.arena
+    }
+
+    /// Bytes currently promised to tasks.
+    pub fn reserved(&self) -> usize {
+        *self.inner.reserved.lock().unwrap()
+    }
+
+    /// Headroom available for new reservations: capacity minus the
+    /// larger of (actual in-use, promised) — conservative on both sides.
+    pub fn available(&self) -> usize {
+        let cap = self.inner.arena.capacity();
+        let used = self.inner.arena.in_use().max(self.reserved());
+        cap.saturating_sub(used)
+    }
+
+    pub fn grant_count(&self) -> u64 {
+        self.inner.grants.load(Ordering::Relaxed)
+    }
+
+    pub fn wait_count(&self) -> u64 {
+        self.inner.waits.load(Ordering::Relaxed)
+    }
+
+    pub fn timeout_count(&self) -> u64 {
+        self.inner.timeouts.load(Ordering::Relaxed)
+    }
+
+    /// Try to reserve immediately.
+    pub fn try_reserve(&self, bytes: usize) -> Option<Reservation> {
+        let mut reserved = self.inner.reserved.lock().unwrap();
+        let used = self.inner.arena.in_use().max(*reserved);
+        if used + bytes <= self.inner.arena.capacity() {
+            *reserved += bytes;
+            self.inner.grants.fetch_add(1, Ordering::Relaxed);
+            Some(Reservation { gov: self.clone(), bytes })
+        } else {
+            None
+        }
+    }
+
+    /// Reserve, invoking the pressure handler and waiting up to
+    /// `timeout` if memory is scarce.
+    pub fn reserve(&self, bytes: usize, timeout: Duration) -> Result<Reservation> {
+        if let Some(r) = self.try_reserve(bytes) {
+            return Ok(r);
+        }
+        self.inner.waits.fetch_add(1, Ordering::Relaxed);
+        // Ask the memory executor for help (outside the reserved lock).
+        if let Some(f) = self.inner.pressure.lock().unwrap().as_ref() {
+            f(bytes);
+        }
+        let deadline = Instant::now() + timeout;
+        let mut reserved = self.inner.reserved.lock().unwrap();
+        loop {
+            let used = self.inner.arena.in_use().max(*reserved);
+            if used + bytes <= self.inner.arena.capacity() {
+                *reserved += bytes;
+                self.inner.grants.fetch_add(1, Ordering::Relaxed);
+                return Ok(Reservation { gov: self.clone(), bytes });
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                self.inner.timeouts.fetch_add(1, Ordering::Relaxed);
+                return Err(Error::ReservationTimeout {
+                    requested: bytes,
+                    tier: "device",
+                    waited_ms: timeout.as_millis() as u64,
+                });
+            }
+            let (guard, res) = self
+                .inner
+                .freed
+                .wait_timeout(reserved, (deadline - now).min(Duration::from_millis(20)))
+                .unwrap();
+            reserved = guard;
+            // Periodically re-poke the pressure handler on spurious
+            // wakeups/timeouts — arena frees don't signal the condvar.
+            if res.timed_out() {
+                drop(reserved);
+                if let Some(f) = self.inner.pressure.lock().unwrap().as_ref() {
+                    f(bytes);
+                }
+                reserved = self.inner.reserved.lock().unwrap();
+            }
+        }
+    }
+
+    fn release(&self, bytes: usize) {
+        let mut reserved = self.inner.reserved.lock().unwrap();
+        *reserved -= bytes.min(*reserved);
+        drop(reserved);
+        self.inner.freed.notify_all();
+    }
+}
+
+/// RAII reservation guard.
+pub struct Reservation {
+    gov: MemoryGovernor,
+    bytes: usize,
+}
+
+impl Reservation {
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Grow an under-estimated reservation mid-task (non-blocking; the
+    /// caller treats failure as retryable OOM and splits the task).
+    pub fn grow(&mut self, extra: usize) -> Result<()> {
+        match self.gov.try_reserve(extra) {
+            Some(r) => {
+                std::mem::forget(r); // fold into self
+                self.bytes += extra;
+                Ok(())
+            }
+            None => Err(Error::DeviceOom {
+                requested: extra,
+                capacity: self.gov.inner.arena.capacity(),
+                in_use: self.gov.inner.arena.in_use(),
+            }),
+        }
+    }
+}
+
+impl Drop for Reservation {
+    fn drop(&mut self) {
+        self.gov.release(self.bytes);
+    }
+}
+
+impl std::fmt::Debug for Reservation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Reservation({} bytes)", self.bytes)
+    }
+}
+
+/// Per-operator memory consumption history (§3.3.2): an EWMA of actual
+/// usage with a safety factor, refined after every task and inflated
+/// after every OOM retry.
+pub struct OpMemoryHistory {
+    /// EWMA of observed peak bytes per task.
+    ewma: Mutex<f64>,
+    /// Multiplier applied to the estimate (grows on OOM, decays on
+    /// success down to `BASE_SAFETY`).
+    safety: Mutex<f64>,
+    samples: AtomicU64,
+    ooms: AtomicU64,
+}
+
+const BASE_SAFETY: f64 = 1.25;
+const OOM_BACKOFF: f64 = 1.6;
+const EWMA_ALPHA: f64 = 0.3;
+
+impl Default for OpMemoryHistory {
+    fn default() -> Self {
+        OpMemoryHistory {
+            ewma: Mutex::new(0.0),
+            safety: Mutex::new(BASE_SAFETY),
+            samples: AtomicU64::new(0),
+            ooms: AtomicU64::new(0),
+        }
+    }
+}
+
+impl OpMemoryHistory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Estimate the reservation for a task whose input payload is
+    /// `input_bytes`. With no history, assume output ≈ input with the
+    /// safety factor; with history, scale the EWMA.
+    pub fn estimate(&self, input_bytes: usize) -> usize {
+        let ewma = *self.ewma.lock().unwrap();
+        let safety = *self.safety.lock().unwrap();
+        let base = if self.samples.load(Ordering::Relaxed) == 0 {
+            // no history: input + same-size output
+            (input_bytes * 2) as f64
+        } else {
+            ewma
+        };
+        (base * safety) as usize
+    }
+
+    /// Record the actual peak consumption of a completed task.
+    pub fn record_success(&self, actual_bytes: usize) {
+        let mut ewma = self.ewma.lock().unwrap();
+        let n = self.samples.fetch_add(1, Ordering::Relaxed);
+        *ewma = if n == 0 {
+            actual_bytes as f64
+        } else {
+            *ewma * (1.0 - EWMA_ALPHA) + actual_bytes as f64 * EWMA_ALPHA
+        };
+        // decay safety back toward base after successes
+        let mut s = self.safety.lock().unwrap();
+        *s = (*s * 0.9).max(BASE_SAFETY);
+    }
+
+    /// Record an OOM: future estimates grow (§3.3.2 "improve their
+    /// estimations on subsequent runs").
+    pub fn record_oom(&self) {
+        self.ooms.fetch_add(1, Ordering::Relaxed);
+        let mut s = self.safety.lock().unwrap();
+        *s = (*s * OOM_BACKOFF).min(8.0);
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples.load(Ordering::Relaxed)
+    }
+
+    pub fn ooms(&self) -> u64 {
+        self.ooms.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gov(cap: usize) -> MemoryGovernor {
+        MemoryGovernor::new(DeviceArena::new(cap))
+    }
+
+    #[test]
+    fn reserve_and_release() {
+        let g = gov(1000);
+        let r1 = g.try_reserve(600).unwrap();
+        assert_eq!(g.reserved(), 600);
+        assert!(g.try_reserve(500).is_none());
+        drop(r1);
+        assert_eq!(g.reserved(), 0);
+        assert!(g.try_reserve(500).is_some());
+    }
+
+    #[test]
+    fn reservations_respect_actual_arena_usage() {
+        let g = gov(1000);
+        let _real = g.arena().alloc(700).unwrap();
+        // only 300 reservable even though nothing is "reserved"
+        assert!(g.try_reserve(400).is_none());
+        assert!(g.try_reserve(300).is_some());
+    }
+
+    #[test]
+    fn pressure_handler_invoked_and_wait_succeeds() {
+        let g = gov(1000);
+        let hold = Arc::new(Mutex::new(Some(g.arena().alloc(900).unwrap())));
+        let h2 = hold.clone();
+        let fired = Arc::new(AtomicU64::new(0));
+        let f2 = fired.clone();
+        g.set_pressure_handler(move |_need| {
+            f2.fetch_add(1, Ordering::Relaxed);
+            // "spill": drop the big allocation
+            h2.lock().unwrap().take();
+            900
+        });
+        let r = g.reserve(500, Duration::from_millis(500)).unwrap();
+        assert_eq!(r.bytes(), 500);
+        assert!(fired.load(Ordering::Relaxed) >= 1);
+        assert_eq!(g.wait_count(), 1);
+    }
+
+    #[test]
+    fn reservation_times_out_with_typed_error() {
+        let g = gov(100);
+        let _r = g.try_reserve(100).unwrap();
+        let e = g.reserve(50, Duration::from_millis(40)).unwrap_err();
+        assert!(matches!(e, Error::ReservationTimeout { .. }));
+        assert!(e.is_retryable());
+        assert_eq!(g.timeout_count(), 1);
+    }
+
+    #[test]
+    fn grow_succeeds_within_headroom() {
+        let g = gov(1000);
+        let mut r = g.try_reserve(400).unwrap();
+        r.grow(300).unwrap();
+        assert_eq!(r.bytes(), 700);
+        assert_eq!(g.reserved(), 700);
+        assert!(r.grow(400).is_err());
+        drop(r);
+        assert_eq!(g.reserved(), 0);
+    }
+
+    #[test]
+    fn history_starts_conservative_then_tracks() {
+        let h = OpMemoryHistory::new();
+        // no history: 2x input * 1.25 safety
+        assert_eq!(h.estimate(1000), 2500);
+        h.record_success(1500);
+        let e = h.estimate(1000);
+        assert!(e >= 1500 && e < 2500, "{e}");
+        // converges toward actuals
+        for _ in 0..20 {
+            h.record_success(1500);
+        }
+        let e = h.estimate(123);
+        assert!((1800..2000).contains(&e), "{e}"); // 1500 * 1.25
+    }
+
+    #[test]
+    fn oom_inflates_estimates() {
+        let h = OpMemoryHistory::new();
+        h.record_success(1000);
+        let before = h.estimate(0);
+        h.record_oom();
+        let after = h.estimate(0);
+        assert!(after as f64 >= before as f64 * 1.5, "{before} -> {after}");
+        assert_eq!(h.ooms(), 1);
+        // success decays it back down eventually
+        for _ in 0..30 {
+            h.record_success(1000);
+        }
+        let recovered = h.estimate(0);
+        assert!(recovered <= before, "{recovered} vs {before}");
+    }
+
+    #[test]
+    fn concurrent_reserves_never_exceed_capacity() {
+        let g = gov(10_000);
+        let hs: Vec<_> = (0..8)
+            .map(|_| {
+                let g = g.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..200 {
+                        if let Some(r) = g.try_reserve(1_000) {
+                            assert!(g.reserved() <= 10_000);
+                            drop(r);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(g.reserved(), 0);
+    }
+}

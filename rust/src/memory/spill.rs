@@ -1,0 +1,196 @@
+//! Disk spill tier: append-only spill files with slot-based reload.
+//!
+//! The Batch Holder's last-resort target (§3.1: data "may be moved to a
+//! larger memory (including storage) when resources are scarce"). One
+//! `SpillStore` per worker; writes append to a rotating file, reads are
+//! positional, and freed slots are tracked so the file can be reclaimed
+//! when fully dead.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::{Error, Result};
+
+/// Handle to one spilled payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpillSlot {
+    pub offset: u64,
+    pub len: u64,
+}
+
+/// Append-only spill file manager.
+pub struct SpillStore {
+    path: PathBuf,
+    file: Mutex<File>,
+    write_off: AtomicU64,
+    live_bytes: AtomicU64,
+    spill_ops: AtomicU64,
+    reload_ops: AtomicU64,
+}
+
+impl SpillStore {
+    /// Create (or truncate) the spill file at `dir/worker-<id>.spill`.
+    pub fn new(dir: impl Into<PathBuf>, worker_id: usize) -> Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("worker-{worker_id}.spill"));
+        let file = OpenOptions::new()
+            .create(true)
+            .read(true)
+            .write(true)
+            .truncate(true)
+            .open(&path)?;
+        Ok(SpillStore {
+            path,
+            file: Mutex::new(file),
+            write_off: AtomicU64::new(0),
+            live_bytes: AtomicU64::new(0),
+            spill_ops: AtomicU64::new(0),
+            reload_ops: AtomicU64::new(0),
+        })
+    }
+
+    /// A store rooted in a fresh temp directory (tests, examples).
+    pub fn temp(tag: &str) -> Result<Self> {
+        let dir = std::env::temp_dir().join(format!(
+            "theseus-spill-{tag}-{}-{}",
+            std::process::id(),
+            self::unique()
+        ));
+        SpillStore::new(dir, 0)
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+
+    /// Bytes currently spilled and not yet freed.
+    pub fn live_bytes(&self) -> u64 {
+        self.live_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn spill_ops(&self) -> u64 {
+        self.spill_ops.load(Ordering::Relaxed)
+    }
+
+    pub fn reload_ops(&self) -> u64 {
+        self.reload_ops.load(Ordering::Relaxed)
+    }
+
+    /// Append a payload; returns its slot.
+    pub fn write(&self, data: &[u8]) -> Result<SpillSlot> {
+        let mut f = self.file.lock().unwrap();
+        let offset = self.write_off.fetch_add(data.len() as u64, Ordering::AcqRel);
+        f.seek(SeekFrom::Start(offset))?;
+        f.write_all(data)?;
+        self.live_bytes.fetch_add(data.len() as u64, Ordering::Relaxed);
+        self.spill_ops.fetch_add(1, Ordering::Relaxed);
+        Ok(SpillSlot { offset, len: data.len() as u64 })
+    }
+
+    /// Read a slot back.
+    pub fn read(&self, slot: SpillSlot) -> Result<Vec<u8>> {
+        let mut f = self.file.lock().unwrap();
+        let end = self.write_off.load(Ordering::Acquire);
+        if slot.offset + slot.len > end {
+            return Err(Error::internal(format!(
+                "spill slot {:?} beyond write offset {end}",
+                slot
+            )));
+        }
+        f.seek(SeekFrom::Start(slot.offset))?;
+        let mut buf = vec![0u8; slot.len as usize];
+        f.read_exact(&mut buf)?;
+        self.reload_ops.fetch_add(1, Ordering::Relaxed);
+        Ok(buf)
+    }
+
+    /// Mark a slot dead (space is reclaimed when the store drops; a
+    /// production engine would compact, which the paper does not
+    /// describe either — spill files are query-lifetime).
+    pub fn free(&self, slot: SpillSlot) {
+        self.live_bytes.fetch_sub(slot.len, Ordering::Relaxed);
+    }
+}
+
+impl Drop for SpillStore {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+        if let Some(dir) = self.path.parent() {
+            let _ = std::fs::remove_dir(dir); // only removes if empty
+        }
+    }
+}
+
+fn unique() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_roundtrip() {
+        let s = SpillStore::temp("rt").unwrap();
+        let a = s.write(b"hello").unwrap();
+        let b = s.write(b"theseus spill").unwrap();
+        assert_eq!(s.read(a).unwrap(), b"hello");
+        assert_eq!(s.read(b).unwrap(), b"theseus spill");
+        assert_eq!(s.live_bytes(), 18);
+        assert_eq!(s.spill_ops(), 2);
+    }
+
+    #[test]
+    fn free_reduces_live_bytes() {
+        let s = SpillStore::temp("free").unwrap();
+        let a = s.write(&[0u8; 100]).unwrap();
+        let _b = s.write(&[0u8; 50]).unwrap();
+        s.free(a);
+        assert_eq!(s.live_bytes(), 50);
+    }
+
+    #[test]
+    fn out_of_bounds_slot_rejected() {
+        let s = SpillStore::temp("oob").unwrap();
+        let _ = s.write(b"x").unwrap();
+        let bad = SpillSlot { offset: 100, len: 10 };
+        assert!(s.read(bad).is_err());
+    }
+
+    #[test]
+    fn concurrent_writers_get_disjoint_slots() {
+        let s = std::sync::Arc::new(SpillStore::temp("conc").unwrap());
+        let hs: Vec<_> = (0..4u8)
+            .map(|t| {
+                let s = s.clone();
+                std::thread::spawn(move || {
+                    (0..25)
+                        .map(|i| {
+                            let payload = vec![t * 32 + i; (i as usize + 1) * 3];
+                            (s.write(&payload).unwrap(), payload)
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in hs {
+            for (slot, want) in h.join().unwrap() {
+                assert_eq!(s.read(slot).unwrap(), want);
+            }
+        }
+    }
+
+    #[test]
+    fn file_removed_on_drop() {
+        let s = SpillStore::temp("drop").unwrap();
+        let p = s.path().to_path_buf();
+        assert!(p.exists());
+        drop(s);
+        assert!(!p.exists());
+    }
+}

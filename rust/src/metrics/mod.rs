@@ -1,0 +1,207 @@
+//! Lightweight metrics: atomic counters + duration histograms, grouped
+//! per worker. The paper's workers expose per-executor utilization; the
+//! benches print these to explain *why* a configuration wins (e.g.
+//! network busy-time dropping when RDMA is enabled).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Monotonic counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket log2 latency histogram (1us .. ~1hour).
+pub struct Histogram {
+    buckets: [AtomicU64; 32],
+    sum_ns: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_ns: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let b = (63 - us.leading_zeros() as usize).min(31);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn total(&self) -> Duration {
+        Duration::from_nanos(self.sum_ns.load(Ordering::Relaxed))
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_nanos(self.sum_ns.load(Ordering::Relaxed) / c)
+        }
+    }
+
+    /// Approximate quantile from the log2 buckets (upper bound of the
+    /// bucket containing quantile q).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (total as f64 * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << 32
+    }
+}
+
+/// Per-worker metrics registry.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<&'static str, std::sync::Arc<Counter>>>,
+    histograms: Mutex<BTreeMap<&'static str, std::sync::Arc<Histogram>>>,
+}
+
+impl Metrics {
+    pub fn counter(&self, name: &'static str) -> std::sync::Arc<Counter> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name)
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &'static str) -> std::sync::Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name)
+            .or_default()
+            .clone()
+    }
+
+    /// Render a sorted snapshot (for logs / bench reports).
+    pub fn snapshot(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{name}: {}\n", c.get()));
+        }
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "{name}: n={} mean={:?} total={:?}\n",
+                h.count(),
+                h.mean(),
+                h.total()
+            ));
+        }
+        out
+    }
+
+    /// Fetch a counter value by name (0 if never touched).
+    pub fn counter_value(&self, name: &'static str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.get())
+            .unwrap_or(0)
+    }
+}
+
+/// Scope timer: records into a histogram on drop.
+pub struct Timer<'a> {
+    hist: &'a Histogram,
+    start: std::time::Instant,
+}
+
+impl<'a> Timer<'a> {
+    pub fn new(hist: &'a Histogram) -> Self {
+        Timer { hist, start: std::time::Instant::now() }
+    }
+}
+
+impl Drop for Timer<'_> {
+    fn drop(&mut self) {
+        self.hist.record(self.start.elapsed());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_basics() {
+        let m = Metrics::default();
+        m.counter("x").inc();
+        m.counter("x").add(4);
+        assert_eq!(m.counter_value("x"), 5);
+        assert_eq!(m.counter_value("y"), 0);
+    }
+
+    #[test]
+    fn histogram_mean_and_quantile() {
+        let h = Histogram::default();
+        for ms in [1u64, 2, 4, 8, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean() >= Duration::from_millis(20));
+        assert!(h.quantile_us(1.0) >= 100_000);
+        assert!(h.quantile_us(0.2) <= 4_096);
+    }
+
+    #[test]
+    fn timer_records_on_drop() {
+        let h = Histogram::default();
+        {
+            let _t = Timer::new(&h);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(h.count(), 1);
+        assert!(h.total() >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn snapshot_lists_everything() {
+        let m = Metrics::default();
+        m.counter("a.b").inc();
+        m.histogram("c.d").record(Duration::from_micros(5));
+        let s = m.snapshot();
+        assert!(s.contains("a.b: 1") && s.contains("c.d"));
+    }
+}

@@ -1,0 +1,159 @@
+//! Wire frame: the unit the Network Executor sends and receives.
+//!
+//! A frame's payload is an encoded (and possibly compressed)
+//! [`crate::types::RecordBatch`]; control frames (size estimates for
+//! the Adaptive Exchange, end-of-stream markers) carry small payloads.
+//! The codec tag travels inside the payload (see
+//! `storage::compression`), so sender and receiver never need matching
+//! configuration.
+
+use crate::util::bytes::{Reader, Writer};
+use crate::{Error, Result};
+
+/// What a frame means to the receiving worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// A batch of rows for `channel`.
+    Data,
+    /// The sender's estimated total bytes for this exchange (§3.2: the
+    /// Adaptive Exchange broadcasts estimates before phase two).
+    SizeEstimate,
+    /// Sender will produce no more data frames on `channel`.
+    Finish,
+    /// Cluster control (plan distribution, query lifecycle).
+    Control,
+}
+
+impl FrameKind {
+    fn tag(self) -> u8 {
+        match self {
+            FrameKind::Data => 0,
+            FrameKind::SizeEstimate => 1,
+            FrameKind::Finish => 2,
+            FrameKind::Control => 3,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<Self> {
+        Ok(match t {
+            0 => FrameKind::Data,
+            1 => FrameKind::SizeEstimate,
+            2 => FrameKind::Finish,
+            3 => FrameKind::Control,
+            _ => return Err(Error::Network(format!("bad frame kind {t}"))),
+        })
+    }
+}
+
+/// One message on the fabric.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub src: usize,
+    pub dst: usize,
+    /// Logical channel: identifies the exchange edge within the query
+    /// DAG (operator id on the receiving side).
+    pub channel: u32,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn data(src: usize, dst: usize, channel: u32, payload: Vec<u8>) -> Frame {
+        Frame { kind: FrameKind::Data, src, dst, channel, payload }
+    }
+
+    pub fn finish(src: usize, dst: usize, channel: u32) -> Frame {
+        Frame { kind: FrameKind::Finish, src, dst, channel, payload: Vec::new() }
+    }
+
+    pub fn size_estimate(src: usize, dst: usize, channel: u32, bytes: u64) -> Frame {
+        Frame {
+            kind: FrameKind::SizeEstimate,
+            src,
+            dst,
+            channel,
+            payload: bytes.to_le_bytes().to_vec(),
+        }
+    }
+
+    pub fn control(src: usize, dst: usize, payload: Vec<u8>) -> Frame {
+        Frame { kind: FrameKind::Control, src, dst, channel: 0, payload }
+    }
+
+    /// Estimate payload for a SizeEstimate frame.
+    pub fn estimate_bytes(&self) -> Result<u64> {
+        if self.kind != FrameKind::SizeEstimate || self.payload.len() != 8 {
+            return Err(Error::Network("not a size-estimate frame".into()));
+        }
+        Ok(u64::from_le_bytes(self.payload[..8].try_into().unwrap()))
+    }
+
+    /// Bytes on the wire (header + payload) — what throttles charge.
+    pub fn wire_len(&self) -> usize {
+        FRAME_HEADER_LEN + self.payload.len()
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::with_capacity(self.wire_len());
+        w.u8(self.kind.tag());
+        w.u32(self.src as u32);
+        w.u32(self.dst as u32);
+        w.u32(self.channel);
+        w.bytes(&self.payload);
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Frame> {
+        let mut r = Reader::new(buf);
+        let kind = FrameKind::from_tag(r.u8()?)?;
+        let src = r.u32()? as usize;
+        let dst = r.u32()? as usize;
+        let channel = r.u32()?;
+        let payload = r.bytes()?.to_vec();
+        Ok(Frame { kind, src, dst, channel, payload })
+    }
+}
+
+/// kind(1) + src(4) + dst(4) + channel(4) + len(8)
+pub const FRAME_HEADER_LEN: usize = 21;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip_all_kinds() {
+        let frames = vec![
+            Frame::data(1, 2, 42, vec![1, 2, 3]),
+            Frame::finish(0, 3, 7),
+            Frame::size_estimate(2, 0, 9, 123_456_789),
+            Frame::control(0, 1, b"plan".to_vec()),
+        ];
+        for f in frames {
+            let buf = f.encode();
+            assert_eq!(buf.len(), f.wire_len());
+            assert_eq!(Frame::decode(&buf).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn size_estimate_accessor() {
+        let f = Frame::size_estimate(0, 1, 2, 999);
+        assert_eq!(f.estimate_bytes().unwrap(), 999);
+        assert!(Frame::finish(0, 1, 2).estimate_bytes().is_err());
+    }
+
+    #[test]
+    fn truncated_frame_rejected() {
+        let buf = Frame::data(0, 1, 2, vec![5; 100]).encode();
+        assert!(Frame::decode(&buf[..10]).is_err());
+        assert!(Frame::decode(&buf[..buf.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn bad_kind_rejected() {
+        let mut buf = Frame::finish(0, 1, 2).encode();
+        buf[0] = 99;
+        assert!(Frame::decode(&buf).is_err());
+    }
+}

@@ -1,0 +1,229 @@
+//! In-process fabric: per-worker inboxes + shared link throttles.
+//!
+//! Semantically identical to the TCP back-end (same [`Endpoint`]
+//! contract, same modeled wire time); the bytes just move through
+//! memory. Used by single-process clusters, tests, and benches, where
+//! the modeled link — not the loopback socket — is the quantity under
+//! study.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::config::TransportKind;
+use crate::network::{Endpoint, Frame};
+use crate::sim::{SimContext, Throttle};
+use crate::{Error, Result};
+
+struct Inbox {
+    q: Mutex<VecDeque<Frame>>,
+    ready: Condvar,
+}
+
+/// The shared fabric.
+pub struct InprocHub {
+    inboxes: Vec<Arc<Inbox>>,
+    /// One throttle per (src, dst) directed link — concurrent sends to
+    /// different peers overlap, sends on one link serialize (a NIC
+    /// queue pair / socket).
+    links: Vec<Vec<Throttle>>,
+    kind: TransportKind,
+}
+
+impl InprocHub {
+    /// Build an `n`-worker fabric shaped by `ctx` and `kind` (Tcp uses
+    /// the profile's `net_tcp` spec, Rdma its `net_rdma`; Rdma falls
+    /// back to tcp shaping if the profile has no RDMA — cloud).
+    pub fn new(n: usize, ctx: &SimContext, kind: TransportKind) -> Arc<InprocHub> {
+        let spec = match kind {
+            TransportKind::Rdma => ctx
+                .profile
+                .net_rdma
+                .clone()
+                .unwrap_or_else(|| ctx.profile.net_tcp.clone()),
+            _ => ctx.profile.net_tcp.clone(),
+        };
+        Arc::new(InprocHub {
+            inboxes: (0..n)
+                .map(|_| {
+                    Arc::new(Inbox { q: Mutex::new(VecDeque::new()), ready: Condvar::new() })
+                })
+                .collect(),
+            links: (0..n)
+                .map(|_| (0..n).map(|_| ctx.throttle(&spec)).collect())
+                .collect(),
+            kind,
+        })
+    }
+
+    pub fn kind(&self) -> TransportKind {
+        self.kind
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.inboxes.len()
+    }
+
+    /// One endpoint per worker.
+    pub fn endpoints(self: &Arc<Self>) -> Vec<InprocEndpoint> {
+        (0..self.num_workers())
+            .map(|id| InprocEndpoint {
+                hub: self.clone(),
+                id,
+                bytes: Arc::new(AtomicU64::new(0)),
+                frames: Arc::new(AtomicU64::new(0)),
+            })
+            .collect()
+    }
+
+    /// Total modeled busy time across all links (fabric utilization).
+    pub fn fabric_busy(&self) -> Duration {
+        self.links
+            .iter()
+            .flatten()
+            .map(|t| t.busy())
+            .sum()
+    }
+}
+
+/// One worker's handle to the hub.
+#[derive(Clone)]
+pub struct InprocEndpoint {
+    hub: Arc<InprocHub>,
+    id: usize,
+    bytes: Arc<AtomicU64>,
+    frames: Arc<AtomicU64>,
+}
+
+impl Endpoint for InprocEndpoint {
+    fn worker_id(&self) -> usize {
+        self.id
+    }
+
+    fn num_workers(&self) -> usize {
+        self.hub.num_workers()
+    }
+
+    fn send(&self, frame: Frame) -> Result<()> {
+        let dst = frame.dst;
+        if dst >= self.hub.num_workers() {
+            return Err(Error::Network(format!("no worker {dst}")));
+        }
+        // charge the modeled wire
+        self.hub.links[self.id][dst].acquire(frame.wire_len());
+        self.bytes.fetch_add(frame.wire_len() as u64, Ordering::Relaxed);
+        self.frames.fetch_add(1, Ordering::Relaxed);
+        let inbox = &self.hub.inboxes[dst];
+        inbox.q.lock().unwrap().push_back(frame);
+        inbox.ready.notify_one();
+        Ok(())
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<Frame>> {
+        let inbox = &self.hub.inboxes[self.id];
+        let deadline = std::time::Instant::now() + timeout;
+        let mut q = inbox.q.lock().unwrap();
+        loop {
+            if let Some(f) = q.pop_front() {
+                return Ok(Some(f));
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            let (guard, _) = inbox.ready.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+        }
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    fn frames_sent(&self) -> u64 {
+        self.frames.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{HwProfile, SimContext};
+
+    #[test]
+    fn self_send_works() {
+        let hub = InprocHub::new(2, &SimContext::test(), TransportKind::Tcp);
+        let eps = hub.endpoints();
+        eps[0].send(Frame::data(0, 0, 1, vec![9])).unwrap();
+        let f = eps[0].recv_timeout(Duration::from_millis(100)).unwrap().unwrap();
+        assert_eq!(f.payload, vec![9]);
+    }
+
+    #[test]
+    fn unknown_destination_is_error() {
+        let hub = InprocHub::new(2, &SimContext::test(), TransportKind::Tcp);
+        let eps = hub.endpoints();
+        assert!(eps[0].send(Frame::data(0, 5, 1, vec![])).is_err());
+    }
+
+    #[test]
+    fn rdma_links_model_faster_than_tcp() {
+        // With on-prem profile and a real time scale, the same bytes
+        // take longer on tcp shaping than rdma shaping.
+        let ctx = SimContext::new(HwProfile::on_prem(), 0.0);
+        let tcp = InprocHub::new(2, &ctx, TransportKind::Tcp);
+        let rdma = InprocHub::new(2, &ctx, TransportKind::Rdma);
+        let te = tcp.endpoints();
+        let re = rdma.endpoints();
+        let payload = vec![0u8; 1 << 20];
+        te[0].send(Frame::data(0, 1, 0, payload.clone())).unwrap();
+        re[0].send(Frame::data(0, 1, 0, payload)).unwrap();
+        assert!(
+            tcp.fabric_busy() > rdma.fabric_busy(),
+            "tcp {:?} vs rdma {:?}",
+            tcp.fabric_busy(),
+            rdma.fabric_busy()
+        );
+    }
+
+    #[test]
+    fn ordering_preserved_per_link() {
+        let hub = InprocHub::new(2, &SimContext::test(), TransportKind::Tcp);
+        let eps = hub.endpoints();
+        for i in 0..50u8 {
+            eps[0].send(Frame::data(0, 1, 0, vec![i])).unwrap();
+        }
+        for i in 0..50u8 {
+            let f = eps[1].recv_timeout(Duration::from_millis(100)).unwrap().unwrap();
+            assert_eq!(f.payload, vec![i]);
+        }
+    }
+
+    #[test]
+    fn concurrent_senders_all_arrive() {
+        let hub = InprocHub::new(4, &SimContext::test(), TransportKind::Tcp);
+        let eps = hub.endpoints();
+        let mut handles = Vec::new();
+        for src in 1..4 {
+            let ep = eps[src].clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100u32 {
+                    ep.send(Frame::data(src, 0, i, vec![src as u8])).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut n = 0;
+        while eps[0]
+            .recv_timeout(Duration::from_millis(50))
+            .unwrap()
+            .is_some()
+        {
+            n += 1;
+        }
+        assert_eq!(n, 300);
+    }
+}

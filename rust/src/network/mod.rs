@@ -1,0 +1,115 @@
+//! Worker-to-worker transport (§3.3.5).
+//!
+//! The Network Executor sits above this module; here live the frame
+//! format and the two back-ends:
+//!
+//! * [`inproc`] — in-process channels for single-process clusters,
+//!   shaped by the profile's TCP or RDMA link spec. This is the default
+//!   for benches: the *coordination* is identical to multi-process, and
+//!   the wire speed is the modeled quantity anyway.
+//! * [`tcp`] — real loopback TCP sockets with length-prefixed frames
+//!   (the POSIX back-end the paper's config A uses), additionally
+//!   shaped by the modeled link so cloud/on-prem ratios hold.
+//!
+//! The paper's RDMA back-end differs from TCP in bandwidth and
+//! per-message cost, not in semantics — so both back-ends here accept a
+//! [`TransportKind`] that selects which link spec shapes them.
+
+pub mod frame;
+pub mod inproc;
+pub mod tcp;
+
+pub use frame::{Frame, FrameKind};
+pub use inproc::InprocHub;
+pub use tcp::TcpCluster;
+
+use std::time::Duration;
+
+use crate::Result;
+
+/// One worker's connection to the fabric.
+pub trait Endpoint: Send + Sync {
+    /// This worker's id.
+    fn worker_id(&self) -> usize;
+
+    /// Number of workers on the fabric.
+    fn num_workers(&self) -> usize;
+
+    /// Send a frame to `frame.dst` (modeled wire time is charged here).
+    fn send(&self, frame: Frame) -> Result<()>;
+
+    /// Receive the next frame addressed to this worker, waiting up to
+    /// `timeout`. `Ok(None)` on timeout.
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<Frame>>;
+
+    /// Bytes put on the wire by this endpoint (after compression).
+    fn bytes_sent(&self) -> u64;
+
+    /// Frames sent.
+    fn frames_sent(&self) -> u64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TransportKind;
+    use crate::sim::SimContext;
+
+    /// Both back-ends must satisfy the same contract.
+    fn exercise(endpoints: Vec<Box<dyn Endpoint>>) {
+        let n = endpoints.len();
+        assert!(n >= 3);
+        // 0 -> 1, 0 -> 2, 2 -> 1
+        endpoints[0]
+            .send(Frame::data(0, 1, 7, b"zero to one".to_vec()))
+            .unwrap();
+        endpoints[0]
+            .send(Frame::data(0, 2, 7, b"zero to two".to_vec()))
+            .unwrap();
+        endpoints[2]
+            .send(Frame::data(2, 1, 9, b"two to one".to_vec()))
+            .unwrap();
+
+        let t = Duration::from_secs(2);
+        let f = endpoints[2].recv_timeout(t).unwrap().unwrap();
+        assert_eq!((f.src, f.dst, f.channel), (0, 2, 7));
+        assert_eq!(f.payload, b"zero to two");
+
+        let mut got = Vec::new();
+        got.push(endpoints[1].recv_timeout(t).unwrap().unwrap());
+        got.push(endpoints[1].recv_timeout(t).unwrap().unwrap());
+        got.sort_by_key(|f| f.src);
+        assert_eq!(got[0].payload, b"zero to one");
+        assert_eq!(got[1].payload, b"two to one");
+
+        // empty inbox times out cleanly
+        assert!(endpoints[0]
+            .recv_timeout(Duration::from_millis(20))
+            .unwrap()
+            .is_none());
+        assert!(endpoints[0].bytes_sent() > 0);
+        assert_eq!(endpoints[0].frames_sent(), 2);
+    }
+
+    #[test]
+    fn inproc_contract() {
+        let hub = InprocHub::new(3, &SimContext::test(), TransportKind::Tcp);
+        let eps: Vec<Box<dyn Endpoint>> = hub
+            .endpoints()
+            .into_iter()
+            .map(|e| Box::new(e) as Box<dyn Endpoint>)
+            .collect();
+        exercise(eps);
+    }
+
+    #[test]
+    fn tcp_contract() {
+        let cluster = TcpCluster::listen(3, &SimContext::test(), TransportKind::Tcp).unwrap();
+        let eps: Vec<Box<dyn Endpoint>> = cluster
+            .into_endpoints()
+            .into_iter()
+            .map(|e| Box::new(e) as Box<dyn Endpoint>)
+            .collect();
+        exercise(eps);
+    }
+}

@@ -1,0 +1,307 @@
+//! Real loopback-TCP back-end: length-prefixed frames over
+//! `TcpStream`s, one reader thread per peer connection, plus the same
+//! modeled link shaping as [`super::inproc`] so configuration ablations
+//! measure the modeled fabric rather than loopback quirks.
+//!
+//! Topology: worker `i` listens; worker `j > i` dials `i`. After setup
+//! every pair shares one duplex socket.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::config::TransportKind;
+use crate::network::{Endpoint, Frame};
+use crate::sim::{SimContext, Throttle};
+use crate::{Error, Result};
+
+struct Inbox {
+    q: Mutex<VecDeque<Frame>>,
+    ready: Condvar,
+}
+
+struct Peer {
+    /// Write half (reads happen on the reader thread).
+    stream: Mutex<TcpStream>,
+    throttle: Throttle,
+}
+
+/// All endpoints of a single-machine TCP cluster.
+pub struct TcpCluster {
+    endpoints: Vec<TcpEndpoint>,
+}
+
+impl TcpCluster {
+    /// Bind `n` loopback listeners, fully connect them, spawn reader
+    /// threads. Returns the cluster holding one endpoint per worker.
+    pub fn listen(n: usize, ctx: &SimContext, kind: TransportKind) -> Result<TcpCluster> {
+        let spec = match kind {
+            TransportKind::Rdma => ctx
+                .profile
+                .net_rdma
+                .clone()
+                .unwrap_or_else(|| ctx.profile.net_tcp.clone()),
+            _ => ctx.profile.net_tcp.clone(),
+        };
+        let listeners: Vec<TcpListener> = (0..n)
+            .map(|_| TcpListener::bind("127.0.0.1:0"))
+            .collect::<std::io::Result<_>>()?;
+        let addrs: Vec<_> = listeners
+            .iter()
+            .map(|l| l.local_addr())
+            .collect::<std::io::Result<_>>()?;
+
+        // peers[i][j] = socket between i and j (None for i == j)
+        let mut peers: Vec<Vec<Option<TcpStream>>> =
+            (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
+        // Dial from higher ids to lower ids; accept on the listener.
+        // Handshake byte identifies the dialer.
+        for i in 0..n {
+            for j in i + 1..n {
+                let mut s = TcpStream::connect(addrs[i])?;
+                s.write_all(&(j as u32).to_le_bytes())?;
+                peers[j][i] = Some(s);
+            }
+            // accept the n-1-i dialers
+            for _ in i + 1..n {
+                let (mut s, _) = listeners[i].accept()?;
+                let mut id = [0u8; 4];
+                s.read_exact(&mut id)?;
+                let j = u32::from_le_bytes(id) as usize;
+                peers[i][j] = Some(s);
+            }
+        }
+
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut endpoints = Vec::with_capacity(n);
+        for (i, row) in peers.into_iter().enumerate() {
+            let inbox = Arc::new(Inbox { q: Mutex::new(VecDeque::new()), ready: Condvar::new() });
+            let mut peer_handles = Vec::with_capacity(n);
+            for (j, sock) in row.into_iter().enumerate() {
+                match sock {
+                    None => peer_handles.push(None),
+                    Some(s) => {
+                        s.set_nodelay(true).ok();
+                        // reader thread for this connection
+                        let rs = s.try_clone()?;
+                        let inbox2 = inbox.clone();
+                        let stop = shutdown.clone();
+                        std::thread::Builder::new()
+                            .name(format!("theseus-net-{i}-{j}"))
+                            .spawn(move || reader_loop(rs, inbox2, stop))
+                            .map_err(|e| Error::Network(e.to_string()))?;
+                        peer_handles.push(Some(Peer {
+                            stream: Mutex::new(s),
+                            throttle: ctx.throttle(&spec),
+                        }));
+                    }
+                }
+            }
+            endpoints.push(TcpEndpoint {
+                id: i,
+                n,
+                peers: Arc::new(peer_handles),
+                inbox,
+                loopback_throttle: ctx.throttle(&spec),
+                bytes: Arc::new(AtomicU64::new(0)),
+                frames: Arc::new(AtomicU64::new(0)),
+                shutdown: shutdown.clone(), // all endpoints share the flag
+            });
+        }
+        Ok(TcpCluster { endpoints })
+    }
+
+    pub fn into_endpoints(self) -> Vec<TcpEndpoint> {
+        self.endpoints
+    }
+}
+
+fn reader_loop(mut s: TcpStream, inbox: Arc<Inbox>, stop: Arc<AtomicBool>) {
+    s.set_read_timeout(Some(Duration::from_millis(200))).ok();
+    let mut lenbuf = [0u8; 8];
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        match s.read_exact(&mut lenbuf) {
+            Ok(()) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(_) => return, // peer closed
+        }
+        let len = u64::from_le_bytes(lenbuf) as usize;
+        let mut buf = vec![0u8; len];
+        // body read: spin on timeouts until complete
+        let mut off = 0;
+        while off < len {
+            match s.read(&mut buf[off..]) {
+                Ok(0) => return,
+                Ok(k) => off += k,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                }
+                Err(_) => return,
+            }
+        }
+        if let Ok(f) = Frame::decode(&buf) {
+            inbox.q.lock().unwrap().push_back(f);
+            inbox.ready.notify_one();
+        }
+    }
+}
+
+/// One worker's TCP endpoint.
+pub struct TcpEndpoint {
+    id: usize,
+    n: usize,
+    peers: Arc<Vec<Option<Peer>>>,
+    inbox: Arc<Inbox>,
+    /// Self-sends skip the socket but still pay the modeled wire.
+    loopback_throttle: Throttle,
+    bytes: Arc<AtomicU64>,
+    frames: Arc<AtomicU64>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Drop for TcpEndpoint {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+    }
+}
+
+impl Endpoint for TcpEndpoint {
+    fn worker_id(&self) -> usize {
+        self.id
+    }
+
+    fn num_workers(&self) -> usize {
+        self.n
+    }
+
+    fn send(&self, frame: Frame) -> Result<()> {
+        let dst = frame.dst;
+        if dst >= self.n {
+            return Err(Error::Network(format!("no worker {dst}")));
+        }
+        self.bytes.fetch_add(frame.wire_len() as u64, Ordering::Relaxed);
+        self.frames.fetch_add(1, Ordering::Relaxed);
+        if dst == self.id {
+            self.loopback_throttle.acquire(frame.wire_len());
+            self.inbox.q.lock().unwrap().push_back(frame);
+            self.inbox.ready.notify_one();
+            return Ok(());
+        }
+        let peer = self.peers[dst]
+            .as_ref()
+            .ok_or_else(|| Error::Network(format!("no connection to {dst}")))?;
+        peer.throttle.acquire(frame.wire_len());
+        let buf = frame.encode();
+        let mut s = peer.stream.lock().unwrap();
+        s.write_all(&(buf.len() as u64).to_le_bytes())
+            .and_then(|_| s.write_all(&buf))
+            .map_err(|e| Error::Network(format!("send to {dst}: {e}")))
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<Frame>> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut q = self.inbox.q.lock().unwrap();
+        loop {
+            if let Some(f) = q.pop_front() {
+                return Ok(Some(f));
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            let (guard, _) = self.inbox.ready.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+        }
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    fn frames_sent(&self) -> u64 {
+        self.frames.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimContext;
+
+    #[test]
+    fn two_workers_roundtrip() {
+        let c = TcpCluster::listen(2, &SimContext::test(), TransportKind::Tcp).unwrap();
+        let eps = c.into_endpoints();
+        eps[0].send(Frame::data(0, 1, 3, vec![1, 2, 3])).unwrap();
+        eps[1].send(Frame::data(1, 0, 4, vec![4])).unwrap();
+        let a = eps[1].recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+        assert_eq!((a.channel, a.payload.clone()), (3, vec![1, 2, 3]));
+        let b = eps[0].recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+        assert_eq!(b.channel, 4);
+    }
+
+    #[test]
+    fn self_send_via_loopback() {
+        let c = TcpCluster::listen(2, &SimContext::test(), TransportKind::Tcp).unwrap();
+        let eps = c.into_endpoints();
+        eps[1].send(Frame::data(1, 1, 9, vec![7])).unwrap();
+        let f = eps[1].recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
+        assert_eq!(f.payload, vec![7]);
+    }
+
+    #[test]
+    fn large_frames_cross_intact() {
+        let c = TcpCluster::listen(2, &SimContext::test(), TransportKind::Tcp).unwrap();
+        let eps = c.into_endpoints();
+        let payload: Vec<u8> = (0..1_000_000u32).map(|i| i as u8).collect();
+        eps[0].send(Frame::data(0, 1, 0, payload.clone())).unwrap();
+        let f = eps[1].recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        assert_eq!(f.payload, payload);
+    }
+
+    #[test]
+    fn concurrent_sends_interleave_safely() {
+        let c = TcpCluster::listen(3, &SimContext::test(), TransportKind::Tcp).unwrap();
+        let eps = c.into_endpoints();
+        let e1 = Arc::new(eps);
+        let mut handles = Vec::new();
+        for src in [0usize, 2] {
+            let eps = e1.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50u32 {
+                    eps[src]
+                        .send(Frame::data(src, 1, i, vec![src as u8; 100]))
+                        .unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut n = 0;
+        while e1[1]
+            .recv_timeout(Duration::from_millis(300))
+            .unwrap()
+            .is_some()
+        {
+            n += 1;
+        }
+        assert_eq!(n, 100);
+    }
+}

@@ -1,0 +1,295 @@
+//! The Planner (§3): lowers a logical query tree to the distributed
+//! [`PhysicalPlan`] every worker executes.
+//!
+//! The paper uses Apache Calcite; this is the analog for our plan
+//! algebra. The distribution rules are the classic ones:
+//!
+//! * **Join** — both sides are hash-exchanged on their join keys so
+//!   co-partitioned rows meet on one worker (the Adaptive Exchange can
+//!   still decide to broadcast a small side at runtime, §3.2 — the
+//!   *plan* only fixes the pairing; the *mode* is adaptive).
+//! * **Aggregate** — input is hash-exchanged on the group key, then
+//!   each worker aggregates its partition exactly.
+//! * **Sort / Limit** — executed per worker; the Client gather-merges
+//!   (re-sorts / re-limits) worker outputs.
+
+use crate::exec::plan::{AggSpec, ExchangeRole, OpSpec, PhysicalPlan, Pred};
+use crate::Result;
+
+/// Logical query tree (what a SQL frontend would produce).
+#[derive(Clone, Debug)]
+pub enum Logical {
+    Scan { table: String, cols: Vec<String>, pred: Option<Pred> },
+    Filter { input: Box<Logical>, pred: Pred },
+    Project { input: Box<Logical>, cols: Vec<String> },
+    Aggregate { input: Box<Logical>, group_by: String, aggs: Vec<AggSpec> },
+    Join { left: Box<Logical>, right: Box<Logical>, left_on: String, right_on: String, lip: bool },
+    Sort { input: Box<Logical>, by: String, desc: bool },
+    Limit { input: Box<Logical>, n: u64 },
+}
+
+impl Logical {
+    // ------------------------------------------------ builder methods
+
+    pub fn scan(table: impl Into<String>, cols: &[&str]) -> Logical {
+        Logical::Scan {
+            table: table.into(),
+            cols: cols.iter().map(|s| s.to_string()).collect(),
+            pred: None,
+        }
+    }
+
+    /// Scan with a pushed-down predicate (enables row-group pruning;
+    /// the filter itself still runs, exactly once, below).
+    pub fn scan_where(table: impl Into<String>, cols: &[&str], pred: Pred) -> Logical {
+        Logical::Scan {
+            table: table.into(),
+            cols: cols.iter().map(|s| s.to_string()).collect(),
+            pred: Some(pred),
+        }
+    }
+
+    pub fn filter(self, pred: Pred) -> Logical {
+        Logical::Filter { input: Box::new(self), pred }
+    }
+
+    pub fn project(self, cols: &[&str]) -> Logical {
+        Logical::Project {
+            input: Box::new(self),
+            cols: cols.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    pub fn aggregate(self, group_by: impl Into<String>, aggs: Vec<AggSpec>) -> Logical {
+        Logical::Aggregate { input: Box::new(self), group_by: group_by.into(), aggs }
+    }
+
+    /// `self` is the build (left) side.
+    pub fn join(
+        self,
+        right: Logical,
+        left_on: impl Into<String>,
+        right_on: impl Into<String>,
+        lip: bool,
+    ) -> Logical {
+        Logical::Join {
+            left: Box::new(self),
+            right: Box::new(right),
+            left_on: left_on.into(),
+            right_on: right_on.into(),
+            lip,
+        }
+    }
+
+    pub fn sort(self, by: impl Into<String>, desc: bool) -> Logical {
+        Logical::Sort { input: Box::new(self), by: by.into(), desc }
+    }
+
+    pub fn limit(self, n: u64) -> Logical {
+        Logical::Limit { input: Box::new(self), n }
+    }
+}
+
+/// The planner.
+pub struct Planner {
+    /// Skip exchanges entirely on single-worker clusters (they would
+    /// be pure overhead; the paper's single-GPU config does the same).
+    pub num_workers: usize,
+    /// Enable Lookahead Information Passing on joins that ask for it.
+    pub lip_enabled: bool,
+}
+
+impl Planner {
+    pub fn new(num_workers: usize) -> Planner {
+        Planner { num_workers, lip_enabled: true }
+    }
+
+    /// Lower a logical tree to the physical DAG.
+    pub fn plan(&self, logical: &Logical) -> Result<PhysicalPlan> {
+        let mut plan = PhysicalPlan::new();
+        self.lower(logical, &mut plan)?;
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    fn lower(&self, node: &Logical, plan: &mut PhysicalPlan) -> Result<usize> {
+        Ok(match node {
+            Logical::Scan { table, cols, pred } => plan.add(
+                OpSpec::Scan {
+                    table: table.clone(),
+                    cols: cols.clone(),
+                    pred: pred.clone(),
+                },
+                vec![],
+            ),
+            Logical::Filter { input, pred } => {
+                let i = self.lower(input, plan)?;
+                plan.add(OpSpec::Filter { pred: pred.clone() }, vec![i])
+            }
+            Logical::Project { input, cols } => {
+                let i = self.lower(input, plan)?;
+                plan.add(OpSpec::Project { cols: cols.clone() }, vec![i])
+            }
+            Logical::Aggregate { input, group_by, aggs } => {
+                let mut i = self.lower(input, plan)?;
+                if self.num_workers > 1 {
+                    i = plan.add(
+                        OpSpec::Exchange {
+                            key: group_by.clone(),
+                            role: ExchangeRole::Shuffle,
+                        },
+                        vec![i],
+                    );
+                }
+                plan.add(
+                    OpSpec::HashAgg { group_by: group_by.clone(), aggs: aggs.clone() },
+                    vec![i],
+                )
+            }
+            Logical::Join { left, right, left_on, right_on, lip } => {
+                let mut l = self.lower(left, plan)?;
+                let mut r = self.lower(right, plan)?;
+                if self.num_workers > 1 {
+                    // the paper's paired Adaptive Exchanges (§3.2): the
+                    // build side may broadcast when small, in which case
+                    // its probe partner passes through locally.
+                    l = plan.add(
+                        OpSpec::Exchange {
+                            key: left_on.clone(),
+                            role: ExchangeRole::Build,
+                        },
+                        vec![l],
+                    );
+                    r = plan.add(
+                        OpSpec::Exchange {
+                            key: right_on.clone(),
+                            role: ExchangeRole::Probe { partner: l },
+                        },
+                        vec![r],
+                    );
+                }
+                plan.add(
+                    OpSpec::HashJoin {
+                        left_on: left_on.clone(),
+                        right_on: right_on.clone(),
+                        lip: *lip && self.lip_enabled,
+                    },
+                    vec![l, r],
+                )
+            }
+            Logical::Sort { input, by, desc } => {
+                let i = self.lower(input, plan)?;
+                plan.add(OpSpec::Sort { by: by.clone(), desc: *desc }, vec![i])
+            }
+            Logical::Limit { input, n } => {
+                let i = self.lower(input, plan)?;
+                plan.add(OpSpec::Limit { n: *n }, vec![i])
+            }
+        })
+    }
+}
+
+/// Gather-merge spec: how the Client combines per-worker root outputs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GatherMode {
+    /// Plain concatenation.
+    Concat,
+    /// Re-sort the concatenation (root is a Sort).
+    Sort { by: String, desc: bool },
+    /// Re-sort then truncate (Sort under Limit).
+    SortLimit { by: String, desc: bool, n: u64 },
+    /// Truncate only (root is a Limit).
+    Limit { n: u64 },
+}
+
+/// Derive the gather mode from a physical plan's root.
+pub fn gather_mode(plan: &PhysicalPlan) -> GatherMode {
+    let nodes = &plan.nodes;
+    match nodes.last().map(|n| &n.spec) {
+        Some(OpSpec::Sort { by, desc }) => GatherMode::Sort { by: by.clone(), desc: *desc },
+        Some(OpSpec::Limit { n }) => {
+            // Limit over Sort -> SortLimit
+            let input = &nodes[nodes[nodes.len() - 1].inputs[0]];
+            if let OpSpec::Sort { by, desc } = &input.spec {
+                GatherMode::SortLimit { by: by.clone(), desc: *desc, n: *n }
+            } else {
+                GatherMode::Limit { n: *n }
+            }
+        }
+        _ => GatherMode::Concat,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::plan::AggFn;
+
+    fn q() -> Logical {
+        Logical::scan("orders", &["o_orderkey", "o_totalprice"])
+            .join(
+                Logical::scan("lineitem", &["l_orderkey", "l_quantity"])
+                    .filter(Pred::RangeI64 { col: "l_quantity".into(), lo: 0, hi: 25 }),
+                "o_orderkey",
+                "l_orderkey",
+                true,
+            )
+            .aggregate("o_orderkey", vec![AggSpec::new(AggFn::Sum, "l_quantity")])
+            .sort("sum_l_quantity", true)
+            .limit(10)
+    }
+
+    #[test]
+    fn multiworker_plan_inserts_exchanges() {
+        let plan = Planner::new(4).plan(&q()).unwrap();
+        let exchanges = plan
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.spec, OpSpec::Exchange { .. }))
+            .count();
+        assert_eq!(exchanges, 3, "2 join sides + 1 agg:\n{}", plan.render());
+    }
+
+    #[test]
+    fn single_worker_plan_has_no_exchanges() {
+        let plan = Planner::new(1).plan(&q()).unwrap();
+        assert!(
+            !plan.nodes.iter().any(|n| matches!(n.spec, OpSpec::Exchange { .. })),
+            "{}",
+            plan.render()
+        );
+    }
+
+    #[test]
+    fn lip_flag_respects_planner_switch() {
+        let mut p = Planner::new(2);
+        p.lip_enabled = false;
+        let plan = p.plan(&q()).unwrap();
+        let lip_on = plan.nodes.iter().any(
+            |n| matches!(n.spec, OpSpec::HashJoin { lip: true, .. }),
+        );
+        assert!(!lip_on);
+    }
+
+    #[test]
+    fn gather_modes() {
+        let plan = Planner::new(2).plan(&q()).unwrap();
+        assert_eq!(
+            gather_mode(&plan),
+            GatherMode::SortLimit { by: "sum_l_quantity".into(), desc: true, n: 10 }
+        );
+        let plain = Planner::new(2)
+            .plan(&Logical::scan("t", &["a"]))
+            .unwrap();
+        assert_eq!(gather_mode(&plain), GatherMode::Concat);
+    }
+
+    #[test]
+    fn plans_validate_and_roundtrip() {
+        for w in [1, 2, 8] {
+            let plan = Planner::new(w).plan(&q()).unwrap();
+            let buf = plan.encode();
+            assert_eq!(PhysicalPlan::decode(&buf).unwrap(), plan);
+        }
+    }
+}

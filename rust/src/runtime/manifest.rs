@@ -1,0 +1,312 @@
+//! Parser for `artifacts/manifest.tsv` — the L2→L3 contract.
+//!
+//! Grammar (tab-separated):
+//! ```text
+//! # theseus AOT manifest\tbatch_rows=8192\t... (header params)
+//! <stage>\t<in>;<in>;...\t<out>;<out>;...
+//! ```
+//! where each I/O spec is `dtype[d0,d1,...]`, e.g. `f32[8192]`,
+//! `i32[16]`, `u32[16384]`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::{Error, Result};
+
+/// Element dtype of a stage argument/result.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SpecDType {
+    F32,
+    F64,
+    I32,
+    I64,
+    U32,
+    U64,
+}
+
+impl SpecDType {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => SpecDType::F32,
+            "f64" => SpecDType::F64,
+            "i32" => SpecDType::I32,
+            "i64" => SpecDType::I64,
+            "u32" => SpecDType::U32,
+            "u64" => SpecDType::U64,
+            _ => return Err(Error::Format(format!("bad spec dtype '{s}'"))),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpecDType::F32 => "f32",
+            SpecDType::F64 => "f64",
+            SpecDType::I32 => "i32",
+            SpecDType::I64 => "i64",
+            SpecDType::U32 => "u32",
+            SpecDType::U64 => "u64",
+        }
+    }
+
+    pub fn width(self) -> usize {
+        match self {
+            SpecDType::F32 | SpecDType::I32 | SpecDType::U32 => 4,
+            _ => 8,
+        }
+    }
+}
+
+/// `dtype[dims]` — one argument or result.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShapeSpec {
+    pub dtype: SpecDType,
+    pub dims: Vec<usize>,
+}
+
+impl ShapeSpec {
+    pub fn parse(s: &str) -> Result<Self> {
+        let open = s
+            .find('[')
+            .ok_or_else(|| Error::Format(format!("bad shape spec '{s}'")))?;
+        if !s.ends_with(']') {
+            return Err(Error::Format(format!("bad shape spec '{s}'")));
+        }
+        let dtype = SpecDType::parse(&s[..open])?;
+        let dims_str = &s[open + 1..s.len() - 1];
+        let dims = if dims_str.is_empty() {
+            Vec::new()
+        } else {
+            dims_str
+                .split(',')
+                .map(|d| {
+                    d.trim()
+                        .parse::<usize>()
+                        .map_err(|e| Error::Format(format!("bad dim '{d}': {e}")))
+                })
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(ShapeSpec { dtype, dims })
+    }
+
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.elems() * self.dtype.width()
+    }
+}
+
+impl std::fmt::Display for ShapeSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let dims: Vec<String> = self.dims.iter().map(|d| d.to_string()).collect();
+        write!(f, "{}[{}]", self.dtype.name(), dims.join(","))
+    }
+}
+
+/// One stage's signature.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StageSpec {
+    pub name: String,
+    pub inputs: Vec<ShapeSpec>,
+    pub outputs: Vec<ShapeSpec>,
+}
+
+impl StageSpec {
+    /// Path of this stage's HLO artifact under `dir`.
+    pub fn hlo_path(&self, dir: &Path) -> PathBuf {
+        dir.join(format!("{}.hlo.txt", self.name))
+    }
+}
+
+/// The parsed manifest: header constants + stage table.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch_rows: usize,
+    pub block_rows: usize,
+    pub num_parts: usize,
+    pub num_buckets: usize,
+    pub bloom_bits: usize,
+    pub stages: BTreeMap<String, StageSpec>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.tsv`.
+    pub fn load(dir: impl Into<PathBuf>) -> Result<Manifest> {
+        let dir = dir.into();
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Config(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Locate the artifacts dir: `$THESEUS_ARTIFACTS` or `./artifacts`
+    /// (walking up from cwd so tests and benches work from any subdir).
+    pub fn discover() -> Result<Manifest> {
+        if let Ok(d) = std::env::var("THESEUS_ARTIFACTS") {
+            return Self::load(d);
+        }
+        let mut dir = std::env::current_dir()?;
+        loop {
+            let cand = dir.join("artifacts");
+            if cand.join("manifest.tsv").exists() {
+                return Self::load(cand);
+            }
+            match dir.parent() {
+                Some(p) => dir = p.to_path_buf(),
+                None => {
+                    return Err(Error::Config(
+                        "no artifacts/manifest.tsv found (run `make artifacts`)".into(),
+                    ))
+                }
+            }
+        }
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let mut lines = text.lines();
+        let header = lines
+            .next()
+            .ok_or_else(|| Error::Format("empty manifest".into()))?;
+        if !header.starts_with('#') {
+            return Err(Error::Format("manifest missing header line".into()));
+        }
+        let mut params: BTreeMap<&str, usize> = BTreeMap::new();
+        for tok in header.split('\t').skip(1) {
+            if let Some((k, v)) = tok.split_once('=') {
+                let v = v
+                    .trim()
+                    .parse::<usize>()
+                    .map_err(|e| Error::Format(format!("header param {k}: {e}")))?;
+                params.insert(k, v);
+            }
+        }
+        let need = |k: &str| -> Result<usize> {
+            params
+                .get(k)
+                .copied()
+                .ok_or_else(|| Error::Format(format!("manifest header missing {k}")))
+        };
+
+        let mut stages = BTreeMap::new();
+        for (i, line) in lines.enumerate() {
+            if line.trim().is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut cols = line.split('\t');
+            let (name, ins, outs) = match (cols.next(), cols.next(), cols.next()) {
+                (Some(a), Some(b), Some(c)) => (a, b, c),
+                _ => {
+                    return Err(Error::Format(format!(
+                        "manifest line {} malformed: '{line}'",
+                        i + 2
+                    )))
+                }
+            };
+            let parse_list = |s: &str| -> Result<Vec<ShapeSpec>> {
+                s.split(';')
+                    .filter(|t| !t.is_empty())
+                    .map(ShapeSpec::parse)
+                    .collect()
+            };
+            stages.insert(
+                name.to_string(),
+                StageSpec {
+                    name: name.to_string(),
+                    inputs: parse_list(ins)?,
+                    outputs: parse_list(outs)?,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir,
+            batch_rows: need("batch_rows")?,
+            block_rows: need("block_rows")?,
+            num_parts: need("num_parts")?,
+            num_buckets: need("num_buckets")?,
+            bloom_bits: need("bloom_bits")?,
+            stages,
+        })
+    }
+
+    pub fn stage(&self, name: &str) -> Result<&StageSpec> {
+        self.stages
+            .get(name)
+            .ok_or_else(|| Error::Plan(format!("no AOT stage named '{name}'")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "# theseus AOT manifest\tbatch_rows=8192\tblock_rows=1024\tnum_parts=16\tnum_buckets=1024\tbloom_bits=16384\n\
+        filter_range_f32\tf32[8192];f32[1];f32[1];i32[8192]\ti32[8192]\n\
+        hash_partition\ti64[8192];i32[8192]\ti32[8192];i32[16]\n";
+
+    #[test]
+    fn parses_header_and_stages() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.batch_rows, 8192);
+        assert_eq!(m.num_parts, 16);
+        assert_eq!(m.stages.len(), 2);
+        let s = m.stage("hash_partition").unwrap();
+        assert_eq!(s.inputs.len(), 2);
+        assert_eq!(s.outputs[1].dims, vec![16]);
+        assert_eq!(s.outputs[1].dtype, SpecDType::I32);
+    }
+
+    #[test]
+    fn shape_spec_grammar() {
+        let s = ShapeSpec::parse("f32[8192]").unwrap();
+        assert_eq!(s.elems(), 8192);
+        assert_eq!(s.byte_len(), 8192 * 4);
+        let s = ShapeSpec::parse("i64[4,8]").unwrap();
+        assert_eq!(s.dims, vec![4, 8]);
+        assert_eq!(s.elems(), 32);
+        let s = ShapeSpec::parse("u32[]").unwrap();
+        assert_eq!(s.elems(), 1); // scalar: empty product = 1
+        assert!(ShapeSpec::parse("f32").is_err());
+        assert!(ShapeSpec::parse("q8[4]").is_err());
+        assert!(ShapeSpec::parse("f32[x]").is_err());
+    }
+
+    #[test]
+    fn display_roundtrips() {
+        for s in ["f32[8192]", "i32[16]", "i64[4,8]"] {
+            assert_eq!(ShapeSpec::parse(s).unwrap().to_string(), s);
+        }
+    }
+
+    #[test]
+    fn missing_stage_is_plan_error() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert!(m.stage("nope").is_err());
+    }
+
+    #[test]
+    fn malformed_lines_rejected() {
+        assert!(Manifest::parse("", PathBuf::new()).is_err());
+        assert!(Manifest::parse("no header\n", PathBuf::new()).is_err());
+        let bad = "# m\tbatch_rows=1\tblock_rows=1\tnum_parts=1\tnum_buckets=1\tbloom_bits=1\nonly_name\n";
+        assert!(Manifest::parse(bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads() {
+        // Only runs when artifacts exist (after `make artifacts`).
+        if let Ok(m) = Manifest::discover() {
+            assert!(m.stages.contains_key("filter_range_f32"));
+            assert!(m.stages.contains_key("bucket_preagg"));
+            for s in m.stages.values() {
+                assert!(s.hlo_path(&m.dir).exists(), "{} artifact missing", s.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! PJRT runtime: loads the AOT HLO artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! This is the L3 ↔ L2 bridge. Python never runs at query time: the
+//! artifacts directory is the *only* interface between the layers —
+//! `manifest.tsv` describes every stage's I/O signature and the global
+//! shape constants (batch rows, partition fanout, ...), and each
+//! `<stage>.hlo.txt` is an HLO-text module compiled once per process by
+//! [`KernelRegistry`] on the PJRT CPU client (`xla` crate).
+//!
+//! HLO *text* — not a serialized `HloModuleProto` — is the interchange
+//! format because jax ≥ 0.5 emits protos with 64-bit instruction ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+pub mod manifest;
+pub mod registry;
+pub mod stage;
+
+pub use manifest::{Manifest, ShapeSpec, SpecDType, StageSpec};
+pub use registry::KernelRegistry;
+pub use stage::Value;

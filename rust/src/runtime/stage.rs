@@ -1,0 +1,221 @@
+//! Typed values crossing the L3 → PJRT boundary.
+//!
+//! [`Value`] is the host-side mirror of a stage argument/result. The
+//! registry turns it into an `xla::Literal` (padding to the stage's
+//! static shape — HLO is fixed-shape, so the coordinator pads every
+//! batch to `batch_rows` and carries the true row count in the mask,
+//! §3.1) and back.
+
+use crate::runtime::manifest::{ShapeSpec, SpecDType};
+use crate::types::ColumnData;
+use crate::{Error, Result};
+
+/// A typed host buffer.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+    U32(Vec<u32>),
+    U64(Vec<u64>),
+}
+
+impl Value {
+    pub fn dtype(&self) -> SpecDType {
+        match self {
+            Value::F32(_) => SpecDType::F32,
+            Value::F64(_) => SpecDType::F64,
+            Value::I32(_) => SpecDType::I32,
+            Value::I64(_) => SpecDType::I64,
+            Value::U32(_) => SpecDType::U32,
+            Value::U64(_) => SpecDType::U64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Value::F32(v) => v.len(),
+            Value::F64(v) => v.len(),
+            Value::I32(v) => v.len(),
+            Value::I64(v) => v.len(),
+            Value::U32(v) => v.len(),
+            Value::U64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.len() * self.dtype().width()
+    }
+
+    /// Scalar constructors (stage parameters like filter bounds travel
+    /// as 1-element arrays — see model.py's `_f32(1)` specs).
+    pub fn scalar_f32(v: f32) -> Value {
+        Value::F32(vec![v])
+    }
+
+    pub fn scalar_i64(v: i64) -> Value {
+        Value::I64(vec![v])
+    }
+
+    /// Pad (with zeros) or reject to match `spec` exactly.
+    pub fn conform(&self, spec: &ShapeSpec) -> Result<Value> {
+        if self.dtype() != spec.dtype {
+            return Err(Error::Plan(format!(
+                "stage arg dtype mismatch: have {}, want {}",
+                self.dtype().name(),
+                spec.dtype.name()
+            )));
+        }
+        let want = spec.elems();
+        let have = self.len();
+        if have == want {
+            return Ok(self.clone());
+        }
+        if have > want {
+            return Err(Error::Plan(format!(
+                "stage arg too long: have {have}, want {want} (split the batch)"
+            )));
+        }
+        macro_rules! pad {
+            ($v:expr, $variant:ident) => {{
+                let mut v = $v.clone();
+                v.resize(want, Default::default());
+                Value::$variant(v)
+            }};
+        }
+        Ok(match self {
+            Value::F32(v) => pad!(v, F32),
+            Value::F64(v) => pad!(v, F64),
+            Value::I32(v) => pad!(v, I32),
+            Value::I64(v) => pad!(v, I64),
+            Value::U32(v) => pad!(v, U32),
+            Value::U64(v) => pad!(v, U64),
+        })
+    }
+
+    /// Truncate to `n` leading elements (drop batch padding on output).
+    pub fn truncate(self, n: usize) -> Value {
+        macro_rules! trunc {
+            ($v:expr, $variant:ident) => {{
+                let mut v = $v;
+                v.truncate(n);
+                Value::$variant(v)
+            }};
+        }
+        match self {
+            Value::F32(v) => trunc!(v, F32),
+            Value::F64(v) => trunc!(v, F64),
+            Value::I32(v) => trunc!(v, I32),
+            Value::I64(v) => trunc!(v, I64),
+            Value::U32(v) => trunc!(v, U32),
+            Value::U64(v) => trunc!(v, U64),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Value::I32(v) => Ok(v),
+            _ => Err(Error::internal("value is not i32")),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32(v) => Ok(v),
+            _ => Err(Error::internal("value is not f32")),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<&[i64]> {
+        match self {
+            Value::I64(v) => Ok(v),
+            _ => Err(Error::internal("value is not i64")),
+        }
+    }
+
+    pub fn as_u32(&self) -> Result<&[u32]> {
+        match self {
+            Value::U32(v) => Ok(v),
+            _ => Err(Error::internal("value is not u32")),
+        }
+    }
+}
+
+/// Column → stage argument (device batches feed kernels directly).
+impl From<&ColumnData> for Value {
+    fn from(c: &ColumnData) -> Value {
+        match c {
+            ColumnData::I64(v) => Value::I64(v.clone()),
+            ColumnData::F32(v) => Value::F32(v.clone()),
+            ColumnData::F64(v) => Value::F64(v.clone()),
+        }
+    }
+}
+
+impl From<Value> for ColumnData {
+    fn from(v: Value) -> ColumnData {
+        match v {
+            Value::I64(v) => ColumnData::I64(v),
+            Value::F32(v) => ColumnData::F32(v),
+            Value::F64(v) => ColumnData::F64(v),
+            Value::I32(v) => ColumnData::I64(v.into_iter().map(i64::from).collect()),
+            Value::U32(v) => ColumnData::I64(v.into_iter().map(i64::from).collect()),
+            Value::U64(v) => ColumnData::I64(v.into_iter().map(|x| x as i64).collect()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(d: SpecDType, n: usize) -> ShapeSpec {
+        ShapeSpec { dtype: d, dims: vec![n] }
+    }
+
+    #[test]
+    fn conform_pads_with_zeros() {
+        let v = Value::F32(vec![1.0, 2.0]);
+        let c = v.conform(&spec(SpecDType::F32, 4)).unwrap();
+        assert_eq!(c, Value::F32(vec![1.0, 2.0, 0.0, 0.0]));
+    }
+
+    #[test]
+    fn conform_rejects_dtype_and_overflow() {
+        let v = Value::I64(vec![1, 2, 3]);
+        assert!(v.conform(&spec(SpecDType::F32, 4)).is_err());
+        assert!(v.conform(&spec(SpecDType::I64, 2)).is_err());
+        assert_eq!(v.conform(&spec(SpecDType::I64, 3)).unwrap(), v);
+    }
+
+    #[test]
+    fn truncate_drops_padding() {
+        let v = Value::I32(vec![1, 2, 3, 0, 0]);
+        assert_eq!(v.truncate(3), Value::I32(vec![1, 2, 3]));
+    }
+
+    #[test]
+    fn column_roundtrip() {
+        let c = ColumnData::F32(vec![1.5, 2.5]);
+        let v = Value::from(&c);
+        assert_eq!(v, Value::F32(vec![1.5, 2.5]));
+        assert_eq!(ColumnData::from(v), c);
+    }
+
+    #[test]
+    fn i32_value_widens_to_i64_column() {
+        let v = Value::I32(vec![1, -2]);
+        assert_eq!(ColumnData::from(v), ColumnData::I64(vec![1, -2]));
+    }
+
+    #[test]
+    fn byte_len_tracks_width() {
+        assert_eq!(Value::F32(vec![0.0; 8]).byte_len(), 32);
+        assert_eq!(Value::I64(vec![0; 8]).byte_len(), 64);
+    }
+}

@@ -1,0 +1,121 @@
+//! Cloud cost model for the Figure-6 / Table-1 reproduction.
+//!
+//! Instance rates are the paper-era AWS on-demand prices implied by
+//! Table 1: g6.4xlarge (Theseus) ≈ $1.3234/h, r7gd.12xlarge (Photon
+//! comparator) ≈ $3.2664/h — chosen so the table's cluster totals
+//! ($10.59/h for 8 nodes, $9.80/h for 3 nodes, ...) reproduce exactly.
+
+/// One instance type.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct InstanceSpec {
+    pub name: &'static str,
+    pub vcpus: u32,
+    pub mem_gib: u32,
+    pub gpu_mem_gib: u32,
+    pub usd_per_hour: f64,
+}
+
+/// g6.4xlarge: 16 vCPU, 64 GiB, one L4 (24 GiB), 25 Gb/s.
+pub const G6_4XLARGE: InstanceSpec = InstanceSpec {
+    name: "g6.4xlarge",
+    vcpus: 16,
+    mem_gib: 64,
+    gpu_mem_gib: 24,
+    usd_per_hour: 1.3234,
+};
+
+/// r7gd.12xlarge: 48 vCPU, 384 GiB, no GPU, 22.5 Gb/s.
+pub const R7GD_12XLARGE: InstanceSpec = InstanceSpec {
+    name: "r7gd.12xlarge",
+    vcpus: 48,
+    mem_gib: 384,
+    gpu_mem_gib: 0,
+    usd_per_hour: 3.2664,
+};
+
+/// A rented cluster.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    pub instance: InstanceSpec,
+    pub nodes: u32,
+}
+
+impl CostModel {
+    pub fn new(instance: InstanceSpec, nodes: u32) -> Self {
+        CostModel { instance, nodes }
+    }
+
+    /// Cluster $/hour (Table 1 "Cost" column).
+    pub fn usd_per_hour(&self) -> f64 {
+        self.instance.usd_per_hour * self.nodes as f64
+    }
+
+    /// Total memory (GPU + host) in GiB (Table 1 "Memory" column).
+    pub fn total_memory_gib(&self) -> u64 {
+        (self.instance.mem_gib as u64 + self.instance.gpu_mem_gib as u64)
+            * self.nodes as u64
+    }
+
+    /// Dollars for a run of `secs` seconds.
+    pub fn usd_for_run(&self, secs: f64) -> f64 {
+        self.usd_per_hour() * secs / 3600.0
+    }
+
+    /// Performance normalized against cost: queries-per-dollar style
+    /// metric the paper's "X faster at cost parity" derives from.
+    /// Returns (other_runtime * other_cost_rate) / (self_runtime *
+    /// self_cost_rate) — >1 means `self` wins at cost parity.
+    pub fn speedup_at_cost_parity(
+        &self,
+        self_secs: f64,
+        other: &CostModel,
+        other_secs: f64,
+    ) -> f64 {
+        (other_secs * other.usd_per_hour()) / (self_secs * self.usd_per_hour())
+    }
+}
+
+/// The paper's Table-1 cluster pairs (Theseus nodes, Photon nodes).
+pub const TABLE1_PAIRS: [(u32, u32); 3] = [(8, 3), (16, 6), (32, 12)];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_costs_reproduce() {
+        // Paper Table 1: 8 nodes -> 10.59 $/h; 16 -> 21.17; 32 -> 42.34.
+        for (nodes, want) in [(8u32, 10.59f64), (16, 21.17), (32, 42.34)] {
+            let c = CostModel::new(G6_4XLARGE, nodes);
+            assert!((c.usd_per_hour() - want).abs() < 0.01, "{nodes}: {}", c.usd_per_hour());
+        }
+        // Photon: 3 -> 9.80; 6 -> 19.60; 12 -> 39.19 (.8/h rounding in paper).
+        for (nodes, want) in [(3u32, 9.80f64), (6, 19.60), (12, 39.20)] {
+            let c = CostModel::new(R7GD_12XLARGE, nodes);
+            assert!((c.usd_per_hour() - want).abs() < 0.015, "{nodes}: {}", c.usd_per_hour());
+        }
+    }
+
+    #[test]
+    fn table1_memory_reproduces() {
+        // Theseus 8 nodes: 704 GiB; Photon 3 nodes: 1152 GiB.
+        assert_eq!(CostModel::new(G6_4XLARGE, 8).total_memory_gib(), 704);
+        assert_eq!(CostModel::new(R7GD_12XLARGE, 3).total_memory_gib(), 1152);
+        // Paper: "the Databricks clusters have a 63% higher memory capacity"
+        let t = CostModel::new(G6_4XLARGE, 32).total_memory_gib() as f64;
+        let p = CostModel::new(R7GD_12XLARGE, 12).total_memory_gib() as f64;
+        assert!((p / t - 1.63).abs() < 0.02, "{}", p / t);
+    }
+
+    #[test]
+    fn cost_parity_speedup() {
+        let a = CostModel::new(G6_4XLARGE, 8);
+        let b = CostModel::new(R7GD_12XLARGE, 3);
+        // equal runtimes, near-equal rates -> ratio near 1
+        let s = a.speedup_at_cost_parity(100.0, &b, 100.0);
+        assert!((s - 9.80 / 10.59).abs() < 0.01);
+        // self twice as fast -> roughly 2x at parity
+        let s = a.speedup_at_cost_parity(50.0, &b, 100.0);
+        assert!(s > 1.8 && s < 2.0);
+    }
+}

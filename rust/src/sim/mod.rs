@@ -1,0 +1,166 @@
+//! Hardware simulation: calibrated latency/bandwidth models standing in
+//! for the paper's testbed (DESIGN.md §Hardware-Adaptation).
+//!
+//! Everything the coordinator does is *real* (threads, queues, memcpy,
+//! PJRT executions, spill files); only the raw device/wire speeds are
+//! modeled. Each hardware resource is a [`Throttle`] — a shared link
+//! that serializes modeled occupancy, so concurrent transfers contend
+//! exactly as they would on a PCIe lane, a NIC, or an S3 connection.
+//!
+//! [`HwProfile`] encodes the paper's two testbeds:
+//!  * `on_prem()` — DGX-class node: A100s on PCIe4/NVLink, 200 Gb/s IB
+//!    (config D/E enable "RDMA": higher bw, lower per-message cost),
+//!    WEKA-like storage.
+//!  * `cloud()`   — g6.4xlarge: one L4, 25 Gb/s NIC, S3-like object
+//!    store (high per-request latency, per-connection bandwidth caps).
+//!
+//! `time_scale` uniformly scales every modeled sleep so benches can
+//! compress hours of modeled I/O into seconds without changing ratios.
+
+pub mod cost;
+pub mod throttle;
+
+pub use cost::CostModel;
+pub use throttle::Throttle;
+
+use std::sync::Arc;
+
+/// Bytes-per-second convenience constructors.
+pub const KIB: u64 = 1024;
+pub const MIB: u64 = 1024 * KIB;
+pub const GIB: u64 = 1024 * MIB;
+
+/// One modeled interconnect or storage endpoint.
+#[derive(Clone, Debug)]
+pub struct LinkSpec {
+    /// Fixed per-operation latency (request setup, kernel launch, ...).
+    pub latency_us: u64,
+    /// Sustained bandwidth in bytes/second.
+    pub bytes_per_sec: u64,
+}
+
+impl LinkSpec {
+    pub const fn new(latency_us: u64, bytes_per_sec: u64) -> Self {
+        LinkSpec { latency_us, bytes_per_sec }
+    }
+}
+
+/// The modeled hardware of one worker node + its shared fabric.
+#[derive(Clone, Debug)]
+pub struct HwProfile {
+    pub name: &'static str,
+    /// Host <-> device transfers (PCIe; pinned vs pageable modeled by a
+    /// bandwidth multiplier in `memory::pinned`).
+    pub pcie: LinkSpec,
+    /// Worker <-> worker fabric, TCP mode (IPoIB on-prem, VPC in cloud).
+    pub net_tcp: LinkSpec,
+    /// Worker <-> worker fabric, RDMA mode (GPUDirect; on-prem only).
+    pub net_rdma: Option<LinkSpec>,
+    /// Object-store / distributed-FS reads, per connection.
+    pub storage: LinkSpec,
+    /// Max concurrent storage connections per worker.
+    pub storage_conns: usize,
+    /// Pageable-host copy penalty: pinned-pool transfers run at full
+    /// `pcie` bandwidth, pageable at `pcie / pageable_penalty`
+    /// (CUDA best-practices §10: pageable copies stage through an
+    /// internal pinned buffer at roughly half throughput).
+    pub pageable_penalty: f64,
+    /// Device compute throughput proxy (bytes of column data processed
+    /// per second per stream) — used only to pace the modeled portion of
+    /// compute tasks that the PJRT CPU path under-costs.
+    pub device_compute: LinkSpec,
+}
+
+impl HwProfile {
+    /// DGX-A100-like on-prem node on 200 Gb/s InfiniBand + WEKA (§4).
+    pub fn on_prem() -> Self {
+        HwProfile {
+            name: "on-prem",
+            pcie: LinkSpec::new(10, 24 * GIB),
+            // IPoIB TCP: high bandwidth but per-message software cost.
+            net_tcp: LinkSpec::new(60, 6 * GIB),
+            // GPUDirect RDMA: near-wire 200 Gb/s, tiny launch cost.
+            net_rdma: Some(LinkSpec::new(8, 22 * GIB)),
+            // WEKA + GDS: parallel high-throughput reads.
+            storage: LinkSpec::new(200, 2 * GIB),
+            storage_conns: 8,
+            pageable_penalty: 2.2,
+            device_compute: LinkSpec::new(15, 40 * GIB),
+        }
+    }
+
+    /// AWS g6.4xlarge-like cloud node (one L4, 25 Gb/s NIC, S3).
+    pub fn cloud() -> Self {
+        HwProfile {
+            name: "cloud",
+            pcie: LinkSpec::new(12, 12 * GIB),
+            net_tcp: LinkSpec::new(80, 2 * GIB + GIB / 2), // ~25 Gb/s usable minus overhead
+            net_rdma: None,
+            // S3: ~15 ms first byte, ~90 MB/s per connection.
+            storage: LinkSpec::new(15_000, 90 * MIB),
+            storage_conns: 16,
+            pageable_penalty: 2.2,
+            device_compute: LinkSpec::new(25, 12 * GIB),
+        }
+    }
+
+    /// Tiny profile for unit tests: negligible latencies so tests run
+    /// fast but the code paths (throttles, pools) are exercised.
+    pub fn test() -> Self {
+        HwProfile {
+            name: "test",
+            pcie: LinkSpec::new(0, 64 * GIB),
+            net_tcp: LinkSpec::new(0, 64 * GIB),
+            net_rdma: Some(LinkSpec::new(0, 64 * GIB)),
+            storage: LinkSpec::new(0, 64 * GIB),
+            storage_conns: 4,
+            pageable_penalty: 2.0,
+            device_compute: LinkSpec::new(0, 64 * GIB),
+        }
+    }
+}
+
+/// Shared simulation context: profile + global time scale.
+#[derive(Clone)]
+pub struct SimContext {
+    pub profile: Arc<HwProfile>,
+    /// Multiplier on every modeled sleep (1.0 = model faithfully;
+    /// 0.0 = disable modeled delays, pure functional mode).
+    pub time_scale: f64,
+}
+
+impl SimContext {
+    pub fn new(profile: HwProfile, time_scale: f64) -> Self {
+        SimContext { profile: Arc::new(profile), time_scale }
+    }
+
+    pub fn test() -> Self {
+        SimContext::new(HwProfile::test(), 0.0)
+    }
+
+    /// Build the shared throttle for a link spec under this context.
+    pub fn throttle(&self, spec: &LinkSpec) -> Throttle {
+        Throttle::new(spec.clone(), self.time_scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_have_sane_orderings() {
+        let op = HwProfile::on_prem();
+        let cl = HwProfile::cloud();
+        // RDMA beats TCP on-prem; storage latency is worse in the cloud.
+        assert!(op.net_rdma.as_ref().unwrap().bytes_per_sec > op.net_tcp.bytes_per_sec);
+        assert!(cl.storage.latency_us > op.storage.latency_us * 10);
+        assert!(cl.net_rdma.is_none());
+    }
+
+    #[test]
+    fn test_context_is_instant() {
+        let ctx = SimContext::test();
+        assert_eq!(ctx.time_scale, 0.0);
+    }
+}

@@ -1,0 +1,292 @@
+//! Compression codecs for data pages (file format) and network frames
+//! (Network Executor, §3.3.5: "It can compress batches before sending
+//! with a variety of formats").
+//!
+//! * `Zstd` — the paper's input format ("Parquet files compressed with
+//!   Zstandard") and its network compression default.
+//! * `Lz4Like` — a from-scratch byte-oriented LZ with greedy matching:
+//!   much faster than zstd at a worse ratio; the knob the paper turns
+//!   when CPU cycles become the bottleneck after enabling RDMA (Fig 4
+//!   D→E is "free up compression cycles").
+//! * `None` — passthrough.
+
+use crate::{Error, Result};
+
+/// Available codecs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Codec {
+    None,
+    Zstd { level: i32 },
+    Lz4Like,
+}
+
+impl Default for Codec {
+    fn default() -> Self {
+        Codec::Zstd { level: 1 }
+    }
+}
+
+impl Codec {
+    pub fn tag(self) -> u8 {
+        match self {
+            Codec::None => 0,
+            Codec::Zstd { .. } => 1,
+            Codec::Lz4Like => 2,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Result<Codec> {
+        Ok(match t {
+            0 => Codec::None,
+            1 => Codec::Zstd { level: 1 },
+            2 => Codec::Lz4Like,
+            _ => return Err(Error::Format(format!("bad codec tag {t}"))),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::None => "none",
+            Codec::Zstd { .. } => "zstd",
+            Codec::Lz4Like => "lz4like",
+        }
+    }
+
+    /// Compress `data`; output is self-describing (tag + original len).
+    pub fn compress(self, data: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(data.len() / 2 + 16);
+        out.push(self.tag());
+        out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        match self {
+            Codec::None => out.extend_from_slice(data),
+            Codec::Zstd { level } => {
+                let c = zstd::bulk::compress(data, level).expect("zstd compress");
+                out.extend_from_slice(&c);
+            }
+            Codec::Lz4Like => lz4like_compress(data, &mut out),
+        }
+        out
+    }
+
+    /// Decompress a buffer produced by [`Codec::compress`] (any codec —
+    /// the tag travels with the data, so reader config never needs to
+    /// match writer config).
+    pub fn decompress(data: &[u8]) -> Result<Vec<u8>> {
+        if data.len() < 9 {
+            return Err(Error::Format("compressed buffer too short".into()));
+        }
+        let tag = data[0];
+        let orig = u64::from_le_bytes(data[1..9].try_into().unwrap()) as usize;
+        let body = &data[9..];
+        match Codec::from_tag(tag)? {
+            Codec::None => Ok(body.to_vec()),
+            Codec::Zstd { .. } => zstd::bulk::decompress(body, orig)
+                .map_err(|e| Error::Format(format!("zstd: {e}"))),
+            Codec::Lz4Like => lz4like_decompress(body, orig),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// LZ4-like codec: greedy hash-chain LZ with 64 KiB window.
+// Token stream: [literal_len: varint][match_len: varint][offset: u16]
+// match_len == 0 terminates with trailing literals.
+// ---------------------------------------------------------------------
+
+const MIN_MATCH: usize = 4;
+const HASH_BITS: usize = 14;
+
+#[inline]
+fn hash4(b: &[u8]) -> usize {
+    let v = u32::from_le_bytes(b[..4].try_into().unwrap());
+    ((v.wrapping_mul(2654435761)) >> (32 - HASH_BITS)) as usize
+}
+
+fn put_varint(out: &mut Vec<u8>, mut v: usize) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            break;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn get_varint(data: &[u8], pos: &mut usize) -> Result<usize> {
+    let mut v = 0usize;
+    let mut shift = 0;
+    loop {
+        let b = *data
+            .get(*pos)
+            .ok_or_else(|| Error::Format("varint truncated".into()))?;
+        *pos += 1;
+        v |= ((b & 0x7f) as usize) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+        if shift > 56 {
+            return Err(Error::Format("varint overflow".into()));
+        }
+    }
+}
+
+fn lz4like_compress(data: &[u8], out: &mut Vec<u8>) {
+    let n = data.len();
+    let mut table = vec![usize::MAX; 1 << HASH_BITS];
+    let mut i = 0usize;
+    let mut lit_start = 0usize;
+    while i + MIN_MATCH <= n {
+        let h = hash4(&data[i..]);
+        let cand = table[h];
+        table[h] = i;
+        if cand != usize::MAX
+            && i - cand <= u16::MAX as usize
+            && data[cand..cand + MIN_MATCH] == data[i..i + MIN_MATCH]
+        {
+            // extend the match
+            let mut len = MIN_MATCH;
+            while i + len < n && data[cand + len] == data[i + len] && len < 0xFFFF {
+                len += 1;
+            }
+            put_varint(out, i - lit_start);
+            out.extend_from_slice(&data[lit_start..i]);
+            put_varint(out, len);
+            out.extend_from_slice(&((i - cand) as u16).to_le_bytes());
+            i += len;
+            lit_start = i;
+        } else {
+            i += 1;
+        }
+    }
+    // trailing literals with terminator (match_len 0)
+    put_varint(out, n - lit_start);
+    out.extend_from_slice(&data[lit_start..]);
+    put_varint(out, 0);
+}
+
+fn lz4like_decompress(data: &[u8], orig: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(orig);
+    let mut pos = 0usize;
+    loop {
+        let lit = get_varint(data, &mut pos)?;
+        if pos + lit > data.len() {
+            return Err(Error::Format("lz4like literal overrun".into()));
+        }
+        out.extend_from_slice(&data[pos..pos + lit]);
+        pos += lit;
+        let mlen = get_varint(data, &mut pos)?;
+        if mlen == 0 {
+            break;
+        }
+        if pos + 2 > data.len() {
+            return Err(Error::Format("lz4like offset truncated".into()));
+        }
+        let off = u16::from_le_bytes(data[pos..pos + 2].try_into().unwrap()) as usize;
+        pos += 2;
+        if off == 0 || off > out.len() {
+            return Err(Error::Format("lz4like bad offset".into()));
+        }
+        let start = out.len() - off;
+        // overlapping copy (RLE case) must be byte-by-byte
+        for k in 0..mlen {
+            let b = out[start + k];
+            out.push(b);
+        }
+    }
+    if out.len() != orig {
+        return Err(Error::Format(format!(
+            "lz4like length mismatch: got {}, want {orig}",
+            out.len()
+        )));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn corpora() -> Vec<Vec<u8>> {
+        let mut rng = Rng::new(99);
+        let mut random = vec![0u8; 10_000];
+        for b in random.iter_mut() {
+            *b = rng.next_u64() as u8;
+        }
+        let mut runs = Vec::new();
+        for i in 0..50 {
+            runs.extend(std::iter::repeat(i as u8).take(200));
+        }
+        let mut columnsish: Vec<u8> = Vec::new();
+        for i in 0..2000i64 {
+            columnsish.extend_from_slice(&(i / 7).to_le_bytes());
+        }
+        vec![
+            Vec::new(),
+            b"abc".to_vec(),
+            b"aaaaaaaaaaaaaaaaaaaaaaaaaaaaaa".to_vec(),
+            random,
+            runs,
+            columnsish,
+        ]
+    }
+
+    #[test]
+    fn roundtrip_all_codecs_all_corpora() {
+        for codec in [Codec::None, Codec::Zstd { level: 1 }, Codec::Lz4Like] {
+            for data in corpora() {
+                let c = codec.compress(&data);
+                let d = Codec::decompress(&c).unwrap();
+                assert_eq!(d, data, "codec {codec:?} corpus len {}", data.len());
+            }
+        }
+    }
+
+    #[test]
+    fn compressible_data_shrinks() {
+        let data: Vec<u8> = std::iter::repeat(b"theseus!".as_slice())
+            .take(1000)
+            .flatten()
+            .copied()
+            .collect();
+        for codec in [Codec::Zstd { level: 1 }, Codec::Lz4Like] {
+            let c = codec.compress(&data);
+            assert!(c.len() < data.len() / 4, "{}: {} vs {}", codec.name(), c.len(), data.len());
+        }
+    }
+
+    #[test]
+    fn tag_travels_with_data() {
+        let data = b"cross-codec decode".to_vec();
+        let c = Codec::Lz4Like.compress(&data);
+        // decompress() needs no codec argument
+        assert_eq!(Codec::decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn corrupt_input_is_error_not_panic() {
+        let c = Codec::Lz4Like.compress(b"hello world hello world hello");
+        for cut in [0, 5, 9, c.len() - 1] {
+            let _ = Codec::decompress(&c[..cut]); // must not panic
+        }
+        let mut bad = c.clone();
+        if bad.len() > 12 {
+            bad[12] ^= 0xff;
+            let _ = Codec::decompress(&bad);
+        }
+    }
+
+    #[test]
+    fn varint_roundtrip() {
+        for v in [0usize, 1, 127, 128, 300, 1 << 20] {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(get_varint(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+        }
+    }
+}

@@ -1,0 +1,445 @@
+//! "THS" columnar file format — the Parquet stand-in (DESIGN.md
+//! substitution #1).
+//!
+//! Layout (all little-endian):
+//! ```text
+//!   "THS1"                                  4-byte magic
+//!   row group 0: col chunk 0, col chunk 1, ...   (compressed pages)
+//!   row group 1: ...
+//!   footer: schema, row-group metadata (per-chunk byte ranges,
+//!           row counts, min/max stats), crc32
+//!   footer_len: u64
+//!   "THS1"                                  trailing magic
+//! ```
+//!
+//! Deliberate Parquet parallels, because the paper's scan path depends
+//! on them: the footer must be fetched *first* (Byte-Range Pre-loading
+//! reads "file headers ... to identify the precise byte ranges required
+//! for scan operations", §3.3.3); column chunks are independently
+//! compressed ranges so projections fetch only what they need; min/max
+//! stats allow row-group pruning by predicates.
+
+use crate::storage::compression::Codec;
+use crate::types::{ColumnData, RecordBatch, Schema};
+use crate::util::bytes::{Reader, Writer};
+use crate::{Error, Result};
+
+pub const MAGIC: &[u8; 4] = b"THS1";
+
+/// Byte range + stats for one column chunk within a row group.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ColumnChunkMeta {
+    /// Absolute byte offset of the compressed page in the file.
+    pub offset: u64,
+    /// Compressed page length.
+    pub len: u64,
+    /// Uncompressed payload length (device memory estimation input).
+    pub uncompressed_len: u64,
+    /// min/max as i64 bits (valid for i64-backed dtypes).
+    pub min_i64: i64,
+    pub max_i64: i64,
+    /// min/max as f64 (valid for float dtypes).
+    pub min_f64: f64,
+    pub max_f64: f64,
+}
+
+/// Metadata for one row group.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RowGroupMeta {
+    pub rows: u64,
+    /// Parallel to `schema.fields`.
+    pub chunks: Vec<ColumnChunkMeta>,
+}
+
+impl RowGroupMeta {
+    /// Total compressed bytes of the projected columns — the input to
+    /// the exchange's size estimation and the pre-loader's range plan.
+    pub fn projected_bytes(&self, cols: &[usize]) -> u64 {
+        cols.iter().map(|&c| self.chunks[c].len).sum()
+    }
+}
+
+/// Parsed file footer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FileFooter {
+    pub schema: Schema,
+    pub row_groups: Vec<RowGroupMeta>,
+}
+
+impl FileFooter {
+    pub fn total_rows(&self) -> u64 {
+        self.row_groups.iter().map(|g| g.rows).sum()
+    }
+
+    /// Can a row group be skipped for a range predicate
+    /// `lo <= col < hi` on an i64-backed column? (Row-group pruning.)
+    pub fn prune_i64(&self, group: usize, col: usize, lo: i64, hi: i64) -> bool {
+        let c = &self.row_groups[group].chunks[col];
+        c.max_i64 < lo || c.min_i64 >= hi
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        self.schema.encode(&mut w);
+        w.u32(self.row_groups.len() as u32);
+        for g in &self.row_groups {
+            w.u64(g.rows);
+            w.u32(g.chunks.len() as u32);
+            for c in &g.chunks {
+                w.u64(c.offset);
+                w.u64(c.len);
+                w.u64(c.uncompressed_len);
+                w.i64(c.min_i64);
+                w.i64(c.max_i64);
+                w.f64(c.min_f64);
+                w.f64(c.max_f64);
+            }
+        }
+        let crc = crc32fast::hash(w.as_slice());
+        w.u32(crc);
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<FileFooter> {
+        if buf.len() < 4 {
+            return Err(Error::Format("footer too short".into()));
+        }
+        let (body, crc_bytes) = buf.split_at(buf.len() - 4);
+        let want = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+        if crc32fast::hash(body) != want {
+            return Err(Error::Format("footer crc mismatch".into()));
+        }
+        let mut r = Reader::new(body);
+        let schema = Schema::decode(&mut r)?;
+        let ngroups = r.u32()? as usize;
+        let mut row_groups = Vec::with_capacity(ngroups);
+        for _ in 0..ngroups {
+            let rows = r.u64()?;
+            let nchunks = r.u32()? as usize;
+            let mut chunks = Vec::with_capacity(nchunks);
+            for _ in 0..nchunks {
+                chunks.push(ColumnChunkMeta {
+                    offset: r.u64()?,
+                    len: r.u64()?,
+                    uncompressed_len: r.u64()?,
+                    min_i64: r.i64()?,
+                    max_i64: r.i64()?,
+                    min_f64: r.f64()?,
+                    max_f64: r.f64()?,
+                });
+            }
+            row_groups.push(RowGroupMeta { rows, chunks });
+        }
+        Ok(FileFooter { schema, row_groups })
+    }
+
+    /// The byte range holding `footer_len + trailing magic`, given the
+    /// file size — what a reader fetches first.
+    pub fn tail_range(file_len: u64) -> (u64, u64) {
+        (file_len.saturating_sub(12), 12)
+    }
+
+    /// Parse the 12-byte tail into the footer's byte range.
+    pub fn footer_range(tail: &[u8], file_len: u64) -> Result<(u64, u64)> {
+        if tail.len() != 12 || &tail[8..12] != MAGIC {
+            return Err(Error::Format("bad trailing magic".into()));
+        }
+        let flen = u64::from_le_bytes(tail[..8].try_into().unwrap());
+        if flen + 12 > file_len {
+            return Err(Error::Format("footer length exceeds file".into()));
+        }
+        Ok((file_len - 12 - flen, flen))
+    }
+}
+
+// -------------------------------------------------------------------------
+// Writer
+// -------------------------------------------------------------------------
+
+/// Streaming writer: buffers rows, flushes a row group every
+/// `row_group_rows` (the paper dimensions row groups ≈128 MiB; callers
+/// pick rows to match their scaled-down equivalent).
+pub struct FileWriter {
+    schema: Schema,
+    codec: Codec,
+    row_group_rows: usize,
+    buf: Vec<RecordBatch>,
+    buffered_rows: usize,
+    out: Vec<u8>,
+    groups: Vec<RowGroupMeta>,
+}
+
+impl FileWriter {
+    pub fn new(schema: Schema, codec: Codec, row_group_rows: usize) -> Self {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        FileWriter {
+            schema,
+            codec,
+            row_group_rows,
+            buf: Vec::new(),
+            buffered_rows: 0,
+            out,
+            groups: Vec::new(),
+        }
+    }
+
+    pub fn write(&mut self, batch: RecordBatch) -> Result<()> {
+        if batch.num_columns() != self.schema.len() {
+            return Err(Error::Format(format!(
+                "batch has {} columns, schema {}",
+                batch.num_columns(),
+                self.schema.len()
+            )));
+        }
+        self.buffered_rows += batch.rows();
+        self.buf.push(batch);
+        while self.buffered_rows >= self.row_group_rows {
+            self.flush_group(self.row_group_rows)?;
+        }
+        Ok(())
+    }
+
+    fn flush_group(&mut self, rows: usize) -> Result<()> {
+        let all = RecordBatch::concat(&std::mem::take(&mut self.buf))?;
+        let take = rows.min(all.rows());
+        let group = all.slice(0, take)?;
+        if take < all.rows() {
+            self.buf.push(all.slice(take, all.rows() - take)?);
+        }
+        self.buffered_rows = all.rows() - take;
+        if group.is_empty() {
+            return Ok(());
+        }
+
+        let mut chunks = Vec::with_capacity(group.num_columns());
+        for col in &group.columns {
+            let raw = col.data.raw_bytes();
+            let page = self.codec.compress(raw);
+            let (min_i, max_i, min_f, max_f) = column_stats(&col.data);
+            chunks.push(ColumnChunkMeta {
+                offset: self.out.len() as u64,
+                len: page.len() as u64,
+                uncompressed_len: raw.len() as u64,
+                min_i64: min_i,
+                max_i64: max_i,
+                min_f64: min_f,
+                max_f64: max_f,
+            });
+            self.out.extend_from_slice(&page);
+        }
+        self.groups.push(RowGroupMeta { rows: group.rows() as u64, chunks });
+        Ok(())
+    }
+
+    /// Flush remaining rows and append the footer; returns file bytes.
+    pub fn finish(mut self) -> Result<Vec<u8>> {
+        if self.buffered_rows > 0 {
+            self.flush_group(self.buffered_rows)?;
+        }
+        let footer = FileFooter {
+            schema: self.schema.clone(),
+            row_groups: std::mem::take(&mut self.groups),
+        };
+        let fbytes = footer.encode();
+        self.out.extend_from_slice(&fbytes);
+        self.out
+            .extend_from_slice(&(fbytes.len() as u64).to_le_bytes());
+        self.out.extend_from_slice(MAGIC);
+        Ok(self.out)
+    }
+}
+
+fn column_stats(data: &ColumnData) -> (i64, i64, f64, f64) {
+    match data {
+        ColumnData::I64(v) => {
+            let min = v.iter().copied().min().unwrap_or(i64::MAX);
+            let max = v.iter().copied().max().unwrap_or(i64::MIN);
+            (min, max, min as f64, max as f64)
+        }
+        ColumnData::F32(v) => {
+            let min = v.iter().copied().fold(f32::INFINITY, f32::min);
+            let max = v.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            (i64::MIN, i64::MAX, min as f64, max as f64)
+        }
+        ColumnData::F64(v) => {
+            let min = v.iter().copied().fold(f64::INFINITY, f64::min);
+            let max = v.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            (i64::MIN, i64::MAX, min, max)
+        }
+    }
+}
+
+// -------------------------------------------------------------------------
+// Reader
+// -------------------------------------------------------------------------
+
+/// Decodes column chunks fetched by a datasource. Holds no file handle —
+/// all byte movement goes through the object store, so the pre-loader
+/// and the compute path share one code path (§3.3.3).
+pub struct FileReader {
+    pub footer: FileFooter,
+}
+
+impl FileReader {
+    /// Parse a footer given the file's full bytes (local/test path).
+    pub fn from_bytes(file: &[u8]) -> Result<FileReader> {
+        if file.len() < 16 || &file[..4] != MAGIC {
+            return Err(Error::Format("bad magic".into()));
+        }
+        let (tail_off, _) = FileFooter::tail_range(file.len() as u64);
+        let tail = &file[tail_off as usize..];
+        let (foff, flen) = FileFooter::footer_range(tail, file.len() as u64)?;
+        let footer = FileFooter::decode(&file[foff as usize..(foff + flen) as usize])?;
+        Ok(FileReader { footer })
+    }
+
+    /// Decode one column chunk from its fetched page bytes.
+    pub fn decode_chunk(
+        &self,
+        group: usize,
+        col: usize,
+        page: &[u8],
+    ) -> Result<ColumnData> {
+        let meta = &self.footer.row_groups[group].chunks[col];
+        if page.len() != meta.len as usize {
+            return Err(Error::Format(format!(
+                "chunk page length {} != meta {}",
+                page.len(),
+                meta.len
+            )));
+        }
+        let raw = Codec::decompress(page)?;
+        if raw.len() != meta.uncompressed_len as usize {
+            return Err(Error::Format("uncompressed length mismatch".into()));
+        }
+        let dtype = self.footer.schema.fields[col].dtype;
+        ColumnData::from_raw(ColumnData::layout_for(dtype), &raw)
+    }
+
+    /// Assemble a record batch for `group` from per-column pages.
+    pub fn decode_group(
+        &self,
+        group: usize,
+        cols: &[usize],
+        pages: &[&[u8]],
+    ) -> Result<RecordBatch> {
+        let mut columns = Vec::with_capacity(cols.len());
+        for (i, &c) in cols.iter().enumerate() {
+            let field = &self.footer.schema.fields[c];
+            let data = self.decode_chunk(group, c, pages[i])?;
+            columns.push(crate::types::Column::new(field.name.clone(), field.dtype, data));
+        }
+        RecordBatch::new(columns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{Column, DType, Field};
+    use crate::util::rng::Rng;
+
+    fn schema() -> Schema {
+        Schema::new(vec![
+            Field::new("k", DType::Int64),
+            Field::new("v", DType::Float32),
+            Field::new("d", DType::Date),
+        ])
+    }
+
+    fn batch(rows: usize, seed: u64) -> RecordBatch {
+        let mut rng = Rng::new(seed);
+        RecordBatch::new(vec![
+            Column::i64("k", (0..rows).map(|_| rng.gen_i64(0, 1000)).collect()),
+            Column::f32("v", (0..rows).map(|_| rng.gen_f32(0.0, 10.0)).collect()),
+            Column::date("d", (0..rows).map(|i| 9000 + i as i64).collect()),
+        ])
+        .unwrap()
+    }
+
+    fn write_file(rows: usize, rg: usize) -> Vec<u8> {
+        let mut w = FileWriter::new(schema(), Codec::Zstd { level: 1 }, rg);
+        w.write(batch(rows, 1)).unwrap();
+        w.finish().unwrap()
+    }
+
+    #[test]
+    fn roundtrip_single_group() {
+        let file = write_file(100, 1000);
+        let r = FileReader::from_bytes(&file).unwrap();
+        assert_eq!(r.footer.row_groups.len(), 1);
+        assert_eq!(r.footer.total_rows(), 100);
+        let g = &r.footer.row_groups[0];
+        let pages: Vec<&[u8]> = g
+            .chunks
+            .iter()
+            .map(|c| &file[c.offset as usize..(c.offset + c.len) as usize])
+            .collect();
+        let got = r.decode_group(0, &[0, 1, 2], &pages).unwrap();
+        assert_eq!(got, batch(100, 1));
+    }
+
+    #[test]
+    fn row_groups_split_on_boundary() {
+        let file = write_file(1050, 256);
+        let r = FileReader::from_bytes(&file).unwrap();
+        let sizes: Vec<u64> = r.footer.row_groups.iter().map(|g| g.rows).collect();
+        assert_eq!(sizes, vec![256, 256, 256, 256, 26]);
+        assert_eq!(r.footer.total_rows(), 1050);
+    }
+
+    #[test]
+    fn projection_reads_only_requested_columns() {
+        let file = write_file(64, 64);
+        let r = FileReader::from_bytes(&file).unwrap();
+        let g = &r.footer.row_groups[0];
+        let page = &file[g.chunks[1].offset as usize..(g.chunks[1].offset + g.chunks[1].len) as usize];
+        let got = r.decode_group(0, &[1], &[page]).unwrap();
+        assert_eq!(got.num_columns(), 1);
+        assert_eq!(got.columns[0].name, "v");
+    }
+
+    #[test]
+    fn stats_enable_pruning() {
+        // dates ascend, so later groups prune against early predicates
+        let file = write_file(1024, 256);
+        let r = FileReader::from_bytes(&file).unwrap();
+        // column 2 is d = 9000 + i; group 3 covers 9768..9024+? anyway:
+        assert!(r.footer.prune_i64(3, 2, 0, 9100));
+        assert!(!r.footer.prune_i64(0, 2, 0, 9100));
+    }
+
+    #[test]
+    fn corrupted_footer_detected() {
+        let mut file = write_file(10, 10);
+        let n = file.len();
+        file[n - 20] ^= 0xff; // flip a footer byte
+        assert!(FileReader::from_bytes(&file).is_err());
+    }
+
+    #[test]
+    fn truncated_file_detected() {
+        let file = write_file(10, 10);
+        assert!(FileReader::from_bytes(&file[..file.len() - 3]).is_err());
+        assert!(FileReader::from_bytes(&file[..8]).is_err());
+    }
+
+    #[test]
+    fn empty_write_finishes_cleanly() {
+        let w = FileWriter::new(schema(), Codec::None, 16);
+        let file = w.finish().unwrap();
+        let r = FileReader::from_bytes(&file).unwrap();
+        assert_eq!(r.footer.total_rows(), 0);
+    }
+
+    #[test]
+    fn tail_and_footer_range_math() {
+        let file = write_file(32, 32);
+        let flen = file.len() as u64;
+        let (toff, tlen) = FileFooter::tail_range(flen);
+        assert_eq!(tlen, 12);
+        let (foff, fl) = FileFooter::footer_range(&file[toff as usize..], flen).unwrap();
+        assert!(foff + fl + 12 == flen);
+    }
+}

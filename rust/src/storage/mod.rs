@@ -1,0 +1,12 @@
+//! Storage layer: columnar file format, object-store simulator, and the
+//! two datasource implementations the paper ablates (Fig 4 F→G).
+
+pub mod compression;
+pub mod datasource;
+pub mod format;
+pub mod object_store;
+
+pub use compression::Codec;
+pub use datasource::{CustomObjectStoreDatasource, Datasource, GenericDatasource};
+pub use format::{ColumnChunkMeta, FileFooter, FileReader, FileWriter, RowGroupMeta};
+pub use object_store::{ObjectStore, SimObjectStore};

@@ -1,0 +1,181 @@
+//! Minimal property-testing harness (DESIGN.md substitution #5: no
+//! `proptest` offline): generate random cases from a seeded RNG, run
+//! the property, and on failure *shrink* the case toward a minimal
+//! reproduction before panicking with the seed.
+
+use crate::util::rng::Rng;
+
+/// A shrinkable case.
+pub trait Shrink: Clone + std::fmt::Debug {
+    /// Candidate smaller versions (tried in order; empty = atomic).
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for i64 {
+    fn shrink(&self) -> Vec<i64> {
+        let mut out = Vec::new();
+        if *self != 0 {
+            out.push(0);
+            out.push(self / 2);
+        }
+        if *self < 0 {
+            out.push(-self);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<usize> {
+        if *self == 0 {
+            Vec::new()
+        } else {
+            vec![0, self / 2, self - 1]
+        }
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        let n = self.len();
+        if n == 0 {
+            return out;
+        }
+        // halves first, then drop-one, then element-wise shrink of slot 0
+        // (every candidate must be strictly "smaller": shorter, or same
+        // length with a shrunk element — never the original itself)
+        out.push(self[..n / 2].to_vec());
+        if n / 2 > 0 {
+            out.push(self[n / 2..].to_vec());
+        }
+        if n > 1 {
+            let mut v = self.clone();
+            v.pop();
+            out.push(v);
+        }
+        if let Some(first) = self.first() {
+            for s in first.shrink().into_iter().take(2) {
+                let mut v = self.clone();
+                v[0] = s;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+/// Run `prop` over `iters` random cases from `gen`; shrink failures.
+///
+/// Panics with the seed and the minimal failing case.
+pub fn check<T, G, P>(seed: u64, iters: usize, mut gen: G, prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> bool,
+{
+    let mut rng = Rng::new(seed);
+    for i in 0..iters {
+        let case = gen(&mut rng);
+        if prop(&case) {
+            continue;
+        }
+        // shrink loop
+        let mut minimal = case;
+        'outer: loop {
+            for cand in minimal.shrink() {
+                if !prop(&cand) {
+                    minimal = cand;
+                    continue 'outer;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property failed (seed {seed}, iteration {i});\nminimal case: {minimal:?}"
+        );
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    pub fn i64_vec(rng: &mut Rng, max_len: usize, lo: i64, hi: i64) -> Vec<i64> {
+        let n = rng.gen_range(max_len as u64 + 1) as usize;
+        (0..n).map(|_| rng.gen_i64(lo, hi)).collect()
+    }
+
+    pub fn f32_vec(rng: &mut Rng, max_len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let n = rng.gen_range(max_len as u64 + 1) as usize;
+        (0..n).map(|_| rng.gen_f32(lo, hi)).collect()
+    }
+
+    pub fn bytes(rng: &mut Rng, max_len: usize) -> Vec<u8> {
+        let n = rng.gen_range(max_len as u64 + 1) as usize;
+        (0..n).map(|_| rng.next_u64() as u8).collect()
+    }
+}
+
+impl Shrink for u8 {
+    fn shrink(&self) -> Vec<u8> {
+        if *self == 0 {
+            Vec::new()
+        } else {
+            vec![0, self / 2]
+        }
+    }
+}
+
+impl Shrink for f32 {
+    fn shrink(&self) -> Vec<f32> {
+        if *self == 0.0 {
+            Vec::new()
+        } else {
+            vec![0.0, self / 2.0]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_silent() {
+        check(1, 200, |rng| gen::i64_vec(rng, 32, -100, 100), |v| {
+            v.iter().all(|&x| (-100..=100).contains(&x))
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        let r = std::panic::catch_unwind(|| {
+            check(
+                2,
+                200,
+                |rng| gen::i64_vec(rng, 64, 0, 1000),
+                // fails whenever the vec contains a value >= 500
+                |v| v.iter().all(|&x| x < 500),
+            );
+        });
+        let msg = match r {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        // the minimal case is a single offending element
+        assert!(msg.contains("minimal case"), "{msg}");
+        let after = msg.split("minimal case:").nth(1).unwrap();
+        let count = after.matches(',').count();
+        assert!(count <= 1, "not shrunk enough: {after}");
+    }
+
+    #[test]
+    fn shrink_vec_produces_smaller_candidates() {
+        let v = vec![5i64, 6, 7, 8];
+        for s in v.shrink() {
+            assert!(s.len() < v.len() || s.iter().zip(&v).any(|(a, b)| a != b));
+        }
+    }
+}

@@ -1,0 +1,443 @@
+//! Record batches: the unit of data flow through the DAG (§3.1 — "a
+//! batch is a slice of all data that will flow through the operator,
+//! represented by a set of columns with the same number of rows").
+
+use crate::types::schema::{DType, Schema};
+use crate::util::bytes::{as_bytes, from_bytes, Reader, Writer};
+use crate::{Error, Result};
+
+/// Physical column storage. All i64-backed logical types (int, decimal,
+/// date, dict code) share `I64` so device kernels see two layouts only.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ColumnData {
+    I64(Vec<i64>),
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+}
+
+impl ColumnData {
+    pub fn len(&self) -> usize {
+        match self {
+            ColumnData::I64(v) => v.len(),
+            ColumnData::F32(v) => v.len(),
+            ColumnData::F64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn byte_len(&self) -> usize {
+        match self {
+            ColumnData::I64(v) => v.len() * 8,
+            ColumnData::F32(v) => v.len() * 4,
+            ColumnData::F64(v) => v.len() * 8,
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<&[i64]> {
+        match self {
+            ColumnData::I64(v) => Ok(v),
+            _ => Err(Error::internal("column is not i64-backed")),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            ColumnData::F32(v) => Ok(v),
+            _ => Err(Error::internal("column is not f32-backed")),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<&[f64]> {
+        match self {
+            ColumnData::F64(v) => Ok(v),
+            _ => Err(Error::internal("column is not f64-backed")),
+        }
+    }
+
+    /// Gather rows by index (the host-side compaction after a device
+    /// filter mask; memory-bound by design — see kernels/filter.py).
+    pub fn gather(&self, idx: &[u32]) -> ColumnData {
+        match self {
+            ColumnData::I64(v) => {
+                ColumnData::I64(idx.iter().map(|&i| v[i as usize]).collect())
+            }
+            ColumnData::F32(v) => {
+                ColumnData::F32(idx.iter().map(|&i| v[i as usize]).collect())
+            }
+            ColumnData::F64(v) => {
+                ColumnData::F64(idx.iter().map(|&i| v[i as usize]).collect())
+            }
+        }
+    }
+
+    pub fn slice(&self, off: usize, len: usize) -> ColumnData {
+        match self {
+            ColumnData::I64(v) => ColumnData::I64(v[off..off + len].to_vec()),
+            ColumnData::F32(v) => ColumnData::F32(v[off..off + len].to_vec()),
+            ColumnData::F64(v) => ColumnData::F64(v[off..off + len].to_vec()),
+        }
+    }
+
+    pub fn append(&mut self, other: &ColumnData) -> Result<()> {
+        match (self, other) {
+            (ColumnData::I64(a), ColumnData::I64(b)) => a.extend_from_slice(b),
+            (ColumnData::F32(a), ColumnData::F32(b)) => a.extend_from_slice(b),
+            (ColumnData::F64(a), ColumnData::F64(b)) => a.extend_from_slice(b),
+            _ => return Err(Error::internal("append: column layout mismatch")),
+        }
+        Ok(())
+    }
+
+    fn layout_tag(&self) -> u8 {
+        match self {
+            ColumnData::I64(_) => 0,
+            ColumnData::F32(_) => 1,
+            ColumnData::F64(_) => 2,
+        }
+    }
+
+    pub fn raw_bytes(&self) -> &[u8] {
+        match self {
+            ColumnData::I64(v) => as_bytes(v),
+            ColumnData::F32(v) => as_bytes(v),
+            ColumnData::F64(v) => as_bytes(v),
+        }
+    }
+
+    pub fn from_raw(tag: u8, bytes: &[u8]) -> Result<ColumnData> {
+        Ok(match tag {
+            0 => ColumnData::I64(from_bytes(bytes)?),
+            1 => ColumnData::F32(from_bytes(bytes)?),
+            2 => ColumnData::F64(from_bytes(bytes)?),
+            _ => return Err(Error::Format(format!("bad layout tag {tag}"))),
+        })
+    }
+
+    /// Storage layout for a logical dtype.
+    pub fn layout_for(dtype: DType) -> u8 {
+        match dtype {
+            DType::Float32 => 1,
+            DType::Float64 => 2,
+            _ => 0,
+        }
+    }
+}
+
+/// A named column.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Column {
+    pub name: String,
+    pub dtype: DType,
+    pub data: ColumnData,
+}
+
+impl Column {
+    pub fn new(name: impl Into<String>, dtype: DType, data: ColumnData) -> Self {
+        Column { name: name.into(), dtype, data }
+    }
+
+    pub fn i64(name: impl Into<String>, v: Vec<i64>) -> Self {
+        Column::new(name, DType::Int64, ColumnData::I64(v))
+    }
+
+    pub fn f32(name: impl Into<String>, v: Vec<f32>) -> Self {
+        Column::new(name, DType::Float32, ColumnData::F32(v))
+    }
+
+    pub fn f64(name: impl Into<String>, v: Vec<f64>) -> Self {
+        Column::new(name, DType::Float64, ColumnData::F64(v))
+    }
+
+    pub fn decimal(name: impl Into<String>, scaled: Vec<i64>) -> Self {
+        Column::new(name, DType::Decimal, ColumnData::I64(scaled))
+    }
+
+    pub fn date(name: impl Into<String>, days: Vec<i64>) -> Self {
+        Column::new(name, DType::Date, ColumnData::I64(days))
+    }
+
+    pub fn dict(name: impl Into<String>, codes: Vec<i64>) -> Self {
+        Column::new(name, DType::Dict, ColumnData::I64(codes))
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Equal-length columns + row count. The fundamental dataflow unit.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct RecordBatch {
+    pub columns: Vec<Column>,
+    rows: usize,
+}
+
+impl RecordBatch {
+    pub fn new(columns: Vec<Column>) -> Result<Self> {
+        let rows = columns.first().map_or(0, |c| c.len());
+        for c in &columns {
+            if c.len() != rows {
+                return Err(Error::internal(format!(
+                    "ragged batch: column '{}' has {} rows, expected {}",
+                    c.name,
+                    c.len(),
+                    rows
+                )));
+            }
+        }
+        Ok(RecordBatch { columns, rows })
+    }
+
+    pub fn empty() -> Self {
+        RecordBatch::default()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    pub fn num_columns(&self) -> usize {
+        self.columns.len()
+    }
+
+    /// Total payload bytes (feeds batch-holder accounting and the
+    /// exchange's size estimation).
+    pub fn byte_size(&self) -> usize {
+        self.columns.iter().map(|c| c.data.byte_len()).sum()
+    }
+
+    pub fn column(&self, name: &str) -> Result<&Column> {
+        self.columns
+            .iter()
+            .find(|c| c.name == name)
+            .ok_or_else(|| Error::Plan(format!("no column named '{name}' in batch")))
+    }
+
+    pub fn column_idx(&self, i: usize) -> &Column {
+        &self.columns[i]
+    }
+
+    /// Keep only the rows whose mask entry is non-zero.
+    pub fn compact(&self, mask: &[i32]) -> Result<RecordBatch> {
+        if mask.len() < self.rows {
+            return Err(Error::internal("mask shorter than batch"));
+        }
+        let idx: Vec<u32> = (0..self.rows as u32)
+            .filter(|&i| mask[i as usize] != 0)
+            .collect();
+        self.take(&idx)
+    }
+
+    /// Gather rows by index.
+    pub fn take(&self, idx: &[u32]) -> Result<RecordBatch> {
+        let columns = self
+            .columns
+            .iter()
+            .map(|c| Column::new(c.name.clone(), c.dtype, c.data.gather(idx)))
+            .collect();
+        RecordBatch::new(columns)
+    }
+
+    /// Contiguous row range.
+    pub fn slice(&self, off: usize, len: usize) -> Result<RecordBatch> {
+        if off + len > self.rows {
+            return Err(Error::internal("slice out of bounds"));
+        }
+        let columns = self
+            .columns
+            .iter()
+            .map(|c| Column::new(c.name.clone(), c.dtype, c.data.slice(off, len)))
+            .collect();
+        RecordBatch::new(columns)
+    }
+
+    /// Vertically concatenate batches with identical layouts.
+    pub fn concat(batches: &[RecordBatch]) -> Result<RecordBatch> {
+        let mut it = batches.iter().filter(|b| !b.is_empty());
+        let first = match it.next() {
+            Some(b) => b.clone(),
+            None => return Ok(RecordBatch::empty()),
+        };
+        let mut cols = first.columns;
+        let mut rows = first.rows;
+        for b in it {
+            if b.columns.len() != cols.len() {
+                return Err(Error::internal("concat: column count mismatch"));
+            }
+            for (a, c) in cols.iter_mut().zip(&b.columns) {
+                a.data.append(&c.data)?;
+            }
+            rows += b.rows;
+        }
+        for c in &mut cols {
+            debug_assert_eq!(c.len(), rows);
+        }
+        RecordBatch::new(cols)
+    }
+
+    /// Project columns by name, in order.
+    pub fn project(&self, names: &[&str]) -> Result<RecordBatch> {
+        let columns = names
+            .iter()
+            .map(|n| self.column(n).cloned())
+            .collect::<Result<Vec<_>>>()?;
+        RecordBatch::new(columns)
+    }
+
+    /// Split into chunks of at most `chunk_rows` rows (operator batch
+    /// sizing, §3.1).
+    pub fn split(&self, chunk_rows: usize) -> Vec<RecordBatch> {
+        if self.rows <= chunk_rows {
+            return vec![self.clone()];
+        }
+        let mut out = Vec::with_capacity(self.rows.div_ceil(chunk_rows));
+        let mut off = 0;
+        while off < self.rows {
+            let len = chunk_rows.min(self.rows - off);
+            out.push(self.slice(off, len).expect("in-bounds"));
+            off += len;
+        }
+        out
+    }
+
+    // ---------------------------------------------------------------- IPC
+
+    /// Serialize for spill files and network frames.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::with_capacity(self.byte_size() + 64);
+        w.u32(self.columns.len() as u32);
+        w.u64(self.rows as u64);
+        for c in &self.columns {
+            w.str(&c.name);
+            w.u8(c.dtype.tag());
+            w.u8(c.data.layout_tag());
+            w.bytes(c.data.raw_bytes());
+        }
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<RecordBatch> {
+        let mut r = Reader::new(buf);
+        let ncols = r.u32()? as usize;
+        let rows = r.u64()? as usize;
+        let mut columns = Vec::with_capacity(ncols);
+        for _ in 0..ncols {
+            let name = r.str()?;
+            let dtype = DType::from_tag(r.u8()?)?;
+            let tag = r.u8()?;
+            let data = ColumnData::from_raw(tag, r.bytes()?)?;
+            if data.len() != rows {
+                return Err(Error::Format(format!(
+                    "column '{}' decoded {} rows, header says {}",
+                    name,
+                    data.len(),
+                    rows
+                )));
+            }
+            columns.push(Column::new(name, dtype, data));
+        }
+        RecordBatch::new(columns)
+    }
+
+    /// Schema view of this batch (dictionaries are not carried on
+    /// batches; they live in the table schema).
+    pub fn schema_shape(&self) -> Schema {
+        Schema::new(
+            self.columns
+                .iter()
+                .map(|c| crate::types::schema::Field::new(c.name.clone(), c.dtype))
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RecordBatch {
+        RecordBatch::new(vec![
+            Column::i64("k", vec![1, 2, 3, 4, 5]),
+            Column::f32("v", vec![0.5, 1.5, 2.5, 3.5, 4.5]),
+            Column::decimal("d", vec![100, 200, 300, 400, 500]),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn ragged_rejected() {
+        let r = RecordBatch::new(vec![
+            Column::i64("a", vec![1, 2]),
+            Column::i64("b", vec![1]),
+        ]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn compact_by_mask() {
+        let b = sample();
+        let out = b.compact(&[1, 0, 1, 0, 1]).unwrap();
+        assert_eq!(out.rows(), 3);
+        assert_eq!(out.column("k").unwrap().data.as_i64().unwrap(), &[1, 3, 5]);
+        assert_eq!(out.column("v").unwrap().data.as_f32().unwrap(), &[0.5, 2.5, 4.5]);
+    }
+
+    #[test]
+    fn slice_and_concat_roundtrip() {
+        let b = sample();
+        let a = b.slice(0, 2).unwrap();
+        let c = b.slice(2, 3).unwrap();
+        let whole = RecordBatch::concat(&[a, c]).unwrap();
+        assert_eq!(whole, b);
+    }
+
+    #[test]
+    fn split_sizes() {
+        let b = sample();
+        let parts = b.split(2);
+        assert_eq!(parts.iter().map(|p| p.rows()).collect::<Vec<_>>(), vec![2, 2, 1]);
+        assert_eq!(RecordBatch::concat(&parts).unwrap(), b);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let b = sample();
+        let buf = b.encode();
+        let got = RecordBatch::decode(&buf).unwrap();
+        assert_eq!(got, b);
+    }
+
+    #[test]
+    fn byte_size_counts_payload() {
+        let b = sample();
+        assert_eq!(b.byte_size(), 5 * 8 + 5 * 4 + 5 * 8);
+    }
+
+    #[test]
+    fn project_reorders() {
+        let b = sample();
+        let p = b.project(&["v", "k"]).unwrap();
+        assert_eq!(p.columns[0].name, "v");
+        assert_eq!(p.num_columns(), 2);
+    }
+
+    #[test]
+    fn decode_rejects_corrupt_rowcount() {
+        let b = sample();
+        let mut buf = b.encode();
+        // corrupt the row-count field
+        buf[4] = 99;
+        assert!(RecordBatch::decode(&buf).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! Columnar data model (Arrow-inspired, §2: "Theseus adopts Apache
+//! Arrow's columnar memory model").
+//!
+//! A [`RecordBatch`] is a set of equal-length [`Column`]s plus a schema.
+//! Strings are dictionary-encoded at generation time (predicates on
+//! strings are pushed down as integer codes — the same trick the paper's
+//! Calcite planner plays for the device kernels). Decimals are fixed
+//! 128-bit in the paper; we carry them as scaled i64 (precision 11,
+//! scale 2 fits in i64 comfortably) and document the narrowing.
+
+pub mod batch;
+pub mod schema;
+
+pub use batch::{Column, ColumnData, RecordBatch};
+pub use schema::{DType, Field, Schema};

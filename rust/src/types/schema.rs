@@ -1,0 +1,219 @@
+//! Schema: field names + dtypes, with binary serde for plan/IPC use.
+
+use crate::util::bytes::{Reader, Writer};
+use crate::{Error, Result};
+
+/// Physical column type.
+///
+/// `Decimal` values are stored as i64 scaled by 100 (the paper's inputs
+/// are precision-11/scale-2 decimals — they fit i64; the 128-bit width
+/// in the paper exists for generality, not range, at this scale).
+/// `Dict` is a dictionary-encoded string column: i64 codes plus a
+/// per-column dictionary in the schema.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    Int64,
+    Float32,
+    Float64,
+    Decimal, // scaled i64 (x100)
+    Date,    // days since epoch, i64
+    Dict,    // dictionary code, i64
+}
+
+impl DType {
+    /// Bytes per value in device/host columnar buffers.
+    pub fn width(self) -> usize {
+        match self {
+            DType::Float32 => 4,
+            _ => 8,
+        }
+    }
+
+    pub fn tag(self) -> u8 {
+        match self {
+            DType::Int64 => 0,
+            DType::Float32 => 1,
+            DType::Float64 => 2,
+            DType::Decimal => 3,
+            DType::Date => 4,
+            DType::Dict => 5,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Result<Self> {
+        Ok(match t {
+            0 => DType::Int64,
+            1 => DType::Float32,
+            2 => DType::Float64,
+            3 => DType::Decimal,
+            4 => DType::Date,
+            5 => DType::Dict,
+            _ => return Err(Error::Format(format!("bad dtype tag {t}"))),
+        })
+    }
+
+    /// True if the value payload is i64-backed.
+    pub fn is_i64_backed(self) -> bool {
+        !matches!(self, DType::Float32 | DType::Float64)
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            DType::Int64 => "i64",
+            DType::Float32 => "f32",
+            DType::Float64 => "f64",
+            DType::Decimal => "dec(11,2)",
+            DType::Date => "date",
+            DType::Dict => "dict",
+        };
+        f.write_str(s)
+    }
+}
+
+/// One column of a schema. Dictionary-encoded columns carry their
+/// dictionary (code -> string) inline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Field {
+    pub name: String,
+    pub dtype: DType,
+    /// For `DType::Dict`: code i -> dictionary[i].
+    pub dictionary: Vec<String>,
+}
+
+impl Field {
+    pub fn new(name: impl Into<String>, dtype: DType) -> Self {
+        Field { name: name.into(), dtype, dictionary: Vec::new() }
+    }
+
+    pub fn dict(name: impl Into<String>, dictionary: Vec<String>) -> Self {
+        Field { name: name.into(), dtype: DType::Dict, dictionary }
+    }
+
+    /// Dictionary code for `s`, if present.
+    pub fn code_of(&self, s: &str) -> Option<i64> {
+        self.dictionary.iter().position(|d| d == s).map(|i| i as i64)
+    }
+}
+
+/// Ordered field list.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct Schema {
+    pub fields: Vec<Field>,
+}
+
+impl Schema {
+    pub fn new(fields: Vec<Field>) -> Self {
+        Schema { fields }
+    }
+
+    pub fn len(&self) -> usize {
+        self.fields.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fields.is_empty()
+    }
+
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        self.fields
+            .iter()
+            .position(|f| f.name == name)
+            .ok_or_else(|| Error::Plan(format!("no column named '{name}'")))
+    }
+
+    pub fn field(&self, name: &str) -> Result<&Field> {
+        Ok(&self.fields[self.index_of(name)?])
+    }
+
+    /// Project a subset of columns (scan pushdown).
+    pub fn project(&self, names: &[&str]) -> Result<Schema> {
+        let fields = names
+            .iter()
+            .map(|n| self.field(n).cloned())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Schema { fields })
+    }
+
+    /// Bytes per row (used by memory estimation heuristics).
+    pub fn row_width(&self) -> usize {
+        self.fields.iter().map(|f| f.dtype.width()).sum()
+    }
+
+    pub fn encode(&self, w: &mut Writer) {
+        w.u32(self.fields.len() as u32);
+        for f in &self.fields {
+            w.str(&f.name);
+            w.u8(f.dtype.tag());
+            w.u32(f.dictionary.len() as u32);
+            for d in &f.dictionary {
+                w.str(d);
+            }
+        }
+    }
+
+    pub fn decode(r: &mut Reader) -> Result<Schema> {
+        let n = r.u32()? as usize;
+        let mut fields = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = r.str()?;
+            let dtype = DType::from_tag(r.u8()?)?;
+            let nd = r.u32()? as usize;
+            let mut dictionary = Vec::with_capacity(nd);
+            for _ in 0..nd {
+                dictionary.push(r.str()?);
+            }
+            fields.push(Field { name, dtype, dictionary });
+        }
+        Ok(Schema { fields })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Schema {
+        Schema::new(vec![
+            Field::new("l_orderkey", DType::Int64),
+            Field::new("l_quantity", DType::Decimal),
+            Field::new("l_shipdate", DType::Date),
+            Field::dict("l_returnflag", vec!["A".into(), "N".into(), "R".into()]),
+            Field::new("l_extendedprice", DType::Float32),
+        ])
+    }
+
+    #[test]
+    fn index_and_project() {
+        let s = sample();
+        assert_eq!(s.index_of("l_shipdate").unwrap(), 2);
+        assert!(s.index_of("nope").is_err());
+        let p = s.project(&["l_quantity", "l_orderkey"]).unwrap();
+        assert_eq!(p.fields[0].name, "l_quantity");
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn dict_codes() {
+        let s = sample();
+        let f = s.field("l_returnflag").unwrap();
+        assert_eq!(f.code_of("N"), Some(1));
+        assert_eq!(f.code_of("X"), None);
+    }
+
+    #[test]
+    fn serde_roundtrip() {
+        let s = sample();
+        let mut w = Writer::new();
+        s.encode(&mut w);
+        let buf = w.finish();
+        let got = Schema::decode(&mut Reader::new(&buf)).unwrap();
+        assert_eq!(got, s);
+    }
+
+    #[test]
+    fn row_width_sums_dtype_widths() {
+        assert_eq!(sample().row_width(), 8 + 8 + 8 + 8 + 4);
+    }
+}

@@ -1,0 +1,256 @@
+//! Little-endian binary encode/decode helpers — the hand-rolled wire
+//! grammar shared by the columnar file format (`storage::format`), spill
+//! files, and network frames (no serde available offline; a fixed
+//! explicit wire format is also what the paper's IPC needs anyway).
+
+use crate::{Error, Result};
+
+/// Append-only encoder.
+#[derive(Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Writer { buf: Vec::with_capacity(n) }
+    }
+
+    #[inline]
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    #[inline]
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Length-prefixed raw bytes.
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.u64(b.len() as u64);
+        self.buf.extend_from_slice(b);
+    }
+
+    /// Raw bytes, no prefix (caller knows the length).
+    pub fn raw(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+/// Cursor-based decoder with bounds checking.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+macro_rules! read_prim {
+    ($name:ident, $ty:ty) => {
+        #[inline]
+        pub fn $name(&mut self) -> Result<$ty> {
+            const N: usize = std::mem::size_of::<$ty>();
+            let b = self.take(N)?;
+            Ok(<$ty>::from_le_bytes(b.try_into().unwrap()))
+        }
+    };
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    #[inline]
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::Format(format!(
+                "truncated: need {} bytes at offset {}, have {}",
+                n,
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    read_prim!(u16, u16);
+    read_prim!(u32, u32);
+    read_prim!(u64, u64);
+    read_prim!(i64, i64);
+    read_prim!(f32, f32);
+    read_prim!(f64, f64);
+
+    #[inline]
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec())
+            .map_err(|e| Error::Format(format!("bad utf8: {e}")))
+    }
+
+    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.u64()? as usize;
+        self.take(n)
+    }
+
+    pub fn raw(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn seek(&mut self, pos: usize) -> Result<()> {
+        if pos > self.buf.len() {
+            return Err(Error::Format(format!("seek {} past end {}", pos, self.buf.len())));
+        }
+        self.pos = pos;
+        Ok(())
+    }
+}
+
+/// Reinterpret a typed slice as raw little-endian bytes (native LE only;
+/// we target x86-64/aarch64-LE, asserted at build time below).
+pub fn as_bytes<T: Copy>(xs: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(xs.as_ptr() as *const u8, std::mem::size_of_val(xs))
+    }
+}
+
+/// Reinterpret raw bytes back to a typed vec (copies; alignment-safe).
+pub fn from_bytes<T: Copy>(b: &[u8]) -> Result<Vec<T>> {
+    let sz = std::mem::size_of::<T>();
+    if b.len() % sz != 0 {
+        return Err(Error::Format(format!(
+            "byte length {} not a multiple of element size {}",
+            b.len(),
+            sz
+        )));
+    }
+    let n = b.len() / sz;
+    let mut v = Vec::<T>::with_capacity(n);
+    unsafe {
+        std::ptr::copy_nonoverlapping(b.as_ptr(), v.as_mut_ptr() as *mut u8, b.len());
+        v.set_len(n);
+    }
+    Ok(v)
+}
+
+#[cfg(target_endian = "big")]
+compile_error!("theseus assumes a little-endian target");
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u16(300);
+        w.u32(70_000);
+        w.u64(1 << 40);
+        w.i64(-42);
+        w.f32(1.5);
+        w.f64(-2.25);
+        w.str("theseus");
+        w.bytes(&[1, 2, 3]);
+        let buf = w.finish();
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 300);
+        assert_eq!(r.u32().unwrap(), 70_000);
+        assert_eq!(r.u64().unwrap(), 1 << 40);
+        assert_eq!(r.i64().unwrap(), -42);
+        assert_eq!(r.f32().unwrap(), 1.5);
+        assert_eq!(r.f64().unwrap(), -2.25);
+        assert_eq!(r.str().unwrap(), "theseus");
+        assert_eq!(r.bytes().unwrap(), &[1, 2, 3]);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let buf = [1u8, 2];
+        let mut r = Reader::new(&buf);
+        assert!(r.u64().is_err());
+    }
+
+    #[test]
+    fn typed_slice_roundtrip() {
+        let xs: Vec<i64> = vec![-1, 0, 1, i64::MAX];
+        let b = as_bytes(&xs);
+        assert_eq!(b.len(), 32);
+        let back: Vec<i64> = from_bytes(b).unwrap();
+        assert_eq!(back, xs);
+        let f: Vec<f32> = vec![1.0, -2.5];
+        assert_eq!(from_bytes::<f32>(as_bytes(&f)).unwrap(), f);
+    }
+
+    #[test]
+    fn from_bytes_misaligned_length_rejected() {
+        assert!(from_bytes::<i64>(&[0u8; 7]).is_err());
+    }
+}

@@ -1,0 +1,51 @@
+//! Small shared utilities: hashing, PRNG, byte encoding, human sizes.
+
+pub mod bytes;
+pub mod hash;
+pub mod rng;
+
+/// Format a byte count for logs ("1.50 GiB").
+pub fn human_bytes(n: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", n, UNITS[0])
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Integer ceiling division.
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Round `n` up to a multiple of `align`.
+pub fn align_up(n: usize, align: usize) -> usize {
+    div_ceil(n, align) * align
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn align_and_ceil() {
+        assert_eq!(div_ceil(10, 3), 4);
+        assert_eq!(align_up(10, 8), 16);
+        assert_eq!(align_up(16, 8), 16);
+        assert_eq!(align_up(0, 8), 0);
+    }
+}

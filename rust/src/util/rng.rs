@@ -1,0 +1,147 @@
+//! Deterministic PRNG for data generation and simulation jitter
+//! (xoshiro256** seeded via SplitMix64 — no external `rand` needed).
+
+use super::hash::splitmix64;
+
+/// xoshiro256** — fast, high-quality, reproducible across platforms.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed deterministically; distinct seeds give independent streams.
+    pub fn new(seed: u64) -> Self {
+        // SplitMix64 expansion, per Vigna's recommendation.
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            splitmix64(sm.wrapping_sub(0x9E37_79B9_7F4A_7C15))
+        };
+        let s = [next(), next(), next(), next()];
+        Rng { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, bound)` (Lemire's method).
+    #[inline]
+    pub fn gen_range(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform in `[lo, hi]` inclusive, for i64 workload keys.
+    #[inline]
+    pub fn gen_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(hi >= lo);
+        lo + self.gen_range((hi - lo) as u64 + 1) as i64
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    #[inline]
+    pub fn gen_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (self.gen_f64() as f32) * (hi - lo)
+    }
+
+    /// True with probability `p`.
+    #[inline]
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.gen_f64() < p
+    }
+
+    /// Zipf-like skewed index in `[0, n)` with exponent `theta` in (0,1);
+    /// used for skewed join keys (TPC-DS-lite) and adversarial tests.
+    pub fn gen_zipf(&mut self, n: u64, theta: f64) -> u64 {
+        // Approximate inverse-CDF sampling: rank ~ u^(1/(1-theta)).
+        let u = self.gen_f64().max(1e-12);
+        let r = (u.powf(1.0 / (1.0 - theta)) * n as f64) as u64;
+        r.min(n - 1)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn range_bounds_respected() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let v = r.gen_range(7);
+            assert!(v < 7);
+            let x = r.gen_i64(-5, 5);
+            assert!((-5..=5).contains(&x));
+            let f = r.gen_f32(1.0, 2.0);
+            assert!((1.0..2.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn gen_f64_unit_interval_mean() {
+        let mut r = Rng::new(9);
+        let mean: f64 = (0..10_000).map(|_| r.gen_f64()).sum::<f64>() / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn zipf_is_skewed_toward_zero() {
+        let mut r = Rng::new(5);
+        let lows = (0..10_000).filter(|_| r.gen_zipf(1000, 0.5) < 100).count();
+        assert!(lows > 2_000, "zipf not skewed: {lows}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(8);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,12 @@
+//! Workloads: TPC-H / TPC-DS-lite data generation, the query suites
+//! the benches run, and the Photon-like CPU baseline engine
+//! (DESIGN.md substitutions #1 and #3).
+
+pub mod baseline;
+pub mod queries;
+pub mod tpcds;
+pub mod tpch;
+
+pub use baseline::CpuEngine;
+pub use queries::{tpcds_lite_suite, tpch_suite, QueryDef};
+pub use tpch::TpchGen;

@@ -1,0 +1,301 @@
+//! Query suites: TPC-H-derived and TPC-DS-lite-derived logical queries
+//! over the generated tables. These are the workloads every bench runs
+//! "sequentially" (§4), scaled-down analogs of the queries the paper's
+//! evaluation executes.
+//!
+//! Derivation notes: our plan algebra covers scan/filter/project/
+//! join/group-by/sort/limit on single-key groupings; each query keeps
+//! its TPC original's *shape* (which tables, how many joins, selectivity
+//! knobs, agg fan-in) so the data-movement profile — what Theseus
+//! optimizes — is preserved.
+
+use crate::exec::plan::{AggFn, AggSpec, Pred};
+use crate::planner::Logical;
+use crate::workload::tpch::{DATE_HI, DATE_LO};
+
+/// One suite entry.
+pub struct QueryDef {
+    pub id: &'static str,
+    /// TPC query this derives from.
+    pub derived_from: &'static str,
+    pub joins: usize,
+    pub build: fn() -> Logical,
+}
+
+impl QueryDef {
+    pub fn logical(&self) -> Logical {
+        (self.build)()
+    }
+}
+
+fn mid_date(frac: f64) -> i64 {
+    DATE_LO + ((DATE_HI - DATE_LO) as f64 * frac) as i64
+}
+
+// ---------------------------------------------------------------- TPC-H
+
+fn q1() -> Logical {
+    // pricing summary: heavy scan + low-cardinality agg
+    Logical::scan_where(
+        "lineitem",
+        &["l_returnflag", "l_quantity", "l_extendedprice", "l_shipdate"],
+        Pred::RangeI64 { col: "l_shipdate".into(), lo: DATE_LO, hi: mid_date(0.9) },
+    )
+    .filter(Pred::RangeI64 { col: "l_shipdate".into(), lo: DATE_LO, hi: mid_date(0.9) })
+    .aggregate(
+        "l_returnflag",
+        vec![
+            AggSpec::new(AggFn::Sum, "l_quantity"),
+            AggSpec::new(AggFn::Sum, "l_extendedprice"),
+            AggSpec::new(AggFn::Count, "l_quantity"),
+        ],
+    )
+    .sort("l_returnflag", false)
+}
+
+fn q3() -> Logical {
+    // shipping priority: 2 joins, selective filters, top-10
+    let customer = Logical::scan("customer", &["c_custkey", "c_mktsegment"])
+        .filter(Pred::EqI64 { col: "c_mktsegment".into(), val: 1 });
+    let orders = Logical::scan_where(
+        "orders",
+        &["o_orderkey", "o_custkey", "o_orderdate"],
+        Pred::RangeI64 { col: "o_orderdate".into(), lo: DATE_LO, hi: mid_date(0.5) },
+    )
+    .filter(Pred::RangeI64 { col: "o_orderdate".into(), lo: DATE_LO, hi: mid_date(0.5) });
+    let lineitem = Logical::scan("lineitem", &["l_orderkey", "l_extendedprice", "l_shipdate"])
+        .filter(Pred::RangeI64 {
+            col: "l_shipdate".into(),
+            lo: mid_date(0.5),
+            hi: DATE_HI + 1,
+        });
+    customer
+        .join(orders, "c_custkey", "o_custkey", true)
+        .join(lineitem, "o_orderkey", "l_orderkey", true)
+        .aggregate("o_orderkey", vec![AggSpec::new(AggFn::Sum, "l_extendedprice")])
+        .sort("sum_l_extendedprice", true)
+        .limit(10)
+}
+
+fn q5() -> Logical {
+    // local supplier volume: 3-join chain ending in a small-dim agg
+    let nation = Logical::scan("nation", &["n_nationkey", "n_regionkey"])
+        .filter(Pred::EqI64 { col: "n_regionkey".into(), val: 2 });
+    let customer = Logical::scan("customer", &["c_custkey", "c_nationkey"]);
+    let orders = Logical::scan("orders", &["o_orderkey", "o_custkey"]);
+    let lineitem = Logical::scan("lineitem", &["l_orderkey", "l_extendedprice"]);
+    nation
+        .join(customer, "n_nationkey", "c_nationkey", true)
+        .join(orders, "c_custkey", "o_custkey", true)
+        .join(lineitem, "o_orderkey", "l_orderkey", true)
+        .aggregate("n_nationkey", vec![AggSpec::new(AggFn::Sum, "l_extendedprice")])
+        .sort("sum_l_extendedprice", true)
+}
+
+fn q6() -> Logical {
+    // forecasting revenue: pure filter + tiny agg (no joins)
+    Logical::scan_where(
+        "lineitem",
+        &["l_linestatus", "l_extendedprice", "l_discount", "l_quantity", "l_shipdate"],
+        Pred::RangeI64 { col: "l_shipdate".into(), lo: mid_date(0.2), hi: mid_date(0.4) },
+    )
+    .filter(
+        Pred::RangeI64 { col: "l_shipdate".into(), lo: mid_date(0.2), hi: mid_date(0.4) }
+            .and(Pred::RangeI64 { col: "l_discount".into(), lo: 5, hi: 8 })
+            .and(Pred::RangeI64 { col: "l_quantity".into(), lo: 0, hi: 2400 }),
+    )
+    .aggregate("l_linestatus", vec![AggSpec::new(AggFn::Sum, "l_extendedprice")])
+}
+
+fn q12() -> Logical {
+    // shipping modes: 1 join + priority agg
+    let orders = Logical::scan("orders", &["o_orderkey", "o_orderpriority"]);
+    let lineitem = Logical::scan_where(
+        "lineitem",
+        &["l_orderkey", "l_receiptdate"],
+        Pred::RangeI64 { col: "l_receiptdate".into(), lo: mid_date(0.3), hi: mid_date(0.45) },
+    )
+    .filter(Pred::RangeI64 {
+        col: "l_receiptdate".into(),
+        lo: mid_date(0.3),
+        hi: mid_date(0.45),
+    });
+    orders
+        .join(lineitem, "o_orderkey", "l_orderkey", true)
+        .aggregate("o_orderpriority", vec![AggSpec::new(AggFn::Count, "l_orderkey")])
+        .sort("o_orderpriority", false)
+}
+
+fn q14() -> Logical {
+    // promotion effect: part ⋈ lineitem by partkey
+    let part = Logical::scan("part", &["p_partkey", "p_brand"]);
+    let lineitem = Logical::scan_where(
+        "lineitem",
+        &["l_partkey", "l_extendedprice", "l_shipdate"],
+        Pred::RangeI64 { col: "l_shipdate".into(), lo: mid_date(0.6), hi: mid_date(0.7) },
+    )
+    .filter(Pred::RangeI64 { col: "l_shipdate".into(), lo: mid_date(0.6), hi: mid_date(0.7) });
+    part.join(lineitem, "p_partkey", "l_partkey", true)
+        .aggregate("p_brand", vec![AggSpec::new(AggFn::Sum, "l_extendedprice")])
+        .sort("sum_l_extendedprice", true)
+        .limit(10)
+}
+
+fn q18() -> Logical {
+    // large-volume customers: big-big join + top-100
+    let orders = Logical::scan("orders", &["o_orderkey", "o_custkey"]);
+    let lineitem = Logical::scan("lineitem", &["l_orderkey", "l_quantity"]);
+    orders
+        .join(lineitem, "o_orderkey", "l_orderkey", true)
+        .aggregate("o_custkey", vec![AggSpec::new(AggFn::Sum, "l_quantity")])
+        .sort("sum_l_quantity", true)
+        .limit(100)
+}
+
+fn q19() -> Logical {
+    // discounted revenue: selective part filter drives LIP
+    let part = Logical::scan("part", &["p_partkey", "p_brand", "p_size"])
+        .filter(
+            Pred::EqI64 { col: "p_brand".into(), val: 12 }
+                .and(Pred::RangeI64 { col: "p_size".into(), lo: 1, hi: 11 }),
+        );
+    let lineitem =
+        Logical::scan("lineitem", &["l_partkey", "l_extendedprice", "l_quantity"]);
+    part.join(lineitem, "p_partkey", "l_partkey", true)
+        .aggregate("p_brand", vec![AggSpec::new(AggFn::Sum, "l_extendedprice")])
+}
+
+/// The TPC-H-derived suite (run sequentially, as in §4).
+pub fn tpch_suite() -> Vec<QueryDef> {
+    vec![
+        QueryDef { id: "q1", derived_from: "TPC-H Q1", joins: 0, build: q1 },
+        QueryDef { id: "q3", derived_from: "TPC-H Q3", joins: 2, build: q3 },
+        QueryDef { id: "q5", derived_from: "TPC-H Q5", joins: 3, build: q5 },
+        QueryDef { id: "q6", derived_from: "TPC-H Q6", joins: 0, build: q6 },
+        QueryDef { id: "q12", derived_from: "TPC-H Q12", joins: 1, build: q12 },
+        QueryDef { id: "q14", derived_from: "TPC-H Q14", joins: 1, build: q14 },
+        QueryDef { id: "q18", derived_from: "TPC-H Q18", joins: 1, build: q18 },
+        QueryDef { id: "q19", derived_from: "TPC-H Q19", joins: 1, build: q19 },
+    ]
+}
+
+// --------------------------------------------------------------- TPC-DS
+
+fn d1() -> Logical {
+    let dates = Logical::scan("date_dim", &["d_date_sk", "d_year", "d_moy"])
+        .filter(Pred::EqI64 { col: "d_year".into(), val: 2000 });
+    let sales = Logical::scan("store_sales", &["ss_sold_date_sk", "ss_sales_price"]);
+    dates
+        .join(sales, "d_date_sk", "ss_sold_date_sk", true)
+        .aggregate("d_moy", vec![AggSpec::new(AggFn::Sum, "ss_sales_price")])
+        .sort("d_moy", false)
+}
+
+fn d2() -> Logical {
+    let items = Logical::scan("item", &["i_item_sk", "i_category_sk"]);
+    let sales = Logical::scan("store_sales", &["ss_item_sk", "ss_sales_price"]);
+    items
+        .join(sales, "i_item_sk", "ss_item_sk", true)
+        .aggregate("i_category_sk", vec![
+            AggSpec::new(AggFn::Sum, "ss_sales_price"),
+            AggSpec::new(AggFn::Count, "ss_sales_price"),
+        ])
+        .sort("sum_ss_sales_price", true)
+}
+
+fn d3() -> Logical {
+    let stores = Logical::scan("store", &["st_store_sk", "st_state_sk"]);
+    let sales = Logical::scan("store_sales", &["ss_store_sk", "ss_net_profit"]);
+    stores
+        .join(sales, "st_store_sk", "ss_store_sk", true)
+        .aggregate("st_state_sk", vec![AggSpec::new(AggFn::Sum, "ss_net_profit")])
+        .sort("st_state_sk", false)
+}
+
+fn d4() -> Logical {
+    let items = Logical::scan("item", &["i_item_sk", "i_category_sk", "i_current_price"])
+        .filter(Pred::RangeI64 { col: "i_current_price".into(), lo: 100_00, hi: 200_00 });
+    let sales = Logical::scan("store_sales", &["ss_item_sk", "ss_quantity", "ss_sales_price"])
+        .filter(Pred::RangeI64 { col: "ss_quantity".into(), lo: 1, hi: 50 });
+    items
+        .join(sales, "i_item_sk", "ss_item_sk", true)
+        .aggregate("i_category_sk", vec![AggSpec::new(AggFn::Sum, "ss_sales_price")])
+        .sort("sum_ss_sales_price", true)
+        .limit(5)
+}
+
+fn d5() -> Logical {
+    // two dimension joins against the fact table
+    let dates = Logical::scan("date_dim", &["d_date_sk", "d_year"])
+        .filter(Pred::RangeI64 { col: "d_year".into(), lo: 1999, hi: 2002 });
+    let sales = Logical::scan("store_sales", &["ss_sold_date_sk", "ss_item_sk", "ss_sales_price"]);
+    let items = Logical::scan("item", &["i_item_sk", "i_category_sk"]);
+    items
+        .join(
+            dates.join(sales, "d_date_sk", "ss_sold_date_sk", true),
+            "i_item_sk",
+            "ss_item_sk",
+            true,
+        )
+        .aggregate("i_category_sk", vec![AggSpec::new(AggFn::Sum, "ss_sales_price")])
+        .sort("i_category_sk", false)
+}
+
+fn d6() -> Logical {
+    Logical::scan("store_sales", &["ss_item_sk", "ss_quantity"])
+        .filter(Pred::RangeI64 { col: "ss_quantity".into(), lo: 80, hi: 101 })
+        .aggregate("ss_item_sk", vec![AggSpec::new(AggFn::Count, "ss_quantity")])
+        .sort("count_ss_quantity", true)
+        .limit(25)
+}
+
+/// The TPC-DS-lite suite.
+pub fn tpcds_lite_suite() -> Vec<QueryDef> {
+    vec![
+        QueryDef { id: "d1", derived_from: "TPC-DS Q3-shape", joins: 1, build: d1 },
+        QueryDef { id: "d2", derived_from: "TPC-DS Q42-shape", joins: 1, build: d2 },
+        QueryDef { id: "d3", derived_from: "TPC-DS Q7-shape", joins: 1, build: d3 },
+        QueryDef { id: "d4", derived_from: "TPC-DS Q19-shape", joins: 1, build: d4 },
+        QueryDef { id: "d5", derived_from: "TPC-DS Q72-shape", joins: 2, build: d5 },
+        QueryDef { id: "d6", derived_from: "TPC-DS Q96-shape", joins: 0, build: d6 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::Planner;
+
+    #[test]
+    fn all_queries_plan_cleanly() {
+        for workers in [1, 4] {
+            let p = Planner::new(workers);
+            for q in tpch_suite().iter().chain(tpcds_lite_suite().iter()) {
+                let plan = p.plan(&q.logical());
+                assert!(plan.is_ok(), "{} failed to plan: {:?}", q.id, plan.err());
+                let plan = plan.unwrap();
+                assert!(plan.len() >= 2, "{} too trivial", q.id);
+            }
+        }
+    }
+
+    #[test]
+    fn suites_have_expected_sizes() {
+        assert_eq!(tpch_suite().len(), 8);
+        assert_eq!(tpcds_lite_suite().len(), 6);
+    }
+
+    #[test]
+    fn join_counts_match_plan_structure() {
+        let p = Planner::new(1);
+        for q in tpch_suite() {
+            let plan = p.plan(&q.logical()).unwrap();
+            let joins = plan
+                .nodes
+                .iter()
+                .filter(|n| matches!(n.spec, crate::exec::plan::OpSpec::HashJoin { .. }))
+                .count();
+            assert_eq!(joins, q.joins, "{}", q.id);
+        }
+    }
+}

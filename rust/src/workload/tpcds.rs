@@ -1,0 +1,192 @@
+//! TPC-DS-lite: a star-schema subset (DESIGN.md substitution #1) —
+//! one `store_sales` fact table with three dimensions (`date_dim`,
+//! `item`, `store`). TPC-DS's defining workload property relative to
+//! TPC-H is many dimension joins against one wide fact table with
+//! skewed keys; this subset preserves exactly that shape for the Fig-5
+//! scaling suite.
+
+use std::sync::Arc;
+
+use crate::storage::compression::Codec;
+use crate::storage::format::FileWriter;
+use crate::storage::object_store::ObjectStore;
+use crate::types::{Column, DType, Field, RecordBatch, Schema};
+use crate::util::rng::Rng;
+use crate::Result;
+
+pub struct TpcdsGen {
+    pub sf: f64,
+    pub seed: u64,
+    pub row_group_rows: usize,
+    pub rows_per_file: usize,
+    pub codec: Codec,
+}
+
+impl TpcdsGen {
+    pub fn new(sf: f64) -> TpcdsGen {
+        TpcdsGen {
+            sf,
+            seed: 4242,
+            row_group_rows: 4096,
+            rows_per_file: 16384,
+            codec: Codec::Zstd { level: 1 },
+        }
+    }
+
+    pub fn store_sales_rows(&self) -> usize {
+        (2_880_000.0 * self.sf) as usize
+    }
+
+    pub fn item_rows(&self) -> usize {
+        ((18_000.0 * self.sf) as usize).max(100)
+    }
+
+    pub fn store_rows(&self) -> usize {
+        ((12.0 * self.sf.max(1.0)) as usize).max(6)
+    }
+
+    pub fn date_rows(&self) -> usize {
+        2556 // 7 years of days, fixed like the real date_dim
+    }
+
+    pub fn store_sales_schema() -> Schema {
+        Schema::new(vec![
+            Field::new("ss_sold_date_sk", DType::Int64),
+            Field::new("ss_item_sk", DType::Int64),
+            Field::new("ss_store_sk", DType::Int64),
+            Field::new("ss_quantity", DType::Int64),
+            Field::new("ss_sales_price", DType::Float32),
+            Field::new("ss_net_profit", DType::Decimal),
+        ])
+    }
+
+    pub fn write_all(&self, store: &Arc<dyn ObjectStore>) -> Result<u64> {
+        let mut total = 0u64;
+        // fact
+        let rows = self.store_sales_rows();
+        let items = self.item_rows() as i64;
+        let stores = self.store_rows() as i64;
+        let dates = self.date_rows() as i64;
+        let seed = self.seed;
+        let rows_per_file = self.rows_per_file.max(self.row_group_rows);
+        let files = rows.div_ceil(rows_per_file).max(1);
+        let mut off = 0usize;
+        for f in 0..files {
+            let n = rows_per_file.min(rows - off);
+            let mut rng = Rng::new(seed ^ 0x55 ^ off as u64);
+            let mut w =
+                FileWriter::new(Self::store_sales_schema(), self.codec, self.row_group_rows);
+            if n > 0 {
+                w.write(RecordBatch::new(vec![
+                    Column::i64(
+                        "ss_sold_date_sk",
+                        (0..n).map(|_| rng.gen_i64(0, dates - 1)).collect(),
+                    ),
+                    // item keys are zipf-skewed — the TPC-DS hallmark
+                    Column::i64(
+                        "ss_item_sk",
+                        (0..n).map(|_| rng.gen_zipf(items as u64, 0.5) as i64).collect(),
+                    ),
+                    Column::i64(
+                        "ss_store_sk",
+                        (0..n).map(|_| rng.gen_i64(0, stores - 1)).collect(),
+                    ),
+                    Column::i64("ss_quantity", (0..n).map(|_| rng.gen_i64(1, 100)).collect()),
+                    Column::f32(
+                        "ss_sales_price",
+                        (0..n).map(|_| rng.gen_f32(1.0, 300.0)).collect(),
+                    ),
+                    Column::decimal(
+                        "ss_net_profit",
+                        (0..n).map(|_| rng.gen_i64(-10_000_00, 20_000_00)).collect(),
+                    ),
+                ])?)?;
+            }
+            let bytes = w.finish()?;
+            total += bytes.len() as u64;
+            store.put(&format!("store_sales/part-{f}.ths"), &bytes)?;
+            off += n;
+        }
+
+        // dimensions (single file each)
+        let mut rng = Rng::new(self.seed ^ 0xd1);
+        let date_schema = Schema::new(vec![
+            Field::new("d_date_sk", DType::Int64),
+            Field::new("d_year", DType::Int64),
+            Field::new("d_moy", DType::Int64),
+        ]);
+        let n = self.date_rows();
+        let mut w = FileWriter::new(date_schema, Codec::None, 1024);
+        w.write(RecordBatch::new(vec![
+            Column::i64("d_date_sk", (0..n as i64).collect()),
+            Column::i64("d_year", (0..n).map(|i| 1998 + (i / 365) as i64).collect()),
+            Column::i64("d_moy", (0..n).map(|i| ((i / 30) % 12 + 1) as i64).collect()),
+        ])?)?;
+        let bytes = w.finish()?;
+        total += bytes.len() as u64;
+        store.put("date_dim/part-0.ths", &bytes)?;
+
+        let item_schema = Schema::new(vec![
+            Field::new("i_item_sk", DType::Int64),
+            Field::new("i_category_sk", DType::Int64),
+            Field::new("i_current_price", DType::Decimal),
+        ]);
+        let n = self.item_rows();
+        let mut w = FileWriter::new(item_schema, self.codec, self.row_group_rows);
+        w.write(RecordBatch::new(vec![
+            Column::i64("i_item_sk", (0..n as i64).collect()),
+            Column::i64("i_category_sk", (0..n).map(|_| rng.gen_i64(0, 9)).collect()),
+            Column::decimal(
+                "i_current_price",
+                (0..n).map(|_| rng.gen_i64(1_00, 300_00)).collect(),
+            ),
+        ])?)?;
+        let bytes = w.finish()?;
+        total += bytes.len() as u64;
+        store.put("item/part-0.ths", &bytes)?;
+
+        let store_schema = Schema::new(vec![
+            Field::new("st_store_sk", DType::Int64),
+            Field::new("st_state_sk", DType::Int64),
+        ]);
+        let n = self.store_rows();
+        let mut w = FileWriter::new(store_schema, Codec::None, 64);
+        w.write(RecordBatch::new(vec![
+            Column::i64("st_store_sk", (0..n as i64).collect()),
+            Column::i64("st_state_sk", (0..n).map(|_| rng.gen_i64(0, 4)).collect()),
+        ])?)?;
+        let bytes = w.finish()?;
+        total += bytes.len() as u64;
+        store.put("store/part-0.ths", &bytes)?;
+        Ok(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimContext;
+    use crate::storage::datasource::{Datasource, GenericDatasource};
+    use crate::storage::object_store::SimObjectStore;
+
+    #[test]
+    fn star_schema_written() {
+        let store = SimObjectStore::in_memory(&SimContext::test());
+        let mut g = TpcdsGen::new(0.001);
+        g.row_group_rows = 512;
+        let dynstore: Arc<dyn ObjectStore> = store.clone();
+        let bytes = g.write_all(&dynstore).unwrap();
+        assert!(bytes > 0);
+        let ds = GenericDatasource::new(store.clone());
+        for (t, want) in [
+            ("store_sales", g.store_sales_rows()),
+            ("date_dim", g.date_rows()),
+            ("item", g.item_rows()),
+            ("store", g.store_rows()),
+        ] {
+            let keys = store.list(&format!("{t}/")).unwrap();
+            let rows: u64 = keys.iter().map(|k| ds.footer(k).unwrap().total_rows()).sum();
+            assert_eq!(rows as usize, want, "{t}");
+        }
+    }
+}

@@ -1,0 +1,484 @@
+//! TPC-H table generator (DESIGN.md substitution #1): the eight tables
+//! with the columns our query suite touches, written as THS columnar
+//! files to an object store.
+//!
+//! Faithful to dbgen in the ways the engine cares about: key
+//! relationships (lineitem.l_orderkey -> orders, orders.o_custkey ->
+//! customer, ...), value distributions (uniform quantities/discounts,
+//! date ranges, skew knob for adversarial tests), multiple files per
+//! table with ~equal row groups (the paper: "row groups are dimensioned
+//! to be approximately 128 MiB" — scaled down here), zstd-compressed
+//! pages.
+//!
+//! `sf = 1.0` matches dbgen cardinalities (6M lineitem). Benches use
+//! fractional scale factors; relative table proportions are preserved.
+//!
+//! Precision note: `l_extendedprice` is generated as f32 so the device
+//! pre-aggregation stage is exercised end-to-end; the other monetary
+//! columns are scale-2 decimals on i64, aggregated exactly on the host
+//! path (DESIGN.md §Substitutions on the paper's 128-bit decimals).
+
+use std::sync::Arc;
+
+use crate::storage::compression::Codec;
+use crate::storage::format::FileWriter;
+use crate::storage::object_store::ObjectStore;
+use crate::types::{Column, ColumnData, DType, Field, RecordBatch, Schema};
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// Dates as days since 1970-01-01; TPC-H covers 1992-01-01..1998-12-31.
+pub const DATE_LO: i64 = 8036; // 1992-01-01
+pub const DATE_HI: i64 = 10592; // 1998-12-31
+
+pub const RETURNFLAGS: [&str; 3] = ["A", "N", "R"];
+pub const LINESTATUS: [&str; 2] = ["F", "O"];
+pub const SEGMENTS: [&str; 5] = ["AUTOMOBILE", "BUILDING", "FURNITURE", "HOUSEHOLD", "MACHINERY"];
+pub const PRIORITIES: [&str; 5] = ["1-URGENT", "2-HIGH", "3-MEDIUM", "4-NOT SPECIFIED", "5-LOW"];
+pub const BRANDS: usize = 25;
+pub const NATIONS: i64 = 25;
+pub const REGIONS: i64 = 5;
+
+/// The generator.
+pub struct TpchGen {
+    pub sf: f64,
+    pub seed: u64,
+    /// Rows per row group in written files.
+    pub row_group_rows: usize,
+    /// Target rows per file (several row groups each).
+    pub rows_per_file: usize,
+    pub codec: Codec,
+    /// Zipf skew on lineitem order keys (0 = uniform, dbgen-like).
+    pub skew: f64,
+}
+
+impl TpchGen {
+    pub fn new(sf: f64) -> TpchGen {
+        TpchGen {
+            sf,
+            seed: 42,
+            row_group_rows: 4096,
+            rows_per_file: 16384,
+            codec: Codec::Zstd { level: 1 },
+            skew: 0.0,
+        }
+    }
+
+    // dbgen cardinalities at SF=1
+    pub fn lineitem_rows(&self) -> usize {
+        (6_000_000.0 * self.sf) as usize
+    }
+
+    pub fn orders_rows(&self) -> usize {
+        (1_500_000.0 * self.sf) as usize
+    }
+
+    pub fn customer_rows(&self) -> usize {
+        (150_000.0 * self.sf) as usize
+    }
+
+    pub fn part_rows(&self) -> usize {
+        (200_000.0 * self.sf) as usize
+    }
+
+    pub fn supplier_rows(&self) -> usize {
+        ((10_000.0 * self.sf) as usize).max(10)
+    }
+
+    pub fn partsupp_rows(&self) -> usize {
+        (800_000.0 * self.sf) as usize
+    }
+
+    /// Generate and write every table. Returns total bytes written.
+    pub fn write_all(&self, store: &Arc<dyn ObjectStore>) -> Result<u64> {
+        let mut total = 0u64;
+        total += self.write_lineitem(store)?;
+        total += self.write_orders(store)?;
+        total += self.write_customer(store)?;
+        total += self.write_part(store)?;
+        total += self.write_supplier(store)?;
+        total += self.write_partsupp(store)?;
+        total += self.write_nation_region(store)?;
+        Ok(total)
+    }
+
+    fn write_table(
+        &self,
+        store: &Arc<dyn ObjectStore>,
+        name: &str,
+        schema: Schema,
+        rows: usize,
+        mut gen_batch: impl FnMut(usize, usize) -> RecordBatch,
+    ) -> Result<u64> {
+        let mut written = 0u64;
+        let rows_per_file = self.rows_per_file.max(self.row_group_rows);
+        let files = rows.div_ceil(rows_per_file).max(1);
+        let mut off = 0usize;
+        for f in 0..files {
+            let n = rows_per_file.min(rows - off);
+            let mut w = FileWriter::new(schema.clone(), self.codec, self.row_group_rows);
+            if n > 0 {
+                w.write(gen_batch(off, n))?;
+            }
+            let bytes = w.finish()?;
+            written += bytes.len() as u64;
+            store.put(&format!("{name}/part-{f}.ths"), &bytes)?;
+            off += n;
+        }
+        Ok(written)
+    }
+
+    pub fn lineitem_schema() -> Schema {
+        Schema::new(vec![
+            Field::new("l_orderkey", DType::Int64),
+            Field::new("l_partkey", DType::Int64),
+            Field::new("l_suppkey", DType::Int64),
+            Field::new("l_quantity", DType::Decimal),
+            Field::new("l_extendedprice", DType::Float32),
+            Field::new("l_discount", DType::Decimal),
+            Field::new("l_tax", DType::Decimal),
+            Field::dict("l_returnflag", RETURNFLAGS.iter().map(|s| s.to_string()).collect()),
+            Field::dict("l_linestatus", LINESTATUS.iter().map(|s| s.to_string()).collect()),
+            Field::new("l_shipdate", DType::Date),
+            Field::new("l_commitdate", DType::Date),
+            Field::new("l_receiptdate", DType::Date),
+        ])
+    }
+
+    fn write_lineitem(&self, store: &Arc<dyn ObjectStore>) -> Result<u64> {
+        let rows = self.lineitem_rows();
+        let orders = self.orders_rows().max(1) as i64;
+        let parts = self.part_rows().max(1) as i64;
+        let supps = self.supplier_rows().max(1) as i64;
+        let seed = self.seed;
+        let skew = self.skew;
+        self.write_table(store, "lineitem", Self::lineitem_schema(), rows, move |off, n| {
+            let mut rng = Rng::new(seed ^ 0x11ee ^ off as u64);
+            let okeys: Vec<i64> = (0..n)
+                .map(|_| {
+                    if skew > 0.0 {
+                        rng.gen_zipf(orders as u64, skew) as i64
+                    } else {
+                        rng.gen_i64(0, orders - 1)
+                    }
+                })
+                .collect();
+            RecordBatch::new(vec![
+                Column::i64("l_orderkey", okeys),
+                Column::i64("l_partkey", (0..n).map(|_| rng.gen_i64(0, parts - 1)).collect()),
+                Column::i64("l_suppkey", (0..n).map(|_| rng.gen_i64(0, supps - 1)).collect()),
+                Column::decimal("l_quantity", (0..n).map(|_| rng.gen_i64(1, 50) * 100).collect()),
+                Column::f32(
+                    "l_extendedprice",
+                    (0..n).map(|_| rng.gen_f32(900.0, 105_000.0)).collect(),
+                ),
+                Column::decimal("l_discount", (0..n).map(|_| rng.gen_i64(0, 10)).collect()),
+                Column::decimal("l_tax", (0..n).map(|_| rng.gen_i64(0, 8)).collect()),
+                Column::dict("l_returnflag", (0..n).map(|_| rng.gen_i64(0, 2)).collect()),
+                Column::dict("l_linestatus", (0..n).map(|_| rng.gen_i64(0, 1)).collect()),
+                Column::date("l_shipdate", (0..n).map(|_| rng.gen_i64(DATE_LO, DATE_HI)).collect()),
+                Column::date("l_commitdate", (0..n).map(|_| rng.gen_i64(DATE_LO, DATE_HI)).collect()),
+                Column::date("l_receiptdate", (0..n).map(|_| rng.gen_i64(DATE_LO, DATE_HI)).collect()),
+            ])
+            .expect("lineitem batch")
+        })
+    }
+
+    pub fn orders_schema() -> Schema {
+        Schema::new(vec![
+            Field::new("o_orderkey", DType::Int64),
+            Field::new("o_custkey", DType::Int64),
+            Field::new("o_totalprice", DType::Decimal),
+            Field::new("o_orderdate", DType::Date),
+            Field::dict("o_orderpriority", PRIORITIES.iter().map(|s| s.to_string()).collect()),
+        ])
+    }
+
+    fn write_orders(&self, store: &Arc<dyn ObjectStore>) -> Result<u64> {
+        let rows = self.orders_rows();
+        let custs = self.customer_rows().max(1) as i64;
+        let seed = self.seed;
+        self.write_table(store, "orders", Self::orders_schema(), rows, move |off, n| {
+            let mut rng = Rng::new(seed ^ 0x0a0a ^ off as u64);
+            RecordBatch::new(vec![
+                // sequential primary key: files cover disjoint ranges,
+                // which also exercises row-group pruning on o_orderkey
+                Column::i64("o_orderkey", (off as i64..(off + n) as i64).collect()),
+                Column::i64("o_custkey", (0..n).map(|_| rng.gen_i64(0, custs - 1)).collect()),
+                Column::decimal(
+                    "o_totalprice",
+                    (0..n).map(|_| rng.gen_i64(1_000_00, 500_000_00)).collect(),
+                ),
+                Column::date("o_orderdate", (0..n).map(|_| rng.gen_i64(DATE_LO, DATE_HI)).collect()),
+                Column::dict("o_orderpriority", (0..n).map(|_| rng.gen_i64(0, 4)).collect()),
+            ])
+            .expect("orders batch")
+        })
+    }
+
+    pub fn customer_schema() -> Schema {
+        Schema::new(vec![
+            Field::new("c_custkey", DType::Int64),
+            Field::new("c_nationkey", DType::Int64),
+            Field::new("c_acctbal", DType::Decimal),
+            Field::dict("c_mktsegment", SEGMENTS.iter().map(|s| s.to_string()).collect()),
+        ])
+    }
+
+    fn write_customer(&self, store: &Arc<dyn ObjectStore>) -> Result<u64> {
+        let rows = self.customer_rows();
+        let seed = self.seed;
+        self.write_table(store, "customer", Self::customer_schema(), rows, move |off, n| {
+            let mut rng = Rng::new(seed ^ 0xc0c0 ^ off as u64);
+            RecordBatch::new(vec![
+                Column::i64("c_custkey", (off as i64..(off + n) as i64).collect()),
+                Column::i64("c_nationkey", (0..n).map(|_| rng.gen_i64(0, NATIONS - 1)).collect()),
+                Column::decimal(
+                    "c_acctbal",
+                    (0..n).map(|_| rng.gen_i64(-999_99, 9_999_99)).collect(),
+                ),
+                Column::dict("c_mktsegment", (0..n).map(|_| rng.gen_i64(0, 4)).collect()),
+            ])
+            .expect("customer batch")
+        })
+    }
+
+    pub fn part_schema() -> Schema {
+        Schema::new(vec![
+            Field::new("p_partkey", DType::Int64),
+            Field::new("p_size", DType::Int64),
+            Field::new("p_retailprice", DType::Decimal),
+            Field::dict(
+                "p_brand",
+                (0..BRANDS).map(|i| format!("Brand#{}{}", i / 5 + 1, i % 5 + 1)).collect(),
+            ),
+        ])
+    }
+
+    fn write_part(&self, store: &Arc<dyn ObjectStore>) -> Result<u64> {
+        let rows = self.part_rows();
+        let seed = self.seed;
+        self.write_table(store, "part", Self::part_schema(), rows, move |off, n| {
+            let mut rng = Rng::new(seed ^ 0x9a97 ^ off as u64);
+            RecordBatch::new(vec![
+                Column::i64("p_partkey", (off as i64..(off + n) as i64).collect()),
+                Column::i64("p_size", (0..n).map(|_| rng.gen_i64(1, 50)).collect()),
+                Column::decimal(
+                    "p_retailprice",
+                    (0..n).map(|_| rng.gen_i64(900_00, 2_000_00)).collect(),
+                ),
+                Column::dict("p_brand", (0..n).map(|_| rng.gen_i64(0, BRANDS as i64 - 1)).collect()),
+            ])
+            .expect("part batch")
+        })
+    }
+
+    pub fn supplier_schema() -> Schema {
+        Schema::new(vec![
+            Field::new("s_suppkey", DType::Int64),
+            Field::new("s_nationkey", DType::Int64),
+            Field::new("s_acctbal", DType::Decimal),
+        ])
+    }
+
+    fn write_supplier(&self, store: &Arc<dyn ObjectStore>) -> Result<u64> {
+        let rows = self.supplier_rows();
+        let seed = self.seed;
+        self.write_table(store, "supplier", Self::supplier_schema(), rows, move |off, n| {
+            let mut rng = Rng::new(seed ^ 0x5u64 ^ off as u64);
+            RecordBatch::new(vec![
+                Column::i64("s_suppkey", (off as i64..(off + n) as i64).collect()),
+                Column::i64("s_nationkey", (0..n).map(|_| rng.gen_i64(0, NATIONS - 1)).collect()),
+                Column::decimal(
+                    "s_acctbal",
+                    (0..n).map(|_| rng.gen_i64(-999_99, 9_999_99)).collect(),
+                ),
+            ])
+            .expect("supplier batch")
+        })
+    }
+
+    pub fn partsupp_schema() -> Schema {
+        Schema::new(vec![
+            Field::new("ps_partkey", DType::Int64),
+            Field::new("ps_suppkey", DType::Int64),
+            Field::new("ps_availqty", DType::Int64),
+            Field::new("ps_supplycost", DType::Decimal),
+        ])
+    }
+
+    fn write_partsupp(&self, store: &Arc<dyn ObjectStore>) -> Result<u64> {
+        let rows = self.partsupp_rows();
+        let parts = self.part_rows().max(1) as i64;
+        let supps = self.supplier_rows().max(1) as i64;
+        let seed = self.seed;
+        self.write_table(store, "partsupp", Self::partsupp_schema(), rows, move |off, n| {
+            let mut rng = Rng::new(seed ^ 0x9599 ^ off as u64);
+            RecordBatch::new(vec![
+                Column::i64("ps_partkey", (0..n).map(|_| rng.gen_i64(0, parts - 1)).collect()),
+                Column::i64("ps_suppkey", (0..n).map(|_| rng.gen_i64(0, supps - 1)).collect()),
+                Column::i64("ps_availqty", (0..n).map(|_| rng.gen_i64(1, 9999)).collect()),
+                Column::decimal(
+                    "ps_supplycost",
+                    (0..n).map(|_| rng.gen_i64(1_00, 1_000_00)).collect(),
+                ),
+            ])
+            .expect("partsupp batch")
+        })
+    }
+
+    fn write_nation_region(&self, store: &Arc<dyn ObjectStore>) -> Result<u64> {
+        let mut rng = Rng::new(self.seed ^ 0x7a7a);
+        let nation_schema = Schema::new(vec![
+            Field::new("n_nationkey", DType::Int64),
+            Field::new("n_regionkey", DType::Int64),
+        ]);
+        let nation = RecordBatch::new(vec![
+            Column::i64("n_nationkey", (0..NATIONS).collect()),
+            Column::i64("n_regionkey", (0..NATIONS).map(|_| rng.gen_i64(0, REGIONS - 1)).collect()),
+        ])?;
+        let mut w = FileWriter::new(nation_schema, Codec::None, 32);
+        w.write(nation)?;
+        let nbytes = w.finish()?;
+        store.put("nation/part-0.ths", &nbytes)?;
+
+        let region_schema = Schema::new(vec![Field::new("r_regionkey", DType::Int64)]);
+        let region = RecordBatch::new(vec![Column::i64("r_regionkey", (0..REGIONS).collect())])?;
+        let mut w = FileWriter::new(region_schema, Codec::None, 8);
+        w.write(region)?;
+        let rbytes = w.finish()?;
+        store.put("region/part-0.ths", &rbytes)?;
+        Ok((nbytes.len() + rbytes.len()) as u64)
+    }
+}
+
+/// Uncompressed logical bytes of a generated dataset (the "scale
+/// factor" the benches report against, analogous to the paper's TB
+/// counts).
+pub fn logical_bytes(gen: &TpchGen) -> u64 {
+    let li = gen.lineitem_rows() as u64 * TpchGen::lineitem_schema().row_width() as u64;
+    let or = gen.orders_rows() as u64 * TpchGen::orders_schema().row_width() as u64;
+    let cu = gen.customer_rows() as u64 * TpchGen::customer_schema().row_width() as u64;
+    let pa = gen.part_rows() as u64 * TpchGen::part_schema().row_width() as u64;
+    let su = gen.supplier_rows() as u64 * TpchGen::supplier_schema().row_width() as u64;
+    let ps = gen.partsupp_rows() as u64 * TpchGen::partsupp_schema().row_width() as u64;
+    li + or + cu + pa + su + ps
+}
+
+/// Decimal column helper for assertions: scaled i64 -> f64.
+pub fn dec_to_f64(c: &ColumnData) -> Vec<f64> {
+    match c {
+        ColumnData::I64(v) => v.iter().map(|&x| x as f64 / 100.0).collect(),
+        ColumnData::F32(v) => v.iter().map(|&x| x as f64).collect(),
+        ColumnData::F64(v) => v.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimContext;
+    use crate::storage::datasource::{Datasource, GenericDatasource};
+    use crate::storage::object_store::SimObjectStore;
+
+    fn tiny_store() -> (Arc<SimObjectStore>, TpchGen) {
+        let store = SimObjectStore::in_memory(&SimContext::test());
+        let mut g = TpchGen::new(0.001); // 6k lineitem
+        g.row_group_rows = 512;
+        g.rows_per_file = 2048;
+        let dynstore: Arc<dyn ObjectStore> = store.clone();
+        g.write_all(&dynstore).unwrap();
+        (store, g)
+    }
+
+    #[test]
+    fn all_tables_written_with_expected_rows() {
+        let (store, g) = tiny_store();
+        let ds = GenericDatasource::new(store.clone());
+        for (table, want) in [
+            ("lineitem", g.lineitem_rows()),
+            ("orders", g.orders_rows()),
+            ("customer", g.customer_rows()),
+            ("part", g.part_rows()),
+            ("supplier", g.supplier_rows()),
+            ("partsupp", g.partsupp_rows()),
+            ("nation", NATIONS as usize),
+            ("region", REGIONS as usize),
+        ] {
+            let keys = store.list(&format!("{table}/")).unwrap();
+            assert!(!keys.is_empty(), "{table} missing");
+            let rows: u64 = keys
+                .iter()
+                .map(|k| ds.footer(k).unwrap().total_rows())
+                .sum();
+            assert_eq!(rows as usize, want, "{table}");
+        }
+    }
+
+    #[test]
+    fn foreign_keys_within_range() {
+        let (store, g) = tiny_store();
+        let ds = GenericDatasource::new(store.clone());
+        let keys = store.list("lineitem/").unwrap();
+        let f = ds.footer(&keys[0]).unwrap();
+        let pages = ds.fetch_group(&keys[0], &f, 0, &[0, 1, 2]).unwrap();
+        let reader = crate::storage::format::FileReader { footer: (*f).clone() };
+        let refs: Vec<&[u8]> = pages.iter().map(|p| p.as_slice()).collect();
+        let b = reader.decode_group(0, &[0, 1, 2], &refs).unwrap();
+        let ok = b.column("l_orderkey").unwrap().data.as_i64().unwrap();
+        assert!(ok.iter().all(|&k| k >= 0 && (k as usize) < g.orders_rows()));
+        let pk = b.column("l_partkey").unwrap().data.as_i64().unwrap();
+        assert!(pk.iter().all(|&k| k >= 0 && (k as usize) < g.part_rows()));
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = {
+            let (store, _) = tiny_store();
+            store.list("").unwrap().len()
+        };
+        let (store1, _) = tiny_store();
+        let (store2, _) = tiny_store();
+        let k = "lineitem/part-0.ths";
+        let l1 = store1.head(k).unwrap();
+        let l2 = store2.head(k).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(
+            store1.get_range(k, 0, l1.min(4096)).unwrap(),
+            store2.get_range(k, 0, l2.min(4096)).unwrap()
+        );
+        assert!(a > 6);
+    }
+
+    #[test]
+    fn skew_changes_key_distribution() {
+        let store = SimObjectStore::in_memory(&SimContext::test());
+        let mut g = TpchGen::new(0.001);
+        g.skew = 0.7;
+        g.row_group_rows = 512;
+        let dynstore: Arc<dyn ObjectStore> = store.clone();
+        g.write_all(&dynstore).unwrap();
+        let ds = GenericDatasource::new(store.clone());
+        let keys = store.list("lineitem/").unwrap();
+        let f = ds.footer(&keys[0]).unwrap();
+        let pages = ds.fetch_group(&keys[0], &f, 0, &[0]).unwrap();
+        let reader = crate::storage::format::FileReader { footer: (*f).clone() };
+        let b = reader
+            .decode_group(0, &[0], &[pages[0].as_slice()])
+            .unwrap();
+        let ok = b.column("l_orderkey").unwrap().data.as_i64().unwrap();
+        let low = ok.iter().filter(|&&k| (k as usize) < g.orders_rows() / 10).count();
+        assert!(
+            low * 2 > ok.len(),
+            "zipf skew should concentrate keys: {low}/{}",
+            ok.len()
+        );
+    }
+
+    #[test]
+    fn logical_bytes_scale_with_sf() {
+        let a = logical_bytes(&TpchGen::new(0.001));
+        let b = logical_bytes(&TpchGen::new(0.002));
+        assert!(b > a + a / 2);
+    }
+}

@@ -1,0 +1,206 @@
+//! Cross-module integration tests: the full engine against the CPU
+//! baseline, spilling under pressure, transport equivalence, failure
+//! handling, and end-to-end property checks.
+
+use std::sync::Arc;
+
+use theseus::cluster::client::connect;
+use theseus::cluster::{Cluster, Gateway};
+use theseus::config::{TransportKind, WorkerConfig};
+use theseus::planner::Logical;
+use theseus::runtime::KernelRegistry;
+use theseus::sim::SimContext;
+use theseus::storage::object_store::{ObjectStore, SimObjectStore};
+use theseus::types::{ColumnData, RecordBatch};
+use theseus::workload::tpcds::TpcdsGen;
+use theseus::workload::{tpcds_lite_suite, tpch_suite, CpuEngine, TpchGen};
+
+fn tpch_store(sf: f64) -> Arc<SimObjectStore> {
+    let store = SimObjectStore::in_memory(&SimContext::test());
+    let mut g = TpchGen::new(sf);
+    g.row_group_rows = 1024;
+    g.rows_per_file = 4096;
+    let dynstore: Arc<dyn ObjectStore> = store.clone();
+    g.write_all(&dynstore).unwrap();
+    store
+}
+
+/// Multiset column comparison (sorted per column, f64 tolerance for the
+/// device's f32 partial sums; ties across engines order differently).
+fn assert_batches_match(id: &str, a: &RecordBatch, b: &RecordBatch) {
+    assert_eq!(a.rows(), b.rows(), "{id}: row count");
+    assert_eq!(a.num_columns(), b.num_columns(), "{id}: column count");
+    for (ca, cb) in a.columns.iter().zip(&b.columns) {
+        assert_eq!(ca.name, cb.name, "{id}: column names");
+        match (&ca.data, &cb.data) {
+            (ColumnData::I64(x), ColumnData::I64(y)) => {
+                let mut x = x.clone();
+                let mut y = y.clone();
+                x.sort_unstable();
+                y.sort_unstable();
+                assert_eq!(x, y, "{id}: column {}", ca.name);
+            }
+            (ColumnData::F64(x), ColumnData::F64(y)) => {
+                let mut x = x.clone();
+                let mut y = y.clone();
+                x.sort_by(|p, q| p.partial_cmp(q).unwrap());
+                y.sort_by(|p, q| p.partial_cmp(q).unwrap());
+                for (u, v) in x.iter().zip(&y) {
+                    assert!(
+                        (u - v).abs() <= 2e-3 * v.abs().max(1.0),
+                        "{id}: {} {u} vs {v}",
+                        ca.name
+                    );
+                }
+            }
+            _ => panic!("{id}: unexpected column layouts"),
+        }
+    }
+}
+
+/// The flagship integration test: every suite query produces the same
+/// result from the 3-worker distributed engine (AOT kernels when built)
+/// and the single-threaded CPU baseline.
+#[test]
+fn distributed_engine_matches_cpu_baseline_tpch() {
+    let store = tpch_store(0.001);
+    let registry = KernelRegistry::shared().ok();
+    let client = connect(
+        WorkerConfig { num_workers: 3, ..WorkerConfig::test() },
+        store.clone(),
+        registry,
+    )
+    .unwrap();
+    let baseline = CpuEngine::new(store);
+    for q in tpch_suite() {
+        let r = client.query(&q.logical()).unwrap_or_else(|e| panic!("{}: {e}", q.id));
+        let b = baseline.run(&q.logical()).unwrap();
+        assert_batches_match(q.id, &r.batch, &b.batch);
+    }
+}
+
+#[test]
+fn distributed_engine_matches_cpu_baseline_tpcds() {
+    let store = SimObjectStore::in_memory(&SimContext::test());
+    let mut g = TpcdsGen::new(0.002);
+    g.row_group_rows = 1024;
+    let dynstore: Arc<dyn ObjectStore> = store.clone();
+    g.write_all(&dynstore).unwrap();
+    let client = connect(
+        WorkerConfig { num_workers: 2, ..WorkerConfig::test() },
+        store.clone(),
+        KernelRegistry::shared().ok(),
+    )
+    .unwrap();
+    let baseline = CpuEngine::new(store);
+    for q in tpcds_lite_suite() {
+        let r = client.query(&q.logical()).unwrap_or_else(|e| panic!("{}: {e}", q.id));
+        let b = baseline.run(&q.logical()).unwrap();
+        assert_batches_match(q.id, &r.batch, &b.batch);
+    }
+}
+
+/// Results stay exact when the device is far too small and everything
+/// spills (the Fig-5 SF=100k-on-2-nodes property).
+#[test]
+fn correctness_under_forced_spilling() {
+    let store = tpch_store(0.002);
+    let cfg = WorkerConfig {
+        num_workers: 2,
+        device_capacity: 40 << 10, // ~2 x 16 KiB scan batches
+        spill_watermark: 0.5,
+        ..WorkerConfig::test()
+    };
+    let client = connect(cfg, store.clone(), None).unwrap();
+    let baseline = CpuEngine::new(store);
+    let q = tpch_suite().into_iter().find(|q| q.id == "q18").unwrap();
+    let r = client.query(&q.logical()).unwrap();
+    let b = baseline.run(&q.logical()).unwrap();
+    assert_batches_match("q18-spill", &r.batch, &b.batch);
+    assert!(
+        r.total_spills() > 0,
+        "expected spills with a 192 KiB device (got {:?})",
+        r.worker_stats.iter().map(|s| s.spills).collect::<Vec<_>>()
+    );
+}
+
+/// The real-TCP transport produces the same results as in-proc.
+#[test]
+fn tcp_and_inproc_transports_agree() {
+    let q = tpch_suite().into_iter().find(|q| q.id == "q12").unwrap();
+    let mut results = Vec::new();
+    for transport in [TransportKind::Inproc, TransportKind::Tcp] {
+        let store = tpch_store(0.001);
+        let cfg = WorkerConfig { num_workers: 2, transport, ..WorkerConfig::test() };
+        let client = connect(cfg, store, None).unwrap();
+        results.push(client.query(&q.logical()).unwrap().batch);
+    }
+    assert_batches_match("q12-transport", &results[0], &results[1]);
+}
+
+/// Planner errors (bad column) surface as clean failures and leave the
+/// cluster reusable.
+#[test]
+fn failed_query_does_not_poison_the_cluster() {
+    let store = tpch_store(0.001);
+    let cluster = Cluster::launch(
+        WorkerConfig { num_workers: 2, ..WorkerConfig::test() },
+        store,
+        None,
+    )
+    .unwrap();
+    let gw = Gateway::new(cluster);
+
+    let bad = Logical::scan("lineitem", &["no_such_column"]);
+    assert!(gw.submit(&bad).is_err());
+
+    let good = tpch_suite().into_iter().find(|q| q.id == "q6").unwrap();
+    let r = gw.submit(&good.logical()).unwrap();
+    assert!(r.batch.rows() > 0, "cluster unusable after failed query");
+}
+
+/// Sequential suite runs on one cluster leave no residue (§4 runs
+/// queries sequentially; holders/channels must be fully recycled).
+#[test]
+fn repeated_suite_runs_are_stable() {
+    let store = tpch_store(0.001);
+    let client = connect(
+        WorkerConfig { num_workers: 2, ..WorkerConfig::test() },
+        store,
+        None,
+    )
+    .unwrap();
+    let q = tpch_suite().into_iter().find(|q| q.id == "q3").unwrap();
+    let first = client.query(&q.logical()).unwrap().batch;
+    for _ in 0..3 {
+        let again = client.query(&q.logical()).unwrap().batch;
+        assert_batches_match("q3-repeat", &first, &again);
+    }
+}
+
+/// Property: exchange + aggregation conserves row counts for any key
+/// distribution (uniform, skewed, constant).
+#[test]
+fn aggregation_conserves_counts_property() {
+    use theseus::exec::plan::{AggFn, AggSpec};
+    for (name, skew) in [("uniform", 0.0), ("zipf", 0.8)] {
+        let store = SimObjectStore::in_memory(&SimContext::test());
+        let mut g = TpchGen::new(0.001);
+        g.skew = skew;
+        g.row_group_rows = 1024;
+        let dynstore: Arc<dyn ObjectStore> = store.clone();
+        g.write_all(&dynstore).unwrap();
+        let client = connect(
+            WorkerConfig { num_workers: 3, ..WorkerConfig::test() },
+            store,
+            None,
+        )
+        .unwrap();
+        let q = Logical::scan("lineitem", &["l_orderkey", "l_quantity"])
+            .aggregate("l_orderkey", vec![AggSpec::new(AggFn::Count, "l_quantity")]);
+        let r = client.query(&q).unwrap();
+        let counts = r.batch.column("count_l_quantity").unwrap().data.as_f64().unwrap();
+        let total: f64 = counts.iter().sum();
+        assert_eq!(total as usize, g.lineitem_rows(), "{name}: rows lost in exchange");
+    }
+}

@@ -1,8 +1,8 @@
 //! Spilling demonstration (§4.2: "we demonstrate spilling by processing
 //! SF=100k (100TB) on two nodes"): run a dataset that is several times
-//! larger than the configured device memory, watch the Memory Executor
-//! demote Batch-Holder contents across device → host → disk, and verify
-//! the query still completes with exactly correct results.
+//! larger than the configured device memory, watch the Data-Movement
+//! Executor demote Batch-Holder contents across device → host → disk,
+//! and verify the query still completes with exactly correct results.
 //!
 //! ```sh
 //! cargo run --release --example spill_demo

@@ -175,9 +175,9 @@ fn snapshot(w: &Worker) -> WorkerStats {
         // every demotion below the intended tier: OOM push fallbacks +
         // memory-executor spills (§4.2's "spilling")
         spills: w.ctx.env.demotions(),
-        spilled_bytes: w.memory.spilled_bytes(),
+        spilled_bytes: w.movement.spilled_bytes(),
         preload_byte_ranges: w.preload.byte_range_loads(),
-        preload_promotions: w.preload.promotions(),
+        preload_promotions: w.movement.promotions(),
         net_bytes_precompress: pre,
         net_bytes_wire: wire,
         compress_time: w.network.compress_time(),

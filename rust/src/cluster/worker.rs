@@ -10,9 +10,9 @@ use std::time::{Duration, Instant};
 use crate::config::{DatasourceKind, WorkerConfig};
 use crate::exec::{PhysicalPlan, QueryDag, WorkerCtx};
 use crate::executors::compute::{ComputeExecutor, TaskQueue};
-use crate::executors::memory::{HolderRegistry, MemoryExecutor};
+use crate::executors::movement::{DataMovementExecutor, HolderRegistry, MovementConfig};
 use crate::executors::network::{NetworkExecutor, Outbox, Router};
-use crate::executors::preload::{PreloadExecutor, PreloadModes};
+use crate::executors::preload::PreloadExecutor;
 use crate::memory::batch_holder::MemEnv;
 use crate::memory::{DeviceArena, MemoryGovernor, PinnedPool, SpillStore};
 use crate::network::Endpoint;
@@ -27,7 +27,10 @@ pub struct Worker {
     pub ctx: WorkerCtx,
     pub queue: Arc<TaskQueue>,
     pub compute: Arc<ComputeExecutor>,
-    pub memory: Arc<MemoryExecutor>,
+    /// The unified spill + promotion plane (§3.3.2 + §3.3.3's
+    /// Compute-Task Pre-loading).
+    pub movement: Arc<DataMovementExecutor>,
+    /// Byte-Range Pre-loading only (§3.3.3).
     pub preload: Arc<PreloadExecutor>,
     pub network: Arc<NetworkExecutor>,
     pub router: Arc<Router>,
@@ -59,7 +62,10 @@ impl Worker {
         let env = MemEnv {
             arena: arena.clone(),
             pinned: pinned.clone(),
-            spill: Arc::new(SpillStore::temp(&format!("w{worker_id}"))?),
+            spill: Arc::new(SpillStore::temp_with(
+                &format!("w{worker_id}"),
+                config.spill_segment_bytes,
+            )?),
             pcie: sim.throttle(&sim.profile.pcie),
             disk: sim.throttle(&crate::sim::LinkSpec::new(30, 2 * crate::sim::GIB)),
             pageable_penalty: sim.profile.pageable_penalty,
@@ -111,29 +117,32 @@ impl Worker {
         let queue = TaskQueue::new();
         let compute = ComputeExecutor::start(ctx.clone(), queue.clone(), config.compute_threads);
 
-        // ---- memory executor (+ reservation pressure wiring)
+        // ---- data-movement executor: installs the shared pressure
+        // event into the arena, pinned pool, governor, and queue, so
+        // spills and promotions are event-driven (§3.3.2/§3.3.3)
         let holders = HolderRegistry::new();
-        let memory = MemoryExecutor::start(
+        let movement = DataMovementExecutor::start(
             holders.clone(),
-            arena,
+            ctx.env.clone(),
+            governor,
             queue.clone(),
-            config.spill_watermark,
-            config.memory_threads,
+            MovementConfig {
+                threads: config.memory_threads,
+                spill_watermark: config.spill_watermark,
+                promote_watermark: config.promote_watermark,
+                urgency_reservation: config.urgency_reservation,
+                urgency_watermark: config.urgency_watermark,
+                promote_enabled: config.task_preload,
+            },
+            ctx.metrics.clone(),
         );
-        {
-            let m = memory.clone();
-            governor.set_pressure_handler(move |need| m.spill_for(need));
-        }
 
-        // ---- pre-load executor
+        // ---- pre-load executor (byte-range staging only)
         let preload = PreloadExecutor::start(
             queue.clone(),
             datasource,
             custom,
-            PreloadModes {
-                byte_range: config.byte_range_preload,
-                task: config.task_preload,
-            },
+            config.byte_range_preload,
             config.preload_threads,
         );
 
@@ -141,7 +150,7 @@ impl Worker {
             ctx,
             queue,
             compute,
-            memory,
+            movement,
             preload,
             network,
             router,
@@ -209,7 +218,7 @@ impl Worker {
         }
         self.compute.stop();
         self.preload.stop();
-        self.memory.stop();
+        self.movement.stop();
         self.network.stop();
     }
 }

@@ -81,10 +81,23 @@ pub struct WorkerConfig {
     pub pinned_pool: bool,
     pub pinned_buf_size: usize,
     pub pinned_buffers: usize,
-    /// Memory-executor spill watermark (fraction of device capacity).
+    /// Data-Movement spill watermark (fraction of device capacity):
+    /// allocations crossing it raise device pressure.
     pub spill_watermark: f64,
+    /// Data-Movement promotion gate: promotions pause while device
+    /// utilization exceeds this fraction (promotion must not fight
+    /// demotion).
+    pub promote_watermark: f64,
+    /// Urgency of demotions answering failed allocations / blocked
+    /// reservations (higher runs earlier in the movement queue).
+    pub urgency_reservation: i64,
+    /// Urgency of proactive watermark demotions.
+    pub urgency_watermark: i64,
     /// Codec for host→disk spills.
     pub spill_codec: Codec,
+    /// Spill-file rotation size, bytes (dead sealed segments are
+    /// reclaimed eagerly).
+    pub spill_segment_bytes: u64,
     /// Reservation wait deadline, ms.
     pub reservation_timeout_ms: u64,
 
@@ -129,7 +142,11 @@ impl Default for WorkerConfig {
             pinned_buf_size: 256 << 10,
             pinned_buffers: 256,
             spill_watermark: 0.85,
+            promote_watermark: 0.70,
+            urgency_reservation: 1_000_000,
+            urgency_watermark: 100_000,
             spill_codec: Codec::None,
+            spill_segment_bytes: crate::memory::spill::DEFAULT_SEGMENT_BYTES,
             reservation_timeout_ms: 10_000,
             batch_rows: 8192,
             broadcast_threshold: 256 << 10,
@@ -262,6 +279,18 @@ impl WorkerConfig {
         if let Some(v) = get("spill_watermark") {
             self.spill_watermark = v.as_float()?;
         }
+        if let Some(v) = get("promote_watermark") {
+            self.promote_watermark = v.as_float()?;
+        }
+        if let Some(v) = get("urgency_reservation") {
+            self.urgency_reservation = v.as_int()?;
+        }
+        if let Some(v) = get("urgency_watermark") {
+            self.urgency_watermark = v.as_int()?;
+        }
+        if let Some(v) = get("spill_segment_bytes") {
+            self.spill_segment_bytes = v.as_int()? as u64;
+        }
         if let Some(v) = get("time_scale") {
             self.time_scale = v.as_float()?;
         }
@@ -326,6 +355,12 @@ impl WorkerConfig {
         if !(0.0..=1.0).contains(&self.spill_watermark) {
             return Err(Error::Config("spill_watermark must be in [0,1]".into()));
         }
+        if !(0.0..=1.0).contains(&self.promote_watermark) {
+            return Err(Error::Config("promote_watermark must be in [0,1]".into()));
+        }
+        if self.spill_segment_bytes == 0 {
+            return Err(Error::Config("spill_segment_bytes must be >= 1".into()));
+        }
         if self.batch_rows == 0 {
             return Err(Error::Config("batch_rows must be >= 1".into()));
         }
@@ -378,7 +413,9 @@ mod tests {
     fn apply_overrides() {
         let doc = TomlLite::parse(
             "[worker]\ncompute_threads = 7\ntransport = \"rdma\"\n\
-             net_compression = \"none\"\nspill_watermark = 0.5\n",
+             net_compression = \"none\"\nspill_watermark = 0.5\n\
+             promote_watermark = 0.4\nspill_segment_bytes = 65536\n\
+             urgency_reservation = 777\nurgency_watermark = 99\n",
         )
         .unwrap();
         let mut cfg = WorkerConfig::default();
@@ -387,6 +424,10 @@ mod tests {
         assert_eq!(cfg.transport, TransportKind::Rdma);
         assert!(cfg.net_compression.is_none());
         assert_eq!(cfg.spill_watermark, 0.5);
+        assert_eq!(cfg.promote_watermark, 0.4);
+        assert_eq!(cfg.spill_segment_bytes, 65536);
+        assert_eq!(cfg.urgency_reservation, 777);
+        assert_eq!(cfg.urgency_watermark, 99);
     }
 
     #[test]
@@ -396,6 +437,12 @@ mod tests {
         assert!(cfg.validate().is_err());
         let mut cfg = WorkerConfig::default();
         cfg.spill_watermark = 1.5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = WorkerConfig::default();
+        cfg.promote_watermark = -0.1;
+        assert!(cfg.validate().is_err());
+        let mut cfg = WorkerConfig::default();
+        cfg.spill_segment_bytes = 0;
         assert!(cfg.validate().is_err());
     }
 

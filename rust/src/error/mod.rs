@@ -83,8 +83,8 @@ impl Error {
     }
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
+impl From<crate::runtime::pjrt_shim::Error> for Error {
+    fn from(e: crate::runtime::pjrt_shim::Error) -> Self {
         Error::Xla(e.to_string())
     }
 }

@@ -16,7 +16,7 @@ use crate::exec::operators::{
 };
 use crate::exec::plan::{ExchangeRole, OpSpec, PhysicalPlan};
 use crate::exec::{Task, WorkerCtx};
-use crate::executors::memory::HolderRegistry;
+use crate::executors::movement::HolderRegistry;
 use crate::executors::network::{ChannelRx, Router};
 use crate::memory::BatchHolder;
 use crate::storage::format::FileFooter;

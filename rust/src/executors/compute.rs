@@ -49,14 +49,18 @@ impl Ord for Queued {
     }
 }
 
-/// The shared queue. The Pre-load and Memory Executors hold references
-/// to inspect it (Insight B).
+/// The shared queue. The Pre-load and Data-Movement Executors hold
+/// references to inspect it (Insight B), and register
+/// [`crate::memory::PressureEvent`] listeners so pre-loadable
+/// submissions wake them instead of being discovered by polling.
 pub struct TaskQueue {
     heap: Mutex<BinaryHeap<Queued>>,
     ready: Condvar,
     seq: AtomicU64,
     /// Tasks currently executing (quiescence detection).
     in_flight: AtomicU64,
+    /// Marked dirty when a task with a prefetch hint is submitted.
+    listeners: Mutex<Vec<Arc<crate::memory::PressureEvent>>>,
 }
 
 impl Default for TaskQueue {
@@ -66,6 +70,7 @@ impl Default for TaskQueue {
             ready: Condvar::new(),
             seq: AtomicU64::new(0),
             in_flight: AtomicU64::new(0),
+            listeners: Mutex::new(Vec::new()),
         }
     }
 }
@@ -75,7 +80,15 @@ impl TaskQueue {
         Arc::new(TaskQueue::default())
     }
 
+    /// Register an event to be marked dirty whenever a task carrying a
+    /// [`crate::exec::task::Prefetch`] is submitted (queue
+    /// introspection without a polling loop).
+    pub fn add_listener(&self, event: Arc<crate::memory::PressureEvent>) {
+        self.listeners.lock().unwrap().push(event);
+    }
+
     pub fn submit(&self, task: Task) {
+        let prefetchable = task.prefetch.is_some();
         let q = Queued {
             priority: task.priority,
             seq: self.seq.fetch_add(1, Ordering::Relaxed),
@@ -83,6 +96,11 @@ impl TaskQueue {
         };
         self.heap.lock().unwrap().push(q);
         self.ready.notify_one();
+        if prefetchable {
+            for ev in self.listeners.lock().unwrap().iter() {
+                ev.mark_queue();
+            }
+        }
     }
 
     fn pop(&self, timeout: Duration) -> Option<Task> {
@@ -125,7 +143,7 @@ impl TaskQueue {
     }
 
     /// Visit every queued (not in-flight) task — the inspection hook
-    /// the Pre-load and Memory Executors use. Unordered.
+    /// the Pre-load and Data-Movement Executors use. Unordered.
     pub fn for_each_queued(&self, mut f: impl FnMut(&Task)) {
         let heap = self.heap.lock().unwrap();
         for q in heap.iter() {
@@ -133,8 +151,8 @@ impl TaskQueue {
         }
     }
 
-    /// Highest queued priority per operator (Memory Executor: avoid
-    /// spilling holders feeding imminent tasks).
+    /// Highest queued priority per operator (Data-Movement Executor:
+    /// spill holders feeding imminent tasks last, promote them first).
     pub fn op_priorities(&self) -> std::collections::HashMap<usize, i64> {
         let heap = self.heap.lock().unwrap();
         let mut m = std::collections::HashMap::new();
@@ -195,8 +213,8 @@ impl ComputeExecutor {
                                     retries.fetch_add(1, Ordering::Relaxed);
                                     task.attempts += 1;
                                     // decay priority so other work makes
-                                    // room (the memory executor gets a
-                                    // chance to spill)
+                                    // room (the movement executor gets
+                                    // a chance to spill)
                                     task.priority -= 10 * task.attempts as i64;
                                     // brief backoff before re-queue
                                     std::thread::sleep(Duration::from_millis(

@@ -1,26 +1,41 @@
-//! The four asynchronous control mechanisms of a Theseus worker
-//! (§3.3): Compute, Memory, Pre-load, and Network Executors.
+//! The asynchronous control mechanisms of a Theseus worker (§3.3):
+//! Compute, Data-Movement, Pre-load, and Network Executors.
 //!
 //! "Each worker process instantiates four executors ... All executors
 //! have a number of configurable CPU threads on which they execute
 //! their tasks in parallel. Submitted tasks are executed
 //! asynchronously."
 //!
+//! The paper's Memory Executor (§3.3.2) and the promotion half of its
+//! Pre-loading Executor (§3.3.3) are realized here as one
+//! **Data-Movement Executor** ([`movement`]): both directions of tier
+//! traffic are a single prioritized queue of movement tasks driven by a
+//! shared [`crate::memory::PressureEvent`] — §3.3's "specialized
+//! asynchronous control mechanisms" made literal. Spills start on the
+//! event (threshold crossing, failed allocation, blocked reservation),
+//! not on a polling tick, and victim/beneficiary selection is computed
+//! once per wake against the Compute Executor's queue priorities for
+//! *both* demotion and promotion.
+//!
 //! The executors *cooperate* rather than compete (Insight B):
 //! * the Pre-load Executor inspects the Compute Executor's queue and
-//!   stages data for queued tasks without ever blocking them;
-//! * the Memory Executor inspects the same queue to avoid spilling
-//!   batches a near-term task needs, and serves the reservation
-//!   pressure callbacks of the governor;
+//!   stages byte ranges for queued scan tasks without ever blocking
+//!   them;
+//! * the Data-Movement Executor inspects the same queue to avoid
+//!   spilling batches a near-term task needs (§3.3.2 "to avoid
+//!   spilling data for which compute tasks are close to being
+//!   executed") and to promote the inputs of imminent tasks (§3.3.3
+//!   Compute-Task Pre-loading), and it answers the Memory Governor's
+//!   reservation pressure;
 //! * the Network Executor drains the operators' transmission buffer at
 //!   its own rate, with backpressure bounded by the buffer.
 
 pub mod compute;
-pub mod memory;
+pub mod movement;
 pub mod network;
 pub mod preload;
 
 pub use compute::ComputeExecutor;
-pub use memory::MemoryExecutor;
+pub use movement::{DataMovementExecutor, Direction, HolderRegistry, MovementConfig, MovementTask};
 pub use network::{NetworkExecutor, Outbox, Router};
 pub use preload::PreloadExecutor;

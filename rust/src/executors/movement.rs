@@ -1,0 +1,896 @@
+//! Data-Movement Executor: the unified, event-driven spill + promotion
+//! plane (§3.3.2 "Memory Executor" and the promotion half of §3.3.3
+//! "Pre-loading Executor", merged).
+//!
+//! The paper's thesis is that Theseus wins by *balancing data movement*
+//! across memory tiers with "specialized asynchronous control
+//! mechanisms". The seed split that job between a Memory Executor that
+//! busy-polled device utilization every 5 ms and a Pre-load Executor
+//! with its own threads and no shared victim policy — demotion and
+//! promotion could fight over the same holders. This executor owns one
+//! prioritized queue of [`MovementTask`]s and reacts to a shared
+//! [`PressureEvent`] instead of polling:
+//!
+//! * [`crate::memory::DeviceArena`] raises device pressure on watermark
+//!   crossings and failed allocations;
+//! * [`crate::memory::MemoryGovernor`] raises it on reservations it
+//!   cannot grant — and is woken back up by
+//!   [`crate::memory::MemoryGovernor::notify_freed`] the moment a
+//!   demotion frees bytes, so spills start (and blocked reservations
+//!   clear) in microseconds, not on a 5 ms tick;
+//! * [`crate::memory::PinnedPool`] raises host pressure when the
+//!   fixed-size buffer pool runs dry;
+//! * [`crate::executors::compute::TaskQueue`] marks the queue dirty
+//!   when pre-loadable work is submitted.
+//!
+//! On every wake the planner computes victims (demotion) and
+//! beneficiaries (promotion) in a *single* pass against one
+//! [`TaskQueue::op_priorities`] snapshot: holders feeding imminent
+//! compute tasks are spilled last and promoted first, for **both**
+//! directions and **both** tier pairs (the seed's `spill_host_for`
+//! ignored priorities entirely). A holder never appears as victim and
+//! beneficiary in the same round, so the two directions cannot thrash.
+
+use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::time::Duration;
+
+use crate::exec::task::Prefetch;
+use crate::executors::compute::TaskQueue;
+use crate::memory::batch_holder::MemEnv;
+use crate::memory::{BatchHolder, MemoryGovernor, PressureEvent, PressureSnapshot, Tier};
+use crate::metrics::Metrics;
+
+/// Fallback sweep interval: the planner parks on the pressure event and
+/// only uses this to catch missed edges (e.g. pressure raised before
+/// startup). It is a safety net, not the trigger — 50x coarser than the
+/// seed's polling tick.
+const SWEEP: Duration = Duration::from_millis(250);
+
+/// Batches a single promotion task may stage per planning round. Bounds
+/// how much disk data one round inflates into host memory; holders with
+/// more keep their compute task queued, so the next wake or sweep plans
+/// another round.
+const PROMOTE_BATCHES_PER_ROUND: usize = 8;
+
+/// Holders under management, tagged by owning operator.
+///
+/// `device_bytes`/`host_bytes` read each holder's atomic tier counters
+/// under the registry lock without cloning anything (the seed cloned
+/// the whole holder list per call on the monitor path).
+#[derive(Default)]
+pub struct HolderRegistry {
+    holders: Mutex<Vec<(usize, BatchHolder)>>,
+}
+
+impl HolderRegistry {
+    pub fn new() -> Arc<HolderRegistry> {
+        Arc::new(HolderRegistry::default())
+    }
+
+    pub fn register(&self, op: usize, holder: BatchHolder) {
+        self.holders.lock().unwrap().push((op, holder));
+    }
+
+    pub fn clear(&self) {
+        self.holders.lock().unwrap().clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.holders.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Visit every registered holder without cloning the list.
+    pub fn for_each(&self, mut f: impl FnMut(usize, &BatchHolder)) {
+        for (op, h) in self.holders.lock().unwrap().iter() {
+            f(*op, h);
+        }
+    }
+
+    /// Total device bytes across registered holders (cheap: atomic
+    /// reads under one lock, no clones).
+    pub fn device_bytes(&self) -> usize {
+        let mut total = 0;
+        self.for_each(|_, h| total += h.stats().device_bytes);
+        total
+    }
+
+    /// Total host bytes across registered holders.
+    pub fn host_bytes(&self) -> usize {
+        let mut total = 0;
+        self.for_each(|_, h| total += h.stats().host_bytes);
+        total
+    }
+}
+
+/// Which way a movement task crosses tiers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    Demote,
+    Promote,
+}
+
+/// One unit of planned data movement.
+pub struct MovementTask {
+    pub holder: BatchHolder,
+    pub op: usize,
+    pub direction: Direction,
+    pub from: Tier,
+    pub to: Tier,
+    /// Higher executes earlier. Demotions run at
+    /// `urgency_reservation`/`urgency_watermark` minus the victim's
+    /// coldness rank; promotions at the beneficiary task's priority —
+    /// always below demotions, so relieving pressure wins.
+    pub urgency: i64,
+    /// Demote: stop once this many bytes moved. Promote: stop after
+    /// this many batches staged (a per-round cap, not a total).
+    pub budget: usize,
+}
+
+struct QueuedMove {
+    urgency: i64,
+    /// FIFO tiebreak: smaller sequence first.
+    seq: u64,
+    task: MovementTask,
+}
+
+impl PartialEq for QueuedMove {
+    fn eq(&self, other: &Self) -> bool {
+        self.urgency == other.urgency && self.seq == other.seq
+    }
+}
+impl Eq for QueuedMove {}
+impl PartialOrd for QueuedMove {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for QueuedMove {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.urgency
+            .cmp(&other.urgency)
+            .then(other.seq.cmp(&self.seq)) // max-heap: older first on tie
+    }
+}
+
+/// The movement queue, shared between the executor and its threads as
+/// its own `Arc` so worker threads never hold a strong reference to
+/// the executor while parked (no `Arc` cycle: an executor dropped
+/// without `stop()` still signals its threads down via `Drop`).
+struct MoveQueue {
+    heap: Mutex<BinaryHeap<QueuedMove>>,
+    ready: Condvar,
+    seq: AtomicU64,
+}
+
+impl MoveQueue {
+    fn new() -> Arc<MoveQueue> {
+        Arc::new(MoveQueue {
+            heap: Mutex::new(BinaryHeap::new()),
+            ready: Condvar::new(),
+            seq: AtomicU64::new(0),
+        })
+    }
+
+    fn push_all(&self, tasks: Vec<MovementTask>) {
+        let mut heap = self.heap.lock().unwrap();
+        for task in tasks {
+            heap.push(QueuedMove {
+                urgency: task.urgency,
+                seq: self.seq.fetch_add(1, Ordering::Relaxed),
+                task,
+            });
+        }
+        drop(heap);
+        self.ready.notify_all();
+    }
+
+    /// Pop the most urgent task, waiting up to `timeout`.
+    fn pop(&self, timeout: Duration) -> Option<MovementTask> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut heap = self.heap.lock().unwrap();
+        loop {
+            if let Some(q) = heap.pop() {
+                return Some(q.task);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self.ready.wait_timeout(heap, deadline - now).unwrap();
+            heap = guard;
+        }
+    }
+
+    fn clear(&self) -> usize {
+        let mut heap = self.heap.lock().unwrap();
+        let n = heap.len();
+        heap.clear();
+        n
+    }
+}
+
+/// Knobs (see [`crate::config::WorkerConfig`] for the file-level
+/// counterparts).
+#[derive(Clone, Copy, Debug)]
+pub struct MovementConfig {
+    /// Mover threads draining the movement queue.
+    pub threads: usize,
+    /// Device utilization fraction above which crossings raise
+    /// pressure.
+    pub spill_watermark: f64,
+    /// Promotions pause while device utilization exceeds this (keeps
+    /// promotion from fighting demotion).
+    pub promote_watermark: f64,
+    /// Urgency for demotions answering failed allocations or blocked
+    /// reservations.
+    pub urgency_reservation: i64,
+    /// Urgency for proactive watermark demotions.
+    pub urgency_watermark: i64,
+    /// Compute-Task Pre-loading on/off (Fig-4 I).
+    pub promote_enabled: bool,
+}
+
+impl Default for MovementConfig {
+    fn default() -> Self {
+        MovementConfig {
+            threads: 1,
+            spill_watermark: 0.85,
+            promote_watermark: 0.70,
+            urgency_reservation: 1_000_000,
+            urgency_watermark: 100_000,
+            promote_enabled: true,
+        }
+    }
+}
+
+/// The executor.
+pub struct DataMovementExecutor {
+    registry: Arc<HolderRegistry>,
+    env: MemEnv,
+    governor: MemoryGovernor,
+    queue: Arc<TaskQueue>,
+    event: Arc<PressureEvent>,
+    cfg: MovementConfig,
+    moves: Arc<MoveQueue>,
+    shutdown: Arc<AtomicBool>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    demotions: AtomicU64,
+    spilled_bytes: AtomicU64,
+    promotions: AtomicU64,
+    plans: AtomicU64,
+    metrics: Arc<Metrics>,
+}
+
+impl DataMovementExecutor {
+    /// Bring up the movement plane: installs the pressure event into
+    /// the arena, pinned pool, governor, and compute queue, then spawns
+    /// one planner thread plus `cfg.threads` movers.
+    ///
+    /// Threads park on the event / move queue (both their own `Arc`s)
+    /// and hold the executor only as a [`Weak`], upgraded per pass —
+    /// so dropping the last external handle without calling
+    /// [`DataMovementExecutor::stop`] still winds the threads down via
+    /// `Drop` instead of leaking them.
+    pub fn start(
+        registry: Arc<HolderRegistry>,
+        env: MemEnv,
+        governor: MemoryGovernor,
+        queue: Arc<TaskQueue>,
+        cfg: MovementConfig,
+        metrics: Arc<Metrics>,
+    ) -> Arc<DataMovementExecutor> {
+        let event = PressureEvent::new();
+        env.arena.install_pressure(event.clone(), cfg.spill_watermark);
+        if let Some(pool) = &env.pinned {
+            pool.install_pressure(event.clone());
+        }
+        governor.install_pressure(event.clone());
+        queue.add_listener(event.clone());
+
+        let ex = Arc::new(DataMovementExecutor {
+            registry,
+            env,
+            governor,
+            queue,
+            event: event.clone(),
+            cfg,
+            moves: MoveQueue::new(),
+            shutdown: Arc::new(AtomicBool::new(false)),
+            handles: Mutex::new(Vec::new()),
+            demotions: AtomicU64::new(0),
+            spilled_bytes: AtomicU64::new(0),
+            promotions: AtomicU64::new(0),
+            plans: AtomicU64::new(0),
+            metrics,
+        });
+
+        let mut handles = Vec::new();
+        {
+            let weak = Arc::downgrade(&ex);
+            let event = event.clone();
+            let stop = ex.shutdown.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name("theseus-move-plan".into())
+                    .spawn(move || loop {
+                        let snap = event.wait(SWEEP);
+                        if stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        let Some(ex) = weak.upgrade() else { return };
+                        ex.plan(snap);
+                    })
+                    .expect("spawn movement planner"),
+            );
+        }
+        for t in 0..cfg.threads.max(1) {
+            let weak = Arc::downgrade(&ex);
+            let moves = ex.moves.clone();
+            let stop = ex.shutdown.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("theseus-move-{t}"))
+                    .spawn(move || loop {
+                        if stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        let Some(mv) = moves.pop(Duration::from_millis(100)) else {
+                            continue;
+                        };
+                        let Some(ex) = weak.upgrade() else { return };
+                        ex.execute(mv);
+                    })
+                    .expect("spawn mover"),
+            );
+        }
+        *ex.handles.lock().unwrap() = handles;
+        // Catch pressure raised before we attached (e.g. prefetchable
+        // tasks already queued).
+        event.mark_queue();
+        ex
+    }
+
+    /// The shared event (tiers hold clones; tests raise it directly).
+    pub fn event(&self) -> &Arc<PressureEvent> {
+        &self.event
+    }
+
+    pub fn spill_count(&self) -> u64 {
+        self.demotions.load(Ordering::Relaxed)
+    }
+
+    pub fn spilled_bytes(&self) -> u64 {
+        self.spilled_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn promotions(&self) -> u64 {
+        self.promotions.load(Ordering::Relaxed)
+    }
+
+    /// Planner passes executed (event wakes + sweeps that found work).
+    pub fn plan_count(&self) -> u64 {
+        self.plans.load(Ordering::Relaxed)
+    }
+
+    // ------------------------------------------------------- planning
+
+    /// One planning pass: victims and beneficiaries from a single
+    /// `op_priorities` snapshot.
+    fn plan(&self, snap: PressureSnapshot) {
+        let threshold =
+            (self.env.arena.capacity() as f64 * self.cfg.spill_watermark) as usize;
+        let overage = self.env.arena.in_use().saturating_sub(threshold);
+        // The sweep path (empty snapshot) still repairs sustained
+        // overage the event may have under-stated.
+        let device_need = snap.device_need.max(overage);
+        let host_need = snap.host_need;
+        let promote = self.cfg.promote_enabled
+            && (snap.queue_dirty || snap.is_empty())
+            && self.env.arena.utilization() <= self.cfg.promote_watermark;
+        if device_need == 0 && host_need == 0 && !promote {
+            return;
+        }
+
+        // Computed once, used by both directions.
+        let prios = self.queue.op_priorities();
+        let mut tasks: Vec<MovementTask> = Vec::new();
+        let mut victim_ids: HashSet<usize> = HashSet::new();
+
+        if device_need > 0 {
+            // Needs beyond the watermark overage come from failed
+            // allocations / blocked reservations: maximum urgency.
+            let base = if device_need > overage {
+                self.cfg.urgency_reservation
+            } else {
+                self.cfg.urgency_watermark
+            };
+            self.plan_demotions(
+                Tier::Device,
+                device_need,
+                base,
+                &prios,
+                &mut victim_ids,
+                &mut tasks,
+            );
+        }
+        if host_need > 0 {
+            self.plan_demotions(
+                Tier::Host,
+                host_need,
+                self.cfg.urgency_watermark,
+                &prios,
+                &mut victim_ids,
+                &mut tasks,
+            );
+        }
+        if promote {
+            self.plan_promotions(&prios, &victim_ids, &mut tasks);
+        }
+        if tasks.is_empty() {
+            return;
+        }
+        self.plans.fetch_add(1, Ordering::Relaxed);
+        self.metrics.counter("movement.plans").inc();
+        self.metrics.gauge("movement.queue_depth").add(tasks.len() as i64);
+        self.moves.push_all(tasks);
+    }
+
+    /// Victim selection for one tier: holders with bytes at `from`,
+    /// coldest operator first (lowest queued priority; operators with
+    /// no queued tasks are coldest of all), fattest first among equals
+    /// — "to avoid spilling data for which compute tasks are close to
+    /// being executed" (§3.3.2), now applied to *every* demotion tier
+    /// pair.
+    fn plan_demotions(
+        &self,
+        from: Tier,
+        need: usize,
+        base: i64,
+        prios: &HashMap<usize, i64>,
+        victim_ids: &mut HashSet<usize>,
+        out: &mut Vec<MovementTask>,
+    ) {
+        let mut victims: Vec<(i64, usize, usize, BatchHolder)> = Vec::new();
+        self.registry.for_each(|op, h| {
+            let st = h.stats();
+            let bytes = match from {
+                Tier::Device => st.device_bytes,
+                Tier::Host => st.host_bytes,
+                Tier::Disk => 0,
+            };
+            if bytes > 0 {
+                let prio = prios.get(&op).copied().unwrap_or(i64::MIN);
+                victims.push((prio, bytes, op, h.clone()));
+            }
+        });
+        victims.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
+        let to = from.spill_target().unwrap_or(Tier::Disk);
+        let mut remaining = need;
+        for (rank, (_, bytes, op, holder)) in victims.into_iter().enumerate() {
+            if remaining == 0 {
+                break;
+            }
+            let budget = bytes.min(remaining);
+            remaining -= budget;
+            victim_ids.insert(holder.id());
+            out.push(MovementTask {
+                holder,
+                op,
+                direction: Direction::Demote,
+                from,
+                to,
+                urgency: base.saturating_sub(rank as i64),
+                budget,
+            });
+        }
+    }
+
+    /// Beneficiary selection: queued compute tasks advertising
+    /// [`Prefetch::Promote`] whose holder has disk-tier batches —
+    /// hottest first (by the op's best queued priority, the same
+    /// snapshot victim selection reads), and never a holder that is a
+    /// demotion victim in this same round.
+    fn plan_promotions(
+        &self,
+        prios: &HashMap<usize, i64>,
+        victim_ids: &HashSet<usize>,
+        out: &mut Vec<MovementTask>,
+    ) {
+        let mut seen: HashSet<usize> = HashSet::new();
+        let mut found: Vec<(i64, usize, BatchHolder)> = Vec::new();
+        self.queue.for_each_queued(|t| {
+            if let Some(Prefetch::Promote { holder }) = &t.prefetch {
+                let id = holder.id();
+                if victim_ids.contains(&id) || !seen.insert(id) {
+                    return;
+                }
+                if holder.stats().disk_batches > 0 {
+                    let prio = prios.get(&t.op).copied().unwrap_or(t.priority);
+                    found.push((prio, t.op, holder.clone()));
+                }
+            }
+        });
+        for (prio, op, holder) in found {
+            out.push(MovementTask {
+                holder,
+                op,
+                direction: Direction::Promote,
+                from: Tier::Disk,
+                to: Tier::Host,
+                // always below demotion urgencies: relieving pressure
+                // outranks staging ahead of it
+                urgency: prio.min(self.cfg.urgency_watermark - 1),
+                budget: PROMOTE_BATCHES_PER_ROUND,
+            });
+        }
+    }
+
+    // ------------------------------------------------------- moving
+
+    fn execute(&self, mv: MovementTask) {
+        self.metrics.gauge("movement.queue_depth").add(-1);
+        match mv.direction {
+            Direction::Demote => {
+                self.run_demote(&mv);
+            }
+            Direction::Promote => self.run_promote(&mv),
+        }
+    }
+
+    /// Execute one demotion task; returns bytes this call freed at
+    /// `mv.from`.
+    fn run_demote(&self, mv: &MovementTask) -> usize {
+        let mut freed = 0usize;
+        let mut errored = false;
+        while freed < mv.budget {
+            match mv.holder.demote_one(mv.from) {
+                Ok(0) => break,
+                Ok(n) => {
+                    freed += n;
+                    self.demotions.fetch_add(1, Ordering::Relaxed);
+                    if mv.from == Tier::Device {
+                        self.spilled_bytes.fetch_add(n as u64, Ordering::Relaxed);
+                    }
+                }
+                Err(e) => {
+                    log::warn!("demote {:?}->{:?} failed: {e}", mv.from, mv.to);
+                    errored = true;
+                    break;
+                }
+            }
+        }
+        if freed > 0 {
+            self.metrics.counter("movement.demote_bytes").add(freed as u64);
+            if mv.from == Tier::Device {
+                // Deliver the wakeup blocked reservations are parked on.
+                self.governor.notify_freed();
+            }
+        }
+        // A victim drained out from under its budget (a compute task
+        // popped its batches between plan and execution): hand the
+        // shortfall back to the planner so *other* holders serve it
+        // this generation rather than waiting for the governor's re-
+        // raise. Skipped on error — re-planning the same failing
+        // holder would spin.
+        if freed < mv.budget && !errored {
+            let shortfall = mv.budget - freed;
+            match mv.from {
+                Tier::Device => self.event.raise_device(shortfall),
+                Tier::Host => self.event.raise_host(shortfall),
+                Tier::Disk => {}
+            }
+        }
+        freed
+    }
+
+    fn run_promote(&self, mv: &MovementTask) {
+        for _ in 0..mv.budget {
+            if self.env.arena.utilization() > self.cfg.promote_watermark {
+                return; // device pressure returned: stop staging
+            }
+            // A dry pinned pool means further promotions land in
+            // unbounded pageable memory — stop and let host pressure
+            // (already raised by the pool) demote first.
+            if let Some(pool) = &self.env.pinned {
+                if pool.free_buffers() == 0 {
+                    return;
+                }
+            }
+            match mv.holder.promote_one() {
+                Ok(true) => {
+                    self.promotions.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.counter("movement.promotions").inc();
+                }
+                Ok(false) => return,
+                Err(e) => {
+                    log::debug!("promote: {e}");
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Synchronous demotion for callers that need bytes freed *now* on
+    /// their own thread (tests; emergency paths). Plans with the same
+    /// priority policy and executes inline. Returns bytes freed.
+    pub fn demote_for(&self, bytes: usize) -> usize {
+        let prios = self.queue.op_priorities();
+        let mut tasks = Vec::new();
+        let mut victims = HashSet::new();
+        self.plan_demotions(
+            Tier::Device,
+            bytes,
+            self.cfg.urgency_reservation,
+            &prios,
+            &mut victims,
+            &mut tasks,
+        );
+        let mut freed = 0;
+        for mv in &tasks {
+            freed += self.run_demote(mv);
+        }
+        freed
+    }
+
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        // wake the planner (parked on the event) and the movers
+        self.event.mark_queue();
+        self.moves.ready.notify_all();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+        // Tasks still queued were never executed: drop them and settle
+        // the depth gauge so post-stop snapshots don't report phantom
+        // in-flight movement.
+        let dropped = self.moves.clear();
+        if dropped > 0 {
+            self.metrics.gauge("movement.queue_depth").add(-(dropped as i64));
+        }
+    }
+}
+
+impl Drop for DataMovementExecutor {
+    fn drop(&mut self) {
+        // Threads hold only Weak<Self>, so this does run when the last
+        // external handle goes away without stop(); signal them down
+        // (no join: the dropping thread may be one of them).
+        self.shutdown.store(true, Ordering::Relaxed);
+        self.event.mark_queue();
+        self.moves.ready.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Task;
+    use crate::types::{Column, RecordBatch};
+
+    fn batch(rows: usize) -> RecordBatch {
+        RecordBatch::new(vec![Column::i64("k", vec![7; rows])]).unwrap()
+    }
+
+    fn start(
+        reg: &Arc<HolderRegistry>,
+        env: &MemEnv,
+        queue: &Arc<TaskQueue>,
+        cfg: MovementConfig,
+    ) -> (Arc<DataMovementExecutor>, MemoryGovernor) {
+        let governor = MemoryGovernor::new(env.arena.clone());
+        let ex = DataMovementExecutor::start(
+            reg.clone(),
+            env.clone(),
+            governor.clone(),
+            queue.clone(),
+            cfg,
+            Arc::new(Metrics::default()),
+        );
+        (ex, governor)
+    }
+
+    /// Acceptance: a reservation blocked on a full arena is unblocked
+    /// by the pressure event — with the watermark disabled (1.0) there
+    /// is no polling trigger left, so only the event can have done it.
+    #[test]
+    fn blocked_reservation_unblocked_by_pressure_event() {
+        let env = MemEnv::test(10_000);
+        let reg = HolderRegistry::new();
+        let queue = TaskQueue::new();
+        let h = BatchHolder::new("a", env.clone());
+        reg.register(0, h.clone());
+        h.push_batch(batch(1000)).unwrap(); // ~8 KB resident on device
+        let cfg = MovementConfig { spill_watermark: 1.0, ..Default::default() };
+        let (ex, governor) = start(&reg, &env, &queue, cfg);
+        let raises_before = ex.event().raise_count();
+
+        let r = governor.reserve(6_000, Duration::from_secs(2)).unwrap();
+        assert_eq!(r.bytes(), 6_000);
+        assert!(ex.spill_count() > 0, "event-driven spill must have run");
+        assert!(
+            ex.event().raise_count() > raises_before,
+            "reservation must signal the event"
+        );
+        assert_eq!(h.stats().device_batches, 0, "victim demoted off device");
+        ex.stop();
+    }
+
+    #[test]
+    fn watermark_crossing_spills_event_driven() {
+        let env = MemEnv::test(100_000);
+        let reg = HolderRegistry::new();
+        let queue = TaskQueue::new();
+        let h = BatchHolder::new("a", env.clone());
+        reg.register(0, h.clone());
+        let cfg = MovementConfig { spill_watermark: 0.5, ..Default::default() };
+        let (ex, _governor) = start(&reg, &env, &queue, cfg);
+        for _ in 0..12 {
+            h.push_batch(batch(1000)).unwrap();
+        }
+        let deadline = std::time::Instant::now() + Duration::from_secs(3);
+        while env.arena.utilization() > 0.55 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(
+            env.arena.utilization() <= 0.55,
+            "crossing failed to trigger spill: {}",
+            env.arena.utilization()
+        );
+        // data intact
+        let mut rows = 0;
+        while let Some(db) = h.pop_device().unwrap() {
+            rows += db.rows();
+        }
+        assert_eq!(rows, 12_000);
+        ex.stop();
+    }
+
+    #[test]
+    fn cold_operators_spill_first_both_tiers() {
+        let env = MemEnv::test(1 << 20);
+        let reg = HolderRegistry::new();
+        let queue = TaskQueue::new();
+        let hot = BatchHolder::new("hot", env.clone());
+        let cold = BatchHolder::new("cold", env.clone());
+        reg.register(1, hot.clone());
+        reg.register(2, cold.clone());
+        hot.push_batch(batch(500)).unwrap();
+        cold.push_batch(batch(500)).unwrap();
+        // op 1 has a high-priority queued task; op 2 has none
+        queue.submit(Task::new(1, 1_000, Arc::new(|_| Ok(()))));
+        let cfg = MovementConfig { spill_watermark: 1.0, ..Default::default() };
+        let (ex, _governor) = start(&reg, &env, &queue, cfg);
+        ex.demote_for(100);
+        assert_eq!(cold.stats().device_batches, 0, "cold holder spilled");
+        assert_eq!(hot.stats().device_batches, 1, "hot holder kept on device");
+
+        // host tier honors the same priorities (the seed's
+        // spill_host_for ignored them)
+        hot.push_batch_host(batch(400)).unwrap();
+        cold.push_batch_host(batch(400)).unwrap();
+        ex.event().raise_host(100);
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while cold.stats().disk_batches == 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(cold.stats().disk_batches >= 1, "cold host batch demoted to disk");
+        assert_eq!(hot.stats().disk_batches, 0, "hot host batch kept");
+        ex.stop();
+    }
+
+    #[test]
+    fn promotion_stages_disk_batches_for_queued_tasks() {
+        let env = MemEnv::test(1 << 20);
+        let reg = HolderRegistry::new();
+        let queue = TaskQueue::new();
+        let holder = BatchHolder::new("in", env.clone());
+        reg.register(1, holder.clone());
+        holder.push_batch_host(batch(100)).unwrap();
+        holder.spill_host_one().unwrap();
+        assert_eq!(holder.stats().disk_batches, 1);
+
+        let (ex, _governor) = start(&reg, &env, &queue, MovementConfig::default());
+        queue.submit(
+            Task::new(1, 50, Arc::new(|_| Ok(())))
+                .with_prefetch(Prefetch::Promote { holder: holder.clone() }),
+        );
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while holder.stats().disk_batches > 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(holder.stats().disk_batches, 0, "disk batch not promoted");
+        assert_eq!(holder.stats().host_batches, 1);
+        assert!(ex.promotions() >= 1);
+        ex.stop();
+    }
+
+    #[test]
+    fn promotion_disabled_leaves_disk_alone() {
+        let env = MemEnv::test(1 << 20);
+        let reg = HolderRegistry::new();
+        let queue = TaskQueue::new();
+        let holder = BatchHolder::new("in", env.clone());
+        reg.register(1, holder.clone());
+        holder.push_batch_host(batch(100)).unwrap();
+        holder.spill_host_one().unwrap();
+        let cfg = MovementConfig { promote_enabled: false, ..Default::default() };
+        let (ex, _governor) = start(&reg, &env, &queue, cfg);
+        queue.submit(
+            Task::new(1, 50, Arc::new(|_| Ok(())))
+                .with_prefetch(Prefetch::Promote { holder: holder.clone() }),
+        );
+        std::thread::sleep(Duration::from_millis(80));
+        assert_eq!(holder.stats().disk_batches, 1, "promotion must stay off");
+        assert_eq!(ex.promotions(), 0);
+        ex.stop();
+    }
+
+    #[test]
+    fn concurrent_demote_promote_same_holder_via_executor() {
+        // Demotion pressure and promotion-worthy queued tasks target
+        // the same holder; the plane must neither deadlock nor lose
+        // batches.
+        let env = MemEnv::test(1 << 22);
+        let reg = HolderRegistry::new();
+        let queue = TaskQueue::new();
+        let h = BatchHolder::new("contended", env.clone());
+        reg.register(3, h.clone());
+        const BATCHES: usize = 16;
+        for _ in 0..BATCHES {
+            h.push_batch(batch(200)).unwrap();
+        }
+        let cfg = MovementConfig {
+            threads: 2,
+            spill_watermark: 1.0,
+            ..Default::default()
+        };
+        let (ex, _governor) = start(&reg, &env, &queue, cfg);
+        queue.submit(
+            Task::new(3, 10, Arc::new(|_| Ok(())))
+                .with_prefetch(Prefetch::Promote { holder: h.clone() }),
+        );
+        for round in 0..20 {
+            ex.event().raise_device(2_000);
+            ex.event().raise_host(1_000);
+            if round % 3 == 0 {
+                ex.event().mark_queue();
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        ex.stop();
+        assert_eq!(h.stats().total_batches(), BATCHES, "{:?}", h.stats());
+        let mut rows = 0;
+        while let Some(db) = h.pop_device().unwrap() {
+            rows += db.rows();
+        }
+        assert_eq!(rows, BATCHES * 200, "rows lost under contention");
+    }
+
+    #[test]
+    fn registry_accounting_is_cheap_and_correct() {
+        let env = MemEnv::test(1 << 20);
+        let reg = HolderRegistry::new();
+        let a = BatchHolder::new("a", env.clone());
+        let b = BatchHolder::new("b", env.clone());
+        reg.register(0, a.clone());
+        reg.register(1, b.clone());
+        a.push_batch(batch(100)).unwrap();
+        b.push_batch(batch(200)).unwrap();
+        b.push_batch_host(batch(50)).unwrap();
+        assert_eq!(
+            reg.device_bytes(),
+            a.stats().device_bytes + b.stats().device_bytes
+        );
+        assert_eq!(reg.host_bytes(), b.stats().host_bytes);
+        assert_eq!(reg.len(), 2);
+        reg.clear();
+        assert!(reg.is_empty());
+        assert_eq!(reg.device_bytes(), 0);
+    }
+}

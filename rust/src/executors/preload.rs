@@ -1,16 +1,19 @@
-//! Pre-loading Executor (§3.3.3): inspects the Compute Executor's
-//! queue and materializes data ahead of execution.
+//! Pre-loading Executor (§3.3.3), Byte-Range half: inspects the
+//! Compute Executor's queue and fetches the merged byte ranges of
+//! queued scan tasks into their staging cells so the compute task only
+//! decompresses and decodes. The compute task never waits on the
+//! pre-loader: if staging isn't `Done` when it runs, it fetches on its
+//! own (Insight B).
 //!
-//! Two modes (both can be on concurrently, as in the paper):
-//! * **Byte-Range Pre-loading** — for queued scan tasks, fetch the
-//!   merged byte ranges into the task's staging cell so the compute
-//!   task only decompresses and decodes. The compute task never waits
-//!   on the pre-loader: if staging isn't `Done` when it runs, it
-//!   fetches on its own (Insight B).
-//! * **Compute-Task Pre-loading** — for queued tasks whose input holder
-//!   has batches below the device tier, promote them toward the device
-//!   (disk → host here; the host → device hop happens at pop time over
-//!   the fast pinned path).
+//! The *Compute-Task* half of §3.3.3 (promoting a queued task's
+//! below-device batches back toward the device) lives in the
+//! Data-Movement Executor ([`crate::executors::movement`]), where
+//! promotion shares one victim/beneficiary policy with spilling —
+//! demotion and promotion can no longer fight over a holder.
+//!
+//! Event-driven: submissions of prefetchable tasks mark a
+//! [`PressureEvent`] this executor parks on (the seed polled the queue
+//! every 3 ms).
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -18,95 +21,94 @@ use std::time::Duration;
 
 use crate::exec::task::{Prefetch, StagingState};
 use crate::executors::compute::TaskQueue;
+use crate::memory::PressureEvent;
 use crate::storage::datasource::{CustomObjectStoreDatasource, Datasource};
 
-/// Mode switches (Fig-4 H and I).
-#[derive(Clone, Copy, Debug)]
-pub struct PreloadModes {
-    pub byte_range: bool,
-    pub task: bool,
-}
+/// Fallback sweep for missed edges; the wake path is the queue event.
+const SWEEP: Duration = Duration::from_millis(100);
 
 /// The executor.
 pub struct PreloadExecutor {
     shutdown: Arc<AtomicBool>,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    event: Arc<PressureEvent>,
     byte_range_loads: Arc<AtomicU64>,
-    promotions: Arc<AtomicU64>,
 }
 
 impl PreloadExecutor {
     /// `custom` is the coalescing fetch path when the datasource is the
     /// custom one (byte-range preloading "merges sufficiently close
     /// byte ranges"); with a generic datasource byte-range preloading
-    /// is unavailable (not a paper configuration either).
+    /// is unavailable (not a paper configuration either). `enabled =
+    /// false` (Fig-4 F/G) spawns no threads.
     pub fn start(
         queue: Arc<TaskQueue>,
         datasource: Arc<dyn Datasource>,
         custom: Option<Arc<CustomObjectStoreDatasource>>,
-        modes: PreloadModes,
+        enabled: bool,
         threads: usize,
     ) -> Arc<PreloadExecutor> {
         let shutdown = Arc::new(AtomicBool::new(false));
+        let event = PressureEvent::new();
         let ex = Arc::new(PreloadExecutor {
             shutdown: shutdown.clone(),
             handles: Mutex::new(Vec::new()),
+            event: event.clone(),
             byte_range_loads: Arc::new(AtomicU64::new(0)),
-            promotions: Arc::new(AtomicU64::new(0)),
         });
-        if !modes.byte_range && !modes.task {
+        if !enabled {
             return ex; // disabled: no threads (Fig-4 F)
         }
+        queue.add_listener(event.clone());
         let mut handles = Vec::new();
         for t in 0..threads.max(1) {
             let queue = queue.clone();
             let ds = datasource.clone();
             let custom = custom.clone();
             let stop = shutdown.clone();
+            let ev = event.clone();
             let brl = ex.byte_range_loads.clone();
-            let promos = ex.promotions.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("theseus-preload-{t}"))
                     .spawn(move || {
                         while !stop.load(Ordering::Relaxed) {
-                            let did = Self::pass(&queue, &ds, &custom, modes, &brl, &promos);
-                            if !did {
-                                std::thread::sleep(Duration::from_millis(3));
+                            // The snapshot content doesn't matter here:
+                            // any wake (queue dirty or sweep) triggers
+                            // one inspection pass; memory pressure is
+                            // the movement plane's business.
+                            ev.wait(SWEEP);
+                            if stop.load(Ordering::Relaxed) {
+                                return;
                             }
+                            Self::pass(&queue, &ds, &custom, &brl);
                         }
                     })
                     .expect("spawn preload"),
             );
         }
         *ex.handles.lock().unwrap() = handles;
+        // catch tasks submitted before the listener attached
+        event.mark_queue();
         ex
     }
 
-    /// One inspection pass. Returns true if any work was done.
+    /// One inspection pass over the queued byte-range prefetches.
     fn pass(
         queue: &TaskQueue,
         ds: &Arc<dyn Datasource>,
         custom: &Option<Arc<CustomObjectStoreDatasource>>,
-        modes: PreloadModes,
         brl: &AtomicU64,
-        promos: &AtomicU64,
-    ) -> bool {
-        // Snapshot prefetchable work from the queue (tasks are cloned;
-        // staging cells and holders are shared).
+    ) {
+        // Snapshot prefetchable work from the queue (staging cells are
+        // shared; tasks stay queued).
         let mut byte_ranges = Vec::new();
-        let mut promotes = Vec::new();
-        queue.for_each_queued(|t| match &t.prefetch {
-            Some(Prefetch::ByteRanges { key, ranges, staging }) if modes.byte_range => {
+        queue.for_each_queued(|t| {
+            if let Some(Prefetch::ByteRanges { key, ranges, staging }) = &t.prefetch {
                 byte_ranges.push((key.clone(), ranges.clone(), staging.clone()));
             }
-            Some(Prefetch::Promote { holder }) if modes.task => {
-                promotes.push(holder.clone());
-            }
-            _ => {}
         });
 
-        let mut did = false;
         for (key, ranges, staging) in byte_ranges {
             // claim the cell ("temporarily take ownership of the task",
             // §3.2) — skip if another thread or the compute task got it
@@ -131,7 +133,6 @@ impl PreloadExecutor {
                 Ok(pages) => {
                     *s = StagingState::Done(pages);
                     brl.fetch_add(1, Ordering::Relaxed);
-                    did = true;
                 }
                 Err(e) => {
                     // release the claim; the compute task will fetch
@@ -140,30 +141,15 @@ impl PreloadExecutor {
                 }
             }
         }
-
-        for holder in promotes {
-            match holder.promote_one_to_host() {
-                Ok(true) => {
-                    promos.fetch_add(1, Ordering::Relaxed);
-                    did = true;
-                }
-                Ok(false) => {}
-                Err(e) => log::debug!("promote: {e}"),
-            }
-        }
-        did
     }
 
     pub fn byte_range_loads(&self) -> u64 {
         self.byte_range_loads.load(Ordering::Relaxed)
     }
 
-    pub fn promotions(&self) -> u64 {
-        self.promotions.load(Ordering::Relaxed)
-    }
-
     pub fn stop(&self) {
         self.shutdown.store(true, Ordering::Relaxed);
+        self.event.mark_queue();
         for h in self.handles.lock().unwrap().drain(..) {
             let _ = h.join();
         }
@@ -173,6 +159,7 @@ impl PreloadExecutor {
 impl Drop for PreloadExecutor {
     fn drop(&mut self) {
         self.shutdown.store(true, Ordering::Relaxed);
+        self.event.mark_queue();
     }
 }
 
@@ -180,8 +167,6 @@ impl Drop for PreloadExecutor {
 mod tests {
     use super::*;
     use crate::exec::task::{take_staged, Staging, Task};
-    use crate::memory::batch_holder::MemEnv;
-    use crate::memory::BatchHolder;
     use crate::sim::SimContext;
     use crate::storage::compression::Codec;
     use crate::storage::datasource::{ByteRange, GenericDatasource};
@@ -213,20 +198,21 @@ mod tests {
         let queue = TaskQueue::new();
         let custom = Arc::new(CustomObjectStoreDatasource::new(store.clone(), 1 << 20, None));
         let staging: Staging = Arc::new(Mutex::new(StagingState::Empty));
-        // a queued scan task advertising its ranges
+        let ex = PreloadExecutor::start(
+            queue.clone(),
+            custom.clone() as Arc<dyn Datasource>,
+            Some(custom),
+            true,
+            1,
+        );
+        // a queued scan task advertising its ranges — submission marks
+        // the event, which is what wakes the pre-loader
         queue.submit(
             Task::new(0, 100, Arc::new(|_| Ok(()))).with_prefetch(Prefetch::ByteRanges {
                 key: "t.ths".into(),
                 ranges,
                 staging: staging.clone(),
             }),
-        );
-        let ex = PreloadExecutor::start(
-            queue,
-            custom.clone() as Arc<dyn Datasource>,
-            Some(custom),
-            PreloadModes { byte_range: true, task: true },
-            1,
         );
         let deadline = std::time::Instant::now() + Duration::from_secs(2);
         loop {
@@ -243,7 +229,7 @@ mod tests {
     }
 
     #[test]
-    fn disabled_modes_do_nothing() {
+    fn disabled_preloader_does_nothing() {
         let (store, ranges) = store_with_file();
         let queue = TaskQueue::new();
         let custom = Arc::new(CustomObjectStoreDatasource::new(store.clone(), 0, None));
@@ -260,45 +246,12 @@ mod tests {
             queue,
             custom.clone() as Arc<dyn Datasource>,
             Some(custom),
-            PreloadModes { byte_range: false, task: false },
+            false,
             1,
         );
         std::thread::sleep(Duration::from_millis(80));
         assert!(matches!(*staging.lock().unwrap(), StagingState::Empty));
         assert_eq!(store.request_count(), before);
-        ex.stop();
-    }
-
-    #[test]
-    fn task_preload_promotes_disk_batches() {
-        let env = MemEnv::test(1 << 20);
-        let holder = BatchHolder::new("in", env.clone());
-        let b = RecordBatch::new(vec![Column::i64("k", vec![1; 100])]).unwrap();
-        holder.push_batch_host(b).unwrap();
-        holder.spill_host_one().unwrap();
-        assert_eq!(holder.stats().disk_batches, 1);
-
-        let queue = TaskQueue::new();
-        queue.submit(
-            Task::new(1, 50, Arc::new(|_| Ok(())))
-                .with_prefetch(Prefetch::Promote { holder: holder.clone() }),
-        );
-        let (store, _) = store_with_file();
-        let ds: Arc<dyn Datasource> = Arc::new(GenericDatasource::new(store));
-        let ex = PreloadExecutor::start(
-            queue,
-            ds,
-            None,
-            PreloadModes { byte_range: false, task: true },
-            1,
-        );
-        let deadline = std::time::Instant::now() + Duration::from_secs(2);
-        while holder.stats().disk_batches > 0 && std::time::Instant::now() < deadline {
-            std::thread::sleep(Duration::from_millis(5));
-        }
-        assert_eq!(holder.stats().disk_batches, 0, "disk batch not promoted");
-        assert_eq!(holder.stats().host_batches, 1);
-        assert!(ex.promotions() >= 1);
         ex.stop();
     }
 }

@@ -6,10 +6,11 @@
 //!
 //! Three-layer architecture:
 //!  * **L3 (this crate)** — the distributed coordinator: four asynchronous
-//!    executors (Compute, Memory, Pre-load, Network), Batch Holders,
-//!    operator DAG, adaptive exchange, memory reservation + spilling, the
-//!    fixed-size page-locked buffer pool, and the cluster runtime
-//!    (Client / Gateway / Planner / Workers).
+//!    executors (Compute, Data-Movement, Pre-load, Network), Batch
+//!    Holders, operator DAG, adaptive exchange, event-driven memory
+//!    reservation + spilling + promotion, the fixed-size page-locked
+//!    buffer pool, and the cluster runtime (Client / Gateway / Planner /
+//!    Workers).
 //!  * **L2 (python/compile/model.py)** — JAX compute stages for the query
 //!    operators, AOT-lowered to HLO text artifacts.
 //!  * **L1 (python/compile/kernels/)** — Pallas kernels for the compute

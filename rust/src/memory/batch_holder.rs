@@ -5,10 +5,11 @@
 //!
 //! Holders are the DAG's edges: operators push output batches in,
 //! downstream operators (via the Compute Executor) pop them out, and the
-//! Memory Executor demotes their contents across tiers under pressure.
-//! Unlike CUDA Unified Memory, the holder can move data to *storage*,
-//! change its format (compress on spill), and explicitly promote data
-//! back ahead of a kernel launch (the Pre-load Executor's job, §3.3.3).
+//! Data-Movement Executor demotes their contents across tiers under
+//! pressure. Unlike CUDA Unified Memory, the holder can move data to
+//! *storage*, change its format (compress on spill), and explicitly
+//! promote data back ahead of a kernel launch (the same executor's
+//! Compute-Task Pre-loading, §3.3.3).
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -164,6 +165,11 @@ struct Inner {
     name: String,
     env: MemEnv,
     slots: Mutex<VecDeque<Slot>>,
+    /// Per-tier occupancy kept in atomics so [`BatchHolder::stats`] and
+    /// the movement plane's victim scans never take the slots lock (the
+    /// seed cloned every holder per monitor pass).
+    tier_batches: [AtomicU64; 3],
+    tier_bytes: [AtomicU64; 3],
     /// Upstream has promised no more pushes.
     finished: AtomicBool,
     /// Lifetime totals (exchange size estimation input, §3.2).
@@ -173,6 +179,28 @@ struct Inner {
     promotions: AtomicU64,
 }
 
+fn tier_idx(t: Tier) -> usize {
+    match t {
+        Tier::Device => 0,
+        Tier::Host => 1,
+        Tier::Disk => 2,
+    }
+}
+
+impl Inner {
+    fn account_add(&self, tier: Tier, bytes: usize) {
+        let i = tier_idx(tier);
+        self.tier_batches[i].fetch_add(1, Ordering::Relaxed);
+        self.tier_bytes[i].fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    fn account_sub(&self, tier: Tier, bytes: usize) {
+        let i = tier_idx(tier);
+        self.tier_batches[i].fetch_sub(1, Ordering::Relaxed);
+        self.tier_bytes[i].fetch_sub(bytes as u64, Ordering::Relaxed);
+    }
+}
+
 impl BatchHolder {
     pub fn new(name: impl Into<String>, env: MemEnv) -> Self {
         BatchHolder {
@@ -180,6 +208,8 @@ impl BatchHolder {
                 name: name.into(),
                 env,
                 slots: Mutex::new(VecDeque::new()),
+                tier_batches: Default::default(),
+                tier_bytes: Default::default(),
                 finished: AtomicBool::new(false),
                 pushed_batches: AtomicU64::new(0),
                 pushed_bytes: AtomicU64::new(0),
@@ -191,6 +221,13 @@ impl BatchHolder {
 
     pub fn name(&self) -> &str {
         &self.inner.name
+    }
+
+    /// Stable identity of the shared holder state (clones agree) — the
+    /// movement planner uses it to keep a holder out of the demotion
+    /// and promotion lists in the same round.
+    pub fn id(&self) -> usize {
+        Arc::as_ptr(&self.inner) as usize
     }
 
     pub fn env(&self) -> &MemEnv {
@@ -234,9 +271,7 @@ impl BatchHolder {
     pub fn push_encoded(&self, bytes: Vec<u8>) -> Result<Tier> {
         self.note_push(bytes.len());
         let slot = self.host_slot(bytes)?;
-        let tier = slot.tier();
-        self.inner.slots.lock().unwrap().push_back(slot);
-        Ok(tier)
+        self.store(slot, false)
     }
 
     /// Store a batch preferring host tier (pre-load staging that should
@@ -253,6 +288,7 @@ impl BatchHolder {
     fn store(&self, slot: Slot, charged: bool) -> Result<Tier> {
         let tier = slot.tier();
         let _ = charged;
+        self.inner.account_add(tier, slot.bytes());
         self.inner.slots.lock().unwrap().push_back(slot);
         Ok(tier)
     }
@@ -278,11 +314,13 @@ impl BatchHolder {
             Some(s) => s,
             None => return Ok(None),
         };
+        self.inner.account_sub(slot.tier(), slot.bytes());
         match self.materialize_device(slot) {
             Ok(db) => Ok(Some(db)),
             Err((Some(slot), e)) => {
                 // Put it back at the front so order is preserved; the
                 // compute executor treats the OOM as retryable.
+                self.inner.account_add(slot.tier(), slot.bytes());
                 self.inner.slots.lock().unwrap().push_front(slot);
                 Err(e)
             }
@@ -297,6 +335,7 @@ impl BatchHolder {
             Some(s) => s,
             None => return Ok(None),
         };
+        self.inner.account_sub(slot.tier(), slot.bytes());
         let env = &self.inner.env;
         Ok(Some(match slot {
             Slot::Device(db) => {
@@ -365,6 +404,23 @@ impl BatchHolder {
 
     // ------------------------------------------------------ spill/promote
 
+    /// Tier-transition API used by the Data-Movement executor: demote
+    /// the newest batch of `from` one tier down. Returns bytes freed at
+    /// `from`, 0 if that tier is empty here (or has nowhere to go).
+    pub fn demote_one(&self, from: Tier) -> Result<usize> {
+        match from {
+            Tier::Device => self.spill_one(),
+            Tier::Host => self.spill_host_one(),
+            Tier::Disk => Ok(0),
+        }
+    }
+
+    /// Tier-transition API: promote the oldest disk batch to host.
+    /// Returns true if something moved.
+    pub fn promote_one(&self) -> Result<bool> {
+        self.promote_one_to_host()
+    }
+
     /// Demote the *newest* device-tier batch one tier (LIFO spill: the
     /// oldest batches are next to be consumed, so spilling from the back
     /// implements "avoid spilling data for which compute tasks are close
@@ -387,10 +443,12 @@ impl BatchHolder {
             _ => unreachable!(),
         };
         let freed = db.byte_size();
+        self.inner.account_sub(Tier::Device, freed);
         let bytes = db.batch.encode();
         env.charge_pcie(bytes.len(), env.pinned.is_some());
         drop(db); // release arena accounting before storing host copy
         let new_slot = self.host_slot(bytes)?;
+        self.inner.account_add(new_slot.tier(), new_slot.bytes());
         {
             let mut slots = self.inner.slots.lock().unwrap();
             let at = idx.min(slots.len()); // deque may have shrunk concurrently
@@ -420,9 +478,11 @@ impl BatchHolder {
             _ => unreachable!(),
         };
         let freed = bytes.len();
+        self.inner.account_sub(Tier::Host, freed);
         let compressed = env.spill_codec.compress(&bytes);
         env.disk.acquire(compressed.len());
         let disk_slot = env.spill.write(&compressed)?;
+        self.inner.account_add(Tier::Disk, disk_slot.len as usize);
         {
             let mut slots = self.inner.slots.lock().unwrap();
             let at = idx.min(slots.len());
@@ -433,9 +493,10 @@ impl BatchHolder {
         Ok(freed)
     }
 
-    /// Promote the oldest non-device batch to host (Pre-load Executor's
-    /// Compute-Task Pre-loading stages disk data at host so the compute
-    /// pop only pays the PCIe hop). Returns true if something moved.
+    /// Promote the oldest non-device batch to host (the Data-Movement
+    /// executor's Compute-Task Pre-loading stages disk data at host so
+    /// the compute pop only pays the PCIe hop). Returns true if
+    /// something moved.
     pub fn promote_one_to_host(&self) -> Result<bool> {
         let taken = {
             let mut slots = self.inner.slots.lock().unwrap();
@@ -451,11 +512,13 @@ impl BatchHolder {
             Slot::Disk(s) => s,
             _ => unreachable!(),
         };
+        self.inner.account_sub(Tier::Disk, s.len as usize);
         let raw = env.spill.read(s)?;
         env.disk.acquire(raw.len());
         let bytes = Codec::decompress(&raw)?;
         env.spill.free(s);
         let new_slot = self.host_slot(bytes)?;
+        self.inner.account_add(new_slot.tier(), new_slot.bytes());
         {
             let mut slots = self.inner.slots.lock().unwrap();
             let at = idx.min(slots.len());
@@ -507,28 +570,20 @@ impl BatchHolder {
         self.inner.promotions.load(Ordering::Relaxed)
     }
 
-    /// Per-tier occupancy (the Memory Executor's watermark input).
+    /// Per-tier occupancy, read from atomics — no slots lock, no
+    /// cloning. This is the movement planner's victim-scan input, read
+    /// once per registered holder on every pressure wake.
     pub fn stats(&self) -> HolderStats {
-        let slots = self.inner.slots.lock().unwrap();
-        let mut st = HolderStats::default();
-        for s in slots.iter() {
-            let b = s.bytes();
-            match s.tier() {
-                Tier::Device => {
-                    st.device_batches += 1;
-                    st.device_bytes += b;
-                }
-                Tier::Host => {
-                    st.host_batches += 1;
-                    st.host_bytes += b;
-                }
-                Tier::Disk => {
-                    st.disk_batches += 1;
-                    st.disk_bytes += b;
-                }
-            }
+        let b = &self.inner.tier_batches;
+        let y = &self.inner.tier_bytes;
+        HolderStats {
+            device_batches: b[0].load(Ordering::Relaxed) as usize,
+            device_bytes: y[0].load(Ordering::Relaxed) as usize,
+            host_batches: b[1].load(Ordering::Relaxed) as usize,
+            host_bytes: y[1].load(Ordering::Relaxed) as usize,
+            disk_batches: b[2].load(Ordering::Relaxed) as usize,
+            disk_bytes: y[2].load(Ordering::Relaxed) as usize,
         }
-        st
     }
 }
 
@@ -716,5 +771,62 @@ mod tests {
         assert_eq!(st.device_batches, 2);
         assert_eq!(st.host_batches, 1);
         assert!(st.total_bytes() > 0);
+    }
+
+    #[test]
+    fn clones_share_identity() {
+        let h = BatchHolder::new("t", MemEnv::test(1 << 20));
+        let h2 = h.clone();
+        let other = BatchHolder::new("t", MemEnv::test(1 << 20));
+        assert_eq!(h.id(), h2.id());
+        assert_ne!(h.id(), other.id());
+    }
+
+    #[test]
+    fn concurrent_demote_promote_loses_nothing() {
+        // The movement plane may demote and promote the same holder
+        // from different threads. No batch may be lost, the run must
+        // not deadlock, and every row must still pop out.
+        let env = MemEnv::test(1 << 22);
+        let h = BatchHolder::new("contended", env.clone());
+        const BATCHES: usize = 24;
+        for _ in 0..BATCHES {
+            h.push_batch(batch(100)).unwrap();
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let mk = |f: fn(&BatchHolder)| {
+            let h = h.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    f(&h);
+                }
+            })
+        };
+        let threads = vec![
+            mk(|h| {
+                let _ = h.demote_one(Tier::Device);
+            }),
+            mk(|h| {
+                let _ = h.demote_one(Tier::Host);
+            }),
+            mk(|h| {
+                let _ = h.promote_one();
+            }),
+            mk(|h| {
+                let _ = h.promote_one();
+            }),
+        ];
+        std::thread::sleep(std::time::Duration::from_millis(150));
+        stop.store(true, Ordering::Relaxed);
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.stats().total_batches(), BATCHES, "{:?}", h.stats());
+        let mut rows = 0;
+        while let Some(db) = h.pop_device().unwrap() {
+            rows += db.rows();
+        }
+        assert_eq!(rows, BATCHES * 100, "rows lost under contention");
     }
 }

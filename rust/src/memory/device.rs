@@ -7,14 +7,23 @@
 //! [`crate::sim::Throttle`] at the call sites (batch holder / runtime).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
+use crate::memory::pressure::PressureEvent;
 use crate::{Error, Result};
 
 /// Shared accounting state of one device's memory.
 #[derive(Clone)]
 pub struct DeviceArena {
     inner: Arc<Inner>,
+}
+
+/// Event-driven spill trigger: installed once at worker startup by the
+/// Data-Movement executor (§3.3.2 — pressure is signalled, not polled).
+struct PressureHook {
+    event: Arc<PressureEvent>,
+    /// Bytes of in-use at which a crossing raises device pressure.
+    threshold: usize,
 }
 
 struct Inner {
@@ -25,6 +34,7 @@ struct Inner {
     /// Lifetime totals.
     allocs: AtomicU64,
     failures: AtomicU64,
+    pressure: OnceLock<PressureHook>,
 }
 
 impl DeviceArena {
@@ -36,8 +46,19 @@ impl DeviceArena {
                 peak: AtomicU64::new(0),
                 allocs: AtomicU64::new(0),
                 failures: AtomicU64::new(0),
+                pressure: OnceLock::new(),
             }),
         }
+    }
+
+    /// Install the shared pressure event. A successful allocation that
+    /// crosses `watermark * capacity` raises device pressure by the
+    /// overage; a failed allocation raises it by the requested size.
+    /// One-shot: later installs are ignored (one movement plane per
+    /// arena).
+    pub fn install_pressure(&self, event: Arc<PressureEvent>, watermark: f64) {
+        let threshold = (self.capacity() as f64 * watermark) as usize;
+        let _ = self.inner.pressure.set(PressureHook { event, threshold });
     }
 
     pub fn capacity(&self) -> usize {
@@ -83,6 +104,11 @@ impl DeviceArena {
             let next = cur as usize + n;
             if next > inner.capacity {
                 inner.failures.fetch_add(1, Ordering::Relaxed);
+                // A failed allocation is the sharpest pressure signal:
+                // wake the movement plane immediately.
+                if let Some(h) = inner.pressure.get() {
+                    h.event.raise_device(n);
+                }
                 return Err(Error::DeviceOom {
                     requested: n,
                     capacity: inner.capacity,
@@ -95,7 +121,16 @@ impl DeviceArena {
                 Ordering::AcqRel,
                 Ordering::Relaxed,
             ) {
-                Ok(_) => break,
+                Ok(_) => {
+                    // Watermark crossing (was below, now above): raise
+                    // by the overage so spilling starts before OOM.
+                    if let Some(h) = inner.pressure.get() {
+                        if cur as usize <= h.threshold && next > h.threshold {
+                            h.event.raise_device(next - h.threshold);
+                        }
+                    }
+                    break;
+                }
                 Err(c) => cur = c,
             }
         }
@@ -215,5 +250,20 @@ mod tests {
         assert_eq!(a.utilization(), 0.0);
         let _g = a.alloc(50).unwrap();
         assert!((a.utilization() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pressure_raised_on_crossing_and_failure() {
+        let a = DeviceArena::new(100);
+        let ev = PressureEvent::new();
+        a.install_pressure(ev.clone(), 0.5);
+        let _g1 = a.alloc(40).unwrap();
+        assert!(ev.take().is_empty(), "below watermark: no signal");
+        let _g2 = a.alloc(30).unwrap(); // 70 > 50: crossing
+        assert_eq!(ev.take().device_need, 20);
+        let _g3 = a.alloc(20).unwrap(); // already above: no re-raise
+        assert!(ev.take().is_empty());
+        assert!(a.alloc(50).is_err()); // failure always raises
+        assert_eq!(ev.take().device_need, 50);
     }
 }

@@ -8,23 +8,30 @@
 //!   buffer pool (§3.4, Figure 3B): pre-allocated at engine init,
 //!   `mlock(2)`-backed when permitted, also used as network bounce
 //!   buffers and pre-load staging.
-//! * [`spill::SpillStore`] — storage tier: spill files on local disk.
+//! * [`spill::SpillStore`] — storage tier: segmented spill files on
+//!   local disk with lock-free positional I/O.
 //! * [`batch_holder::BatchHolder`] — the paper's Batch Holder: "a data
 //!   container that guarantees that inputs can always be stored
 //!   somewhere in the system, even when the intended target memory is
 //!   full" (§3.1).
 //! * [`reservation::MemoryGovernor`] — reservations + per-operator
 //!   consumption history (§3.3.2).
+//! * [`pressure::PressureEvent`] — the condvar-backed event the tiers
+//!   raise on threshold crossings and failed reservations; the
+//!   Data-Movement executor ([`crate::executors::movement`]) parks on
+//!   it instead of polling utilization.
 
 pub mod batch_holder;
 pub mod device;
 pub mod pinned;
+pub mod pressure;
 pub mod reservation;
 pub mod spill;
 
 pub use batch_holder::{BatchHolder, HolderStats};
 pub use device::{DeviceAlloc, DeviceArena};
 pub use pinned::{PinnedBuf, PinnedPool, PinnedSlab};
+pub use pressure::{PressureEvent, PressureSnapshot};
 pub use reservation::{MemoryGovernor, OpMemoryHistory, Reservation};
 pub use spill::SpillStore;
 

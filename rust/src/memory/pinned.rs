@@ -15,8 +15,9 @@
 //! identical either way). The same pool doubles as the network bounce
 //! buffer and pre-load staging area, exactly as in §3.4.
 
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
+use crate::memory::pressure::PressureEvent;
 use crate::{Error, Result};
 
 /// Shared pool of fixed-size buffers carved from one pinned region.
@@ -35,6 +36,11 @@ struct Inner {
     mlocked: bool,
     acquires: std::sync::atomic::AtomicU64,
     exhaustions: std::sync::atomic::AtomicU64,
+    /// Raised with host-tier pressure whenever the pool runs dry, so
+    /// the Data-Movement executor demotes host data to disk (§3.4: the
+    /// pool doubles as bounce buffer and staging area — exhaustion here
+    /// stalls network receives and pre-loads alike).
+    pressure: OnceLock<Arc<PressureEvent>>,
 }
 
 /// One contiguous, optionally mlocked allocation.
@@ -83,8 +89,21 @@ impl PinnedPool {
                 mlocked,
                 acquires: Default::default(),
                 exhaustions: Default::default(),
+                pressure: OnceLock::new(),
             }),
         })
+    }
+
+    /// Install the shared pressure event (one-shot; later installs are
+    /// ignored).
+    pub fn install_pressure(&self, event: Arc<PressureEvent>) {
+        let _ = self.inner.pressure.set(event);
+    }
+
+    fn raise_pressure(&self, bytes: usize) {
+        if let Some(ev) = self.inner.pressure.get() {
+            ev.raise_host(bytes);
+        }
     }
 
     pub fn buf_size(&self) -> usize {
@@ -126,12 +145,15 @@ impl PinnedPool {
                 self.inner
                     .exhaustions
                     .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                self.raise_pressure(self.inner.buf_size);
                 Err(Error::PinnedExhausted { requested: 1, available: 0 })
             }
         }
     }
 
-    /// Take one buffer, blocking until one frees up or `timeout`.
+    /// Take one buffer, blocking until one frees up or `timeout`. Dry
+    /// pool raises host pressure before parking so the Data-Movement
+    /// executor can demote host data and free buffers while we wait.
     pub fn acquire_timeout(&self, timeout: std::time::Duration) -> Result<PinnedBuf> {
         let deadline = std::time::Instant::now() + timeout;
         let mut free = self.inner.free.lock().unwrap();
@@ -142,6 +164,7 @@ impl PinnedPool {
                     .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 return Ok(PinnedBuf { pool: self.clone(), idx });
             }
+            self.raise_pressure(self.inner.buf_size);
             let now = std::time::Instant::now();
             if now >= deadline {
                 self.inner
@@ -226,6 +249,7 @@ impl PinnedSlab {
         let need = data.len().div_ceil(bs).max(1);
         let avail = pool.free_buffers();
         if need > avail {
+            pool.raise_pressure((need - avail) * bs);
             return Err(Error::PinnedExhausted { requested: need, available: avail });
         }
         let mut bufs = Vec::with_capacity(need);
@@ -409,5 +433,18 @@ mod tests {
         let _held = p.try_acquire().unwrap();
         let r = p.acquire_timeout(std::time::Duration::from_millis(30));
         assert!(matches!(r, Err(Error::PinnedExhausted { .. })));
+    }
+
+    #[test]
+    fn exhaustion_raises_host_pressure() {
+        let p = PinnedPool::new(64, 1).unwrap();
+        let ev = PressureEvent::new();
+        p.install_pressure(ev.clone());
+        let _held = p.try_acquire().unwrap();
+        assert!(p.try_acquire().is_err());
+        assert_eq!(ev.take().host_need, 64);
+        // slab-level exhaustion raises the full shortfall
+        assert!(PinnedSlab::write(&p, &[0u8; 200]).is_err());
+        assert_eq!(ev.take().host_need, 4 * 64);
     }
 }

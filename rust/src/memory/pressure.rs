@@ -1,0 +1,166 @@
+//! The event half of the Data-Movement plane (§3.3.2/§3.3.3).
+//!
+//! A [`PressureEvent`] is a `Condvar`-backed latch the memory tiers
+//! signal the instant something movement-worthy happens:
+//!
+//! * [`crate::memory::DeviceArena`] raises **device** pressure when an
+//!   allocation crosses the spill watermark or fails outright;
+//! * [`crate::memory::PinnedPool`] raises **host** pressure when the
+//!   fixed-size buffer pool runs dry;
+//! * [`crate::memory::MemoryGovernor`] raises **device** pressure when
+//!   a reservation cannot be granted;
+//! * [`crate::executors::compute::TaskQueue`] marks the **queue** dirty
+//!   when a task with pre-loadable I/O is submitted.
+//!
+//! The Data-Movement executor parks on [`PressureEvent::wait`] and
+//! reacts in microseconds — replacing the seed's 5 ms utilization
+//! polling loop. Signals are *accumulated* (needs add up, queue
+//! dirtiness is sticky) so a burst of raises between two waits is never
+//! lost, and `wait` drains the accumulated state atomically.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Accumulated, undelivered pressure.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PressureSnapshot {
+    /// Bytes wanted free on the device tier (watermark overage and/or
+    /// failed allocations/reservations since the last wait).
+    pub device_need: usize,
+    /// Bytes wanted free on the host (pinned) tier.
+    pub host_need: usize,
+    /// The compute queue gained tasks with pre-loadable inputs.
+    pub queue_dirty: bool,
+}
+
+impl PressureSnapshot {
+    pub fn is_empty(&self) -> bool {
+        self.device_need == 0 && self.host_need == 0 && !self.queue_dirty
+    }
+}
+
+#[derive(Default)]
+struct State {
+    pending: PressureSnapshot,
+}
+
+/// Shared condition-variable event connecting the memory tiers to the
+/// Data-Movement executor.
+#[derive(Default)]
+pub struct PressureEvent {
+    state: Mutex<State>,
+    cv: Condvar,
+    raises: AtomicU64,
+}
+
+impl PressureEvent {
+    pub fn new() -> Arc<PressureEvent> {
+        Arc::new(PressureEvent::default())
+    }
+
+    /// Lifetime signal count (tests use this to prove event delivery).
+    pub fn raise_count(&self) -> u64 {
+        self.raises.load(Ordering::Relaxed)
+    }
+
+    /// Signal device-tier pressure: `bytes` should be freed.
+    pub fn raise_device(&self, bytes: usize) {
+        let mut s = self.state.lock().unwrap();
+        s.pending.device_need = s.pending.device_need.saturating_add(bytes);
+        self.raises.fetch_add(1, Ordering::Relaxed);
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    /// Signal host-tier (pinned pool) pressure.
+    pub fn raise_host(&self, bytes: usize) {
+        let mut s = self.state.lock().unwrap();
+        s.pending.host_need = s.pending.host_need.saturating_add(bytes);
+        self.raises.fetch_add(1, Ordering::Relaxed);
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    /// Mark the compute queue dirty (new pre-loadable work).
+    pub fn mark_queue(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.pending.queue_dirty = true;
+        self.raises.fetch_add(1, Ordering::Relaxed);
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    /// Drain pending pressure without blocking.
+    pub fn take(&self) -> PressureSnapshot {
+        std::mem::take(&mut self.state.lock().unwrap().pending)
+    }
+
+    /// Park until pressure arrives (or `timeout`, as a safety sweep for
+    /// missed edges). Returns the drained snapshot; empty on timeout.
+    pub fn wait(&self, timeout: Duration) -> PressureSnapshot {
+        let deadline = Instant::now() + timeout;
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if !s.pending.is_empty() {
+                return std::mem::take(&mut s.pending);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PressureSnapshot::default();
+            }
+            let (guard, _) = self.cv.wait_timeout(s, deadline - now).unwrap();
+            s = guard;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raises_accumulate_and_drain() {
+        let ev = PressureEvent::new();
+        ev.raise_device(100);
+        ev.raise_device(50);
+        ev.raise_host(7);
+        ev.mark_queue();
+        let snap = ev.take();
+        assert_eq!(snap.device_need, 150);
+        assert_eq!(snap.host_need, 7);
+        assert!(snap.queue_dirty);
+        assert!(ev.take().is_empty(), "drained");
+        assert_eq!(ev.raise_count(), 4);
+    }
+
+    #[test]
+    fn wait_wakes_on_raise() {
+        let ev = PressureEvent::new();
+        let ev2 = ev.clone();
+        let h = std::thread::spawn(move || ev2.wait(Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(20));
+        ev.raise_device(42);
+        let snap = h.join().unwrap();
+        assert_eq!(snap.device_need, 42);
+    }
+
+    #[test]
+    fn wait_times_out_empty() {
+        let ev = PressureEvent::new();
+        let t0 = Instant::now();
+        let snap = ev.wait(Duration::from_millis(30));
+        assert!(snap.is_empty());
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn pending_signal_returns_immediately() {
+        let ev = PressureEvent::new();
+        ev.raise_host(9);
+        let t0 = Instant::now();
+        let snap = ev.wait(Duration::from_secs(5));
+        assert_eq!(snap.host_need, 9);
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+}

@@ -13,13 +13,16 @@
 //! device arena's *reservable* budget without touching the arena's
 //! in-use counter; task allocations then draw real arena bytes inside
 //! that headroom. When a reservation cannot be granted, the governor
-//! invokes its pressure callback (wired to the Memory Executor's spill
-//! task) and waits up to a deadline.
+//! raises device pressure on the shared [`PressureEvent`]; the
+//! Data-Movement executor spills and calls
+//! [`MemoryGovernor::notify_freed`], waking the blocked reservation in
+//! microseconds rather than on a polling tick.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
+use crate::memory::pressure::PressureEvent;
 use crate::memory::DeviceArena;
 use crate::{Error, Result};
 
@@ -33,9 +36,9 @@ struct Inner {
     arena: DeviceArena,
     reserved: Mutex<usize>,
     freed: Condvar,
-    /// Called (outside the lock) when a reservation can't be granted;
-    /// expected to trigger spilling. Returns bytes it *tried* to free.
-    pressure: Mutex<Option<Box<dyn Fn(usize) -> usize + Send + Sync>>>,
+    /// Raised when a reservation can't be granted; the Data-Movement
+    /// executor answers by spilling, then calls `notify_freed`.
+    pressure: OnceLock<Arc<PressureEvent>>,
     grants: AtomicU64,
     waits: AtomicU64,
     timeouts: AtomicU64,
@@ -48,7 +51,7 @@ impl MemoryGovernor {
                 arena,
                 reserved: Mutex::new(0),
                 freed: Condvar::new(),
-                pressure: Mutex::new(None),
+                pressure: OnceLock::new(),
                 grants: AtomicU64::new(0),
                 waits: AtomicU64::new(0),
                 timeouts: AtomicU64::new(0),
@@ -56,14 +59,25 @@ impl MemoryGovernor {
         }
     }
 
-    /// Install the spill trigger (the Memory Executor registers itself
-    /// here — Insight B: reservations ask spilling for help rather than
-    /// competing with it).
-    pub fn set_pressure_handler(
-        &self,
-        f: impl Fn(usize) -> usize + Send + Sync + 'static,
-    ) {
-        *self.inner.pressure.lock().unwrap() = Some(Box::new(f));
+    /// Install the shared pressure event (the Data-Movement executor
+    /// wires itself here — Insight B: reservations ask spilling for
+    /// help rather than competing with it). One-shot.
+    pub fn install_pressure(&self, event: Arc<PressureEvent>) {
+        let _ = self.inner.pressure.set(event);
+    }
+
+    fn raise_pressure(&self, bytes: usize) {
+        if let Some(ev) = self.inner.pressure.get() {
+            ev.raise_device(bytes);
+        }
+    }
+
+    /// Wake reservations blocked in [`MemoryGovernor::reserve`]. Called
+    /// by the Data-Movement executor after demotions free arena bytes
+    /// (arena frees don't pass through the governor's own lock, so the
+    /// spiller delivers the wakeup).
+    pub fn notify_freed(&self) {
+        self.inner.freed.notify_all();
     }
 
     pub fn arena(&self) -> &DeviceArena {
@@ -108,17 +122,16 @@ impl MemoryGovernor {
         }
     }
 
-    /// Reserve, invoking the pressure handler and waiting up to
-    /// `timeout` if memory is scarce.
+    /// Reserve, raising device pressure and waiting (event-driven, via
+    /// [`MemoryGovernor::notify_freed`]) up to `timeout` if memory is
+    /// scarce.
     pub fn reserve(&self, bytes: usize, timeout: Duration) -> Result<Reservation> {
         if let Some(r) = self.try_reserve(bytes) {
             return Ok(r);
         }
         self.inner.waits.fetch_add(1, Ordering::Relaxed);
-        // Ask the memory executor for help (outside the reserved lock).
-        if let Some(f) = self.inner.pressure.lock().unwrap().as_ref() {
-            f(bytes);
-        }
+        // Ask the movement plane for help, then park on the condvar.
+        self.raise_pressure(bytes);
         let deadline = Instant::now() + timeout;
         let mut reserved = self.inner.reserved.lock().unwrap();
         loop {
@@ -137,19 +150,20 @@ impl MemoryGovernor {
                     waited_ms: timeout.as_millis() as u64,
                 });
             }
+            // The wakeup path is notify_freed/release; the timeout
+            // chunk only bounds staleness for arena frees that bypass
+            // the movement plane (a compute task dropping its device
+            // batches), re-raising in case the first spill round fell
+            // short.
             let (guard, res) = self
                 .inner
                 .freed
                 .wait_timeout(reserved, (deadline - now).min(Duration::from_millis(20)))
                 .unwrap();
             reserved = guard;
-            // Periodically re-poke the pressure handler on spurious
-            // wakeups/timeouts — arena frees don't signal the condvar.
             if res.timed_out() {
                 drop(reserved);
-                if let Some(f) = self.inner.pressure.lock().unwrap().as_ref() {
-                    f(bytes);
-                }
+                self.raise_pressure(bytes);
                 reserved = self.inner.reserved.lock().unwrap();
             }
         }
@@ -312,22 +326,27 @@ mod tests {
     }
 
     #[test]
-    fn pressure_handler_invoked_and_wait_succeeds() {
+    fn pressure_event_raised_and_wait_woken_by_notify() {
         let g = gov(1000);
         let hold = Arc::new(Mutex::new(Some(g.arena().alloc(900).unwrap())));
+        let ev = PressureEvent::new();
+        g.install_pressure(ev.clone());
+        // A stand-in movement plane: park on the event, "spill" (drop
+        // the big allocation), then deliver the wakeup.
         let h2 = hold.clone();
-        let fired = Arc::new(AtomicU64::new(0));
-        let f2 = fired.clone();
-        g.set_pressure_handler(move |_need| {
-            f2.fetch_add(1, Ordering::Relaxed);
-            // "spill": drop the big allocation
+        let g2 = g.clone();
+        let ev2 = ev.clone();
+        let mover = std::thread::spawn(move || {
+            let snap = ev2.wait(Duration::from_secs(2));
+            assert!(snap.device_need >= 500, "reserve must raise its need");
             h2.lock().unwrap().take();
-            900
+            g2.notify_freed();
         });
-        let r = g.reserve(500, Duration::from_millis(500)).unwrap();
+        let r = g.reserve(500, Duration::from_secs(2)).unwrap();
         assert_eq!(r.bytes(), 500);
-        assert!(fired.load(Ordering::Relaxed) >= 1);
+        assert!(ev.raise_count() >= 1);
         assert_eq!(g.wait_count(), 1);
+        mover.join().unwrap();
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! network busy-time dropping when RDMA is enabled).
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -22,6 +22,25 @@ impl Counter {
     }
 
     pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Up/down instantaneous value (queue depths, in-flight movement
+/// tasks).
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, n: i64) {
+        self.0.store(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
         self.0.load(Ordering::Relaxed)
     }
 }
@@ -92,6 +111,7 @@ impl Histogram {
 #[derive(Default)]
 pub struct Metrics {
     counters: Mutex<BTreeMap<&'static str, std::sync::Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<&'static str, std::sync::Arc<Gauge>>>,
     histograms: Mutex<BTreeMap<&'static str, std::sync::Arc<Histogram>>>,
 }
 
@@ -103,6 +123,10 @@ impl Metrics {
             .entry(name)
             .or_default()
             .clone()
+    }
+
+    pub fn gauge(&self, name: &'static str) -> std::sync::Arc<Gauge> {
+        self.gauges.lock().unwrap().entry(name).or_default().clone()
     }
 
     pub fn histogram(&self, name: &'static str) -> std::sync::Arc<Histogram> {
@@ -119,6 +143,9 @@ impl Metrics {
         let mut out = String::new();
         for (name, c) in self.counters.lock().unwrap().iter() {
             out.push_str(&format!("{name}: {}\n", c.get()));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("{name}: {}\n", g.get()));
         }
         for (name, h) in self.histograms.lock().unwrap().iter() {
             out.push_str(&format!(
@@ -200,8 +227,21 @@ mod tests {
     fn snapshot_lists_everything() {
         let m = Metrics::default();
         m.counter("a.b").inc();
+        m.gauge("q.depth").add(3);
         m.histogram("c.d").record(Duration::from_micros(5));
         let s = m.snapshot();
         assert!(s.contains("a.b: 1") && s.contains("c.d"));
+        assert!(s.contains("q.depth: 3"));
+    }
+
+    #[test]
+    fn gauge_goes_up_and_down() {
+        let m = Metrics::default();
+        let g = m.gauge("g");
+        g.add(5);
+        g.add(-2);
+        assert_eq!(g.get(), 3);
+        g.set(0);
+        assert_eq!(m.gauge("g").get(), 0);
     }
 }

@@ -13,6 +13,7 @@
 //! that xla_extension 0.5.1 rejects; the text parser reassigns ids.
 
 pub mod manifest;
+pub mod pjrt_shim;
 pub mod registry;
 pub mod stage;
 

@@ -1,0 +1,107 @@
+//! Seam between the engine and the optional `xla` crate.
+//!
+//! With the `pjrt` cargo feature enabled this module re-exports the
+//! real `xla` types and the registry runs the AOT HLO artifacts on the
+//! PJRT CPU client. Without it (the default — the xla_extension shared
+//! library is a heavyweight native build), the same names resolve to
+//! the stubs below: [`PjRtClient::cpu`] fails with a descriptive error,
+//! [`crate::runtime::KernelRegistry::shared`] surfaces that as
+//! `Error::Xla`, and every operator takes its host fallback path —
+//! exactly what `registry: None` callers (the whole test suite) do.
+
+#[cfg(feature = "pjrt")]
+pub use xla::*;
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::*;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    /// Mirror of `xla::Error` (message-only).
+    #[derive(Debug)]
+    pub struct Error(pub String);
+
+    impl std::fmt::Display for Error {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.write_str(&self.0)
+        }
+    }
+
+    impl std::error::Error for Error {}
+
+    fn unavailable() -> Error {
+        Error(
+            "PJRT support not compiled in: rebuild with `--features pjrt` \
+             (requires the xla_extension library)"
+                .into(),
+        )
+    }
+
+    pub struct PjRtClient;
+
+    impl PjRtClient {
+        pub fn cpu() -> Result<PjRtClient, Error> {
+            Err(unavailable())
+        }
+
+        pub fn compile(
+            &self,
+            _computation: &XlaComputation,
+        ) -> Result<PjRtLoadedExecutable, Error> {
+            Err(unavailable())
+        }
+    }
+
+    pub struct PjRtLoadedExecutable;
+
+    impl PjRtLoadedExecutable {
+        pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+            Err(unavailable())
+        }
+    }
+
+    pub struct PjRtBuffer;
+
+    impl PjRtBuffer {
+        pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+            Err(unavailable())
+        }
+    }
+
+    #[derive(Clone)]
+    pub struct Literal;
+
+    impl Literal {
+        pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
+            Literal
+        }
+
+        pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+            Err(unavailable())
+        }
+
+        pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+            Err(unavailable())
+        }
+
+        pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+            Err(unavailable())
+        }
+    }
+
+    pub struct HloModuleProto;
+
+    impl HloModuleProto {
+        pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+            Err(unavailable())
+        }
+    }
+
+    pub struct XlaComputation;
+
+    impl XlaComputation {
+        pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+            XlaComputation
+        }
+    }
+}

@@ -90,14 +90,20 @@ impl Worker {
                 }
             };
 
-        // ---- network executor
+        // ---- network executor. The pinned pool doubles as the network
+        // bounce buffer (§3.4): sends stage/pass slabs for vectored
+        // writes, and the endpoint's readers land payloads in the pool.
         let outbox = Arc::new(Outbox::new(128));
         let router = Arc::new(Router::new());
+        if let Some(pool) = &pinned {
+            endpoint.install_recv_pool(pool.clone());
+        }
         let network = NetworkExecutor::start(
             endpoint,
             outbox.clone(),
             router.clone(),
             config.net_compression,
+            pinned.clone(),
             config.network_threads,
         );
 
@@ -140,7 +146,6 @@ impl Worker {
         // ---- pre-load executor (byte-range staging only)
         let preload = PreloadExecutor::start(
             queue.clone(),
-            datasource,
             custom,
             config.byte_range_preload,
             config.preload_threads,

@@ -207,7 +207,9 @@ impl Operator for ExchangeOp {
                         if let Some(enc) = input.pop_encoded()? {
                             seen_bytes.fetch_add(enc.len() as u64, Ordering::Relaxed);
                             seen_batches.fetch_add(1, Ordering::Relaxed);
-                            pending.push_encoded(enc)?;
+                            // slab-backed bytes move holder-to-holder
+                            // without a copy
+                            pending.push_host_bytes(enc)?;
                         }
                         Ok(())
                     });
@@ -288,7 +290,39 @@ impl Operator for ExchangeOp {
                     let lip = self.lip_filter.clone();
                     let lip_cut = self.lip_cut_rows.clone();
                     let run = self.common.track(move |ctx: &WorkerCtx| {
-                        // drain staged batches first (FIFO overall)
+                        // Bytes-level fast path: Broadcast and
+                        // un-filtered PassThrough never look at rows, so
+                        // the encoded batch — often a pinned slab —
+                        // moves holder → outbox → wire with no device
+                        // promotion, no decode, no re-encode. Slab
+                        // clones are Arc-shared views, so a broadcast
+                        // stages one payload, not one per peer.
+                        let needs_rows = mode == ExchangeMode::HashPartition
+                            || (mode == ExchangeMode::PassThrough && lip.is_some());
+                        if !needs_rows {
+                            let enc = match pending.pop_encoded()? {
+                                Some(e) => Some(e),
+                                None => input.pop_encoded()?,
+                            };
+                            if let Some(enc) = enc {
+                                if mode == ExchangeMode::Broadcast {
+                                    // clone for all peers but the last
+                                    // (slab clones are Arc-shared)
+                                    let n = ctx.num_workers();
+                                    for dst in 0..n - 1 {
+                                        ctx.outbox.send_encoded(dst, channel, enc.clone())?;
+                                        sent.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                    ctx.outbox.send_encoded(n - 1, channel, enc)?;
+                                } else {
+                                    ctx.outbox.send_encoded(ctx.worker_id, channel, enc)?;
+                                }
+                                sent.fetch_add(1, Ordering::Relaxed);
+                            }
+                            return Ok(());
+                        }
+                        // row-level path: partitioning and LIP need
+                        // decoded rows on device
                         let db = match pending.pop_device()? {
                             Some(db) => Some(db),
                             None => input.pop_device()?,

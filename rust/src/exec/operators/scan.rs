@@ -204,11 +204,15 @@ fn scan_task(
             .fetch_group(&unit.key, &unit.footer, unit.group, cols)?,
     };
     // decompress + decode (device work: parquet decode runs on GPU in
-    // the paper; charge the modeled device)
+    // the paper; charge the modeled device). Slab-backed pages decode
+    // straight out of the bounce pool — this is the device-upload hop,
+    // the one place the slab is allowed to materialize (a page spanning
+    // pool buffers borrows contiguously when it fits one buffer).
     let total: usize = pages.iter().map(|p| p.len()).sum();
     ctx.device_compute.acquire(total);
     let reader = FileReader { footer: unit.footer.as_ref().clone() };
-    let refs: Vec<&[u8]> = pages.iter().map(|p| p.as_slice()).collect();
+    let cows: Vec<std::borrow::Cow<[u8]>> = pages.iter().map(|p| p.contiguous()).collect();
+    let refs: Vec<&[u8]> = cows.iter().map(|c| c.as_ref()).collect();
     let batch = reader.decode_group(unit.group, cols, &refs)?;
     let rows = kernels::batch_rows(ctx);
     for chunk in batch.split(rows) {

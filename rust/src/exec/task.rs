@@ -16,7 +16,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::exec::WorkerCtx;
 use crate::memory::BatchHolder;
-use crate::storage::datasource::ByteRange;
+use crate::storage::datasource::{ByteRange, FetchedPages};
 use crate::Result;
 
 /// State of a byte-range staging cell.
@@ -27,8 +27,10 @@ pub enum StagingState {
     Empty,
     /// The Pre-load Executor is fetching.
     InProgress,
-    /// Fetched pages, ready for the compute task.
-    Done(Vec<Vec<u8>>),
+    /// Fetched pages, ready for the compute task. Slab-backed when the
+    /// pre-loader staged them through the pinned bounce pool — the
+    /// compute decode then reads the very buffers the fetch landed in.
+    Done(FetchedPages),
 }
 
 /// Shared staging cell between a scan task and the pre-loader.
@@ -97,7 +99,7 @@ impl std::fmt::Debug for Task {
 
 /// Take staged pages if the pre-loader finished them; otherwise note
 /// that the compute task will fetch on its own.
-pub fn take_staged(staging: &Staging) -> Option<Vec<Vec<u8>>> {
+pub fn take_staged(staging: &Staging) -> Option<FetchedPages> {
     let mut s = staging.lock().unwrap();
     match std::mem::take(&mut *s) {
         StagingState::Done(pages) => Some(pages),
@@ -119,8 +121,8 @@ mod tests {
         *s.lock().unwrap() = StagingState::InProgress;
         assert!(take_staged(&s).is_none());
         assert!(matches!(*s.lock().unwrap(), StagingState::InProgress));
-        *s.lock().unwrap() = StagingState::Done(vec![vec![1, 2]]);
-        assert_eq!(take_staged(&s).unwrap(), vec![vec![1, 2]]);
+        *s.lock().unwrap() = StagingState::Done(vec![vec![1u8, 2].into()]);
+        assert_eq!(take_staged(&s).unwrap(), vec![vec![1u8, 2].into()]);
         // consumed: second take sees Empty
         assert!(take_staged(&s).is_none());
     }

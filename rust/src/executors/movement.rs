@@ -383,6 +383,12 @@ impl DataMovementExecutor {
     /// One planning pass: victims and beneficiaries from a single
     /// `op_priorities` snapshot.
     fn plan(&self, snap: PressureSnapshot) {
+        // Refresh the §3.4 pool gauges (bounce/waste/exhaustion) on
+        // every wake — the movement plane is the natural heartbeat for
+        // memory-subsystem metrics.
+        if let Some(pool) = &self.env.pinned {
+            pool.publish_metrics(&self.metrics);
+        }
         let threshold =
             (self.env.arena.capacity() as f64 * self.cfg.spill_watermark) as usize;
         let overage = self.env.arena.in_use().saturating_sub(threshold);
@@ -640,6 +646,10 @@ impl DataMovementExecutor {
 
     pub fn stop(&self) {
         self.shutdown.store(true, Ordering::Relaxed);
+        // final pool-gauge snapshot so post-run reports see the totals
+        if let Some(pool) = &self.env.pinned {
+            pool.publish_metrics(&self.metrics);
+        }
         // wake the planner (parked on the event) and the movers
         self.event.mark_queue();
         self.moves.ready.notify_all();

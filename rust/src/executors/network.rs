@@ -10,22 +10,31 @@
 //! Compression "trades computational resources and increased latency
 //! for higher network throughput" — the Fig-4 B/E ablation: worth it on
 //! the TCP fabric, counterproductive once RDMA raises wire bandwidth.
+//!
+//! Data movement (§3.4): outbound batches popped from a Batch Holder's
+//! pinned slot keep their slab across the outbox and onto the wire
+//! (vectored send, no reassembly); heap-encoded batches are staged
+//! through the same bounce pool at frame-build time. Inbound payloads
+//! arrive slab-backed from the TCP reader and are handed to the
+//! destination holder's host tier as-is — one pool, end to end.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::Duration;
 
-use crate::memory::BatchHolder;
+use crate::memory::{BatchHolder, PinnedPool, SlabSlice, SlabWriter, StagedBytes};
+use crate::network::frame::Payload;
 use crate::network::{Endpoint, Frame, FrameKind};
-use crate::storage::compression::Codec;
+use crate::storage::compression::{Codec, PRELUDE_LEN};
 use crate::types::RecordBatch;
 use crate::{Error, Result};
 
 /// One outbound message.
 pub enum Outbound {
-    /// Encoded batch for (dst, channel).
-    Data { dst: usize, channel: u32, encoded: Vec<u8> },
+    /// Encoded batch for (dst, channel) — slab-backed when it came off
+    /// a pinned holder slot.
+    Data { dst: usize, channel: u32, encoded: StagedBytes },
     /// End-of-stream for (dst, channel).
     Finish { dst: usize, channel: u32 },
     /// Size estimate broadcast (§3.2).
@@ -69,12 +78,18 @@ impl Outbox {
 
     /// Queue a batch for a peer (blocks when the buffer is full).
     pub fn send_batch(&self, dst: usize, channel: u32, batch: &RecordBatch) -> Result<()> {
-        self.push(Outbound::Data { dst, channel, encoded: batch.encode() })
+        self.push(Outbound::Data { dst, channel, encoded: StagedBytes::Heap(batch.encode()) })
     }
 
-    /// Queue pre-encoded batch bytes.
-    pub fn send_encoded(&self, dst: usize, channel: u32, encoded: Vec<u8>) -> Result<()> {
-        self.push(Outbound::Data { dst, channel, encoded })
+    /// Queue pre-encoded batch bytes (slab-backed bytes popped from a
+    /// holder ride through unchanged).
+    pub fn send_encoded(
+        &self,
+        dst: usize,
+        channel: u32,
+        encoded: impl Into<StagedBytes>,
+    ) -> Result<()> {
+        self.push(Outbound::Data { dst, channel, encoded: encoded.into() })
     }
 
     pub fn send_finish(&self, dst: usize, channel: u32) -> Result<()> {
@@ -270,8 +285,8 @@ impl Router {
                 };
                 match kind {
                     FrameKind::Data => {
-                        let decoded = Codec::decompress(&frame.payload)?;
-                        rx.holder.push_encoded(decoded)?;
+                        let decoded = unframe_payload(frame.payload)?;
+                        rx.holder.push_host_bytes(decoded)?;
                         Ok(())
                     }
                     FrameKind::Finish => {
@@ -310,6 +325,107 @@ impl Router {
     }
 }
 
+/// Frame an outbound batch's bytes as a wire payload.
+///
+/// * No compression + slab-backed bytes: the payload *is* the holder's
+///   slab plus a 9-byte heap prelude — zero copies on this hop, and the
+///   transport sends it vectored.
+/// * No compression + heap bytes: staged once into the bounce pool (the
+///   copy the old `encode()` path paid anyway, now into pinned memory);
+///   heap framing when the pool is dry or absent.
+/// * Real codec: the compressor reads the slab chunks directly and its
+///   output is staged into the pool for the pinned send.
+fn build_data_payload(
+    encoded: StagedBytes,
+    codec: Codec,
+    bounce: Option<&PinnedPool>,
+) -> Payload {
+    match codec {
+        Codec::None => {
+            let prelude = Codec::None.prelude(encoded.len()).to_vec();
+            match encoded {
+                StagedBytes::Pinned(body) => Payload::pinned(prelude, body),
+                StagedBytes::Heap(v) => {
+                    let staged = bounce.and_then(|pool| {
+                        let mut w = SlabWriter::with_capacity(pool, v.len()).ok()?;
+                        w.write_bytes(&v).ok()?;
+                        Some(w.finish())
+                    });
+                    match staged {
+                        Some(slab) => Payload::pinned(prelude, SlabSlice::whole(slab)),
+                        None => {
+                            let mut framed = prelude;
+                            framed.extend_from_slice(&v);
+                            Payload::Heap(framed)
+                        }
+                    }
+                }
+            }
+        }
+        codec => {
+            let compressed = codec.compress_chunks(&encoded.chunks());
+            match bounce.and_then(|pool| crate::memory::PinnedSlab::write(pool, &compressed).ok())
+            {
+                Some(slab) => Payload::pinned(Vec::new(), SlabSlice::whole(slab)),
+                None => Payload::Heap(compressed),
+            }
+        }
+    }
+}
+
+/// Strip the codec framing off a received data payload, preserving the
+/// slab backing whenever the bytes are uncompressed: the holder then
+/// stores the very buffers the socket read into (or, on the in-proc
+/// fabric, the very buffers the *sender's* holder held).
+fn unframe_payload(payload: Payload) -> Result<StagedBytes> {
+    match payload {
+        Payload::Heap(mut v) => {
+            let (codec, orig) = Codec::parse_prelude(&v)?;
+            if matches!(codec, Codec::None) {
+                if v.len() - PRELUDE_LEN != orig {
+                    return Err(Error::Format(format!(
+                        "payload length mismatch: {} vs {orig}",
+                        v.len() - PRELUDE_LEN
+                    )));
+                }
+                v.drain(..PRELUDE_LEN); // in-place shift, no realloc
+                return Ok(StagedBytes::Heap(v));
+            }
+            Ok(StagedBytes::Heap(Codec::decompress(&v)?))
+        }
+        Payload::Pinned { prelude, body } => {
+            if prelude.len() == PRELUDE_LEN {
+                // sender-built frame: the prelude never entered the slab
+                let (codec, orig) = Codec::parse_prelude(&prelude)?;
+                if matches!(codec, Codec::None) && body.len() == orig {
+                    return Ok(StagedBytes::Pinned(body)); // zero-copy handover
+                }
+                let mut full = Vec::with_capacity(PRELUDE_LEN + body.len());
+                full.extend_from_slice(&prelude);
+                full.extend_from_slice(&body.contiguous());
+                return Ok(StagedBytes::Heap(Codec::decompress(&full)?));
+            }
+            if prelude.is_empty() {
+                // receive path: the whole framed payload is in the slab
+                if body.len() < PRELUDE_LEN {
+                    return Err(Error::Format("payload too short".into()));
+                }
+                let head = body.slice(0, PRELUDE_LEN).to_vec();
+                let (codec, orig) = Codec::parse_prelude(&head)?;
+                if matches!(codec, Codec::None) && body.len() - PRELUDE_LEN == orig {
+                    // slice the prelude off — the batch bytes stay pinned
+                    return Ok(StagedBytes::Pinned(body.slice(PRELUDE_LEN, orig)));
+                }
+                return Ok(StagedBytes::Heap(Codec::decompress(&body.contiguous())?));
+            }
+            Err(Error::Network(format!(
+                "malformed pinned payload: {}-byte prelude",
+                prelude.len()
+            )))
+        }
+    }
+}
+
 /// The executor: sender lanes + one receiver thread.
 pub struct NetworkExecutor {
     outbox: Arc<Outbox>,
@@ -323,11 +439,16 @@ pub struct NetworkExecutor {
 
 impl NetworkExecutor {
     /// Start `threads` sender lanes + 1 receiver over `endpoint`.
+    /// `bounce` is the worker's pinned pool: outbound frames are staged
+    /// (or passed through) slab-backed so the transport can send them
+    /// vectored from page-locked memory; `None` (Fig-4 config A) keeps
+    /// everything on the heap.
     pub fn start(
         endpoint: Arc<dyn Endpoint>,
         outbox: Arc<Outbox>,
         router: Arc<Router>,
         compression: Option<Codec>,
+        bounce: Option<PinnedPool>,
         threads: usize,
     ) -> Arc<NetworkExecutor> {
         let shutdown = Arc::new(AtomicBool::new(false));
@@ -350,6 +471,7 @@ impl NetworkExecutor {
             let pre = ex.sent_bytes_precompress.clone();
             let wire = ex.sent_bytes_wire.clone();
             let cns = ex.compress_ns.clone();
+            let bounce = bounce.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("theseus-netsend-{me}-{lane}"))
@@ -367,15 +489,17 @@ impl NetworkExecutor {
                                 Outbound::Data { dst, channel, encoded } => {
                                     pre.fetch_add(encoded.len() as u64, Ordering::Relaxed);
                                     let t0 = std::time::Instant::now();
-                                    let payload = compression
-                                        .unwrap_or(Codec::None)
-                                        .compress(&encoded);
+                                    let payload = build_data_payload(
+                                        encoded,
+                                        compression.unwrap_or(Codec::None),
+                                        bounce.as_ref(),
+                                    );
                                     cns.fetch_add(
                                         t0.elapsed().as_nanos() as u64,
                                         Ordering::Relaxed,
                                     );
                                     wire.fetch_add(payload.len() as u64, Ordering::Relaxed);
-                                    Frame::data(me, dst, channel, payload)
+                                    Frame::data_payload(me, dst, channel, payload)
                                 }
                                 Outbound::Finish { dst, channel } => {
                                     Frame::finish(me, dst, channel)
@@ -485,6 +609,13 @@ mod tests {
     fn two_workers(
         compression: Option<Codec>,
     ) -> (Vec<Arc<NetworkExecutor>>, Vec<Arc<Router>>) {
+        two_workers_with(compression, None)
+    }
+
+    fn two_workers_with(
+        compression: Option<Codec>,
+        bounce: Option<PinnedPool>,
+    ) -> (Vec<Arc<NetworkExecutor>>, Vec<Arc<Router>>) {
         let hub = InprocHub::new(2, &SimContext::test(), TransportKind::Tcp);
         let eps = hub.endpoints();
         let mut exes = Vec::new();
@@ -498,6 +629,7 @@ mod tests {
                 outbox,
                 router,
                 compression,
+                bounce.clone(),
                 1,
             ));
         }
@@ -519,6 +651,44 @@ mod tests {
             std::thread::sleep(Duration::from_millis(5));
         }
         assert!(holder.is_finished());
+        let got = holder.pop_device().unwrap().unwrap();
+        assert_eq!(got.batch, b);
+        for e in &exes {
+            e.stop();
+        }
+    }
+
+    #[test]
+    fn slab_backed_exchange_keeps_bytes_in_the_pool() {
+        // Uncompressed exchange over the bounce pool: the send stages
+        // (or adopts) a slab, and the receiving holder adopts the slab
+        // from the frame — no decompress-copy on the receive path.
+        let pool = PinnedPool::new(4 << 10, 64).unwrap();
+        let (exes, routers) = two_workers_with(None, Some(pool.clone()));
+        let env = crate::memory::batch_holder::MemEnv {
+            pinned: Some(pool.clone()),
+            ..crate::memory::batch_holder::MemEnv::test(1 << 20)
+        };
+        let holder = BatchHolder::new("rx", env);
+        routers[1].register(7, Arc::new(ChannelRx::new(holder.clone(), 1)));
+
+        let b = batch(500);
+        exes[0].outbox().send_batch(1, 7, &b).unwrap();
+        exes[0].outbox().send_finish(1, 7).unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while !holder.is_finished() && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(holder.is_finished());
+        // send staged once; the receive adopted the same slab: bounce
+        // bytes grew by ~one payload, not two
+        let staged = pool.bounce_bytes();
+        assert!(staged >= b.encode().len() as u64, "send must stage into the pool");
+        assert!(
+            staged < 2 * b.encode().len() as u64,
+            "receive must adopt the slab, not re-copy ({staged} bytes staged)"
+        );
+        assert_eq!(holder.stats().host_batches, 1, "landed at host tier");
         let got = holder.pop_device().unwrap().unwrap();
         assert_eq!(got.batch, b);
         for e in &exes {

@@ -22,7 +22,7 @@ use std::time::Duration;
 use crate::exec::task::{Prefetch, StagingState};
 use crate::executors::compute::TaskQueue;
 use crate::memory::PressureEvent;
-use crate::storage::datasource::{CustomObjectStoreDatasource, Datasource};
+use crate::storage::datasource::CustomObjectStoreDatasource;
 
 /// Fallback sweep for missed edges; the wake path is the queue event.
 const SWEEP: Duration = Duration::from_millis(100);
@@ -36,14 +36,14 @@ pub struct PreloadExecutor {
 }
 
 impl PreloadExecutor {
-    /// `custom` is the coalescing fetch path when the datasource is the
-    /// custom one (byte-range preloading "merges sufficiently close
-    /// byte ranges"); with a generic datasource byte-range preloading
-    /// is unavailable (not a paper configuration either). `enabled =
-    /// false` (Fig-4 F/G) spawns no threads.
+    /// `custom` is the coalescing fetch path (byte-range preloading
+    /// "merges sufficiently close byte ranges"); with a generic
+    /// datasource (`custom = None`) byte-range preloading is
+    /// unavailable (not a paper configuration either), so staging cells
+    /// are left alone and compute tasks fetch for themselves. `enabled
+    /// = false` (Fig-4 F/G) spawns no threads.
     pub fn start(
         queue: Arc<TaskQueue>,
-        datasource: Arc<dyn Datasource>,
         custom: Option<Arc<CustomObjectStoreDatasource>>,
         enabled: bool,
         threads: usize,
@@ -59,11 +59,13 @@ impl PreloadExecutor {
         if !enabled {
             return ex; // disabled: no threads (Fig-4 F)
         }
+        let Some(custom) = custom else {
+            return ex; // generic datasource: nothing to coalesce-fetch
+        };
         queue.add_listener(event.clone());
         let mut handles = Vec::new();
         for t in 0..threads.max(1) {
             let queue = queue.clone();
-            let ds = datasource.clone();
             let custom = custom.clone();
             let stop = shutdown.clone();
             let ev = event.clone();
@@ -81,7 +83,7 @@ impl PreloadExecutor {
                             if stop.load(Ordering::Relaxed) {
                                 return;
                             }
-                            Self::pass(&queue, &ds, &custom, &brl);
+                            Self::pass(&queue, &custom, &brl);
                         }
                     })
                     .expect("spawn preload"),
@@ -94,12 +96,7 @@ impl PreloadExecutor {
     }
 
     /// One inspection pass over the queued byte-range prefetches.
-    fn pass(
-        queue: &TaskQueue,
-        ds: &Arc<dyn Datasource>,
-        custom: &Option<Arc<CustomObjectStoreDatasource>>,
-        brl: &AtomicU64,
-    ) {
+    fn pass(queue: &TaskQueue, custom: &Arc<CustomObjectStoreDatasource>, brl: &AtomicU64) {
         // Snapshot prefetchable work from the queue (staging cells are
         // shared; tasks stay queued).
         let mut byte_ranges = Vec::new();
@@ -119,15 +116,7 @@ impl PreloadExecutor {
                     _ => continue,
                 }
             }
-            let fetched = match custom {
-                Some(c) => c.fetch_ranges(&key, &ranges),
-                None => {
-                    let _ = ds;
-                    Err(crate::Error::ObjectStore(
-                        "byte-range preload requires the custom datasource".into(),
-                    ))
-                }
-            };
+            let fetched = custom.fetch_ranges(&key, &ranges);
             let mut s = staging.lock().unwrap();
             match fetched {
                 Ok(pages) => {
@@ -169,7 +158,7 @@ mod tests {
     use crate::exec::task::{take_staged, Staging, Task};
     use crate::sim::SimContext;
     use crate::storage::compression::Codec;
-    use crate::storage::datasource::{ByteRange, GenericDatasource};
+    use crate::storage::datasource::{ByteRange, Datasource, GenericDatasource};
     use crate::storage::format::FileWriter;
     use crate::storage::object_store::{ObjectStore, SimObjectStore};
     use crate::types::{Column, DType, Field, RecordBatch, Schema};
@@ -198,13 +187,7 @@ mod tests {
         let queue = TaskQueue::new();
         let custom = Arc::new(CustomObjectStoreDatasource::new(store.clone(), 1 << 20, None));
         let staging: Staging = Arc::new(Mutex::new(StagingState::Empty));
-        let ex = PreloadExecutor::start(
-            queue.clone(),
-            custom.clone() as Arc<dyn Datasource>,
-            Some(custom),
-            true,
-            1,
-        );
+        let ex = PreloadExecutor::start(queue.clone(), Some(custom), true, 1);
         // a queued scan task advertising its ranges — submission marks
         // the event, which is what wakes the pre-loader
         queue.submit(
@@ -242,13 +225,7 @@ mod tests {
             }),
         );
         let before = store.request_count();
-        let ex = PreloadExecutor::start(
-            queue,
-            custom.clone() as Arc<dyn Datasource>,
-            Some(custom),
-            false,
-            1,
-        );
+        let ex = PreloadExecutor::start(queue, Some(custom), false, 1);
         std::thread::sleep(Duration::from_millis(80));
         assert!(matches!(*staging.lock().unwrap(), StagingState::Empty));
         assert_eq!(store.request_count(), before);

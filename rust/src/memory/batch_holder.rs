@@ -15,9 +15,12 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::memory::{DeviceAlloc, DeviceArena, PinnedPool, PinnedSlab, SpillStore, Tier};
+use crate::memory::{
+    DeviceAlloc, DeviceArena, PinnedPool, PinnedSlab, SlabSlice, SlabWriter, SpillStore,
+    StagedBytes, Tier,
+};
 use crate::sim::Throttle;
-use crate::storage::compression::Codec;
+use crate::storage::compression::{Codec, PRELUDE_LEN};
 use crate::types::RecordBatch;
 use crate::{Error, Result};
 
@@ -107,8 +110,9 @@ impl MemEnv {
 /// One stored batch at some tier.
 enum Slot {
     Device(DeviceBatch),
-    /// Encoded batch bytes in the pinned pool.
-    HostPinned(PinnedSlab),
+    /// Encoded batch bytes in the pinned pool (a shared slab view: the
+    /// network receive path hands payload slabs over without copying).
+    HostPinned(SlabSlice),
     /// Encoded batch bytes in pageable host memory.
     HostPageable(Vec<u8>),
     /// Compressed encoded bytes on disk.
@@ -269,8 +273,25 @@ impl BatchHolder {
     /// Store encoded batch bytes directly at host tier (network receive,
     /// byte-range pre-load staging).
     pub fn push_encoded(&self, bytes: Vec<u8>) -> Result<Tier> {
+        self.push_host_bytes(StagedBytes::Heap(bytes))
+    }
+
+    /// Store already-staged bytes at host tier. Slab-backed bytes (a
+    /// received network payload, a re-queued exchange batch) become the
+    /// host slot as-is — no copy, the pool buffers just change owner.
+    pub fn push_host_bytes(&self, bytes: StagedBytes) -> Result<Tier> {
         self.note_push(bytes.len());
-        let slot = self.host_slot(bytes)?;
+        let slot = match bytes {
+            // Adopt the slab only as its sole owner. An Arc-shared view
+            // (an in-proc broadcast delivers one slab to N holders)
+            // would make per-holder host accounting exceed physical
+            // pool usage, and demoting one holder's copy would "free"
+            // bytes the siblings still pin — so shared views are
+            // re-staged into independent memory instead.
+            StagedBytes::Pinned(s) if s.is_exclusive() => Slot::HostPinned(s),
+            StagedBytes::Pinned(s) => self.host_slot(s.to_vec())?,
+            StagedBytes::Heap(v) => self.host_slot(v)?,
+        };
         self.store(slot, false)
     }
 
@@ -297,7 +318,7 @@ impl BatchHolder {
     fn host_slot(&self, bytes: Vec<u8>) -> Result<Slot> {
         if let Some(pool) = &self.inner.env.pinned {
             if let Ok(slab) = PinnedSlab::write(pool, &bytes) {
-                return Ok(Slot::HostPinned(slab));
+                return Ok(Slot::HostPinned(SlabSlice::whole(slab)));
             }
         }
         Ok(Slot::HostPageable(bytes))
@@ -329,8 +350,10 @@ impl BatchHolder {
     }
 
     /// Pop the next batch as encoded host bytes (network-send path; no
-    /// device memory involved).
-    pub fn pop_encoded(&self) -> Result<Option<Vec<u8>>> {
+    /// device memory involved). Host-pinned slots hand their slab view
+    /// over as-is, so the Network Executor can `write_vectored` the
+    /// buffers onto the wire without reassembling them.
+    pub fn pop_encoded(&self) -> Result<Option<StagedBytes>> {
         let slot = match self.inner.slots.lock().unwrap().pop_front() {
             Some(s) => s,
             None => return Ok(None),
@@ -341,15 +364,15 @@ impl BatchHolder {
             Slot::Device(db) => {
                 let bytes = db.batch.encode();
                 env.charge_pcie(bytes.len(), env.pinned.is_some());
-                bytes
+                StagedBytes::Heap(bytes)
             }
-            Slot::HostPinned(s) => s.read(),
-            Slot::HostPageable(v) => v,
+            Slot::HostPinned(s) => StagedBytes::Pinned(s),
+            Slot::HostPageable(v) => StagedBytes::Heap(v),
             Slot::Disk(s) => {
                 let raw = env.spill.read(s)?;
                 env.disk.acquire(raw.len());
                 env.spill.free(s);
-                Codec::decompress(&raw)?
+                StagedBytes::Heap(Codec::decompress(&raw)?)
             }
         }))
     }
@@ -362,11 +385,12 @@ impl BatchHolder {
         match slot {
             Slot::Device(db) => Ok(db),
             Slot::HostPinned(s) => {
-                let bytes = s.read();
-                let batch = RecordBatch::decode(&bytes).map_err(|e| (None, e))?;
+                // device upload: decode from the slab view (contiguous
+                // borrow when it fits one buffer)
+                let batch = RecordBatch::decode(&s.contiguous()).map_err(|e| (None, e))?;
                 match DeviceBatch::new(&env.arena, batch) {
                     Ok(db) => {
-                        env.charge_pcie(bytes.len(), true);
+                        env.charge_pcie(s.len(), true);
                         self.inner.promotions.fetch_add(1, Ordering::Relaxed);
                         Ok(db)
                     }
@@ -460,7 +484,10 @@ impl BatchHolder {
     }
 
     /// Demote the newest host-tier batch to disk (compressing with the
-    /// env's spill codec). Returns host bytes freed.
+    /// env's spill codec). A pinned slot goes down via per-chunk
+    /// positional writes straight from the slab — no reassembly copy;
+    /// a real codec streams the chunks through the compressor instead.
+    /// Returns host bytes freed.
     pub fn spill_host_one(&self) -> Result<usize> {
         let taken = {
             let mut slots = self.inner.slots.lock().unwrap();
@@ -472,16 +499,39 @@ impl BatchHolder {
             None => return Ok(0),
         };
         let env = &self.inner.env;
-        let bytes = match slot {
-            Slot::HostPinned(s) => s.read(),
-            Slot::HostPageable(v) => v,
+        let (freed, disk_slot) = match slot {
+            Slot::HostPinned(s) => {
+                let freed = s.len();
+                self.inner.account_sub(Tier::Host, freed);
+                let disk_slot = match env.spill_codec {
+                    Codec::None => {
+                        // direct: prelude + slab chunks, each written at
+                        // its own offset
+                        let prelude = Codec::None.prelude(s.len());
+                        let chunks = s.chunks();
+                        let mut parts: Vec<&[u8]> = Vec::with_capacity(1 + chunks.len());
+                        parts.push(&prelude);
+                        parts.extend_from_slice(&chunks);
+                        env.disk.acquire(PRELUDE_LEN + s.len());
+                        env.spill.write_vectored(&parts)?
+                    }
+                    codec => {
+                        let compressed = codec.compress_chunks(&s.chunks());
+                        env.disk.acquire(compressed.len());
+                        env.spill.write(&compressed)?
+                    }
+                };
+                (freed, disk_slot)
+            }
+            Slot::HostPageable(v) => {
+                let freed = v.len();
+                self.inner.account_sub(Tier::Host, freed);
+                let compressed = env.spill_codec.compress(&v);
+                env.disk.acquire(compressed.len());
+                (freed, env.spill.write(&compressed)?)
+            }
             _ => unreachable!(),
         };
-        let freed = bytes.len();
-        self.inner.account_sub(Tier::Host, freed);
-        let compressed = env.spill_codec.compress(&bytes);
-        env.disk.acquire(compressed.len());
-        let disk_slot = env.spill.write(&compressed)?;
         self.inner.account_add(Tier::Disk, disk_slot.len as usize);
         {
             let mut slots = self.inner.slots.lock().unwrap();
@@ -507,17 +557,12 @@ impl BatchHolder {
             Some(x) => x,
             None => return Ok(false),
         };
-        let env = &self.inner.env;
         let s = match slot {
             Slot::Disk(s) => s,
             _ => unreachable!(),
         };
         self.inner.account_sub(Tier::Disk, s.len as usize);
-        let raw = env.spill.read(s)?;
-        env.disk.acquire(raw.len());
-        let bytes = Codec::decompress(&raw)?;
-        env.spill.free(s);
-        let new_slot = self.host_slot(bytes)?;
+        let new_slot = self.reload_host_slot(s)?;
         self.inner.account_add(new_slot.tier(), new_slot.bytes());
         {
             let mut slots = self.inner.slots.lock().unwrap();
@@ -526,6 +571,54 @@ impl BatchHolder {
         }
         self.inner.promotions.fetch_add(1, Ordering::Relaxed);
         Ok(true)
+    }
+
+    /// Reload a spilled payload into a host slot. Uncompressed spill
+    /// (the common `spill_codec: None` case) is read from disk straight
+    /// into pinned buffers — one positional read per buffer, no heap
+    /// staging `Vec`; compressed spill is decompressed *into* a slab
+    /// writer. Both fall back to pageable memory when the pool is dry.
+    fn reload_host_slot(&self, s: crate::memory::spill::SpillSlot) -> Result<Slot> {
+        let env = &self.inner.env;
+        if let Some(pool) = &env.pinned {
+            if s.len >= PRELUDE_LEN as u64 {
+                let head = env.spill.read_at(s, 0, PRELUDE_LEN)?;
+                if let Ok((codec, orig)) = Codec::parse_prelude(&head) {
+                    if matches!(codec, Codec::None)
+                        && orig as u64 == s.len - PRELUDE_LEN as u64
+                    {
+                        match env.spill.read_into_slab(s, PRELUDE_LEN as u64, pool) {
+                            Ok(slab) => {
+                                env.disk.acquire(s.len as usize);
+                                env.spill.free(s);
+                                return Ok(Slot::HostPinned(SlabSlice::whole(slab)));
+                            }
+                            Err(Error::PinnedExhausted { .. }) => {} // pageable fallback
+                            Err(e) => return Err(e),
+                        }
+                    }
+                }
+            }
+        }
+        let raw = env.spill.read(s)?;
+        env.disk.acquire(raw.len());
+        env.spill.free(s);
+        if let Some(pool) = &env.pinned {
+            if let Ok((_, orig)) = Codec::parse_prelude(&raw) {
+                if let Ok(mut w) = SlabWriter::with_capacity(pool, orig) {
+                    let claimed = Codec::decompress_into(&raw, &mut w)?;
+                    if w.len() != claimed {
+                        return Err(Error::Format(format!(
+                            "spill reload length mismatch: {} vs {claimed}",
+                            w.len()
+                        )));
+                    }
+                    return Ok(Slot::HostPinned(SlabSlice::whole(w.finish())));
+                }
+            }
+        }
+        let bytes = Codec::decompress(&raw)?;
+        self.host_slot(bytes)
     }
 
     // ------------------------------------------------------------ state
@@ -710,7 +803,82 @@ mod tests {
         assert_eq!(h.len(), 1, "slot restored after failed pop");
         // encoded pop still drains it without device memory
         let bytes = h.pop_encoded().unwrap().unwrap();
-        assert_eq!(RecordBatch::decode(&bytes).unwrap(), batch(100));
+        assert_eq!(RecordBatch::decode(&bytes.contiguous()).unwrap(), batch(100));
+    }
+
+    #[test]
+    fn pop_encoded_hands_over_the_slab() {
+        let env = MemEnv::test(1 << 20);
+        let h = BatchHolder::new("t", env.clone());
+        h.push_batch_host(batch(64)).unwrap();
+        let pool = env.pinned.as_ref().unwrap();
+        let held = pool.total_buffers() - pool.free_buffers();
+        assert!(held > 0, "host push staged into the pool");
+        let enc = h.pop_encoded().unwrap().unwrap();
+        assert!(enc.is_pinned(), "host-pinned slot pops as a slab view");
+        // the pop did not copy: the same buffers moved owner
+        assert_eq!(pool.total_buffers() - pool.free_buffers(), held);
+        assert_eq!(RecordBatch::decode(&enc.contiguous()).unwrap(), batch(64));
+        drop(enc);
+        assert_eq!(pool.free_buffers(), pool.total_buffers());
+    }
+
+    #[test]
+    fn spill_and_promote_stay_pinned_without_codec() {
+        // None-codec demotion writes the slab per-chunk; promotion
+        // reads straight back into a slab. bounce_bytes counts exactly
+        // one staging copy per direction, none in between.
+        let env = MemEnv::test(1 << 20);
+        let h = BatchHolder::new("t", env.clone());
+        let pool = env.pinned.clone().unwrap();
+        h.push_batch_host(batch(200)).unwrap();
+        let after_push = pool.bounce_bytes();
+        assert!(after_push > 0);
+        h.spill_host_one().unwrap();
+        assert_eq!(pool.bounce_bytes(), after_push, "demotion must not re-copy");
+        assert_eq!(h.stats().disk_batches, 1);
+        assert!(h.promote_one_to_host().unwrap());
+        assert!(pool.bounce_bytes() > after_push, "reload lands in the pool");
+        assert_eq!(h.stats().host_batches, 1);
+        let db = h.pop_device().unwrap().unwrap();
+        assert_eq!(db.batch, batch(200));
+    }
+
+    #[test]
+    fn slab_backed_push_takes_no_extra_copy() {
+        let env = MemEnv::test(1 << 20);
+        let h = BatchHolder::new("rx", env.clone());
+        let pool = env.pinned.clone().unwrap();
+        let encoded = batch(40).encode();
+        let slab = PinnedSlab::write(&pool, &encoded).unwrap();
+        let staged = pool.bounce_bytes();
+        h.push_host_bytes(StagedBytes::Pinned(SlabSlice::whole(slab))).unwrap();
+        assert_eq!(pool.bounce_bytes(), staged, "push adopted the slab");
+        assert_eq!(h.stats().host_batches, 1);
+        assert_eq!(h.pop_device().unwrap().unwrap().batch, batch(40));
+    }
+
+    #[test]
+    fn shared_slab_push_copies_for_correct_accounting() {
+        // Two holders receiving the same Arc-shared slab (in-proc
+        // broadcast) must not both adopt it: accounting would exceed
+        // the pool's physical usage. The first push re-stages; once the
+        // view is exclusive again, the second adopts.
+        let env = MemEnv::test(1 << 20);
+        let h1 = BatchHolder::new("a", env.clone());
+        let h2 = BatchHolder::new("b", env.clone());
+        let pool = env.pinned.clone().unwrap();
+        let encoded = batch(50).encode();
+        let slab = PinnedSlab::write(&pool, &encoded).unwrap();
+        let view = SlabSlice::whole(slab);
+        let sibling = view.clone(); // the broadcast's second frame
+        assert!(!view.is_exclusive());
+        h1.push_host_bytes(StagedBytes::Pinned(view)).unwrap();
+        assert!(sibling.is_exclusive(), "first push released its ref");
+        h2.push_host_bytes(StagedBytes::Pinned(sibling)).unwrap();
+        // both holders own real, independent bytes
+        assert_eq!(h1.pop_device().unwrap().unwrap().batch, batch(50));
+        assert_eq!(h2.pop_device().unwrap().unwrap().batch, batch(50));
     }
 
     #[test]

@@ -30,7 +30,7 @@ pub mod spill;
 
 pub use batch_holder::{BatchHolder, HolderStats};
 pub use device::{DeviceAlloc, DeviceArena};
-pub use pinned::{PinnedBuf, PinnedPool, PinnedSlab};
+pub use pinned::{PinnedBuf, PinnedPool, PinnedSlab, SlabSlice, SlabWriter, StagedBytes};
 pub use pressure::{PressureEvent, PressureSnapshot};
 pub use reservation::{MemoryGovernor, OpMemoryHistory, Reservation};
 pub use spill::SpillStore;

@@ -14,7 +14,38 @@
 //! discipline, which is what the paper's Figure 3B is about, is
 //! identical either way). The same pool doubles as the network bounce
 //! buffer and pre-load staging area, exactly as in §3.4.
+//!
+//! ## The writer API and the one-bounce discipline
+//!
+//! [`PinnedSlab`] is the *single byte-carrier* of the data plane: the
+//! pre-loader's staging pages, the Batch Holder's host tier, the
+//! network's payloads, and the spill path all hold the same slabs.
+//! Three pieces make the hot paths single-copy:
+//!
+//! * [`SlabWriter`] — incremental fill: acquire-buffers-as-you-go (or
+//!   reserve all up front with [`SlabWriter::with_capacity`], so a dry
+//!   pool fails *before* a socket or file has been half-consumed),
+//!   with an [`std::io::Write`] impl so object-store reads, codec
+//!   decompressors, and socket receives land bytes in pinned memory
+//!   directly. [`PinnedSlab::from_reader`] wraps the common
+//!   read-exactly-N-bytes case (network receive path).
+//! * [`SlabSlice`] — a cheap `Arc`-shared view into a slab, so the
+//!   pre-loader can hand out per-column pages of one coalesced fetch
+//!   and the receive path can strip a codec prelude without copying.
+//! * Chunk iteration ([`PinnedSlab::chunk_slices`],
+//!   [`SlabSlice::chunks`]) — the vectored-I/O side: the TCP back-end
+//!   `write_vectored`s slab chunks after a 21-byte header-encode
+//!   (`Frame::encode_header`), and the spill tier `write_all_at`s each
+//!   chunk at its own offset, so neither path ever reassembles a slab
+//!   into a heap `Vec` (`PinnedSlab::read` remains for device uploads
+//!   and tests only).
+//!
+//! The pool keeps cumulative `bounce_bytes` (bytes staged into slabs)
+//! and `waste_bytes` (Figure-3B unused tails) counters, published as
+//! worker metrics by the Data-Movement executor.
 
+use std::borrow::Cow;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 use crate::memory::pressure::PressureEvent;
@@ -34,8 +65,14 @@ struct Inner {
     available: Condvar,
     total: usize,
     mlocked: bool,
-    acquires: std::sync::atomic::AtomicU64,
-    exhaustions: std::sync::atomic::AtomicU64,
+    acquires: AtomicU64,
+    exhaustions: AtomicU64,
+    /// Cumulative bytes copied *into* slabs (the bounce copies this
+    /// module exists to make cheap and count).
+    bounce_bytes: AtomicU64,
+    /// Cumulative unused tail bytes of finished slabs (Figure 3B's
+    /// "small unused block of memory per batch", aggregated).
+    waste_bytes: AtomicU64,
     /// Raised with host-tier pressure whenever the pool runs dry, so
     /// the Data-Movement executor demotes host data to disk (§3.4: the
     /// pool doubles as bounce buffer and staging area — exhaustion here
@@ -89,6 +126,8 @@ impl PinnedPool {
                 mlocked,
                 acquires: Default::default(),
                 exhaustions: Default::default(),
+                bounce_bytes: Default::default(),
+                waste_bytes: Default::default(),
                 pressure: OnceLock::new(),
             }),
         })
@@ -128,6 +167,35 @@ impl PinnedPool {
 
     pub fn exhaustion_count(&self) -> u64 {
         self.inner.exhaustions.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Cumulative bytes staged into slabs (one bounce copy each).
+    pub fn bounce_bytes(&self) -> u64 {
+        self.inner.bounce_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative unused tail bytes of finished slabs.
+    pub fn waste_bytes(&self) -> u64 {
+        self.inner.waste_bytes.load(Ordering::Relaxed)
+    }
+
+    fn note_bounce(&self, n: usize) {
+        self.inner.bounce_bytes.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    fn note_waste(&self, n: usize) {
+        self.inner.waste_bytes.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Publish pool-level counters into a worker metrics registry
+    /// (idempotent gauge sets; the Data-Movement executor calls this on
+    /// every planning pass).
+    pub fn publish_metrics(&self, m: &crate::metrics::Metrics) {
+        m.gauge("pinned.free_buffers").set(self.free_buffers() as i64);
+        m.gauge("pinned.acquires").set(self.acquire_count() as i64);
+        m.gauge("pinned.exhaustions").set(self.exhaustion_count() as i64);
+        m.gauge("pinned.bounce_bytes").set(self.bounce_bytes() as i64);
+        m.gauge("pinned.waste_bytes").set(self.waste_bytes() as i64);
     }
 
     /// Take one buffer, failing immediately if the pool is dry (the
@@ -208,7 +276,7 @@ impl PinnedBuf {
     }
 
     pub fn is_empty(&self) -> bool {
-        false
+        self.len() == 0
     }
 
     pub fn as_slice(&self) -> &[u8] {
@@ -243,26 +311,28 @@ pub struct PinnedSlab {
 }
 
 impl PinnedSlab {
-    /// Copy `data` into freshly acquired pool buffers.
+    /// Copy `data` into freshly acquired pool buffers (all-or-nothing:
+    /// a pool without room for the whole payload fails up front and
+    /// raises host pressure for the shortfall).
     pub fn write(pool: &PinnedPool, data: &[u8]) -> Result<PinnedSlab> {
-        let bs = pool.buf_size();
-        let need = data.len().div_ceil(bs).max(1);
-        let avail = pool.free_buffers();
-        if need > avail {
-            pool.raise_pressure((need - avail) * bs);
-            return Err(Error::PinnedExhausted { requested: need, available: avail });
-        }
-        let mut bufs = Vec::with_capacity(need);
-        for chunk_idx in 0..need {
-            let mut b = pool.try_acquire()?;
-            let off = chunk_idx * bs;
-            let n = bs.min(data.len() - off.min(data.len()));
-            if n > 0 {
-                b.as_mut_slice()[..n].copy_from_slice(&data[off..off + n]);
-            }
-            bufs.push(b);
-        }
-        Ok(PinnedSlab { bufs, len: data.len() })
+        let mut w = SlabWriter::with_capacity(pool, data.len())?;
+        w.write_bytes(data)?;
+        Ok(w.finish())
+    }
+
+    /// Read exactly `len` bytes from `r` straight into pool buffers —
+    /// the network receive path's bounce. Every buffer is acquired
+    /// *before* the first read, so a dry pool fails cleanly without
+    /// consuming anything from the reader (the caller falls back to a
+    /// heap read); an I/O error mid-fill is fatal to the stream.
+    pub fn from_reader(
+        pool: &PinnedPool,
+        r: &mut impl std::io::Read,
+        len: usize,
+    ) -> Result<PinnedSlab> {
+        let mut w = SlabWriter::with_capacity(pool, len)?;
+        w.fill_positional(len, |_, buf| r.read_exact(buf))?;
+        Ok(w.finish())
     }
 
     /// Logical byte length (excludes the unused tail of the last
@@ -302,17 +372,26 @@ impl PinnedSlab {
         out
     }
 
-    /// Visit the logical bytes buffer-by-buffer without reassembling
-    /// (zero-copy scatter path for the network executor).
-    pub fn for_each_chunk(&self, mut f: impl FnMut(&[u8])) {
+    /// The logical bytes as per-buffer slices (vectored network send
+    /// and per-chunk positional spill writes).
+    pub fn chunk_slices(&self) -> Vec<&[u8]> {
+        let mut out = Vec::with_capacity(self.bufs.len());
         let mut remaining = self.len;
         for b in &self.bufs {
             let n = remaining.min(b.len());
             if n == 0 {
                 break;
             }
-            f(&b.as_slice()[..n]);
+            out.push(&b.as_slice()[..n]);
             remaining -= n;
+        }
+        out
+    }
+
+    /// Visit the logical bytes buffer-by-buffer without reassembling.
+    pub fn for_each_chunk(&self, mut f: impl FnMut(&[u8])) {
+        for c in self.chunk_slices() {
+            f(c);
         }
     }
 }
@@ -326,6 +405,326 @@ impl std::fmt::Debug for PinnedSlab {
             self.bufs.len(),
             self.waste()
         )
+    }
+}
+
+/// Incremental slab builder: acquire-as-you-fill, so producers (object
+/// stores, decompressors, sockets) write straight into pinned buffers
+/// instead of returning a heap `Vec` that gets copied in afterwards.
+pub struct SlabWriter {
+    pool: PinnedPool,
+    bufs: Vec<PinnedBuf>,
+    len: usize,
+}
+
+impl SlabWriter {
+    /// An empty writer; buffers are acquired lazily as bytes arrive.
+    pub fn new(pool: &PinnedPool) -> SlabWriter {
+        SlabWriter { pool: pool.clone(), bufs: Vec::new(), len: 0 }
+    }
+
+    /// A writer with every buffer `cap` bytes will need acquired up
+    /// front (all-or-nothing). Callers filling from a consumable source
+    /// (socket, stream decoder) use this so a dry pool fails *before*
+    /// the source has been touched, and raises host pressure for the
+    /// shortfall like [`PinnedSlab::write`].
+    pub fn with_capacity(pool: &PinnedPool, cap: usize) -> Result<SlabWriter> {
+        let mut w = SlabWriter::new(pool);
+        w.reserve(cap)?;
+        Ok(w)
+    }
+
+    /// Ensure buffers exist for a total of `cap` bytes (at least one —
+    /// an empty slab still occupies a buffer, as in Figure 3B).
+    pub fn reserve(&mut self, cap: usize) -> Result<()> {
+        let bs = self.pool.buf_size();
+        let need = cap.div_ceil(bs).max(1);
+        if need > self.bufs.len() {
+            let extra = need - self.bufs.len();
+            let avail = self.pool.free_buffers();
+            if extra > avail {
+                // Raise pressure only for satisfiable shortfalls: a
+                // request larger than the whole pool can never be met
+                // by demoting host data, so signaling it would only
+                // trigger futile spill storms (oversized payloads take
+                // the heap fallback and move on).
+                if need <= self.pool.total_buffers() {
+                    self.pool.raise_pressure((extra - avail) * bs);
+                }
+                return Err(Error::PinnedExhausted { requested: extra, available: avail });
+            }
+            for _ in 0..extra {
+                self.bufs.push(self.pool.try_acquire()?);
+            }
+        }
+        Ok(())
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Append bytes, acquiring buffers as the fill crosses boundaries.
+    /// On pool exhaustion the bytes written so far stay intact (the
+    /// caller may fall back to heap or retry after pressure relief).
+    pub fn write_bytes(&mut self, data: &[u8]) -> Result<()> {
+        let bs = self.pool.buf_size();
+        let mut data = data;
+        while !data.is_empty() {
+            let buf_idx = self.len / bs;
+            if buf_idx == self.bufs.len() {
+                self.bufs.push(self.pool.try_acquire()?);
+            }
+            let off = self.len % bs;
+            let n = (bs - off).min(data.len());
+            self.bufs[buf_idx].as_mut_slice()[off..off + n].copy_from_slice(&data[..n]);
+            self.len += n;
+            self.pool.note_bounce(n);
+            data = &data[n..];
+        }
+        Ok(())
+    }
+
+    /// Fill exactly `len` more bytes via positional reads: `read` is
+    /// called once per buffer segment with (offset-within-fill, dest).
+    /// The spill-reload and socket-receive paths use this to land bytes
+    /// in pinned memory without an intermediate heap `Vec`.
+    pub fn fill_positional(
+        &mut self,
+        len: usize,
+        mut read: impl FnMut(u64, &mut [u8]) -> std::io::Result<()>,
+    ) -> Result<()> {
+        let bs = self.pool.buf_size();
+        self.reserve(self.len + len)?;
+        let mut remaining = len;
+        let mut src_off = 0u64;
+        while remaining > 0 {
+            let buf_idx = self.len / bs;
+            let off = self.len % bs;
+            let n = (bs - off).min(remaining);
+            read(src_off, &mut self.bufs[buf_idx].as_mut_slice()[off..off + n])?;
+            self.len += n;
+            self.pool.note_bounce(n);
+            remaining -= n;
+            src_off += n as u64;
+        }
+        Ok(())
+    }
+
+    /// Seal the slab. Unused buffers beyond the fill (over-reserved
+    /// capacity) return to the pool here; the final buffer's tail is
+    /// the accounted Figure-3B waste.
+    pub fn finish(mut self) -> PinnedSlab {
+        let bs = self.pool.buf_size();
+        let used = self.len.div_ceil(bs).max(1).min(self.bufs.len());
+        self.bufs.truncate(used); // drop releases over-reservation
+        let slab = PinnedSlab { bufs: self.bufs, len: self.len };
+        self.pool.note_waste(slab.waste());
+        slab
+    }
+}
+
+impl std::io::Write for SlabWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.write_bytes(buf).map_err(|e| {
+            std::io::Error::new(std::io::ErrorKind::OutOfMemory, e.to_string())
+        })?;
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// A cheap shared view of part of a slab: the coalesced-fetch block is
+/// fetched once and its per-column pages are slices of it; the network
+/// receive path strips the codec prelude by slicing. Dropping the last
+/// slice of a slab returns its buffers to the pool.
+#[derive(Clone)]
+pub struct SlabSlice {
+    slab: Arc<PinnedSlab>,
+    offset: usize,
+    len: usize,
+}
+
+impl SlabSlice {
+    /// View of an entire slab.
+    pub fn whole(slab: PinnedSlab) -> SlabSlice {
+        let len = slab.len();
+        SlabSlice { slab: Arc::new(slab), offset: 0, len }
+    }
+
+    pub fn new(slab: Arc<PinnedSlab>, offset: usize, len: usize) -> SlabSlice {
+        assert!(
+            offset + len <= slab.len(),
+            "slice {offset}+{len} beyond slab len {}",
+            slab.len()
+        );
+        SlabSlice { slab, offset, len }
+    }
+
+    /// Sub-slice (relative to this slice).
+    pub fn slice(&self, offset: usize, len: usize) -> SlabSlice {
+        assert!(offset + len <= self.len, "sub-slice {offset}+{len} beyond {}", self.len);
+        SlabSlice { slab: self.slab.clone(), offset: self.offset + offset, len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Pool bytes held alive by the underlying slab (shared across all
+    /// slices of it).
+    pub fn held_bytes(&self) -> usize {
+        self.slab.held_bytes()
+    }
+
+    /// True when this view is the slab's only owner (no sibling slices
+    /// alive) — the condition under which a Batch Holder may adopt it
+    /// and account its bytes as exclusively-held pool memory. Sibling
+    /// views only ever *drop* after a fan-out, so a `true` here is
+    /// stable; a `false` is conservative.
+    pub fn is_exclusive(&self) -> bool {
+        Arc::strong_count(&self.slab) == 1
+    }
+
+    /// The slice's bytes as per-buffer chunks (vectored I/O).
+    pub fn chunks(&self) -> Vec<&[u8]> {
+        if self.len == 0 {
+            return Vec::new();
+        }
+        let bs = self.slab.bufs[0].len();
+        let mut out = Vec::new();
+        let mut pos = self.offset;
+        let end = self.offset + self.len;
+        while pos < end {
+            let bi = pos / bs;
+            let off = pos % bs;
+            let n = (bs - off).min(end - pos);
+            out.push(&self.slab.bufs[bi].as_slice()[off..off + n]);
+            pos += n;
+        }
+        out
+    }
+
+    /// Reassembled bytes (device upload / decode staging).
+    pub fn to_vec(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.len);
+        for c in self.chunks() {
+            out.extend_from_slice(c);
+        }
+        out
+    }
+
+    /// Borrow the bytes contiguously when the slice lies within one
+    /// buffer; reassemble (copy) only when it spans a boundary.
+    pub fn contiguous(&self) -> Cow<'_, [u8]> {
+        if self.len == 0 {
+            return Cow::Borrowed(&[]);
+        }
+        let bs = self.slab.bufs[0].len();
+        let first = self.offset / bs;
+        let last = (self.offset + self.len - 1) / bs;
+        if first == last {
+            let off = self.offset % bs;
+            Cow::Borrowed(&self.slab.bufs[first].as_slice()[off..off + self.len])
+        } else {
+            Cow::Owned(self.to_vec())
+        }
+    }
+}
+
+impl std::fmt::Debug for SlabSlice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SlabSlice({}+{} of {:?})", self.offset, self.len, self.slab)
+    }
+}
+
+/// Byte container used across the data plane: slab-backed when the
+/// bounce pool had room, heap when it was dry or absent (the mandatory
+/// fallback — pool exhaustion degrades throughput, never correctness).
+#[derive(Clone)]
+pub enum StagedBytes {
+    Pinned(SlabSlice),
+    Heap(Vec<u8>),
+}
+
+impl StagedBytes {
+    pub fn len(&self) -> usize {
+        match self {
+            StagedBytes::Pinned(s) => s.len(),
+            StagedBytes::Heap(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_pinned(&self) -> bool {
+        matches!(self, StagedBytes::Pinned(_))
+    }
+
+    /// The bytes as vectored chunks (no reassembly).
+    pub fn chunks(&self) -> Vec<&[u8]> {
+        match self {
+            StagedBytes::Pinned(s) => s.chunks(),
+            StagedBytes::Heap(v) if v.is_empty() => Vec::new(),
+            StagedBytes::Heap(v) => vec![v.as_slice()],
+        }
+    }
+
+    /// Contiguous view; copies only for multi-buffer slab slices.
+    pub fn contiguous(&self) -> Cow<'_, [u8]> {
+        match self {
+            StagedBytes::Pinned(s) => s.contiguous(),
+            StagedBytes::Heap(v) => Cow::Borrowed(v),
+        }
+    }
+
+    /// Own the bytes as a heap `Vec` (free for `Heap`).
+    pub fn into_vec(self) -> Vec<u8> {
+        match self {
+            StagedBytes::Pinned(s) => s.to_vec(),
+            StagedBytes::Heap(v) => v,
+        }
+    }
+}
+
+impl From<Vec<u8>> for StagedBytes {
+    fn from(v: Vec<u8>) -> StagedBytes {
+        StagedBytes::Heap(v)
+    }
+}
+
+impl PartialEq for StagedBytes {
+    fn eq(&self, other: &Self) -> bool {
+        *self.contiguous() == *other.contiguous()
+    }
+}
+
+impl PartialEq<Vec<u8>> for StagedBytes {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        *self.contiguous() == other[..]
+    }
+}
+
+impl std::fmt::Debug for StagedBytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StagedBytes::Pinned(s) => write!(f, "StagedBytes::Pinned({} bytes)", s.len()),
+            StagedBytes::Heap(v) => write!(f, "StagedBytes::Heap({} bytes)", v.len()),
+        }
     }
 }
 
@@ -436,15 +835,141 @@ mod tests {
     }
 
     #[test]
+    fn slab_writer_incremental_fill() {
+        let p = PinnedPool::new(32, 4).unwrap();
+        let mut w = SlabWriter::new(&p);
+        assert_eq!(p.free_buffers(), 4, "lazy: nothing acquired yet");
+        w.write_bytes(&[1u8; 20]).unwrap();
+        assert_eq!(p.free_buffers(), 3);
+        w.write_bytes(&[2u8; 30]).unwrap(); // crosses into buffer 2
+        w.write_bytes(&[3u8; 50]).unwrap(); // and buffers 3..4
+        assert_eq!(w.len(), 100);
+        let slab = w.finish();
+        assert_eq!(slab.num_buffers(), 4);
+        let mut want = vec![1u8; 20];
+        want.extend_from_slice(&[2; 30]);
+        want.extend_from_slice(&[3; 50]);
+        assert_eq!(slab.read(), want);
+        assert_eq!(p.bounce_bytes(), 100);
+        assert_eq!(p.waste_bytes(), 28, "4x32 - 100");
+    }
+
+    #[test]
+    fn slab_writer_io_write_and_overreserve() {
+        use std::io::Write;
+        let p = PinnedPool::new(16, 8).unwrap();
+        let mut w = SlabWriter::with_capacity(&p, 100).unwrap();
+        assert_eq!(p.free_buffers(), 1, "7 buffers reserved up front");
+        w.write_all(&[9u8; 40]).unwrap();
+        let slab = w.finish();
+        assert_eq!(slab.len(), 40);
+        assert_eq!(slab.num_buffers(), 3, "over-reservation released");
+        assert_eq!(p.free_buffers(), 5);
+    }
+
+    #[test]
+    fn from_reader_lands_exact_bytes() {
+        let p = PinnedPool::new(16, 8).unwrap();
+        let data: Vec<u8> = (0..100u8).collect();
+        let mut cur = std::io::Cursor::new(data.clone());
+        let slab = PinnedSlab::from_reader(&p, &mut cur, 60).unwrap();
+        assert_eq!(slab.read(), &data[..60]);
+        assert_eq!(cur.position(), 60, "reads exactly len");
+        // a dry pool fails before consuming the reader
+        let _hold: Vec<_> = (0..p.free_buffers()).map(|_| p.try_acquire().unwrap()).collect();
+        let before = cur.position();
+        assert!(matches!(
+            PinnedSlab::from_reader(&p, &mut cur, 30),
+            Err(Error::PinnedExhausted { .. })
+        ));
+        assert_eq!(cur.position(), before, "reader untouched on exhaustion");
+    }
+
+    #[test]
+    fn slab_slice_chunks_and_contiguous() {
+        let p = PinnedPool::new(10, 8).unwrap();
+        let data: Vec<u8> = (0..35u8).collect();
+        let slab = PinnedSlab::write(&p, &data).unwrap();
+        let whole = SlabSlice::whole(slab);
+        assert_eq!(whole.to_vec(), data);
+        // a slice within one buffer borrows contiguously
+        let inner = whole.slice(11, 8);
+        assert!(matches!(inner.contiguous(), std::borrow::Cow::Borrowed(_)));
+        assert_eq!(&*inner.contiguous(), &data[11..19]);
+        // a boundary-spanning slice reassembles
+        let spanning = whole.slice(5, 20);
+        assert!(matches!(spanning.contiguous(), std::borrow::Cow::Owned(_)));
+        assert_eq!(&*spanning.contiguous(), &data[5..25]);
+        assert_eq!(spanning.chunks().len(), 3, "5..10, 10..20, 20..25");
+        // slices share the slab: buffers free only when all are dropped
+        drop(whole);
+        assert!(p.free_buffers() < 8);
+        drop(inner);
+        drop(spanning);
+        assert_eq!(p.free_buffers(), 8);
+    }
+
+    #[test]
+    fn concurrent_slab_writers_under_exhaustion() {
+        // Many writers fighting over a pool smaller than their combined
+        // demand: every fill either completes correctly or fails with
+        // the typed exhaustion error; nothing leaks, nothing corrupts.
+        let p = PinnedPool::new(64, 8).unwrap();
+        let hs: Vec<_> = (0..6u8)
+            .map(|t| {
+                let p = p.clone();
+                std::thread::spawn(move || {
+                    let mut ok = 0u32;
+                    let mut dry = 0u32;
+                    for i in 0..200u32 {
+                        let payload = vec![t.wrapping_add(i as u8); 150]; // 3 buffers
+                        let mut w = SlabWriter::new(&p);
+                        match w.write_bytes(&payload) {
+                            Ok(()) => {
+                                let slab = w.finish();
+                                assert_eq!(slab.read(), payload, "thread {t} iter {i}");
+                                ok += 1;
+                            }
+                            Err(Error::PinnedExhausted { .. }) => dry += 1,
+                            Err(e) => panic!("unexpected: {e}"),
+                        }
+                    }
+                    (ok, dry)
+                })
+            })
+            .collect();
+        let mut total_ok = 0;
+        for h in hs {
+            let (ok, _) = h.join().unwrap();
+            total_ok += ok;
+        }
+        assert!(total_ok > 0, "some fills must succeed");
+        assert_eq!(p.free_buffers(), 8, "no buffers leaked under contention");
+    }
+
+    #[test]
+    fn pinned_buf_is_empty_reflects_len() {
+        let p = PinnedPool::new(128, 1).unwrap();
+        let b = p.try_acquire().unwrap();
+        assert_eq!(b.len(), 128);
+        assert!(!b.is_empty(), "fixed-size buffers are never zero-length");
+    }
+
+    #[test]
     fn exhaustion_raises_host_pressure() {
-        let p = PinnedPool::new(64, 1).unwrap();
+        let p = PinnedPool::new(64, 4).unwrap();
         let ev = PressureEvent::new();
         p.install_pressure(ev.clone());
-        let _held = p.try_acquire().unwrap();
+        let held: Vec<_> = (0..4).map(|_| p.try_acquire().unwrap()).collect();
         assert!(p.try_acquire().is_err());
         assert_eq!(ev.take().host_need, 64);
-        // slab-level exhaustion raises the full shortfall
+        // slab-level exhaustion raises the full (satisfiable) shortfall
         assert!(PinnedSlab::write(&p, &[0u8; 200]).is_err());
         assert_eq!(ev.take().host_need, 4 * 64);
+        // a request bigger than the whole pool must NOT raise pressure:
+        // no amount of demotion can ever serve it
+        drop(held);
+        assert!(PinnedSlab::write(&p, &[0u8; 64 * 5]).is_err());
+        assert_eq!(ev.take().host_need, 0);
     }
 }

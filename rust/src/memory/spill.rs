@@ -21,6 +21,7 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
+use crate::memory::pinned::{PinnedPool, PinnedSlab, SlabWriter};
 use crate::{Error, Result};
 
 /// Default rotation size (kept modest: per-query spill files, §4.2).
@@ -179,7 +180,15 @@ impl SpillStore {
     /// segment) cannot complete mid-write, so a write can never land
     /// in a segment that `free` is concurrently reclaiming.
     pub fn write(&self, data: &[u8]) -> Result<SpillSlot> {
-        let len = data.len() as u64;
+        self.write_vectored(&[data])
+    }
+
+    /// Append a payload presented as vectored parts (a codec prelude
+    /// plus a pinned slab's buffers): one offset reservation, one
+    /// positional `write_all_at` per part — the slab is never
+    /// reassembled into a heap `Vec` on the way to disk.
+    pub fn write_vectored(&self, parts: &[&[u8]]) -> Result<SpillSlot> {
+        let len: u64 = parts.iter().map(|p| p.len() as u64).sum();
         loop {
             let observed = {
                 let segs = self.segments.read().unwrap();
@@ -189,7 +198,11 @@ impl SpillStore {
                 // In-budget, or an oversized payload opening a fresh
                 // segment (offset 0 always accepts).
                 if offset == 0 || offset + len <= self.segment_bytes {
-                    seg.file.write_all_at(data, offset)?;
+                    let mut at = offset;
+                    for p in parts {
+                        seg.file.write_all_at(p, at)?;
+                        at += p.len() as u64;
+                    }
                     seg.live_bytes.fetch_add(len, Ordering::AcqRel);
                     self.live_bytes.fetch_add(len, Ordering::Relaxed);
                     self.spill_ops.fetch_add(1, Ordering::Relaxed);
@@ -204,8 +217,8 @@ impl SpillStore {
         }
     }
 
-    /// Read a slot back (positional; concurrent with writers).
-    pub fn read(&self, slot: SpillSlot) -> Result<Vec<u8>> {
+    /// The live segment behind a slot, with reclaim/bounds checks.
+    fn checked_segment(&self, slot: SpillSlot) -> Result<Arc<Segment>> {
         let seg = self
             .segments
             .read()
@@ -226,10 +239,54 @@ impl SpillStore {
                 "spill slot {slot:?} beyond write offset {end}"
             )));
         }
+        Ok(seg)
+    }
+
+    /// Read a slot back (positional; concurrent with writers).
+    pub fn read(&self, slot: SpillSlot) -> Result<Vec<u8>> {
+        let seg = self.checked_segment(slot)?;
         let mut buf = vec![0u8; slot.len as usize];
         seg.file.read_exact_at(&mut buf, slot.offset)?;
         self.reload_ops.fetch_add(1, Ordering::Relaxed);
         Ok(buf)
+    }
+
+    /// Peek `len` bytes at `skip` within a slot (codec-prelude sniffing
+    /// on the promotion path; not counted as a reload).
+    pub fn read_at(&self, slot: SpillSlot, skip: u64, len: usize) -> Result<Vec<u8>> {
+        if skip + len as u64 > slot.len {
+            return Err(Error::internal(format!(
+                "spill peek {skip}+{len} beyond slot {slot:?}"
+            )));
+        }
+        let seg = self.checked_segment(slot)?;
+        let mut buf = vec![0u8; len];
+        seg.file.read_exact_at(&mut buf, slot.offset + skip)?;
+        Ok(buf)
+    }
+
+    /// Reload a slot's bytes (past the first `skip`) straight into
+    /// pinned pool buffers — the spill-promotion path's single bounce.
+    /// Fails with `PinnedExhausted` (before touching the file) when the
+    /// pool lacks room; the caller falls back to [`SpillStore::read`].
+    pub fn read_into_slab(
+        &self,
+        slot: SpillSlot,
+        skip: u64,
+        pool: &PinnedPool,
+    ) -> Result<PinnedSlab> {
+        if skip > slot.len {
+            return Err(Error::internal(format!(
+                "spill skip {skip} beyond slot {slot:?}"
+            )));
+        }
+        let n = (slot.len - skip) as usize;
+        let mut w = SlabWriter::with_capacity(pool, n)?;
+        let seg = self.checked_segment(slot)?;
+        let base = slot.offset + skip;
+        w.fill_positional(n, |off, buf| seg.file.read_exact_at(buf, base + off))?;
+        self.reload_ops.fetch_add(1, Ordering::Relaxed);
+        Ok(w.finish())
     }
 
     /// Mark a slot dead. A sealed segment whose last live payload is
@@ -401,6 +458,39 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(s.spill_ops(), 800);
+    }
+
+    #[test]
+    fn vectored_write_lands_parts_contiguously() {
+        let s = SpillStore::temp("vec").unwrap();
+        let slot = s
+            .write_vectored(&[b"head", b"middle-part", b"tail"])
+            .unwrap();
+        assert_eq!(slot.len, 19);
+        assert_eq!(s.read(slot).unwrap(), b"headmiddle-parttail");
+        // peek within the slot
+        assert_eq!(s.read_at(slot, 4, 6).unwrap(), b"middle");
+        assert!(s.read_at(slot, 18, 5).is_err(), "peek beyond slot");
+    }
+
+    #[test]
+    fn reload_into_slab_skips_prefix() {
+        let pool = PinnedPool::new(16, 8).unwrap();
+        let s = SpillStore::temp("slabload").unwrap();
+        let payload: Vec<u8> = (0..100u8).collect();
+        let slot = s.write(&payload).unwrap();
+        // skip the first 9 bytes, land the rest in pinned buffers
+        let slab = s.read_into_slab(slot, 9, &pool).unwrap();
+        assert_eq!(slab.read(), &payload[9..]);
+        assert!(slab.num_buffers() >= 6, "91 bytes over 16-byte buffers");
+        drop(slab);
+        assert_eq!(pool.free_buffers(), 8, "buffers returned");
+        // a dry pool fails cleanly before touching the file
+        let _hold: Vec<_> = (0..8).map(|_| pool.try_acquire().unwrap()).collect();
+        assert!(matches!(
+            s.read_into_slab(slot, 0, &pool),
+            Err(Error::PinnedExhausted { .. })
+        ));
     }
 
     #[test]

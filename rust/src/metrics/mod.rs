@@ -167,6 +167,20 @@ impl Metrics {
             .map(|c| c.get())
             .unwrap_or(0)
     }
+
+    /// Fetch a gauge value by name (0 if never touched). The §3.4 pool
+    /// gauges (`pinned.bounce_bytes`, `pinned.waste_bytes`,
+    /// `pinned.acquires`, `pinned.exhaustions`, `pinned.free_buffers`)
+    /// are published here by the Data-Movement executor via
+    /// [`crate::memory::PinnedPool::publish_metrics`].
+    pub fn gauge_value(&self, name: &'static str) -> i64 {
+        self.gauges
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|g| g.get())
+            .unwrap_or(0)
+    }
 }
 
 /// Scope timer: records into a histogram on drop.
@@ -232,6 +246,23 @@ mod tests {
         let s = m.snapshot();
         assert!(s.contains("a.b: 1") && s.contains("c.d"));
         assert!(s.contains("q.depth: 3"));
+    }
+
+    #[test]
+    fn pinned_pool_counters_export() {
+        let m = Metrics::default();
+        let pool = crate::memory::PinnedPool::new(64, 2).unwrap();
+        let slab = crate::memory::PinnedSlab::write(&pool, &[7u8; 100]).unwrap();
+        let _held = pool.try_acquire(); // exhaust, err counted below
+        let _ = pool.try_acquire();
+        pool.publish_metrics(&m);
+        assert_eq!(m.gauge_value("pinned.bounce_bytes"), 100);
+        assert_eq!(m.gauge_value("pinned.waste_bytes"), 28, "2x64 - 100");
+        assert!(m.gauge_value("pinned.exhaustions") >= 1);
+        assert!(m.gauge_value("pinned.acquires") >= 2);
+        let s = m.snapshot();
+        assert!(s.contains("pinned.bounce_bytes"));
+        drop(slab);
     }
 
     #[test]

@@ -6,8 +6,18 @@
 //! The codec tag travels inside the payload (see
 //! `storage::compression`), so sender and receiver never need matching
 //! configuration.
+//!
+//! Payloads are carried as [`Payload`]: either heap bytes or a
+//! slab-backed view into the §3.4 pinned bounce pool. The wire format
+//! is a fixed 21-byte header ([`Frame::encode_header`]) followed by the
+//! payload bytes; the TCP back-end `write_vectored`s the header and the
+//! slab's buffers in one syscall instead of reassembling them (the old
+//! `encode()`-to-one-`Vec` path), and the receive side lands payloads
+//! straight into pool buffers ([`crate::memory::PinnedSlab::from_reader`]).
 
-use crate::util::bytes::{Reader, Writer};
+use std::borrow::Cow;
+
+use crate::memory::SlabSlice;
 use crate::{Error, Result};
 
 /// What a frame means to the receiving worker.
@@ -45,6 +55,120 @@ impl FrameKind {
     }
 }
 
+/// A frame's payload bytes.
+pub enum Payload {
+    /// Plain heap bytes (control frames, pool-dry fallback).
+    Heap(Vec<u8>),
+    /// A short heap prelude (codec framing, built at send time)
+    /// followed by slab-backed body bytes. The send path wraps a Batch
+    /// Holder's slab here without copying; the receive path lands whole
+    /// payloads here with an empty prelude.
+    Pinned { prelude: Vec<u8>, body: SlabSlice },
+}
+
+impl Payload {
+    pub fn pinned(prelude: Vec<u8>, body: SlabSlice) -> Payload {
+        Payload::Pinned { prelude, body }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Payload::Heap(v) => v.len(),
+            Payload::Pinned { prelude, body } => prelude.len() + body.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_pinned(&self) -> bool {
+        matches!(self, Payload::Pinned { .. })
+    }
+
+    /// The payload bytes as vectored chunks (no reassembly): the
+    /// prelude (if any) followed by the slab's per-buffer slices.
+    pub fn chunks(&self) -> Vec<&[u8]> {
+        match self {
+            Payload::Heap(v) if v.is_empty() => Vec::new(),
+            Payload::Heap(v) => vec![v.as_slice()],
+            Payload::Pinned { prelude, body } => {
+                let body_chunks = body.chunks();
+                let mut out = Vec::with_capacity(1 + body_chunks.len());
+                if !prelude.is_empty() {
+                    out.push(prelude.as_slice());
+                }
+                out.extend(body_chunks);
+                out
+            }
+        }
+    }
+
+    /// Contiguous view (copies only for multi-chunk pinned payloads).
+    pub fn contiguous(&self) -> Cow<'_, [u8]> {
+        match self {
+            Payload::Heap(v) => Cow::Borrowed(v),
+            Payload::Pinned { prelude, body } if prelude.is_empty() => body.contiguous(),
+            Payload::Pinned { .. } => Cow::Owned(self.to_vec()),
+        }
+    }
+
+    /// Reassemble into a heap `Vec` (tests, control decoding).
+    pub fn to_vec(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.len());
+        for c in self.chunks() {
+            out.extend_from_slice(c);
+        }
+        out
+    }
+}
+
+impl From<Vec<u8>> for Payload {
+    fn from(v: Vec<u8>) -> Payload {
+        Payload::Heap(v)
+    }
+}
+
+impl Clone for Payload {
+    /// Cloning materializes to heap bytes — slab buffers have one
+    /// owner; clones are for tests and control-plane bookkeeping.
+    fn clone(&self) -> Payload {
+        Payload::Heap(self.to_vec())
+    }
+}
+
+impl PartialEq for Payload {
+    fn eq(&self, other: &Self) -> bool {
+        *self.contiguous() == *other.contiguous()
+    }
+}
+
+impl PartialEq<Vec<u8>> for Payload {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        *self.contiguous() == other[..]
+    }
+}
+
+impl<const N: usize> PartialEq<&[u8; N]> for Payload {
+    fn eq(&self, other: &&[u8; N]) -> bool {
+        *self.contiguous() == other[..]
+    }
+}
+
+impl std::fmt::Debug for Payload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Payload::Heap(v) => write!(f, "Payload::Heap({} bytes)", v.len()),
+            Payload::Pinned { prelude, body } => write!(
+                f,
+                "Payload::Pinned({}+{} bytes)",
+                prelude.len(),
+                body.len()
+            ),
+        }
+    }
+}
+
 /// One message on the fabric.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Frame {
@@ -54,16 +178,28 @@ pub struct Frame {
     /// Logical channel: identifies the exchange edge within the query
     /// DAG (operator id on the receiving side).
     pub channel: u32,
-    pub payload: Vec<u8>,
+    pub payload: Payload,
 }
 
 impl Frame {
     pub fn data(src: usize, dst: usize, channel: u32, payload: Vec<u8>) -> Frame {
+        Frame { kind: FrameKind::Data, src, dst, channel, payload: Payload::Heap(payload) }
+    }
+
+    /// A data frame around an already-staged payload (the Network
+    /// Executor's slab-backed send path).
+    pub fn data_payload(src: usize, dst: usize, channel: u32, payload: Payload) -> Frame {
         Frame { kind: FrameKind::Data, src, dst, channel, payload }
     }
 
     pub fn finish(src: usize, dst: usize, channel: u32) -> Frame {
-        Frame { kind: FrameKind::Finish, src, dst, channel, payload: Vec::new() }
+        Frame {
+            kind: FrameKind::Finish,
+            src,
+            dst,
+            channel,
+            payload: Payload::Heap(Vec::new()),
+        }
     }
 
     pub fn size_estimate(src: usize, dst: usize, channel: u32, bytes: u64) -> Frame {
@@ -72,12 +208,18 @@ impl Frame {
             src,
             dst,
             channel,
-            payload: bytes.to_le_bytes().to_vec(),
+            payload: Payload::Heap(bytes.to_le_bytes().to_vec()),
         }
     }
 
     pub fn control(src: usize, dst: usize, payload: Vec<u8>) -> Frame {
-        Frame { kind: FrameKind::Control, src, dst, channel: 0, payload }
+        Frame {
+            kind: FrameKind::Control,
+            src,
+            dst,
+            channel: 0,
+            payload: Payload::Heap(payload),
+        }
     }
 
     /// Estimate payload for a SizeEstimate frame.
@@ -85,7 +227,7 @@ impl Frame {
         if self.kind != FrameKind::SizeEstimate || self.payload.len() != 8 {
             return Err(Error::Network("not a size-estimate frame".into()));
         }
-        Ok(u64::from_le_bytes(self.payload[..8].try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.payload.contiguous()[..8].try_into().unwrap()))
     }
 
     /// Bytes on the wire (header + payload) — what throttles charge.
@@ -93,24 +235,64 @@ impl Frame {
         FRAME_HEADER_LEN + self.payload.len()
     }
 
-    pub fn encode(&self) -> Vec<u8> {
-        let mut w = Writer::with_capacity(self.wire_len());
-        w.u8(self.kind.tag());
-        w.u32(self.src as u32);
-        w.u32(self.dst as u32);
-        w.u32(self.channel);
-        w.bytes(&self.payload);
-        w.finish()
+    /// The fixed wire header: kind(1) + src(4) + dst(4) + channel(4) +
+    /// payload len(8). The payload bytes follow as-is, so a send is
+    /// header-encode + `write_vectored` of the payload chunks.
+    pub fn encode_header(&self) -> [u8; FRAME_HEADER_LEN] {
+        let mut h = [0u8; FRAME_HEADER_LEN];
+        h[0] = self.kind.tag();
+        h[1..5].copy_from_slice(&(self.src as u32).to_le_bytes());
+        h[5..9].copy_from_slice(&(self.dst as u32).to_le_bytes());
+        h[9..13].copy_from_slice(&self.channel.to_le_bytes());
+        h[13..21].copy_from_slice(&(self.payload.len() as u64).to_le_bytes());
+        h
     }
 
+    /// Parse a wire header: (kind, src, dst, channel, payload_len).
+    pub fn decode_header(h: &[u8]) -> Result<(FrameKind, usize, usize, u32, usize)> {
+        if h.len() < FRAME_HEADER_LEN {
+            return Err(Error::Network(format!(
+                "truncated frame header: {} of {FRAME_HEADER_LEN} bytes",
+                h.len()
+            )));
+        }
+        let kind = FrameKind::from_tag(h[0])?;
+        let src = u32::from_le_bytes(h[1..5].try_into().unwrap()) as usize;
+        let dst = u32::from_le_bytes(h[5..9].try_into().unwrap()) as usize;
+        let channel = u32::from_le_bytes(h[9..13].try_into().unwrap());
+        let plen = u64::from_le_bytes(h[13..21].try_into().unwrap()) as usize;
+        Ok((kind, src, dst, channel, plen))
+    }
+
+    /// Encode to one contiguous buffer (tests and non-vectored
+    /// transports; the TCP path uses `encode_header` + vectored writes
+    /// of `payload.chunks()` instead).
+    pub fn encode_to_vec(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_len());
+        out.extend_from_slice(&self.encode_header());
+        for c in self.payload.chunks() {
+            out.extend_from_slice(c);
+        }
+        out
+    }
+
+    /// Decode a whole frame from one buffer (heap payload).
     pub fn decode(buf: &[u8]) -> Result<Frame> {
-        let mut r = Reader::new(buf);
-        let kind = FrameKind::from_tag(r.u8()?)?;
-        let src = r.u32()? as usize;
-        let dst = r.u32()? as usize;
-        let channel = r.u32()?;
-        let payload = r.bytes()?.to_vec();
-        Ok(Frame { kind, src, dst, channel, payload })
+        let (kind, src, dst, channel, plen) = Frame::decode_header(buf)?;
+        if buf.len() != FRAME_HEADER_LEN + plen {
+            return Err(Error::Network(format!(
+                "frame length mismatch: {} vs {}",
+                buf.len(),
+                FRAME_HEADER_LEN + plen
+            )));
+        }
+        Ok(Frame {
+            kind,
+            src,
+            dst,
+            channel,
+            payload: Payload::Heap(buf[FRAME_HEADER_LEN..].to_vec()),
+        })
     }
 }
 
@@ -120,6 +302,7 @@ pub const FRAME_HEADER_LEN: usize = 21;
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::memory::PinnedPool;
 
     #[test]
     fn encode_decode_roundtrip_all_kinds() {
@@ -130,10 +313,50 @@ mod tests {
             Frame::control(0, 1, b"plan".to_vec()),
         ];
         for f in frames {
-            let buf = f.encode();
+            let buf = f.encode_to_vec();
             assert_eq!(buf.len(), f.wire_len());
             assert_eq!(Frame::decode(&buf).unwrap(), f);
         }
+    }
+
+    #[test]
+    fn slab_payload_roundtrips_across_buffers() {
+        // A slab spanning several small pool buffers must hit the wire
+        // byte-identically to its heap twin: same header, same chunks.
+        let pool = PinnedPool::new(16, 8).unwrap();
+        let body: Vec<u8> = (0..100u8).collect();
+        let slab = crate::memory::PinnedSlab::write(&pool, &body).unwrap();
+        assert!(slab.num_buffers() > 1, "must span buffers");
+        let prelude = vec![0xAB, 0xCD];
+        let pinned = Frame::data_payload(
+            3,
+            4,
+            11,
+            Payload::pinned(prelude.clone(), crate::memory::SlabSlice::whole(slab)),
+        );
+        let mut heap_bytes = prelude;
+        heap_bytes.extend_from_slice(&body);
+        let heap = Frame::data(3, 4, 11, heap_bytes);
+
+        assert_eq!(pinned.payload, heap.payload);
+        assert!(pinned.payload.chunks().len() > 2, "vectored chunks");
+        let wire = pinned.encode_to_vec();
+        assert_eq!(wire, heap.encode_to_vec());
+        let back = Frame::decode(&wire).unwrap();
+        assert_eq!(back, heap);
+        assert_eq!(back.payload, pinned.payload);
+    }
+
+    #[test]
+    fn pinned_payload_slice_strips_prelude_without_copy() {
+        let pool = PinnedPool::new(32, 4).unwrap();
+        let full: Vec<u8> = (0..60u8).collect();
+        let slab = crate::memory::PinnedSlab::write(&pool, &full).unwrap();
+        let body = crate::memory::SlabSlice::whole(slab);
+        let tail = body.slice(9, 51);
+        assert_eq!(tail.to_vec(), &full[9..]);
+        let p = Payload::pinned(Vec::new(), tail);
+        assert_eq!(p.len(), 51);
     }
 
     #[test]
@@ -145,14 +368,14 @@ mod tests {
 
     #[test]
     fn truncated_frame_rejected() {
-        let buf = Frame::data(0, 1, 2, vec![5; 100]).encode();
+        let buf = Frame::data(0, 1, 2, vec![5; 100]).encode_to_vec();
         assert!(Frame::decode(&buf[..10]).is_err());
         assert!(Frame::decode(&buf[..buf.len() - 1]).is_err());
     }
 
     #[test]
     fn bad_kind_rejected() {
-        let mut buf = Frame::finish(0, 1, 2).encode();
+        let mut buf = Frame::finish(0, 1, 2).encode_to_vec();
         buf[0] = 99;
         assert!(Frame::decode(&buf).is_err());
     }

@@ -19,12 +19,13 @@ pub mod frame;
 pub mod inproc;
 pub mod tcp;
 
-pub use frame::{Frame, FrameKind};
+pub use frame::{Frame, FrameKind, Payload};
 pub use inproc::InprocHub;
 pub use tcp::TcpCluster;
 
 use std::time::Duration;
 
+use crate::memory::PinnedPool;
 use crate::Result;
 
 /// One worker's connection to the fabric.
@@ -37,6 +38,12 @@ pub trait Endpoint: Send + Sync {
 
     /// Send a frame to `frame.dst` (modeled wire time is charged here).
     fn send(&self, frame: Frame) -> Result<()>;
+
+    /// Hand the endpoint a page-locked pool to land received payloads
+    /// in (§3.4: the pool doubles as the network bounce buffer). The
+    /// default is a no-op — the in-proc fabric passes frames by value
+    /// and never serializes, so it has nothing to stage.
+    fn install_recv_pool(&self, _pool: PinnedPool) {}
 
     /// Receive the next frame addressed to this worker, waiting up to
     /// `timeout`. `Ok(None)` on timeout.

@@ -5,16 +5,26 @@
 //!
 //! Topology: worker `i` listens; worker `j > i` dials `i`. After setup
 //! every pair shares one duplex socket.
+//!
+//! Data movement (§3.4): sends are a 21-byte header-encode followed by
+//! one `write_vectored` of the payload's slab chunks — a slab-backed
+//! payload is never reassembled into a heap `Vec`. Receives read the
+//! header, then land the payload bytes straight into the worker's
+//! pinned pool ([`PinnedSlab::from_reader`]) once one is installed via
+//! [`Endpoint::install_recv_pool`], falling back to heap buffers while
+//! the pool is dry.
 
 use std::collections::VecDeque;
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::config::TransportKind;
-use crate::network::{Endpoint, Frame};
+use crate::memory::{PinnedPool, PinnedSlab, SlabSlice};
+use crate::network::frame::{Payload, FRAME_HEADER_LEN};
+use crate::network::{Endpoint, Frame, FrameKind};
 use crate::sim::{SimContext, Throttle};
 use crate::{Error, Result};
 
@@ -22,6 +32,11 @@ struct Inbox {
     q: Mutex<VecDeque<Frame>>,
     ready: Condvar,
 }
+
+/// The receive-side bounce pool, installed after worker bring-up (the
+/// cluster listens before workers — and their pools — exist).
+#[derive(Default)]
+struct RecvPool(Mutex<Option<PinnedPool>>);
 
 struct Peer {
     /// Write half (reads happen on the reader thread).
@@ -79,6 +94,7 @@ impl TcpCluster {
         let mut endpoints = Vec::with_capacity(n);
         for (i, row) in peers.into_iter().enumerate() {
             let inbox = Arc::new(Inbox { q: Mutex::new(VecDeque::new()), ready: Condvar::new() });
+            let recv_pool = Arc::new(RecvPool::default());
             let mut peer_handles = Vec::with_capacity(n);
             for (j, sock) in row.into_iter().enumerate() {
                 match sock {
@@ -89,9 +105,10 @@ impl TcpCluster {
                         let rs = s.try_clone()?;
                         let inbox2 = inbox.clone();
                         let stop = shutdown.clone();
+                        let pool = recv_pool.clone();
                         std::thread::Builder::new()
                             .name(format!("theseus-net-{i}-{j}"))
-                            .spawn(move || reader_loop(rs, inbox2, stop))
+                            .spawn(move || reader_loop(rs, inbox2, stop, pool))
                             .map_err(|e| Error::Network(e.to_string()))?;
                         peer_handles.push(Some(Peer {
                             stream: Mutex::new(s),
@@ -105,6 +122,7 @@ impl TcpCluster {
                 n,
                 peers: Arc::new(peer_handles),
                 inbox,
+                recv_pool,
                 loopback_throttle: ctx.throttle(&spec),
                 bytes: Arc::new(AtomicU64::new(0)),
                 frames: Arc::new(AtomicU64::new(0)),
@@ -119,47 +137,153 @@ impl TcpCluster {
     }
 }
 
-fn reader_loop(mut s: TcpStream, inbox: Arc<Inbox>, stop: Arc<AtomicBool>) {
+/// `Read` adapter that retries the socket's 200 ms timeouts (unless
+/// shutting down). `read_exact` through it is the one full-read
+/// primitive of the receive path: length prefix, header, heap-fallback
+/// payloads, and — via [`PinnedSlab::from_reader`] — pinned payloads.
+struct RetryRead<'a> {
+    s: &'a mut TcpStream,
+    stop: &'a AtomicBool,
+}
+
+impl Read for RetryRead<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        loop {
+            match self.s.read(buf) {
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    if self.stop.load(Ordering::Relaxed) {
+                        return Err(e);
+                    }
+                }
+                other => return other,
+            }
+        }
+    }
+}
+
+fn reader_loop(mut s: TcpStream, inbox: Arc<Inbox>, stop: Arc<AtomicBool>, pool: Arc<RecvPool>) {
     s.set_read_timeout(Some(Duration::from_millis(200))).ok();
     let mut lenbuf = [0u8; 8];
     loop {
         if stop.load(Ordering::Relaxed) {
             return;
         }
-        match s.read_exact(&mut lenbuf) {
-            Ok(()) => {}
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                continue
-            }
-            Err(_) => return, // peer closed
+        if (RetryRead { s: &mut s, stop: &stop }).read_exact(&mut lenbuf).is_err() {
+            return; // peer closed or shutdown
         }
-        let len = u64::from_le_bytes(lenbuf) as usize;
-        let mut buf = vec![0u8; len];
-        // body read: spin on timeouts until complete
-        let mut off = 0;
-        while off < len {
-            match s.read(&mut buf[off..]) {
-                Ok(0) => return,
-                Ok(k) => off += k,
-                Err(e)
-                    if e.kind() == std::io::ErrorKind::WouldBlock
-                        || e.kind() == std::io::ErrorKind::TimedOut =>
-                {
-                    if stop.load(Ordering::Relaxed) {
-                        return;
+        let total = u64::from_le_bytes(lenbuf) as usize;
+        if total < FRAME_HEADER_LEN {
+            // A malformed length means the framing is lost — there is
+            // no way to resync a length-prefixed stream, so the
+            // connection must drop. Loudly: a silent return here reads
+            // as an idle peer at the exchange layer.
+            log::warn!("tcp reader: bad frame length {total}, dropping connection");
+            return;
+        }
+        let mut header = [0u8; FRAME_HEADER_LEN];
+        if (RetryRead { s: &mut s, stop: &stop }).read_exact(&mut header).is_err() {
+            return;
+        }
+        let (kind, src, dst, channel, plen) = match Frame::decode_header(&header) {
+            Ok(h) => h,
+            Err(e) => {
+                log::warn!("tcp reader: {e}, dropping connection");
+                return;
+            }
+        };
+        if plen != total - FRAME_HEADER_LEN {
+            log::warn!(
+                "tcp reader: payload length {plen} disagrees with frame length {total}, \
+                 dropping connection"
+            );
+            return;
+        }
+        // Data payloads land straight in the pinned pool when one is
+        // installed and has room (§3.4 bounce buffers); control-plane
+        // payloads (estimates, plans) are tiny and would waste a whole
+        // fixed-size buffer each, so they stay on the heap.
+        let payload = if plen == 0 {
+            Payload::Heap(Vec::new())
+        } else {
+            let installed = if kind == FrameKind::Data {
+                pool.0.lock().unwrap().clone()
+            } else {
+                None
+            };
+            let mut staged = None;
+            if let Some(p) = &installed {
+                let mut rr = RetryRead { s: &mut s, stop: &stop };
+                match PinnedSlab::from_reader(p, &mut rr, plen) {
+                    Ok(slab) => {
+                        staged = Some(Payload::pinned(Vec::new(), SlabSlice::whole(slab)))
+                    }
+                    // dry pool fails before consuming bytes: heap below
+                    Err(Error::PinnedExhausted { .. }) => {}
+                    Err(e) => {
+                        log::warn!("tcp reader: payload read failed: {e}");
+                        return; // socket died mid-payload
                     }
                 }
-                Err(_) => return,
+            }
+            match staged {
+                Some(p) => p,
+                None => {
+                    let mut buf = vec![0u8; plen];
+                    if (RetryRead { s: &mut s, stop: &stop }).read_exact(&mut buf).is_err() {
+                        return;
+                    }
+                    Payload::Heap(buf)
+                }
+            }
+        };
+        inbox
+            .q
+            .lock()
+            .unwrap()
+            .push_back(Frame { kind, src, dst, channel, payload });
+        inbox.ready.notify_one();
+    }
+}
+
+/// Write every part, restarting the vectored write where it left off on
+/// short writes (hand-rolled: `IoSlice::advance_slices` needs a newer
+/// toolchain than this crate's MSRV).
+fn write_all_vectored(s: &mut TcpStream, parts: &[&[u8]]) -> std::io::Result<()> {
+    let mut idx = 0usize;
+    let mut off = 0usize;
+    while idx < parts.len() {
+        if off >= parts[idx].len() {
+            idx += 1;
+            off = 0;
+            continue;
+        }
+        let mut iov: Vec<IoSlice> = Vec::with_capacity(parts.len() - idx);
+        iov.push(IoSlice::new(&parts[idx][off..]));
+        for p in &parts[idx + 1..] {
+            if !p.is_empty() {
+                iov.push(IoSlice::new(p));
             }
         }
-        if let Ok(f) = Frame::decode(&buf) {
-            inbox.q.lock().unwrap().push_back(f);
-            inbox.ready.notify_one();
+        let mut n = s.write_vectored(&iov)?;
+        if n == 0 {
+            return Err(std::io::ErrorKind::WriteZero.into());
+        }
+        while n > 0 && idx < parts.len() {
+            let rem = parts[idx].len() - off;
+            if n >= rem {
+                n -= rem;
+                idx += 1;
+                off = 0;
+            } else {
+                off += n;
+                n = 0;
+            }
         }
     }
+    Ok(())
 }
 
 /// One worker's TCP endpoint.
@@ -168,6 +292,9 @@ pub struct TcpEndpoint {
     n: usize,
     peers: Arc<Vec<Option<Peer>>>,
     inbox: Arc<Inbox>,
+    /// Shared with this endpoint's reader threads; filled in by
+    /// [`Endpoint::install_recv_pool`] once the worker's pool exists.
+    recv_pool: Arc<RecvPool>,
     /// Self-sends skip the socket but still pay the modeled wire.
     loopback_throttle: Throttle,
     bytes: Arc<AtomicU64>,
@@ -207,11 +334,22 @@ impl Endpoint for TcpEndpoint {
             .as_ref()
             .ok_or_else(|| Error::Network(format!("no connection to {dst}")))?;
         peer.throttle.acquire(frame.wire_len());
-        let buf = frame.encode();
+        // header-encode + one vectored write of the payload chunks: a
+        // slab payload goes from pool buffers to the socket directly
+        let lenb = (frame.wire_len() as u64).to_le_bytes();
+        let header = frame.encode_header();
+        let chunks = frame.payload.chunks();
+        let mut parts: Vec<&[u8]> = Vec::with_capacity(2 + chunks.len());
+        parts.push(&lenb);
+        parts.push(&header);
+        parts.extend_from_slice(&chunks);
         let mut s = peer.stream.lock().unwrap();
-        s.write_all(&(buf.len() as u64).to_le_bytes())
-            .and_then(|_| s.write_all(&buf))
+        write_all_vectored(&mut s, &parts)
             .map_err(|e| Error::Network(format!("send to {dst}: {e}")))
+    }
+
+    fn install_recv_pool(&self, pool: PinnedPool) {
+        *self.recv_pool.0.lock().unwrap() = Some(pool);
     }
 
     fn recv_timeout(&self, timeout: Duration) -> Result<Option<Frame>> {
@@ -251,9 +389,51 @@ mod tests {
         eps[0].send(Frame::data(0, 1, 3, vec![1, 2, 3])).unwrap();
         eps[1].send(Frame::data(1, 0, 4, vec![4])).unwrap();
         let a = eps[1].recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
-        assert_eq!((a.channel, a.payload.clone()), (3, vec![1, 2, 3]));
+        assert_eq!(a.channel, 3);
+        assert_eq!(a.payload, vec![1, 2, 3]);
         let b = eps[0].recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
         assert_eq!(b.channel, 4);
+    }
+
+    #[test]
+    fn slab_payload_sends_vectored_and_lands_pinned() {
+        use crate::memory::{PinnedPool, PinnedSlab, SlabSlice};
+        use crate::network::frame::Payload;
+        let c = TcpCluster::listen(2, &SimContext::test(), TransportKind::Tcp).unwrap();
+        let eps = c.into_endpoints();
+        // receiver gets a bounce pool: payloads land in pinned buffers
+        let rx_pool = PinnedPool::new(64, 32).unwrap();
+        eps[1].install_recv_pool(rx_pool.clone());
+
+        // sender wraps a multi-buffer slab (vectored write path)
+        let tx_pool = PinnedPool::new(64, 32).unwrap();
+        let body: Vec<u8> = (0..200u32).map(|i| i as u8).collect();
+        let slab = PinnedSlab::write(&tx_pool, &body).unwrap();
+        assert!(slab.num_buffers() > 1);
+        let frame = Frame::data_payload(
+            0,
+            1,
+            5,
+            Payload::pinned(vec![0xEE], SlabSlice::whole(slab)),
+        );
+        eps[0].send(frame).unwrap();
+
+        let got = eps[1].recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+        let mut want = vec![0xEE];
+        want.extend_from_slice(&body);
+        assert_eq!(got.payload, want);
+        assert!(got.payload.is_pinned(), "payload must land in the pool");
+        assert!(rx_pool.acquire_count() > 0);
+        drop(got);
+        assert_eq!(rx_pool.free_buffers(), 32, "payload buffers returned");
+
+        // pool exhausted: receive falls back to heap, bytes intact
+        let hold: Vec<_> = (0..32).map(|_| rx_pool.try_acquire().unwrap()).collect();
+        eps[0].send(Frame::data(0, 1, 6, body.clone())).unwrap();
+        let got = eps[1].recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+        assert!(!got.payload.is_pinned(), "dry pool must fall back to heap");
+        assert_eq!(got.payload, body);
+        drop(hold);
     }
 
     #[test]

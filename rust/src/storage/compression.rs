@@ -12,6 +12,10 @@
 
 use crate::{Error, Result};
 
+/// Self-describing framing every compressed buffer starts with:
+/// codec tag (1 byte) + original length (8 bytes LE).
+pub const PRELUDE_LEN: usize = 9;
+
 /// Available codecs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Codec {
@@ -52,18 +56,65 @@ impl Codec {
         }
     }
 
+    /// The 9-byte self-describing framing for a payload of `orig_len`
+    /// logical bytes: tag + original length.
+    pub fn prelude(self, orig_len: usize) -> [u8; PRELUDE_LEN] {
+        let mut p = [0u8; PRELUDE_LEN];
+        p[0] = self.tag();
+        p[1..9].copy_from_slice(&(orig_len as u64).to_le_bytes());
+        p
+    }
+
+    /// Parse a prelude: (codec, original length). `Zstd` parses at its
+    /// default level — the tag identifies the format, not the effort.
+    pub fn parse_prelude(data: &[u8]) -> Result<(Codec, usize)> {
+        if data.len() < PRELUDE_LEN {
+            return Err(Error::Format("compressed buffer too short".into()));
+        }
+        let codec = Codec::from_tag(data[0])?;
+        let orig = u64::from_le_bytes(data[1..9].try_into().unwrap()) as usize;
+        Ok((codec, orig))
+    }
+
     /// Compress `data`; output is self-describing (tag + original len).
     pub fn compress(self, data: &[u8]) -> Vec<u8> {
-        let mut out = Vec::with_capacity(data.len() / 2 + 16);
-        out.push(self.tag());
-        out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        self.compress_chunks(&[data])
+    }
+
+    /// Compress a payload presented as vectored chunks (a pinned slab's
+    /// buffers) without first reassembling it. `Zstd` streams the
+    /// chunks through an encoder; `Lz4Like` needs random access to its
+    /// input window, so it alone materializes the input first.
+    pub fn compress_chunks(self, chunks: &[&[u8]]) -> Vec<u8> {
+        let total: usize = chunks.iter().map(|c| c.len()).sum();
+        let mut out = Vec::with_capacity(total / 2 + 16);
+        out.extend_from_slice(&self.prelude(total));
         match self {
-            Codec::None => out.extend_from_slice(data),
-            Codec::Zstd { level } => {
-                let c = zstd::bulk::compress(data, level).expect("zstd compress");
-                out.extend_from_slice(&c);
+            Codec::None => {
+                for c in chunks {
+                    out.extend_from_slice(c);
+                }
             }
-            Codec::Lz4Like => lz4like_compress(data, &mut out),
+            Codec::Zstd { level } => {
+                use std::io::Write;
+                let mut enc =
+                    zstd::stream::write::Encoder::new(out, level).expect("zstd encoder");
+                for c in chunks {
+                    enc.write_all(c).expect("zstd compress");
+                }
+                out = enc.finish().expect("zstd finish");
+            }
+            Codec::Lz4Like => {
+                if let [one] = chunks {
+                    lz4like_compress(one, &mut out);
+                } else {
+                    let mut all = Vec::with_capacity(total);
+                    for c in chunks {
+                        all.extend_from_slice(c);
+                    }
+                    lz4like_compress(&all, &mut out);
+                }
+            }
         }
         out
     }
@@ -72,18 +123,45 @@ impl Codec {
     /// the tag travels with the data, so reader config never needs to
     /// match writer config).
     pub fn decompress(data: &[u8]) -> Result<Vec<u8>> {
-        if data.len() < 9 {
-            return Err(Error::Format("compressed buffer too short".into()));
-        }
-        let tag = data[0];
-        let orig = u64::from_le_bytes(data[1..9].try_into().unwrap()) as usize;
-        let body = &data[9..];
-        match Codec::from_tag(tag)? {
+        let (codec, orig) = Codec::parse_prelude(data)?;
+        let body = &data[PRELUDE_LEN..];
+        match codec {
             Codec::None => Ok(body.to_vec()),
             Codec::Zstd { .. } => zstd::bulk::decompress(body, orig)
                 .map_err(|e| Error::Format(format!("zstd: {e}"))),
             Codec::Lz4Like => lz4like_decompress(body, orig),
         }
+    }
+
+    /// Decompress straight into a writer (a pinned-slab writer on the
+    /// spill-promotion path, so the decompressed bytes never stage
+    /// through an intermediate heap `Vec` for `Zstd`/`None`). Returns
+    /// the claimed original length; the caller should verify the writer
+    /// grew by exactly that much.
+    pub fn decompress_into(data: &[u8], out: &mut dyn std::io::Write) -> Result<usize> {
+        use std::io::Write;
+        let (codec, orig) = Codec::parse_prelude(data)?;
+        let body = &data[PRELUDE_LEN..];
+        match codec {
+            Codec::None => {
+                if body.len() != orig {
+                    return Err(Error::Format(format!(
+                        "length mismatch: body {} vs claimed {orig}",
+                        body.len()
+                    )));
+                }
+                out.write_all(body)?;
+            }
+            Codec::Zstd { .. } => {
+                zstd::stream::copy_decode(body, &mut *out)
+                    .map_err(|e| Error::Format(format!("zstd: {e}")))?;
+            }
+            Codec::Lz4Like => {
+                let v = lz4like_decompress(body, orig)?;
+                out.write_all(&v)?;
+            }
+        }
+        Ok(orig)
     }
 }
 
@@ -277,6 +355,47 @@ mod tests {
             bad[12] ^= 0xff;
             let _ = Codec::decompress(&bad);
         }
+    }
+
+    #[test]
+    fn chunked_compress_matches_whole_buffer_decode() {
+        for codec in [Codec::None, Codec::Zstd { level: 1 }, Codec::Lz4Like] {
+            for data in corpora() {
+                // split into uneven chunks like a slab would
+                let mid = data.len() / 3;
+                let mid2 = mid + (data.len() - mid) / 2;
+                let chunks: Vec<&[u8]> =
+                    vec![&data[..mid], &data[mid..mid2], &data[mid2..]];
+                let c = codec.compress_chunks(&chunks);
+                assert_eq!(
+                    Codec::decompress(&c).unwrap(),
+                    data,
+                    "codec {codec:?} len {}",
+                    data.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decompress_into_streams_all_codecs() {
+        for codec in [Codec::None, Codec::Zstd { level: 1 }, Codec::Lz4Like] {
+            for data in corpora() {
+                let c = codec.compress(&data);
+                let mut out = Vec::new();
+                let orig = Codec::decompress_into(&c, &mut out).unwrap();
+                assert_eq!(orig, data.len());
+                assert_eq!(out, data, "codec {codec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn prelude_roundtrip() {
+        let p = Codec::Lz4Like.prelude(12345);
+        let (codec, orig) = Codec::parse_prelude(&p).unwrap();
+        assert_eq!((codec.tag(), orig), (2, 12345));
+        assert!(Codec::parse_prelude(&p[..5]).is_err());
     }
 
     #[test]

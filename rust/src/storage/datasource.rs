@@ -16,7 +16,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use crate::memory::{PinnedPool, PinnedSlab};
+use crate::memory::{PinnedPool, SlabSlice, SlabWriter, StagedBytes};
 use crate::storage::format::{FileFooter, RowGroupMeta};
 use crate::storage::object_store::ObjectStore;
 use crate::Result;
@@ -70,7 +70,11 @@ pub fn plan_ranges(group: &RowGroupMeta, cols: &[usize]) -> Vec<ByteRange> {
 }
 
 /// Fetched pages for one (group, cols) scan unit, in `cols` order.
-pub type FetchedPages = Vec<Vec<u8>>;
+/// Slab-backed when the fetch staged through the pinned bounce pool
+/// (the pages of one coalesced request share that request's slab),
+/// heap-backed otherwise — the pre-loader and the compute decode path
+/// share the same pool-resident bytes end-to-end.
+pub type FetchedPages = Vec<StagedBytes>;
 
 /// How scan tasks read files. Implementations differ in request shape,
 /// not in what they return.
@@ -129,7 +133,9 @@ impl Datasource for GenericDatasource {
         cols.iter()
             .map(|&c| {
                 let ch = &g.chunks[c];
-                self.store.get_range(key, ch.offset, ch.len)
+                self.store
+                    .get_range(key, ch.offset, ch.len)
+                    .map(StagedBytes::Heap)
             })
             .collect()
     }
@@ -187,7 +193,14 @@ impl CustomObjectStoreDatasource {
 
     /// Fetch arbitrary coalesced ranges (the Byte-Range Pre-loader path:
     /// it plans ranges across groups itself, then slices pages out).
-    pub fn fetch_ranges(&self, key: &str, ranges: &[ByteRange]) -> Result<Vec<Vec<u8>>> {
+    ///
+    /// Each merged request streams from the store *directly into* a
+    /// pinned slab (one bounce copy, in page-locked memory) and the
+    /// returned pages are `Arc`-shared slices of that slab — the slab
+    /// is never reassembled and the pages never re-copied. When the
+    /// pool is dry or absent the fetch degrades to heap buffers (the
+    /// read always succeeds; only the bounce is skipped).
+    pub fn fetch_ranges(&self, key: &str, ranges: &[ByteRange]) -> Result<FetchedPages> {
         let merged = coalesce_ranges(ranges.to_vec(), self.coalesce_gap);
         {
             let mut st = self.stats.lock().unwrap();
@@ -197,18 +210,21 @@ impl CustomObjectStoreDatasource {
             let fetched: u64 = merged.iter().map(|r| r.len).sum();
             st.overread_bytes += fetched - raw;
         }
-        // fetch merged ranges, optionally bouncing through pinned bufs
-        let mut blocks = Vec::with_capacity(merged.len());
+        // fetch merged ranges into slabs (heap when the pool is dry)
+        let mut blocks: Vec<(u64, StagedBytes)> = Vec::with_capacity(merged.len());
         for m in &merged {
-            let bytes = self.store.get_range(key, m.offset, m.len)?;
-            let bytes = match &self.pinned {
-                Some(pool) => match PinnedSlab::write(pool, &bytes) {
-                    Ok(slab) => slab.read(),
-                    Err(_) => bytes, // pool dry: skip the bounce, not the read
-                },
-                None => bytes,
+            let staged = match &self.pinned {
+                Some(pool) => SlabWriter::with_capacity(pool, m.len as usize).ok(),
+                None => None,
             };
-            blocks.push((m.offset, bytes));
+            let block = match staged {
+                Some(mut w) => {
+                    self.store.get_range_into(key, m.offset, m.len, &mut w)?;
+                    StagedBytes::Pinned(SlabSlice::whole(w.finish()))
+                }
+                None => StagedBytes::Heap(self.store.get_range(key, m.offset, m.len)?),
+            };
+            blocks.push((m.offset, block));
         }
         // slice each requested range out of its merged block
         ranges
@@ -221,7 +237,14 @@ impl CustomObjectStoreDatasource {
                     })
                     .expect("range covered by a merged block");
                 let s = (r.offset - boff) as usize;
-                Ok(block[s..s + r.len as usize].to_vec())
+                Ok(match block {
+                    StagedBytes::Pinned(slab) => {
+                        StagedBytes::Pinned(slab.slice(s, r.len as usize))
+                    }
+                    StagedBytes::Heap(v) => {
+                        StagedBytes::Heap(v[s..s + r.len as usize].to_vec())
+                    }
+                })
             })
             .collect()
     }
@@ -394,7 +417,8 @@ mod tests {
         let footer = cust.footer("t.ths").unwrap();
         let reader = FileReader::from_bytes(&file).unwrap();
         let pages = cust.fetch_group("t.ths", &footer, 0, &[0, 1]).unwrap();
-        let refs: Vec<&[u8]> = pages.iter().map(|p| p.as_slice()).collect();
+        let cows: Vec<_> = pages.iter().map(|p| p.contiguous()).collect();
+        let refs: Vec<&[u8]> = cows.iter().map(|c| c.as_ref()).collect();
         let batch = reader.decode_group(0, &[0, 1], &refs).unwrap();
         assert_eq!(batch.rows(), 256);
         assert_eq!(batch.column("k").unwrap().data.as_i64().unwrap()[5], 5);
@@ -406,9 +430,30 @@ mod tests {
         let pool = PinnedPool::new(4096, 16).unwrap();
         let cust = CustomObjectStoreDatasource::new(s, 1 << 20, Some(pool.clone()));
         let footer = cust.footer("t.ths").unwrap();
-        cust.fetch_group("t.ths", &footer, 0, &[0, 1, 2]).unwrap();
+        let pages = cust.fetch_group("t.ths", &footer, 0, &[0, 1, 2]).unwrap();
         assert!(pool.acquire_count() > 0, "bounce buffers unused");
+        assert!(
+            pages.iter().all(|p| p.is_pinned()),
+            "pages must be slab-backed views of the coalesced fetch"
+        );
+        assert!(
+            pool.free_buffers() < 16,
+            "pages hold the slab while alive"
+        );
+        drop(pages);
         assert_eq!(pool.free_buffers(), 16, "bounce buffers leaked");
+    }
+
+    #[test]
+    fn dry_pool_falls_back_to_heap_pages() {
+        let (s, _) = store_with_file();
+        let pool = PinnedPool::new(4096, 2).unwrap();
+        let _hold: Vec<_> = (0..2).map(|_| pool.try_acquire().unwrap()).collect();
+        let cust = CustomObjectStoreDatasource::new(s, 1 << 20, Some(pool.clone()));
+        let footer = cust.footer("t.ths").unwrap();
+        let pages = cust.fetch_group("t.ths", &footer, 0, &[0, 1]).unwrap();
+        assert!(pages.iter().all(|p| !p.is_pinned()), "exhausted pool degrades to heap");
+        assert!(!pages[0].is_empty());
     }
 
     #[test]

@@ -9,7 +9,7 @@
 
 use std::collections::HashMap;
 use std::fs::File;
-use std::io::{Read, Seek, SeekFrom};
+use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
@@ -24,6 +24,23 @@ pub trait ObjectStore: Send + Sync {
 
     /// Read `len` bytes at `offset`. One modeled store request.
     fn get_range(&self, key: &str, offset: u64, len: u64) -> Result<Vec<u8>>;
+
+    /// Read `len` bytes at `offset` straight into `out` (a pinned
+    /// [`crate::memory::SlabWriter`] on the pre-load staging path, so
+    /// fetched bytes land in bounce buffers without an intermediate
+    /// heap `Vec`). One modeled store request. The default shims via
+    /// [`ObjectStore::get_range`] for implementations that predate it.
+    fn get_range_into(
+        &self,
+        key: &str,
+        offset: u64,
+        len: u64,
+        out: &mut dyn std::io::Write,
+    ) -> Result<()> {
+        let v = self.get_range(key, offset, len)?;
+        out.write_all(&v)?;
+        Ok(())
+    }
 
     /// Store an object (datagen / shuffle-to-storage path).
     fn put(&self, key: &str, data: &[u8]) -> Result<()>;
@@ -161,6 +178,47 @@ impl ObjectStore for SimObjectStore {
         })
     }
 
+    fn get_range_into(
+        &self,
+        key: &str,
+        offset: u64,
+        len: u64,
+        out: &mut dyn std::io::Write,
+    ) -> Result<()> {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(len, Ordering::Relaxed);
+        self.with_conn(len as usize, || {
+            // `.cloned()` bumps the object's Arc refcount (releasing the
+            // map lock early); it does not copy the data.
+            if let Some(data) = self.mem.read().unwrap().get(key).cloned() {
+                let end = offset + len;
+                if end > data.len() as u64 {
+                    return Err(Error::ObjectStore(format!(
+                        "range {offset}+{len} beyond object {key} ({} bytes)",
+                        data.len()
+                    )));
+                }
+                // straight from the stored object into the caller's
+                // buffers — no intermediate Vec
+                out.write_all(&data[offset as usize..end as usize])?;
+                return Ok(());
+            }
+            let p = self
+                .path_of(key)
+                .ok_or_else(|| Error::ObjectStore(format!("no such object: {key}")))?;
+            let mut f = File::open(&p)
+                .map_err(|e| Error::ObjectStore(format!("{key}: {e}")))?;
+            f.seek(SeekFrom::Start(offset))?;
+            let copied = std::io::copy(&mut f.by_ref().take(len), out)?;
+            if copied != len {
+                return Err(Error::ObjectStore(format!(
+                    "{key} range: short read ({copied} of {len} bytes)"
+                )));
+            }
+            Ok(())
+        })
+    }
+
     fn put(&self, key: &str, data: &[u8]) -> Result<()> {
         if let Some(p) = self.path_of(key) {
             if let Some(dir) = p.parent() {
@@ -232,6 +290,17 @@ mod tests {
         assert_eq!(s.get_range("a/b.ths", 1, 3).unwrap(), vec![2, 3, 4]);
         assert_eq!(s.request_count(), 1);
         assert_eq!(s.bytes_served(), 3);
+    }
+
+    #[test]
+    fn get_range_into_writes_directly() {
+        let s = store();
+        s.put("a", &[10, 20, 30, 40, 50]).unwrap();
+        let mut out = Vec::new();
+        s.get_range_into("a", 1, 3, &mut out).unwrap();
+        assert_eq!(out, vec![20, 30, 40]);
+        assert_eq!(s.request_count(), 1);
+        assert!(s.get_range_into("a", 4, 9, &mut out).is_err());
     }
 
     #[test]

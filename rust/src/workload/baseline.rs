@@ -110,7 +110,8 @@ impl CpuEngine {
                 // sequential, blocking reads: the baseline's defining
                 // property
                 let pages = self.ds.fetch_group(&key, &footer, g, &col_idx)?;
-                let refs: Vec<&[u8]> = pages.iter().map(|p| p.as_slice()).collect();
+                let cows: Vec<_> = pages.iter().map(|p| p.contiguous()).collect();
+                let refs: Vec<&[u8]> = cows.iter().map(|c| c.as_ref()).collect();
                 parts.push(reader.decode_group(g, &col_idx, &refs)?);
             }
         }

@@ -423,7 +423,8 @@ mod tests {
         let f = ds.footer(&keys[0]).unwrap();
         let pages = ds.fetch_group(&keys[0], &f, 0, &[0, 1, 2]).unwrap();
         let reader = crate::storage::format::FileReader { footer: (*f).clone() };
-        let refs: Vec<&[u8]> = pages.iter().map(|p| p.as_slice()).collect();
+        let cows: Vec<_> = pages.iter().map(|p| p.contiguous()).collect();
+        let refs: Vec<&[u8]> = cows.iter().map(|c| c.as_ref()).collect();
         let b = reader.decode_group(0, &[0, 1, 2], &refs).unwrap();
         let ok = b.column("l_orderkey").unwrap().data.as_i64().unwrap();
         assert!(ok.iter().all(|&k| k >= 0 && (k as usize) < g.orders_rows()));
@@ -464,7 +465,7 @@ mod tests {
         let pages = ds.fetch_group(&keys[0], &f, 0, &[0]).unwrap();
         let reader = crate::storage::format::FileReader { footer: (*f).clone() };
         let b = reader
-            .decode_group(0, &[0], &[pages[0].as_slice()])
+            .decode_group(0, &[0], &[pages[0].contiguous().as_ref()])
             .unwrap();
         let ok = b.column("l_orderkey").unwrap().data.as_i64().unwrap();
         let low = ok.iter().filter(|&&k| (k as usize) < g.orders_rows() / 10).count();

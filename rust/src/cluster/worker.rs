@@ -9,7 +9,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::{DatasourceKind, WorkerConfig};
 use crate::exec::{PhysicalPlan, QueryDag, WorkerCtx};
-use crate::executors::compute::{ComputeExecutor, TaskQueue};
+use crate::executors::compute::{ComputeExecutor, ResidencyBonus, TaskQueue};
 use crate::executors::movement::{DataMovementExecutor, HolderRegistry, MovementConfig};
 use crate::executors::network::{NetworkExecutor, Outbox, Router};
 use crate::executors::preload::PreloadExecutor;
@@ -120,7 +120,18 @@ impl Worker {
             device_compute: sim.throttle(&sim.profile.device_compute),
             metrics: Arc::new(crate::metrics::Metrics::default()),
         };
-        let queue = TaskQueue::new();
+        // Residency-aware ordering (§3.3.1): the queue scores tasks by
+        // where their input holders' bytes live; the movement executor
+        // below feeds it ResidencyChanged notifications. All-zero bonus
+        // knobs (the default) make this a plain priority+FIFO queue.
+        let queue = TaskQueue::with_residency(
+            ResidencyBonus {
+                device_bonus: config.residency_bonus_device,
+                spilled_penalty: config.residency_penalty_spilled,
+                rerank_batch: config.residency_rerank_batch,
+            },
+            ctx.metrics.clone(),
+        );
         let compute = ComputeExecutor::start(ctx.clone(), queue.clone(), config.compute_threads);
 
         // ---- data-movement executor: installs the shared pressure

@@ -93,6 +93,18 @@ pub struct WorkerConfig {
     pub urgency_reservation: i64,
     /// Urgency of proactive watermark demotions.
     pub urgency_watermark: i64,
+    /// Residency-aware compute scheduling (§3.3.1 "the memory tier that
+    /// the input data resides in"): bonus added to a queued task's
+    /// priority scaled by its inputs' device-resident byte fraction.
+    /// Both bonus knobs zero (the default) turn the feature off — task
+    /// ordering is then exactly `priority + FIFO`.
+    pub residency_bonus_device: i64,
+    /// Penalty subtracted scaled by the inputs' spilled byte fraction.
+    /// The penalty decays by half per re-rank pass, so delayed tasks
+    /// are never starved.
+    pub residency_penalty_spilled: i64,
+    /// Max queued tasks re-scored per residency re-rank pass.
+    pub residency_rerank_batch: usize,
     /// Codec for host→disk spills.
     pub spill_codec: Codec,
     /// Spill-file rotation size, bytes (dead sealed segments are
@@ -145,6 +157,9 @@ impl Default for WorkerConfig {
             promote_watermark: 0.70,
             urgency_reservation: 1_000_000,
             urgency_watermark: 100_000,
+            residency_bonus_device: 0,
+            residency_penalty_spilled: 0,
+            residency_rerank_batch: 32,
             spill_codec: Codec::None,
             spill_segment_bytes: crate::memory::spill::DEFAULT_SEGMENT_BYTES,
             reservation_timeout_ms: 10_000,
@@ -288,6 +303,13 @@ impl WorkerConfig {
         if let Some(v) = get("urgency_watermark") {
             self.urgency_watermark = v.as_int()?;
         }
+        if let Some(v) = get("residency_bonus_device") {
+            self.residency_bonus_device = v.as_int()?;
+        }
+        if let Some(v) = get("residency_penalty_spilled") {
+            self.residency_penalty_spilled = v.as_int()?;
+        }
+        set_usize!(residency_rerank_batch);
         if let Some(v) = get("spill_segment_bytes") {
             self.spill_segment_bytes = v.as_int()? as u64;
         }
@@ -361,6 +383,16 @@ impl WorkerConfig {
         if self.spill_segment_bytes == 0 {
             return Err(Error::Config("spill_segment_bytes must be >= 1".into()));
         }
+        if self.residency_bonus_device < 0 || self.residency_penalty_spilled < 0 {
+            return Err(Error::Config(
+                "residency bonus/penalty must be >= 0 (a negative bonus would let \
+                 spilled-input tasks outrank device-resident ones)"
+                    .into(),
+            ));
+        }
+        if self.residency_rerank_batch == 0 {
+            return Err(Error::Config("residency_rerank_batch must be >= 1".into()));
+        }
         if self.batch_rows == 0 {
             return Err(Error::Config("batch_rows must be >= 1".into()));
         }
@@ -415,7 +447,9 @@ mod tests {
             "[worker]\ncompute_threads = 7\ntransport = \"rdma\"\n\
              net_compression = \"none\"\nspill_watermark = 0.5\n\
              promote_watermark = 0.4\nspill_segment_bytes = 65536\n\
-             urgency_reservation = 777\nurgency_watermark = 99\n",
+             urgency_reservation = 777\nurgency_watermark = 99\n\
+             residency_bonus_device = 40\nresidency_penalty_spilled = 160\n\
+             residency_rerank_batch = 8\n",
         )
         .unwrap();
         let mut cfg = WorkerConfig::default();
@@ -428,6 +462,25 @@ mod tests {
         assert_eq!(cfg.spill_segment_bytes, 65536);
         assert_eq!(cfg.urgency_reservation, 777);
         assert_eq!(cfg.urgency_watermark, 99);
+        assert_eq!(cfg.residency_bonus_device, 40);
+        assert_eq!(cfg.residency_penalty_spilled, 160);
+        assert_eq!(cfg.residency_rerank_batch, 8);
+    }
+
+    #[test]
+    fn residency_defaults_are_off_and_validated() {
+        let cfg = WorkerConfig::default();
+        assert_eq!(cfg.residency_bonus_device, 0, "feature off by default");
+        assert_eq!(cfg.residency_penalty_spilled, 0);
+        let mut cfg = WorkerConfig::default();
+        cfg.residency_bonus_device = -5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = WorkerConfig::default();
+        cfg.residency_penalty_spilled = -1;
+        assert!(cfg.validate().is_err());
+        let mut cfg = WorkerConfig::default();
+        cfg.residency_rerank_batch = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

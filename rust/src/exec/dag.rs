@@ -3,6 +3,14 @@
 //! instantiated as edges of the DAG, where data can accumulate before
 //! processing by a next operation").
 //!
+//! The holders built here are both registered with the Data-Movement
+//! executor's [`HolderRegistry`] (so movement can pick victims and
+//! beneficiaries) *and* handed to the operators as inputs, which
+//! declare them on every task they submit ([`Task::inputs`]) — that is
+//! how the compute queue learns which residency a queued task depends
+//! on (§3.3.1). Base priorities are `depth * 1000`; the queue adds the
+//! residency bonus dynamically.
+//!
 //! Exchange nodes additionally register a receive channel with the
 //! Network Executor's router; their output holder is the channel's
 //! holder, fed by peers. Channel ids are `(query_id << 16) | node_id`

@@ -141,6 +141,7 @@ impl Operator for HashAggOp {
             });
             tasks.push(
                 Task::new(self.common.id, self.common.base_priority, run)
+                    .with_input(self.input.clone())
                     .with_prefetch(Prefetch::Promote { holder: self.input.clone() }),
             );
         }

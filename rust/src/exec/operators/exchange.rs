@@ -213,7 +213,10 @@ impl Operator for ExchangeOp {
                         }
                         Ok(())
                     });
-                    tasks.push(Task::new(self.common.id, self.common.base_priority, run));
+                    tasks.push(
+                        Task::new(self.common.id, self.common.base_priority, run)
+                            .with_input(self.input.clone()),
+                    );
                 }
                 // transition?
                 let enough = self.seen_batches.load(Ordering::Relaxed)
@@ -359,6 +362,9 @@ impl Operator for ExchangeOp {
                     });
                     tasks.push(
                         Task::new(self.common.id, self.common.base_priority, run)
+                            // stream tasks pop from both holders
+                            .with_input(self.pending.clone())
+                            .with_input(self.input.clone())
                             .with_prefetch(Prefetch::Promote {
                                 holder: self.pending.clone(),
                             }),

@@ -82,6 +82,7 @@ impl Operator for FilterOp {
             });
             tasks.push(
                 Task::new(self.common.id, self.common.base_priority, run)
+                    .with_input(self.input.clone())
                     .with_prefetch(Prefetch::Promote { holder: self.input.clone() }),
             );
         }
@@ -158,7 +159,10 @@ impl Operator for ProjectOp {
                 output.push_batch(projected)?;
                 Ok(())
             });
-            tasks.push(Task::new(self.common.id, self.common.base_priority, run));
+            tasks.push(
+                Task::new(self.common.id, self.common.base_priority, run)
+                    .with_input(self.input.clone()),
+            );
         }
         if self.input.is_exhausted() && self.common.inflight() == 0 {
             self.output.finish();

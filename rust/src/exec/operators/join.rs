@@ -136,6 +136,7 @@ impl Operator for HashJoinOp {
                 });
                 tasks.push(
                     Task::new(self.common.id, self.common.base_priority + 100, run)
+                        .with_input(self.build_input.clone())
                         .with_prefetch(Prefetch::Promote {
                             holder: self.build_input.clone(),
                         }),
@@ -218,9 +219,9 @@ impl Operator for HashJoinOp {
                 Ok(())
             });
             tasks.push(
-                Task::new(self.common.id, self.common.base_priority, run).with_prefetch(
-                    Prefetch::Promote { holder: self.probe_input.clone() },
-                ),
+                Task::new(self.common.id, self.common.base_priority, run)
+                    .with_input(self.probe_input.clone())
+                    .with_prefetch(Prefetch::Promote { holder: self.probe_input.clone() }),
             );
         }
         if self.probe_input.is_exhausted() && self.common.inflight() == 0 {

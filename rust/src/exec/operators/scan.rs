@@ -168,6 +168,8 @@ impl Operator for ScanOp {
                     ranges,
                     staging,
                 }),
+                // no holder inputs: scans read the object store
+                inputs: Vec::new(),
                 run,
             };
             tasks.push(task);

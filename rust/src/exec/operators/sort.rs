@@ -71,7 +71,10 @@ impl Operator for SortOp {
                 }
                 Ok(())
             });
-            tasks.push(Task::new(self.common.id, self.common.base_priority, run));
+            tasks.push(
+                Task::new(self.common.id, self.common.base_priority, run)
+                    .with_input(self.input.clone()),
+            );
         }
         if self.input.is_exhausted() && self.common.inflight() == 0 {
             let staged = std::mem::take(&mut *self.staged.lock().unwrap());
@@ -179,7 +182,10 @@ impl Operator for LimitOp {
                 }
                 Ok(())
             });
-            tasks.push(Task::new(self.common.id, self.common.base_priority, run));
+            tasks.push(
+                Task::new(self.common.id, self.common.base_priority, run)
+                    .with_input(self.input.clone()),
+            );
         }
         let done_early = *self.emitted.lock().unwrap() >= self.n;
         if (self.input.is_exhausted() || done_early) && self.common.inflight() == 0 {

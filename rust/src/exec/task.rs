@@ -55,28 +55,56 @@ pub type TaskFn = Arc<dyn Fn(&WorkerCtx) -> Result<()> + Send + Sync>;
 pub struct Task {
     /// Operator (plan node) this task belongs to.
     pub op: usize,
-    /// Higher runs earlier. Convention: `depth * 1000 + bonus`, where
-    /// depth is the node's distance from the root (upstream work
-    /// unblocks more of the DAG) and bonus captures input-tier
-    /// readiness (§3.3.1: priorities can consider "the memory tier that
-    /// the input data resides in").
+    /// Base priority; higher runs earlier. Convention: `depth * 1000`,
+    /// where depth is the node's distance from the root (upstream work
+    /// unblocks more of the DAG). The queue adds a residency bonus on
+    /// top from [`Task::inputs`] (§3.3.1: priorities consider "the
+    /// memory tier that the input data resides in").
     pub priority: i64,
     /// Retry count so far.
     pub attempts: u32,
     /// What the pre-loader may do for this task.
     pub prefetch: Option<Prefetch>,
+    /// Holders this task will pop from. The Compute Executor's queue
+    /// reads their [`crate::memory::ResidencySnapshot`]s to bias
+    /// ordering toward tasks whose inputs sit hot on device, and the
+    /// Data-Movement executor's `ResidencyChanged` notifications re-rank
+    /// queued tasks by these holder ids. Empty for source tasks (scans
+    /// read the object store, not a holder).
+    pub inputs: Vec<BatchHolder>,
     /// The work.
     pub run: TaskFn,
 }
 
 impl Task {
     pub fn new(op: usize, priority: i64, run: TaskFn) -> Task {
-        Task { op, priority, attempts: 0, prefetch: None, run }
+        Task { op, priority, attempts: 0, prefetch: None, inputs: Vec::new(), run }
     }
 
     pub fn with_prefetch(mut self, p: Prefetch) -> Task {
         self.prefetch = Some(p);
         self
+    }
+
+    /// Declare an input holder (chainable; multi-input tasks call it
+    /// once per holder).
+    pub fn with_input(mut self, holder: BatchHolder) -> Task {
+        self.inputs.push(holder);
+        self
+    }
+
+    /// Combined residency of all declared inputs (byte-weighted).
+    pub fn input_residency(&self) -> crate::memory::ResidencySnapshot {
+        let mut snap = crate::memory::ResidencySnapshot::default();
+        for h in &self.inputs {
+            snap.merge(&h.residency());
+        }
+        snap
+    }
+
+    /// True when any declared input is (a clone of) `holder_id`.
+    pub fn reads_holder(&self, holder_id: usize) -> bool {
+        self.inputs.iter().any(|h| h.id() == holder_id)
     }
 }
 
@@ -84,10 +112,11 @@ impl std::fmt::Debug for Task {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "Task(op {}, prio {}, attempts {}, prefetch {})",
+            "Task(op {}, prio {}, attempts {}, inputs {}, prefetch {})",
             self.op,
             self.priority,
             self.attempts,
+            self.inputs.len(),
             match &self.prefetch {
                 None => "none",
                 Some(Prefetch::ByteRanges { .. }) => "byte-ranges",

@@ -9,24 +9,93 @@
 //! each thread issues PJRT executions independently (the CPU client
 //! runs them on its own pool, our stream analog).
 //!
+//! ## Residency-aware ordering
+//!
+//! Tasks declare their input holders ([`Task::inputs`]); the queue
+//! scores each submission as `base_priority + residency_bonus`, where
+//! the bonus rewards device-resident inputs and penalizes spilled ones
+//! (the paper's "memory tier that the input data resides in"). The
+//! Data-Movement executor calls
+//! [`TaskQueue::notify_residency_changed`] after every completed
+//! promotion/demotion; the queue then lazily re-ranks the affected
+//! queued tasks on the next pop instead of re-sorting on every pop —
+//! closing the §3.3.1 feedback loop in the reverse direction of
+//! [`TaskQueue::op_priorities`]. Each re-rank ages penalized entries
+//! (halving their distance to the full device bonus), so a
+//! spilled-input task can be delayed but never starved: after at most
+//! ~log2(penalty) re-ranks it ties fresh device-resident tasks and wins
+//! on FIFO order. With the bonus table zeroed (the default config) the
+//! queue is byte-for-byte the plain `priority + seq` heap.
+//!
 //! Failed tasks with retryable errors (device OOM, reservation timeout,
 //! pinned exhaustion) are re-queued with a decayed priority; the
 //! operator's memory history is updated by the task itself.
 
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::exec::{Task, WorkerCtx};
+use crate::memory::ResidencySnapshot;
+use crate::metrics::Metrics;
 use crate::Error;
 
 const MAX_ATTEMPTS: u32 = 6;
 
+/// The §3.3.1 input-tier bonus table (see
+/// [`crate::config::WorkerConfig`]: `residency_bonus_device`,
+/// `residency_penalty_spilled`, `residency_rerank_batch`). All-zero —
+/// the default — disables residency-aware ordering entirely.
+#[derive(Clone, Copy, Debug)]
+pub struct ResidencyBonus {
+    /// Added (scaled by the device-resident byte fraction) to tasks
+    /// whose inputs already sit in device memory.
+    pub device_bonus: i64,
+    /// Subtracted (scaled by the spilled byte fraction) from tasks
+    /// whose inputs must come back from disk first.
+    pub spilled_penalty: i64,
+    /// Max queued tasks re-scored per re-rank pass; affected tasks
+    /// beyond the cap keep their stale rank until the next pop.
+    pub rerank_batch: usize,
+}
+
+impl Default for ResidencyBonus {
+    fn default() -> Self {
+        ResidencyBonus { device_bonus: 0, spilled_penalty: 0, rerank_batch: 32 }
+    }
+}
+
+impl ResidencyBonus {
+    pub fn is_enabled(&self) -> bool {
+        self.device_bonus != 0 || self.spilled_penalty != 0
+    }
+
+    /// Score a residency snapshot at `age` re-rank generations.
+    ///
+    /// Age 0 yields `device_bonus*dev_frac - spilled_penalty*spill_frac`;
+    /// every re-rank halves the distance to the full `device_bonus`, so
+    /// the bonus is always in `[-spilled_penalty, device_bonus]` and a
+    /// fully-device snapshot scores `device_bonus` at every age —
+    /// aged spilled work catches up to hot work, never overtakes it.
+    pub fn score(&self, snap: &ResidencySnapshot, age: u32) -> i64 {
+        if !self.is_enabled() {
+            return 0;
+        }
+        let raw = (self.device_bonus as f64 * snap.device_frac()
+            - self.spilled_penalty as f64 * snap.spilled_frac()) as i64;
+        let gap = self.device_bonus.saturating_sub(raw);
+        self.device_bonus - (gap >> age.min(62))
+    }
+}
+
 struct Queued {
+    /// Effective priority: `task.priority + bonus` at scoring time.
     priority: i64,
     /// FIFO tiebreak: smaller sequence first.
     seq: u64,
+    /// Re-rank generations survived (decays the spilled penalty).
+    age: u32,
     task: Task,
 }
 
@@ -61,6 +130,15 @@ pub struct TaskQueue {
     in_flight: AtomicU64,
     /// Marked dirty when a task with a prefetch hint is submitted.
     listeners: Mutex<Vec<Arc<crate::memory::PressureEvent>>>,
+    /// Input-tier bonus table (all-zero = residency ordering off).
+    bonus: ResidencyBonus,
+    /// Holder ids whose residency changed since the last re-rank pass
+    /// (fed by the Data-Movement executor's completed moves).
+    dirty_holders: Mutex<HashSet<usize>>,
+    /// Where a capped re-rank pass stopped; the next pass resumes there
+    /// so tail entries are served before head entries are re-aged.
+    rerank_cursor: AtomicU64,
+    metrics: Arc<Metrics>,
 }
 
 impl Default for TaskQueue {
@@ -71,6 +149,10 @@ impl Default for TaskQueue {
             seq: AtomicU64::new(0),
             in_flight: AtomicU64::new(0),
             listeners: Mutex::new(Vec::new()),
+            bonus: ResidencyBonus::default(),
+            dirty_holders: Mutex::new(HashSet::new()),
+            rerank_cursor: AtomicU64::new(0),
+            metrics: Arc::new(Metrics::default()),
         }
     }
 }
@@ -80,6 +162,14 @@ impl TaskQueue {
         Arc::new(TaskQueue::default())
     }
 
+    /// A queue with residency-aware ordering: `bonus` scores inputs at
+    /// submit time and `metrics` receives the
+    /// `sched.residency_rerank_total` / `sched.spill_stall_avoided`
+    /// gauges.
+    pub fn with_residency(bonus: ResidencyBonus, metrics: Arc<Metrics>) -> Arc<TaskQueue> {
+        Arc::new(TaskQueue { bonus, metrics, ..TaskQueue::default() })
+    }
+
     /// Register an event to be marked dirty whenever a task carrying a
     /// [`crate::exec::task::Prefetch`] is submitted (queue
     /// introspection without a polling loop).
@@ -87,11 +177,30 @@ impl TaskQueue {
         self.listeners.lock().unwrap().push(event);
     }
 
+    /// The Data-Movement executor completed a promotion or demotion on
+    /// `holder_id`: queued tasks reading that holder are re-ranked
+    /// lazily on the next pop (no re-sort per pop, no re-sort per
+    /// notification).
+    pub fn notify_residency_changed(&self, holder_id: usize) {
+        if !self.bonus.is_enabled() {
+            return;
+        }
+        self.dirty_holders.lock().unwrap().insert(holder_id);
+    }
+
+    fn effective_priority(&self, task: &Task, age: u32) -> i64 {
+        if !self.bonus.is_enabled() || task.inputs.is_empty() {
+            return task.priority;
+        }
+        task.priority + self.bonus.score(&task.input_residency(), age)
+    }
+
     pub fn submit(&self, task: Task) {
         let prefetchable = task.prefetch.is_some();
         let q = Queued {
-            priority: task.priority,
+            priority: self.effective_priority(&task, 0),
             seq: self.seq.fetch_add(1, Ordering::Relaxed),
+            age: 0,
             task,
         };
         self.heap.lock().unwrap().push(q);
@@ -103,10 +212,77 @@ impl TaskQueue {
         }
     }
 
+    /// Apply pending residency notifications to the queued tasks: up to
+    /// `bonus.rerank_batch` relevant entries (inputs intersect the
+    /// dirty holder set, or already carrying a penalty that must age)
+    /// are re-scored per pass; the rest keep their rank until the next
+    /// pop. A capped pass records where it stopped and the next pass
+    /// resumes there, so every relevant entry is eventually served and
+    /// no entry is re-aged before the scan wraps around. The heap is
+    /// torn down and rebuilt (O(n)) only when a relevant entry exists.
+    fn maybe_rerank(&self, heap: &mut BinaryHeap<Queued>) {
+        if !self.bonus.is_enabled() || heap.is_empty() {
+            return;
+        }
+        let dirty: HashSet<usize> = {
+            let mut d = self.dirty_holders.lock().unwrap();
+            if d.is_empty() {
+                return;
+            }
+            std::mem::take(&mut *d)
+        };
+        // entries sitting below their base carry a spilled penalty:
+        // age those even when their own holder didn't move, so a
+        // starved task's rank keeps rising toward the device bonus
+        let is_relevant = |q: &Queued| {
+            q.priority < q.task.priority
+                || q.task.inputs.iter().any(|h| dirty.contains(&h.id()))
+        };
+        // cheap pre-scan: the common case (movement on a holder no
+        // queued task reads) must not pay the heap rebuild
+        if !heap.iter().any(|q| is_relevant(q)) {
+            return;
+        }
+        let top_before = heap.peek().map(|q| q.seq);
+        let mut entries: Vec<Queued> = std::mem::take(heap).into_vec();
+        let len = entries.len();
+        let start = self.rerank_cursor.load(Ordering::Relaxed) as usize % len;
+        let mut rescored = 0u64;
+        let mut deferred = false;
+        for i in 0..len {
+            let idx = (start + i) % len;
+            if !is_relevant(&entries[idx]) {
+                continue;
+            }
+            if rescored as usize >= self.bonus.rerank_batch {
+                // resume here next pass, and keep the dirty set so the
+                // next pop continues serving the unreached entries
+                deferred = true;
+                self.rerank_cursor.store(idx as u64, Ordering::Relaxed);
+                break;
+            }
+            let q = &mut entries[idx];
+            q.age = q.age.saturating_add(1);
+            q.priority = self.effective_priority(&q.task, q.age);
+            rescored += 1;
+        }
+        if deferred {
+            self.dirty_holders.lock().unwrap().extend(dirty);
+        }
+        *heap = BinaryHeap::from(entries);
+        self.metrics.gauge("sched.residency_rerank_total").add(rescored as i64);
+        if heap.peek().map(|q| q.seq) != top_before {
+            // the re-rank changed which task runs next: a pop that
+            // would have stalled on cold inputs now runs hot work
+            self.metrics.gauge("sched.spill_stall_avoided").add(1);
+        }
+    }
+
     fn pop(&self, timeout: Duration) -> Option<Task> {
         let deadline = std::time::Instant::now() + timeout;
         let mut heap = self.heap.lock().unwrap();
         loop {
+            self.maybe_rerank(&mut heap);
             if let Some(q) = heap.pop() {
                 self.in_flight.fetch_add(1, Ordering::AcqRel);
                 return Some(q.task);
@@ -118,6 +294,16 @@ impl TaskQueue {
             let (guard, _) = self.ready.wait_timeout(heap, deadline - now).unwrap();
             heap = guard;
         }
+    }
+
+    /// Pop the next task without blocking or touching the in-flight
+    /// accounting — the external single-threaded driver API (benches,
+    /// deterministic test harnesses). Pending residency re-ranks are
+    /// applied first, exactly as on the executor path.
+    pub fn try_pop(&self) -> Option<Task> {
+        let mut heap = self.heap.lock().unwrap();
+        self.maybe_rerank(&mut heap);
+        heap.pop().map(|q| q.task)
     }
 
     fn task_done(&self) {
@@ -397,6 +583,136 @@ mod tests {
         let prios = q.op_priorities();
         assert_eq!(prios[&7], 100);
         assert_eq!(prios[&2], 80);
+    }
+
+    // ---------------------------------------------- residency ordering
+
+    use crate::memory::batch_holder::MemEnv;
+    use crate::memory::BatchHolder;
+    use crate::types::{Column, RecordBatch};
+
+    fn batch(rows: usize) -> RecordBatch {
+        RecordBatch::new(vec![Column::i64("k", vec![3; rows])]).unwrap()
+    }
+
+    /// A holder with one device-resident batch.
+    fn device_holder(env: &MemEnv) -> BatchHolder {
+        let h = BatchHolder::new("dev", env.clone());
+        h.push_batch(batch(200)).unwrap();
+        h
+    }
+
+    /// A holder whose only batch sits on disk.
+    fn spilled_holder(env: &MemEnv) -> BatchHolder {
+        let h = BatchHolder::new("spill", env.clone());
+        h.push_batch_host(batch(200)).unwrap();
+        h.spill_host_one().unwrap();
+        assert_eq!(h.residency().spilled_frac(), 1.0);
+        h
+    }
+
+    fn bonus() -> ResidencyBonus {
+        ResidencyBonus { device_bonus: 50, spilled_penalty: 200, rerank_batch: 8 }
+    }
+
+    #[test]
+    fn zeroed_bonus_table_is_plain_priority_fifo() {
+        // Acceptance: with the table zeroed, pop order matches the
+        // pre-residency queue even for tasks that declare inputs.
+        let env = MemEnv::test(1 << 20);
+        let dev = device_holder(&env);
+        let spill = spilled_holder(&env);
+        let zero = ResidencyBonus { device_bonus: 0, spilled_penalty: 0, rerank_batch: 8 };
+        let q = TaskQueue::with_residency(zero, Arc::new(crate::metrics::Metrics::default()));
+        q.submit(task(0, 10, |_| Ok(())).with_input(spill.clone()));
+        q.submit(task(1, 30, |_| Ok(())).with_input(dev.clone()));
+        q.submit(task(2, 10, |_| Ok(())).with_input(dev));
+        q.notify_residency_changed(spill.id()); // must be a no-op when off
+        let order: Vec<usize> = std::iter::from_fn(|| q.try_pop().map(|t| t.op)).collect();
+        assert_eq!(order, vec![1, 0, 2], "prio then FIFO, residency ignored");
+    }
+
+    #[test]
+    fn spilled_input_never_outranks_device_resident_equal_base() {
+        let env = MemEnv::test(1 << 20);
+        let dev = device_holder(&env);
+        let spill = spilled_holder(&env);
+        let q = TaskQueue::with_residency(bonus(), Arc::new(crate::metrics::Metrics::default()));
+        // spilled task submitted FIRST: FIFO alone would run it first
+        q.submit(task(2, 1000, |_| Ok(())).with_input(spill));
+        q.submit(task(1, 1000, |_| Ok(())).with_input(dev));
+        assert_eq!(q.try_pop().unwrap().op, 1, "device-resident input wins");
+        assert_eq!(q.try_pop().unwrap().op, 2);
+    }
+
+    #[test]
+    fn aged_spilled_task_eventually_runs() {
+        // Starvation bound: under a steady stream of fresh hot tasks,
+        // the penalized task's rank decays toward the device bonus per
+        // re-rank pass and wins on FIFO order once it ties.
+        let env = MemEnv::test(1 << 20);
+        let dev = device_holder(&env);
+        let spill = spilled_holder(&env);
+        let metrics = Arc::new(crate::metrics::Metrics::default());
+        let q = TaskQueue::with_residency(bonus(), metrics.clone());
+        q.submit(task(2, 1000, |_| Ok(())).with_input(spill));
+        let mut ran_spilled_at = None;
+        for i in 0..16 {
+            q.submit(task(1, 1000, |_| Ok(())).with_input(dev.clone()));
+            // any completed movement triggers a pass; penalized entries
+            // age even when their own holder did not move
+            q.notify_residency_changed(dev.id());
+            if q.try_pop().unwrap().op == 2 {
+                ran_spilled_at = Some(i);
+                break;
+            }
+        }
+        // penalty 250 gap halves per pass: ties the bonus by pass 8
+        let at = ran_spilled_at.expect("spilled task starved");
+        assert!(at <= 9, "took {at} rounds");
+        assert!(metrics.gauge_value("sched.residency_rerank_total") > 0);
+    }
+
+    #[test]
+    fn rerank_batch_caps_rescoring_per_pass() {
+        let env = MemEnv::test(1 << 20);
+        let dev = device_holder(&env);
+        let capped = ResidencyBonus { device_bonus: 50, spilled_penalty: 200, rerank_batch: 1 };
+        let metrics = Arc::new(crate::metrics::Metrics::default());
+        let q = TaskQueue::with_residency(capped, metrics.clone());
+        for op in 0..3 {
+            q.submit(task(op, 100, |_| Ok(())).with_input(dev.clone()));
+        }
+        q.notify_residency_changed(dev.id());
+        let _ = q.try_pop().unwrap();
+        assert_eq!(
+            metrics.gauge_value("sched.residency_rerank_total"),
+            1,
+            "one rescoring per pass at batch size 1"
+        );
+        // the deferred remainder is processed by the next pop
+        let _ = q.try_pop().unwrap();
+        assert!(metrics.gauge_value("sched.residency_rerank_total") >= 2);
+    }
+
+    #[test]
+    fn residency_bonus_score_bounds() {
+        let b = bonus();
+        let hot = crate::memory::ResidencySnapshot { device_bytes: 100, ..Default::default() };
+        let cold = crate::memory::ResidencySnapshot { spilled_bytes: 100, ..Default::default() };
+        assert_eq!(b.score(&hot, 0), 50);
+        assert_eq!(b.score(&hot, 7), 50, "hot score is age-invariant");
+        assert_eq!(b.score(&cold, 0), -200);
+        // decays monotonically toward (and never past) the device bonus
+        let mut last = -200;
+        for age in 1..12 {
+            let s = b.score(&cold, age);
+            assert!(s >= last && s <= 50, "age {age}: {s}");
+            last = s;
+        }
+        assert_eq!(last, 50);
+        // empty inputs are neutral-hot (nothing can stall)
+        assert_eq!(b.score(&crate::memory::ResidencySnapshot::default(), 0), 50);
     }
 
     #[test]

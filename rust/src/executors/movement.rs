@@ -30,6 +30,12 @@
 //! directions and **both** tier pairs (the seed's `spill_host_for`
 //! ignored priorities entirely). A holder never appears as victim and
 //! beneficiary in the same round, so the two directions cannot thrash.
+//!
+//! The loop is closed in both directions (§3.3.1): `op_priorities`
+//! steers movement by compute intent, and every *completed* promotion
+//! or demotion raises a `ResidencyChanged` notification
+//! ([`TaskQueue::notify_residency_changed`]) so the compute queue
+//! re-ranks tasks whose input holders just moved tiers.
 
 use std::collections::{BinaryHeap, HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -105,6 +111,15 @@ impl HolderRegistry {
         let mut total = 0;
         self.for_each(|_, h| total += h.stats().host_bytes);
         total
+    }
+
+    /// Aggregate residency across every registered holder (atomic reads
+    /// under one lock — the worker-level view of where query data
+    /// currently lives).
+    pub fn residency(&self) -> crate::memory::ResidencySnapshot {
+        let mut snap = crate::memory::ResidencySnapshot::default();
+        self.for_each(|_, h| snap.merge(&h.residency()));
+        snap
     }
 }
 
@@ -577,6 +592,9 @@ impl DataMovementExecutor {
                 // Deliver the wakeup blocked reservations are parked on.
                 self.governor.notify_freed();
             }
+            // ResidencyChanged: queued tasks reading this holder re-rank
+            // lazily (their inputs just got colder).
+            self.queue.notify_residency_changed(mv.holder.id());
         }
         // A victim drained out from under its budget (a compute task
         // popped its batches between plan and execution): hand the
@@ -596,29 +614,36 @@ impl DataMovementExecutor {
     }
 
     fn run_promote(&self, mv: &MovementTask) {
+        let mut moved = false;
         for _ in 0..mv.budget {
             if self.env.arena.utilization() > self.cfg.promote_watermark {
-                return; // device pressure returned: stop staging
+                break; // device pressure returned: stop staging
             }
             // A dry pinned pool means further promotions land in
             // unbounded pageable memory — stop and let host pressure
             // (already raised by the pool) demote first.
             if let Some(pool) = &self.env.pinned {
                 if pool.free_buffers() == 0 {
-                    return;
+                    break;
                 }
             }
             match mv.holder.promote_one() {
                 Ok(true) => {
+                    moved = true;
                     self.promotions.fetch_add(1, Ordering::Relaxed);
                     self.metrics.counter("movement.promotions").inc();
                 }
-                Ok(false) => return,
+                Ok(false) => break,
                 Err(e) => {
                     log::debug!("promote: {e}");
-                    return;
+                    break;
                 }
             }
+        }
+        if moved {
+            // ResidencyChanged: the beneficiary's queued tasks re-rank
+            // upward (their inputs just got hotter).
+            self.queue.notify_residency_changed(mv.holder.id());
         }
     }
 
@@ -880,6 +905,66 @@ mod tests {
             rows += db.rows();
         }
         assert_eq!(rows, BATCHES * 200, "rows lost under contention");
+    }
+
+    #[test]
+    fn completed_demotion_reranks_queued_tasks() {
+        use crate::executors::compute::ResidencyBonus;
+        let env = MemEnv::test(1 << 20);
+        let reg = HolderRegistry::new();
+        let metrics = Arc::new(Metrics::default());
+        let bonus =
+            ResidencyBonus { device_bonus: 50, spilled_penalty: 200, rerank_batch: 16 };
+        let queue = TaskQueue::with_residency(bonus, metrics.clone());
+        let cold = BatchHolder::new("cold", env.clone());
+        let hot = BatchHolder::new("hot", env.clone());
+        reg.register(2, cold.clone()); // only the cold holder is a victim
+        cold.push_batch(batch(400)).unwrap();
+        hot.push_batch(batch(400)).unwrap();
+
+        // Both device-resident at submit: FIFO would run `cold` first.
+        queue.submit(
+            Task::new(2, 10, Arc::new(|_| Ok(()))).with_input(cold.clone()),
+        );
+        queue.submit(Task::new(1, 10, Arc::new(|_| Ok(()))).with_input(hot.clone()));
+
+        let governor = MemoryGovernor::new(env.arena.clone());
+        let cfg = MovementConfig { spill_watermark: 1.0, ..Default::default() };
+        let ex = DataMovementExecutor::start(
+            reg.clone(),
+            env.clone(),
+            governor,
+            queue.clone(),
+            cfg,
+            Arc::new(Metrics::default()),
+        );
+        // synchronous demotion completes and raises ResidencyChanged
+        assert!(ex.demote_for(100) > 0);
+        assert_eq!(cold.stats().device_batches, 0);
+
+        let first = queue.try_pop().unwrap();
+        assert_eq!(first.op, 1, "re-rank must run the hot-input task first");
+        assert_eq!(queue.try_pop().unwrap().op, 2);
+        assert!(metrics.gauge_value("sched.residency_rerank_total") > 0);
+        assert!(metrics.gauge_value("sched.spill_stall_avoided") > 0);
+        ex.stop();
+    }
+
+    #[test]
+    fn registry_residency_aggregates_holders() {
+        let env = MemEnv::test(1 << 20);
+        let reg = HolderRegistry::new();
+        let a = BatchHolder::new("a", env.clone());
+        let b = BatchHolder::new("b", env.clone());
+        reg.register(0, a.clone());
+        reg.register(1, b.clone());
+        a.push_batch(batch(100)).unwrap();
+        b.push_batch_host(batch(100)).unwrap();
+        b.spill_host_one().unwrap();
+        let snap = reg.residency();
+        assert_eq!(snap.device_bytes, a.residency().device_bytes);
+        assert_eq!(snap.spilled_bytes, b.residency().spilled_bytes);
+        assert!(snap.device_bytes > 0 && snap.spilled_bytes > 0);
     }
 
     #[test]

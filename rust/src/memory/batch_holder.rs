@@ -128,6 +128,15 @@ impl Slot {
         }
     }
 
+    fn class(&self) -> ResidencyClass {
+        match self {
+            Slot::Device(_) => ResidencyClass::Device,
+            Slot::HostPinned(_) => ResidencyClass::HostPinned,
+            Slot::HostPageable(_) => ResidencyClass::HostHeap,
+            Slot::Disk(_) => ResidencyClass::Spilled,
+        }
+    }
+
     fn bytes(&self) -> usize {
         match self {
             Slot::Device(b) => b.byte_size(),
@@ -135,6 +144,77 @@ impl Slot {
             Slot::HostPageable(v) => v.len(),
             Slot::Disk(s) => s.len as usize,
         }
+    }
+}
+
+/// Where a holder's bytes live, at scheduler granularity — finer than
+/// [`Tier`]: the host tier splits into pinned-pool and pageable-heap
+/// bytes, which promote to device at very different speeds (§3.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResidencyClass {
+    Device,
+    HostPinned,
+    HostHeap,
+    Spilled,
+}
+
+const NUM_CLASSES: usize = 4;
+
+fn class_idx(c: ResidencyClass) -> usize {
+    match c {
+        ResidencyClass::Device => 0,
+        ResidencyClass::HostPinned => 1,
+        ResidencyClass::HostHeap => 2,
+        ResidencyClass::Spilled => 3,
+    }
+}
+
+/// Cheap per-holder residency snapshot: byte totals per class, read
+/// from the holder's atomic accounting (no slots lock, no clones). The
+/// Compute Executor's residency-aware priority reads one of these per
+/// task input (§3.3.1: priorities consider "the memory tier that the
+/// input data resides in").
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResidencySnapshot {
+    pub device_bytes: usize,
+    pub host_pinned_bytes: usize,
+    pub host_heap_bytes: usize,
+    pub spilled_bytes: usize,
+}
+
+impl ResidencySnapshot {
+    pub fn total_bytes(&self) -> usize {
+        self.device_bytes + self.host_pinned_bytes + self.host_heap_bytes + self.spilled_bytes
+    }
+
+    /// Fraction of bytes already on device (1.0 for an empty holder:
+    /// nothing needs moving, so nothing can stall).
+    pub fn device_frac(&self) -> f64 {
+        let total = self.total_bytes();
+        if total == 0 {
+            1.0
+        } else {
+            self.device_bytes as f64 / total as f64
+        }
+    }
+
+    /// Fraction of bytes that must come back from disk before a
+    /// consumer runs at device speed.
+    pub fn spilled_frac(&self) -> f64 {
+        let total = self.total_bytes();
+        if total == 0 {
+            0.0
+        } else {
+            self.spilled_bytes as f64 / total as f64
+        }
+    }
+
+    /// Accumulate another holder's snapshot (multi-input tasks).
+    pub fn merge(&mut self, other: &ResidencySnapshot) {
+        self.device_bytes += other.device_bytes;
+        self.host_pinned_bytes += other.host_pinned_bytes;
+        self.host_heap_bytes += other.host_heap_bytes;
+        self.spilled_bytes += other.spilled_bytes;
     }
 }
 
@@ -169,11 +249,13 @@ struct Inner {
     name: String,
     env: MemEnv,
     slots: Mutex<VecDeque<Slot>>,
-    /// Per-tier occupancy kept in atomics so [`BatchHolder::stats`] and
-    /// the movement plane's victim scans never take the slots lock (the
-    /// seed cloned every holder per monitor pass).
-    tier_batches: [AtomicU64; 3],
-    tier_bytes: [AtomicU64; 3],
+    /// Per-residency-class occupancy kept in atomics so
+    /// [`BatchHolder::stats`], [`BatchHolder::residency`], and the
+    /// movement plane's victim scans never take the slots lock (the
+    /// seed cloned every holder per monitor pass). Indexed by
+    /// [`class_idx`]; tier-level views sum pinned + heap for host.
+    class_batches: [AtomicU64; NUM_CLASSES],
+    class_bytes: [AtomicU64; NUM_CLASSES],
     /// Upstream has promised no more pushes.
     finished: AtomicBool,
     /// Lifetime totals (exchange size estimation input, §3.2).
@@ -183,25 +265,17 @@ struct Inner {
     promotions: AtomicU64,
 }
 
-fn tier_idx(t: Tier) -> usize {
-    match t {
-        Tier::Device => 0,
-        Tier::Host => 1,
-        Tier::Disk => 2,
-    }
-}
-
 impl Inner {
-    fn account_add(&self, tier: Tier, bytes: usize) {
-        let i = tier_idx(tier);
-        self.tier_batches[i].fetch_add(1, Ordering::Relaxed);
-        self.tier_bytes[i].fetch_add(bytes as u64, Ordering::Relaxed);
+    fn account_add(&self, class: ResidencyClass, bytes: usize) {
+        let i = class_idx(class);
+        self.class_batches[i].fetch_add(1, Ordering::Relaxed);
+        self.class_bytes[i].fetch_add(bytes as u64, Ordering::Relaxed);
     }
 
-    fn account_sub(&self, tier: Tier, bytes: usize) {
-        let i = tier_idx(tier);
-        self.tier_batches[i].fetch_sub(1, Ordering::Relaxed);
-        self.tier_bytes[i].fetch_sub(bytes as u64, Ordering::Relaxed);
+    fn account_sub(&self, class: ResidencyClass, bytes: usize) {
+        let i = class_idx(class);
+        self.class_batches[i].fetch_sub(1, Ordering::Relaxed);
+        self.class_bytes[i].fetch_sub(bytes as u64, Ordering::Relaxed);
     }
 }
 
@@ -212,8 +286,8 @@ impl BatchHolder {
                 name: name.into(),
                 env,
                 slots: Mutex::new(VecDeque::new()),
-                tier_batches: Default::default(),
-                tier_bytes: Default::default(),
+                class_batches: Default::default(),
+                class_bytes: Default::default(),
                 finished: AtomicBool::new(false),
                 pushed_batches: AtomicU64::new(0),
                 pushed_bytes: AtomicU64::new(0),
@@ -309,7 +383,7 @@ impl BatchHolder {
     fn store(&self, slot: Slot, charged: bool) -> Result<Tier> {
         let tier = slot.tier();
         let _ = charged;
-        self.inner.account_add(tier, slot.bytes());
+        self.inner.account_add(slot.class(), slot.bytes());
         self.inner.slots.lock().unwrap().push_back(slot);
         Ok(tier)
     }
@@ -335,13 +409,13 @@ impl BatchHolder {
             Some(s) => s,
             None => return Ok(None),
         };
-        self.inner.account_sub(slot.tier(), slot.bytes());
+        self.inner.account_sub(slot.class(), slot.bytes());
         match self.materialize_device(slot) {
             Ok(db) => Ok(Some(db)),
             Err((Some(slot), e)) => {
                 // Put it back at the front so order is preserved; the
                 // compute executor treats the OOM as retryable.
-                self.inner.account_add(slot.tier(), slot.bytes());
+                self.inner.account_add(slot.class(), slot.bytes());
                 self.inner.slots.lock().unwrap().push_front(slot);
                 Err(e)
             }
@@ -358,7 +432,7 @@ impl BatchHolder {
             Some(s) => s,
             None => return Ok(None),
         };
-        self.inner.account_sub(slot.tier(), slot.bytes());
+        self.inner.account_sub(slot.class(), slot.bytes());
         let env = &self.inner.env;
         Ok(Some(match slot {
             Slot::Device(db) => {
@@ -467,12 +541,12 @@ impl BatchHolder {
             _ => unreachable!(),
         };
         let freed = db.byte_size();
-        self.inner.account_sub(Tier::Device, freed);
+        self.inner.account_sub(ResidencyClass::Device, freed);
         let bytes = db.batch.encode();
         env.charge_pcie(bytes.len(), env.pinned.is_some());
         drop(db); // release arena accounting before storing host copy
         let new_slot = self.host_slot(bytes)?;
-        self.inner.account_add(new_slot.tier(), new_slot.bytes());
+        self.inner.account_add(new_slot.class(), new_slot.bytes());
         {
             let mut slots = self.inner.slots.lock().unwrap();
             let at = idx.min(slots.len()); // deque may have shrunk concurrently
@@ -502,7 +576,7 @@ impl BatchHolder {
         let (freed, disk_slot) = match slot {
             Slot::HostPinned(s) => {
                 let freed = s.len();
-                self.inner.account_sub(Tier::Host, freed);
+                self.inner.account_sub(ResidencyClass::HostPinned, freed);
                 let disk_slot = match env.spill_codec {
                     Codec::None => {
                         // direct: prelude + slab chunks, each written at
@@ -525,14 +599,14 @@ impl BatchHolder {
             }
             Slot::HostPageable(v) => {
                 let freed = v.len();
-                self.inner.account_sub(Tier::Host, freed);
+                self.inner.account_sub(ResidencyClass::HostHeap, freed);
                 let compressed = env.spill_codec.compress(&v);
                 env.disk.acquire(compressed.len());
                 (freed, env.spill.write(&compressed)?)
             }
             _ => unreachable!(),
         };
-        self.inner.account_add(Tier::Disk, disk_slot.len as usize);
+        self.inner.account_add(ResidencyClass::Spilled, disk_slot.len as usize);
         {
             let mut slots = self.inner.slots.lock().unwrap();
             let at = idx.min(slots.len());
@@ -561,9 +635,9 @@ impl BatchHolder {
             Slot::Disk(s) => s,
             _ => unreachable!(),
         };
-        self.inner.account_sub(Tier::Disk, s.len as usize);
+        self.inner.account_sub(ResidencyClass::Spilled, s.len as usize);
         let new_slot = self.reload_host_slot(s)?;
-        self.inner.account_add(new_slot.tier(), new_slot.bytes());
+        self.inner.account_add(new_slot.class(), new_slot.bytes());
         {
             let mut slots = self.inner.slots.lock().unwrap();
             let at = idx.min(slots.len());
@@ -665,17 +739,33 @@ impl BatchHolder {
 
     /// Per-tier occupancy, read from atomics — no slots lock, no
     /// cloning. This is the movement planner's victim-scan input, read
-    /// once per registered holder on every pressure wake.
+    /// once per registered holder on every pressure wake. The host tier
+    /// sums the pinned and pageable residency classes.
     pub fn stats(&self) -> HolderStats {
-        let b = &self.inner.tier_batches;
-        let y = &self.inner.tier_bytes;
+        let b = &self.inner.class_batches;
+        let y = &self.inner.class_bytes;
         HolderStats {
             device_batches: b[0].load(Ordering::Relaxed) as usize,
             device_bytes: y[0].load(Ordering::Relaxed) as usize,
-            host_batches: b[1].load(Ordering::Relaxed) as usize,
-            host_bytes: y[1].load(Ordering::Relaxed) as usize,
-            disk_batches: b[2].load(Ordering::Relaxed) as usize,
-            disk_bytes: y[2].load(Ordering::Relaxed) as usize,
+            host_batches: (b[1].load(Ordering::Relaxed) + b[2].load(Ordering::Relaxed))
+                as usize,
+            host_bytes: (y[1].load(Ordering::Relaxed) + y[2].load(Ordering::Relaxed))
+                as usize,
+            disk_batches: b[3].load(Ordering::Relaxed) as usize,
+            disk_bytes: y[3].load(Ordering::Relaxed) as usize,
+        }
+    }
+
+    /// Residency snapshot at class granularity — the scheduler-facing
+    /// view (same atomics as [`BatchHolder::stats`], host split into
+    /// pinned and heap). Cheap enough to read per queued task.
+    pub fn residency(&self) -> ResidencySnapshot {
+        let y = &self.inner.class_bytes;
+        ResidencySnapshot {
+            device_bytes: y[0].load(Ordering::Relaxed) as usize,
+            host_pinned_bytes: y[1].load(Ordering::Relaxed) as usize,
+            host_heap_bytes: y[2].load(Ordering::Relaxed) as usize,
+            spilled_bytes: y[3].load(Ordering::Relaxed) as usize,
         }
     }
 }
@@ -939,6 +1029,66 @@ mod tests {
         assert_eq!(st.device_batches, 2);
         assert_eq!(st.host_batches, 1);
         assert!(st.total_bytes() > 0);
+    }
+
+    #[test]
+    fn residency_tracks_the_demotion_chain() {
+        let env = MemEnv::test(1 << 20);
+        let h = BatchHolder::new("t", env.clone());
+        h.push_batch(batch(50)).unwrap();
+        let r = h.residency();
+        assert!(r.device_bytes > 0 && r.total_bytes() == r.device_bytes);
+        assert_eq!(r.device_frac(), 1.0);
+        assert_eq!(r.spilled_frac(), 0.0);
+
+        h.spill_one().unwrap();
+        let r = h.residency();
+        assert_eq!(r.device_bytes, 0);
+        assert!(r.host_pinned_bytes > 0, "test env has a pool: host slot is pinned");
+        assert_eq!(r.host_heap_bytes, 0);
+
+        h.spill_host_one().unwrap();
+        let r = h.residency();
+        assert!(r.spilled_bytes > 0);
+        assert_eq!(r.spilled_frac(), 1.0);
+        assert_eq!(r.device_frac(), 0.0);
+
+        h.promote_one_to_host().unwrap();
+        let r = h.residency();
+        assert_eq!(r.spilled_bytes, 0);
+        assert!(r.host_pinned_bytes > 0);
+
+        // stats() tier view stays consistent with the class view
+        let st = h.stats();
+        assert_eq!(st.host_bytes, r.host_pinned_bytes + r.host_heap_bytes);
+        assert_eq!(st.total_bytes(), r.total_bytes());
+    }
+
+    #[test]
+    fn residency_splits_pinned_from_heap_host_bytes() {
+        // No pool: host pushes land in pageable memory -> HostHeap.
+        let mut env = MemEnv::test(1 << 20);
+        env.pinned = None;
+        let h = BatchHolder::new("t", env);
+        h.push_batch_host(batch(30)).unwrap();
+        let r = h.residency();
+        assert_eq!(r.host_pinned_bytes, 0);
+        assert!(r.host_heap_bytes > 0);
+        assert_eq!(h.stats().host_bytes, r.host_heap_bytes);
+    }
+
+    #[test]
+    fn residency_merge_weighs_by_bytes() {
+        let mut a = ResidencySnapshot { device_bytes: 100, ..Default::default() };
+        let b = ResidencySnapshot { spilled_bytes: 300, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.total_bytes(), 400);
+        assert_eq!(a.device_frac(), 0.25);
+        assert_eq!(a.spilled_frac(), 0.75);
+        // empty snapshot: nothing to move, counts as fully resident
+        let e = ResidencySnapshot::default();
+        assert_eq!(e.device_frac(), 1.0);
+        assert_eq!(e.spilled_frac(), 0.0);
     }
 
     #[test]

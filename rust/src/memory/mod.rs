@@ -28,7 +28,7 @@ pub mod pressure;
 pub mod reservation;
 pub mod spill;
 
-pub use batch_holder::{BatchHolder, HolderStats};
+pub use batch_holder::{BatchHolder, HolderStats, ResidencyClass, ResidencySnapshot};
 pub use device::{DeviceAlloc, DeviceArena};
 pub use pinned::{PinnedBuf, PinnedPool, PinnedSlab, SlabSlice, SlabWriter, StagedBytes};
 pub use pressure::{PressureEvent, PressureSnapshot};

@@ -21,7 +21,7 @@ pub mod tcp;
 
 pub use frame::{Frame, FrameKind, Payload};
 pub use inproc::InprocHub;
-pub use tcp::TcpCluster;
+pub use tcp::{read_frame, TcpCluster};
 
 use std::time::Duration;
 

@@ -164,6 +164,66 @@ impl Read for RetryRead<'_> {
     }
 }
 
+/// Decode one frame from `r` after its 8-byte length prefix (`total` =
+/// header + payload bytes) has been consumed — the receive path shared
+/// by the reader threads and the frame round-trip property tests.
+///
+/// `pool` is queried lazily, and only for Data payloads: control-plane
+/// frames (estimates, plans) are tiny and would waste a whole
+/// fixed-size buffer each, so they stay on the heap without ever
+/// touching the pool source (the reader thread's source takes a lock).
+/// Data payloads land straight in the pool when it is installed and
+/// has room (§3.4 bounce buffers); a dry pool heap-falls-back
+/// ([`PinnedSlab::from_reader`] fails *before* consuming the reader,
+/// so the fallback still reads a whole payload).
+pub fn read_frame(
+    r: &mut impl Read,
+    total: usize,
+    pool: impl FnOnce() -> Option<PinnedPool>,
+) -> Result<Frame> {
+    if total < FRAME_HEADER_LEN {
+        // A malformed length means the framing is lost — there is no
+        // way to resync a length-prefixed stream; the caller must drop
+        // the connection.
+        return Err(Error::Network(format!("bad frame length {total}")));
+    }
+    let mut header = [0u8; FRAME_HEADER_LEN];
+    r.read_exact(&mut header)?;
+    let (kind, src, dst, channel, plen) = Frame::decode_header(&header)?;
+    if plen != total - FRAME_HEADER_LEN {
+        return Err(Error::Network(format!(
+            "payload length {plen} disagrees with frame length {total}"
+        )));
+    }
+    let payload = if plen == 0 {
+        Payload::Heap(Vec::new())
+    } else {
+        let mut staged = None;
+        if kind == FrameKind::Data {
+            if let Some(p) = pool() {
+                match PinnedSlab::from_reader(&p, r, plen) {
+                    Ok(slab) => {
+                        staged = Some(Payload::pinned(Vec::new(), SlabSlice::whole(slab)))
+                    }
+                    // dry pool fails before consuming bytes: heap below
+                    Err(Error::PinnedExhausted { .. }) => {}
+                    // socket died mid-payload: the stream is lost
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+        match staged {
+            Some(p) => p,
+            None => {
+                let mut buf = vec![0u8; plen];
+                r.read_exact(&mut buf)?;
+                Payload::Heap(buf)
+            }
+        }
+    };
+    Ok(Frame { kind, src, dst, channel, payload })
+}
+
 fn reader_loop(mut s: TcpStream, inbox: Arc<Inbox>, stop: Arc<AtomicBool>, pool: Arc<RecvPool>) {
     s.set_read_timeout(Some(Duration::from_millis(200))).ok();
     let mut lenbuf = [0u8; 8];
@@ -175,75 +235,19 @@ fn reader_loop(mut s: TcpStream, inbox: Arc<Inbox>, stop: Arc<AtomicBool>, pool:
             return; // peer closed or shutdown
         }
         let total = u64::from_le_bytes(lenbuf) as usize;
-        if total < FRAME_HEADER_LEN {
-            // A malformed length means the framing is lost — there is
-            // no way to resync a length-prefixed stream, so the
-            // connection must drop. Loudly: a silent return here reads
-            // as an idle peer at the exchange layer.
-            log::warn!("tcp reader: bad frame length {total}, dropping connection");
-            return;
-        }
-        let mut header = [0u8; FRAME_HEADER_LEN];
-        if (RetryRead { s: &mut s, stop: &stop }).read_exact(&mut header).is_err() {
-            return;
-        }
-        let (kind, src, dst, channel, plen) = match Frame::decode_header(&header) {
-            Ok(h) => h,
+        let mut rr = RetryRead { s: &mut s, stop: &stop };
+        let frame = match read_frame(&mut rr, total, || pool.0.lock().unwrap().clone()) {
+            Ok(f) => f,
             Err(e) => {
-                log::warn!("tcp reader: {e}, dropping connection");
+                // Loudly (unless shutting down): a silent return here
+                // reads as an idle peer at the exchange layer.
+                if !stop.load(Ordering::Relaxed) {
+                    log::warn!("tcp reader: {e}, dropping connection");
+                }
                 return;
             }
         };
-        if plen != total - FRAME_HEADER_LEN {
-            log::warn!(
-                "tcp reader: payload length {plen} disagrees with frame length {total}, \
-                 dropping connection"
-            );
-            return;
-        }
-        // Data payloads land straight in the pinned pool when one is
-        // installed and has room (§3.4 bounce buffers); control-plane
-        // payloads (estimates, plans) are tiny and would waste a whole
-        // fixed-size buffer each, so they stay on the heap.
-        let payload = if plen == 0 {
-            Payload::Heap(Vec::new())
-        } else {
-            let installed = if kind == FrameKind::Data {
-                pool.0.lock().unwrap().clone()
-            } else {
-                None
-            };
-            let mut staged = None;
-            if let Some(p) = &installed {
-                let mut rr = RetryRead { s: &mut s, stop: &stop };
-                match PinnedSlab::from_reader(p, &mut rr, plen) {
-                    Ok(slab) => {
-                        staged = Some(Payload::pinned(Vec::new(), SlabSlice::whole(slab)))
-                    }
-                    // dry pool fails before consuming bytes: heap below
-                    Err(Error::PinnedExhausted { .. }) => {}
-                    Err(e) => {
-                        log::warn!("tcp reader: payload read failed: {e}");
-                        return; // socket died mid-payload
-                    }
-                }
-            }
-            match staged {
-                Some(p) => p,
-                None => {
-                    let mut buf = vec![0u8; plen];
-                    if (RetryRead { s: &mut s, stop: &stop }).read_exact(&mut buf).is_err() {
-                        return;
-                    }
-                    Payload::Heap(buf)
-                }
-            }
-        };
-        inbox
-            .q
-            .lock()
-            .unwrap()
-            .push_back(Frame { kind, src, dst, channel, payload });
+        inbox.q.lock().unwrap().push_back(frame);
         inbox.ready.notify_one();
     }
 }

@@ -118,6 +118,19 @@ pub mod gen {
     }
 }
 
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<(A, B)> {
+        let mut out: Vec<(A, B)> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
 impl Shrink for u8 {
     fn shrink(&self) -> Vec<u8> {
         if *self == 0 {
@@ -169,6 +182,14 @@ mod tests {
         let after = msg.split("minimal case:").nth(1).unwrap();
         let count = after.matches(',').count();
         assert!(count <= 1, "not shrunk enough: {after}");
+    }
+
+    #[test]
+    fn shrink_pairs_shrinks_each_side() {
+        let p = (6i64, vec![1u8, 2]);
+        let cands = p.shrink();
+        assert!(cands.iter().any(|(a, b)| *a != 6 && *b == vec![1, 2]));
+        assert!(cands.iter().any(|(a, b)| *a == 6 && b.len() < 2));
     }
 
     #[test]

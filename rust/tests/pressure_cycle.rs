@@ -1,0 +1,337 @@
+//! Deterministic pressure-cycle integration test (residency-aware
+//! scheduling, §3.3.1).
+//!
+//! A small scan→join→agg plan runs through the sim worker twice:
+//!
+//! * a no-pressure baseline — roomy arena, residency bonus table
+//!   zeroed;
+//! * a pressure run — an arena sized to force demotions, the full
+//!   demote→spill→promote chain driven deterministically between pops,
+//!   and the residency bonus table enabled.
+//!
+//! Query results must be byte-identical, and the pressure run must
+//! show at least one residency-driven re-rank
+//! (`sched.residency_rerank_total > 0`).
+//!
+//! The inline harness is single-threaded — fixed RNG seed, fixed poll /
+//! pop / cycle interleaving — so the run is exactly reproducible; a
+//! second test pushes the same plan through the threaded cluster
+//! (executors + movement plane live) to exercise the asynchronous loop
+//! end-to-end.
+
+use std::sync::Arc;
+
+use theseus::cluster::client::connect;
+use theseus::config::WorkerConfig;
+use theseus::exec::plan::{AggFn, AggSpec, OpSpec, PhysicalPlan};
+use theseus::exec::{QueryDag, WorkerCtx};
+use theseus::executors::compute::{ResidencyBonus, TaskQueue};
+use theseus::executors::movement::HolderRegistry;
+use theseus::executors::network::Router;
+use theseus::memory::{BatchHolder, Tier};
+use theseus::metrics::Metrics;
+use theseus::planner::Logical;
+use theseus::sim::SimContext;
+use theseus::storage::compression::Codec;
+use theseus::storage::format::FileWriter;
+use theseus::storage::object_store::{ObjectStore, SimObjectStore};
+use theseus::types::{Column, DType, Field, RecordBatch, Schema};
+use theseus::util::rng::Rng;
+
+const SEED: u64 = 42;
+const KEYS: i64 = 40;
+
+/// Write the fact and dim tables from a fixed seed into `store`.
+fn write_tables(store: &dyn ObjectStore) {
+    let mut rng = Rng::new(SEED);
+    let fact_schema = Schema::new(vec![
+        Field::new("k", DType::Int64),
+        Field::new("v", DType::Float32),
+    ]);
+    for f in 0..2 {
+        let rows = 1500;
+        let batch = RecordBatch::new(vec![
+            Column::i64("k", (0..rows).map(|_| rng.gen_i64(0, KEYS - 1)).collect()),
+            Column::f32("v", (0..rows).map(|_| rng.gen_f32(-100.0, 100.0)).collect()),
+        ])
+        .unwrap();
+        let mut w = FileWriter::new(fact_schema.clone(), Codec::Zstd { level: 1 }, 256);
+        w.write(batch).unwrap();
+        store.put(&format!("fact/{f}.ths"), &w.finish().unwrap()).unwrap();
+    }
+    let dim_schema = Schema::new(vec![
+        Field::new("dk", DType::Int64),
+        Field::new("w", DType::Int64),
+    ]);
+    let batch = RecordBatch::new(vec![
+        Column::i64("dk", (0..KEYS).collect()),
+        Column::i64("w", (0..KEYS).map(|i| i * 7).collect()),
+    ])
+    .unwrap();
+    let mut w = FileWriter::new(dim_schema, Codec::None, 64);
+    w.write(batch).unwrap();
+    store.put("dim/0.ths", &w.finish().unwrap()).unwrap();
+}
+
+/// scan(dim) + scan(fact) → hash join on dk = k → group by dk.
+/// Count/min/max aggregates only: exact in any absorption order, so
+/// results are bitwise comparable across schedules.
+fn plan() -> PhysicalPlan {
+    let mut p = PhysicalPlan::new();
+    let dim = p.add(
+        OpSpec::Scan { table: "dim".into(), cols: vec!["dk".into(), "w".into()], pred: None },
+        vec![],
+    );
+    let fact = p.add(
+        OpSpec::Scan { table: "fact".into(), cols: vec!["k".into(), "v".into()], pred: None },
+        vec![],
+    );
+    let join = p.add(
+        OpSpec::HashJoin { left_on: "dk".into(), right_on: "k".into(), lip: false },
+        vec![dim, fact],
+    );
+    p.add(
+        OpSpec::HashAgg {
+            group_by: "dk".into(),
+            aggs: vec![
+                AggSpec::new(AggFn::Count, "v"),
+                AggSpec::new(AggFn::Min, "v"),
+                AggSpec::new(AggFn::Max, "w"),
+            ],
+        },
+        vec![join],
+    );
+    p
+}
+
+#[derive(Default)]
+struct CycleCounts {
+    demoted: u64,
+    spilled: u64,
+    promoted: u64,
+}
+
+/// Drive one full demote→spill→promote chain on `holder`, raising a
+/// ResidencyChanged notification after every completed move — the
+/// deterministic stand-in for the Data-Movement executor's movers.
+fn force_cycle(holder: &BatchHolder, queue: &TaskQueue, counts: &mut CycleCounts) {
+    if holder.demote_one(Tier::Device).unwrap() > 0 {
+        counts.demoted += 1;
+        queue.notify_residency_changed(holder.id());
+    }
+    if holder.demote_one(Tier::Host).unwrap() > 0 {
+        counts.spilled += 1;
+        queue.notify_residency_changed(holder.id());
+    }
+    if holder.promote_one().unwrap() {
+        counts.promoted += 1;
+        queue.notify_residency_changed(holder.id());
+    }
+}
+
+/// Free device memory the way the movement plane would, so a retryable
+/// OOM pop can succeed: demote device-resident batches until a healthy
+/// amount is free (coldest-holder order not needed for correctness).
+fn free_device(holders: &HolderRegistry, queue: &TaskQueue) {
+    let mut freed = 0usize;
+    loop {
+        let mut victims = Vec::new();
+        holders.for_each(|_, h| {
+            if h.stats().device_batches > 0 {
+                victims.push(h.clone());
+            }
+        });
+        let mut progress = false;
+        for v in victims {
+            let n = v.demote_one(Tier::Device).unwrap();
+            if n > 0 {
+                freed += n;
+                progress = true;
+                queue.notify_residency_changed(v.id());
+            }
+        }
+        if !progress || freed >= 16 << 10 {
+            break;
+        }
+    }
+}
+
+/// Run `plan()` through the inline sim worker. `pressure` enables the
+/// forced movement cycle; the bonus table rides in `bonus`.
+fn run_inline(
+    device_capacity: usize,
+    bonus: ResidencyBonus,
+    pressure: bool,
+    metrics: Arc<Metrics>,
+) -> (RecordBatch, CycleCounts, u64) {
+    let cfg = WorkerConfig {
+        device_capacity,
+        batch_rows: 128,
+        ..WorkerConfig::test()
+    };
+    let ctx = WorkerCtx::test_with(Arc::new(cfg));
+    write_tables(ctx.store.as_ref());
+    let router = Arc::new(Router::new());
+    let holders = HolderRegistry::new();
+    let queue = TaskQueue::with_residency(bonus, metrics.clone());
+    let dag = QueryDag::build(&plan(), &ctx, &router, &holders, 1).unwrap();
+
+    let mut counts = CycleCounts::default();
+    let mut converged = false;
+    for _ in 0..20_000 {
+        let tasks = dag.poll(&ctx).unwrap();
+        // pick the cycle target *before* submitting: an input holder of
+        // a task that is about to sit in the queue, so the re-rank is
+        // guaranteed to see an affected entry
+        let cycle_target = if pressure {
+            tasks
+                .iter()
+                .find(|t| {
+                    t.inputs
+                        .first()
+                        .map(|h| h.stats().device_batches > 0)
+                        .unwrap_or(false)
+                })
+                .map(|t| t.inputs[0].clone())
+        } else {
+            None
+        };
+        for t in tasks {
+            queue.submit(t);
+        }
+        if let Some(h) = cycle_target {
+            force_cycle(&h, &queue, &mut counts);
+        }
+        while let Some(mut task) = queue.try_pop() {
+            match (task.run)(&ctx) {
+                Ok(()) => {}
+                Err(e) if e.is_retryable() && task.attempts < 12 => {
+                    free_device(&holders, &queue);
+                    task.attempts += 1;
+                    queue.submit(task);
+                }
+                Err(e) => panic!("task op {} failed: {e}", task.op),
+            }
+        }
+        if dag.all_done() {
+            converged = true;
+            break;
+        }
+    }
+    assert!(converged, "inline driver did not converge");
+
+    let mut parts = Vec::new();
+    let mut oom_retries = 0;
+    loop {
+        match dag.output.pop_device() {
+            Ok(Some(db)) => parts.push(db.batch.clone()),
+            Ok(None) => break,
+            Err(e) if e.is_retryable() && oom_retries < 12 => {
+                free_device(&holders, &queue);
+                oom_retries += 1;
+            }
+            Err(e) => panic!("draining output: {e}"),
+        }
+    }
+    let demotions = ctx.env.demotions();
+    (RecordBatch::concat(&parts).unwrap(), counts, demotions)
+}
+
+#[test]
+fn pressure_cycle_is_deterministic_and_reranks() {
+    let bonus = ResidencyBonus { device_bonus: 40, spilled_penalty: 160, rerank_batch: 16 };
+
+    // no-pressure baseline: roomy arena, residency ordering off
+    let base_metrics = Arc::new(Metrics::default());
+    let (baseline, _, _) =
+        run_inline(64 << 20, ResidencyBonus::default(), false, base_metrics.clone());
+    assert_eq!(baseline.rows() as i64, KEYS, "every dim key joins");
+    assert_eq!(
+        base_metrics.gauge_value("sched.residency_rerank_total"),
+        0,
+        "zeroed bonus table must never re-rank"
+    );
+
+    // pressure run: ~48 KiB arena + forced demote→spill→promote chains
+    let metrics = Arc::new(Metrics::default());
+    let (result, counts, demotions) = run_inline(48 << 10, bonus, true, metrics.clone());
+
+    // Snapshot the gauges for the CI failure artifact *before* any
+    // assertion can panic — a post-assert write would never run on the
+    // failures it exists to explain.
+    let reranks = metrics.gauge_value("sched.residency_rerank_total");
+    let _ = std::fs::create_dir_all("target");
+    let _ = std::fs::write(
+        "target/pressure_cycle_metrics.txt",
+        format!(
+            "inline pressure run\nreranks: {reranks}\nstall_avoided: {}\ndemoted: {} \
+             spilled: {} promoted: {}\nenv demotions: {demotions}\n\n{}",
+            metrics.gauge_value("sched.spill_stall_avoided"),
+            counts.demoted,
+            counts.spilled,
+            counts.promoted,
+            metrics.snapshot()
+        ),
+    );
+
+    // the full movement cycle actually happened
+    assert!(counts.demoted > 0, "no device→host demotion forced");
+    assert!(counts.spilled > 0, "no host→disk spill forced");
+    assert!(counts.promoted > 0, "no disk→host promotion forced");
+    assert!(demotions > 0, "tiny arena must demote on push");
+
+    // at least one residency-driven re-rank was observed by the queue
+    assert!(reranks > 0, "no residency re-rank despite forced cycles");
+
+    // and the answer is byte-identical to the no-pressure run
+    assert_eq!(
+        result.encode(),
+        baseline.encode(),
+        "pressure run altered the query result"
+    );
+}
+
+/// Same plan through the real threaded cluster: compute, movement,
+/// pre-load, and network executors all live, arena sized to spill. The
+/// asynchronous interleaving varies, but count/min/max results must
+/// still match the roomy run bit-for-bit.
+#[test]
+fn threaded_worker_under_pressure_matches_roomy_run() {
+    let query = || {
+        Logical::scan("dim", &["dk", "w"])
+            .join(Logical::scan("fact", &["k", "v"]), "dk", "k", false)
+            .aggregate(
+                "dk",
+                vec![
+                    AggSpec::new(AggFn::Count, "v"),
+                    AggSpec::new(AggFn::Min, "v"),
+                    AggSpec::new(AggFn::Max, "w"),
+                ],
+            )
+            .sort("dk", false)
+    };
+    let run = |cfg: WorkerConfig| {
+        let store = SimObjectStore::in_memory(&SimContext::test());
+        write_tables(store.as_ref());
+        let client = connect(cfg, store, None).unwrap();
+        client.query(&query()).unwrap()
+    };
+
+    let roomy = run(WorkerConfig { num_workers: 2, ..WorkerConfig::test() });
+    let tight = run(WorkerConfig {
+        num_workers: 2,
+        device_capacity: 48 << 10,
+        spill_watermark: 0.5,
+        residency_bonus_device: 40,
+        residency_penalty_spilled: 160,
+        residency_rerank_batch: 16,
+        ..WorkerConfig::test()
+    });
+    assert!(tight.total_spills() > 0, "48 KiB arena must spill");
+    assert_eq!(roomy.batch.rows() as i64, KEYS);
+    assert_eq!(
+        tight.batch.encode(),
+        roomy.batch.encode(),
+        "spilling run altered the query result"
+    );
+}

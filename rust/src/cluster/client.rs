@@ -87,7 +87,12 @@ impl Cluster {
         let sim = SimContext::new(config.profile.clone(), config.time_scale);
 
         let endpoints: Vec<Arc<dyn Endpoint>> = match config.transport {
-            TransportKind::Tcp => TcpCluster::listen(n, &sim, TransportKind::Tcp)?
+            TransportKind::Tcp => TcpCluster::listen_with_limit(
+                n,
+                &sim,
+                TransportKind::Tcp,
+                config.max_frame_bytes,
+            )?
                 .into_endpoints()
                 .into_iter()
                 .map(|e| Arc::new(e) as Arc<dyn Endpoint>)

@@ -91,12 +91,15 @@ impl Worker {
             };
 
         // ---- network executor. The pinned pool doubles as the network
-        // bounce buffer (§3.4): sends stage/pass slabs for vectored
-        // writes, and the endpoint's readers land payloads in the pool.
+        // bounce buffer (§3.4): sends stage/pass (or compress into)
+        // slabs for vectored writes, the endpoint's readers land
+        // payloads in the pool, and the router decompresses compressed
+        // payloads back into it.
         let outbox = Arc::new(Outbox::new(128));
         let router = Arc::new(Router::new());
         if let Some(pool) = &pinned {
             endpoint.install_recv_pool(pool.clone());
+            router.install_bounce_pool(pool.clone());
         }
         let network = NetworkExecutor::start(
             endpoint,

@@ -126,6 +126,10 @@ pub struct WorkerConfig {
     /// Compress batches before sending (Fig-4 B, E toggles this).
     pub net_compression: Option<Codec>,
     pub transport: TransportKind,
+    /// Reject inbound frames whose length prefix claims more than this
+    /// many bytes (header + payload). Length fields arrive from the
+    /// wire — corrupt or hostile values must not size receive buffers.
+    pub max_frame_bytes: usize,
 
     // ---- pre-load executor (§3.3.3; Fig-4 H, I)
     pub byte_range_preload: bool,
@@ -168,6 +172,7 @@ impl Default for WorkerConfig {
             exchange_estimate_batches: 4,
             net_compression: Some(Codec::Zstd { level: 1 }),
             transport: TransportKind::Inproc,
+            max_frame_bytes: crate::network::frame::DEFAULT_MAX_FRAME_BYTES,
             byte_range_preload: true,
             task_preload: true,
             coalesce_gap: 1 << 20,
@@ -328,6 +333,7 @@ impl WorkerConfig {
         if let Some(v) = get("task_preload") {
             self.task_preload = v.as_bool()?;
         }
+        set_usize!(max_frame_bytes);
         if let Some(v) = get("transport") {
             self.transport = TransportKind::parse(&v.as_str()?)?;
         }
@@ -398,6 +404,13 @@ impl WorkerConfig {
         }
         if self.pinned_pool && (self.pinned_buf_size == 0 || self.pinned_buffers == 0) {
             return Err(Error::Config("pinned pool dimensions must be >= 1".into()));
+        }
+        if self.max_frame_bytes < (1 << 16) {
+            return Err(Error::Config(
+                "max_frame_bytes must be >= 64 KiB (a tighter ceiling would reject \
+                 ordinary batch frames)"
+                    .into(),
+            ));
         }
         Ok(())
     }
@@ -497,6 +510,19 @@ mod tests {
         let mut cfg = WorkerConfig::default();
         cfg.spill_segment_bytes = 0;
         assert!(cfg.validate().is_err());
+        let mut cfg = WorkerConfig::default();
+        cfg.max_frame_bytes = 1024;
+        assert!(cfg.validate().is_err(), "frame ceiling below 64 KiB rejected");
+    }
+
+    #[test]
+    fn max_frame_bytes_defaults_and_overrides() {
+        let cfg = WorkerConfig::default();
+        assert_eq!(cfg.max_frame_bytes, crate::network::frame::DEFAULT_MAX_FRAME_BYTES);
+        let doc = TomlLite::parse("max_frame_bytes = 1048576\n").unwrap();
+        let mut cfg = WorkerConfig::default();
+        cfg.apply(&doc).unwrap();
+        assert_eq!(cfg.max_frame_bytes, 1 << 20);
     }
 
     #[test]

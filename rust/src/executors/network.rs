@@ -17,6 +17,17 @@
 //! through the same bounce pool at frame-build time. Inbound payloads
 //! arrive slab-backed from the TCP reader and are handed to the
 //! destination holder's host tier as-is — one pool, end to end.
+//!
+//! Compression is slab-native in both directions: a codec-enabled send
+//! compresses the outbound chunks *straight into* a `SlabWriter`
+//! ([`Codec::compress_chunks_into`] — no compress-to-`Vec`-then-copy
+//! double hop), and a compressed receive decompresses the payload's
+//! slab chunks straight into a fresh slab
+//! ([`Codec::decompress_slices_into`] via the router's bounce pool),
+//! which the destination holder then adopts without copying. Either
+//! side falls back to the heap when the pool is dry — counted by the
+//! `codec.heap_fallback_bytes` gauge — so exhaustion degrades
+//! throughput, never correctness.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -62,6 +73,11 @@ pub struct Outbox {
     capacity: usize,
     closed: AtomicBool,
     pushed: AtomicU64,
+    /// Messages popped by sender lanes but not yet fully sent (still
+    /// compressing or on the socket). Incremented under the queue lock
+    /// at pop time, so an emptiness check can never race past a message
+    /// that left the queue but hasn't hit the wire.
+    in_flight: AtomicUsize,
 }
 
 impl Outbox {
@@ -73,6 +89,7 @@ impl Outbox {
             capacity: capacity.max(1),
             closed: AtomicBool::new(false),
             pushed: AtomicU64::new(0),
+            in_flight: AtomicUsize::new(0),
         }
     }
 
@@ -131,6 +148,10 @@ impl Outbox {
         loop {
             if let Some(pos) = q.iter().position(|m| m.dst() % lanes == lane) {
                 let m = q.remove(pos).unwrap();
+                // count before releasing the lock: is_idle() holds the
+                // same lock, so it sees either the queued message or
+                // the in-flight count — never the gap between them
+                self.in_flight.fetch_add(1, Ordering::SeqCst);
                 drop(q);
                 self.not_full.notify_one();
                 return Some(m);
@@ -142,6 +163,24 @@ impl Outbox {
             let (guard, _) = self.not_empty.wait_timeout(q, deadline - now).unwrap();
             q = guard;
         }
+    }
+
+    /// A sender lane finished (or failed) the message it popped.
+    fn done_sending(&self) {
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Messages popped by lanes and still being compressed/sent.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Nothing queued *and* nothing in flight inside a sender lane —
+    /// the condition `flush` waits for. An empty queue alone is not
+    /// enough: a popped message may still be compressing or mid-send.
+    pub fn is_idle(&self) -> bool {
+        let q = self.q.lock().unwrap();
+        q.is_empty() && self.in_flight.load(Ordering::SeqCst) == 0
     }
 
     pub fn len(&self) -> usize {
@@ -221,6 +260,9 @@ pub struct Router {
     control: Mutex<VecDeque<Frame>>,
     control_ready: Condvar,
     dropped: AtomicU64,
+    /// §3.4 bounce pool: compressed payloads decompress straight into
+    /// it (installed at worker bring-up; `None` decompresses to heap).
+    bounce: RwLock<Option<PinnedPool>>,
 }
 
 /// Max buffered early frames per channel (beyond this something is
@@ -245,9 +287,26 @@ impl Router {
         }
     }
 
+    /// Hand the router the worker's pinned pool so compressed payloads
+    /// decompress straight into it (§3.4: one pool, end to end).
+    pub fn install_bounce_pool(&self, pool: PinnedPool) {
+        *self.bounce.write().unwrap() = Some(pool);
+    }
+
     pub fn unregister(&self, channel: u32) {
         self.channels.write().unwrap().remove(&channel);
-        self.pending.lock().unwrap().remove(&channel);
+        // Buffered early frames for the channel die here — that is data
+        // loss, so it must move the `dropped` gauge (and say so), not
+        // vanish silently.
+        if let Some(frames) = self.pending.lock().unwrap().remove(&channel) {
+            if !frames.is_empty() {
+                self.dropped.fetch_add(frames.len() as u64, Ordering::Relaxed);
+                log::warn!(
+                    "unregister channel {channel}: dropped {} buffered early frame(s)",
+                    frames.len()
+                );
+            }
+        }
     }
 
     pub fn channel(&self, channel: u32) -> Option<Arc<ChannelRx>> {
@@ -285,7 +344,8 @@ impl Router {
                 };
                 match kind {
                     FrameKind::Data => {
-                        let decoded = unframe_payload(frame.payload)?;
+                        let pool = self.bounce.read().unwrap().clone();
+                        let decoded = unframe_payload(frame.payload, pool.as_ref())?;
                         rx.holder.push_host_bytes(decoded)?;
                         Ok(())
                     }
@@ -333,8 +393,12 @@ impl Router {
 /// * No compression + heap bytes: staged once into the bounce pool (the
 ///   copy the old `encode()` path paid anyway, now into pinned memory);
 ///   heap framing when the pool is dry or absent.
-/// * Real codec: the compressor reads the slab chunks directly and its
-///   output is staged into the pool for the pinned send.
+/// * Real codec: the compressor streams the slab chunks straight into
+///   a `SlabWriter` — one staged copy, no intermediate heap `Vec`.
+///   Pool-resident input makes that an intra-pool transform, which the
+///   writer keeps out of `bounce_bytes` (the bytes were counted when
+///   they entered the pool); a dry pool falls back to a heap-compressed
+///   payload and moves `codec.heap_fallback_bytes`.
 fn build_data_payload(
     encoded: StagedBytes,
     codec: Codec,
@@ -363,21 +427,44 @@ fn build_data_payload(
             }
         }
         codec => {
-            let compressed = codec.compress_chunks(&encoded.chunks());
-            match bounce.and_then(|pool| crate::memory::PinnedSlab::write(pool, &compressed).ok())
-            {
-                Some(slab) => Payload::pinned(Vec::new(), SlabSlice::whole(slab)),
-                None => Payload::Heap(compressed),
+            let chunks = encoded.chunks();
+            if let Some(pool) = bounce {
+                let mut w = SlabWriter::new(pool).count_bounce(!encoded.is_pinned());
+                match codec.compress_chunks_into(&chunks, &mut w) {
+                    Ok(_) => {
+                        return Payload::pinned(Vec::new(), SlabSlice::whole(w.finish()))
+                    }
+                    // pool ran dry mid-compress (surfaces as the slab
+                    // writer's OutOfMemory io error): discard the
+                    // partial slab (buffers return on drop) and redo on
+                    // heap. Heap compression is infallible, so any
+                    // *other* error still degrades to a correct
+                    // payload — but loudly, it isn't pool pressure.
+                    Err(e) => {
+                        let dry = matches!(
+                            &e,
+                            Error::Io(io) if io.kind() == std::io::ErrorKind::OutOfMemory
+                        ) || matches!(&e, Error::PinnedExhausted { .. });
+                        if !dry {
+                            log::warn!("slab compression failed ({e}); heap fallback");
+                        }
+                        pool.note_codec_fallback(encoded.len());
+                    }
+                }
             }
+            Payload::Heap(codec.compress_chunks(&chunks))
         }
     }
 }
 
 /// Strip the codec framing off a received data payload, preserving the
-/// slab backing whenever the bytes are uncompressed: the holder then
-/// stores the very buffers the socket read into (or, on the in-proc
-/// fabric, the very buffers the *sender's* holder held).
-fn unframe_payload(payload: Payload) -> Result<StagedBytes> {
+/// slab backing wherever possible: uncompressed slab payloads hand the
+/// very buffers the socket read into (or, on the in-proc fabric, the
+/// buffers the *sender's* holder held) to the destination holder;
+/// compressed payloads decompress from their slab chunks straight into
+/// a fresh slab from `bounce` ([`Codec::decompress_slices_into`]),
+/// falling back to the heap — counted — when the pool is dry or absent.
+fn unframe_payload(payload: Payload, bounce: Option<&PinnedPool>) -> Result<StagedBytes> {
     match payload {
         Payload::Heap(mut v) => {
             let (codec, orig) = Codec::parse_prelude(&v)?;
@@ -391,7 +478,9 @@ fn unframe_payload(payload: Payload) -> Result<StagedBytes> {
                 v.drain(..PRELUDE_LEN); // in-place shift, no realloc
                 return Ok(StagedBytes::Heap(v));
             }
-            Ok(StagedBytes::Heap(Codec::decompress(&v)?))
+            // heap payload (pool was dry at wire-read time, or sender
+            // fell back): decompressing is a fresh staging copy
+            decompress_staged(&[v.as_slice()], orig, false, bounce)
         }
         Payload::Pinned { prelude, body } => {
             if prelude.len() == PRELUDE_LEN {
@@ -400,10 +489,11 @@ fn unframe_payload(payload: Payload) -> Result<StagedBytes> {
                 if matches!(codec, Codec::None) && body.len() == orig {
                     return Ok(StagedBytes::Pinned(body)); // zero-copy handover
                 }
-                let mut full = Vec::with_capacity(PRELUDE_LEN + body.len());
-                full.extend_from_slice(&prelude);
-                full.extend_from_slice(&body.contiguous());
-                return Ok(StagedBytes::Heap(Codec::decompress(&full)?));
+                let body_chunks = body.chunks();
+                let mut chunks: Vec<&[u8]> = Vec::with_capacity(1 + body_chunks.len());
+                chunks.push(prelude.as_slice());
+                chunks.extend(body_chunks);
+                return decompress_staged(&chunks, orig, true, bounce);
             }
             if prelude.is_empty() {
                 // receive path: the whole framed payload is in the slab
@@ -416,7 +506,7 @@ fn unframe_payload(payload: Payload) -> Result<StagedBytes> {
                     // slice the prelude off — the batch bytes stay pinned
                     return Ok(StagedBytes::Pinned(body.slice(PRELUDE_LEN, orig)));
                 }
-                return Ok(StagedBytes::Heap(Codec::decompress(&body.contiguous())?));
+                return decompress_staged(&body.chunks(), orig, true, bounce);
             }
             Err(Error::Network(format!(
                 "malformed pinned payload: {}-byte prelude",
@@ -424,6 +514,57 @@ fn unframe_payload(payload: Payload) -> Result<StagedBytes> {
             )))
         }
     }
+}
+
+/// Decompress a framed payload (as vectored chunks claiming `orig`
+/// output bytes) into the bounce pool, heap-falling-back when the pool
+/// is dry or absent. `input_pinned` tells the bounce accounting whether
+/// this is an intra-pool transform (wire bytes already staged) or a
+/// fresh staging copy.
+fn decompress_staged(
+    chunks: &[&[u8]],
+    orig: usize,
+    input_pinned: bool,
+    bounce: Option<&PinnedPool>,
+) -> Result<StagedBytes> {
+    if let Some(pool) = bounce {
+        match SlabWriter::with_capacity(pool, orig) {
+            Ok(w) => {
+                let mut w = w.count_bounce(!input_pinned);
+                let claimed = Codec::decompress_slices_into(chunks, &mut w)?;
+                if w.len() != claimed {
+                    return Err(Error::Format(format!(
+                        "decompressed payload length mismatch: {} vs {claimed}",
+                        w.len()
+                    )));
+                }
+                return Ok(StagedBytes::Pinned(SlabSlice::whole(w.finish())));
+            }
+            // dry (or orig over-claims the whole pool): heap below.
+            // `orig` is a wire-supplied claim — record the fallback
+            // with a pool-bounded value so a corrupt frame's huge
+            // claim cannot poison the gauge (the reservation itself is
+            // already safe: an over-pool claim is refused without
+            // raising pressure).
+            Err(Error::PinnedExhausted { .. }) => {
+                let pool_cap = pool.buf_size() * pool.total_buffers();
+                pool.note_codec_fallback(orig.min(pool_cap));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    let input: usize = chunks.iter().map(|c| c.len()).sum();
+    // speculative prealloc only — `orig` is an untrusted claim
+    let mut out =
+        Vec::with_capacity(crate::storage::compression::clamp_prealloc(orig, input));
+    let claimed = Codec::decompress_slices_into(chunks, &mut out)?;
+    if out.len() != claimed {
+        return Err(Error::Format(format!(
+            "decompressed payload length mismatch: {} vs {claimed}",
+            out.len()
+        )));
+    }
+    Ok(StagedBytes::Heap(out))
 }
 
 /// The executor: sender lanes + one receiver thread.
@@ -511,6 +652,9 @@ impl NetworkExecutor {
                             if let Err(e) = endpoint.send(frame) {
                                 log::warn!("netsend: {e}");
                             }
+                            // after the send (or its failure) completes:
+                            // flush() may now consider this message done
+                            outbox.done_sending();
                         }
                     })
                     .expect("spawn netsend"),
@@ -564,11 +708,15 @@ impl NetworkExecutor {
         Duration::from_nanos(self.compress_ns.load(Ordering::Relaxed))
     }
 
-    /// Wait until the outbox drains (query epilogue), then keep threads
-    /// running for the next query.
+    /// Wait until the outbox drains *and* every popped message has left
+    /// the sender lanes (query epilogue), then keep threads running for
+    /// the next query. An empty queue alone is not enough — a message
+    /// popped by a lane may still be compressing or mid-send, so
+    /// returning on emptiness would race callers that read send-side
+    /// state (metrics, peers' inboxes) right after flushing.
     pub fn flush(&self, timeout: Duration) -> bool {
         let deadline = std::time::Instant::now() + timeout;
-        while !self.outbox.is_empty() {
+        while !self.outbox.is_idle() {
             if std::time::Instant::now() >= deadline {
                 return false;
             }
@@ -697,6 +845,88 @@ mod tests {
     }
 
     #[test]
+    fn compressed_exchange_keeps_bytes_in_the_pool() {
+        // Codec-enabled exchange over the bounce pool: the send
+        // compresses straight into a slab (one staged copy — the
+        // compressed bytes), the receive decompresses into a slab as an
+        // intra-pool transform (uncounted), and the holder adopts that
+        // slab. Net: bounce_bytes moves by at most one (compressed)
+        // payload for the whole round trip.
+        for codec in [Codec::Zstd { level: 1 }, Codec::Lz4Like] {
+            let pool = PinnedPool::new(4 << 10, 64).unwrap();
+            let (exes, routers) = two_workers_with(Some(codec), Some(pool.clone()));
+            routers[1].install_bounce_pool(pool.clone());
+            let env = crate::memory::batch_holder::MemEnv {
+                pinned: Some(pool.clone()),
+                ..crate::memory::batch_holder::MemEnv::test(1 << 20)
+            };
+            let holder = BatchHolder::new("rx", env);
+            routers[1].register(7, Arc::new(ChannelRx::new(holder.clone(), 1)));
+
+            // compressible batch, well over one pool buffer when decoded
+            let b = RecordBatch::new(vec![Column::i64("k", vec![42; 4096])]).unwrap();
+            let orig = b.encode().len() as u64;
+            exes[0].outbox().send_batch(1, 7, &b).unwrap();
+            exes[0].outbox().send_finish(1, 7).unwrap();
+            let deadline = std::time::Instant::now() + Duration::from_secs(2);
+            while !holder.is_finished() && std::time::Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            assert!(holder.is_finished(), "{}", codec.name());
+
+            let staged = pool.bounce_bytes();
+            assert!(staged > 0, "{}: send must stage into the pool", codec.name());
+            assert!(
+                staged < orig,
+                "{}: only the compressed bytes may count — decompression is an \
+                 intra-pool transform, not a second bounce ({staged} vs {orig})",
+                codec.name()
+            );
+            assert_eq!(
+                pool.codec_heap_fallback_bytes(),
+                0,
+                "{}: a roomy pool must not fall back",
+                codec.name()
+            );
+            // the decompressed payload landed pinned and was adopted
+            assert_eq!(holder.residency().host_pinned_bytes, orig as usize);
+            let got = holder.pop_device().unwrap().unwrap();
+            assert_eq!(got.batch, b, "{}", codec.name());
+            for e in &exes {
+                e.stop();
+            }
+        }
+    }
+
+    #[test]
+    fn compressed_exchange_survives_a_dry_pool() {
+        // Pool too small for anything: both directions heap-fall-back,
+        // the gauge records it, and the bytes still arrive intact.
+        let pool = PinnedPool::new(64, 1).unwrap();
+        let _hold = pool.try_acquire().unwrap(); // keep it dry
+        let (exes, routers) = two_workers_with(Some(Codec::Lz4Like), Some(pool.clone()));
+        routers[1].install_bounce_pool(pool.clone());
+        let holder = BatchHolder::new("rx", MemEnv::test(1 << 20));
+        routers[1].register(3, Arc::new(ChannelRx::new(holder.clone(), 1)));
+        let b = batch(300);
+        exes[0].outbox().send_batch(1, 3, &b).unwrap();
+        exes[0].outbox().send_finish(1, 3).unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while !holder.is_finished() && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(holder.is_finished());
+        assert!(
+            pool.codec_heap_fallback_bytes() > 0,
+            "dry-pool operation must be visible on the gauge"
+        );
+        assert_eq!(holder.pop_device().unwrap().unwrap().batch, b);
+        for e in &exes {
+            e.stop();
+        }
+    }
+
+    #[test]
     fn finish_requires_all_senders() {
         let (exes, routers) = two_workers(None);
         let holder = BatchHolder::new("rx", MemEnv::test(1 << 20));
@@ -746,8 +976,9 @@ mod tests {
         // compressible batch
         let b = RecordBatch::new(vec![Column::i64("k", vec![42; 8192])]).unwrap();
         exes[0].outbox().send_batch(1, 1, &b).unwrap();
+        // flush returns only once in-flight sends completed, so the
+        // metrics are final here — no settling sleep needed
         assert!(exes[0].flush(Duration::from_secs(2)));
-        std::thread::sleep(Duration::from_millis(50));
         let (pre, wire) = exes[0].compression_ratio_inputs();
         assert!(wire < pre / 4, "compression ineffective: {wire} vs {pre}");
         assert!(exes[0].compress_time() > Duration::ZERO);
@@ -796,5 +1027,56 @@ mod tests {
         assert!(!h.is_finished(), "push should block while full");
         outbox.pop_for_lane(0, 1, Duration::from_millis(10)).unwrap();
         assert!(h.join().unwrap());
+    }
+
+    #[test]
+    fn outbox_idle_tracks_in_flight_sends() {
+        // The flush() contract: a popped-but-unsent message keeps the
+        // outbox non-idle even though the queue is empty (the race the
+        // old emptiness-only flush lost).
+        let outbox = Outbox::new(4);
+        assert!(outbox.is_idle());
+        outbox.send_finish(0, 0).unwrap();
+        assert!(!outbox.is_idle(), "queued message");
+        let m = outbox.pop_for_lane(0, 1, Duration::from_millis(10)).unwrap();
+        assert!(outbox.is_empty(), "queue drained");
+        assert_eq!(outbox.in_flight(), 1);
+        assert!(!outbox.is_idle(), "popped message is still in flight");
+        drop(m);
+        outbox.done_sending();
+        assert!(outbox.is_idle(), "send completed");
+    }
+
+    #[test]
+    fn unregister_counts_dropped_early_frames() {
+        // Buffered early frames discarded by unregister are data loss
+        // and must move the `dropped` gauge.
+        let (exes, routers) = two_workers(None);
+        exes[0].outbox().send_batch(1, 777, &batch(3)).unwrap();
+        exes[0].outbox().send_estimate(1, 777, 99).unwrap();
+        assert!(exes[0].flush(Duration::from_secs(2)));
+        assert_eq!(routers[1].dropped(), 0, "buffering alone must not count");
+        // flush only covers the send side; the receiver thread may not
+        // have routed both frames into the pending buffer yet — keep
+        // unregistering until both discards are counted (late arrivals
+        // re-buffer on the unregistered channel and are counted by the
+        // next unregister)
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        routers[1].unregister(777);
+        while routers[1].dropped() < 2 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+            routers[1].unregister(777);
+        }
+        assert_eq!(
+            routers[1].dropped(),
+            2,
+            "unregister must count the buffered frames it discards"
+        );
+        // idempotent: nothing left to count
+        routers[1].unregister(777);
+        assert_eq!(routers[1].dropped(), 2);
+        for e in &exes {
+            e.stop();
+        }
     }
 }

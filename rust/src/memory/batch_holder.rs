@@ -679,15 +679,23 @@ impl BatchHolder {
         env.spill.free(s);
         if let Some(pool) = &env.pinned {
             if let Ok((_, orig)) = Codec::parse_prelude(&raw) {
-                if let Ok(mut w) = SlabWriter::with_capacity(pool, orig) {
-                    let claimed = Codec::decompress_into(&raw, &mut w)?;
-                    if w.len() != claimed {
-                        return Err(Error::Format(format!(
-                            "spill reload length mismatch: {} vs {claimed}",
-                            w.len()
-                        )));
+                match SlabWriter::with_capacity(pool, orig) {
+                    Ok(mut w) => {
+                        // disk bytes entering the pool: a real bounce
+                        // copy, counted (Lz4Like now streams through
+                        // its window here — no full heap Vec first)
+                        let claimed = Codec::decompress_into(&raw, &mut w)?;
+                        if w.len() != claimed {
+                            return Err(Error::Format(format!(
+                                "spill reload length mismatch: {} vs {claimed}",
+                                w.len()
+                            )));
+                        }
+                        return Ok(Slot::HostPinned(SlabSlice::whole(w.finish())));
                     }
-                    return Ok(Slot::HostPinned(SlabSlice::whole(w.finish())));
+                    // dry pool: pageable reload below, visibly
+                    Err(Error::PinnedExhausted { .. }) => pool.note_codec_fallback(orig),
+                    Err(e) => return Err(e),
                 }
             }
         }

@@ -40,9 +40,17 @@
 //!   into a heap `Vec` (`PinnedSlab::read` remains for device uploads
 //!   and tests only).
 //!
-//! The pool keeps cumulative `bounce_bytes` (bytes staged into slabs)
-//! and `waste_bytes` (Figure-3B unused tails) counters, published as
-//! worker metrics by the Data-Movement executor.
+//! The pool keeps cumulative `bounce_bytes` (bytes staged into slabs
+//! *from outside the pool* — heap buffers, sockets, disk reads) and
+//! `waste_bytes` (Figure-3B unused tails) counters, published as
+//! worker metrics by the Data-Movement executor. Pool-to-pool
+//! transforms (compressing a holder's slab for the wire, decompressing
+//! a received slab payload) write through a
+//! [`SlabWriter::count_bounce`]`(false)` writer: the bytes were already
+//! counted when they first entered the pool, so a codec-enabled send no
+//! longer double-counts. `codec_heap_fallback_bytes` records payload
+//! bytes a codec had to stage on the heap because the pool was dry —
+//! the §3.4 degradation gauge.
 
 use std::borrow::Cow;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -73,6 +81,10 @@ struct Inner {
     /// Cumulative unused tail bytes of finished slabs (Figure 3B's
     /// "small unused block of memory per batch", aggregated).
     waste_bytes: AtomicU64,
+    /// Payload bytes a codec staged on the heap because the pool was
+    /// dry (compress or decompress fallback) — pool-dry operation is
+    /// legal but slow, and this gauge makes it visible.
+    codec_fallback_bytes: AtomicU64,
     /// Raised with host-tier pressure whenever the pool runs dry, so
     /// the Data-Movement executor demotes host data to disk (§3.4: the
     /// pool doubles as bounce buffer and staging area — exhaustion here
@@ -128,6 +140,7 @@ impl PinnedPool {
                 exhaustions: Default::default(),
                 bounce_bytes: Default::default(),
                 waste_bytes: Default::default(),
+                codec_fallback_bytes: Default::default(),
                 pressure: OnceLock::new(),
             }),
         })
@@ -179,6 +192,17 @@ impl PinnedPool {
         self.inner.waste_bytes.load(Ordering::Relaxed)
     }
 
+    /// Cumulative payload bytes a codec staged on the heap because the
+    /// pool was dry (pool-dry operation indicator).
+    pub fn codec_heap_fallback_bytes(&self) -> u64 {
+        self.inner.codec_fallback_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Record `n` payload bytes taking a codec's heap fallback.
+    pub fn note_codec_fallback(&self, n: usize) {
+        self.inner.codec_fallback_bytes.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
     fn note_bounce(&self, n: usize) {
         self.inner.bounce_bytes.fetch_add(n as u64, Ordering::Relaxed);
     }
@@ -196,6 +220,8 @@ impl PinnedPool {
         m.gauge("pinned.exhaustions").set(self.exhaustion_count() as i64);
         m.gauge("pinned.bounce_bytes").set(self.bounce_bytes() as i64);
         m.gauge("pinned.waste_bytes").set(self.waste_bytes() as i64);
+        m.gauge("codec.heap_fallback_bytes")
+            .set(self.codec_heap_fallback_bytes() as i64);
     }
 
     /// Take one buffer, failing immediately if the pool is dry (the
@@ -415,12 +441,28 @@ pub struct SlabWriter {
     pool: PinnedPool,
     bufs: Vec<PinnedBuf>,
     len: usize,
+    /// Whether fills count toward the pool's `bounce_bytes`. True for
+    /// staging copies (bytes entering the pool from heap, socket, or
+    /// disk); false for pool-to-pool transforms (compressing a slab for
+    /// the wire, decompressing a received slab), whose bytes were
+    /// already counted on entry.
+    count_bounce: bool,
 }
 
 impl SlabWriter {
     /// An empty writer; buffers are acquired lazily as bytes arrive.
     pub fn new(pool: &PinnedPool) -> SlabWriter {
-        SlabWriter { pool: pool.clone(), bufs: Vec::new(), len: 0 }
+        SlabWriter { pool: pool.clone(), bufs: Vec::new(), len: 0, count_bounce: true }
+    }
+
+    /// Set whether this writer's fills count as bounce copies (builder
+    /// style; default true). Pass `false` when the source bytes are
+    /// already pool-resident, so `pinned.bounce_bytes` keeps meaning
+    /// "bytes that entered the pool" rather than double-counting
+    /// codec transforms.
+    pub fn count_bounce(mut self, count: bool) -> SlabWriter {
+        self.count_bounce = count;
+        self
     }
 
     /// A writer with every buffer `cap` bytes will need acquired up
@@ -484,7 +526,9 @@ impl SlabWriter {
             let n = (bs - off).min(data.len());
             self.bufs[buf_idx].as_mut_slice()[off..off + n].copy_from_slice(&data[..n]);
             self.len += n;
-            self.pool.note_bounce(n);
+            if self.count_bounce {
+                self.pool.note_bounce(n);
+            }
             data = &data[n..];
         }
         Ok(())
@@ -509,7 +553,9 @@ impl SlabWriter {
             let n = (bs - off).min(remaining);
             read(src_off, &mut self.bufs[buf_idx].as_mut_slice()[off..off + n])?;
             self.len += n;
-            self.pool.note_bounce(n);
+            if self.count_bounce {
+                self.pool.note_bounce(n);
+            }
             remaining -= n;
             src_off += n as u64;
         }
@@ -953,6 +999,23 @@ mod tests {
         let b = p.try_acquire().unwrap();
         assert_eq!(b.len(), 128);
         assert!(!b.is_empty(), "fixed-size buffers are never zero-length");
+    }
+
+    #[test]
+    fn transform_writer_skips_bounce_accounting() {
+        let p = PinnedPool::new(32, 8).unwrap();
+        let mut staging = SlabWriter::new(&p);
+        staging.write_bytes(&[1u8; 50]).unwrap();
+        let s1 = staging.finish();
+        assert_eq!(p.bounce_bytes(), 50, "staging copies count");
+        let mut transform = SlabWriter::new(&p).count_bounce(false);
+        transform.write_bytes(&s1.read()).unwrap();
+        let s2 = transform.finish();
+        assert_eq!(s2.read(), s1.read());
+        assert_eq!(p.bounce_bytes(), 50, "pool-to-pool transforms do not");
+        assert_eq!(p.codec_heap_fallback_bytes(), 0);
+        p.note_codec_fallback(123);
+        assert_eq!(p.codec_heap_fallback_bytes(), 123);
     }
 
     #[test]

@@ -299,6 +299,13 @@ impl Frame {
 /// kind(1) + src(4) + dst(4) + channel(4) + len(8)
 pub const FRAME_HEADER_LEN: usize = 21;
 
+/// Default ceiling on a whole frame (header + payload) accepted off the
+/// wire. Length prefixes arrive from the network and may be corrupt or
+/// hostile; receive paths reject frames above this *before* sizing any
+/// buffer from the claimed length (`WorkerConfig::max_frame_bytes`
+/// overrides it per deployment).
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 1 << 30;
+
 #[cfg(test)]
 mod tests {
     use super::*;

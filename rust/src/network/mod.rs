@@ -19,7 +19,7 @@ pub mod frame;
 pub mod inproc;
 pub mod tcp;
 
-pub use frame::{Frame, FrameKind, Payload};
+pub use frame::{Frame, FrameKind, Payload, DEFAULT_MAX_FRAME_BYTES};
 pub use inproc::InprocHub;
 pub use tcp::{read_frame, TcpCluster};
 

@@ -23,7 +23,7 @@ use std::time::Duration;
 
 use crate::config::TransportKind;
 use crate::memory::{PinnedPool, PinnedSlab, SlabSlice};
-use crate::network::frame::{Payload, FRAME_HEADER_LEN};
+use crate::network::frame::{Payload, DEFAULT_MAX_FRAME_BYTES, FRAME_HEADER_LEN};
 use crate::network::{Endpoint, Frame, FrameKind};
 use crate::sim::{SimContext, Throttle};
 use crate::{Error, Result};
@@ -52,7 +52,22 @@ pub struct TcpCluster {
 impl TcpCluster {
     /// Bind `n` loopback listeners, fully connect them, spawn reader
     /// threads. Returns the cluster holding one endpoint per worker.
+    /// Frames are rejected above [`DEFAULT_MAX_FRAME_BYTES`]; use
+    /// [`TcpCluster::listen_with_limit`] to configure the ceiling.
     pub fn listen(n: usize, ctx: &SimContext, kind: TransportKind) -> Result<TcpCluster> {
+        TcpCluster::listen_with_limit(n, ctx, kind, DEFAULT_MAX_FRAME_BYTES)
+    }
+
+    /// [`TcpCluster::listen`] with an explicit frame-size ceiling
+    /// (`WorkerConfig::max_frame_bytes`): reader threads drop a
+    /// connection whose length prefix claims more than
+    /// `max_frame_bytes`, before allocating anything from the claim.
+    pub fn listen_with_limit(
+        n: usize,
+        ctx: &SimContext,
+        kind: TransportKind,
+        max_frame_bytes: usize,
+    ) -> Result<TcpCluster> {
         let spec = match kind {
             TransportKind::Rdma => ctx
                 .profile
@@ -108,7 +123,9 @@ impl TcpCluster {
                         let pool = recv_pool.clone();
                         std::thread::Builder::new()
                             .name(format!("theseus-net-{i}-{j}"))
-                            .spawn(move || reader_loop(rs, inbox2, stop, pool))
+                            .spawn(move || {
+                                reader_loop(rs, inbox2, stop, pool, max_frame_bytes)
+                            })
                             .map_err(|e| Error::Network(e.to_string()))?;
                         peer_handles.push(Some(Peer {
                             stream: Mutex::new(s),
@@ -168,6 +185,12 @@ impl Read for RetryRead<'_> {
 /// header + payload bytes) has been consumed — the receive path shared
 /// by the reader threads and the frame round-trip property tests.
 ///
+/// `total` and the header's payload length arrive from the wire and are
+/// never trusted for allocation until validated: frames above
+/// `max_frame_bytes` are rejected outright (a corrupt or hostile length
+/// prefix must not size a buffer), and the two length fields must
+/// agree.
+///
 /// `pool` is queried lazily, and only for Data payloads: control-plane
 /// frames (estimates, plans) are tiny and would waste a whole
 /// fixed-size buffer each, so they stay on the heap without ever
@@ -179,6 +202,7 @@ impl Read for RetryRead<'_> {
 pub fn read_frame(
     r: &mut impl Read,
     total: usize,
+    max_frame_bytes: usize,
     pool: impl FnOnce() -> Option<PinnedPool>,
 ) -> Result<Frame> {
     if total < FRAME_HEADER_LEN {
@@ -186,6 +210,11 @@ pub fn read_frame(
         // way to resync a length-prefixed stream; the caller must drop
         // the connection.
         return Err(Error::Network(format!("bad frame length {total}")));
+    }
+    if total > max_frame_bytes {
+        return Err(Error::Network(format!(
+            "frame length {total} exceeds max_frame_bytes {max_frame_bytes}"
+        )));
     }
     let mut header = [0u8; FRAME_HEADER_LEN];
     r.read_exact(&mut header)?;
@@ -224,7 +253,13 @@ pub fn read_frame(
     Ok(Frame { kind, src, dst, channel, payload })
 }
 
-fn reader_loop(mut s: TcpStream, inbox: Arc<Inbox>, stop: Arc<AtomicBool>, pool: Arc<RecvPool>) {
+fn reader_loop(
+    mut s: TcpStream,
+    inbox: Arc<Inbox>,
+    stop: Arc<AtomicBool>,
+    pool: Arc<RecvPool>,
+    max_frame_bytes: usize,
+) {
     s.set_read_timeout(Some(Duration::from_millis(200))).ok();
     let mut lenbuf = [0u8; 8];
     loop {
@@ -236,7 +271,9 @@ fn reader_loop(mut s: TcpStream, inbox: Arc<Inbox>, stop: Arc<AtomicBool>, pool:
         }
         let total = u64::from_le_bytes(lenbuf) as usize;
         let mut rr = RetryRead { s: &mut s, stop: &stop };
-        let frame = match read_frame(&mut rr, total, || pool.0.lock().unwrap().clone()) {
+        let frame = match read_frame(&mut rr, total, max_frame_bytes, || {
+            pool.0.lock().unwrap().clone()
+        }) {
             Ok(f) => f,
             Err(e) => {
                 // Loudly (unless shutting down): a silent return here
@@ -438,6 +475,28 @@ mod tests {
         assert!(!got.payload.is_pinned(), "dry pool must fall back to heap");
         assert_eq!(got.payload, body);
         drop(hold);
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected_without_allocation() {
+        // A hostile/corrupt length prefix must be rejected before any
+        // buffer is sized from it.
+        let mut cur = std::io::Cursor::new(Vec::<u8>::new());
+        let r = read_frame(&mut cur, usize::MAX, DEFAULT_MAX_FRAME_BYTES, || None);
+        assert!(r.is_err(), "claimed length above the ceiling must error");
+
+        // A configured ceiling drops the connection instead of buffering.
+        let c = TcpCluster::listen_with_limit(2, &SimContext::test(), TransportKind::Tcp, 64)
+            .unwrap();
+        let eps = c.into_endpoints();
+        eps[0].send(Frame::data(0, 1, 1, vec![1, 2, 3])).unwrap();
+        let got = eps[1].recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+        assert_eq!(got.payload, vec![1, 2, 3]);
+        eps[0].send(Frame::data(0, 1, 2, vec![0; 256])).unwrap();
+        assert!(
+            eps[1].recv_timeout(Duration::from_millis(300)).unwrap().is_none(),
+            "oversized frame must be dropped with its connection"
+        );
     }
 
     #[test]

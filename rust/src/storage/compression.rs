@@ -9,6 +9,28 @@
 //!   when CPU cycles become the bottleneck after enabling RDMA (Fig 4
 //!   D→E is "free up compression cycles").
 //! * `None` — passthrough.
+//!
+//! ## Slab-native streaming (§3.4)
+//!
+//! The pinned bounce pool carries bytes as fixed-size buffer chunks, so
+//! every codec here works on *vectored* byte runs in both directions —
+//! no codec ever forces a reassembly copy:
+//!
+//! * [`Codec::compress_chunks_into`] compresses `&[&[u8]]` input
+//!   straight into any [`std::io::Write`] (a `SlabWriter` on the wire
+//!   path). `Lz4Like` walks a [`ChunkView`] of logical offsets over the
+//!   chunks, carrying its 64 KiB match window across chunk boundaries.
+//! * [`Codec::decompress_slices_into`] decompresses a framed payload
+//!   presented as chunks into any writer. `Lz4Like` streams through a
+//!   bounded 64 KiB back-reference ring, so the full output is never
+//!   materialized on the heap either.
+//!
+//! Length fields that arrive from the wire or disk are treated as
+//! *claims*, not facts: speculative preallocation is clamped
+//! ([`clamp_prealloc`]) and every decode hard-caps its output at the
+//! claimed length, erroring on mismatch.
+
+use std::io::Write;
 
 use crate::{Error, Result};
 
@@ -27,6 +49,54 @@ pub enum Codec {
 impl Default for Codec {
     fn default() -> Self {
         Codec::Zstd { level: 1 }
+    }
+}
+
+/// Clamp a speculative output preallocation derived from an untrusted
+/// `orig` length claim: a corrupt or hostile frame must not make us
+/// reserve gigabytes up front. 255x input is a generous ceiling on
+/// realistic LZ/zstd ratios for the prealloc *hint* only — honest
+/// streams beyond it just grow the buffer amortized, and the decode
+/// loops still cap total output at the claim itself. (`pub(crate)`:
+/// the network receive path applies the same policy to its heap
+/// fallback.)
+pub(crate) fn clamp_prealloc(orig: usize, input_len: usize) -> usize {
+    orig.min(input_len.saturating_mul(255).saturating_add(64))
+}
+
+/// `Write` wrapper that counts bytes and (optionally) refuses to grow
+/// past a limit — the output-side guard against bogus length claims.
+struct CountingWriter<'a> {
+    w: &'a mut dyn std::io::Write,
+    written: usize,
+    limit: usize,
+}
+
+impl<'a> CountingWriter<'a> {
+    fn new(w: &'a mut dyn std::io::Write) -> CountingWriter<'a> {
+        CountingWriter { w, written: 0, limit: usize::MAX }
+    }
+
+    fn with_limit(w: &'a mut dyn std::io::Write, limit: usize) -> CountingWriter<'a> {
+        CountingWriter { w, written: 0, limit }
+    }
+}
+
+impl std::io::Write for CountingWriter<'_> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if self.written.saturating_add(buf.len()) > self.limit {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "output exceeds claimed length",
+            ));
+        }
+        let n = self.w.write(buf)?;
+        self.written += n;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
     }
 }
 
@@ -81,42 +151,61 @@ impl Codec {
         self.compress_chunks(&[data])
     }
 
-    /// Compress a payload presented as vectored chunks (a pinned slab's
-    /// buffers) without first reassembling it. `Zstd` streams the
-    /// chunks through an encoder; `Lz4Like` needs random access to its
-    /// input window, so it alone materializes the input first.
+    /// Compress a payload presented as vectored chunks into a heap
+    /// `Vec` (spill writes, file format, tests). Same streaming core as
+    /// [`Codec::compress_chunks_into`] — no codec reassembles the
+    /// input.
     pub fn compress_chunks(self, chunks: &[&[u8]]) -> Vec<u8> {
         let total: usize = chunks.iter().map(|c| c.len()).sum();
         let mut out = Vec::with_capacity(total / 2 + 16);
-        out.extend_from_slice(&self.prelude(total));
+        self.compress_chunks_into(chunks, &mut out)
+            .expect("Vec write is infallible");
+        out
+    }
+
+    /// Compress vectored chunks (a pinned slab's buffers) straight into
+    /// `out` — the §3.4 wire path compresses into a `SlabWriter`, so a
+    /// codec-enabled send stages exactly one pinned copy and never
+    /// materializes an intermediate heap `Vec`. `Zstd` streams the
+    /// chunks through an encoder; `Lz4Like` walks a [`ChunkView`]
+    /// cursor over the chunks, matching across chunk boundaries.
+    /// Returns the framed output size (prelude + body). On error (a dry
+    /// pool behind a `SlabWriter`), partial output may have been
+    /// written — the caller discards the writer and falls back.
+    pub fn compress_chunks_into(
+        self,
+        chunks: &[&[u8]],
+        out: &mut dyn std::io::Write,
+    ) -> Result<usize> {
+        let total: usize = chunks.iter().map(|c| c.len()).sum();
+        let mut cw = CountingWriter::new(out);
+        cw.write_all(&self.prelude(total))?;
         match self {
             Codec::None => {
                 for c in chunks {
-                    out.extend_from_slice(c);
+                    cw.write_all(c)?;
                 }
             }
             Codec::Zstd { level } => {
-                use std::io::Write;
-                let mut enc =
-                    zstd::stream::write::Encoder::new(out, level).expect("zstd encoder");
+                let mut enc = zstd::stream::write::Encoder::new(&mut cw, level)
+                    .map_err(|e| Error::Format(format!("zstd encoder: {e}")))?;
                 for c in chunks {
-                    enc.write_all(c).expect("zstd compress");
+                    enc.write_all(c)?;
                 }
-                out = enc.finish().expect("zstd finish");
+                enc.finish()?;
             }
             Codec::Lz4Like => {
                 if let [one] = chunks {
-                    lz4like_compress(one, &mut out);
+                    // contiguous fast path: direct slice indexing for
+                    // the ubiquitous single-slice case (spill writes,
+                    // heap fallbacks, `compress`)
+                    lz4like_compress_slice(one, &mut cw)?;
                 } else {
-                    let mut all = Vec::with_capacity(total);
-                    for c in chunks {
-                        all.extend_from_slice(c);
-                    }
-                    lz4like_compress(&all, &mut out);
+                    lz4like_compress_chunks(&ChunkView::new(chunks), &mut cw)?;
                 }
             }
         }
-        out
+        Ok(cw.written)
     }
 
     /// Decompress a buffer produced by [`Codec::compress`] (any codec —
@@ -125,43 +214,245 @@ impl Codec {
     pub fn decompress(data: &[u8]) -> Result<Vec<u8>> {
         let (codec, orig) = Codec::parse_prelude(data)?;
         let body = &data[PRELUDE_LEN..];
-        match codec {
-            Codec::None => Ok(body.to_vec()),
-            Codec::Zstd { .. } => zstd::bulk::decompress(body, orig)
-                .map_err(|e| Error::Format(format!("zstd: {e}"))),
-            Codec::Lz4Like => lz4like_decompress(body, orig),
+        if let Codec::Lz4Like = codec {
+            // heap fast path: back-reference the output Vec directly
+            // instead of going through the streaming ring
+            return lz4like_decompress(body, orig);
         }
+        let mut out = Vec::with_capacity(clamp_prealloc(orig, body.len()));
+        let claimed = Codec::decompress_slices_into(&[data], &mut out)?;
+        debug_assert_eq!(claimed, orig);
+        Ok(out)
     }
 
     /// Decompress straight into a writer (a pinned-slab writer on the
-    /// spill-promotion path, so the decompressed bytes never stage
-    /// through an intermediate heap `Vec` for `Zstd`/`None`). Returns
-    /// the claimed original length; the caller should verify the writer
-    /// grew by exactly that much.
+    /// network receive and spill-promotion paths, so the decompressed
+    /// bytes never stage through an intermediate heap `Vec` for *any*
+    /// codec). Returns the original length, verified against the bytes
+    /// actually produced.
     pub fn decompress_into(data: &[u8], out: &mut dyn std::io::Write) -> Result<usize> {
-        use std::io::Write;
-        let (codec, orig) = Codec::parse_prelude(data)?;
-        let body = &data[PRELUDE_LEN..];
+        Codec::decompress_slices_into(&[data], out)
+    }
+
+    /// Decompress a framed payload presented as vectored chunks (the
+    /// prelude may span chunk boundaries) into `out`. This is the
+    /// slab-to-slab receive path: compressed wire bytes in pool buffers
+    /// decompress into a `SlabWriter` without reassembling input or
+    /// output. `Lz4Like` streams through a bounded 64 KiB
+    /// back-reference window; every codec's output is hard-capped at
+    /// the claimed length and verified, so corrupt frames error instead
+    /// of ballooning.
+    pub fn decompress_slices_into(
+        chunks: &[&[u8]],
+        out: &mut dyn std::io::Write,
+    ) -> Result<usize> {
+        let total: usize = chunks.iter().map(|c| c.len()).sum();
+        if total < PRELUDE_LEN {
+            return Err(Error::Format("compressed buffer too short".into()));
+        }
+        let mut cur = InCursor::new(chunks);
+        let mut head = [0u8; PRELUDE_LEN];
+        for slot in head.iter_mut() {
+            *slot = cur.next_byte().expect("length checked above");
+        }
+        let (codec, orig) = Codec::parse_prelude(&head)?;
+        let body_len = total - PRELUDE_LEN;
+        let mut cw = CountingWriter::with_limit(out, orig);
         match codec {
             Codec::None => {
-                if body.len() != orig {
+                if body_len != orig {
                     return Err(Error::Format(format!(
-                        "length mismatch: body {} vs claimed {orig}",
-                        body.len()
+                        "length mismatch: body {body_len} vs claimed {orig}"
                     )));
                 }
-                out.write_all(body)?;
+                cur.take(orig, &mut |s| cw.write_all(s).map_err(Error::from))?;
             }
             Codec::Zstd { .. } => {
-                zstd::stream::copy_decode(body, &mut *out)
+                zstd::stream::copy_decode(&mut cur.reader(), &mut cw)
                     .map_err(|e| Error::Format(format!("zstd: {e}")))?;
+                if cw.written != orig {
+                    return Err(Error::Format(format!(
+                        "zstd length mismatch: got {}, want {orig}",
+                        cw.written
+                    )));
+                }
             }
             Codec::Lz4Like => {
-                let v = lz4like_decompress(body, orig)?;
-                out.write_all(&v)?;
+                let mut sink = StreamSink::new(&mut cw);
+                lz4like_decode(&mut cur, &mut sink, orig)?;
             }
         }
         Ok(orig)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Vectored input views: ChunkView gives the compressor random access to
+// logical offsets over `&[&[u8]]`; InCursor gives the decoders a
+// sequential read head. Neither copies.
+// ---------------------------------------------------------------------
+
+/// Random-access view of vectored chunks as one logical byte run.
+struct ChunkView<'a> {
+    chunks: &'a [&'a [u8]],
+    /// `starts[i]` = logical offset of `chunks[i]`; one extra trailing
+    /// entry holds the total length.
+    starts: Vec<usize>,
+}
+
+impl<'a> ChunkView<'a> {
+    fn new(chunks: &'a [&'a [u8]]) -> ChunkView<'a> {
+        let mut starts = Vec::with_capacity(chunks.len() + 1);
+        let mut acc = 0usize;
+        for c in chunks {
+            starts.push(acc);
+            acc += c.len();
+        }
+        starts.push(acc);
+        ChunkView { chunks, starts }
+    }
+
+    fn len(&self) -> usize {
+        *self.starts.last().unwrap()
+    }
+
+    /// (chunk index, offset within chunk) of logical position `pos`
+    /// (`pos < len`). Empty chunks are skipped by construction: the
+    /// last chunk whose start is <= pos must extend past pos.
+    #[inline]
+    fn locate(&self, pos: usize) -> (usize, usize) {
+        debug_assert!(pos < self.len());
+        let ci = self.starts.partition_point(|&s| s <= pos) - 1;
+        (ci, pos - self.starts[ci])
+    }
+
+    /// Four bytes at `pos` as a little-endian word (`pos + 4 <= len`).
+    #[inline]
+    fn u32_at(&self, pos: usize) -> u32 {
+        let (ci, off) = self.locate(pos);
+        let c = self.chunks[ci];
+        if off + 4 <= c.len() {
+            u32::from_le_bytes(c[off..off + 4].try_into().unwrap())
+        } else {
+            // the word spans a chunk boundary: assemble it
+            let mut b = [0u8; 4];
+            for (k, slot) in b.iter_mut().enumerate() {
+                let (ci, off) = self.locate(pos + k);
+                *slot = self.chunks[ci][off];
+            }
+            u32::from_le_bytes(b)
+        }
+    }
+
+    /// Length of the common prefix of the runs starting at `a` and `b`,
+    /// up to `max` bytes (caller guarantees both runs stay in bounds).
+    fn common_prefix(&self, a: usize, b: usize, max: usize) -> usize {
+        let mut n = 0usize;
+        while n < max {
+            let (aci, aoff) = self.locate(a + n);
+            let (bci, boff) = self.locate(b + n);
+            let ac = &self.chunks[aci][aoff..];
+            let bc = &self.chunks[bci][boff..];
+            let step = ac.len().min(bc.len()).min(max - n);
+            match ac[..step].iter().zip(&bc[..step]).position(|(x, y)| x != y) {
+                Some(k) => return n + k,
+                None => n += step,
+            }
+        }
+        max
+    }
+
+    /// Write the logical range `[start, end)` chunk-wise.
+    fn write_range(
+        &self,
+        start: usize,
+        end: usize,
+        out: &mut dyn std::io::Write,
+    ) -> std::io::Result<()> {
+        let mut pos = start;
+        while pos < end {
+            let (ci, off) = self.locate(pos);
+            let c = self.chunks[ci];
+            let n = (c.len() - off).min(end - pos);
+            out.write_all(&c[off..off + n])?;
+            pos += n;
+        }
+        Ok(())
+    }
+}
+
+/// Sequential read head over vectored chunks (decoder input side).
+struct InCursor<'a> {
+    chunks: &'a [&'a [u8]],
+    ci: usize,
+    off: usize,
+}
+
+impl<'a> InCursor<'a> {
+    fn new(chunks: &'a [&'a [u8]]) -> InCursor<'a> {
+        InCursor { chunks, ci: 0, off: 0 }
+    }
+
+    /// Remaining bytes of the current chunk, skipping exhausted and
+    /// empty chunks. Empty slice = end of input.
+    #[inline]
+    fn current(&mut self) -> &'a [u8] {
+        while self.ci < self.chunks.len() && self.off >= self.chunks[self.ci].len() {
+            self.ci += 1;
+            self.off = 0;
+        }
+        if self.ci == self.chunks.len() {
+            &[]
+        } else {
+            &self.chunks[self.ci][self.off..]
+        }
+    }
+
+    #[inline]
+    fn next_byte(&mut self) -> Option<u8> {
+        let c = self.current();
+        let b = *c.first()?;
+        self.off += 1;
+        Some(b)
+    }
+
+    /// Feed the next `len` bytes to `f` as subslices (no reassembly).
+    fn take(
+        &mut self,
+        mut len: usize,
+        f: &mut dyn FnMut(&[u8]) -> Result<()>,
+    ) -> Result<()> {
+        while len > 0 {
+            let c = self.current();
+            if c.is_empty() {
+                return Err(Error::Format("input truncated".into()));
+            }
+            let n = c.len().min(len);
+            f(&c[..n])?;
+            self.off += n;
+            len -= n;
+        }
+        Ok(())
+    }
+
+    /// `Read` adapter (zstd's streaming decoder pulls from this).
+    fn reader(&mut self) -> CursorRead<'_, 'a> {
+        CursorRead(self)
+    }
+}
+
+struct CursorRead<'c, 'a>(&'c mut InCursor<'a>);
+
+impl std::io::Read for CursorRead<'_, '_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let c = self.0.current();
+        if c.is_empty() || buf.is_empty() {
+            return Ok(0);
+        }
+        let n = c.len().min(buf.len());
+        buf[..n].copy_from_slice(&c[..n]);
+        self.0.off += n;
+        Ok(n)
     }
 }
 
@@ -173,33 +464,39 @@ impl Codec {
 
 const MIN_MATCH: usize = 4;
 const HASH_BITS: usize = 14;
+/// Match offsets are u16, so 64 KiB of history fully determines every
+/// back-reference — the streaming decoder's ring size.
+const LZ_WINDOW: usize = 1 << 16;
 
 #[inline]
-fn hash4(b: &[u8]) -> usize {
-    let v = u32::from_le_bytes(b[..4].try_into().unwrap());
-    ((v.wrapping_mul(2654435761)) >> (32 - HASH_BITS)) as usize
+fn hash4(word: u32) -> usize {
+    ((word.wrapping_mul(2654435761)) >> (32 - HASH_BITS)) as usize
 }
 
-fn put_varint(out: &mut Vec<u8>, mut v: usize) {
+fn put_varint(out: &mut dyn std::io::Write, mut v: usize) -> std::io::Result<()> {
+    let mut buf = [0u8; 10];
+    let mut n = 0usize;
     loop {
         let b = (v & 0x7f) as u8;
         v >>= 7;
         if v == 0 {
-            out.push(b);
+            buf[n] = b;
+            n += 1;
             break;
         }
-        out.push(b | 0x80);
+        buf[n] = b | 0x80;
+        n += 1;
     }
+    out.write_all(&buf[..n])
 }
 
-fn get_varint(data: &[u8], pos: &mut usize) -> Result<usize> {
+fn read_varint(cur: &mut InCursor) -> Result<usize> {
     let mut v = 0usize;
     let mut shift = 0;
     loop {
-        let b = *data
-            .get(*pos)
+        let b = cur
+            .next_byte()
             .ok_or_else(|| Error::Format("varint truncated".into()))?;
-        *pos += 1;
         v |= ((b & 0x7f) as usize) << shift;
         if b & 0x80 == 0 {
             return Ok(v);
@@ -211,13 +508,21 @@ fn get_varint(data: &[u8], pos: &mut usize) -> Result<usize> {
     }
 }
 
-fn lz4like_compress(data: &[u8], out: &mut Vec<u8>) {
+/// Greedy LZ over one contiguous slice — same token stream as
+/// [`lz4like_compress_chunks`] (asserted byte-identical by the property
+/// suite), kept because direct indexing is markedly faster than the
+/// chunk cursor and single-slice input is the common case off the hot
+/// wire path.
+fn lz4like_compress_slice(
+    data: &[u8],
+    out: &mut dyn std::io::Write,
+) -> std::io::Result<()> {
     let n = data.len();
     let mut table = vec![usize::MAX; 1 << HASH_BITS];
     let mut i = 0usize;
     let mut lit_start = 0usize;
     while i + MIN_MATCH <= n {
-        let h = hash4(&data[i..]);
+        let h = hash4(u32::from_le_bytes(data[i..i + 4].try_into().unwrap()));
         let cand = table[h];
         table[h] = i;
         if cand != usize::MAX
@@ -229,10 +534,10 @@ fn lz4like_compress(data: &[u8], out: &mut Vec<u8>) {
             while i + len < n && data[cand + len] == data[i + len] && len < 0xFFFF {
                 len += 1;
             }
-            put_varint(out, i - lit_start);
-            out.extend_from_slice(&data[lit_start..i]);
-            put_varint(out, len);
-            out.extend_from_slice(&((i - cand) as u16).to_le_bytes());
+            put_varint(out, i - lit_start)?;
+            out.write_all(&data[lit_start..i])?;
+            put_varint(out, len)?;
+            out.write_all(&((i - cand) as u16).to_le_bytes())?;
             i += len;
             lit_start = i;
         } else {
@@ -240,47 +545,193 @@ fn lz4like_compress(data: &[u8], out: &mut Vec<u8>) {
         }
     }
     // trailing literals with terminator (match_len 0)
-    put_varint(out, n - lit_start);
-    out.extend_from_slice(&data[lit_start..]);
-    put_varint(out, 0);
+    put_varint(out, n - lit_start)?;
+    out.write_all(&data[lit_start..])?;
+    put_varint(out, 0)
 }
 
-fn lz4like_decompress(data: &[u8], orig: usize) -> Result<Vec<u8>> {
-    let mut out = Vec::with_capacity(orig);
-    let mut pos = 0usize;
-    loop {
-        let lit = get_varint(data, &mut pos)?;
-        if pos + lit > data.len() {
-            return Err(Error::Format("lz4like literal overrun".into()));
+/// Greedy LZ over a chunked input view. Identical token output to
+/// [`lz4like_compress_slice`] (the view only changes *addressing*), so
+/// chunk boundaries never cost ratio: matches and literals span them
+/// freely.
+fn lz4like_compress_chunks(
+    v: &ChunkView,
+    out: &mut dyn std::io::Write,
+) -> std::io::Result<()> {
+    let n = v.len();
+    let mut table = vec![usize::MAX; 1 << HASH_BITS];
+    let mut i = 0usize;
+    let mut lit_start = 0usize;
+    while i + MIN_MATCH <= n {
+        let h = hash4(v.u32_at(i));
+        let cand = table[h];
+        table[h] = i;
+        if cand != usize::MAX
+            && i - cand <= u16::MAX as usize
+            && v.common_prefix(cand, i, MIN_MATCH) == MIN_MATCH
+        {
+            // extend the match (capped at the window's 0xFFFF encoding)
+            let cap = (n - i).min(0xFFFF);
+            let len = MIN_MATCH
+                + v.common_prefix(cand + MIN_MATCH, i + MIN_MATCH, cap - MIN_MATCH);
+            put_varint(out, i - lit_start)?;
+            v.write_range(lit_start, i, out)?;
+            put_varint(out, len)?;
+            out.write_all(&((i - cand) as u16).to_le_bytes())?;
+            i += len;
+            lit_start = i;
+        } else {
+            i += 1;
         }
-        out.extend_from_slice(&data[pos..pos + lit]);
-        pos += lit;
-        let mlen = get_varint(data, &mut pos)?;
+    }
+    // trailing literals with terminator (match_len 0)
+    put_varint(out, n - lit_start)?;
+    v.write_range(lit_start, n, out)?;
+    put_varint(out, 0)
+}
+
+/// Decoder output sink: the heap path back-references the output `Vec`
+/// directly; the streaming path keeps a bounded ring window.
+trait LzSink {
+    fn emitted(&self) -> usize;
+    fn literal(&mut self, s: &[u8]) -> Result<()>;
+    /// Copy `len` bytes starting `off` back from the end of the output
+    /// (`0 < off <= emitted`, validated by the decode loop); an
+    /// overlapping copy repeats bytes RLE-style.
+    fn copy_match(&mut self, off: usize, len: usize) -> Result<()>;
+}
+
+struct VecSink<'a>(&'a mut Vec<u8>);
+
+impl LzSink for VecSink<'_> {
+    fn emitted(&self) -> usize {
+        self.0.len()
+    }
+
+    fn literal(&mut self, s: &[u8]) -> Result<()> {
+        self.0.extend_from_slice(s);
+        Ok(())
+    }
+
+    fn copy_match(&mut self, off: usize, len: usize) -> Result<()> {
+        let start = self.0.len() - off;
+        // overlapping copy (RLE case) must be byte-by-byte
+        for k in 0..len {
+            let b = self.0[start + k];
+            self.0.push(b);
+        }
+        Ok(())
+    }
+}
+
+/// Streams decoded bytes to any writer, keeping only the 64 KiB the
+/// format can reference — the receive path decompresses into a
+/// `SlabWriter` without ever holding the full output on the heap.
+struct StreamSink<'a> {
+    out: &'a mut dyn std::io::Write,
+    ring: Box<[u8]>,
+    pos: usize,
+    emitted: usize,
+    scratch: Vec<u8>,
+}
+
+impl<'a> StreamSink<'a> {
+    fn new(out: &'a mut dyn std::io::Write) -> StreamSink<'a> {
+        StreamSink {
+            out,
+            ring: vec![0u8; LZ_WINDOW].into_boxed_slice(),
+            pos: 0,
+            emitted: 0,
+            scratch: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn push(&mut self, b: u8) {
+        self.ring[self.pos] = b;
+        self.pos = (self.pos + 1) & (LZ_WINDOW - 1);
+    }
+}
+
+impl LzSink for StreamSink<'_> {
+    fn emitted(&self) -> usize {
+        self.emitted
+    }
+
+    fn literal(&mut self, s: &[u8]) -> Result<()> {
+        self.out.write_all(s)?;
+        for &b in s {
+            self.push(b);
+        }
+        self.emitted += s.len();
+        Ok(())
+    }
+
+    fn copy_match(&mut self, off: usize, len: usize) -> Result<()> {
+        // off <= emitted and off < LZ_WINDOW (u16) guarantee the ring
+        // still holds the referenced byte; pushing as we read resolves
+        // overlapping (RLE) copies exactly like the Vec path.
+        self.scratch.clear();
+        for _ in 0..len {
+            let b = self.ring[(self.pos + LZ_WINDOW - off) & (LZ_WINDOW - 1)];
+            self.push(b);
+            self.scratch.push(b);
+            if self.scratch.len() >= 4096 {
+                self.out.write_all(&self.scratch)?;
+                self.scratch.clear();
+            }
+        }
+        self.out.write_all(&self.scratch)?;
+        self.emitted += len;
+        Ok(())
+    }
+}
+
+/// Heap decompression with the claimed-length clamp: speculative
+/// preallocation never trusts `orig` beyond the input's plausible
+/// expansion, and the decode loop hard-caps output at the claim.
+fn lz4like_decompress(body: &[u8], orig: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(clamp_prealloc(orig, body.len()));
+    let chunks = [body];
+    let mut cur = InCursor::new(&chunks);
+    lz4like_decode(&mut cur, &mut VecSink(&mut out), orig)?;
+    Ok(out)
+}
+
+/// Token-stream decode. `orig` is the *claimed* output length, enforced
+/// as a hard cap mid-stream (corrupt or hostile streams error instead
+/// of producing unbounded output) and verified exactly at the end.
+fn lz4like_decode(cur: &mut InCursor, sink: &mut dyn LzSink, orig: usize) -> Result<()> {
+    loop {
+        let lit = read_varint(cur)?;
+        if sink.emitted() + lit > orig {
+            return Err(Error::Format("lz4like output exceeds claimed length".into()));
+        }
+        cur.take(lit, &mut |s| sink.literal(s))?;
+        let mlen = read_varint(cur)?;
         if mlen == 0 {
             break;
         }
-        if pos + 2 > data.len() {
-            return Err(Error::Format("lz4like offset truncated".into()));
-        }
-        let off = u16::from_le_bytes(data[pos..pos + 2].try_into().unwrap()) as usize;
-        pos += 2;
-        if off == 0 || off > out.len() {
+        let (lo, hi) = match (cur.next_byte(), cur.next_byte()) {
+            (Some(a), Some(b)) => (a, b),
+            _ => return Err(Error::Format("lz4like offset truncated".into())),
+        };
+        let off = u16::from_le_bytes([lo, hi]) as usize;
+        if off == 0 || off > sink.emitted() {
             return Err(Error::Format("lz4like bad offset".into()));
         }
-        let start = out.len() - off;
-        // overlapping copy (RLE case) must be byte-by-byte
-        for k in 0..mlen {
-            let b = out[start + k];
-            out.push(b);
+        if sink.emitted() + mlen > orig {
+            return Err(Error::Format("lz4like output exceeds claimed length".into()));
         }
+        sink.copy_match(off, mlen)?;
     }
-    if out.len() != orig {
+    if sink.emitted() != orig {
         return Err(Error::Format(format!(
             "lz4like length mismatch: got {}, want {orig}",
-            out.len()
+            sink.emitted()
         )));
     }
-    Ok(out)
+    Ok(())
 }
 
 #[cfg(test)]
@@ -378,6 +829,43 @@ mod tests {
     }
 
     #[test]
+    fn lz4like_chunked_input_is_byte_identical_to_contiguous() {
+        // The chunk-cursor view changes addressing, not the algorithm:
+        // token output must match the contiguous compressor exactly,
+        // for every split — including splits inside a match.
+        for data in corpora() {
+            let whole = Codec::Lz4Like.compress(&data);
+            for nsplits in [1usize, 2, 7, 64] {
+                let step = (data.len() / (nsplits + 1)).max(1);
+                let mut chunks: Vec<&[u8]> = Vec::new();
+                let mut pos = 0;
+                while pos < data.len() {
+                    let end = (pos + step).min(data.len());
+                    chunks.push(&data[pos..end]);
+                    pos = end;
+                }
+                if chunks.is_empty() {
+                    chunks.push(&[]);
+                }
+                let split = Codec::Lz4Like.compress_chunks(&chunks);
+                assert_eq!(split, whole, "len {} nsplits {nsplits}", data.len());
+            }
+        }
+    }
+
+    #[test]
+    fn compress_chunks_into_counts_and_roundtrips() {
+        let data: Vec<u8> = (0..5000u32).map(|i| (i / 3) as u8).collect();
+        let chunks: Vec<&[u8]> = vec![&data[..1234], &data[1234..1235], &data[1235..]];
+        for codec in [Codec::None, Codec::Zstd { level: 1 }, Codec::Lz4Like] {
+            let mut out = Vec::new();
+            let n = codec.compress_chunks_into(&chunks, &mut out).unwrap();
+            assert_eq!(n, out.len(), "returned size must match bytes written");
+            assert_eq!(Codec::decompress(&out).unwrap(), data, "{codec:?}");
+        }
+    }
+
+    #[test]
     fn decompress_into_streams_all_codecs() {
         for codec in [Codec::None, Codec::Zstd { level: 1 }, Codec::Lz4Like] {
             for data in corpora() {
@@ -388,6 +876,75 @@ mod tests {
                 assert_eq!(out, data, "codec {codec:?}");
             }
         }
+    }
+
+    #[test]
+    fn decompress_slices_handles_split_prelude_and_body() {
+        let data: Vec<u8> = std::iter::repeat(b"window".as_slice())
+            .take(500)
+            .flatten()
+            .copied()
+            .collect();
+        for codec in [Codec::None, Codec::Zstd { level: 1 }, Codec::Lz4Like] {
+            let c = codec.compress(&data);
+            // cut inside the prelude and at awkward body offsets
+            for cuts in [[1usize, 5, 40], [8, 9, 10], [3, 200, c.len() - 1]] {
+                let mut points: Vec<usize> =
+                    cuts.iter().map(|&x| x.min(c.len())).collect();
+                points.sort_unstable();
+                let mut chunks: Vec<&[u8]> = Vec::new();
+                let mut prev = 0;
+                for &p in &points {
+                    chunks.push(&c[prev..p]);
+                    prev = p;
+                }
+                chunks.push(&c[prev..]);
+                let mut out = Vec::new();
+                let orig = Codec::decompress_slices_into(&chunks, &mut out).unwrap();
+                assert_eq!(orig, data.len(), "{codec:?} cuts {cuts:?}");
+                assert_eq!(out, data, "{codec:?} cuts {cuts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_decode_handles_long_range_matches() {
+        // a match whose offset is near the full 64 KiB window: the
+        // streaming ring must still resolve it
+        let mut rng = Rng::new(7);
+        let mut data: Vec<u8> = (0..60_000).map(|_| rng.next_u64() as u8).collect();
+        let head: Vec<u8> = data[..5000].to_vec();
+        data.extend_from_slice(&head); // offsets ~60000 back
+        let c = Codec::Lz4Like.compress(&data);
+        assert!(c.len() < data.len(), "long-range matches must be found");
+        let mut out = Vec::new();
+        Codec::decompress_into(&c, &mut out).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn hostile_length_claims_error_without_ballooning() {
+        // a tiny body claiming a huge original length must fail fast:
+        // prealloc is clamped and output is capped at the claim only
+        // when tokens actually produce it
+        let mut bogus = Codec::Lz4Like.prelude(usize::MAX / 2).to_vec();
+        bogus.extend_from_slice(&[3, b'a', b'b', b'c', 0]); // 3 literals, end
+        assert!(Codec::decompress(&bogus).is_err(), "length mismatch must error");
+
+        // a match-length bomb: valid 4-byte seed then mlen far past orig
+        let mut bomb = Codec::Lz4Like.prelude(10).to_vec();
+        bomb.extend_from_slice(&[4, b'x', b'y', b'z', b'w']); // 4 literals
+        bomb.extend_from_slice(&[0xFF, 0xFF, 0x03]); // mlen varint = 65535
+        bomb.extend_from_slice(&1u16.to_le_bytes()); // offset 1
+        let mut out = Vec::new();
+        assert!(Codec::decompress_into(&bomb, &mut out).is_err());
+        assert!(out.len() <= 10 + 4, "output must stay capped near the claim");
+
+        // zstd: re-frame a valid stream with a lying orig
+        let good = Codec::Zstd { level: 1 }.compress(&vec![7u8; 4096]);
+        let mut lying = Codec::Zstd { level: 1 }.prelude(17).to_vec();
+        lying.extend_from_slice(&good[PRELUDE_LEN..]);
+        assert!(Codec::decompress(&lying).is_err(), "zstd output capped at claim");
     }
 
     #[test]
@@ -402,10 +959,31 @@ mod tests {
     fn varint_roundtrip() {
         for v in [0usize, 1, 127, 128, 300, 1 << 20] {
             let mut buf = Vec::new();
-            put_varint(&mut buf, v);
-            let mut pos = 0;
-            assert_eq!(get_varint(&buf, &mut pos).unwrap(), v);
-            assert_eq!(pos, buf.len());
+            put_varint(&mut buf, v).unwrap();
+            let chunks: Vec<&[u8]> = vec![buf.as_slice()];
+            let mut cur = InCursor::new(&chunks);
+            assert_eq!(read_varint(&mut cur).unwrap(), v);
+            assert!(cur.next_byte().is_none(), "varint must consume exactly");
         }
+    }
+
+    #[test]
+    fn chunk_view_addressing() {
+        let chunks: Vec<&[u8]> = vec![b"ab", b"", b"cdef", b"g"];
+        let v = ChunkView::new(&chunks);
+        assert_eq!(v.len(), 7);
+        let all: Vec<u8> = (0..7)
+            .map(|i| {
+                let (ci, off) = v.locate(i);
+                chunks[ci][off]
+            })
+            .collect();
+        assert_eq!(all, b"abcdefg");
+        assert_eq!(v.u32_at(1), u32::from_le_bytes(*b"bcde"), "cross-chunk word");
+        assert_eq!(v.common_prefix(2, 2, 5), 5);
+        assert_eq!(v.common_prefix(0, 2, 4), 0);
+        let mut out = Vec::new();
+        v.write_range(1, 6, &mut out).unwrap();
+        assert_eq!(out, b"bcdef");
     }
 }

@@ -8,10 +8,15 @@
 //!   control and data, compressed and not) survives `encode_header` +
 //!   vectored write → the receive-path `read_frame` decode, including
 //!   the pool-dry heap-fallback branch.
+//! * Slab-native codecs (PR 4): random corpora split at random chunk
+//!   boundaries → `compress_chunks_into` a slab → vectored wire →
+//!   `decompress_slices_into` a slab → byte-identical, for all three
+//!   codecs, with matches spanning chunk boundaries and the pool-dry
+//!   heap fallback.
 
 use theseus::memory::batch_holder::MemEnv;
 use theseus::memory::{BatchHolder, PinnedPool, PinnedSlab, SlabSlice, SlabWriter, StagedBytes};
-use theseus::network::frame::FRAME_HEADER_LEN;
+use theseus::network::frame::{DEFAULT_MAX_FRAME_BYTES, FRAME_HEADER_LEN};
 use theseus::network::{read_frame, Frame, FrameKind, Payload};
 use theseus::storage::compression::Codec;
 use theseus::testing::{check, gen, Shrink};
@@ -288,7 +293,7 @@ fn frame_case_holds(case: &FrameCase) -> bool {
 
     let total = u64::from_le_bytes(wire[..8].try_into().unwrap()) as usize;
     let mut cur = std::io::Cursor::new(&wire[8..]);
-    let got = match read_frame(&mut cur, total, || rx_pool) {
+    let got = match read_frame(&mut cur, total, DEFAULT_MAX_FRAME_BYTES, || rx_pool) {
         Ok(f) => f,
         Err(_) => return false,
     };
@@ -330,6 +335,189 @@ fn frame_roundtrip_survives_vectored_wire_and_pool_fallback() {
     check(0xF4A3E, 400, gen_frame_case, frame_case_holds);
 }
 
+// ---------------------------------------------------------------- codecs
+
+/// One slab-native codec round trip: chunked corpus → compress into a
+/// slab → vectored wire → decompress from split chunks into a slab.
+#[derive(Clone, Debug)]
+struct CodecCase {
+    /// 0 = None, 1 = Zstd, 2 = Lz4Like.
+    codec_tag: u8,
+    /// 0 = random bytes, 1 = byte runs (RLE/overlap matches),
+    /// 2 = repeated tile longer than most chunks (matches *must* span
+    /// chunk boundaries to be found).
+    style: u8,
+    /// Corpus length — raw value, reduced modulo the cap at use.
+    len: usize,
+    seed: u64,
+    /// Chunk boundaries — raw values, reduced modulo `len + 1` at use.
+    splits: Vec<usize>,
+    /// Pre-hold the whole pool on both ends: every stage must take the
+    /// heap fallback and still round-trip.
+    dry: bool,
+}
+
+impl Shrink for CodecCase {
+    fn shrink(&self) -> Vec<CodecCase> {
+        let mut out: Vec<CodecCase> = self
+            .len
+            .shrink()
+            .into_iter()
+            .map(|len| CodecCase { len, ..self.clone() })
+            .collect();
+        out.extend(
+            self.splits
+                .shrink()
+                .into_iter()
+                .map(|splits| CodecCase { splits, ..self.clone() }),
+        );
+        if self.dry {
+            out.push(CodecCase { dry: false, ..self.clone() });
+        }
+        if self.style != 0 {
+            out.push(CodecCase { style: 0, ..self.clone() });
+        }
+        out
+    }
+}
+
+fn gen_codec_case(rng: &mut Rng) -> CodecCase {
+    let nsplits = rng.gen_range(6) as usize;
+    CodecCase {
+        codec_tag: rng.gen_range(3) as u8,
+        style: rng.gen_range(3) as u8,
+        len: rng.gen_range(4000) as usize,
+        seed: rng.next_u64(),
+        splits: (0..nsplits).map(|_| rng.next_u64() as usize).collect(),
+        dry: rng.gen_bool(0.2),
+    }
+}
+
+fn make_corpus(style: u8, len: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Rng::new(seed | 1);
+    match style {
+        0 => (0..len).map(|_| rng.next_u64() as u8).collect(),
+        1 => {
+            let mut v = Vec::with_capacity(len);
+            while v.len() < len {
+                let b = rng.next_u64() as u8;
+                let run = (rng.gen_range(40) + 1) as usize;
+                v.extend(std::iter::repeat(b).take(run.min(len - v.len())));
+            }
+            v
+        }
+        _ => {
+            let tile: Vec<u8> = (0..97).map(|_| rng.next_u64() as u8).collect();
+            (0..len).map(|i| tile[i % tile.len()]).collect()
+        }
+    }
+}
+
+fn codec_case_holds(case: &CodecCase) -> bool {
+    let codec = match case.codec_tag % 3 {
+        0 => Codec::None,
+        1 => Codec::Zstd { level: 1 },
+        _ => Codec::Lz4Like,
+    };
+    let len = case.len % 4000;
+    let data = make_corpus(case.style % 3, len, case.seed);
+
+    // random chunk boundaries (empty chunks are legal slab shapes)
+    let mut points: Vec<usize> = case.splits.iter().map(|s| s % (len + 1)).collect();
+    points.sort_unstable();
+    let mut chunks: Vec<&[u8]> = Vec::new();
+    let mut prev = 0usize;
+    for &p in &points {
+        chunks.push(&data[prev..p]);
+        prev = p;
+    }
+    chunks.push(&data[prev..]);
+
+    // ---- 1. compress the chunks straight into a slab (64-byte pool
+    // buffers force multi-buffer output); a dry pool must fall back
+    // exactly like the send path does
+    let tx_pool = PinnedPool::new(64, 128).unwrap();
+    let tx_hold: Vec<_> = if case.dry {
+        (0..tx_pool.total_buffers()).map(|_| tx_pool.try_acquire().unwrap()).collect()
+    } else {
+        Vec::new()
+    };
+    let mut w = SlabWriter::new(&tx_pool);
+    let compressed: Vec<u8> = match codec.compress_chunks_into(&chunks, &mut w) {
+        Ok(n) => {
+            let slab = w.finish();
+            if slab.len() != n {
+                return false; // returned size must match bytes written
+            }
+            slab.read()
+        }
+        Err(_) => {
+            if !case.dry {
+                return false; // a roomy pool must never fail
+            }
+            drop(w);
+            codec.compress_chunks(&chunks)
+        }
+    };
+    // the chunk-cursor LZ is pure addressing: byte-identical output to
+    // the contiguous compressor, for every split
+    if codec == Codec::Lz4Like && compressed != codec.compress(&data) {
+        return false;
+    }
+    drop(tx_hold);
+    if tx_pool.free_buffers() != tx_pool.total_buffers() {
+        return false; // compression leaked pool pages
+    }
+
+    // ---- 2. vectored wire round-trip
+    let frame = Frame::data(0, 1, 9, compressed.clone());
+    let wire = frame.encode_to_vec();
+    let mut cur = std::io::Cursor::new(&wire[..]);
+    let back = match read_frame(&mut cur, wire.len(), DEFAULT_MAX_FRAME_BYTES, || None) {
+        Ok(f) => f,
+        Err(_) => return false,
+    };
+    let body = back.payload.to_vec();
+    if body != compressed {
+        return false;
+    }
+
+    // ---- 3. decompress from split chunks (receive path reassembles
+    // nothing — split at a different boundary than the input, cutting
+    // through the prelude) into a slab, or heap when dry
+    let mid = body.len() / 3;
+    let in_chunks: Vec<&[u8]> = vec![&body[..mid], &body[mid..]];
+    let rx_pool = PinnedPool::new(64, 128).unwrap();
+    let out: Vec<u8> = if case.dry {
+        let hold: Vec<_> =
+            (0..rx_pool.total_buffers()).map(|_| rx_pool.try_acquire().unwrap()).collect();
+        if SlabWriter::with_capacity(&rx_pool, data.len().max(1)).is_ok() {
+            return false; // dry pool must refuse
+        }
+        drop(hold);
+        let mut v = Vec::new();
+        match Codec::decompress_slices_into(&in_chunks, &mut v) {
+            Ok(orig) if orig == data.len() => v,
+            _ => return false,
+        }
+    } else {
+        let mut w = match SlabWriter::with_capacity(&rx_pool, data.len()) {
+            Ok(w) => w,
+            Err(_) => return false,
+        };
+        match Codec::decompress_slices_into(&in_chunks, &mut w) {
+            Ok(orig) if orig == data.len() && w.len() == orig => w.finish().read(),
+            _ => return false,
+        }
+    };
+    out == data && rx_pool.free_buffers() == rx_pool.total_buffers()
+}
+
+#[test]
+fn codec_chunked_slab_wire_roundtrip_is_byte_identical() {
+    check(0xC0DEC, 250, gen_codec_case, codec_case_holds);
+}
+
 #[test]
 fn truncated_streams_error_instead_of_hanging_or_panicking() {
     // Corollary the reader thread relies on: cutting the wire short at
@@ -343,7 +531,7 @@ fn truncated_streams_error_instead_of_hanging_or_panicking() {
             let wire = frame.encode_to_vec();
             let cut = cut % wire.len().max(1);
             let mut cur = std::io::Cursor::new(&wire[..cut]);
-            read_frame(&mut cur, wire.len(), || None).is_err()
+            read_frame(&mut cur, wire.len(), DEFAULT_MAX_FRAME_BYTES, || None).is_err()
         },
     );
 }

@@ -121,6 +121,16 @@ pub struct WorkerConfig {
     pub broadcast_threshold: usize,
     /// Adaptive Exchange: batches to accumulate before estimating.
     pub exchange_estimate_batches: usize,
+    /// Coalescing shuffle (§3.4): a per-destination exchange buffer
+    /// flushes to the wire once it holds this many bytes (plus early
+    /// under memory pressure and on upstream finish). The default
+    /// (~4 MiB) targets slab-friendly frames — many pool buffers per
+    /// message instead of many messages per pool buffer. `1` disables
+    /// coalescing (every routed batch flushes immediately, the seed's
+    /// per-fragment behavior). Validated to at most
+    /// `max_frame_bytes / 2` so a flush that overshoots the threshold
+    /// still clears the receiver's frame-length guard.
+    pub exchange_flush_bytes: usize,
 
     // ---- network executor
     /// Compress batches before sending (Fig-4 B, E toggles this).
@@ -170,6 +180,7 @@ impl Default for WorkerConfig {
             batch_rows: 8192,
             broadcast_threshold: 256 << 10,
             exchange_estimate_batches: 4,
+            exchange_flush_bytes: 4 << 20,
             net_compression: Some(Codec::Zstd { level: 1 }),
             transport: TransportKind::Inproc,
             max_frame_bytes: crate::network::frame::DEFAULT_MAX_FRAME_BYTES,
@@ -293,6 +304,17 @@ impl WorkerConfig {
         set_usize!(pinned_buf_size);
         set_usize!(pinned_buffers);
         set_usize!(batch_rows);
+        set_usize!(broadcast_threshold);
+        set_usize!(exchange_estimate_batches);
+        set_usize!(exchange_flush_bytes);
+        if get("exchange_flush_bytes").is_none() {
+            // a file that shrinks only max_frame_bytes keeps working:
+            // the *default* flush threshold follows the frame cap down
+            // (an explicit exchange_flush_bytes is still validated
+            // strictly below)
+            self.exchange_flush_bytes =
+                self.exchange_flush_bytes.min(self.max_frame_bytes / 2).max(1);
+        }
         if let Some(v) = get("pinned_pool") {
             self.pinned_pool = v.as_bool()?;
         }
@@ -402,6 +424,35 @@ impl WorkerConfig {
         if self.batch_rows == 0 {
             return Err(Error::Config("batch_rows must be >= 1".into()));
         }
+        if self.exchange_estimate_batches == 0 {
+            return Err(Error::Config(
+                "exchange_estimate_batches must be >= 1 (0 would broadcast a \
+                 zero-byte estimate before seeing any data and force Broadcast \
+                 mode for arbitrarily large build sides)"
+                    .into(),
+            ));
+        }
+        if self.exchange_flush_bytes == 0 {
+            return Err(Error::Config(
+                "exchange_flush_bytes must be >= 1 (1 = flush every batch, \
+                 i.e. coalescing off)"
+                    .into(),
+            ));
+        }
+        // A coalesced flush can overshoot the threshold by the last
+        // appended batch's share, and the frame adds header/prelude
+        // bytes — require 2x headroom so every shuffle frame clears the
+        // receiver's max_frame_bytes guard instead of dropping the
+        // connection.
+        if self.exchange_flush_bytes > self.max_frame_bytes / 2 {
+            return Err(Error::Config(format!(
+                "exchange_flush_bytes ({}) must be <= max_frame_bytes / 2 ({}): \
+                 coalesced shuffle frames would exceed the receiver's frame \
+                 limit and kill the connection",
+                self.exchange_flush_bytes,
+                self.max_frame_bytes / 2
+            )));
+        }
         if self.pinned_pool && (self.pinned_buf_size == 0 || self.pinned_buffers == 0) {
             return Err(Error::Config("pinned pool dimensions must be >= 1".into()));
         }
@@ -462,11 +513,12 @@ mod tests {
              promote_watermark = 0.4\nspill_segment_bytes = 65536\n\
              urgency_reservation = 777\nurgency_watermark = 99\n\
              residency_bonus_device = 40\nresidency_penalty_spilled = 160\n\
-             residency_rerank_batch = 8\n",
+             residency_rerank_batch = 8\nexchange_flush_bytes = 131072\n",
         )
         .unwrap();
         let mut cfg = WorkerConfig::default();
         cfg.apply(&doc).unwrap();
+        assert_eq!(cfg.exchange_flush_bytes, 128 << 10);
         assert_eq!(cfg.compute_threads, 7);
         assert_eq!(cfg.transport, TransportKind::Rdma);
         assert!(cfg.net_compression.is_none());
@@ -513,16 +565,57 @@ mod tests {
         let mut cfg = WorkerConfig::default();
         cfg.max_frame_bytes = 1024;
         assert!(cfg.validate().is_err(), "frame ceiling below 64 KiB rejected");
+        let mut cfg = WorkerConfig::default();
+        cfg.exchange_flush_bytes = 0;
+        assert!(cfg.validate().is_err());
+        // a legal frame ceiling that the flush threshold would overrun
+        let mut cfg = WorkerConfig::default();
+        cfg.max_frame_bytes = 1 << 20; // 1 MiB: valid on its own
+        assert!(
+            cfg.validate().is_err(),
+            "4 MiB default flush must be rejected against a 1 MiB frame cap"
+        );
+        cfg.exchange_flush_bytes = 256 << 10;
+        assert!(cfg.validate().is_ok(), "flush within half the frame cap");
     }
 
     #[test]
     fn max_frame_bytes_defaults_and_overrides() {
         let cfg = WorkerConfig::default();
         assert_eq!(cfg.max_frame_bytes, crate::network::frame::DEFAULT_MAX_FRAME_BYTES);
+        // shrinking only the frame cap keeps working: the default
+        // flush threshold follows it down
         let doc = TomlLite::parse("max_frame_bytes = 1048576\n").unwrap();
         let mut cfg = WorkerConfig::default();
         cfg.apply(&doc).unwrap();
         assert_eq!(cfg.max_frame_bytes, 1 << 20);
+        assert_eq!(
+            cfg.exchange_flush_bytes,
+            512 << 10,
+            "default flush clamps to half the shrunken frame cap"
+        );
+        // an explicit flush above the cap is still rejected
+        let doc = TomlLite::parse(
+            "max_frame_bytes = 1048576\nexchange_flush_bytes = 4194304\n",
+        )
+        .unwrap();
+        let mut cfg = WorkerConfig::default();
+        assert!(cfg.apply(&doc).is_err());
+        // and an explicit in-range flush applies verbatim
+        let doc = TomlLite::parse(
+            "max_frame_bytes = 1048576\nexchange_flush_bytes = 262144\n",
+        )
+        .unwrap();
+        let mut cfg = WorkerConfig::default();
+        cfg.apply(&doc).unwrap();
+        assert_eq!(cfg.exchange_flush_bytes, 256 << 10);
+    }
+
+    #[test]
+    fn exchange_estimate_batches_validated() {
+        let mut cfg = WorkerConfig::default();
+        cfg.exchange_estimate_batches = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -18,17 +18,52 @@
 //! peers). The receiving side is the [`ChannelRx`] holder the worker
 //! registered for this operator's channel; it finishes when every
 //! peer's Finish arrives.
+//!
+//! ## Destination-coalesced shuffle (§3.4, §4.1)
+//!
+//! Hash-partitioning used to fragment every input batch into
+//! per-destination slivers of a few hundred rows, each encoded, framed,
+//! compressed, and sent as its own message — `batches × workers` tiny
+//! frames, each paying header + codec + syscall overhead. The `Stream`
+//! phase now scatters rows in a single pass
+//! ([`kernels::partition_scatter`]: histogram → prefix sum → placement,
+//! reusing the device `hash_partition` stage's histogram when
+//! available) into per-destination [`ShuffleCoalescer`] buffers
+//! (append-only [`crate::types::BatchBuilder`] column accumulators). A
+//! destination flushes only when
+//!
+//! * its buffer crosses `exchange_flush_bytes` (default ~4 MiB —
+//!   slab-friendly target frames),
+//! * the upstream finishes (final drain before Finish), or
+//! * the worker's memory-pressure epoch advances
+//!   ([`crate::memory::PressureEvent::memory_raise_count`], installed
+//!   by the Data-Movement executor) — buffered shuffle state drains
+//!   *early* under pressure instead of deepening a spill cycle.
+//!
+//! Flushes are slab-native:
+//! [`send_batch_pooled`](crate::executors::network::Outbox::send_batch_pooled)
+//! encodes the coalesced batch straight into a
+//! `SlabWriter` from the worker's bounce pool (heap fallback when dry,
+//! counted), so the old `StagedBytes::Heap(batch.encode())` bounce is
+//! gone from the shuffle path. Metrics: `exchange.flush_total`,
+//! `exchange.coalesced_bytes`, `exchange.pressure_flush_total`, plus
+//! the live `exchange.buffered_bytes` gauge (coalescer memory is plain
+//! heap outside the governor's accounting; the gauge keeps it visible,
+//! and the flush threshold bounds it at `flush_bytes × destinations`
+//! per exchange).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::exec::operators::kernels::ScatterPlan;
 use crate::exec::operators::{kernels, OpCommon, Operator};
 use crate::exec::plan::ExchangeRole;
 use crate::exec::task::{Prefetch, Task};
 use crate::exec::WorkerCtx;
 use crate::executors::network::ChannelRx;
-use crate::memory::BatchHolder;
-use crate::types::RecordBatch;
+use crate::memory::{BatchHolder, PressureEvent};
+use crate::metrics::Metrics;
+use crate::types::{BatchBuilder, RecordBatch};
 use crate::Result;
 
 /// Phase-two routing decision.
@@ -55,6 +90,144 @@ enum Phase {
 /// unknown at this point in the DAG).
 const EST_GROWTH: f64 = 4.0;
 
+/// Per-destination shuffle coalescing buffers (see the module doc).
+///
+/// One instance per hash-partitioning exchange, shared by its stream
+/// tasks under a mutex: appends are scatter placements into
+/// [`BatchBuilder`]s, and the three flush triggers (size threshold,
+/// final drain, memory-pressure epoch advance) hand back whole
+/// coalesced `RecordBatch`es for the caller to send. The pressure check
+/// is a single atomic read against the epoch observed last time — no
+/// subscription, no callback plumbing.
+///
+/// The gather-append runs under one mutex for the whole exchange, so
+/// concurrent stream tasks serialize on the append memcpy (they still
+/// hash, decode, encode, and compress in parallel — the lock covers
+/// only the builder fill). Sharding to per-destination locks is a
+/// known follow-up if profiles show contention here (ROADMAP).
+pub struct ShuffleCoalescer {
+    builders: Vec<BatchBuilder>,
+    flush_bytes: usize,
+    pressure: Option<Arc<PressureEvent>>,
+    /// Memory-pressure epoch at the last check; an advance flushes.
+    seen_epoch: u64,
+    metrics: Arc<Metrics>,
+}
+
+impl ShuffleCoalescer {
+    pub fn new(
+        dests: usize,
+        flush_bytes: usize,
+        pressure: Option<Arc<PressureEvent>>,
+        metrics: Arc<Metrics>,
+    ) -> ShuffleCoalescer {
+        let seen_epoch = pressure.as_ref().map_or(0, |e| e.memory_raise_count());
+        ShuffleCoalescer {
+            builders: (0..dests.max(1)).map(|_| BatchBuilder::new()).collect(),
+            flush_bytes: flush_bytes.max(1),
+            pressure,
+            seen_epoch,
+            metrics,
+        }
+    }
+
+    pub fn buffered_rows(&self) -> usize {
+        self.builders.iter().map(|b| b.rows()).sum()
+    }
+
+    /// Keep the worker-level `exchange.buffered_bytes` gauge in step
+    /// with the builders. Coalescer memory is plain heap the governor
+    /// does not account, so the gauge is how an operator sees shuffle
+    /// buffering from the outside (the flush threshold bounds it at
+    /// `flush_bytes × destinations` per exchange).
+    fn note_buffered(&self, delta: i64) {
+        if delta != 0 {
+            self.metrics.gauge("exchange.buffered_bytes").add(delta);
+        }
+    }
+
+    fn flush(&mut self, dst: usize) -> RecordBatch {
+        let batch = self.builders[dst].finish();
+        self.metrics.counter("exchange.flush_total").inc();
+        self.metrics
+            .counter("exchange.coalesced_bytes")
+            .add(batch.byte_size() as u64);
+        self.note_buffered(-(batch.byte_size() as i64));
+        batch
+    }
+
+    /// Scatter `batch`'s rows into the destination buffers per `plan`,
+    /// returning every `(dst, coalesced_batch)` that must go out now:
+    /// pressure-stale buffers first, then destinations whose fill
+    /// crossed `flush_bytes`.
+    pub fn append(
+        &mut self,
+        batch: &RecordBatch,
+        plan: &ScatterPlan,
+    ) -> Result<Vec<(usize, RecordBatch)>> {
+        let mut out = self.take_pressure_flushes();
+        for dst in 0..self.builders.len() {
+            let rows = plan.rows_for(dst);
+            if rows.is_empty() {
+                continue;
+            }
+            let before = self.builders[dst].byte_size();
+            self.builders[dst].append_gather(batch, rows)?;
+            self.note_buffered((self.builders[dst].byte_size() - before) as i64);
+            if self.builders[dst].byte_size() >= self.flush_bytes {
+                let flushed = self.flush(dst);
+                out.push((dst, flushed));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Flush everything buffered when the memory-pressure epoch moved
+    /// since the last look (also polled between appends, so buffers
+    /// drain under pressure even while the upstream is quiet).
+    pub fn take_pressure_flushes(&mut self) -> Vec<(usize, RecordBatch)> {
+        let Some(event) = &self.pressure else {
+            return Vec::new();
+        };
+        let epoch = event.memory_raise_count();
+        if epoch == self.seen_epoch {
+            return Vec::new();
+        }
+        self.seen_epoch = epoch;
+        let mut out = Vec::new();
+        for dst in 0..self.builders.len() {
+            if !self.builders[dst].is_empty() {
+                self.metrics.counter("exchange.pressure_flush_total").inc();
+                let flushed = self.flush(dst);
+                out.push((dst, flushed));
+            }
+        }
+        out
+    }
+
+    /// Final drain: every non-empty destination buffer, regardless of
+    /// size (the upstream finished).
+    pub fn flush_all(&mut self) -> Vec<(usize, RecordBatch)> {
+        let mut out = Vec::new();
+        for dst in 0..self.builders.len() {
+            if !self.builders[dst].is_empty() {
+                let flushed = self.flush(dst);
+                out.push((dst, flushed));
+            }
+        }
+        out
+    }
+}
+
+impl Drop for ShuffleCoalescer {
+    fn drop(&mut self) {
+        // an aborted query drops buffered rows without flushing: settle
+        // the gauge so it keeps meaning "bytes currently buffered"
+        let left: usize = self.builders.iter().map(|b| b.byte_size()).sum();
+        self.note_buffered(-(left as i64));
+    }
+}
+
 pub struct ExchangeOp {
     common: Arc<OpCommon>,
     input: BatchHolder,
@@ -78,6 +251,9 @@ pub struct ExchangeOp {
     seen_bytes: Arc<AtomicU64>,
     seen_batches: Arc<AtomicU64>,
     sent_batches: Arc<AtomicU64>,
+    /// Per-destination coalescing buffers (HashPartition mode only;
+    /// built lazily on the first routed batch, shared by stream tasks).
+    coalescer: Arc<Mutex<Option<ShuffleCoalescer>>>,
 }
 
 impl ExchangeOp {
@@ -111,6 +287,7 @@ impl ExchangeOp {
             seen_bytes: Arc::new(AtomicU64::new(0)),
             seen_batches: Arc::new(AtomicU64::new(0)),
             sent_batches: Arc::new(AtomicU64::new(0)),
+            coalescer: Arc::new(Mutex::new(None)),
         }
     }
 
@@ -128,6 +305,79 @@ impl ExchangeOp {
         self.lip_cut_rows.load(Ordering::Relaxed)
     }
 
+    /// Rows currently buffered in the shuffle coalescing builders
+    /// (bench/test observability).
+    pub fn buffered_shuffle_rows(&self) -> usize {
+        self.coalescer
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map_or(0, |c| c.buffered_rows())
+    }
+
+    /// Send one coalesced flush slab-native (heap fallback when the
+    /// pool is dry or absent — counted by the pool gauge).
+    ///
+    /// A flush can overshoot `exchange_flush_bytes` by the *last
+    /// appended batch's* per-destination share, which nothing bounds
+    /// (an upstream operator may emit one huge batch skewed to one
+    /// destination). The config validation's 2× headroom covers the
+    /// common overshoot; the hard guarantee that no frame trips the
+    /// receiver's `max_frame_bytes` guard is this split.
+    fn send_flushed(
+        ctx: &WorkerCtx,
+        channel: u32,
+        dst: usize,
+        batch: RecordBatch,
+        sent: &AtomicU64,
+    ) -> Result<()> {
+        let cap = (ctx.config.max_frame_bytes / 2).max(1);
+        let chunks = if batch.byte_size() > cap {
+            let per = ((batch.rows() * cap) / batch.byte_size()).max(1);
+            let chunks = batch.split(per);
+            ctx.metrics
+                .counter("exchange.oversize_split_total")
+                .add((chunks.len() - 1) as u64);
+            chunks
+        } else {
+            vec![batch]
+        };
+        for b in chunks {
+            ctx.outbox
+                .send_batch_pooled(dst, channel, &b, ctx.env.pinned.as_ref())?;
+            sent.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    /// Package a set of coalescer flushes as one tracked compute task
+    /// — shared by the Stream pressure sweep and the final drain.
+    /// `poll` runs on the worker's single driver thread, and
+    /// `Outbox::push` blocks when the queue is full: sending inline
+    /// would park *every* operator on this worker behind a slow peer,
+    /// exactly during the pressure episodes the sweep exists for. As a
+    /// tracked task the send blocks only one compute thread, and the
+    /// held `inflight` keeps the completion branch from racing a
+    /// Finish past a still-draining flush.
+    fn spawn_drain(&self, flushes: Vec<(usize, RecordBatch)>, tasks: &mut Vec<Task>) {
+        if flushes.is_empty() {
+            return;
+        }
+        self.common.issue();
+        let payload = Arc::new(Mutex::new(Some(flushes)));
+        let channel = self.channel;
+        let sent = self.sent_batches.clone();
+        let run = self.common.track(move |ctx: &WorkerCtx| {
+            if let Some(flushes) = payload.lock().unwrap().take() {
+                for (dst, coalesced) in flushes {
+                    Self::send_flushed(ctx, channel, dst, coalesced, &sent)?;
+                }
+            }
+            Ok(())
+        });
+        tasks.push(Task::new(self.common.id, self.common.base_priority, run));
+    }
+
     /// Route one batch according to `mode`.
     fn route(
         ctx: &WorkerCtx,
@@ -136,6 +386,7 @@ impl ExchangeOp {
         key: &str,
         batch: &RecordBatch,
         sent: &AtomicU64,
+        coalescer: &Mutex<Option<ShuffleCoalescer>>,
     ) -> Result<()> {
         let workers = ctx.num_workers();
         match mode {
@@ -156,19 +407,25 @@ impl ExchangeOp {
                     .as_ref()
                     .map(|r| r.manifest().num_parts as u32)
                     .unwrap_or(16);
-                let ids = kernels::partition_ids(ctx, keys, parts)?;
-                // rows for partition p go to worker p % workers
-                let mut by_dst: Vec<Vec<u32>> = vec![Vec::new(); workers];
-                for (row, &p) in ids.iter().enumerate() {
-                    by_dst[p as usize % workers].push(row as u32);
-                }
-                for (dst, idx) in by_dst.into_iter().enumerate() {
-                    if idx.is_empty() {
-                        continue;
-                    }
-                    let sub = batch.take(&idx)?;
-                    ctx.outbox.send_batch(dst, channel, &sub)?;
-                    sent.fetch_add(1, Ordering::Relaxed);
+                // single-pass scatter: rows for partition p belong to
+                // worker p % workers, laid out per destination
+                let plan = kernels::partition_scatter(ctx, keys, parts, workers)?;
+                let flushes = {
+                    let mut guard = coalescer.lock().unwrap();
+                    let co = guard.get_or_insert_with(|| {
+                        ShuffleCoalescer::new(
+                            workers,
+                            ctx.config.exchange_flush_bytes,
+                            ctx.env.arena.pressure_event(),
+                            ctx.metrics.clone(),
+                        )
+                    });
+                    co.append(batch, &plan)?
+                };
+                // send outside the buffer lock: outbox backpressure must
+                // pace this task without also parking its siblings
+                for (dst, coalesced) in flushes {
+                    Self::send_flushed(ctx, channel, dst, coalesced, sent)?;
                 }
             }
         }
@@ -276,6 +533,18 @@ impl Operator for ExchangeOp {
                         }
                     }
                 }
+                // Pressure sweep (driver frequency): when the worker's
+                // memory-pressure epoch advanced, drain the coalescing
+                // buffers even if no new input arrives — buffered
+                // shuffle rows must never sit on a worker that is busy
+                // spilling.
+                if mode == ExchangeMode::HashPartition {
+                    let flushes = match self.coalescer.lock().unwrap().as_mut() {
+                        Some(co) => co.take_pressure_flushes(),
+                        None => Vec::new(),
+                    };
+                    self.spawn_drain(flushes, &mut tasks);
+                }
                 let avail = self.pending.len() + self.input.len();
                 let mut budget = avail.min(
                     self.common
@@ -292,6 +561,7 @@ impl Operator for ExchangeOp {
                     let sent = self.sent_batches.clone();
                     let lip = self.lip_filter.clone();
                     let lip_cut = self.lip_cut_rows.clone();
+                    let coalescer = self.coalescer.clone();
                     let run = self.common.track(move |ctx: &WorkerCtx| {
                         // Bytes-level fast path: Broadcast and
                         // un-filtered PassThrough never look at rows, so
@@ -355,7 +625,9 @@ impl Operator for ExchangeOp {
                                 }
                             }
                             if !batch.is_empty() {
-                                Self::route(ctx, mode, channel, &key, &batch, &sent)?;
+                                Self::route(
+                                    ctx, mode, channel, &key, &batch, &sent, &coalescer,
+                                )?;
                             }
                         }
                         Ok(())
@@ -374,11 +646,24 @@ impl Operator for ExchangeOp {
                     && self.pending.is_empty()
                     && self.common.inflight() == 0
                 {
-                    for dst in 0..ctx.num_workers() {
-                        ctx.outbox.send_finish(dst, self.channel)?;
+                    // final drain: every buffered destination goes out
+                    // before any peer sees our Finish. Non-empty
+                    // buffers become one more tracked task (its held
+                    // inflight defers this branch); Finish goes out
+                    // only once the coalescer has fully drained.
+                    let flushes = match self.coalescer.lock().unwrap().as_mut() {
+                        Some(co) => co.flush_all(),
+                        None => Vec::new(),
+                    };
+                    if !flushes.is_empty() {
+                        self.spawn_drain(flushes, &mut tasks);
+                    } else {
+                        for dst in 0..ctx.num_workers() {
+                            ctx.outbox.send_finish(dst, self.channel)?;
+                        }
+                        *self.state.lock().unwrap() = Phase::Done;
+                        self.common.mark_done();
                     }
-                    *self.state.lock().unwrap() = Phase::Done;
-                    self.common.mark_done();
                 }
             }
             Phase::Done => {}
@@ -394,9 +679,260 @@ impl Operator for ExchangeOp {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
+
+    use crate::config::{TransportKind, WorkerConfig};
+    use crate::executors::network::{NetworkExecutor, Outbox, Router};
+    use crate::memory::batch_holder::MemEnv;
+    use crate::network::InprocHub;
+    use crate::sim::SimContext;
+    use crate::types::Column;
+    use crate::util::hash;
 
     #[test]
     fn mode_constants() {
         assert_ne!(ExchangeMode::Broadcast, ExchangeMode::HashPartition);
+    }
+
+    fn keyed_batch(rows: usize, salt: i64) -> RecordBatch {
+        RecordBatch::new(vec![
+            Column::i64("k", (0..rows as i64).map(|i| i * 31 + salt).collect()),
+            Column::i64("w", (0..rows as i64).map(|i| i + salt * 1000).collect()),
+        ])
+        .unwrap()
+    }
+
+    /// Reference routing: the seed's per-batch per-destination take
+    /// lists, as a sorted row multiset per destination.
+    fn reference_rows(batches: &[RecordBatch], workers: usize) -> Vec<Vec<(i64, i64)>> {
+        let mut by_dst = vec![Vec::new(); workers];
+        for b in batches {
+            let k = b.column("k").unwrap().data.as_i64().unwrap();
+            let w = b.column("w").unwrap().data.as_i64().unwrap();
+            for i in 0..b.rows() {
+                let dst = hash::partition_id(k[i], 16) as usize % workers;
+                by_dst[dst].push((k[i], w[i]));
+            }
+        }
+        for d in &mut by_dst {
+            d.sort_unstable();
+        }
+        by_dst
+    }
+
+    fn collected_rows(batches: &[RecordBatch]) -> Vec<(i64, i64)> {
+        let mut rows = Vec::new();
+        for b in batches {
+            let k = b.column("k").unwrap().data.as_i64().unwrap();
+            let w = b.column("w").unwrap().data.as_i64().unwrap();
+            rows.extend(k.iter().copied().zip(w.iter().copied()));
+        }
+        rows.sort_unstable();
+        rows
+    }
+
+    #[test]
+    fn coalescer_flushes_on_threshold_and_preserves_routing() {
+        let ctx = crate::exec::WorkerCtx::test();
+        let metrics = Arc::new(crate::metrics::Metrics::default());
+        let workers = 3;
+        // 2 i64 columns -> 16 bytes/row; flush after ~32 rows/dst
+        let mut co = ShuffleCoalescer::new(workers, 512, None, metrics.clone());
+        let batches: Vec<RecordBatch> = (0..5).map(|s| keyed_batch(100, s)).collect();
+        let mut got: Vec<Vec<RecordBatch>> = vec![Vec::new(); workers];
+        for b in &batches {
+            let keys = b.column("k").unwrap().data.as_i64().unwrap();
+            let plan = kernels::partition_scatter(&ctx, keys, 16, workers).unwrap();
+            for (dst, flushed) in co.append(b, &plan).unwrap() {
+                assert!(flushed.byte_size() >= 512, "flush crossed the threshold");
+                got[dst].push(flushed);
+            }
+        }
+        for (dst, flushed) in co.flush_all() {
+            got[dst].push(flushed);
+        }
+        assert_eq!(co.buffered_rows(), 0, "flush_all drains everything");
+        let reference = reference_rows(&batches, workers);
+        let mut total_flushes = 0;
+        for dst in 0..workers {
+            assert_eq!(collected_rows(&got[dst]), reference[dst], "dst {dst}");
+            total_flushes += got[dst].len();
+        }
+        assert_eq!(metrics.counter_value("exchange.flush_total"), total_flushes as u64);
+        assert_eq!(
+            metrics.counter_value("exchange.coalesced_bytes"),
+            batches.iter().map(|b| b.byte_size() as u64).sum::<u64>()
+        );
+        assert_eq!(metrics.counter_value("exchange.pressure_flush_total"), 0);
+    }
+
+    #[test]
+    fn pressure_epoch_advance_flushes_buffers_early() {
+        let ctx = crate::exec::WorkerCtx::test();
+        let metrics = Arc::new(crate::metrics::Metrics::default());
+        let event = PressureEvent::new();
+        // threshold far above anything appended here
+        let mut co = ShuffleCoalescer::new(2, 1 << 30, Some(event.clone()), metrics.clone());
+        let b = keyed_batch(64, 7);
+        let keys = b.column("k").unwrap().data.as_i64().unwrap();
+        let plan = kernels::partition_scatter(&ctx, keys, 16, 2).unwrap();
+        assert!(co.append(&b, &plan).unwrap().is_empty(), "below threshold");
+        assert_eq!(co.buffered_rows(), 64);
+        assert_eq!(
+            metrics.gauge_value("exchange.buffered_bytes"),
+            b.byte_size() as i64,
+            "buffered heap must be visible on the gauge"
+        );
+        assert!(co.take_pressure_flushes().is_empty(), "no pressure yet");
+
+        event.raise_host(1);
+        let flushed = co.take_pressure_flushes();
+        assert!(!flushed.is_empty(), "epoch advance must flush");
+        assert_eq!(flushed.iter().map(|(_, b)| b.rows()).sum::<usize>(), 64);
+        assert_eq!(co.buffered_rows(), 0);
+        assert_eq!(
+            metrics.counter_value("exchange.pressure_flush_total"),
+            flushed.len() as u64
+        );
+        assert_eq!(metrics.gauge_value("exchange.buffered_bytes"), 0);
+        // the epoch was consumed: quiet again until the next raise
+        assert!(co.take_pressure_flushes().is_empty());
+        event.raise_device(1);
+        assert!(co.take_pressure_flushes().is_empty(), "nothing buffered");
+
+        // dropping a part-filled coalescer settles the gauge
+        let plan = kernels::partition_scatter(&ctx, keys, 16, 2).unwrap();
+        assert!(co.append(&b, &plan).unwrap().is_empty());
+        assert!(metrics.gauge_value("exchange.buffered_bytes") > 0);
+        drop(co);
+        assert_eq!(metrics.gauge_value("exchange.buffered_bytes"), 0);
+    }
+
+    /// Acceptance: a multi-batch hash-partition shuffle emits at most
+    /// ⌈total_bytes / exchange_flush_bytes⌉ + workers frames (the seed
+    /// emitted batches × workers), every payload slab-backed, and the
+    /// per-destination row multiset identical to the seed routing.
+    #[test]
+    fn coalesced_shuffle_bounds_frames_and_stays_pinned() {
+        const WORKERS: usize = 2;
+        const BATCHES: usize = 8;
+        const ROWS: usize = 512;
+        const FLUSH: usize = 16 << 10;
+
+        let cfg = WorkerConfig {
+            num_workers: WORKERS,
+            exchange_estimate_batches: 1,
+            exchange_flush_bytes: FLUSH,
+            ..WorkerConfig::test()
+        };
+        let mut ctx = crate::exec::WorkerCtx::test_with(Arc::new(cfg));
+        let pool = ctx.env.pinned.clone().unwrap();
+
+        let hub = InprocHub::new(WORKERS, &SimContext::test(), TransportKind::Tcp);
+        let mut exes = Vec::new();
+        let mut routers = Vec::new();
+        for ep in hub.endpoints() {
+            let router = Arc::new(Router::new());
+            let outbox = Arc::new(Outbox::new(64));
+            routers.push(router.clone());
+            exes.push(NetworkExecutor::start(
+                Arc::new(ep),
+                outbox,
+                router,
+                None,
+                Some(pool.clone()),
+                1,
+            ));
+        }
+        ctx.outbox = exes[0].outbox().clone();
+
+        let rx_env = MemEnv { pinned: Some(pool.clone()), ..ctx.env.clone() };
+        let rx_holders: Vec<BatchHolder> = (0..WORKERS)
+            .map(|w| BatchHolder::new(format!("rx{w}"), rx_env.clone()))
+            .collect();
+        let rx0 = Arc::new(ChannelRx::new(rx_holders[0].clone(), 1));
+        routers[0].register(7, rx0.clone());
+        routers[1].register(7, Arc::new(ChannelRx::new(rx_holders[1].clone(), 1)));
+
+        let input = BatchHolder::new("in", ctx.env.clone());
+        let pending = BatchHolder::new("pending", ctx.env.clone());
+        let batches: Vec<RecordBatch> =
+            (0..BATCHES as i64).map(|s| keyed_batch(ROWS, s)).collect();
+        for b in &batches {
+            input.push_batch_host(b.clone()).unwrap();
+        }
+        input.finish();
+
+        let op = ExchangeOp::new(
+            0,
+            1000,
+            2,
+            input,
+            pending,
+            rx0,
+            7,
+            "k".into(),
+            ExchangeRole::Shuffle,
+            None,
+            None,
+        );
+        // the missing peer's estimate (worker 1 runs no exchange here)
+        exes[1].outbox().send_estimate(0, 7, 0).unwrap();
+
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while !op.is_done() {
+            assert!(std::time::Instant::now() < deadline, "exchange stalled");
+            for t in op.poll(&ctx).unwrap() {
+                (t.run)(&ctx).unwrap();
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(exes[0].flush(Duration::from_secs(2)));
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while !rx_holders.iter().all(|h| h.is_finished()) {
+            assert!(std::time::Instant::now() < deadline, "finish lost");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+
+        // frame bound: ⌈total/flush⌉ + workers, far below batches×workers
+        let total_bytes: usize = batches.iter().map(|b| b.byte_size()).sum();
+        let bound = total_bytes.div_ceil(FLUSH) + WORKERS;
+        let frames = op.sent_batches();
+        assert!(
+            frames as usize <= bound,
+            "{frames} frames > bound {bound} (seed: {})",
+            BATCHES * WORKERS
+        );
+        assert!(frames >= 1);
+        assert_eq!(
+            ctx.metrics.counter_value("exchange.flush_total"),
+            frames,
+            "every sent frame is one coalesced flush"
+        );
+        assert_eq!(
+            ctx.metrics.counter_value("exchange.coalesced_bytes"),
+            total_bytes as u64
+        );
+        assert_eq!(ctx.metrics.counter_value("exchange.pressure_flush_total"), 0);
+        assert_eq!(op.buffered_shuffle_rows(), 0, "final drain left nothing behind");
+        // zero heap on the shuffle path: no pooled-send fallback fired
+        assert_eq!(pool.codec_heap_fallback_bytes(), 0);
+
+        // routing identity vs the seed per-batch take path
+        let reference = reference_rows(&batches, WORKERS);
+        for (dst, holder) in rx_holders.iter().enumerate() {
+            assert!(
+                holder.residency().host_pinned_bytes > 0,
+                "dst {dst}: payloads must arrive slab-backed"
+            );
+            let mut got = Vec::new();
+            while let Some(db) = holder.pop_device().unwrap() {
+                got.push(db.batch.clone());
+            }
+            assert_eq!(collected_rows(&got), reference[dst], "dst {dst}");
+        }
+        for e in &exes {
+            e.stop();
+        }
     }
 }

@@ -167,6 +167,119 @@ pub fn partition_ids(ctx: &WorkerCtx, keys: &[i64], parts: u32) -> Result<Vec<i3
         .collect())
 }
 
+/// Destination layout of one partition scatter: `perm` lists the batch's
+/// row indices grouped by destination, `offsets[d]..offsets[d+1]` being
+/// destination `d`'s slice. Rows keep their batch-relative order within
+/// a destination, so the scatter is stable and byte-comparable to the
+/// per-destination `take` gathers it replaces.
+pub struct ScatterPlan {
+    perm: Vec<u32>,
+    /// `dests + 1` exclusive prefix sums over the destination histogram.
+    offsets: Vec<usize>,
+}
+
+impl ScatterPlan {
+    pub fn dests(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn total_rows(&self) -> usize {
+        self.perm.len()
+    }
+
+    /// Row indices bound for destination `dst`, in batch order.
+    pub fn rows_for(&self, dst: usize) -> &[u32] {
+        &self.perm[self.offsets[dst]..self.offsets[dst + 1]]
+    }
+}
+
+/// Build a [`ScatterPlan`] from partition ids when the per-destination
+/// histogram is already known (the device path's `hash_partition` stage
+/// returns one per launch): a single placement pass over `ids`.
+fn scatter_with_counts(ids: &[i32], counts: &[usize]) -> ScatterPlan {
+    let dests = counts.len();
+    let mut offsets = vec![0usize; dests + 1];
+    for d in 0..dests {
+        offsets[d + 1] = offsets[d] + counts[d];
+    }
+    let mut cursor = offsets[..dests].to_vec();
+    let mut perm = vec![0u32; ids.len()];
+    for (row, &p) in ids.iter().enumerate() {
+        let d = (p as u32 as usize) % dests;
+        perm[cursor[d]] = row as u32;
+        cursor[d] += 1;
+    }
+    ScatterPlan { perm, offsets }
+}
+
+/// Histogram → exclusive prefix sum → scatter over precomputed
+/// partition ids (rows for partition `p` go to destination
+/// `p % dests`). Pure host reference used by the fallback path and the
+/// shuffle property tests.
+pub fn scatter_plan(ids: &[i32], dests: usize) -> ScatterPlan {
+    let mut counts = vec![0usize; dests.max(1)];
+    for &p in ids {
+        counts[(p as u32 as usize) % dests.max(1)] += 1;
+    }
+    scatter_with_counts(ids, &counts)
+}
+
+/// Single-pass partition scatter for the coalescing exchange: partition
+/// `keys` into `parts` and return the per-destination row layout in one
+/// go. The device path reuses the `hash_partition` stage's histogram
+/// output (the host never re-counts the ids — it only places them);
+/// without a registry, ids and the destination histogram are computed
+/// together in one host pass. Replaces `route`'s per-destination
+/// `Vec<Vec<u32>>` push loop + N independent `take` gathers.
+pub fn partition_scatter(
+    ctx: &WorkerCtx,
+    keys: &[i64],
+    parts: u32,
+    dests: usize,
+) -> Result<ScatterPlan> {
+    charge(ctx, keys.len() * 8);
+    let dests = dests.max(1);
+    if let Some(reg) = &ctx.registry {
+        if parts as usize == reg.manifest().num_parts {
+            let n = reg.manifest().batch_rows;
+            let mut ids = Vec::with_capacity(keys.len());
+            let mut counts = vec![0usize; dests];
+            for start in (0..keys.len()).step_by(n) {
+                let len = n.min(keys.len() - start);
+                let r = reg.execute(
+                    "hash_partition",
+                    &[
+                        Value::I64(keys[start..start + len].to_vec()),
+                        Value::I32(vec![1; len]),
+                    ],
+                )?;
+                ids.extend_from_slice(&r[0].as_i32()?[..len]);
+                for (p, &c) in r[1].as_i32()?.iter().enumerate() {
+                    counts[p % dests] += c as usize;
+                }
+            }
+            if counts.iter().sum::<usize>() == ids.len() {
+                return Ok(scatter_with_counts(&ids, &counts));
+            }
+            // a histogram that disagrees with the id count would make
+            // the placement pass write out of bounds — recount on host
+            // (correctness over the saved pass) and say so
+            log::warn!("hash_partition histogram/id mismatch; host recount");
+            return Ok(scatter_plan(&ids, dests));
+        }
+    }
+    // host fallback: ids and the destination histogram in one pass,
+    // then the placement pass
+    let mut ids = Vec::with_capacity(keys.len());
+    let mut counts = vec![0usize; dests];
+    for &k in keys {
+        let p = hash::partition_id(k, parts) as i32;
+        counts[(p as usize) % dests] += 1;
+        ids.push(p);
+    }
+    Ok(scatter_with_counts(&ids, &counts))
+}
+
 // ----------------------------------------------------------------- bloom
 
 /// Build a bloom filter over `keys` (OR-merged across launches).
@@ -372,6 +485,55 @@ mod tests {
             bloom_probe(&dev, &keys, &dc).unwrap(),
             bloom_probe(&host, &keys, &hc).unwrap()
         );
+    }
+
+    #[test]
+    fn scatter_plan_matches_per_destination_take_lists() {
+        // The scatter must reproduce the seed routing exactly: rows for
+        // partition p at destination p % workers, in batch order.
+        let ctx = WorkerCtx::test();
+        let keys: Vec<i64> = (0..333).map(|i| i * 31 - 77).collect();
+        for workers in [1usize, 2, 5, 8] {
+            let plan = partition_scatter(&ctx, &keys, 16, workers).unwrap();
+            assert_eq!(plan.dests(), workers);
+            assert_eq!(plan.total_rows(), keys.len());
+            let mut by_dst: Vec<Vec<u32>> = vec![Vec::new(); workers];
+            for (row, &k) in keys.iter().enumerate() {
+                by_dst[hash::partition_id(k, 16) as usize % workers].push(row as u32);
+            }
+            for (dst, want) in by_dst.iter().enumerate() {
+                assert_eq!(plan.rows_for(dst), &want[..], "dst {dst} of {workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_plan_handles_empty_and_single_dest() {
+        let plan = scatter_plan(&[], 4);
+        assert_eq!(plan.total_rows(), 0);
+        for d in 0..4 {
+            assert!(plan.rows_for(d).is_empty());
+        }
+        let plan = scatter_plan(&[3, 1, 2], 1);
+        assert_eq!(plan.rows_for(0), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn device_scatter_matches_host_fallback() {
+        let Ok(dev) = WorkerCtx::test_with_registry() else {
+            return;
+        };
+        let host = WorkerCtx::test();
+        let keys: Vec<i64> = (0..20_000).map(|i| i * 7 - 3).collect();
+        let parts = dev.registry.as_ref().unwrap().manifest().num_parts as u32;
+        for workers in [3usize, 16] {
+            let d = partition_scatter(&dev, &keys, parts, workers).unwrap();
+            let h = partition_scatter(&host, &keys, parts, workers).unwrap();
+            assert_eq!(d.total_rows(), h.total_rows());
+            for dst in 0..workers {
+                assert_eq!(d.rows_for(dst), h.rows_for(dst), "dst {dst}");
+            }
+        }
     }
 
     #[test]

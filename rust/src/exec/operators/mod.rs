@@ -17,7 +17,7 @@ pub mod scan;
 pub mod sort;
 
 pub use agg::HashAggOp;
-pub use exchange::ExchangeOp;
+pub use exchange::{ExchangeOp, ShuffleCoalescer};
 pub use filter::{FilterOp, ProjectOp};
 pub use join::HashJoinOp;
 pub use scan::ScanOp;

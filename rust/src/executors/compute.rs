@@ -84,6 +84,14 @@ impl ResidencyBonus {
         }
         let raw = (self.device_bonus as f64 * snap.device_frac()
             - self.spilled_penalty as f64 * snap.spilled_frac()) as i64;
+        self.age_score(raw, age)
+    }
+
+    /// Decay a raw age-0 score toward the device bonus — the one place
+    /// the decay curve lives, so the re-rank pass can derive an aged
+    /// score from an already-taken snapshot instead of re-snapshotting
+    /// every input holder a second time.
+    pub fn age_score(&self, raw: i64, age: u32) -> i64 {
         let gap = self.device_bonus.saturating_sub(raw);
         self.device_bonus - (gap >> age.min(62))
     }
@@ -96,6 +104,11 @@ struct Queued {
     seq: u64,
     /// Re-rank generations survived (decays the spilled penalty).
     age: u32,
+    /// The age-0 score this entry was last rated against. A re-rank
+    /// whose fresh age-0 score drops below it means the inputs'
+    /// residency *worsened* since the entry last looked — the decay
+    /// clock resets so the new penalty binds (soundness gap #1).
+    base_score: i64,
     task: Task,
 }
 
@@ -135,8 +148,12 @@ pub struct TaskQueue {
     /// Holder ids whose residency changed since the last re-rank pass
     /// (fed by the Data-Movement executor's completed moves).
     dirty_holders: Mutex<HashSet<usize>>,
-    /// Where a capped re-rank pass stopped; the next pass resumes there
-    /// so tail entries are served before head entries are re-aged.
+    /// Stable resume point of a capped re-rank pass: the submission
+    /// *seq* where the last pass stopped. Relevant entries are scanned
+    /// in seq order starting here, so the rotation addresses the same
+    /// tasks across passes regardless of how `BinaryHeap::into_vec`
+    /// happens to permute the heap — the bounded-starvation guarantee
+    /// holds at any `rerank_batch`.
     rerank_cursor: AtomicU64,
     metrics: Arc<Metrics>,
 }
@@ -197,10 +214,12 @@ impl TaskQueue {
 
     pub fn submit(&self, task: Task) {
         let prefetchable = task.prefetch.is_some();
+        let score = self.effective_priority(&task, 0);
         let q = Queued {
-            priority: self.effective_priority(&task, 0),
+            priority: score,
             seq: self.seq.fetch_add(1, Ordering::Relaxed),
             age: 0,
+            base_score: score,
             task,
         };
         self.heap.lock().unwrap().push(q);
@@ -216,10 +235,22 @@ impl TaskQueue {
     /// `bonus.rerank_batch` relevant entries (inputs intersect the
     /// dirty holder set, or already carrying a penalty that must age)
     /// are re-scored per pass; the rest keep their rank until the next
-    /// pop. A capped pass records where it stopped and the next pass
-    /// resumes there, so every relevant entry is eventually served and
-    /// no entry is re-aged before the scan wraps around. The heap is
-    /// torn down and rebuilt (O(n)) only when a relevant entry exists.
+    /// pop. The heap is torn down and rebuilt (O(n)) only when a
+    /// relevant entry exists.
+    ///
+    /// Two soundness rules (PR-4 review gaps):
+    ///
+    /// * An entry whose inputs got **colder** (its fresh age-0 score
+    ///   drops below the `base_score` it was last rated against) has
+    ///   its decay clock reset — the spilled penalty binds again
+    ///   instead of riding on age earned while the inputs were hot.
+    ///   Comparing against `base_score` (not the decayed rank) keeps a
+    ///   merely *re-notified* unchanged holder from resetting decay.
+    /// * Relevant entries are scanned in **submission-seq order** from
+    ///   a seq-valued cursor, not by position in the transient
+    ///   `into_vec` permutation, so a capped pass resumes at the same
+    ///   logical task next time and every relevant entry is served
+    ///   before any is re-aged (bounded starvation at any batch size).
     fn maybe_rerank(&self, heap: &mut BinaryHeap<Queued>) {
         if !self.bonus.is_enabled() || heap.is_empty() {
             return;
@@ -245,29 +276,59 @@ impl TaskQueue {
         }
         let top_before = heap.peek().map(|q| q.seq);
         let mut entries: Vec<Queued> = std::mem::take(heap).into_vec();
-        let len = entries.len();
-        let start = self.rerank_cursor.load(Ordering::Relaxed) as usize % len;
+        // (seq, index) of every relevant entry, rotated to resume at
+        // the stable cursor seq
+        let mut relevant: Vec<(u64, usize)> = entries
+            .iter()
+            .enumerate()
+            .filter(|(_, q)| is_relevant(q))
+            .map(|(i, q)| (q.seq, i))
+            .collect();
+        relevant.sort_unstable();
+        let cursor = self.rerank_cursor.load(Ordering::Relaxed);
+        let start = relevant.partition_point(|&(seq, _)| seq < cursor);
         let mut rescored = 0u64;
         let mut deferred = false;
-        for i in 0..len {
-            let idx = (start + i) % len;
-            if !is_relevant(&entries[idx]) {
-                continue;
-            }
+        let mut last_seq = cursor;
+        for k in 0..relevant.len() {
+            let (seq, idx) = relevant[(start + k) % relevant.len()];
             if rescored as usize >= self.bonus.rerank_batch {
-                // resume here next pass, and keep the dirty set so the
-                // next pop continues serving the unreached entries
+                // resume at this task next pass, and keep the dirty set
+                // so the next pop continues serving the unreached tail
                 deferred = true;
-                self.rerank_cursor.store(idx as u64, Ordering::Relaxed);
+                self.rerank_cursor.store(seq, Ordering::Relaxed);
                 break;
             }
             let q = &mut entries[idx];
-            q.age = q.age.saturating_add(1);
-            q.priority = self.effective_priority(&q.task, q.age);
+            // one residency snapshot per entry: the aged score is
+            // derived from the fresh one (same decay curve), not
+            // re-snapshotted — input holders are locked once, not twice
+            let fresh = self.effective_priority(&q.task, 0);
+            if fresh < q.base_score {
+                // inputs worsened since this entry was last scored:
+                // restart the penalty clock at the new, colder truth
+                // instead of letting age earned while hot erase it
+                q.age = 0;
+                q.priority = fresh;
+            } else {
+                q.age = q.age.saturating_add(1);
+                q.priority = if q.task.inputs.is_empty() {
+                    fresh
+                } else {
+                    q.task.priority + self.bonus.age_score(fresh - q.task.priority, q.age)
+                };
+            }
+            q.base_score = fresh;
+            last_seq = seq;
             rescored += 1;
         }
         if deferred {
             self.dirty_holders.lock().unwrap().extend(dirty);
+        } else {
+            // full pass: rotate past the last task served so future
+            // capped passes keep round-robining instead of re-serving
+            // the head
+            self.rerank_cursor.store(last_seq.wrapping_add(1), Ordering::Relaxed);
         }
         *heap = BinaryHeap::from(entries);
         self.metrics.gauge("sched.residency_rerank_total").add(rescored as i64);
@@ -693,6 +754,85 @@ mod tests {
         // the deferred remainder is processed by the next pop
         let _ = q.try_pop().unwrap();
         assert!(metrics.gauge_value("sched.residency_rerank_total") >= 2);
+    }
+
+    #[test]
+    fn worsened_inputs_reset_rerank_age() {
+        // Soundness gap #1: a task whose penalty decayed while queued
+        // must NOT keep that decay credit after its inputs move and
+        // land cold again — the spilled penalty re-binds at age 0.
+        let env = MemEnv::test(1 << 20);
+        let dev = device_holder(&env);
+        let h = BatchHolder::new("moving", env.clone());
+        h.push_batch_host(batch(200)).unwrap();
+        h.spill_host_one().unwrap(); // starts spilled: penalized
+        let metrics = Arc::new(crate::metrics::Metrics::default());
+        let q = TaskQueue::with_residency(bonus(), metrics.clone());
+        q.submit(task(7, 1000, |_| Ok(())).with_input(h.clone())); // rank 800
+
+        // decay the penalty to the device bonus under decoy passes
+        for _ in 0..10 {
+            q.submit(task(0, 2000, |_| Ok(()))); // decoy always outranks
+            q.notify_residency_changed(dev.id());
+            assert_eq!(q.try_pop().unwrap().op, 0);
+        }
+        // the holder's data comes back hot...
+        assert!(h.promote_one().unwrap());
+        q.notify_residency_changed(h.id());
+        q.submit(task(0, 2000, |_| Ok(())));
+        assert_eq!(q.try_pop().unwrap().op, 0);
+        // ...and spills again: the decayed rank must collapse back to
+        // the penalized truth, not ride its earned age
+        assert!(h.demote_one(crate::memory::Tier::Host).unwrap() > 0);
+        assert_eq!(h.residency().spilled_frac(), 1.0);
+        q.notify_residency_changed(h.id());
+        q.submit(task(0, 2000, |_| Ok(())));
+        assert_eq!(q.try_pop().unwrap().op, 0);
+
+        // equal-base hot task submitted AFTER the spilled one: without
+        // the age reset the spilled task ties at base+bonus and wins on
+        // FIFO; with it, the hot task runs first
+        q.submit(task(1, 1000, |_| Ok(())).with_input(dev.clone()));
+        assert_eq!(
+            q.try_pop().unwrap().op,
+            1,
+            "re-spilled inputs must penalize again (age reset)"
+        );
+        assert_eq!(q.try_pop().unwrap().op, 7);
+    }
+
+    #[test]
+    fn capped_rerank_cursor_round_robins_by_seq() {
+        // Soundness gap #2: with rerank_batch = 1, consecutive passes
+        // must serve *different* relevant entries in submission order —
+        // the resume point is a stable seq, not an index into the
+        // transient heap permutation.
+        let env = MemEnv::test(1 << 20);
+        let spill = spilled_holder(&env);
+        let capped = ResidencyBonus { device_bonus: 50, spilled_penalty: 200, rerank_batch: 1 };
+        let metrics = Arc::new(crate::metrics::Metrics::default());
+        let q = TaskQueue::with_residency(capped, metrics.clone());
+        // X then Y, both penalized at rank 800
+        q.submit(task(10, 1000, |_| Ok(())).with_input(spill.clone())); // X
+        q.submit(task(11, 1000, |_| Ok(())).with_input(spill.clone())); // Y
+        // two capped passes driven by decoy pops
+        for _ in 0..2 {
+            q.submit(task(0, 2000, |_| Ok(())));
+            q.notify_residency_changed(spill.id());
+            assert_eq!(q.try_pop().unwrap().op, 0);
+        }
+        assert_eq!(
+            metrics.gauge_value("sched.residency_rerank_total"),
+            2,
+            "one rescoring per capped pass"
+        );
+        // each pass aged a DIFFERENT entry exactly once: both now rank
+        // at age-1 (925) and beat a 900 probe; a cursor that re-served
+        // X twice would leave Y at 800, below the probe
+        q.submit(task(1, 900, |_| Ok(())));
+        let order: Vec<usize> =
+            std::iter::from_fn(|| q.try_pop().map(|t| t.op)).collect();
+        assert_eq!(order, vec![10, 11, 1], "round-robin aging by seq");
     }
 
     #[test]

@@ -36,6 +36,14 @@
 //! or demotion raises a `ResidencyChanged` notification
 //! ([`TaskQueue::notify_residency_changed`]) so the compute queue
 //! re-ranks tasks whose input holders just moved tiers.
+//!
+//! The same installed event doubles as the worker's *memory-pressure
+//! epoch* ([`PressureEvent::memory_raise_count`]): buffering producers
+//! — the coalescing exchange's per-destination shuffle builders — watch
+//! it through [`crate::memory::DeviceArena::pressure_event`] and flush
+//! early whenever a raise lands, so buffered shuffle state drains to
+//! the wire instead of sitting in host memory while this executor is
+//! busy demoting.
 
 use std::collections::{BinaryHeap, HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};

@@ -94,8 +94,30 @@ impl Outbox {
     }
 
     /// Queue a batch for a peer (blocks when the buffer is full).
+    /// Heap-encodes; the shuffle hot path uses
+    /// [`Outbox::send_batch_pooled`] instead.
     pub fn send_batch(&self, dst: usize, channel: u32, batch: &RecordBatch) -> Result<()> {
         self.push(Outbound::Data { dst, channel, encoded: StagedBytes::Heap(batch.encode()) })
+    }
+
+    /// Queue a batch encoded *straight into the pinned bounce pool*
+    /// (§3.4): the wire then sends the very slab the encode landed in,
+    /// vectored, with no heap bounce `Vec` — the copy
+    /// `StagedBytes::Heap(batch.encode())` used to pay for every
+    /// shuffled byte. A dry or absent pool degrades to the heap encode
+    /// (counted on the pool's `codec.heap_fallback_bytes` gauge).
+    /// Returns whether the payload went out slab-backed.
+    pub fn send_batch_pooled(
+        &self,
+        dst: usize,
+        channel: u32,
+        batch: &RecordBatch,
+        pool: Option<&PinnedPool>,
+    ) -> Result<bool> {
+        let encoded = stage_encoded(batch, pool);
+        let pinned = encoded.is_pinned();
+        self.push(Outbound::Data { dst, channel, encoded })?;
+        Ok(pinned)
     }
 
     /// Queue pre-encoded batch bytes (slab-backed bytes popped from a
@@ -200,6 +222,37 @@ impl Outbox {
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
+}
+
+/// Encode `batch` for the wire, slab-native when `pool` has room: the
+/// exact [`RecordBatch::encoded_len`] is reserved up front
+/// (all-or-nothing), then [`RecordBatch::encode_into`] streams the
+/// bytes into pinned buffers. A dry or absent pool falls back to the
+/// heap encode — identical bytes, counted as a codec-style heap
+/// fallback so pool-dry shuffle operation stays visible on the
+/// `codec.heap_fallback_bytes` gauge.
+///
+/// The reservation is *pressure-quiet*
+/// ([`SlabWriter::with_capacity_quiet`]): a failed reserve must not
+/// raise host pressure, because the coalescing exchange flushes on
+/// that very pressure epoch — a shuffle send that raised on every
+/// dry-pool flush would re-arm its own flush trigger and collapse
+/// coalescing into tiny heap frames for the whole dry period.
+pub fn stage_encoded(batch: &RecordBatch, pool: Option<&PinnedPool>) -> StagedBytes {
+    if let Some(pool) = pool {
+        let len = batch.encoded_len();
+        match SlabWriter::with_capacity_quiet(pool, len) {
+            Ok(mut w) => {
+                // reserved up front: cannot run dry mid-write
+                batch.encode_into(&mut w).expect("reserved slab write");
+                let slab = w.finish();
+                debug_assert_eq!(slab.len(), len, "encoded_len must be exact");
+                return StagedBytes::Pinned(SlabSlice::whole(slab));
+            }
+            Err(_) => pool.note_codec_fallback(len),
+        }
+    }
+    StagedBytes::Heap(batch.encode())
 }
 
 /// Receiving side of one exchange channel.
@@ -924,6 +977,73 @@ mod tests {
         for e in &exes {
             e.stop();
         }
+    }
+
+    #[test]
+    fn pooled_batch_send_is_slab_backed_end_to_end() {
+        // send_batch_pooled: the encode lands in the pool, the wire
+        // carries the slab, and the receiving holder adopts it — zero
+        // StagedBytes::Heap anywhere on the path.
+        let pool = PinnedPool::new(4 << 10, 64).unwrap();
+        let (exes, routers) = two_workers_with(None, Some(pool.clone()));
+        let env = crate::memory::batch_holder::MemEnv {
+            pinned: Some(pool.clone()),
+            ..crate::memory::batch_holder::MemEnv::test(1 << 20)
+        };
+        let holder = BatchHolder::new("rx", env);
+        routers[1].register(5, Arc::new(ChannelRx::new(holder.clone(), 1)));
+
+        let b = batch(700);
+        let pinned = exes[0]
+            .outbox()
+            .send_batch_pooled(1, 5, &b, Some(&pool))
+            .unwrap();
+        assert!(pinned, "roomy pool must stage the encode in a slab");
+        exes[0].outbox().send_finish(1, 5).unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while !holder.is_finished() && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(holder.is_finished());
+        assert_eq!(pool.codec_heap_fallback_bytes(), 0);
+        assert_eq!(
+            holder.residency().host_pinned_bytes,
+            b.encoded_len(),
+            "receive must adopt the sender's slab"
+        );
+        assert_eq!(holder.pop_device().unwrap().unwrap().batch, b);
+        for e in &exes {
+            e.stop();
+        }
+    }
+
+    #[test]
+    fn stage_encoded_heap_fallback_is_counted_and_identical() {
+        let b = batch(200);
+        // no pool: plain heap encode
+        assert_eq!(stage_encoded(&b, None), b.encode());
+        // roomy pool: slab-backed, same bytes
+        let pool = PinnedPool::new(256, 64).unwrap();
+        let staged = stage_encoded(&b, Some(&pool));
+        assert!(staged.is_pinned());
+        assert_eq!(staged, b.encode());
+        drop(staged);
+        // dry pool: heap fallback, counted, same bytes — and pressure-
+        // neutral: the coalescing exchange flushes on the memory
+        // epoch, so a dry-pool shuffle send must not re-arm it
+        let dry = PinnedPool::new(64, 1).unwrap();
+        let event = crate::memory::PressureEvent::new();
+        dry.install_pressure(event.clone());
+        let _hold = dry.try_acquire().unwrap();
+        let staged = stage_encoded(&b, Some(&dry));
+        assert!(!staged.is_pinned());
+        assert_eq!(staged, b.encode());
+        assert_eq!(dry.codec_heap_fallback_bytes(), b.encoded_len() as u64);
+        assert_eq!(
+            event.memory_raise_count(),
+            0,
+            "dry-pool staging fallback must not raise the flush epoch"
+        );
     }
 
     #[test]

@@ -61,6 +61,16 @@ impl DeviceArena {
         let _ = self.inner.pressure.set(PressureHook { event, threshold });
     }
 
+    /// The installed pressure event, if the movement plane attached one.
+    /// The arena is on every `MemEnv`, so this is where other buffering
+    /// subsystems (the coalescing exchange) find the worker's shared
+    /// event to watch its memory-pressure epoch. `None` before the
+    /// Data-Movement executor starts (unit tests): pressure-aware
+    /// behavior simply stays off.
+    pub fn pressure_event(&self) -> Option<Arc<PressureEvent>> {
+        self.inner.pressure.get().map(|h| h.event.clone())
+    }
+
     pub fn capacity(&self) -> usize {
         self.inner.capacity
     }

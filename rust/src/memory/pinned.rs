@@ -227,6 +227,19 @@ impl PinnedPool {
     /// Take one buffer, failing immediately if the pool is dry (the
     /// caller decides whether to spill or wait).
     pub fn try_acquire(&self) -> Result<PinnedBuf> {
+        self.try_acquire_inner(true)
+    }
+
+    /// [`PinnedPool::try_acquire`] whose shortfall does **not** raise
+    /// host pressure. For callers with a mandatory heap fallback that
+    /// must stay pressure-neutral — the shuffle staging path flushes on
+    /// the very pressure epoch a raise here would advance, so raising
+    /// would re-arm its own flush trigger on every dry-pool send.
+    pub fn try_acquire_quiet(&self) -> Result<PinnedBuf> {
+        self.try_acquire_inner(false)
+    }
+
+    fn try_acquire_inner(&self, raise: bool) -> Result<PinnedBuf> {
         let mut free = self.inner.free.lock().unwrap();
         match free.pop() {
             Some(idx) => {
@@ -239,7 +252,9 @@ impl PinnedPool {
                 self.inner
                     .exhaustions
                     .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                self.raise_pressure(self.inner.buf_size);
+                if raise {
+                    self.raise_pressure(self.inner.buf_size);
+                }
                 Err(Error::PinnedExhausted { requested: 1, available: 0 })
             }
         }
@@ -476,9 +491,23 @@ impl SlabWriter {
         Ok(w)
     }
 
+    /// [`SlabWriter::with_capacity`] whose shortfall does **not** raise
+    /// host pressure (see [`PinnedPool::try_acquire_quiet`]): for
+    /// callers with a mandatory heap fallback that must not re-arm the
+    /// pressure epoch they themselves act on.
+    pub fn with_capacity_quiet(pool: &PinnedPool, cap: usize) -> Result<SlabWriter> {
+        let mut w = SlabWriter::new(pool);
+        w.reserve_with(cap, false)?;
+        Ok(w)
+    }
+
     /// Ensure buffers exist for a total of `cap` bytes (at least one —
     /// an empty slab still occupies a buffer, as in Figure 3B).
     pub fn reserve(&mut self, cap: usize) -> Result<()> {
+        self.reserve_with(cap, true)
+    }
+
+    fn reserve_with(&mut self, cap: usize, raise: bool) -> Result<()> {
         let bs = self.pool.buf_size();
         let need = cap.div_ceil(bs).max(1);
         if need > self.bufs.len() {
@@ -490,13 +519,18 @@ impl SlabWriter {
                 // by demoting host data, so signaling it would only
                 // trigger futile spill storms (oversized payloads take
                 // the heap fallback and move on).
-                if need <= self.pool.total_buffers() {
+                if raise && need <= self.pool.total_buffers() {
                     self.pool.raise_pressure((extra - avail) * bs);
                 }
                 return Err(Error::PinnedExhausted { requested: extra, available: avail });
             }
             for _ in 0..extra {
-                self.bufs.push(self.pool.try_acquire()?);
+                let buf = if raise {
+                    self.pool.try_acquire()
+                } else {
+                    self.pool.try_acquire_quiet()
+                }?;
+                self.bufs.push(buf);
             }
         }
         Ok(())
@@ -1026,6 +1060,11 @@ mod tests {
         let held: Vec<_> = (0..4).map(|_| p.try_acquire().unwrap()).collect();
         assert!(p.try_acquire().is_err());
         assert_eq!(ev.take().host_need, 64);
+        // the quiet variants fail without raising (shuffle staging path)
+        assert!(p.try_acquire_quiet().is_err());
+        assert!(SlabWriter::with_capacity_quiet(&p, 128).is_err());
+        assert_eq!(ev.take().host_need, 0, "quiet shortfalls must not raise");
+        assert_eq!(ev.memory_raise_count(), 1, "only the loud failure raised");
         // slab-level exhaustion raises the full (satisfiable) shortfall
         assert!(PinnedSlab::write(&p, &[0u8; 200]).is_err());
         assert_eq!(ev.take().host_need, 4 * 64);

@@ -52,6 +52,12 @@ pub struct PressureEvent {
     state: Mutex<State>,
     cv: Condvar,
     raises: AtomicU64,
+    /// Device/host raises only (not queue dirtiness): the monotonic
+    /// *memory-pressure epoch*. Buffering producers — the coalescing
+    /// exchange's per-destination shuffle builders — compare it against
+    /// the epoch they last observed and flush early when it advanced,
+    /// so buffered state drains instead of deepening a spill cycle.
+    memory_raises: AtomicU64,
 }
 
 impl PressureEvent {
@@ -64,11 +70,19 @@ impl PressureEvent {
         self.raises.load(Ordering::Relaxed)
     }
 
+    /// Monotonic count of *memory* raises (device + host; queue
+    /// dirtiness excluded). An advance since a caller's last read means
+    /// some tier asked for bytes back in the interim.
+    pub fn memory_raise_count(&self) -> u64 {
+        self.memory_raises.load(Ordering::Relaxed)
+    }
+
     /// Signal device-tier pressure: `bytes` should be freed.
     pub fn raise_device(&self, bytes: usize) {
         let mut s = self.state.lock().unwrap();
         s.pending.device_need = s.pending.device_need.saturating_add(bytes);
         self.raises.fetch_add(1, Ordering::Relaxed);
+        self.memory_raises.fetch_add(1, Ordering::Relaxed);
         drop(s);
         self.cv.notify_all();
     }
@@ -78,6 +92,7 @@ impl PressureEvent {
         let mut s = self.state.lock().unwrap();
         s.pending.host_need = s.pending.host_need.saturating_add(bytes);
         self.raises.fetch_add(1, Ordering::Relaxed);
+        self.memory_raises.fetch_add(1, Ordering::Relaxed);
         drop(s);
         self.cv.notify_all();
     }
@@ -132,6 +147,11 @@ mod tests {
         assert!(snap.queue_dirty);
         assert!(ev.take().is_empty(), "drained");
         assert_eq!(ev.raise_count(), 4);
+        assert_eq!(
+            ev.memory_raise_count(),
+            3,
+            "queue dirtiness must not advance the memory epoch"
+        );
     }
 
     #[test]

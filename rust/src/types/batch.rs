@@ -3,7 +3,7 @@
 //! represented by a set of columns with the same number of rows").
 
 use crate::types::schema::{DType, Schema};
-use crate::util::bytes::{as_bytes, from_bytes, Reader, Writer};
+use crate::util::bytes::{as_bytes, from_bytes, Reader};
 use crate::{Error, Result};
 
 /// Physical column storage. All i64-backed logical types (int, decimal,
@@ -71,6 +71,26 @@ impl ColumnData {
                 ColumnData::F64(idx.iter().map(|&i| v[i as usize]).collect())
             }
         }
+    }
+
+    /// Gather rows of `other` by index and append them here — the
+    /// scatter half of the coalescing exchange, without the
+    /// intermediate per-fragment column allocation `gather` + `append`
+    /// would pay per destination.
+    pub fn append_gather(&mut self, other: &ColumnData, idx: &[u32]) -> Result<()> {
+        match (self, other) {
+            (ColumnData::I64(a), ColumnData::I64(b)) => {
+                a.extend(idx.iter().map(|&i| b[i as usize]))
+            }
+            (ColumnData::F32(a), ColumnData::F32(b)) => {
+                a.extend(idx.iter().map(|&i| b[i as usize]))
+            }
+            (ColumnData::F64(a), ColumnData::F64(b)) => {
+                a.extend(idx.iter().map(|&i| b[i as usize]))
+            }
+            _ => return Err(Error::internal("append_gather: column layout mismatch")),
+        }
+        Ok(())
     }
 
     pub fn slice(&self, off: usize, len: usize) -> ColumnData {
@@ -296,10 +316,11 @@ impl RecordBatch {
     }
 
     /// Split into chunks of at most `chunk_rows` rows (operator batch
-    /// sizing, §3.1).
-    pub fn split(&self, chunk_rows: usize) -> Vec<RecordBatch> {
+    /// sizing, §3.1). Takes `self` by value: the common already-small
+    /// batch returns itself without deep-cloning every column.
+    pub fn split(self, chunk_rows: usize) -> Vec<RecordBatch> {
         if self.rows <= chunk_rows {
-            return vec![self.clone()];
+            return vec![self];
         }
         let mut out = Vec::with_capacity(self.rows.div_ceil(chunk_rows));
         let mut off = 0;
@@ -313,18 +334,42 @@ impl RecordBatch {
 
     // ---------------------------------------------------------------- IPC
 
+    /// Exact [`RecordBatch::encode`] output size — lets slab-native
+    /// callers reserve pool buffers up front (all-or-nothing, so a dry
+    /// pool fails before any byte is staged).
+    pub fn encoded_len(&self) -> usize {
+        let mut n = 4 + 8; // column count + row count
+        for c in &self.columns {
+            // name (u32 len + bytes), dtype tag, layout tag,
+            // payload (u64 len + raw bytes)
+            n += 4 + c.name.len() + 1 + 1 + 8 + c.data.raw_bytes().len();
+        }
+        n
+    }
+
+    /// Stream the wire encoding into any writer — byte-identical to
+    /// [`RecordBatch::encode`] (which delegates here). The coalescing
+    /// exchange encodes straight into a `SlabWriter`, so shuffled bytes
+    /// land in pinned pool buffers without a heap bounce `Vec`.
+    pub fn encode_into(&self, w: &mut impl std::io::Write) -> std::io::Result<()> {
+        w.write_all(&(self.columns.len() as u32).to_le_bytes())?;
+        w.write_all(&(self.rows as u64).to_le_bytes())?;
+        for c in &self.columns {
+            w.write_all(&(c.name.len() as u32).to_le_bytes())?;
+            w.write_all(c.name.as_bytes())?;
+            w.write_all(&[c.dtype.tag(), c.data.layout_tag()])?;
+            let raw = c.data.raw_bytes();
+            w.write_all(&(raw.len() as u64).to_le_bytes())?;
+            w.write_all(raw)?;
+        }
+        Ok(())
+    }
+
     /// Serialize for spill files and network frames.
     pub fn encode(&self) -> Vec<u8> {
-        let mut w = Writer::with_capacity(self.byte_size() + 64);
-        w.u32(self.columns.len() as u32);
-        w.u64(self.rows as u64);
-        for c in &self.columns {
-            w.str(&c.name);
-            w.u8(c.dtype.tag());
-            w.u8(c.data.layout_tag());
-            w.bytes(c.data.raw_bytes());
-        }
-        w.finish()
+        let mut buf = Vec::with_capacity(self.encoded_len());
+        self.encode_into(&mut buf).expect("Vec write is infallible");
+        buf
     }
 
     pub fn decode(buf: &[u8]) -> Result<RecordBatch> {
@@ -336,6 +381,15 @@ impl RecordBatch {
             let name = r.str()?;
             let dtype = DType::from_tag(r.u8()?)?;
             let tag = r.u8()?;
+            // the encoder always writes layout_for(dtype); a frame that
+            // disagrees is corrupt (or hostile) and must be rejected at
+            // the boundary — a dtype/storage mismatch deeper in the
+            // engine (builder appends, kernels) is unrecoverable
+            if tag != ColumnData::layout_for(dtype) {
+                return Err(Error::Format(format!(
+                    "column '{name}': layout tag {tag} does not match dtype {dtype}"
+                )));
+            }
             let data = ColumnData::from_raw(tag, r.bytes()?)?;
             if data.len() != rows {
                 return Err(Error::Format(format!(
@@ -359,6 +413,113 @@ impl RecordBatch {
                 .map(|c| crate::types::schema::Field::new(c.name.clone(), c.dtype))
                 .collect(),
         )
+    }
+}
+
+/// Append-only batch accumulator: the per-destination coalescing buffer
+/// of the shuffle write path (§3.4 — move fewer, bigger messages).
+///
+/// Scattered row sets from many small input batches append into one
+/// growing set of column vectors; [`BatchBuilder::finish`] seals the
+/// accumulated rows as a single `RecordBatch` and resets the builder
+/// for the next fill. Layout (column names, dtypes, physical storage)
+/// is pinned by the first append; later appends with a different
+/// layout are rejected rather than silently misaligned.
+#[derive(Default)]
+pub struct BatchBuilder {
+    columns: Vec<Column>,
+    rows: usize,
+}
+
+impl BatchBuilder {
+    pub fn new() -> BatchBuilder {
+        BatchBuilder::default()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Accumulated payload bytes (drives the exchange's flush
+    /// threshold).
+    pub fn byte_size(&self) -> usize {
+        self.columns.iter().map(|c| c.data.byte_len()).sum()
+    }
+
+    fn check_layout(&self, batch: &RecordBatch) -> Result<()> {
+        if self.columns.len() != batch.columns.len() {
+            return Err(Error::internal(format!(
+                "builder append: {} columns, batch has {}",
+                self.columns.len(),
+                batch.columns.len()
+            )));
+        }
+        for (a, b) in self.columns.iter().zip(&batch.columns) {
+            // physical layout included: a name+dtype match with a
+            // different ColumnData variant would error mid-append and
+            // leave the builder's columns at unequal lengths (a later
+            // finish() would panic) — reject before mutating anything
+            if a.name != b.name
+                || a.dtype != b.dtype
+                || a.data.layout_tag() != b.data.layout_tag()
+            {
+                return Err(Error::internal(format!(
+                    "builder append: column '{}:{}' vs '{}:{}'",
+                    a.name, a.dtype, b.name, b.dtype
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Append rows `idx` of `batch` (gather + append in one pass, no
+    /// per-fragment intermediate batch).
+    pub fn append_gather(&mut self, batch: &RecordBatch, idx: &[u32]) -> Result<()> {
+        if idx.is_empty() {
+            return Ok(());
+        }
+        if self.columns.is_empty() && self.rows == 0 {
+            self.columns = batch
+                .columns
+                .iter()
+                .map(|c| Column::new(c.name.clone(), c.dtype, c.data.gather(idx)))
+                .collect();
+        } else {
+            self.check_layout(batch)?;
+            for (a, b) in self.columns.iter_mut().zip(&batch.columns) {
+                a.data.append_gather(&b.data, idx)?;
+            }
+        }
+        self.rows += idx.len();
+        Ok(())
+    }
+
+    /// Append every row of `batch`.
+    pub fn append_batch(&mut self, batch: &RecordBatch) -> Result<()> {
+        if batch.is_empty() {
+            return Ok(());
+        }
+        if self.columns.is_empty() && self.rows == 0 {
+            self.columns = batch.columns.clone();
+        } else {
+            self.check_layout(batch)?;
+            for (a, b) in self.columns.iter_mut().zip(&batch.columns) {
+                a.data.append(&b.data)?;
+            }
+        }
+        self.rows += batch.rows();
+        Ok(())
+    }
+
+    /// Seal the accumulated rows and reset for the next fill.
+    pub fn finish(&mut self) -> RecordBatch {
+        let columns = std::mem::take(&mut self.columns);
+        self.rows = 0;
+        RecordBatch::new(columns).expect("builder columns stay equal length")
     }
 }
 
@@ -405,9 +566,13 @@ mod tests {
     #[test]
     fn split_sizes() {
         let b = sample();
-        let parts = b.split(2);
+        let parts = b.clone().split(2);
         assert_eq!(parts.iter().map(|p| p.rows()).collect::<Vec<_>>(), vec![2, 2, 1]);
         assert_eq!(RecordBatch::concat(&parts).unwrap(), b);
+        // single-chunk split hands the batch back, no copy
+        let whole = b.clone().split(10);
+        assert_eq!(whole.len(), 1);
+        assert_eq!(whole[0], b);
     }
 
     #[test]
@@ -433,11 +598,67 @@ mod tests {
     }
 
     #[test]
+    fn encode_into_matches_encode_and_encoded_len() {
+        for b in [sample(), RecordBatch::empty(), sample().slice(0, 0).unwrap()] {
+            let via_vec = b.encode();
+            assert_eq!(via_vec.len(), b.encoded_len());
+            let mut streamed = Vec::new();
+            b.encode_into(&mut streamed).unwrap();
+            assert_eq!(streamed, via_vec);
+            assert_eq!(RecordBatch::decode(&streamed).unwrap(), b);
+        }
+    }
+
+    #[test]
+    fn builder_accumulates_scattered_rows() {
+        let b = sample();
+        let mut builder = BatchBuilder::new();
+        assert!(builder.is_empty());
+        builder.append_gather(&b, &[4, 0]).unwrap();
+        builder.append_gather(&b, &[]).unwrap(); // no-op
+        builder.append_gather(&b, &[2]).unwrap();
+        assert_eq!(builder.rows(), 3);
+        assert_eq!(builder.byte_size(), 3 * (8 + 4 + 8));
+        let got = builder.finish();
+        assert_eq!(got.column("k").unwrap().data.as_i64().unwrap(), &[5, 1, 3]);
+        assert_eq!(got.column("v").unwrap().data.as_f32().unwrap(), &[4.5, 0.5, 2.5]);
+        // the builder reset: a fresh fill starts from scratch
+        assert!(builder.is_empty());
+        builder.append_batch(&b).unwrap();
+        assert_eq!(builder.finish(), b);
+    }
+
+    #[test]
+    fn builder_rejects_layout_drift() {
+        let b = sample();
+        let mut builder = BatchBuilder::new();
+        builder.append_gather(&b, &[0]).unwrap();
+        let other =
+            RecordBatch::new(vec![Column::i64("different", vec![1, 2])]).unwrap();
+        assert!(builder.append_gather(&other, &[0]).is_err());
+        assert!(builder.append_batch(&other).is_err());
+        assert_eq!(builder.rows(), 1, "failed appends leave the fill intact");
+    }
+
+    #[test]
     fn decode_rejects_corrupt_rowcount() {
         let b = sample();
         let mut buf = b.encode();
         // corrupt the row-count field
         buf[4] = 99;
+        assert!(RecordBatch::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_layout_dtype_mismatch() {
+        // column 'k' (Int64) with its layout byte flipped to F64 —
+        // same element width, so only the cross-check can catch it
+        let b = sample();
+        let mut buf = b.encode();
+        // layout: ncols(4) + rows(8) + name len(4) + "k"(1) + dtype(1)
+        let layout_at = 4 + 8 + 4 + 1 + 1;
+        assert_eq!(buf[layout_at], 0, "i64 layout tag");
+        buf[layout_at] = 2; // F64 layout under an Int64 dtype
         assert!(RecordBatch::decode(&buf).is_err());
     }
 }

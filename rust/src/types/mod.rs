@@ -11,5 +11,5 @@
 pub mod batch;
 pub mod schema;
 
-pub use batch::{Column, ColumnData, RecordBatch};
+pub use batch::{BatchBuilder, Column, ColumnData, RecordBatch};
 pub use schema::{DType, Field, Schema};

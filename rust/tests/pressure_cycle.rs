@@ -335,3 +335,135 @@ fn threaded_worker_under_pressure_matches_roomy_run() {
         "spilling run altered the query result"
     );
 }
+
+/// Deterministic pressure-driven shuffle flush: a hash-partition
+/// exchange buffering rows *below* its flush threshold must drain the
+/// moment the worker's memory-pressure epoch advances — buffered
+/// shuffle state never deepens a spill cycle. The raise is performed by
+/// hand on the installed `PressureEvent` (the exact hook the
+/// Data-Movement plane's tiers signal), so the trigger point is exactly
+/// reproducible.
+#[test]
+fn pressure_event_flushes_buffered_shuffle_early() {
+    use std::time::Duration;
+    use theseus::config::TransportKind;
+    use theseus::exec::operators::{ExchangeOp, Operator};
+    use theseus::exec::plan::ExchangeRole;
+    use theseus::executors::network::{ChannelRx, NetworkExecutor, Outbox};
+    use theseus::memory::PressureEvent;
+    use theseus::network::InprocHub;
+
+    const ROWS: i64 = 256;
+    let cfg = WorkerConfig {
+        num_workers: 1,
+        exchange_estimate_batches: 1,
+        exchange_flush_bytes: 1 << 30, // size-triggered flush never fires
+        ..WorkerConfig::test()
+    };
+    let mut ctx = WorkerCtx::test_with(Arc::new(cfg));
+    // The Data-Movement executor installs this at worker bring-up; the
+    // test holds the event itself so the raise is exactly timed.
+    let event = PressureEvent::new();
+    ctx.env.arena.install_pressure(event.clone(), 1.0);
+
+    let hub = InprocHub::new(1, &SimContext::test(), TransportKind::Tcp);
+    let ep = hub.endpoints().remove(0);
+    let router = Arc::new(Router::new());
+    let outbox = Arc::new(Outbox::new(64));
+    let net = NetworkExecutor::start(
+        Arc::new(ep),
+        outbox.clone(),
+        router.clone(),
+        None,
+        None,
+        1,
+    );
+    ctx.outbox = outbox;
+
+    let rx_holder = BatchHolder::new("rx", ctx.env.clone());
+    let rx = Arc::new(ChannelRx::new(rx_holder.clone(), 1));
+    router.register(9, rx.clone());
+
+    let input = BatchHolder::new("in", ctx.env.clone());
+    let pending = BatchHolder::new("pending", ctx.env.clone());
+    let batch = RecordBatch::new(vec![
+        Column::i64("k", (0..ROWS).collect()),
+        Column::i64("w", (0..ROWS).map(|i| i * 3).collect()),
+    ])
+    .unwrap();
+    input.push_batch_host(batch.clone()).unwrap();
+    input.push_batch_host(batch.clone()).unwrap();
+
+    let op = ExchangeOp::new(
+        0,
+        1000,
+        2,
+        input.clone(),
+        pending,
+        rx,
+        9,
+        "k".into(),
+        ExchangeRole::Shuffle,
+        None,
+        None,
+    );
+
+    // reach Stream and buffer both batches (far below the threshold)
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while op.buffered_shuffle_rows() < 2 * ROWS as usize {
+        assert!(std::time::Instant::now() < deadline, "never buffered the rows");
+        for t in op.poll(&ctx).unwrap() {
+            (t.run)(&ctx).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(ctx.metrics.counter_value("exchange.flush_total"), 0);
+    assert_eq!(op.sent_batches(), 0, "nothing crossed the wire yet");
+
+    // one memory-pressure raise -> the very next poll drains the buffers
+    event.raise_host(1);
+    for t in op.poll(&ctx).unwrap() {
+        (t.run)(&ctx).unwrap();
+    }
+    assert_eq!(
+        ctx.metrics.counter_value("exchange.pressure_flush_total"),
+        1,
+        "the epoch advance must flush the buffered destination"
+    );
+    assert_eq!(ctx.metrics.counter_value("exchange.flush_total"), 1);
+    assert_eq!(
+        ctx.metrics.counter_value("exchange.coalesced_bytes"),
+        2 * batch.byte_size() as u64
+    );
+    assert_eq!(op.buffered_shuffle_rows(), 0);
+    assert_eq!(op.sent_batches(), 1, "both buffered batches left as ONE frame");
+
+    // the drained rows arrive intact, and the stream completes cleanly
+    input.finish();
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while !op.is_done() {
+        assert!(std::time::Instant::now() < deadline, "exchange stalled");
+        for t in op.poll(&ctx).unwrap() {
+            (t.run)(&ctx).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(net.flush(Duration::from_secs(2)));
+    let deadline = std::time::Instant::now() + Duration::from_secs(2);
+    while !rx_holder.is_finished() {
+        assert!(std::time::Instant::now() < deadline, "finish lost");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let mut got = Vec::new();
+    while let Some(db) = rx_holder.pop_device().unwrap() {
+        got.push(db.batch.clone());
+    }
+    let got = RecordBatch::concat(&got).unwrap();
+    let want = RecordBatch::concat(&[batch.clone(), batch]).unwrap();
+    assert_eq!(
+        got.encode(),
+        want.encode(),
+        "pressure flush altered the shuffled rows"
+    );
+    net.stop();
+}

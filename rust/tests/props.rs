@@ -13,13 +13,24 @@
 //!   `decompress_slices_into` a slab → byte-identical, for all three
 //!   codecs, with matches spanning chunk boundaries and the pool-dry
 //!   heap fallback.
+//! * Coalesced shuffle (PR 5): random tables × random batch splits ×
+//!   random worker counts × random flush thresholds × pool-dry staging
+//!   — the destination-coalesced scatter path delivers, per
+//!   destination, rows byte-identical to the seed's per-batch
+//!   `take`-and-send routing.
 
+use theseus::exec::operators::{kernels, ShuffleCoalescer};
+use theseus::exec::WorkerCtx;
+use theseus::executors::network::stage_encoded;
 use theseus::memory::batch_holder::MemEnv;
 use theseus::memory::{BatchHolder, PinnedPool, PinnedSlab, SlabSlice, SlabWriter, StagedBytes};
+use theseus::metrics::Metrics;
 use theseus::network::frame::{DEFAULT_MAX_FRAME_BYTES, FRAME_HEADER_LEN};
 use theseus::network::{read_frame, Frame, FrameKind, Payload};
 use theseus::storage::compression::Codec;
 use theseus::testing::{check, gen, Shrink};
+use theseus::types::{Column, RecordBatch};
+use theseus::util::hash;
 use theseus::util::rng::Rng;
 use theseus::Error;
 
@@ -516,6 +527,184 @@ fn codec_case_holds(case: &CodecCase) -> bool {
 #[test]
 fn codec_chunked_slab_wire_roundtrip_is_byte_identical() {
     check(0xC0DEC, 250, gen_codec_case, codec_case_holds);
+}
+
+// -------------------------------------------------------------- shuffle
+
+/// One randomized coalesced-shuffle scenario.
+#[derive(Clone, Debug)]
+struct ShuffleCase {
+    /// Total rows — raw, reduced modulo the cap at use.
+    rows: usize,
+    /// Batch boundaries — raw, reduced modulo `rows + 1` at use.
+    splits: Vec<usize>,
+    /// Worker count — raw, reduced to 1..=8 at use.
+    workers: usize,
+    /// Flush threshold — raw, reduced at use (1 = coalescing off).
+    flush: usize,
+    seed: u64,
+    /// Pre-hold the whole pool: every flush must heap-fall-back and
+    /// still deliver identical bytes.
+    dry: bool,
+}
+
+impl Shrink for ShuffleCase {
+    fn shrink(&self) -> Vec<ShuffleCase> {
+        let mut out: Vec<ShuffleCase> = self
+            .rows
+            .shrink()
+            .into_iter()
+            .map(|rows| ShuffleCase { rows, ..self.clone() })
+            .collect();
+        out.extend(
+            self.splits
+                .shrink()
+                .into_iter()
+                .map(|splits| ShuffleCase { splits, ..self.clone() }),
+        );
+        if self.dry {
+            out.push(ShuffleCase { dry: false, ..self.clone() });
+        }
+        if self.workers % 8 != 0 {
+            out.push(ShuffleCase { workers: 0, ..self.clone() }); // -> 1 worker
+        }
+        out
+    }
+}
+
+fn gen_shuffle_case(rng: &mut Rng) -> ShuffleCase {
+    let nsplits = rng.gen_range(8) as usize;
+    ShuffleCase {
+        rows: rng.gen_range(1500) as usize,
+        splits: (0..nsplits).map(|_| rng.next_u64() as usize).collect(),
+        workers: rng.next_u64() as usize,
+        flush: rng.next_u64() as usize,
+        seed: rng.next_u64(),
+        dry: rng.gen_bool(0.2),
+    }
+}
+
+fn shuffle_case_holds(case: &ShuffleCase) -> bool {
+    const PARTS: u32 = 16;
+    let rows = case.rows % 1500;
+    let workers = case.workers % 8 + 1;
+    // spans 1 (coalescing off) .. ~6 KiB (several batches per flush)
+    let flush = case.flush % 6144 + 1;
+
+    let mut rng = Rng::new(case.seed | 1);
+    let table = RecordBatch::new(vec![
+        Column::i64("k", (0..rows).map(|_| rng.gen_i64(-(1 << 40), 1 << 40)).collect()),
+        Column::i64("w", (0..rows).map(|_| rng.gen_i64(0, 1 << 20)).collect()),
+    ])
+    .unwrap();
+    // random batch boundaries (empty batches are legal)
+    let mut points: Vec<usize> = case.splits.iter().map(|s| s % (rows + 1)).collect();
+    points.sort_unstable();
+    let mut batches = Vec::new();
+    let mut prev = 0usize;
+    for &p in points.iter().chain(std::iter::once(&rows)) {
+        batches.push(table.slice(prev, p - prev).unwrap());
+        prev = p;
+    }
+
+    // ---- seed routing: per-batch per-destination take lists, kept in
+    // arrival order per destination
+    let mut reference: Vec<Vec<RecordBatch>> = vec![Vec::new(); workers];
+    for b in &batches {
+        if b.is_empty() {
+            continue;
+        }
+        let keys = b.column("k").unwrap().data.as_i64().unwrap();
+        let mut by_dst: Vec<Vec<u32>> = vec![Vec::new(); workers];
+        for (row, &k) in keys.iter().enumerate() {
+            by_dst[hash::partition_id(k, PARTS) as usize % workers].push(row as u32);
+        }
+        for (dst, idx) in by_dst.into_iter().enumerate() {
+            if !idx.is_empty() {
+                reference[dst].push(b.take(&idx).unwrap());
+            }
+        }
+    }
+
+    // ---- coalesced routing: single-pass scatter -> builders -> flush
+    // -> slab-native staging -> decode back
+    let ctx = WorkerCtx::test();
+    let metrics = std::sync::Arc::new(Metrics::default());
+    // big enough for the worst single flush (a whole table routed to
+    // one destination): staging must only fall back when forced dry
+    let pool = PinnedPool::new(1024, 64).unwrap();
+    let hold: Vec<_> = if case.dry {
+        (0..pool.total_buffers()).map(|_| pool.try_acquire().unwrap()).collect()
+    } else {
+        Vec::new()
+    };
+    let mut co = ShuffleCoalescer::new(workers, flush, None, metrics.clone());
+    let mut received: Vec<Vec<RecordBatch>> = vec![Vec::new(); workers];
+    let deliver = |dst: usize, batch: &RecordBatch, out: &mut Vec<Vec<RecordBatch>>| {
+        // the wire hop: pooled staging (or its dry fallback) + decode
+        let staged = stage_encoded(batch, Some(&pool));
+        if staged.is_pinned() == case.dry {
+            return false; // roomy must pin, dry must fall back
+        }
+        match RecordBatch::decode(&staged.contiguous()) {
+            Ok(b) => {
+                out[dst].push(b);
+                true
+            }
+            Err(_) => false,
+        }
+    };
+    for b in &batches {
+        if b.is_empty() {
+            continue;
+        }
+        let keys = b.column("k").unwrap().data.as_i64().unwrap();
+        let plan = match kernels::partition_scatter(&ctx, keys, PARTS, workers) {
+            Ok(p) => p,
+            Err(_) => return false,
+        };
+        for (dst, flushed) in co.append(b, &plan).unwrap() {
+            if !deliver(dst, &flushed, &mut received) {
+                return false;
+            }
+        }
+    }
+    for (dst, flushed) in co.flush_all() {
+        if !deliver(dst, &flushed, &mut received) {
+            return false;
+        }
+    }
+    drop(hold);
+
+    // ---- identity: per destination, the coalesced rows are
+    // byte-identical to the seed routing (order within a destination
+    // preserved)
+    for dst in 0..workers {
+        let want = RecordBatch::concat(&reference[dst]).unwrap();
+        let got = RecordBatch::concat(&received[dst]).unwrap();
+        if want.encode() != got.encode() {
+            return false;
+        }
+    }
+    // accounting: every routed byte went through a counted flush, and
+    // dry-pool staging is visible on the gauge
+    let routed: u64 = batches.iter().map(|b| b.byte_size() as u64).sum();
+    if metrics.counter_value("exchange.coalesced_bytes") != routed {
+        return false;
+    }
+    let frames: usize = received.iter().map(|d| d.len()).sum();
+    if metrics.counter_value("exchange.flush_total") != frames as u64 {
+        return false;
+    }
+    if case.dry && frames > 0 && pool.codec_heap_fallback_bytes() == 0 {
+        return false;
+    }
+    pool.free_buffers() == pool.total_buffers()
+}
+
+#[test]
+fn coalesced_shuffle_matches_seed_routing_byte_for_byte() {
+    check(0x5F1E, 250, gen_shuffle_case, shuffle_case_holds);
 }
 
 #[test]

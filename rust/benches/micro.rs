@@ -38,13 +38,33 @@ use theseus::storage::compression::Codec;
 use theseus::workload::tpch_suite;
 
 fn main() {
-    lip_ablation();
-    uvm_vs_batch_holder();
-    dynamic_vs_pooled_pinned();
-    compression_trade();
-    spill_store_concurrency();
-    zero_copy_bounce();
-    shuffle_coalescing();
+    // MICRO_BENCHES=5,6,7 runs a subset (CI's bench-runner step uses
+    // this to run the movement benches at sim scale); unset runs all.
+    let only: Option<Vec<usize>> = std::env::var("MICRO_BENCHES")
+        .ok()
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect());
+    let run = |i: usize| only.as_ref().map_or(true, |v| v.contains(&i));
+    if run(1) {
+        lip_ablation();
+    }
+    if run(2) {
+        uvm_vs_batch_holder();
+    }
+    if run(3) {
+        dynamic_vs_pooled_pinned();
+    }
+    if run(4) {
+        compression_trade();
+    }
+    if run(5) {
+        spill_store_concurrency();
+    }
+    if run(6) {
+        zero_copy_bounce();
+    }
+    if run(7) {
+        shuffle_coalescing();
+    }
 }
 
 // ------------------------------------------------------------------ 1
@@ -456,7 +476,7 @@ fn zero_copy_bounce() {
 fn shuffle_coalescing() {
     use theseus::exec::operators::{kernels, ShuffleCoalescer};
     use theseus::exec::WorkerCtx;
-    use theseus::executors::network::stage_encoded;
+    use theseus::executors::network::{stage_encoded, Outbox};
     use theseus::metrics::Metrics;
     use theseus::types::{Column, RecordBatch};
     use theseus::util::rng::Rng;
@@ -489,10 +509,41 @@ fn shuffle_coalescing() {
         FLUSH >> 20
     );
     println!(
-        "{:>8} {:>12} {:>12} {:>14} {:>14} {:>12} {:>12}",
-        "workers", "frag frames", "coal frames", "frag wire", "coal wire", "frag time", "coal time"
+        "{:>8} {:>12} {:>12} {:>12} {:>14} {:>14} {:>12} {:>12} {:>12}",
+        "workers", "frag frames", "stat frames", "adpt frames", "frag wire", "coal wire",
+        "frag time", "stat time", "adpt time"
     );
 
+    // one coalesced pass: scatter every batch through `co`, staging
+    // each flushed sub-batch the way the exchange send path would
+    let run_coalesced = |co: &ShuffleCoalescer| -> (u64, u64, Duration) {
+        let pool = PinnedPool::new(256 << 10, 64).unwrap();
+        let t0 = Instant::now();
+        let mut frames = 0u64;
+        let mut wire = 0u64;
+        {
+            let mut send = |batch: &RecordBatch| {
+                let staged = stage_encoded(batch, Some(&pool));
+                frames += 1;
+                wire += (staged.len() + FRAME_HEADER) as u64;
+                std::hint::black_box(&staged);
+            };
+            for b in &batches {
+                let keys = b.column("k").unwrap().data.as_i64().unwrap();
+                let plan =
+                    kernels::partition_scatter(&ctx, keys, PARTS, co.num_dests()).unwrap();
+                for (_, flushed) in co.append(b, &plan).unwrap() {
+                    send(&flushed);
+                }
+            }
+            for (_, flushed) in co.flush_all() {
+                send(&flushed);
+            }
+        }
+        (frames, wire, t0.elapsed())
+    };
+
+    let mut json_runs: Vec<String> = Vec::new();
     for workers in [4usize, 16, 64] {
         // ---- fragmented (seed): per-batch per-destination take + encode
         let t0 = Instant::now();
@@ -518,57 +569,91 @@ fn shuffle_coalescing() {
         }
         let frag_time = t0.elapsed();
 
-        // ---- coalesced: single-pass scatter into per-destination
-        // builders, slab-native encode on flush
-        let pool = PinnedPool::new(256 << 10, 64).unwrap();
+        // ---- static coalesced: fixed flush threshold (floor == ceiling
+        // pins the controller; this is the pre-adaptive behavior)
         let metrics = std::sync::Arc::new(Metrics::default());
-        let mut co = ShuffleCoalescer::new(workers, FLUSH, None, metrics.clone());
-        let t0 = Instant::now();
-        let mut coal_frames = 0u64;
-        let mut coal_wire = 0u64;
-        let mut send = |batch: &RecordBatch| {
-            let staged = stage_encoded(batch, Some(&pool));
-            coal_frames += 1;
-            coal_wire += (staged.len() + FRAME_HEADER) as u64;
-            std::hint::black_box(&staged);
-        };
-        for b in &batches {
-            let keys = b.column("k").unwrap().data.as_i64().unwrap();
-            let plan = kernels::partition_scatter(&ctx, keys, PARTS, workers).unwrap();
-            for (_, flushed) in co.append(b, &plan).unwrap() {
-                send(&flushed);
-            }
-        }
-        for (_, flushed) in co.flush_all() {
-            send(&flushed);
-        }
-        let coal_time = t0.elapsed();
+        let co = ShuffleCoalescer::new(workers, FLUSH, None, metrics.clone());
+        let (stat_frames, stat_wire, stat_time) = run_coalesced(&co);
+        drop(co);
 
-        assert_eq!(metrics.counter_value("exchange.flush_total"), coal_frames);
+        assert_eq!(metrics.counter_value("exchange.flush_total"), stat_frames);
         assert_eq!(
             metrics.counter_value("exchange.coalesced_bytes"),
             total_bytes as u64
         );
         let bound = (total_bytes.div_ceil(FLUSH) + workers) as u64;
         assert!(
-            coal_frames <= bound,
-            "{coal_frames} frames exceeds the ceil(total/flush)+workers bound {bound}"
+            stat_frames <= bound,
+            "{stat_frames} frames exceeds the ceil(total/flush)+workers bound {bound}"
         );
+
+        // ---- adaptive coalesced: the feedback controller watches an
+        // (idle) outbox. Uncongested, thresholds must hold at the
+        // ceiling — same frame bound, no regression vs static.
+        let adpt_metrics = std::sync::Arc::new(Metrics::default());
+        let outbox = std::sync::Arc::new(Outbox::new(64));
+        let co = ShuffleCoalescer::with_policy(
+            workers,
+            FLUSH,
+            FLUSH / 4,
+            FLUSH,
+            None,
+            Some(outbox),
+            None,
+            adpt_metrics.clone(),
+        );
+        let (adpt_frames, adpt_wire, adpt_time) = run_coalesced(&co);
+        drop(co);
+        assert_eq!(
+            adpt_metrics.counter_value("exchange.coalesced_bytes"),
+            total_bytes as u64
+        );
+        assert!(
+            adpt_frames <= bound,
+            "adaptive uncongested: {adpt_frames} frames exceeds the bound {bound}"
+        );
+        assert_eq!(adpt_wire, stat_wire, "uncongested adaptive must match static bytes");
+
         println!(
-            "{:>8} {:>12} {:>12} {:>13}K {:>13}K {:>12?} {:>12?}",
+            "{:>8} {:>12} {:>12} {:>12} {:>13}K {:>13}K {:>12?} {:>12?} {:>12?}",
             workers,
             frag_frames,
-            coal_frames,
+            stat_frames,
+            adpt_frames,
             frag_wire >> 10,
-            coal_wire >> 10,
+            stat_wire >> 10,
             frag_time,
-            coal_time
+            stat_time,
+            adpt_time
         );
+        for (mode, frames, wire, time) in [
+            ("fragmented", frag_frames, frag_wire, frag_time),
+            ("static", stat_frames, stat_wire, stat_time),
+            ("adaptive", adpt_frames, adpt_wire, adpt_time),
+        ] {
+            json_runs.push(format!(
+                "    {{\"workers\": {workers}, \"mode\": \"{mode}\", \"frames\": {frames}, \
+                 \"wire_bytes\": {wire}, \"wall_ns\": {}}}",
+                time.as_nanos()
+            ));
+        }
     }
     println!(
         "(the seed emits batches x workers tiny frames — per-frame header/codec/syscall\n \
          overhead scales with the cluster; coalescing bounds frames by total/flush + one\n \
          tail frame per destination, and every flushed payload encodes straight into the\n \
-         pinned pool)\n"
+         pinned pool. Adaptive = feedback controller over an idle outbox: it must hold\n \
+         at the ceiling and match static exactly on the uncongested path)\n"
     );
+
+    // CI artifact: BENCH_SHUFFLE_JSON=<path> writes the runs out
+    if let Ok(path) = std::env::var("BENCH_SHUFFLE_JSON") {
+        let json = format!(
+            "{{\n  \"bench\": \"shuffle_coalescing\",\n  \"flush_bytes\": {FLUSH},\n  \
+             \"coalesced_bytes\": {total_bytes},\n  \"runs\": [\n{}\n  ]\n}}\n",
+            json_runs.join(",\n")
+        );
+        std::fs::write(&path, json).unwrap();
+        println!("wrote {path}");
+    }
 }

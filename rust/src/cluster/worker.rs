@@ -95,8 +95,16 @@ impl Worker {
         // slabs for vectored writes, the endpoint's readers land
         // payloads in the pool, and the router decompresses compressed
         // payloads back into it.
+        let metrics = Arc::new(crate::metrics::Metrics::default());
         let outbox = Arc::new(Outbox::new(128));
+        // credit-based backpressure (§3.3): senders start with the
+        // configured per-destination window; receivers return credits
+        // as consumers drain, so a slow peer throttles this worker's
+        // lanes instead of ballooning the outbox
+        outbox.enable_credits(config.exchange_initial_credits);
+        outbox.install_metrics(metrics.clone());
         let router = Arc::new(Router::new());
+        router.install_metrics(metrics.clone());
         if let Some(pool) = &pinned {
             endpoint.install_recv_pool(pool.clone());
             router.install_bounce_pool(pool.clone());
@@ -121,7 +129,7 @@ impl Worker {
             store,
             outbox,
             device_compute: sim.throttle(&sim.profile.device_compute),
-            metrics: Arc::new(crate::metrics::Metrics::default()),
+            metrics,
         };
         // Residency-aware ordering (§3.3.1): the queue scores tasks by
         // where their input holders' bytes live; the movement executor

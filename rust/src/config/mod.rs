@@ -4,6 +4,26 @@
 //! The file format is a TOML subset (`key = value` lines with optional
 //! `[section]` headers, `#` comments, strings, ints, floats, bools)
 //! parsed by [`toml_lite`] — no external dependency, explicit grammar.
+//!
+//! ## Exchange flow-control knobs
+//!
+//! The shuffle's movement-control feedback loop (§3.3) is tuned by four
+//! related knobs, validated together:
+//!
+//! | knob                           | default | constraint                  |
+//! |--------------------------------|---------|-----------------------------|
+//! | `exchange_flush_bytes`         | 4 MiB   | `1 ..= max_frame_bytes/2`   |
+//! | `exchange_flush_floor_bytes`   | 64 KiB  | `1 ..= ceiling`             |
+//! | `exchange_flush_ceiling_bytes` | 4 MiB   | `floor ..= max_frame_bytes/2` |
+//! | `exchange_initial_credits`    | 32      | `>= 1`                      |
+//!
+//! `exchange_flush_bytes` is the *starting* per-destination flush
+//! threshold; the adaptive controller then moves each destination's
+//! threshold inside `[floor, ceiling]` from observed outbox depth and
+//! send latency. Pinning `floor == ceiling` turns adaptation off.
+//! `exchange_initial_credits` is the per-destination startup window of
+//! data frames a sender may have in flight before the receiver's first
+//! credit grant arrives — the common (keeping-up) case never stalls.
 
 pub mod toml_lite;
 
@@ -131,6 +151,25 @@ pub struct WorkerConfig {
     /// `max_frame_bytes / 2` so a flush that overshoots the threshold
     /// still clears the receiver's frame-length guard.
     pub exchange_flush_bytes: usize,
+    /// Adaptive flush controller floor (bytes): a congested destination
+    /// (deep outbox, rising send latency) has its flush threshold
+    /// halved per adaptation step, but never below this — frames keep a
+    /// minimum useful size even on a struggling path. Default 64 KiB.
+    pub exchange_flush_floor_bytes: usize,
+    /// Adaptive flush controller ceiling (bytes): an uncongested
+    /// destination grows its threshold toward this, coalescing bigger
+    /// frames. Validated to at most `max_frame_bytes / 2` (same
+    /// overshoot headroom as `exchange_flush_bytes`). Set equal to the
+    /// floor to pin the threshold and disable adaptation. Default
+    /// 4 MiB.
+    pub exchange_flush_ceiling_bytes: usize,
+    /// Credit-based exchange backpressure: data frames a sender may
+    /// have outstanding per destination before the receiver's first
+    /// credit grant. Receivers return one credit per drained batch, so
+    /// a consumer that keeps up never stalls its senders while a slow
+    /// one bounds them to this window. Must be >= 1 (a zero window
+    /// could never send the first frame). Default 32.
+    pub exchange_initial_credits: usize,
 
     // ---- network executor
     /// Compress batches before sending (Fig-4 B, E toggles this).
@@ -181,6 +220,9 @@ impl Default for WorkerConfig {
             broadcast_threshold: 256 << 10,
             exchange_estimate_batches: 4,
             exchange_flush_bytes: 4 << 20,
+            exchange_flush_floor_bytes: 64 << 10,
+            exchange_flush_ceiling_bytes: 4 << 20,
+            exchange_initial_credits: 32,
             net_compression: Some(Codec::Zstd { level: 1 }),
             transport: TransportKind::Inproc,
             max_frame_bytes: crate::network::frame::DEFAULT_MAX_FRAME_BYTES,
@@ -307,14 +349,9 @@ impl WorkerConfig {
         set_usize!(broadcast_threshold);
         set_usize!(exchange_estimate_batches);
         set_usize!(exchange_flush_bytes);
-        if get("exchange_flush_bytes").is_none() {
-            // a file that shrinks only max_frame_bytes keeps working:
-            // the *default* flush threshold follows the frame cap down
-            // (an explicit exchange_flush_bytes is still validated
-            // strictly below)
-            self.exchange_flush_bytes =
-                self.exchange_flush_bytes.min(self.max_frame_bytes / 2).max(1);
-        }
+        set_usize!(exchange_flush_floor_bytes);
+        set_usize!(exchange_flush_ceiling_bytes);
+        set_usize!(exchange_initial_credits);
         if let Some(v) = get("pinned_pool") {
             self.pinned_pool = v.as_bool()?;
         }
@@ -356,6 +393,23 @@ impl WorkerConfig {
             self.task_preload = v.as_bool()?;
         }
         set_usize!(max_frame_bytes);
+        // The *default* flush thresholds follow an overridden frame cap
+        // down, so a file that shrinks only max_frame_bytes keeps
+        // working (explicit values are still validated strictly below).
+        // This must run after max_frame_bytes itself is applied — the
+        // clamp target is the overridden cap, not the default.
+        if get("exchange_flush_bytes").is_none() {
+            self.exchange_flush_bytes =
+                self.exchange_flush_bytes.min(self.max_frame_bytes / 2).max(1);
+        }
+        if get("exchange_flush_ceiling_bytes").is_none() {
+            self.exchange_flush_ceiling_bytes =
+                self.exchange_flush_ceiling_bytes.min(self.max_frame_bytes / 2).max(1);
+        }
+        if get("exchange_flush_floor_bytes").is_none() {
+            self.exchange_flush_floor_bytes =
+                self.exchange_flush_floor_bytes.min(self.exchange_flush_ceiling_bytes);
+        }
         if let Some(v) = get("transport") {
             self.transport = TransportKind::parse(&v.as_str()?)?;
         }
@@ -452,6 +506,39 @@ impl WorkerConfig {
                 self.exchange_flush_bytes,
                 self.max_frame_bytes / 2
             )));
+        }
+        if self.exchange_flush_floor_bytes == 0 {
+            return Err(Error::Config(
+                "exchange_flush_floor_bytes must be >= 1 (the adaptive \
+                 controller's lower bound; 1 = congested paths flush every \
+                 batch)"
+                    .into(),
+            ));
+        }
+        if self.exchange_flush_floor_bytes > self.exchange_flush_ceiling_bytes {
+            return Err(Error::Config(format!(
+                "exchange_flush_floor_bytes ({}) must be <= \
+                 exchange_flush_ceiling_bytes ({}): the adaptive flush \
+                 controller moves each destination's threshold inside \
+                 [floor, ceiling]",
+                self.exchange_flush_floor_bytes, self.exchange_flush_ceiling_bytes
+            )));
+        }
+        if self.exchange_flush_ceiling_bytes > self.max_frame_bytes / 2 {
+            return Err(Error::Config(format!(
+                "exchange_flush_ceiling_bytes ({}) must be <= max_frame_bytes / 2 \
+                 ({}): an adapted-up flush threshold needs the same overshoot \
+                 headroom as exchange_flush_bytes",
+                self.exchange_flush_ceiling_bytes,
+                self.max_frame_bytes / 2
+            )));
+        }
+        if self.exchange_initial_credits == 0 {
+            return Err(Error::Config(
+                "exchange_initial_credits must be >= 1 (a zero startup window \
+                 could never send the first data frame)"
+                    .into(),
+            ));
         }
         if self.pinned_pool && (self.pinned_buf_size == 0 || self.pinned_buffers == 0) {
             return Err(Error::Config("pinned pool dimensions must be >= 1".into()));
@@ -594,6 +681,12 @@ mod tests {
             512 << 10,
             "default flush clamps to half the shrunken frame cap"
         );
+        assert_eq!(
+            cfg.exchange_flush_ceiling_bytes,
+            512 << 10,
+            "default controller ceiling follows the frame cap down too"
+        );
+        assert_eq!(cfg.exchange_flush_floor_bytes, 64 << 10, "floor already fits");
         // an explicit flush above the cap is still rejected
         let doc = TomlLite::parse(
             "max_frame_bytes = 1048576\nexchange_flush_bytes = 4194304\n",
@@ -616,6 +709,59 @@ mod tests {
         let mut cfg = WorkerConfig::default();
         cfg.exchange_estimate_batches = 0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn flow_control_knobs_validated_and_applied() {
+        // defaults are self-consistent
+        let cfg = WorkerConfig::default();
+        assert_eq!(cfg.exchange_flush_floor_bytes, 64 << 10);
+        assert_eq!(cfg.exchange_flush_ceiling_bytes, 4 << 20);
+        assert_eq!(cfg.exchange_initial_credits, 32);
+        cfg.validate().unwrap();
+
+        let mut cfg = WorkerConfig::default();
+        cfg.exchange_flush_floor_bytes = 0;
+        assert!(cfg.validate().is_err(), "zero floor rejected");
+
+        let mut cfg = WorkerConfig::default();
+        cfg.exchange_flush_floor_bytes = 8 << 20; // above the ceiling
+        assert!(cfg.validate().is_err(), "floor above ceiling rejected");
+
+        let mut cfg = WorkerConfig::default();
+        cfg.exchange_flush_ceiling_bytes = cfg.max_frame_bytes; // > cap/2
+        assert!(cfg.validate().is_err(), "ceiling above max_frame_bytes/2 rejected");
+
+        let mut cfg = WorkerConfig::default();
+        cfg.exchange_initial_credits = 0;
+        assert!(cfg.validate().is_err(), "zero credit window rejected");
+
+        // floor == ceiling (adaptation pinned) is legal
+        let mut cfg = WorkerConfig::default();
+        cfg.exchange_flush_floor_bytes = 1 << 20;
+        cfg.exchange_flush_ceiling_bytes = 1 << 20;
+        cfg.validate().unwrap();
+
+        // file overrides reach the fields, and an explicit out-of-range
+        // ceiling is a hard error (no silent clamping of explicit values)
+        let doc = TomlLite::parse(
+            "exchange_flush_floor_bytes = 4096\n\
+             exchange_flush_ceiling_bytes = 1048576\n\
+             exchange_initial_credits = 4\n",
+        )
+        .unwrap();
+        let mut cfg = WorkerConfig::default();
+        cfg.exchange_flush_bytes = 512 << 10;
+        cfg.apply(&doc).unwrap();
+        assert_eq!(cfg.exchange_flush_floor_bytes, 4096);
+        assert_eq!(cfg.exchange_flush_ceiling_bytes, 1 << 20);
+        assert_eq!(cfg.exchange_initial_credits, 4);
+        let doc = TomlLite::parse(
+            "max_frame_bytes = 1048576\nexchange_flush_ceiling_bytes = 4194304\n",
+        )
+        .unwrap();
+        let mut cfg = WorkerConfig::default();
+        assert!(cfg.apply(&doc).is_err());
     }
 
     #[test]

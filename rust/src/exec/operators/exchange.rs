@@ -32,8 +32,8 @@
 //! (append-only [`crate::types::BatchBuilder`] column accumulators). A
 //! destination flushes only when
 //!
-//! * its buffer crosses `exchange_flush_bytes` (default ~4 MiB —
-//!   slab-friendly target frames),
+//! * its buffer crosses that destination's *current* flush threshold
+//!   (adaptive — see below),
 //! * the upstream finishes (final drain before Finish), or
 //! * the worker's memory-pressure epoch advances
 //!   ([`crate::memory::PressureEvent::memory_raise_count`], installed
@@ -47,21 +47,66 @@
 //! counted), so the old `StagedBytes::Heap(batch.encode())` bounce is
 //! gone from the shuffle path. Metrics: `exchange.flush_total`,
 //! `exchange.coalesced_bytes`, `exchange.pressure_flush_total`, plus
-//! the live `exchange.buffered_bytes` gauge (coalescer memory is plain
-//! heap outside the governor's accounting; the gauge keeps it visible,
-//! and the flush threshold bounds it at `flush_bytes × destinations`
-//! per exchange).
+//! the live `exchange.buffered_bytes` gauge and the per-destination
+//! `exchange.flush_bytes_current{dst=N}` gauges.
+//!
+//! ## Feedback-driven flush control (§3.3: when/where/how from
+//! observed state)
+//!
+//! The flush point is a per-destination *controller*, not a static
+//! knob. Each destination's threshold starts at
+//! `exchange_flush_bytes` and adapts inside
+//! `[exchange_flush_floor_bytes, exchange_flush_ceiling_bytes]` (the
+//! ceiling is clamped to `max_frame_bytes / 2` by config validation;
+//! floor == ceiling pins the threshold and disables adaptation — what
+//! [`ShuffleCoalescer::new`] does for tests and benches).
+//!
+//! **Signals** — sampled from the worker's [`Outbox`] on every append
+//! to the destination:
+//! * *outbox depth* ([`Outbox::queued_for`]): frames already queued for
+//!   this destination that its sender lane has not popped;
+//! * *send latency* ([`Outbox::send_latency_ns`]): the lanes' EWMA of
+//!   `endpoint.send` wall time toward this destination, compared
+//!   against the best (lowest) EWMA ever observed for it — the
+//!   uncongested wire baseline.
+//!
+//! **Rule** — congestion (depth ≥ 2, or latency above 2× the baseline)
+//! halves the threshold toward the floor: a congested path flushes
+//! small and early so buffered rows don't sit behind a slow peer and
+//! credit-gated lanes get finer-grained frames to interleave. An idle
+//! path (depth 0, no spike) grows the threshold by ¼ toward the
+//! ceiling: a fast path coalesces bigger, slab-friendlier frames.
+//! Anything in between holds. Every move is published on the
+//! `exchange.flush_bytes_current{dst=N}` gauge.
+//!
+//! **Governor accounting** — builder bytes are no longer invisible heap:
+//! each destination shard holds a [`Reservation`] that grows on append
+//! and shrinks on flush, so buffered shuffle state competes with
+//! compute reservations in [`MemoryGovernor`] accounting. When a grow
+//! is refused, the shard raises pressure non-blockingly
+//! ([`MemoryGovernor::raise_pressure`]) — which advances the very
+//! pressure epoch the coalescer's early-flush trigger polls, so a
+//! self-induced squeeze makes the exchange shed its own buffers.
+//!
+//! **Sharding** — builders live behind per-destination locks rather
+//! than one per-exchange mutex. This matters exactly when the exchange
+//! is busiest: several stream tasks scatter concurrently and their
+//! gather-append memcpys land on different destinations, so they no
+//! longer serialize on a single lock (they only ever collide on the
+//! same destination shard). The pressure-epoch claim is a lone atomic
+//! compare-exchange, so a sweep is claimed by exactly one task.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::exec::operators::kernels::ScatterPlan;
 use crate::exec::operators::{kernels, OpCommon, Operator};
 use crate::exec::plan::ExchangeRole;
 use crate::exec::task::{Prefetch, Task};
 use crate::exec::WorkerCtx;
-use crate::executors::network::ChannelRx;
-use crate::memory::{BatchHolder, PressureEvent};
+use crate::executors::network::{ChannelRx, Outbox};
+use crate::memory::{BatchHolder, MemoryGovernor, PressureEvent, Reservation};
 use crate::metrics::Metrics;
 use crate::types::{BatchBuilder, RecordBatch};
 use crate::Result;
@@ -90,92 +135,244 @@ enum Phase {
 /// unknown at this point in the DAG).
 const EST_GROWTH: f64 = 4.0;
 
+/// A destination at least this many frames deep in the outbox is
+/// congested: its sender lane is not keeping up (or is credit-gated),
+/// so flushing smaller helps nothing pile up behind it.
+const CONGESTED_DEPTH: usize = 2;
+
+/// Send-latency EWMA above this multiple of the best-ever EWMA toward
+/// the destination counts as a latency spike.
+const LAT_SPIKE_MULT: u64 = 2;
+
+/// One destination's coalescing state, behind its own lock (see the
+/// module doc's sharding note).
+struct DestShard {
+    builder: BatchBuilder,
+    /// Current adaptive flush threshold (within `[floor, ceiling]`).
+    flush_bytes: usize,
+    /// Lowest send-latency EWMA ever observed toward this destination —
+    /// the uncongested baseline a spike is measured against.
+    base_latency_ns: Option<u64>,
+    /// Governor reservation covering the builder's buffered bytes
+    /// (created on first use; `None` until then or in static mode).
+    reservation: Option<Reservation>,
+}
+
 /// Per-destination shuffle coalescing buffers (see the module doc).
 ///
 /// One instance per hash-partitioning exchange, shared by its stream
-/// tasks under a mutex: appends are scatter placements into
-/// [`BatchBuilder`]s, and the three flush triggers (size threshold,
-/// final drain, memory-pressure epoch advance) hand back whole
-/// coalesced `RecordBatch`es for the caller to send. The pressure check
-/// is a single atomic read against the epoch observed last time — no
-/// subscription, no callback plumbing.
-///
-/// The gather-append runs under one mutex for the whole exchange, so
-/// concurrent stream tasks serialize on the append memcpy (they still
-/// hash, decode, encode, and compress in parallel — the lock covers
-/// only the builder fill). Sharding to per-destination locks is a
-/// known follow-up if profiles show contention here (ROADMAP).
+/// tasks: appends are scatter placements into per-destination
+/// [`BatchBuilder`] shards (each behind its own lock), and the three
+/// flush triggers (adaptive size threshold, final drain,
+/// memory-pressure epoch advance) hand back whole coalesced
+/// `RecordBatch`es for the caller to send. The pressure check is one
+/// atomic compare-exchange against the epoch observed last time — no
+/// subscription, no callback plumbing, and exactly one concurrent task
+/// claims each epoch's sweep.
 pub struct ShuffleCoalescer {
-    builders: Vec<BatchBuilder>,
-    flush_bytes: usize,
+    shards: Vec<Mutex<DestShard>>,
+    /// Adaptation bounds; `floor == ceiling` pins the threshold
+    /// (static mode — [`ShuffleCoalescer::new`]).
+    floor: usize,
+    ceiling: usize,
+    /// Congestion-signal source; `None` disables adaptation.
+    outbox: Option<Arc<Outbox>>,
+    /// Builder bytes reserve here; `None` leaves them unaccounted.
+    governor: Option<MemoryGovernor>,
     pressure: Option<Arc<PressureEvent>>,
-    /// Memory-pressure epoch at the last check; an advance flushes.
-    seen_epoch: u64,
+    /// Memory-pressure epoch at the last sweep; an advance flushes.
+    seen_epoch: AtomicU64,
     metrics: Arc<Metrics>,
 }
 
+/// Leaked-once gauge name `exchange.flush_bytes_current{dst=N}` — the
+/// metrics registry keys on `&'static str`, and the set of destinations
+/// is bounded by cluster width, so the leak is a one-time cost per
+/// process, not a growth path.
+fn flush_gauge_name(dst: usize) -> &'static str {
+    static NAMES: OnceLock<Mutex<HashMap<usize, &'static str>>> = OnceLock::new();
+    let cache = NAMES.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut cache = cache.lock().unwrap();
+    cache
+        .entry(dst)
+        .or_insert_with(|| {
+            Box::leak(
+                format!("exchange.flush_bytes_current{{dst={dst}}}").into_boxed_str(),
+            )
+        })
+}
+
 impl ShuffleCoalescer {
+    /// Static-threshold coalescer: floor == ceiling == `flush_bytes`,
+    /// no signal source, no governor accounting. What tests, benches,
+    /// and the static-vs-adaptive comparison use.
     pub fn new(
         dests: usize,
         flush_bytes: usize,
         pressure: Option<Arc<PressureEvent>>,
         metrics: Arc<Metrics>,
     ) -> ShuffleCoalescer {
+        Self::with_policy(dests, flush_bytes, flush_bytes, flush_bytes, pressure, None, None, metrics)
+    }
+
+    /// Full feedback-driven coalescer: per-destination thresholds start
+    /// at `start` and adapt inside `[floor, ceiling]` from `outbox`
+    /// depth/latency signals; builder bytes are accounted against
+    /// `governor` when present. See the module doc for the rule.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_policy(
+        dests: usize,
+        start: usize,
+        floor: usize,
+        ceiling: usize,
+        pressure: Option<Arc<PressureEvent>>,
+        outbox: Option<Arc<Outbox>>,
+        governor: Option<MemoryGovernor>,
+        metrics: Arc<Metrics>,
+    ) -> ShuffleCoalescer {
+        let floor = floor.max(1);
+        let ceiling = ceiling.max(floor);
+        let start = start.clamp(floor, ceiling);
         let seen_epoch = pressure.as_ref().map_or(0, |e| e.memory_raise_count());
         ShuffleCoalescer {
-            builders: (0..dests.max(1)).map(|_| BatchBuilder::new()).collect(),
-            flush_bytes: flush_bytes.max(1),
+            shards: (0..dests.max(1))
+                .map(|_| {
+                    Mutex::new(DestShard {
+                        builder: BatchBuilder::new(),
+                        flush_bytes: start,
+                        base_latency_ns: None,
+                        reservation: None,
+                    })
+                })
+                .collect(),
+            floor,
+            ceiling,
+            outbox,
+            governor,
             pressure,
-            seen_epoch,
+            seen_epoch: AtomicU64::new(seen_epoch),
             metrics,
         }
     }
 
     pub fn buffered_rows(&self) -> usize {
-        self.builders.iter().map(|b| b.rows()).sum()
+        self.shards.iter().map(|s| s.lock().unwrap().builder.rows()).sum()
+    }
+
+    /// Number of destinations this coalescer scatters to.
+    pub fn num_dests(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The current flush threshold for `dst` (test/bench
+    /// observability; also published on
+    /// `exchange.flush_bytes_current{dst=N}`).
+    pub fn flush_threshold(&self, dst: usize) -> usize {
+        self.shards[dst].lock().unwrap().flush_bytes
     }
 
     /// Keep the worker-level `exchange.buffered_bytes` gauge in step
-    /// with the builders. Coalescer memory is plain heap the governor
-    /// does not account, so the gauge is how an operator sees shuffle
-    /// buffering from the outside (the flush threshold bounds it at
-    /// `flush_bytes × destinations` per exchange).
+    /// with the builders (the governor reservation is per-exchange
+    /// accounting; the gauge is the worker-wide view).
     fn note_buffered(&self, delta: i64) {
         if delta != 0 {
             self.metrics.gauge("exchange.buffered_bytes").add(delta);
         }
     }
 
-    fn flush(&mut self, dst: usize) -> RecordBatch {
-        let batch = self.builders[dst].finish();
+    /// Builder grew by `delta` bytes: mirror it into the gauge and the
+    /// shard's governor reservation. A refused grow cannot block an
+    /// append mid-scatter, so it raises device pressure instead — the
+    /// pressure epoch advances, and the coalescer's own early-flush
+    /// trigger drains the buffers it just failed to reserve for.
+    fn account_grow(&self, shard: &mut DestShard, delta: usize) {
+        self.note_buffered(delta as i64);
+        let Some(gov) = &self.governor else { return };
+        if shard.reservation.is_none() {
+            shard.reservation = gov.try_reserve(0);
+        }
+        let grown = match shard.reservation.as_mut() {
+            Some(res) => res.grow(delta).is_ok(),
+            None => false,
+        };
+        if !grown {
+            gov.raise_pressure(delta);
+        }
+    }
+
+    /// Builder shed `delta` bytes (flush or drop): settle the gauge and
+    /// hand the reservation back. The shrink clamps to what is actually
+    /// held, so bytes whose grow was refused never over-release.
+    fn account_shrink(&self, shard: &mut DestShard, delta: usize) {
+        self.note_buffered(-(delta as i64));
+        if let Some(res) = shard.reservation.as_mut() {
+            res.shrink(delta);
+        }
+    }
+
+    /// Re-aim `dst`'s flush threshold from the outbox's depth and
+    /// latency signals (no-op in static mode).
+    fn adapt(&self, dst: usize, shard: &mut DestShard) {
+        let Some(outbox) = &self.outbox else { return };
+        if self.floor == self.ceiling {
+            return;
+        }
+        let depth = outbox.queued_for(dst);
+        let latency = outbox.send_latency_ns(dst);
+        let spike = match (latency, shard.base_latency_ns) {
+            (Some(l), Some(base)) => l > base.saturating_mul(LAT_SPIKE_MULT),
+            _ => false,
+        };
+        if let Some(l) = latency {
+            shard.base_latency_ns = Some(shard.base_latency_ns.map_or(l, |b| b.min(l)));
+        }
+        let cur = shard.flush_bytes;
+        let next = if depth >= CONGESTED_DEPTH || spike {
+            (cur / 2).max(self.floor)
+        } else if depth == 0 && !spike {
+            cur.saturating_add((cur / 4).max(1)).min(self.ceiling)
+        } else {
+            cur
+        };
+        if next != cur {
+            shard.flush_bytes = next;
+            self.metrics.gauge(flush_gauge_name(dst)).set(next as i64);
+        }
+    }
+
+    fn flush_shard(&self, shard: &mut DestShard) -> RecordBatch {
+        let batch = shard.builder.finish();
         self.metrics.counter("exchange.flush_total").inc();
         self.metrics
             .counter("exchange.coalesced_bytes")
             .add(batch.byte_size() as u64);
-        self.note_buffered(-(batch.byte_size() as i64));
+        self.account_shrink(shard, batch.byte_size());
         batch
     }
 
     /// Scatter `batch`'s rows into the destination buffers per `plan`,
     /// returning every `(dst, coalesced_batch)` that must go out now:
     /// pressure-stale buffers first, then destinations whose fill
-    /// crossed `flush_bytes`.
+    /// crossed their current threshold.
     pub fn append(
-        &mut self,
+        &self,
         batch: &RecordBatch,
         plan: &ScatterPlan,
     ) -> Result<Vec<(usize, RecordBatch)>> {
         let mut out = self.take_pressure_flushes();
-        for dst in 0..self.builders.len() {
+        for dst in 0..self.shards.len() {
             let rows = plan.rows_for(dst);
             if rows.is_empty() {
                 continue;
             }
-            let before = self.builders[dst].byte_size();
-            self.builders[dst].append_gather(batch, rows)?;
-            self.note_buffered((self.builders[dst].byte_size() - before) as i64);
-            if self.builders[dst].byte_size() >= self.flush_bytes {
-                let flushed = self.flush(dst);
+            let mut shard = self.shards[dst].lock().unwrap();
+            let before = shard.builder.byte_size();
+            shard.builder.append_gather(batch, rows)?;
+            let delta = shard.builder.byte_size() - before;
+            self.account_grow(&mut shard, delta);
+            self.adapt(dst, &mut shard);
+            if shard.builder.byte_size() >= shard.flush_bytes {
+                let flushed = self.flush_shard(&mut shard);
                 out.push((dst, flushed));
             }
         }
@@ -184,21 +381,29 @@ impl ShuffleCoalescer {
 
     /// Flush everything buffered when the memory-pressure epoch moved
     /// since the last look (also polled between appends, so buffers
-    /// drain under pressure even while the upstream is quiet).
-    pub fn take_pressure_flushes(&mut self) -> Vec<(usize, RecordBatch)> {
+    /// drain under pressure even while the upstream is quiet). The
+    /// epoch is claimed with a compare-exchange, so concurrent stream
+    /// tasks never double-sweep.
+    pub fn take_pressure_flushes(&self) -> Vec<(usize, RecordBatch)> {
         let Some(event) = &self.pressure else {
             return Vec::new();
         };
         let epoch = event.memory_raise_count();
-        if epoch == self.seen_epoch {
+        let seen = self.seen_epoch.load(Ordering::Acquire);
+        if epoch == seen
+            || self
+                .seen_epoch
+                .compare_exchange(seen, epoch, Ordering::AcqRel, Ordering::Acquire)
+                .is_err()
+        {
             return Vec::new();
         }
-        self.seen_epoch = epoch;
         let mut out = Vec::new();
-        for dst in 0..self.builders.len() {
-            if !self.builders[dst].is_empty() {
+        for (dst, slot) in self.shards.iter().enumerate() {
+            let mut shard = slot.lock().unwrap();
+            if !shard.builder.is_empty() {
                 self.metrics.counter("exchange.pressure_flush_total").inc();
-                let flushed = self.flush(dst);
+                let flushed = self.flush_shard(&mut shard);
                 out.push((dst, flushed));
             }
         }
@@ -207,11 +412,12 @@ impl ShuffleCoalescer {
 
     /// Final drain: every non-empty destination buffer, regardless of
     /// size (the upstream finished).
-    pub fn flush_all(&mut self) -> Vec<(usize, RecordBatch)> {
+    pub fn flush_all(&self) -> Vec<(usize, RecordBatch)> {
         let mut out = Vec::new();
-        for dst in 0..self.builders.len() {
-            if !self.builders[dst].is_empty() {
-                let flushed = self.flush(dst);
+        for (dst, slot) in self.shards.iter().enumerate() {
+            let mut shard = slot.lock().unwrap();
+            if !shard.builder.is_empty() {
+                let flushed = self.flush_shard(&mut shard);
                 out.push((dst, flushed));
             }
         }
@@ -222,8 +428,13 @@ impl ShuffleCoalescer {
 impl Drop for ShuffleCoalescer {
     fn drop(&mut self) {
         // an aborted query drops buffered rows without flushing: settle
-        // the gauge so it keeps meaning "bytes currently buffered"
-        let left: usize = self.builders.iter().map(|b| b.byte_size()).sum();
+        // the gauge so it keeps meaning "bytes currently buffered" (the
+        // reservations release themselves on drop)
+        let left: usize = self
+            .shards
+            .iter()
+            .map(|s| s.lock().unwrap().builder.byte_size())
+            .sum();
         self.note_buffered(-(left as i64));
     }
 }
@@ -252,8 +463,9 @@ pub struct ExchangeOp {
     seen_batches: Arc<AtomicU64>,
     sent_batches: Arc<AtomicU64>,
     /// Per-destination coalescing buffers (HashPartition mode only;
-    /// built lazily on the first routed batch, shared by stream tasks).
-    coalescer: Arc<Mutex<Option<ShuffleCoalescer>>>,
+    /// built lazily on the first routed batch, shared by stream tasks —
+    /// no outer lock: the coalescer's own shards serialize appends).
+    coalescer: Arc<OnceLock<ShuffleCoalescer>>,
 }
 
 impl ExchangeOp {
@@ -287,7 +499,7 @@ impl ExchangeOp {
             seen_bytes: Arc::new(AtomicU64::new(0)),
             seen_batches: Arc::new(AtomicU64::new(0)),
             sent_batches: Arc::new(AtomicU64::new(0)),
-            coalescer: Arc::new(Mutex::new(None)),
+            coalescer: Arc::new(OnceLock::new()),
         }
     }
 
@@ -308,11 +520,7 @@ impl ExchangeOp {
     /// Rows currently buffered in the shuffle coalescing builders
     /// (bench/test observability).
     pub fn buffered_shuffle_rows(&self) -> usize {
-        self.coalescer
-            .lock()
-            .unwrap()
-            .as_ref()
-            .map_or(0, |c| c.buffered_rows())
+        self.coalescer.get().map_or(0, |c| c.buffered_rows())
     }
 
     /// Send one coalesced flush slab-native (heap fallback when the
@@ -386,7 +594,7 @@ impl ExchangeOp {
         key: &str,
         batch: &RecordBatch,
         sent: &AtomicU64,
-        coalescer: &Mutex<Option<ShuffleCoalescer>>,
+        coalescer: &OnceLock<ShuffleCoalescer>,
     ) -> Result<()> {
         let workers = ctx.num_workers();
         match mode {
@@ -410,19 +618,23 @@ impl ExchangeOp {
                 // single-pass scatter: rows for partition p belong to
                 // worker p % workers, laid out per destination
                 let plan = kernels::partition_scatter(ctx, keys, parts, workers)?;
-                let flushes = {
-                    let mut guard = coalescer.lock().unwrap();
-                    let co = guard.get_or_insert_with(|| {
-                        ShuffleCoalescer::new(
-                            workers,
-                            ctx.config.exchange_flush_bytes,
-                            ctx.env.arena.pressure_event(),
-                            ctx.metrics.clone(),
-                        )
-                    });
-                    co.append(batch, &plan)?
-                };
-                // send outside the buffer lock: outbox backpressure must
+                // full feedback policy: thresholds adapt between the
+                // configured floor/ceiling from this worker's outbox
+                // signals, and builder bytes reserve from the governor
+                let co = coalescer.get_or_init(|| {
+                    ShuffleCoalescer::with_policy(
+                        workers,
+                        ctx.config.exchange_flush_bytes,
+                        ctx.config.exchange_flush_floor_bytes,
+                        ctx.config.exchange_flush_ceiling_bytes,
+                        ctx.env.arena.pressure_event(),
+                        Some(ctx.outbox.clone()),
+                        Some(ctx.governor.clone()),
+                        ctx.metrics.clone(),
+                    )
+                });
+                let flushes = co.append(batch, &plan)?;
+                // send outside the shard locks: outbox backpressure must
                 // pace this task without also parking its siblings
                 for (dst, coalesced) in flushes {
                     Self::send_flushed(ctx, channel, dst, coalesced, sent)?;
@@ -539,10 +751,10 @@ impl Operator for ExchangeOp {
                 // shuffle rows must never sit on a worker that is busy
                 // spilling.
                 if mode == ExchangeMode::HashPartition {
-                    let flushes = match self.coalescer.lock().unwrap().as_mut() {
-                        Some(co) => co.take_pressure_flushes(),
-                        None => Vec::new(),
-                    };
+                    let flushes = self
+                        .coalescer
+                        .get()
+                        .map_or_else(Vec::new, |co| co.take_pressure_flushes());
                     self.spawn_drain(flushes, &mut tasks);
                 }
                 let avail = self.pending.len() + self.input.len();
@@ -651,10 +863,8 @@ impl Operator for ExchangeOp {
                     // buffers become one more tracked task (its held
                     // inflight defers this branch); Finish goes out
                     // only once the coalescer has fully drained.
-                    let flushes = match self.coalescer.lock().unwrap().as_mut() {
-                        Some(co) => co.flush_all(),
-                        None => Vec::new(),
-                    };
+                    let flushes =
+                        self.coalescer.get().map_or_else(Vec::new, |co| co.flush_all());
                     if !flushes.is_empty() {
                         self.spawn_drain(flushes, &mut tasks);
                     } else {
@@ -737,7 +947,7 @@ mod tests {
         let metrics = Arc::new(crate::metrics::Metrics::default());
         let workers = 3;
         // 2 i64 columns -> 16 bytes/row; flush after ~32 rows/dst
-        let mut co = ShuffleCoalescer::new(workers, 512, None, metrics.clone());
+        let co = ShuffleCoalescer::new(workers, 512, None, metrics.clone());
         let batches: Vec<RecordBatch> = (0..5).map(|s| keyed_batch(100, s)).collect();
         let mut got: Vec<Vec<RecordBatch>> = vec![Vec::new(); workers];
         for b in &batches {
@@ -772,7 +982,7 @@ mod tests {
         let metrics = Arc::new(crate::metrics::Metrics::default());
         let event = PressureEvent::new();
         // threshold far above anything appended here
-        let mut co = ShuffleCoalescer::new(2, 1 << 30, Some(event.clone()), metrics.clone());
+        let co = ShuffleCoalescer::new(2, 1 << 30, Some(event.clone()), metrics.clone());
         let b = keyed_batch(64, 7);
         let keys = b.column("k").unwrap().data.as_i64().unwrap();
         let plan = kernels::partition_scatter(&ctx, keys, 16, 2).unwrap();
@@ -806,6 +1016,118 @@ mod tests {
         assert!(metrics.gauge_value("exchange.buffered_bytes") > 0);
         drop(co);
         assert_eq!(metrics.gauge_value("exchange.buffered_bytes"), 0);
+    }
+
+    #[test]
+    fn adaptive_threshold_tracks_outbox_depth() {
+        let ctx = crate::exec::WorkerCtx::test();
+        let metrics = Arc::new(crate::metrics::Metrics::default());
+        let outbox = Arc::new(Outbox::new(64));
+        let co = ShuffleCoalescer::with_policy(
+            2,
+            1024,
+            256,
+            4096,
+            None,
+            Some(outbox.clone()),
+            None,
+            metrics.clone(),
+        );
+        assert_eq!(co.flush_threshold(0), 1024);
+        assert_eq!(co.flush_threshold(1), 1024);
+
+        let b = keyed_batch(64, 1);
+        let keys = b.column("k").unwrap().data.as_i64().unwrap();
+        let plan = kernels::partition_scatter(&ctx, keys, 16, 2).unwrap();
+
+        // congest dst 0 only: two undrained frames ≥ CONGESTED_DEPTH
+        outbox.send_finish(0, 0).unwrap();
+        outbox.send_finish(0, 0).unwrap();
+        for _ in 0..40 {
+            co.append(&b, &plan).unwrap();
+        }
+        assert_eq!(
+            co.flush_threshold(0),
+            256,
+            "congested path must halve down to the floor and stop there"
+        );
+        assert_eq!(
+            metrics.gauge_value("exchange.flush_bytes_current{dst=0}"),
+            256,
+            "every threshold move is published"
+        );
+        assert_eq!(
+            co.flush_threshold(1),
+            4096,
+            "idle path must grow up to the ceiling and stop there"
+        );
+        assert_eq!(metrics.gauge_value("exchange.flush_bytes_current{dst=1}"), 4096);
+    }
+
+    #[test]
+    fn governor_accounts_builder_bytes_and_squeeze_self_flushes() {
+        let ctx = crate::exec::WorkerCtx::test();
+        let metrics = Arc::new(crate::metrics::Metrics::default());
+        let b = keyed_batch(64, 3);
+        let keys = b.column("k").unwrap().data.as_i64().unwrap();
+        let plan = kernels::partition_scatter(&ctx, keys, 16, 2).unwrap();
+
+        // roomy governor: the reservation tracks builder bytes exactly
+        let gov =
+            MemoryGovernor::new(crate::memory::DeviceArena::new(1 << 20));
+        let co = ShuffleCoalescer::with_policy(
+            2,
+            1 << 30,
+            1 << 30,
+            1 << 30,
+            None,
+            None,
+            Some(gov.clone()),
+            metrics.clone(),
+        );
+        assert!(co.append(&b, &plan).unwrap().is_empty());
+        assert_eq!(gov.reserved(), b.byte_size(), "builder bytes must be reserved");
+        let flushed = co.flush_all();
+        assert_eq!(
+            flushed.iter().map(|(_, f)| f.byte_size()).sum::<usize>(),
+            b.byte_size()
+        );
+        assert_eq!(gov.reserved(), 0, "flush must hand the reservation back");
+        // dropping a part-filled coalescer releases via RAII
+        assert!(co.append(&b, &plan).unwrap().is_empty());
+        assert_eq!(gov.reserved(), b.byte_size());
+        drop(co);
+        assert_eq!(gov.reserved(), 0);
+
+        // squeezed governor: a refused grow raises the pressure epoch,
+        // and the coalescer's own early-flush trigger fires from it —
+        // the self-induced-squeeze loop the tentpole closes
+        let tiny = MemoryGovernor::new(crate::memory::DeviceArena::new(64));
+        let event = PressureEvent::new();
+        tiny.install_pressure(event.clone());
+        let co = ShuffleCoalescer::with_policy(
+            2,
+            1 << 30,
+            1 << 30,
+            1 << 30,
+            Some(event.clone()),
+            None,
+            Some(tiny.clone()),
+            metrics.clone(),
+        );
+        let epoch0 = event.memory_raise_count();
+        assert!(co.append(&b, &plan).unwrap().is_empty(), "append still buffers");
+        assert!(
+            event.memory_raise_count() > epoch0,
+            "a refused grow must raise pressure"
+        );
+        let flushed = co.take_pressure_flushes();
+        assert_eq!(
+            flushed.iter().map(|(_, f)| f.rows()).sum::<usize>(),
+            64,
+            "the squeeze the coalescer caused must drain the coalescer"
+        );
+        assert_eq!(co.buffered_rows(), 0);
     }
 
     /// Acceptance: a multi-batch hash-partition shuffle emits at most

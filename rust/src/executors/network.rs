@@ -28,11 +28,39 @@
 //! side falls back to the heap when the pool is dry — counted by the
 //! `codec.heap_fallback_bytes` gauge — so exhaustion degrades
 //! throughput, never correctness.
+//!
+//! ## Credit-based backpressure (§3.3: movement decisions from observed
+//! state)
+//!
+//! A slow receiver throttles its senders instead of letting frames pile
+//! up: each sender starts with `exchange_initial_credits` data-frame
+//! credits per destination ([`Outbox::enable_credits`]); popping a data
+//! frame for a destination consumes one, and a destination at zero
+//! credit is *skipped* by the sender lanes — later frames for that
+//! destination (including Finish) hold their FIFO position behind the
+//! blocked frame, while other destinations on the same lane proceed.
+//! The receiving side returns credits as the consumer actually drains
+//! delivered batches: [`ChannelRx`] keeps per-source delivered/granted
+//! books, the receiver thread turns newly drained batches into
+//! [`FrameKind::Credit`] frames (`net.credits_granted_total`), and the
+//! sender applies them via the router's credit sink
+//! ([`Outbox::grant_credits`]). Credit, Finish, Estimate and Control
+//! frames are exempt from the accounting, so control flow never
+//! deadlocks behind data flow. Stalls are visible on
+//! `exchange.credit_stall_total`; a close with credit-blocked frames
+//! still queued discards them *counted and logged*
+//! (`net.close_unsent_total`) so the drain completes instead of
+//! hanging. The sender lanes also publish per-destination depth and
+//! send-latency signals ([`Outbox::queued_for`],
+//! [`Outbox::send_latency_ns`]) — the exchange's adaptive flush
+//! controller samples both.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
 use std::time::Duration;
+
+use crate::metrics::Metrics;
 
 use crate::memory::{BatchHolder, PinnedPool, SlabSlice, SlabWriter, StagedBytes};
 use crate::network::frame::Payload;
@@ -78,6 +106,54 @@ pub struct Outbox {
     /// at pop time, so an emptiness check can never race past a message
     /// that left the queue but hasn't hit the wire.
     in_flight: AtomicUsize,
+    /// Per-destination credit windows (None until
+    /// [`Outbox::enable_credits`] — gating off, the default for tests
+    /// and benches with no credit-granting receiver). Locked *after*
+    /// `q` when both are held.
+    credits: Mutex<CreditState>,
+    /// Per-destination EWMA of `endpoint.send` wall time, fed by the
+    /// sender lanes — one of the two congestion signals the exchange's
+    /// adaptive flush controller samples.
+    send_latency: Mutex<HashMap<usize, u64>>,
+    /// Credit-blocked data frames discarded by a close (the drain must
+    /// complete, but dropped data must be loud).
+    close_unsent: AtomicU64,
+    metrics: OnceLock<Arc<Metrics>>,
+}
+
+/// Remaining data-frame credits per destination. `window == None`
+/// disables gating entirely.
+#[derive(Default)]
+struct CreditState {
+    window: Option<u64>,
+    by_dst: HashMap<usize, u64>,
+}
+
+impl CreditState {
+    fn remaining(&mut self, dst: usize) -> Option<u64> {
+        let w = self.window?;
+        Some(*self.by_dst.entry(dst).or_insert(w))
+    }
+
+    fn exhausted(&mut self, dst: usize) -> bool {
+        self.remaining(dst) == Some(0)
+    }
+
+    fn consume(&mut self, dst: usize) {
+        if let Some(w) = self.window {
+            let c = self.by_dst.entry(dst).or_insert(w);
+            *c = c.saturating_sub(1);
+        }
+    }
+
+    fn grant(&mut self, dst: usize, amount: u64) {
+        if let Some(w) = self.window {
+            let c = self.by_dst.entry(dst).or_insert(w);
+            // the receiver never grants more than it drained, so this
+            // cap only defends against a buggy or malicious peer
+            *c = (*c + amount).min(w);
+        }
+    }
 }
 
 impl Outbox {
@@ -90,7 +166,68 @@ impl Outbox {
             closed: AtomicBool::new(false),
             pushed: AtomicU64::new(0),
             in_flight: AtomicUsize::new(0),
+            credits: Mutex::new(CreditState::default()),
+            send_latency: Mutex::new(HashMap::new()),
+            close_unsent: AtomicU64::new(0),
+            metrics: OnceLock::new(),
         }
+    }
+
+    /// Turn on credit-based backpressure with `window` startup credits
+    /// per destination (`exchange_initial_credits`). Off by default so
+    /// an outbox with no credit-granting receiver wired (unit tests,
+    /// benches) never stalls.
+    pub fn enable_credits(&self, window: usize) {
+        self.credits.lock().unwrap().window = Some(window.max(1) as u64);
+    }
+
+    /// Install the worker's metrics registry
+    /// (`exchange.credit_stall_total`, `net.close_unsent_total`).
+    pub fn install_metrics(&self, metrics: Arc<Metrics>) {
+        let _ = self.metrics.set(metrics);
+    }
+
+    /// Return `amount` data-frame credits for `dst` (the receiver
+    /// drained that many delivered batches) and wake any lane stalled
+    /// on them.
+    pub fn grant_credits(&self, dst: usize, amount: u64) {
+        self.credits.lock().unwrap().grant(dst, amount);
+        // Serialize with a lane mid-scan: holding `q` while notifying
+        // means the lane is either before its credit read (sees the
+        // grant) or already parked (gets the wakeup) — never between.
+        let _q = self.q.lock().unwrap();
+        self.not_empty.notify_all();
+    }
+
+    /// Remaining credits for `dst` (`None` = gating disabled).
+    pub fn credits_remaining(&self, dst: usize) -> Option<u64> {
+        self.credits.lock().unwrap().remaining(dst)
+    }
+
+    /// Queued (not yet popped) messages addressed to `dst` — the depth
+    /// signal for the adaptive flush controller.
+    pub fn queued_for(&self, dst: usize) -> usize {
+        self.q.lock().unwrap().iter().filter(|m| m.dst() == dst).count()
+    }
+
+    /// Sender lanes record how long `endpoint.send` took per
+    /// destination; kept as an EWMA (α = 1/4).
+    fn note_send_latency(&self, dst: usize, ns: u64) {
+        let mut lat = self.send_latency.lock().unwrap();
+        let e = lat.entry(dst).or_insert(ns);
+        *e = (*e * 3 + ns) / 4;
+    }
+
+    /// Smoothed wire latency toward `dst` in nanoseconds (None before
+    /// the first send) — the second controller signal.
+    pub fn send_latency_ns(&self, dst: usize) -> Option<u64> {
+        self.send_latency.lock().unwrap().get(&dst).copied()
+    }
+
+    /// Credit-blocked data frames discarded because the outbox closed
+    /// while they were unsendable.
+    pub fn close_unsent(&self) -> u64 {
+        self.close_unsent.load(Ordering::Relaxed)
     }
 
     /// Queue a batch for a peer (blocks when the buffer is full).
@@ -164,11 +301,70 @@ impl Outbox {
     /// Pop the next message for a destination handled by `lane`
     /// (`dst % lanes == lane` keeps per-destination FIFO order with
     /// multiple sender threads).
-    fn pop_for_lane(&self, lane: usize, lanes: usize, timeout: Duration) -> Option<Outbound> {
+    ///
+    /// Credit gating happens here: a data frame whose destination is
+    /// out of credits is skipped, and — to preserve per-destination
+    /// FIFO order — *every* later frame for that destination (Finish
+    /// included) is held behind it; frames for other destinations on
+    /// the lane proceed. After [`Outbox::close`], blocked data frames
+    /// are discarded (counted on `net.close_unsent_total` and
+    /// warn-logged) instead of wedging the drain forever.
+    ///
+    /// Public because it *is* the lane protocol: anything standing in
+    /// for a sender lane (the executor's threads, tests, benches)
+    /// drains the outbox through this one gate.
+    pub fn pop_for_lane(&self, lane: usize, lanes: usize, timeout: Duration) -> Option<Outbound> {
         let deadline = std::time::Instant::now() + timeout;
         let mut q = self.q.lock().unwrap();
         loop {
-            if let Some(pos) = q.iter().position(|m| m.dst() % lanes == lane) {
+            let closed = self.closed.load(Ordering::Relaxed);
+            let mut blocked_dsts: HashSet<usize> = HashSet::new();
+            let mut pos = None;
+            {
+                let mut credits = self.credits.lock().unwrap();
+                let mut i = 0;
+                while i < q.len() {
+                    let m = &q[i];
+                    let dst = m.dst();
+                    if dst % lanes != lane || blocked_dsts.contains(&dst) {
+                        i += 1;
+                        continue;
+                    }
+                    let gated =
+                        matches!(m, Outbound::Data { .. }) && credits.exhausted(dst);
+                    if gated && closed {
+                        // close releases the lane: the frame is
+                        // unsendable and the drain must finish — drop
+                        // it, loudly
+                        q.remove(i);
+                        let n = self.close_unsent.fetch_add(1, Ordering::Relaxed) + 1;
+                        if let Some(m) = self.metrics.get() {
+                            m.counter("net.close_unsent_total").inc();
+                        }
+                        log::warn!(
+                            "outbox closed with credit-blocked data frame for \
+                             worker {dst} still queued; discarded ({n} total)"
+                        );
+                        continue; // same index now holds the next frame
+                    }
+                    if gated {
+                        blocked_dsts.insert(dst);
+                        i += 1;
+                        continue;
+                    }
+                    if matches!(m, Outbound::Data { .. }) {
+                        credits.consume(dst);
+                    }
+                    pos = Some(i);
+                    break;
+                }
+            }
+            if !blocked_dsts.is_empty() {
+                if let Some(m) = self.metrics.get() {
+                    m.counter("exchange.credit_stall_total").inc();
+                }
+            }
+            if let Some(pos) = pos {
                 let m = q.remove(pos).unwrap();
                 // count before releasing the lock: is_idle() holds the
                 // same lock, so it sees either the queued message or
@@ -179,7 +375,13 @@ impl Outbox {
                 return Some(m);
             }
             let now = std::time::Instant::now();
-            if now >= deadline || self.closed.load(Ordering::Relaxed) {
+            if now >= deadline || closed {
+                // blocked frames may have been dropped above — anyone
+                // waiting on capacity or idleness should re-check
+                if closed {
+                    drop(q);
+                    self.not_full.notify_all();
+                }
                 return None;
             }
             let (guard, _) = self.not_empty.wait_timeout(q, deadline - now).unwrap();
@@ -265,6 +467,19 @@ pub struct ChannelRx {
     /// Size estimates received so far (sender worker -> bytes).
     estimates: Mutex<HashMap<usize, u64>>,
     expected_senders: usize,
+    /// Per-source delivered/granted books for credit-based
+    /// backpressure: credits are returned only as the consumer actually
+    /// drains the holder, never ahead of it.
+    credit: Mutex<CreditBook>,
+}
+
+/// Receiver-side flow-control ledger: how many wire data frames each
+/// source delivered into the holder, and how many credits were already
+/// returned to it.
+#[derive(Default)]
+struct CreditBook {
+    delivered: HashMap<usize, u64>,
+    granted: HashMap<usize, u64>,
 }
 
 impl ChannelRx {
@@ -274,7 +489,55 @@ impl ChannelRx {
             finishes: AtomicUsize::new(0),
             estimates: Mutex::new(HashMap::new()),
             expected_senders,
+            credit: Mutex::new(CreditBook::default()),
         }
+    }
+
+    /// The router delivered one wire data frame from `src` into the
+    /// holder.
+    fn note_delivered(&self, src: usize) {
+        *self.credit.lock().unwrap().delivered.entry(src).or_insert(0) += 1;
+    }
+
+    /// Credits newly earned since the last call: delivered batches that
+    /// have since left the holder (the consumer popped them) and were
+    /// not yet acknowledged. Returns `(src, amount)` pairs.
+    ///
+    /// The drain count is inferred from the holder's own stats —
+    /// `delivered − still_in_holder` — so batches pushed into the same
+    /// holder by a *local* (non-wire) path can only delay grants, never
+    /// inflate them: per-source grants are additionally capped by that
+    /// source's unacknowledged deliveries, so a sender's credit never
+    /// exceeds its startup window.
+    fn take_grants(&self) -> Vec<(usize, u64)> {
+        let stats = self.holder.stats();
+        let in_holder =
+            (stats.device_batches + stats.host_batches + stats.disk_batches) as u64;
+        let mut book = self.credit.lock().unwrap();
+        let delivered_total: u64 = book.delivered.values().sum();
+        let granted_total: u64 = book.granted.values().sum();
+        let drained = delivered_total.saturating_sub(in_holder);
+        let mut budget = drained.saturating_sub(granted_total);
+        if budget == 0 {
+            return Vec::new();
+        }
+        let mut srcs: Vec<usize> = book.delivered.keys().copied().collect();
+        srcs.sort_unstable(); // deterministic distribution order
+        let mut out = Vec::new();
+        for src in srcs {
+            if budget == 0 {
+                break;
+            }
+            let delivered = book.delivered[&src];
+            let granted = book.granted.entry(src).or_insert(0);
+            let give = (delivered - *granted).min(budget);
+            if give > 0 {
+                *granted += give;
+                budget -= give;
+                out.push((src, give));
+            }
+        }
+        out
     }
 
     /// All senders finished (the holder has been marked finished too).
@@ -316,6 +579,10 @@ pub struct Router {
     /// §3.4 bounce pool: compressed payloads decompress straight into
     /// it (installed at worker bring-up; `None` decompresses to heap).
     bounce: RwLock<Option<PinnedPool>>,
+    /// Where inbound [`FrameKind::Credit`] grants land: the local
+    /// outbox, whose lanes are the ones a peer's credits unblock.
+    credit_sink: RwLock<Option<Arc<Outbox>>>,
+    metrics: OnceLock<Arc<Metrics>>,
 }
 
 /// Max buffered early frames per channel (beyond this something is
@@ -344,6 +611,47 @@ impl Router {
     /// decompress straight into it (§3.4: one pool, end to end).
     pub fn install_bounce_pool(&self, pool: PinnedPool) {
         *self.bounce.write().unwrap() = Some(pool);
+    }
+
+    /// Install the outbox whose per-destination credit windows inbound
+    /// [`FrameKind::Credit`] frames replenish (done by
+    /// [`NetworkExecutor::start`]). Without a sink, credit frames are
+    /// acknowledged and dropped — gating stays off, nothing deadlocks.
+    pub fn install_credit_sink(&self, outbox: Arc<Outbox>) {
+        *self.credit_sink.write().unwrap() = Some(outbox);
+    }
+
+    /// Install the worker's metrics registry
+    /// (`net.credits_granted_total`).
+    pub fn install_metrics(&self, metrics: Arc<Metrics>) {
+        let _ = self.metrics.set(metrics);
+    }
+
+    /// Credits newly earned across all registered channels, as
+    /// `(src_worker, channel, amount)` — the receiver thread turns each
+    /// into a [`Frame::credit`] back to its sender. Counted on
+    /// `net.credits_granted_total`.
+    pub fn take_grants(&self) -> Vec<(usize, u32, u64)> {
+        let channels: Vec<(u32, Arc<ChannelRx>)> = self
+            .channels
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(c, rx)| (*c, rx.clone()))
+            .collect();
+        let mut out = Vec::new();
+        for (channel, rx) in channels {
+            for (src, amount) in rx.take_grants() {
+                out.push((src, channel, amount));
+            }
+        }
+        if !out.is_empty() {
+            if let Some(m) = self.metrics.get() {
+                m.counter("net.credits_granted_total")
+                    .add(out.iter().map(|(_, _, a)| *a).sum());
+            }
+        }
+        out
     }
 
     pub fn unregister(&self, channel: u32) {
@@ -379,6 +687,16 @@ impl Router {
                 self.control_ready.notify_one();
                 Ok(())
             }
+            // needs no registered channel: a grant for a drained (even
+            // already-unregistered) exchange must still reach the
+            // outbox, or its lanes stay blocked
+            FrameKind::Credit => {
+                let amount = frame.credit_amount()?;
+                if let Some(sink) = self.credit_sink.read().unwrap().as_ref() {
+                    sink.grant_credits(frame.src, amount);
+                }
+                Ok(())
+            }
             kind => {
                 let rx = match self.channel(frame.channel) {
                     Some(rx) => rx,
@@ -400,6 +718,8 @@ impl Router {
                         let pool = self.bounce.read().unwrap().clone();
                         let decoded = unframe_payload(frame.payload, pool.as_ref())?;
                         rx.holder.push_host_bytes(decoded)?;
+                        // only a delivered frame earns a future credit
+                        rx.note_delivered(frame.src);
                         Ok(())
                     }
                     FrameKind::Finish => {
@@ -414,7 +734,7 @@ impl Router {
                         rx.estimates.lock().unwrap().insert(frame.src, bytes);
                         Ok(())
                     }
-                    FrameKind::Control => unreachable!(),
+                    FrameKind::Control | FrameKind::Credit => unreachable!(),
                 }
             }
         }
@@ -657,6 +977,8 @@ impl NetworkExecutor {
         });
         let lanes = threads.max(1);
         let me = endpoint.worker_id();
+        // inbound credit grants unblock this worker's own sender lanes
+        router.install_credit_sink(outbox.clone());
         let mut handles = Vec::new();
         for lane in 0..lanes {
             let outbox = outbox.clone();
@@ -702,9 +1024,15 @@ impl NetworkExecutor {
                                     Frame::size_estimate(me, dst, channel, bytes)
                                 }
                             };
+                            let dst = frame.dst;
+                            let t0 = std::time::Instant::now();
                             if let Err(e) = endpoint.send(frame) {
                                 log::warn!("netsend: {e}");
                             }
+                            // per-destination wire latency: one of the
+                            // two signals the exchange's adaptive flush
+                            // controller samples
+                            outbox.note_send_latency(dst, t0.elapsed().as_nanos() as u64);
                             // after the send (or its failure) completes:
                             // flush() may now consider this message done
                             outbox.done_sending();
@@ -730,6 +1058,17 @@ impl NetworkExecutor {
                                 }
                                 Ok(None) => {}
                                 Err(e) => log::warn!("netrecv: {e}"),
+                            }
+                            // return credits for batches the consumer
+                            // drained since the last pass — sent
+                            // directly (not via the outbox) so grants
+                            // are never themselves credit-gated
+                            for (dst, channel, amount) in router.take_grants() {
+                                if let Err(e) =
+                                    endpoint.send(Frame::credit(me, dst, channel, amount))
+                                {
+                                    log::warn!("netrecv credit grant: {e}");
+                                }
                             }
                         }
                     })
@@ -1165,6 +1504,121 @@ mod tests {
         drop(m);
         outbox.done_sending();
         assert!(outbox.is_idle(), "send completed");
+    }
+
+    #[test]
+    fn credit_gating_blocks_data_and_holds_fifo() {
+        let outbox = Outbox::new(16);
+        let metrics = Arc::new(Metrics::default());
+        outbox.install_metrics(metrics.clone());
+        outbox.enable_credits(2);
+        for _ in 0..3 {
+            outbox.send_encoded(0, 7, vec![1u8, 2, 3]).unwrap();
+        }
+        outbox.send_finish(0, 7).unwrap();
+        outbox.send_encoded(1, 7, vec![9u8]).unwrap();
+
+        let pop = |ms: u64| outbox.pop_for_lane(0, 1, Duration::from_millis(ms));
+        assert!(matches!(pop(10), Some(Outbound::Data { dst: 0, .. })));
+        assert!(matches!(pop(10), Some(Outbound::Data { dst: 0, .. })));
+        assert_eq!(outbox.credits_remaining(0), Some(0));
+        // dst 0 exhausted: its third data frame AND the Finish behind
+        // it hold their FIFO position; dst 1 (own window) proceeds
+        assert!(matches!(pop(10), Some(Outbound::Data { dst: 1, .. })));
+        assert!(pop(10).is_none(), "dst 0 must be fully blocked");
+        assert!(metrics.counter_value("exchange.credit_stall_total") > 0);
+        outbox.grant_credits(0, 1);
+        assert!(matches!(pop(10), Some(Outbound::Data { dst: 0, .. })));
+        assert!(matches!(pop(10), Some(Outbound::Finish { dst: 0, .. })));
+        assert_eq!(outbox.close_unsent(), 0);
+    }
+
+    #[test]
+    fn credit_grant_wakes_a_stalled_lane() {
+        let outbox = Arc::new(Outbox::new(4));
+        outbox.enable_credits(1);
+        outbox.send_encoded(3, 0, vec![0u8]).unwrap();
+        outbox.send_encoded(3, 0, vec![1u8]).unwrap();
+        assert!(outbox.pop_for_lane(0, 1, Duration::from_millis(10)).is_some());
+        let o2 = outbox.clone();
+        let h = std::thread::spawn(move || o2.pop_for_lane(0, 1, Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(!h.is_finished(), "lane must stall at zero credit");
+        outbox.grant_credits(3, 1);
+        let got = h.join().unwrap();
+        assert!(matches!(got, Some(Outbound::Data { dst: 3, .. })));
+    }
+
+    #[test]
+    fn close_discards_credit_blocked_frames_and_releases_the_lane() {
+        // The satellite fix: a close while a lane is credit-blocked
+        // must let the drain complete — blocked data frames are
+        // discarded loudly, later control frames still go out.
+        let outbox = Outbox::new(16);
+        let metrics = Arc::new(Metrics::default());
+        outbox.install_metrics(metrics.clone());
+        outbox.enable_credits(1);
+        outbox.send_encoded(0, 1, vec![1u8]).unwrap();
+        outbox.send_encoded(0, 1, vec![2u8]).unwrap();
+        outbox.send_finish(0, 1).unwrap();
+        let pop = |ms: u64| outbox.pop_for_lane(0, 1, Duration::from_millis(ms));
+        assert!(matches!(pop(10), Some(Outbound::Data { .. })));
+        assert!(pop(10).is_none(), "second frame blocked at zero credit");
+        assert_eq!(outbox.len(), 2, "blocked frames stay queued before close");
+        outbox.close();
+        assert!(
+            matches!(pop(10), Some(Outbound::Finish { .. })),
+            "close must discard the blocked data frame and surface the Finish"
+        );
+        assert_eq!(outbox.close_unsent(), 1);
+        assert_eq!(metrics.counter_value("net.close_unsent_total"), 1);
+        assert!(pop(10).is_none());
+        assert!(outbox.is_empty(), "drain completed");
+    }
+
+    #[test]
+    fn credit_round_trip_throttles_then_completes() {
+        // End to end over the in-proc fabric: a window of 1 and a
+        // consumer that does not drain bounds delivery at 1 batch; each
+        // pop then earns a grant that releases the next frame, and the
+        // Finish arrives last.
+        let (exes, routers) = two_workers(None);
+        exes[0].outbox().enable_credits(1);
+        let holder = BatchHolder::new("rx", MemEnv::test(1 << 20));
+        let rx = Arc::new(ChannelRx::new(holder.clone(), 1));
+        routers[1].register(4, rx.clone());
+
+        let b = batch(50);
+        for _ in 0..3 {
+            exes[0].outbox().send_batch(1, 4, &b).unwrap();
+        }
+        exes[0].outbox().send_finish(1, 4).unwrap();
+
+        std::thread::sleep(Duration::from_millis(300));
+        assert_eq!(holder.stats().host_batches, 1, "window must bound delivery");
+        assert!(!holder.is_finished(), "Finish held behind blocked data");
+        assert_eq!(exes[0].outbox().credits_remaining(1), Some(0));
+
+        let mut got = 0;
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while got < 3 && std::time::Instant::now() < deadline {
+            match holder.pop_device().unwrap() {
+                Some(p) => {
+                    assert_eq!(p.batch, b);
+                    got += 1;
+                }
+                None => std::thread::sleep(Duration::from_millis(5)),
+            }
+        }
+        assert_eq!(got, 3, "all batches delivered once credits flow");
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while !holder.is_finished() && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(holder.is_finished());
+        for e in &exes {
+            e.stop();
+        }
     }
 
     #[test]

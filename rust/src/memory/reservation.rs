@@ -66,7 +66,11 @@ impl MemoryGovernor {
         let _ = self.inner.pressure.set(event);
     }
 
-    fn raise_pressure(&self, bytes: usize) {
+    /// Raise device pressure for `bytes` without blocking — used by
+    /// holders of accounting that can shed load themselves (the exchange
+    /// coalescer flushes buffered builders on the next pressure epoch)
+    /// when a `grow` is refused but parking is not an option.
+    pub fn raise_pressure(&self, bytes: usize) {
         if let Some(ev) = self.inner.pressure.get() {
             ev.raise_device(bytes);
         }
@@ -202,6 +206,19 @@ impl Reservation {
                 capacity: self.gov.inner.arena.capacity(),
                 in_use: self.gov.inner.arena.in_use(),
             }),
+        }
+    }
+
+    /// Hand back part of the reservation (clamped to what is held),
+    /// waking anyone parked in [`MemoryGovernor::reserve`]. The inverse
+    /// of [`Reservation::grow`] — accounting that tracks a fluctuating
+    /// buffer (the exchange coalescer's builder bytes) grows on append
+    /// and shrinks on flush instead of re-reserving from scratch.
+    pub fn shrink(&mut self, by: usize) {
+        let by = by.min(self.bytes);
+        if by > 0 {
+            self.bytes -= by;
+            self.gov.release(by);
         }
     }
 }
@@ -367,6 +384,24 @@ mod tests {
         assert_eq!(r.bytes(), 700);
         assert_eq!(g.reserved(), 700);
         assert!(r.grow(400).is_err());
+        drop(r);
+        assert_eq!(g.reserved(), 0);
+    }
+
+    #[test]
+    fn shrink_returns_headroom_and_clamps() {
+        let g = gov(1000);
+        let mut r = g.try_reserve(600).unwrap();
+        r.shrink(200);
+        assert_eq!(r.bytes(), 400);
+        assert_eq!(g.reserved(), 400);
+        // freed headroom is immediately reservable again
+        let other = g.try_reserve(600).unwrap();
+        drop(other);
+        // shrink past the held amount clamps to zero, never underflows
+        r.shrink(10_000);
+        assert_eq!(r.bytes(), 0);
+        assert_eq!(g.reserved(), 0);
         drop(r);
         assert_eq!(g.reserved(), 0);
     }

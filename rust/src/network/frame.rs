@@ -32,6 +32,13 @@ pub enum FrameKind {
     Finish,
     /// Cluster control (plan distribution, query lifecycle).
     Control,
+    /// Flow-control grant: the receiver has drained delivered batches
+    /// and returns that many send credits to `dst` (the original
+    /// sender). Senders stop popping data frames for a destination at
+    /// zero credit, so a slow receiver throttles its senders instead of
+    /// growing their outboxes. Credit frames themselves are exempt from
+    /// credit accounting, like Finish and Control.
+    Credit,
 }
 
 impl FrameKind {
@@ -41,6 +48,7 @@ impl FrameKind {
             FrameKind::SizeEstimate => 1,
             FrameKind::Finish => 2,
             FrameKind::Control => 3,
+            FrameKind::Credit => 4,
         }
     }
 
@@ -50,6 +58,7 @@ impl FrameKind {
             1 => FrameKind::SizeEstimate,
             2 => FrameKind::Finish,
             3 => FrameKind::Control,
+            4 => FrameKind::Credit,
             _ => return Err(Error::Network(format!("bad frame kind {t}"))),
         })
     }
@@ -222,10 +231,30 @@ impl Frame {
         }
     }
 
+    /// A credit grant: `amount` data-frame credits returned to `dst`
+    /// for traffic it sends back toward `src` (the granting receiver).
+    pub fn credit(src: usize, dst: usize, channel: u32, amount: u64) -> Frame {
+        Frame {
+            kind: FrameKind::Credit,
+            src,
+            dst,
+            channel,
+            payload: Payload::Heap(amount.to_le_bytes().to_vec()),
+        }
+    }
+
     /// Estimate payload for a SizeEstimate frame.
     pub fn estimate_bytes(&self) -> Result<u64> {
         if self.kind != FrameKind::SizeEstimate || self.payload.len() != 8 {
             return Err(Error::Network("not a size-estimate frame".into()));
+        }
+        Ok(u64::from_le_bytes(self.payload.contiguous()[..8].try_into().unwrap()))
+    }
+
+    /// Credit amount for a Credit frame.
+    pub fn credit_amount(&self) -> Result<u64> {
+        if self.kind != FrameKind::Credit || self.payload.len() != 8 {
+            return Err(Error::Network("not a credit frame".into()));
         }
         Ok(u64::from_le_bytes(self.payload.contiguous()[..8].try_into().unwrap()))
     }
@@ -318,6 +347,7 @@ mod tests {
             Frame::finish(0, 3, 7),
             Frame::size_estimate(2, 0, 9, 123_456_789),
             Frame::control(0, 1, b"plan".to_vec()),
+            Frame::credit(3, 1, 5, 17),
         ];
         for f in frames {
             let buf = f.encode_to_vec();
@@ -371,6 +401,15 @@ mod tests {
         let f = Frame::size_estimate(0, 1, 2, 999);
         assert_eq!(f.estimate_bytes().unwrap(), 999);
         assert!(Frame::finish(0, 1, 2).estimate_bytes().is_err());
+    }
+
+    #[test]
+    fn credit_accessor() {
+        let f = Frame::credit(1, 0, 7, 12);
+        assert_eq!(f.credit_amount().unwrap(), 12);
+        // kind check: an estimate's 8-byte payload must not parse as credit
+        assert!(Frame::size_estimate(1, 0, 7, 12).credit_amount().is_err());
+        assert!(Frame::finish(0, 1, 2).credit_amount().is_err());
     }
 
     #[test]

@@ -188,6 +188,21 @@ mod tests {
     }
 
     #[test]
+    fn credit_frames_traverse_the_hub() {
+        // Credit grants are ordinary frames to the fabric: they are
+        // charged to the modeled link and delivered in order with data.
+        let hub = InprocHub::new(2, &SimContext::test(), TransportKind::Tcp);
+        let eps = hub.endpoints();
+        eps[1].send(Frame::data(1, 0, 0, vec![42])).unwrap();
+        eps[1].send(Frame::credit(1, 0, 0, 5)).unwrap();
+        let d = eps[0].recv_timeout(Duration::from_millis(100)).unwrap().unwrap();
+        assert_eq!(d.payload, vec![42]);
+        let c = eps[0].recv_timeout(Duration::from_millis(100)).unwrap().unwrap();
+        assert_eq!(c.kind, crate::network::FrameKind::Credit);
+        assert_eq!(c.credit_amount().unwrap(), 5);
+    }
+
+    #[test]
     fn ordering_preserved_per_link() {
         let hub = InprocHub::new(2, &SimContext::test(), TransportKind::Tcp);
         let eps = hub.endpoints();

@@ -89,6 +89,14 @@ mod tests {
         assert_eq!(got[0].payload, b"zero to one");
         assert_eq!(got[1].payload, b"two to one");
 
+        // control-plane frames cross the same wire: a credit grant
+        // arrives with its kind and amount intact
+        endpoints[1].send(Frame::credit(1, 0, 3, 17)).unwrap();
+        let c = endpoints[0].recv_timeout(t).unwrap().unwrap();
+        assert_eq!(c.kind, FrameKind::Credit);
+        assert_eq!((c.src, c.dst, c.channel), (1, 0, 3));
+        assert_eq!(c.credit_amount().unwrap(), 17);
+
         // empty inbox times out cleanly
         assert!(endpoints[0]
             .recv_timeout(Duration::from_millis(20))

@@ -500,6 +500,23 @@ mod tests {
     }
 
     #[test]
+    fn credit_frames_cross_the_socket_intact() {
+        // Credit grants ride the same length-prefixed wire as data;
+        // the 8-byte amount must survive serialization and parse back
+        // on the far side (tag 4, heap payload — never pooled).
+        let c = TcpCluster::listen(2, &SimContext::test(), TransportKind::Tcp).unwrap();
+        let eps = c.into_endpoints();
+        let rx_pool = crate::memory::PinnedPool::new(64, 4).unwrap();
+        eps[0].install_recv_pool(rx_pool.clone());
+        eps[1].send(Frame::credit(1, 0, 2, 9)).unwrap();
+        let f = eps[0].recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+        assert_eq!(f.kind, crate::network::FrameKind::Credit);
+        assert_eq!((f.src, f.channel), (1, 2));
+        assert_eq!(f.credit_amount().unwrap(), 9);
+        assert!(!f.payload.is_pinned(), "control payloads stay on the heap");
+    }
+
+    #[test]
     fn self_send_via_loopback() {
         let c = TcpCluster::listen(2, &SimContext::test(), TransportKind::Tcp).unwrap();
         let eps = c.into_endpoints();

@@ -18,10 +18,16 @@
 //!   — the destination-coalesced scatter path delivers, per
 //!   destination, rows byte-identical to the seed's per-batch
 //!   `take`-and-send routing.
+//! * Credit-based backpressure (PR 6): random Data/Finish/Grant/Pop
+//!   interleavings against a credit-gated `Outbox` — no data frame is
+//!   ever popped beyond granted credit, per-destination FIFO holds
+//!   (a Finish never overtakes blocked data), and after `close` every
+//!   Finish still drains while discarded blocked data is surfaced on
+//!   `close_unsent`.
 
 use theseus::exec::operators::{kernels, ShuffleCoalescer};
 use theseus::exec::WorkerCtx;
-use theseus::executors::network::stage_encoded;
+use theseus::executors::network::{stage_encoded, Outbound, Outbox};
 use theseus::memory::batch_holder::MemEnv;
 use theseus::memory::{BatchHolder, PinnedPool, PinnedSlab, SlabSlice, SlabWriter, StagedBytes};
 use theseus::metrics::Metrics;
@@ -638,7 +644,7 @@ fn shuffle_case_holds(case: &ShuffleCase) -> bool {
     } else {
         Vec::new()
     };
-    let mut co = ShuffleCoalescer::new(workers, flush, None, metrics.clone());
+    let co = ShuffleCoalescer::new(workers, flush, None, metrics.clone());
     let mut received: Vec<Vec<RecordBatch>> = vec![Vec::new(); workers];
     let deliver = |dst: usize, batch: &RecordBatch, out: &mut Vec<Vec<RecordBatch>>| {
         // the wire hop: pooled staging (or its dry fallback) + decode
@@ -705,6 +711,196 @@ fn shuffle_case_holds(case: &ShuffleCase) -> bool {
 #[test]
 fn coalesced_shuffle_matches_seed_routing_byte_for_byte() {
     check(0x5F1E, 250, gen_shuffle_case, shuffle_case_holds);
+}
+
+// ------------------------------------------------------- credit gating
+
+/// One step against a credit-gated outbox.
+#[derive(Clone, Debug)]
+enum CreditOp {
+    /// Queue a data frame for `dst` (consumes one credit when popped).
+    Data(usize),
+    /// Queue end-of-stream for `dst` (credit-exempt, but FIFO-held
+    /// behind blocked data).
+    Finish(usize),
+    /// The receiver returns `amount` credits for `dst`.
+    Grant(usize, u64),
+    /// A sender lane asks for the next sendable frame.
+    Pop,
+}
+
+impl Shrink for CreditOp {
+    fn shrink(&self) -> Vec<CreditOp> {
+        match self {
+            CreditOp::Grant(d, a) if *a > 1 => vec![CreditOp::Grant(*d, a / 2)],
+            _ => Vec::new(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+struct CreditCase {
+    window: u64,
+    ops: Vec<CreditOp>,
+}
+
+impl Shrink for CreditCase {
+    fn shrink(&self) -> Vec<CreditCase> {
+        let mut out: Vec<CreditCase> = self
+            .ops
+            .shrink()
+            .into_iter()
+            .map(|ops| CreditCase { window: self.window, ops })
+            .collect();
+        if self.window > 1 {
+            out.push(CreditCase { window: self.window - 1, ops: self.ops.clone() });
+        }
+        out
+    }
+}
+
+fn gen_credit_case(rng: &mut Rng) -> CreditCase {
+    const DSTS: u64 = 2;
+    let n = rng.gen_range(18) as usize + 4;
+    let ops = (0..n)
+        .map(|_| match rng.gen_range(8) {
+            0..=2 => CreditOp::Data(rng.gen_range(DSTS) as usize),
+            3 => CreditOp::Finish(rng.gen_range(DSTS) as usize),
+            4 | 5 => CreditOp::Grant(rng.gen_range(DSTS) as usize, rng.gen_range(2) + 1),
+            _ => CreditOp::Pop,
+        })
+        .collect();
+    CreditCase { window: rng.gen_range(3) + 1, ops }
+}
+
+fn credit_case_holds(case: &CreditCase) -> bool {
+    const DSTS: usize = 2;
+    let outbox = Outbox::new(64);
+    outbox.enable_credits(case.window as usize);
+    let metrics = std::sync::Arc::new(Metrics::default());
+    outbox.install_metrics(metrics.clone());
+    let pop = |ob: &Outbox| ob.pop_for_lane(0, 1, std::time::Duration::ZERO);
+
+    // shadow of the sender's credit state: starts at the window,
+    // grants cap at it, each delivered data frame consumes one
+    let w = case.window.max(1);
+    let mut rem = [w; DSTS];
+    // per-destination FIFO model: Some(seq) = data, None = finish
+    let mut fifo: Vec<std::collections::VecDeque<Option<u8>>> =
+        vec![std::collections::VecDeque::new(); DSTS];
+    let mut seq = [0u8; DSTS];
+    let (mut pushed_data, mut popped_data) = ([0u64; DSTS], [0u64; DSTS]);
+    let (mut pushed_fin, mut popped_fin) = ([0u64; DSTS], [0u64; DSTS]);
+
+    for op in &case.ops {
+        match op {
+            CreditOp::Data(dst) => {
+                outbox.send_encoded(*dst, 7, vec![*dst as u8, seq[*dst]]).unwrap();
+                fifo[*dst].push_back(Some(seq[*dst]));
+                seq[*dst] = seq[*dst].wrapping_add(1);
+                pushed_data[*dst] += 1;
+            }
+            CreditOp::Finish(dst) => {
+                outbox.send_finish(*dst, 7).unwrap();
+                fifo[*dst].push_back(None);
+                pushed_fin[*dst] += 1;
+            }
+            CreditOp::Grant(dst, amount) => {
+                outbox.grant_credits(*dst, *amount);
+                rem[*dst] = (rem[*dst] + amount).min(w);
+            }
+            CreditOp::Pop => match pop(&outbox) {
+                None => {
+                    // a None pop is only legal when every queued frame
+                    // is FIFO-held behind credit-blocked data
+                    for d in 0..DSTS {
+                        if !fifo[d].is_empty() && !(fifo[d][0].is_some() && rem[d] == 0) {
+                            return false;
+                        }
+                    }
+                }
+                Some(Outbound::Data { dst, encoded, .. }) => {
+                    if rem[dst] == 0 {
+                        return false; // delivered beyond granted credit
+                    }
+                    rem[dst] -= 1;
+                    popped_data[dst] += 1;
+                    match fifo[dst].pop_front() {
+                        Some(Some(s)) if *encoded.contiguous() == [dst as u8, s] => {}
+                        _ => return false, // out of FIFO order
+                    }
+                }
+                Some(Outbound::Finish { dst, .. }) => {
+                    popped_fin[dst] += 1;
+                    if fifo[dst].pop_front() != Some(None) {
+                        return false; // Finish overtook queued data
+                    }
+                }
+                Some(Outbound::Estimate { .. }) => return false,
+            },
+        }
+    }
+
+    // Close must release the lane: sendable frames (and every Finish)
+    // still drain; credit-blocked data is discarded and surfaced.
+    outbox.close();
+    let mut discarded = 0u64;
+    loop {
+        let Some(m) = pop(&outbox) else { break };
+        match m {
+            Outbound::Data { dst, encoded, .. } => {
+                if rem[dst] == 0 {
+                    return false;
+                }
+                rem[dst] -= 1;
+                popped_data[dst] += 1;
+                match fifo[dst].pop_front() {
+                    Some(Some(s)) if *encoded.contiguous() == [dst as u8, s] => {}
+                    _ => return false,
+                }
+            }
+            Outbound::Finish { dst, .. } => {
+                // blocked data queued ahead of this Finish was
+                // discarded by the closing scan
+                while rem[dst] == 0 && fifo[dst].front().is_some_and(|e| e.is_some()) {
+                    fifo[dst].pop_front();
+                    discarded += 1;
+                }
+                popped_fin[dst] += 1;
+                if fifo[dst].pop_front() != Some(None) {
+                    return false;
+                }
+            }
+            Outbound::Estimate { .. } => return false,
+        }
+    }
+    // whatever the model still holds must be exactly the blocked data
+    // the close discarded — never an undelivered Finish
+    for d in 0..DSTS {
+        while rem[d] == 0 && fifo[d].front().is_some_and(|e| e.is_some()) {
+            fifo[d].pop_front();
+            discarded += 1;
+        }
+        if !fifo[d].is_empty() {
+            return false;
+        }
+        if popped_fin[d] != pushed_fin[d] {
+            return false;
+        }
+    }
+    // every queued data frame was either delivered or loudly discarded
+    let pushed: u64 = pushed_data.iter().sum();
+    let popped: u64 = popped_data.iter().sum();
+    if popped + discarded != pushed {
+        return false;
+    }
+    outbox.close_unsent() == discarded
+        && metrics.counter_value("net.close_unsent_total") == discarded
+}
+
+#[test]
+fn credit_round_trip_never_exceeds_grants_and_always_finishes() {
+    check(0xC4ED17, 300, gen_credit_case, credit_case_holds);
 }
 
 #[test]

@@ -44,6 +44,8 @@ fn main() {
 
     println!("== Fig 4: TPC-H suite runtime by configuration ==");
     println!("sf={sf}, {workers} workers, suite of {} queries\n", suite.len());
+    // CI artifact rows (BENCH_FIG4_JSON=<path>)
+    let mut json_rows: Vec<String> = Vec::new();
 
     println!("-- on-prem (A-E), time_scale={onprem_scale} --");
     println!(
@@ -80,6 +82,10 @@ fn main() {
         let vs_a = base.map(|b| delta_pct(b, total)).unwrap_or_else(|| "-".into());
         let vs_p = prev.map(|p| delta_pct(p, total)).unwrap_or_else(|| "-".into());
         println!("{:<3} {:<42} {:>10} {:>8} {:>8}", letter, desc, secs(total), vs_a, vs_p);
+        json_rows.push(format!(
+            "    {{\"config\": \"{letter}\", \"ladder\": \"on-prem\", \"total_s\": {:.6}}}",
+            total.as_secs_f64()
+        ));
         base.get_or_insert(total);
         prev = Some(total);
     }
@@ -122,6 +128,11 @@ fn main() {
             "{:<3} {:<42} {:>10} {:>8} {:>8}   ({reqs} store requests)",
             letter, desc, secs(total), vs_f, vs_p
         );
+        json_rows.push(format!(
+            "    {{\"config\": \"{letter}\", \"ladder\": \"cloud\", \"total_s\": {:.6}, \
+             \"store_requests\": {reqs}}}",
+            total.as_secs_f64()
+        ));
         base.get_or_insert(total);
         prev = Some(total);
     }
@@ -130,5 +141,15 @@ fn main() {
             "F -> I combined speedup: {:.2}x",
             f.as_secs_f64() / i.as_secs_f64()
         );
+    }
+
+    if let Ok(path) = std::env::var("BENCH_FIG4_JSON") {
+        let json = format!(
+            "{{\n  \"bench\": \"fig4_configs\",\n  \"sf\": {sf},\n  \"workers\": {workers},\n  \
+             \"rows\": [\n{}\n  ]\n}}\n",
+            json_rows.join(",\n")
+        );
+        std::fs::write(&path, json).unwrap();
+        println!("wrote {path}");
     }
 }

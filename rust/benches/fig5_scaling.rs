@@ -53,6 +53,8 @@ fn main() {
     let sfs = [0.001, 0.003, 0.01];
     let sf_names = ["10k~", "30k~", "100k~"];
     let workers = [2usize, 4, 8];
+    // CI artifact rows (BENCH_FIG5_JSON=<path>)
+    let mut json_rows: Vec<String> = Vec::new();
 
     for (bench, is_tpch) in [("TPC-H", true), ("TPC-DS", false)] {
         println!("== Fig 5: {bench} total cold runtime (on-prem profile) ==");
@@ -83,6 +85,11 @@ fn main() {
                     spills_at_2 = per.iter().map(|(_, r)| r.total_spills()).sum();
                 }
                 print!("{:>12}", secs(total));
+                json_rows.push(format!(
+                    "    {{\"suite\": \"{bench}\", \"sf\": {sf}, \"workers\": {w}, \
+                     \"total_s\": {:.6}}}",
+                    total.as_secs_f64()
+                ));
                 first.get_or_insert(total);
                 last = Some(total);
             }
@@ -98,4 +105,14 @@ fn main() {
         "(paper: 4x GPUs at the largest SF -> 4.8x TPC-DS / 4.3x TPC-H speedup;\n\
          spilling sustains the largest SF on the smallest cluster)"
     );
+
+    if let Ok(path) = std::env::var("BENCH_FIG5_JSON") {
+        let json = format!(
+            "{{\n  \"bench\": \"fig5_scaling\",\n  \"time_scale\": {time_scale},\n  \
+             \"rows\": [\n{}\n  ]\n}}\n",
+            json_rows.join(",\n")
+        );
+        std::fs::write(&path, json).unwrap();
+        println!("wrote {path}");
+    }
 }

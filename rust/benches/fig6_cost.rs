@@ -58,6 +58,8 @@ fn main() {
     }
 
     // ---------------- Figure 6
+    // CI artifact rows (BENCH_FIG6_JSON=<path>)
+    let mut json_rows: Vec<String> = Vec::new();
     println!("\n== Fig 6: TPC-H suite, performance vs cost (time_scale={time_scale}) ==");
     println!(
         "{:<5} {:>7} {:>7} {:>12} {:>12} {:>12} {:>10}",
@@ -117,7 +119,24 @@ fn main() {
                 dollar_ratio,
                 parity,
             );
+            json_rows.push(format!(
+                "    {{\"sf\": {sf}, \"theseus_nodes\": {t_nodes}, \
+                 \"photon_nodes\": {p_nodes}, \"theseus_s\": {:.6}, \
+                 \"photon_s\": {p_total:.6}, \"dollar_ratio\": {dollar_ratio:.4}, \
+                 \"at_parity\": {parity:.4}}}",
+                t_total.as_secs_f64()
+            ));
         }
     }
     println!("\n(paper: Theseus ahead at every point; 12.3% at the smallest pairing,\n 4.46x at the largest — margin grows with scale)");
+
+    if let Ok(path) = std::env::var("BENCH_FIG6_JSON") {
+        let json = format!(
+            "{{\n  \"bench\": \"fig6_cost\",\n  \"time_scale\": {time_scale},\n  \
+             \"rows\": [\n{}\n  ]\n}}\n",
+            json_rows.join(",\n")
+        );
+        std::fs::write(&path, json).unwrap();
+        println!("wrote {path}");
+    }
 }

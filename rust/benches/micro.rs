@@ -23,6 +23,11 @@
 //!    (per-batch per-destination take + encode + frame) vs the
 //!    destination-coalesced single-pass-scatter path, at 4–64 workers:
 //!    frames emitted, bytes on the wire, wall time.
+//! 8. **Serving cache** (PR 7): the gateway's two-level result/fragment
+//!    cache over the repeat-heavy serving mix — cold vs warm-exact vs
+//!    fragment-hit latency and cluster tasks executed. Asserts a warm
+//!    exact hit runs zero cluster tasks and a fragment-hit drilldown
+//!    runs strictly fewer than its cold run.
 //!
 //! Run: `cargo bench --bench micro`.
 
@@ -31,11 +36,12 @@ mod common;
 use std::time::{Duration, Instant};
 
 use common::{gateway, secs, tpch_store};
+use theseus::cluster::QueryResult;
 use theseus::config::WorkerConfig;
 use theseus::memory::{PinnedPool, PinnedSlab, SlabSlice, SpillStore};
 use theseus::sim::{HwProfile, LinkSpec, SimContext, GIB};
 use theseus::storage::compression::Codec;
-use theseus::workload::tpch_suite;
+use theseus::workload::{serving_mix, tpch_suite};
 
 fn main() {
     // MICRO_BENCHES=5,6,7 runs a subset (CI's bench-runner step uses
@@ -64,6 +70,9 @@ fn main() {
     }
     if run(7) {
         shuffle_coalescing();
+    }
+    if run(8) {
+        serving_cache();
     }
 }
 
@@ -651,6 +660,102 @@ fn shuffle_coalescing() {
         let json = format!(
             "{{\n  \"bench\": \"shuffle_coalescing\",\n  \"flush_bytes\": {FLUSH},\n  \
              \"coalesced_bytes\": {total_bytes},\n  \"runs\": [\n{}\n  ]\n}}\n",
+            json_runs.join(",\n")
+        );
+        std::fs::write(&path, json).unwrap();
+        println!("wrote {path}");
+    }
+}
+
+// ------------------------------------------------------------------ 8
+fn serving_cache() {
+    println!("== serving cache (PR 7): cold vs warm-exact vs fragment-hit ==");
+    let sf = std::env::var("SERVING_SF")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.02);
+    let cfg = WorkerConfig {
+        num_workers: 4,
+        profile: HwProfile::on_prem(),
+        time_scale: 0.1,
+        result_cache_bytes: 64 << 20,
+        fragment_cache_bytes: 64 << 20,
+        ..WorkerConfig::default()
+    };
+    let store = tpch_store(&cfg, sf);
+    let gw = gateway(cfg, store);
+    let tasks = |r: &QueryResult| -> u64 {
+        r.worker_stats.iter().map(|s| s.tasks_executed).sum()
+    };
+
+    println!(
+        "{:<14} {:<18} {:>10} {:>7}",
+        "request", "kind", "elapsed", "tasks"
+    );
+    let mut runs: Vec<(String, &'static str, QueryResult)> = Vec::new();
+    let mut json_runs = Vec::new();
+    for sq in serving_mix(3) {
+        let r = gw.submit(&sq.query).unwrap_or_else(|e| panic!("{}: {e}", sq.id));
+        println!(
+            "{:<14} {:<18} {:>10} {:>7}",
+            sq.id,
+            sq.kind,
+            secs(r.elapsed),
+            tasks(&r)
+        );
+        json_runs.push(format!(
+            "    {{\"id\": \"{}\", \"kind\": \"{}\", \"elapsed_s\": {:.6}, \"tasks\": {}}}",
+            sq.id,
+            sq.kind,
+            r.elapsed.as_secs_f64(),
+            tasks(&r)
+        ));
+        runs.push((sq.id, sq.kind, r));
+    }
+    let find = |id: &str| &runs.iter().find(|(i, _, _)| i == id).unwrap().2;
+
+    // acceptance: warm exact hit = zero cluster tasks, identical bytes
+    let (cold, warm) = (find("revenue@0"), find("revenue@1"));
+    assert!(tasks(cold) > 0, "cold dashboard must execute on the cluster");
+    assert_eq!(tasks(warm), 0, "warm exact hit must execute zero cluster tasks");
+    assert_eq!(
+        cold.batch.encode(),
+        warm.batch.encode(),
+        "cached bytes must be identical to the cold execution"
+    );
+    // the rewrite variant (conjuncts/cols permuted) is also a pure hit
+    assert_eq!(tasks(find("revenue-rw@1")), 0, "rewrite must share the entry");
+    // fragment-hit drilldowns execute, but strictly less than cold
+    let (dcold, dfrag) = (find("drill0@0"), find("drill0@1"));
+    assert!(
+        tasks(dfrag) > 0 && tasks(dfrag) < tasks(dcold),
+        "fragment-hit drilldown must run strictly fewer tasks ({} vs {})",
+        tasks(dfrag),
+        tasks(dcold)
+    );
+
+    let m = gw.cache.as_ref().unwrap().metrics();
+    println!(
+        "hits: result {} (miss {}), fragment {} (miss {}), plan-memo {}\n\
+         cold {} / warm {} / fragment-hit drill {} (cold drill {})\n",
+        m.counter_value("cache.result_hit"),
+        m.counter_value("cache.result_miss"),
+        m.counter_value("cache.fragment_hit"),
+        m.counter_value("cache.fragment_miss"),
+        m.counter_value("cache.plan_memo_hit"),
+        secs(cold.elapsed),
+        secs(warm.elapsed),
+        secs(dfrag.elapsed),
+        secs(dcold.elapsed),
+    );
+
+    // CI artifact: BENCH_SERVING_JSON=<path> writes the runs out
+    if let Ok(path) = std::env::var("BENCH_SERVING_JSON") {
+        let json = format!(
+            "{{\n  \"bench\": \"serving_cache\",\n  \"sf\": {sf},\n  \
+             \"result_hits\": {},\n  \"fragment_hits\": {},\n  \"runs\": [\n{}\n  ]\n}}\n",
+            m.counter_value("cache.result_hit"),
+            m.counter_value("cache.fragment_hit"),
             json_runs.join(",\n")
         );
         std::fs::write(&path, json).unwrap();

@@ -1,0 +1,391 @@
+//! Canonical plan keys: equivalent [`Logical`] trees map to one key.
+//!
+//! # Canonicalization rules
+//!
+//! Rewrites are gated by what downstream operators can *see* of a
+//! node's output, tracked top-down as a [`Vis`] flag:
+//!
+//! * **Conjunct ordering** — `And` trees flatten to leaves, sort by
+//!   their encoding, and rebuild left-deep. Always applied: a filter
+//!   mask is the intersection of its conjuncts regardless of order, so
+//!   neither row content nor row order can change.
+//! * **Column ordering** (scan cols, project cols, agg list) — sorted
+//!   only when no ancestor exposes column order ([`Vis::ColsAndRows`]):
+//!   Project and Aggregate re-pick columns *by name*, so everything
+//!   below them absorbs column order; the root and plain
+//!   Filter/Sort/Limit chains expose it.
+//! * **Commutative join inputs** — the side with the smaller canonical
+//!   encoding becomes the build side, only under [`Vis::Nothing`]
+//!   (an Aggregate ancestor): a hash aggregate's output is a function
+//!   of its input *multiset*, so both the column order and the row
+//!   order a swap perturbs are absorbed. (Float sums accumulate in
+//!   arrival order; for integer-valued data — every generated workload
+//!   here — f64 accumulation is exact, so absorption is byte-precise.)
+//!
+//! The executed plan *is* the canonical form (the gateway canonicalizes
+//! before planning), so a cache hit returns bytes produced by exactly
+//! the plan a miss would run — byte-identity by construction, not by
+//! cross-plan agreement.
+//!
+//! The result-cache key hashes the canonical plan's
+//! [`PhysicalPlan::encode`] bytes; the plan-memo and fragment keys hash
+//! a structural [`fingerprint`] of the canonical `Logical` (available
+//! before planning). Full key bytes are stored and compared on lookup —
+//! the hash only buckets, collisions cannot alias entries.
+
+use crate::exec::plan::{AggFn, AggSpec, Pred};
+use crate::exec::PhysicalPlan;
+use crate::planner::Logical;
+use crate::util::bytes::Writer;
+use crate::util::hash::splitmix64;
+
+/// A collision-safe cache key: `hash` buckets, `bytes` decides.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CanonicalKey {
+    pub hash: u64,
+    pub bytes: Vec<u8>,
+}
+
+impl CanonicalKey {
+    pub fn from_bytes(bytes: Vec<u8>) -> CanonicalKey {
+        CanonicalKey { hash: hash_bytes(&bytes), bytes }
+    }
+
+    /// Result-cache key: the canonical plan's wire encoding.
+    pub fn of_plan(plan: &PhysicalPlan) -> CanonicalKey {
+        Self::from_bytes(plan.encode())
+    }
+
+    /// Fragment / plan-memo key: the canonical logical fingerprint.
+    pub fn of_logical(q: &Logical) -> CanonicalKey {
+        Self::from_bytes(fingerprint(q))
+    }
+}
+
+/// SplitMix64-chained hash over arbitrary bytes.
+pub fn hash_bytes(b: &[u8]) -> u64 {
+    let mut h = 0xC0FF_EE00_D15E_A5E5u64;
+    for chunk in b.chunks(8) {
+        let mut word = [0u8; 8];
+        word[..chunk.len()].copy_from_slice(chunk);
+        h = splitmix64(h ^ u64::from_le_bytes(word));
+    }
+    splitmix64(h ^ b.len() as u64)
+}
+
+/// What of a node's output order the ancestors can observe.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Vis {
+    /// Column order and row order both reach the result.
+    ColsAndRows,
+    /// An ancestor re-picks columns by name; row order still reaches.
+    RowsOnly,
+    /// An Aggregate ancestor absorbs the whole multiset.
+    Nothing,
+}
+
+impl Vis {
+    fn cols_visible(self) -> bool {
+        self == Vis::ColsAndRows
+    }
+}
+
+/// Normalize `q` so that every query in its equivalence class maps to
+/// the same tree (see module docs for the rules and their soundness).
+pub fn canonicalize(q: &Logical) -> Logical {
+    canon(q, Vis::ColsAndRows)
+}
+
+fn canon(q: &Logical, vis: Vis) -> Logical {
+    match q {
+        Logical::Scan { table, cols, pred } => {
+            let mut cols = cols.clone();
+            if !vis.cols_visible() {
+                cols.sort_unstable();
+            }
+            Logical::Scan {
+                table: table.clone(),
+                cols,
+                pred: pred.as_ref().map(canon_pred),
+            }
+        }
+        Logical::Filter { input, pred } => Logical::Filter {
+            input: Box::new(canon(input, vis)),
+            pred: canon_pred(pred),
+        },
+        Logical::Project { input, cols } => {
+            let mut cols = cols.clone();
+            if !vis.cols_visible() {
+                cols.sort_unstable();
+            }
+            let child = if vis == Vis::Nothing { Vis::Nothing } else { Vis::RowsOnly };
+            Logical::Project { input: Box::new(canon(input, child)), cols }
+        }
+        Logical::Aggregate { input, group_by, aggs } => {
+            let mut aggs = aggs.clone();
+            if !vis.cols_visible() {
+                aggs.sort_by_cached_key(agg_sort_key);
+            }
+            Logical::Aggregate {
+                input: Box::new(canon(input, Vis::Nothing)),
+                group_by: group_by.clone(),
+                aggs,
+            }
+        }
+        Logical::Join { left, right, left_on, right_on, lip } => {
+            let l = canon(left, vis);
+            let r = canon(right, vis);
+            if vis == Vis::Nothing && fingerprint(&r) < fingerprint(&l) {
+                Logical::Join {
+                    left: Box::new(r),
+                    right: Box::new(l),
+                    left_on: right_on.clone(),
+                    right_on: left_on.clone(),
+                    lip: *lip,
+                }
+            } else {
+                Logical::Join {
+                    left: Box::new(l),
+                    right: Box::new(r),
+                    left_on: left_on.clone(),
+                    right_on: right_on.clone(),
+                    lip: *lip,
+                }
+            }
+        }
+        Logical::Sort { input, by, desc } => Logical::Sort {
+            input: Box::new(canon(input, vis)),
+            by: by.clone(),
+            desc: *desc,
+        },
+        Logical::Limit { input, n } => {
+            Logical::Limit { input: Box::new(canon(input, vis)), n: *n }
+        }
+        Logical::Fragment { data } => Logical::Fragment { data: data.clone() },
+    }
+}
+
+/// Flatten the conjunction, sort leaves by encoding, rebuild left-deep.
+fn canon_pred(p: &Pred) -> Pred {
+    let mut leaves: Vec<Pred> = p.conjuncts().into_iter().cloned().collect();
+    leaves.sort_by_cached_key(|l| {
+        let mut w = Writer::new();
+        enc_pred(l, &mut w);
+        w.finish()
+    });
+    leaves
+        .into_iter()
+        .reduce(|acc, x| acc.and(x))
+        .expect("conjuncts() is non-empty")
+}
+
+fn agg_sort_key(a: &AggSpec) -> Vec<u8> {
+    let mut w = Writer::new();
+    enc_agg(a, &mut w);
+    w.finish()
+}
+
+// ------------------------------------------- structural fingerprints
+
+/// Deterministic structural encoding of a `Logical` tree. Injective for
+/// our plan algebra (tagged, length-prefixed), so byte equality is tree
+/// equality.
+pub fn fingerprint(q: &Logical) -> Vec<u8> {
+    let mut w = Writer::new();
+    enc_logical(q, &mut w);
+    w.finish()
+}
+
+fn enc_logical(q: &Logical, w: &mut Writer) {
+    match q {
+        Logical::Scan { table, cols, pred } => {
+            w.u8(0);
+            w.str(table);
+            w.u32(cols.len() as u32);
+            for c in cols {
+                w.str(c);
+            }
+            match pred {
+                None => w.u8(0),
+                Some(p) => {
+                    w.u8(1);
+                    enc_pred(p, w);
+                }
+            }
+        }
+        Logical::Filter { input, pred } => {
+            w.u8(1);
+            enc_pred(pred, w);
+            enc_logical(input, w);
+        }
+        Logical::Project { input, cols } => {
+            w.u8(2);
+            w.u32(cols.len() as u32);
+            for c in cols {
+                w.str(c);
+            }
+            enc_logical(input, w);
+        }
+        Logical::Aggregate { input, group_by, aggs } => {
+            w.u8(3);
+            w.str(group_by);
+            w.u32(aggs.len() as u32);
+            for a in aggs {
+                enc_agg(a, w);
+            }
+            enc_logical(input, w);
+        }
+        Logical::Join { left, right, left_on, right_on, lip } => {
+            w.u8(4);
+            w.str(left_on);
+            w.str(right_on);
+            w.u8(*lip as u8);
+            enc_logical(left, w);
+            enc_logical(right, w);
+        }
+        Logical::Sort { input, by, desc } => {
+            w.u8(5);
+            w.str(by);
+            w.u8(*desc as u8);
+            enc_logical(input, w);
+        }
+        Logical::Limit { input, n } => {
+            w.u8(6);
+            w.u64(*n);
+            enc_logical(input, w);
+        }
+        Logical::Fragment { data } => {
+            w.u8(7);
+            w.bytes(data);
+        }
+    }
+}
+
+fn enc_pred(p: &Pred, w: &mut Writer) {
+    match p {
+        Pred::RangeI64 { col, lo, hi } => {
+            w.u8(0);
+            w.str(col);
+            w.i64(*lo);
+            w.i64(*hi);
+        }
+        Pred::RangeF32 { col, lo, hi } => {
+            w.u8(1);
+            w.str(col);
+            w.u32(lo.to_bits());
+            w.u32(hi.to_bits());
+        }
+        Pred::EqI64 { col, val } => {
+            w.u8(2);
+            w.str(col);
+            w.i64(*val);
+        }
+        Pred::And(a, b) => {
+            w.u8(3);
+            enc_pred(a, w);
+            enc_pred(b, w);
+        }
+    }
+}
+
+fn enc_agg(a: &AggSpec, w: &mut Writer) {
+    w.u8(match a.func {
+        AggFn::Sum => 0,
+        AggFn::Count => 1,
+        AggFn::Min => 2,
+        AggFn::Max => 3,
+    });
+    w.str(&a.col);
+    w.str(&a.name);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pred_a() -> Pred {
+        Pred::RangeI64 { col: "a".into(), lo: 0, hi: 10 }
+    }
+
+    fn pred_b() -> Pred {
+        Pred::EqI64 { col: "b".into(), val: 3 }
+    }
+
+    #[test]
+    fn conjunct_order_is_normalized_everywhere() {
+        let q1 = Logical::scan("t", &["a", "b"]).filter(pred_a().and(pred_b()));
+        let q2 = Logical::scan("t", &["a", "b"]).filter(pred_b().and(pred_a()));
+        assert_eq!(fingerprint(&canonicalize(&q1)), fingerprint(&canonicalize(&q2)));
+        // and in pushed-down scan predicates
+        let s1 = Logical::scan_where("t", &["a"], pred_a().and(pred_b()));
+        let s2 = Logical::scan_where("t", &["a"], pred_b().and(pred_a()));
+        assert_eq!(fingerprint(&canonicalize(&s1)), fingerprint(&canonicalize(&s2)));
+    }
+
+    #[test]
+    fn visible_column_order_is_preserved() {
+        // no aggregate/project above: scan col order IS the result order
+        let q1 = Logical::scan("t", &["a", "b"]);
+        let q2 = Logical::scan("t", &["b", "a"]);
+        assert_ne!(fingerprint(&canonicalize(&q1)), fingerprint(&canonicalize(&q2)));
+    }
+
+    #[test]
+    fn absorbed_column_order_is_normalized() {
+        use crate::exec::plan::{AggFn, AggSpec};
+        let agg = |q: Logical| q.aggregate("a", vec![AggSpec::new(AggFn::Sum, "b")]);
+        let q1 = agg(Logical::scan("t", &["a", "b"]));
+        let q2 = agg(Logical::scan("t", &["b", "a"]));
+        assert_eq!(fingerprint(&canonicalize(&q1)), fingerprint(&canonicalize(&q2)));
+    }
+
+    #[test]
+    fn join_inputs_commute_only_under_aggregate() {
+        use crate::exec::plan::{AggFn, AggSpec};
+        let l = || Logical::scan("t", &["k", "v"]);
+        let r = || Logical::scan("u", &["k2", "w"]);
+        let j1 = l().join(r(), "k", "k2", false);
+        let j2 = r().join(l(), "k2", "k", false);
+        // visible join: orientation is part of the result
+        assert_ne!(fingerprint(&canonicalize(&j1)), fingerprint(&canonicalize(&j2)));
+        // under an aggregate: both orientations collapse
+        let a1 = j1.aggregate("k", vec![AggSpec::new(AggFn::Sum, "w")]);
+        let a2 = j2.aggregate("k", vec![AggSpec::new(AggFn::Sum, "w")]);
+        assert_eq!(fingerprint(&canonicalize(&a1)), fingerprint(&canonicalize(&a2)));
+    }
+
+    #[test]
+    fn canonicalize_is_idempotent() {
+        let q = Logical::scan("t", &["b", "a"])
+            .filter(pred_b().and(pred_a()))
+            .aggregate(
+                "a",
+                vec![
+                    crate::exec::plan::AggSpec::new(crate::exec::plan::AggFn::Sum, "b"),
+                ],
+            )
+            .sort("a", false);
+        let once = canonicalize(&q);
+        let twice = canonicalize(&once);
+        assert_eq!(fingerprint(&once), fingerprint(&twice));
+    }
+
+    #[test]
+    fn distinct_constants_get_distinct_keys() {
+        let q1 = Logical::scan("t", &["a"])
+            .filter(Pred::RangeI64 { col: "a".into(), lo: 0, hi: 10 });
+        let q2 = Logical::scan("t", &["a"])
+            .filter(Pred::RangeI64 { col: "a".into(), lo: 0, hi: 11 });
+        assert_ne!(
+            CanonicalKey::of_logical(&canonicalize(&q1)),
+            CanonicalKey::of_logical(&canonicalize(&q2))
+        );
+    }
+
+    #[test]
+    fn hash_bytes_is_stable_and_length_sensitive() {
+        assert_eq!(hash_bytes(b"abc"), hash_bytes(b"abc"));
+        assert_ne!(hash_bytes(b"abc"), hash_bytes(b"abcd"));
+        assert_ne!(hash_bytes(b""), hash_bytes(b"\0"));
+    }
+}

@@ -1,0 +1,521 @@
+//! Serving layer: a two-level cache between the [`Gateway`] and the
+//! cluster (tesseract-style result serving — repeated dashboards and
+//! drill-downs should not re-run the cluster).
+//!
+//! # Levels
+//!
+//! 1. **Exact result cache** — keyed on the canonical plan encoding
+//!    ([`key::CanonicalKey::of_plan`] over the canonicalized query's
+//!    [`PhysicalPlan::encode`] bytes). A warm hit returns the gathered
+//!    [`RecordBatch`] with **zero cluster tasks executed**.
+//! 2. **Fragment cache** — materialized scan→filter→agg frontiers
+//!    (see [`crate::planner::Logical::fragment_frontiers`]) keyed on
+//!    (canonical subplan fingerprint, datasource versions). A plan that
+//!    misses the result cache but covers a cached fragment is rewritten
+//!    to read the fragment ([`crate::exec::plan::OpSpec::Fragment`])
+//!    instead of re-scanning — a pre-aggregated cube serving its
+//!    drill-downs (sort/limit/re-aggregation above the frontier still
+//!    run, the scan pipeline does not).
+//!
+//! # Key canonicalization rules
+//!
+//! See [`key`] module docs: conjunct order always normalizes; column
+//! order (scan/project/agg lists) normalizes only below a
+//! name-addressed operator (Project/Aggregate); commutative join inputs
+//! normalize only under an Aggregate, which absorbs the row and column
+//! order a swap perturbs. The gateway executes the canonical form, so
+//! cached bytes are byte-identical to what a miss would produce.
+//!
+//! # Invalidation contract
+//!
+//! Every entry stores the [`SourceVersion`] stamps of the tables it was
+//! computed from, snapshotted *before* execution. Writers bump a
+//! table's stamp on [`crate::storage::ObjectStore::put`]; a lookup
+//! whose stamps mismatch drops the entry and reports a miss — bumps
+//! monotonically grow, so a stale entry can never be re-validated.
+//!
+//! # Governor accounting
+//!
+//! Both levels account entry bytes (the batch's encoded length) in one
+//! gateway-side [`MemoryGovernor`] [`Reservation`]. Inserts `grow` the
+//! reservation; a refused grow **evicts LRU entries until the insert
+//! fits** (or is skipped if it can never fit) — it never wedges the
+//! query path. Evictions `shrink` it. Budget exhaustion therefore
+//! degrades to re-execution, not to blocking.
+//!
+//! [`Gateway`]: crate::cluster::Gateway
+//! [`PhysicalPlan::encode`]: crate::exec::PhysicalPlan::encode
+
+pub mod key;
+
+pub use key::{canonicalize, fingerprint, hash_bytes, CanonicalKey};
+
+use std::sync::{Arc, Mutex};
+
+use crate::memory::{DeviceArena, MemoryGovernor, Reservation};
+use crate::metrics::Metrics;
+use crate::planner::Logical;
+use crate::storage::SourceVersion;
+use crate::types::RecordBatch;
+use crate::exec::PhysicalPlan;
+
+/// Version stamps an entry was computed against.
+pub type VersionSnapshot = Vec<(String, u64)>;
+
+struct Entry<T> {
+    key: CanonicalKey,
+    value: T,
+    bytes: usize,
+    versions: VersionSnapshot,
+    /// LRU clock stamp (larger = more recently used).
+    seq: u64,
+}
+
+/// One governor-accounted LRU level. Entries live in a flat vec — the
+/// serving cache holds at most a few hundred results, linear scans are
+/// noise next to hashing a plan.
+struct Lru<T> {
+    entries: Vec<Entry<T>>,
+    budget: usize,
+    bytes: usize,
+    clock: u64,
+    res: Reservation,
+}
+
+/// What an insert attempt did (metrics + tests).
+#[derive(Debug, PartialEq, Eq)]
+enum InsertOutcome {
+    Inserted { evicted: usize },
+    TooLarge,
+}
+
+impl<T: Clone> Lru<T> {
+    fn new(budget: usize, res: Reservation) -> Self {
+        Lru { entries: Vec::new(), budget, bytes: 0, clock: 0, res }
+    }
+
+    /// Find by full key bytes; validate versions against `current`;
+    /// drop-and-miss on mismatch. Returns (value, invalidated-count).
+    fn lookup(
+        &mut self,
+        key: &CanonicalKey,
+        current: &VersionSnapshot,
+    ) -> (Option<T>, usize) {
+        let Some(i) = self.entries.iter().position(|e| e.key == *key) else {
+            return (None, 0);
+        };
+        if self.entries[i].versions != *current {
+            self.remove_at(i);
+            return (None, 1);
+        }
+        self.clock += 1;
+        self.entries[i].seq = self.clock;
+        (Some(self.entries[i].value.clone()), 0)
+    }
+
+    fn remove_at(&mut self, i: usize) -> usize {
+        let e = self.entries.swap_remove(i);
+        self.bytes -= e.bytes;
+        self.res.shrink(e.bytes);
+        e.bytes
+    }
+
+    /// Evict the least-recently-used entry; returns freed bytes.
+    fn evict_lru(&mut self) -> Option<usize> {
+        let i = self
+            .entries
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| e.seq)?
+            .0;
+        Some(self.remove_at(i))
+    }
+
+    /// Insert under the byte budget *and* the governor: evict LRU
+    /// entries while either refuses, never block. An entry larger than
+    /// the whole budget is skipped outright.
+    fn insert(
+        &mut self,
+        key: CanonicalKey,
+        value: T,
+        bytes: usize,
+        versions: VersionSnapshot,
+    ) -> InsertOutcome {
+        if bytes > self.budget {
+            return InsertOutcome::TooLarge;
+        }
+        if let Some(i) = self.entries.iter().position(|e| e.key == key) {
+            // refreshed fill (e.g. after invalidation): replace
+            self.remove_at(i);
+        }
+        let mut evicted = 0;
+        while self.bytes + bytes > self.budget {
+            match self.evict_lru() {
+                Some(_) => evicted += 1,
+                None => break,
+            }
+        }
+        // the governor may be tighter than our budget (it is shared
+        // with the sibling level): a refused grow evicts more
+        while self.res.grow(bytes).is_err() {
+            match self.evict_lru() {
+                Some(_) => evicted += 1,
+                None => return InsertOutcome::TooLarge,
+            }
+        }
+        self.clock += 1;
+        self.entries.push(Entry { key, value, bytes, versions, seq: self.clock });
+        self.bytes += bytes;
+        InsertOutcome::Inserted { evicted }
+    }
+
+    fn invalidate_table(&mut self, table: &str) -> usize {
+        let mut dropped = 0;
+        let mut i = 0;
+        while i < self.entries.len() {
+            if self.entries[i].versions.iter().any(|(t, _)| t == table) {
+                self.remove_at(i);
+                dropped += 1;
+            } else {
+                i += 1;
+            }
+        }
+        dropped
+    }
+}
+
+/// Compile-memo entry: canonical fingerprint (+ planner settings) →
+/// planned physical plan. Plans are tiny; the memo is entry-capped, not
+/// governor-accounted.
+struct PlanMemo {
+    entries: Vec<(CanonicalKey, Arc<PhysicalPlan>)>,
+    cap: usize,
+}
+
+impl PlanMemo {
+    fn get(&self, key: &CanonicalKey) -> Option<Arc<PhysicalPlan>> {
+        self.entries.iter().find(|(k, _)| k == key).map(|(_, p)| p.clone())
+    }
+
+    fn put(&mut self, key: CanonicalKey, plan: Arc<PhysicalPlan>) {
+        if self.entries.len() >= self.cap {
+            // wholesale reset — simpler than LRU for a bounded memo of
+            // cheap-to-recompute values
+            self.entries.clear();
+        }
+        self.entries.push((key, plan));
+    }
+}
+
+/// The gateway-side serving cache (results + fragments + plan memo).
+pub struct ServingCache {
+    results: Mutex<Lru<RecordBatch>>,
+    fragments: Mutex<Lru<Arc<Vec<u8>>>>,
+    plans: Mutex<PlanMemo>,
+    version: Option<SourceVersion>,
+    metrics: Arc<Metrics>,
+    fragment_budget: usize,
+}
+
+impl ServingCache {
+    /// Build from the two byte budgets (each 0 = that level off; the
+    /// constructor is only called when at least one is nonzero) and the
+    /// store's version clock (None = entries never invalidate).
+    pub fn new(
+        result_bytes: usize,
+        fragment_bytes: usize,
+        version: Option<SourceVersion>,
+    ) -> ServingCache {
+        let gov = MemoryGovernor::new(DeviceArena::new(result_bytes + fragment_bytes));
+        let r = gov.try_reserve(0).expect("zero-size reservation");
+        let f = gov.try_reserve(0).expect("zero-size reservation");
+        ServingCache {
+            results: Mutex::new(Lru::new(result_bytes, r)),
+            fragments: Mutex::new(Lru::new(fragment_bytes, f)),
+            plans: Mutex::new(PlanMemo { entries: Vec::new(), cap: 256 }),
+            version,
+            metrics: Arc::new(Metrics::default()),
+            fragment_budget: fragment_bytes,
+        }
+    }
+
+    pub fn fragments_enabled(&self) -> bool {
+        self.fragment_budget > 0
+    }
+
+    /// `cache.*` counters/gauges (hits, misses, evictions, bytes).
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Current version stamps for `tables` (empty when untracked).
+    pub fn version_snapshot(&self, tables: &[String]) -> VersionSnapshot {
+        match &self.version {
+            Some(v) => v.snapshot(tables),
+            None => Vec::new(),
+        }
+    }
+
+    // ------------------------------------------------- result level
+
+    pub fn lookup_result(
+        &self,
+        key: &CanonicalKey,
+        versions: &VersionSnapshot,
+    ) -> Option<RecordBatch> {
+        let mut lru = self.results.lock().unwrap();
+        let (hit, dropped) = lru.lookup(key, versions);
+        self.note("cache.result", hit.is_some(), dropped, lru.bytes);
+        hit
+    }
+
+    pub fn insert_result(
+        &self,
+        key: CanonicalKey,
+        batch: &RecordBatch,
+        versions: VersionSnapshot,
+    ) {
+        let bytes = batch.encoded_len();
+        let mut lru = self.results.lock().unwrap();
+        let out = lru.insert(key, batch.clone(), bytes, versions);
+        self.note_insert("cache.result", out, lru.bytes);
+    }
+
+    // ----------------------------------------------- fragment level
+
+    pub fn lookup_fragment(
+        &self,
+        key: &CanonicalKey,
+        versions: &VersionSnapshot,
+    ) -> Option<Arc<Vec<u8>>> {
+        let mut lru = self.fragments.lock().unwrap();
+        let (hit, dropped) = lru.lookup(key, versions);
+        self.note("cache.fragment", hit.is_some(), dropped, lru.bytes);
+        hit
+    }
+
+    /// Cache a materialized fragment; returns the encoded bytes for
+    /// immediate substitution into the requesting plan.
+    pub fn insert_fragment(
+        &self,
+        key: CanonicalKey,
+        batch: &RecordBatch,
+        versions: VersionSnapshot,
+    ) -> Arc<Vec<u8>> {
+        let data = Arc::new(batch.encode());
+        let bytes = data.len();
+        let mut lru = self.fragments.lock().unwrap();
+        let out = lru.insert(key, data.clone(), bytes, versions);
+        self.note_insert("cache.fragment", out, lru.bytes);
+        data
+    }
+
+    // ----------------------------------------------------- plan memo
+
+    /// Memoized Logical→PhysicalPlan compile, keyed on the canonical
+    /// fingerprint plus the planner settings that shape the plan.
+    pub fn plan_for(
+        &self,
+        planner: &crate::planner::Planner,
+        canon: &Logical,
+    ) -> crate::Result<Arc<PhysicalPlan>> {
+        let mut fp = fingerprint(canon);
+        fp.extend_from_slice(&(planner.num_workers as u64).to_le_bytes());
+        fp.push(planner.lip_enabled as u8);
+        let key = CanonicalKey::from_bytes(fp);
+        if let Some(p) = self.plans.lock().unwrap().get(&key) {
+            self.metrics.counter("cache.plan_memo_hit").inc();
+            return Ok(p);
+        }
+        self.metrics.counter("cache.plan_memo_miss").inc();
+        let plan = Arc::new(planner.plan(canon)?);
+        self.plans.lock().unwrap().put(key, plan.clone());
+        Ok(plan)
+    }
+
+    /// Drop every entry derived from `table` (explicit invalidation;
+    /// the version stamps already catch staleness lazily on lookup).
+    pub fn invalidate_table(&self, table: &str) {
+        let mut n = 0;
+        {
+            let mut lru = self.results.lock().unwrap();
+            n += lru.invalidate_table(table);
+            self.metrics.gauge("cache.result_bytes").set(lru.bytes as i64);
+        }
+        {
+            let mut lru = self.fragments.lock().unwrap();
+            n += lru.invalidate_table(table);
+            self.metrics.gauge("cache.fragment_bytes").set(lru.bytes as i64);
+        }
+        self.metrics.counter("cache.invalidated").add(n as u64);
+    }
+
+    fn note(&self, prefix: &'static str, hit: bool, invalidated: usize, bytes: usize) {
+        match (prefix, hit) {
+            ("cache.result", true) => self.metrics.counter("cache.result_hit").inc(),
+            ("cache.result", false) => self.metrics.counter("cache.result_miss").inc(),
+            ("cache.fragment", true) => self.metrics.counter("cache.fragment_hit").inc(),
+            (_, false) => self.metrics.counter("cache.fragment_miss").inc(),
+            _ => {}
+        }
+        if invalidated > 0 {
+            self.metrics.counter("cache.invalidated").add(invalidated as u64);
+        }
+        let gauge = if prefix == "cache.result" {
+            "cache.result_bytes"
+        } else {
+            "cache.fragment_bytes"
+        };
+        self.metrics.gauge(gauge).set(bytes as i64);
+    }
+
+    fn note_insert(&self, prefix: &'static str, out: InsertOutcome, bytes: usize) {
+        let (evict, refused, gauge) = if prefix == "cache.result" {
+            ("cache.result_evict", "cache.result_refused", "cache.result_bytes")
+        } else {
+            ("cache.fragment_evict", "cache.fragment_refused", "cache.fragment_bytes")
+        };
+        match out {
+            InsertOutcome::Inserted { evicted } if evicted > 0 => {
+                self.metrics.counter(evict).add(evicted as u64)
+            }
+            InsertOutcome::Inserted { .. } => {}
+            InsertOutcome::TooLarge => self.metrics.counter(refused).inc(),
+        }
+        self.metrics.gauge(gauge).set(bytes as i64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Column;
+
+    fn batch(n: i64) -> RecordBatch {
+        RecordBatch::new(vec![Column::i64("k", (0..n).collect())]).unwrap()
+    }
+
+    fn key(tag: u8) -> CanonicalKey {
+        CanonicalKey::from_bytes(vec![tag; 8])
+    }
+
+    #[test]
+    fn result_roundtrip_and_lru_eviction_under_budget() {
+        let b = batch(64);
+        let sz = b.encoded_len();
+        // room for exactly two entries
+        let cache = ServingCache::new(2 * sz + 1, 0, None);
+        cache.insert_result(key(1), &b, Vec::new());
+        cache.insert_result(key(2), &b, Vec::new());
+        assert!(cache.lookup_result(&key(1), &Vec::new()).is_some());
+        // k1 is now MRU; inserting k3 must evict k2
+        cache.insert_result(key(3), &b, Vec::new());
+        assert!(cache.lookup_result(&key(2), &Vec::new()).is_none());
+        assert!(cache.lookup_result(&key(1), &Vec::new()).is_some());
+        assert!(cache.lookup_result(&key(3), &Vec::new()).is_some());
+        let m = cache.metrics();
+        assert_eq!(m.counter_value("cache.result_evict"), 1);
+        assert!(m.gauge_value("cache.result_bytes") <= 2 * sz as i64 + 1);
+        // cached bytes are byte-identical to what was inserted
+        let got = cache.lookup_result(&key(1), &Vec::new()).unwrap();
+        assert_eq!(got.encode(), b.encode());
+    }
+
+    #[test]
+    fn oversized_entry_is_refused_not_wedged() {
+        let b = batch(512);
+        let cache = ServingCache::new(1024, 0, None); // entry > whole budget
+        assert!(b.encoded_len() > 1024);
+        cache.insert_result(key(1), &b, Vec::new());
+        assert!(cache.lookup_result(&key(1), &Vec::new()).is_none());
+        assert_eq!(cache.metrics().counter_value("cache.result_refused"), 1);
+        assert_eq!(cache.metrics().gauge_value("cache.result_bytes"), 0);
+    }
+
+    #[test]
+    fn version_mismatch_invalidates_on_lookup() {
+        let b = batch(8);
+        let cache = ServingCache::new(1 << 20, 0, None);
+        let filled = vec![("t".to_string(), 3u64)];
+        cache.insert_result(key(1), &b, filled.clone());
+        assert!(cache.lookup_result(&key(1), &filled).is_some());
+        let bumped = vec![("t".to_string(), 4u64)];
+        assert!(cache.lookup_result(&key(1), &bumped).is_none());
+        assert_eq!(cache.metrics().counter_value("cache.invalidated"), 1);
+        // entry is gone even for the original stamps
+        assert!(cache.lookup_result(&key(1), &filled).is_none());
+    }
+
+    #[test]
+    fn explicit_table_invalidation_drops_dependents_only() {
+        let b = batch(8);
+        let cache = ServingCache::new(1 << 20, 1 << 20, None);
+        cache.insert_result(key(1), &b, vec![("a".into(), 1)]);
+        cache.insert_result(key(2), &b, vec![("b".into(), 1)]);
+        cache.insert_fragment(key(3), &b, vec![("a".into(), 1), ("b".into(), 1)]);
+        cache.invalidate_table("a");
+        assert!(cache.lookup_result(&key(1), &vec![("a".into(), 1)]).is_none());
+        assert!(cache.lookup_result(&key(2), &vec![("b".into(), 1)]).is_some());
+        assert!(
+            cache
+                .lookup_fragment(&key(3), &vec![("a".into(), 1), ("b".into(), 1)])
+                .is_none(),
+            "fragment touching table a must go too"
+        );
+        assert_eq!(cache.metrics().counter_value("cache.invalidated"), 2);
+    }
+
+    #[test]
+    fn shared_governor_refusal_evicts_the_inserting_level() {
+        let b = batch(64);
+        let sz = b.encoded_len();
+        // per-level budgets sum to the governor capacity; fill results
+        // to its budget, then fragments up to theirs — every insert
+        // must land without wedging
+        let cache = ServingCache::new(2 * sz, 2 * sz, None);
+        cache.insert_result(key(1), &b, Vec::new());
+        cache.insert_result(key(2), &b, Vec::new());
+        cache.insert_fragment(key(3), &b, Vec::new());
+        cache.insert_fragment(key(4), &b, Vec::new());
+        // both levels full; next fragment insert evicts a fragment
+        cache.insert_fragment(key(5), &b, Vec::new());
+        assert!(cache.lookup_fragment(&key(3), &Vec::new()).is_none());
+        assert!(cache.lookup_result(&key(1), &Vec::new()).is_some());
+        assert!(
+            cache.metrics().counter_value("cache.fragment_evict") >= 1,
+            "refused grow must evict, not wedge"
+        );
+    }
+
+    #[test]
+    fn fragment_insert_returns_encoded_bytes() {
+        let b = batch(16);
+        let cache = ServingCache::new(0, 1 << 20, None);
+        let data = cache.insert_fragment(key(1), &b, Vec::new());
+        assert_eq!(*data, b.encode());
+        let hit = cache.lookup_fragment(&key(1), &Vec::new()).unwrap();
+        assert_eq!(*hit, b.encode());
+        assert!(cache.fragments_enabled());
+        assert!(!ServingCache::new(1 << 20, 0, None).fragments_enabled());
+    }
+
+    #[test]
+    fn plan_memo_hits_and_respects_settings() {
+        use crate::exec::plan::{AggFn, AggSpec};
+        let cache = ServingCache::new(1 << 20, 0, None);
+        let planner = crate::planner::Planner::new(2);
+        let q = canonicalize(
+            &Logical::scan("t", &["a", "b"])
+                .aggregate("a", vec![AggSpec::new(AggFn::Sum, "b")]),
+        );
+        let p1 = cache.plan_for(&planner, &q).unwrap();
+        let p2 = cache.plan_for(&planner, &q).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2), "second compile memoized");
+        assert_eq!(cache.metrics().counter_value("cache.plan_memo_hit"), 1);
+        // different worker count → different key → fresh plan
+        let planner4 = crate::planner::Planner::new(4);
+        let p3 = cache.plan_for(&planner4, &q).unwrap();
+        assert!(!Arc::ptr_eq(&p1, &p3));
+        assert_eq!(p1.encode(), p2.encode());
+    }
+}

@@ -12,8 +12,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::cache::{canonicalize, CanonicalKey, ServingCache};
 use crate::config::{TransportKind, WorkerConfig};
 use crate::exec::operators::sort::sort_batch;
+use crate::exec::plan::OpSpec;
 use crate::exec::PhysicalPlan;
 use crate::network::{Endpoint, InprocHub, TcpCluster};
 use crate::planner::{gather_mode, GatherMode, Logical, Planner};
@@ -64,6 +66,9 @@ pub struct Cluster {
     pub workers: Vec<Arc<Worker>>,
     query_seq: AtomicU64,
     pub config: Arc<WorkerConfig>,
+    /// The store the cluster reads — the gateway's serving cache
+    /// validates entries against its mutation clock.
+    pub store: Arc<dyn ObjectStore>,
 }
 
 impl Cluster {
@@ -113,7 +118,7 @@ impl Cluster {
                 Worker::start(id, config.clone(), store.clone(), ep, registry.clone())
             })
             .collect::<Result<Vec<_>>>()?;
-        Ok(Cluster { workers, query_seq: AtomicU64::new(1), config })
+        Ok(Cluster { workers, query_seq: AtomicU64::new(1), config, store })
     }
 
     /// Run one physical plan across all workers; gather per `mode`.
@@ -235,30 +240,139 @@ fn gather(plan: &PhysicalPlan, parts: Vec<RecordBatch>) -> Result<RecordBatch> {
     })
 }
 
-/// Gateway: Planner + Cluster.
+/// Gateway: Planner + Cluster + serving cache (see [`crate::cache`]).
 pub struct Gateway {
     pub cluster: Cluster,
     pub planner: Planner,
     /// Per-query wall-clock timeout.
     pub timeout: Duration,
+    /// Two-level result/fragment cache; `None` when both budgets are 0
+    /// (the default) — submit then always executes.
+    pub cache: Option<ServingCache>,
 }
 
 impl Gateway {
     pub fn new(cluster: Cluster) -> Gateway {
         let planner = Planner::new(cluster.config.num_workers);
-        Gateway { cluster, planner, timeout: Duration::from_secs(300) }
+        let (rb, fb) =
+            (cluster.config.result_cache_bytes, cluster.config.fragment_cache_bytes);
+        let cache = if rb + fb > 0 {
+            Some(ServingCache::new(rb, fb, cluster.store.source_version()))
+        } else {
+            None
+        };
+        Gateway { cluster, planner, timeout: Duration::from_secs(300), cache }
     }
 
-    /// Plan + execute a logical query.
+    /// Plan + execute a logical query. With the serving cache enabled:
+    /// canonicalize → memoized compile → exact-result lookup (a warm
+    /// hit returns with zero cluster tasks) → fragment serve/fill →
+    /// execute → fill the result cache. The *canonical* form is what
+    /// executes, so cached bytes are byte-identical to a cache-off run
+    /// of any query in the same equivalence class.
     pub fn submit(&self, q: &Logical) -> Result<QueryResult> {
-        let plan = self.planner.plan(q)?;
-        self.cluster.run_plan(&plan, self.timeout)
+        let Some(cache) = &self.cache else {
+            let plan = self.planner.plan(q)?;
+            return self.cluster.run_plan(&plan, self.timeout);
+        };
+        let start = Instant::now();
+        let canon = canonicalize(q);
+        let plan = cache.plan_for(&self.planner, &canon)?;
+        let key = CanonicalKey::of_plan(&plan);
+        let versions = cache.version_snapshot(&canon.tables());
+        if let Some(batch) = cache.lookup_result(&key, &versions) {
+            // zero tasks executed: the cluster never sees the query
+            return Ok(QueryResult {
+                batch,
+                elapsed: start.elapsed(),
+                worker_stats: Vec::new(),
+            });
+        }
+        let res = self.execute_with_fragments(cache, &canon, &plan)?;
+        cache.insert_result(key, &res.batch, versions);
+        Ok(res)
     }
 
-    /// Execute a pre-built physical plan (bench harness path).
-    pub fn submit_plan(&self, plan: &PhysicalPlan) -> Result<QueryResult> {
-        self.cluster.run_plan(plan, self.timeout)
+    /// Serve cached fragments into the plan (filling missing ones) and
+    /// run it. Fragment-hit plans execute strictly fewer cluster tasks
+    /// than cold ones: the scan→filter→agg pipeline is replaced by a
+    /// single fragment emit per worker.
+    fn execute_with_fragments(
+        &self,
+        cache: &ServingCache,
+        canon: &Logical,
+        plan: &PhysicalPlan,
+    ) -> Result<QueryResult> {
+        if !cache.fragments_enabled() {
+            return self.cluster.run_plan(plan, self.timeout);
+        }
+        let mut rewritten = canon.clone();
+        let mut rewrote = false;
+        for frontier in canon.fragment_frontiers() {
+            let fkey = CanonicalKey::of_logical(frontier);
+            let fversions = cache.version_snapshot(&frontier.tables());
+            let data = match cache.lookup_fragment(&fkey, &fversions) {
+                Some(d) => d,
+                None => {
+                    // fill: run the frontier as its own query and keep
+                    // the materialized batch for future drill-downs
+                    let fplan = cache.plan_for(&self.planner, frontier)?;
+                    let fres = self.cluster.run_plan(&fplan, self.timeout)?;
+                    let data = cache.insert_fragment(fkey, &fres.batch, fversions);
+                    if frontier == canon {
+                        // the whole query IS the frontier — done
+                        return Ok(fres);
+                    }
+                    data
+                }
+            };
+            rewritten = rewritten.substitute(frontier, &data);
+            rewrote = true;
+        }
+        if rewrote {
+            let plan = self.planner.plan(&rewritten)?;
+            self.cluster.run_plan(&plan, self.timeout)
+        } else {
+            self.cluster.run_plan(plan, self.timeout)
+        }
     }
+
+    /// Execute a pre-built physical plan (bench harness path). Fronted
+    /// by the exact-result cache only — fragments need the logical
+    /// tree.
+    pub fn submit_plan(&self, plan: &PhysicalPlan) -> Result<QueryResult> {
+        let Some(cache) = &self.cache else {
+            return self.cluster.run_plan(plan, self.timeout);
+        };
+        let start = Instant::now();
+        let key = CanonicalKey::of_plan(plan);
+        let versions = cache.version_snapshot(&plan_tables(plan));
+        if let Some(batch) = cache.lookup_result(&key, &versions) {
+            return Ok(QueryResult {
+                batch,
+                elapsed: start.elapsed(),
+                worker_stats: Vec::new(),
+            });
+        }
+        let res = self.cluster.run_plan(plan, self.timeout)?;
+        cache.insert_result(key, &res.batch, versions);
+        Ok(res)
+    }
+}
+
+/// Tables a physical plan scans (version-stamp dependencies).
+fn plan_tables(plan: &PhysicalPlan) -> Vec<String> {
+    let mut out: Vec<String> = plan
+        .nodes
+        .iter()
+        .filter_map(|n| match &n.op {
+            OpSpec::Scan { table, .. } => Some(table.clone()),
+            _ => None,
+        })
+        .collect();
+    out.sort_unstable();
+    out.dedup();
+    out
 }
 
 /// The user-facing handle.
@@ -418,6 +532,163 @@ mod tests {
             let r = client.query(&q).unwrap();
             assert_eq!(r.batch.rows(), 50);
         }
+    }
+
+    /// Integer-valued fact table (exact f64 aggregation ⇒ cached bytes
+    /// can be compared bit-for-bit across runs).
+    fn int_store(rows: usize) -> Arc<SimObjectStore> {
+        let store = SimObjectStore::in_memory(&SimContext::test());
+        let mut rng = Rng::new(11);
+        let schema = Schema::new(vec![
+            Field::new("k", DType::Int64),
+            Field::new("v", DType::Int64),
+        ]);
+        for f in 0..2 {
+            let batch = RecordBatch::new(vec![
+                Column::i64("k", (0..rows).map(|_| rng.gen_i64(0, 19)).collect()),
+                Column::i64("v", (0..rows).map(|_| rng.gen_i64(0, 999)).collect()),
+            ])
+            .unwrap();
+            let mut w = FileWriter::new(schema.clone(), Codec::Zstd { level: 1 }, 256);
+            w.write(batch).unwrap();
+            store
+                .put(&format!("fact/{f}.ths"), &w.finish().unwrap())
+                .unwrap();
+        }
+        store
+    }
+
+    fn cached_cfg(workers: usize) -> WorkerConfig {
+        WorkerConfig {
+            result_cache_bytes: 4 << 20,
+            fragment_cache_bytes: 4 << 20,
+            ..cfg(workers)
+        }
+    }
+
+    fn total_tasks(r: &QueryResult) -> u64 {
+        r.worker_stats.iter().map(|s| s.tasks_executed).sum()
+    }
+
+    fn drill(lo: i64, hi: i64) -> Logical {
+        Logical::scan("fact", &["k", "v"])
+            .filter(Pred::RangeI64 { col: "k".into(), lo, hi })
+            .aggregate("k", vec![AggSpec::new(AggFn::Sum, "v")])
+            .sort("k", false)
+    }
+
+    #[test]
+    fn warm_exact_hit_executes_zero_cluster_tasks() {
+        let client = connect(cached_cfg(2), int_store(400), None).unwrap();
+        let cold = client.query(&drill(0, 20)).unwrap();
+        assert!(total_tasks(&cold) > 0, "cold run uses the cluster");
+        let warm = client.query(&drill(0, 20)).unwrap();
+        assert_eq!(total_tasks(&warm), 0, "warm hit must not touch the cluster");
+        assert_eq!(
+            warm.batch.encode(),
+            cold.batch.encode(),
+            "cached bytes identical to the execution that filled them"
+        );
+        let m = client.gateway().cache.as_ref().unwrap().metrics();
+        assert_eq!(m.counter_value("cache.result_hit"), 1);
+    }
+
+    #[test]
+    fn equivalent_rewrites_share_one_cache_entry() {
+        let client = connect(cached_cfg(1), int_store(300), None).unwrap();
+        let p1 = Pred::RangeI64 { col: "k".into(), lo: 0, hi: 20 };
+        let p2 = Pred::RangeI64 { col: "v".into(), lo: 0, hi: 1000 };
+        let a = Logical::scan("fact", &["k", "v"])
+            .filter(p1.clone().and(p2.clone()))
+            .aggregate("k", vec![AggSpec::new(AggFn::Sum, "v")])
+            .sort("k", false);
+        let b = Logical::scan("fact", &["v", "k"]) // swapped cols (absorbed)
+            .filter(p2.and(p1)) // swapped conjuncts
+            .aggregate("k", vec![AggSpec::new(AggFn::Sum, "v")])
+            .sort("k", false);
+        let ra = client.query(&a).unwrap();
+        let rb = client.query(&b).unwrap();
+        assert_eq!(total_tasks(&rb), 0, "rewrite must hit a's entry");
+        assert_eq!(ra.batch.encode(), rb.batch.encode());
+    }
+
+    #[test]
+    fn fragment_hit_runs_strictly_fewer_tasks_and_same_bytes() {
+        let store = int_store(400);
+        // cache-off baseline for byte-identity
+        let plain = connect(cfg(2), store.clone(), None).unwrap();
+        let cached = connect(cached_cfg(2), store, None).unwrap();
+        let q = drill(0, 20);
+        let baseline = plain.query(&q).unwrap();
+        let cold = cached.query(&q).unwrap(); // fills fragment + result
+        assert_eq!(cold.batch.encode(), baseline.batch.encode());
+        // a *different* query over the same frontier: limit forces a
+        // distinct result-cache key, the shared agg fragment serves it
+        let drilldown = drill(0, 20).limit(5);
+        let plain_dd = plain.query(&drilldown).unwrap();
+        let warm_dd = cached.query(&drilldown).unwrap();
+        assert_eq!(warm_dd.batch.encode(), plain_dd.batch.encode());
+        assert!(
+            total_tasks(&warm_dd) > 0,
+            "fragment serving still runs the plan above the frontier"
+        );
+        assert!(
+            total_tasks(&warm_dd) < total_tasks(&plain_dd),
+            "fragment hit must run strictly fewer tasks ({} vs {})",
+            total_tasks(&warm_dd),
+            total_tasks(&plain_dd)
+        );
+        let m = cached.gateway().cache.as_ref().unwrap().metrics();
+        assert!(m.counter_value("cache.fragment_hit") >= 1);
+    }
+
+    #[test]
+    fn datasource_write_invalidates_cached_results() {
+        let store = int_store(200);
+        let client = connect(cached_cfg(1), store.clone(), None).unwrap();
+        let q = drill(0, 20);
+        let before = client.query(&q).unwrap();
+        assert_eq!(total_tasks(&client.query(&q).unwrap()), 0, "warm");
+        // append a new file to the fact table: version bump
+        let schema = Schema::new(vec![
+            Field::new("k", DType::Int64),
+            Field::new("v", DType::Int64),
+        ]);
+        let batch = RecordBatch::new(vec![
+            Column::i64("k", vec![0; 100]),
+            Column::i64("v", vec![7; 100]),
+        ])
+        .unwrap();
+        let mut w = FileWriter::new(schema, Codec::Zstd { level: 1 }, 256);
+        w.write(batch).unwrap();
+        store.put("fact/2.ths", &w.finish().unwrap()).unwrap();
+        let after = client.query(&q).unwrap();
+        assert!(total_tasks(&after) > 0, "stale entry must not serve");
+        assert_ne!(
+            after.batch.encode(),
+            before.batch.encode(),
+            "fresh bytes reflect the new data"
+        );
+        let k0_sum = |r: &QueryResult| {
+            let keys = r.batch.column("k").unwrap().data.as_i64().unwrap().to_vec();
+            let sums = r.batch.column("sum_v").unwrap().data.as_f64().unwrap().to_vec();
+            sums[keys.iter().position(|&k| k == 0).unwrap()]
+        };
+        assert_eq!(k0_sum(&after), k0_sum(&before) + 700.0);
+        let m = client.gateway().cache.as_ref().unwrap().metrics();
+        assert!(m.counter_value("cache.invalidated") >= 1);
+    }
+
+    #[test]
+    fn submit_plan_is_fronted_by_the_result_cache() {
+        let client = connect(cached_cfg(1), int_store(200), None).unwrap();
+        let gw = client.gateway();
+        let plan = gw.planner.plan(&canonicalize(&drill(0, 20))).unwrap();
+        let cold = gw.submit_plan(&plan).unwrap();
+        assert!(total_tasks(&cold) > 0);
+        let warm = gw.submit_plan(&plan).unwrap();
+        assert_eq!(total_tasks(&warm), 0);
+        assert_eq!(warm.batch.encode(), cold.batch.encode());
     }
 
     #[test]

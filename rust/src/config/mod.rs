@@ -24,6 +24,21 @@
 //! `exchange_initial_credits` is the per-destination startup window of
 //! data frames a sender may have in flight before the receiver's first
 //! credit grant arrives — the common (keeping-up) case never stalls.
+//!
+//! ## Serving-layer cache knobs
+//!
+//! The gateway's two-level cache (see [`crate::cache`]) is sized by two
+//! byte budgets, both defaulting to **0 = off** so nothing changes for
+//! existing deployments unless opted in:
+//!
+//! | knob                   | default | meaning                                  |
+//! |------------------------|---------|------------------------------------------|
+//! | `result_cache_bytes`   | 0 (off) | exact-result LRU budget at the gateway   |
+//! | `fragment_cache_bytes` | 0 (off) | materialized scan→filter→agg fragments   |
+//!
+//! Nonzero budgets must be at least 1 KiB (anything smaller could never
+//! admit an entry). Cache bytes are accounted against a gateway-side
+//! memory governor; refused grows evict LRU entries rather than wedge.
 
 pub mod toml_lite;
 
@@ -171,6 +186,16 @@ pub struct WorkerConfig {
     /// could never send the first frame). Default 32.
     pub exchange_initial_credits: usize,
 
+    // ---- serving-layer caches (gateway-side, see `crate::cache`)
+    /// Exact-result cache budget, bytes. `0` (the default) disables the
+    /// result cache entirely — `Gateway::submit` always executes.
+    pub result_cache_bytes: usize,
+    /// Fragment cache budget, bytes. `0` (the default) disables
+    /// fragment extraction/serving. Both caches account their bytes in
+    /// one gateway-side [`crate::memory::MemoryGovernor`]; a refused
+    /// reservation grow evicts LRU entries, it never wedges a query.
+    pub fragment_cache_bytes: usize,
+
     // ---- network executor
     /// Compress batches before sending (Fig-4 B, E toggles this).
     pub net_compression: Option<Codec>,
@@ -223,6 +248,8 @@ impl Default for WorkerConfig {
             exchange_flush_floor_bytes: 64 << 10,
             exchange_flush_ceiling_bytes: 4 << 20,
             exchange_initial_credits: 32,
+            result_cache_bytes: 0,
+            fragment_cache_bytes: 0,
             net_compression: Some(Codec::Zstd { level: 1 }),
             transport: TransportKind::Inproc,
             max_frame_bytes: crate::network::frame::DEFAULT_MAX_FRAME_BYTES,
@@ -352,6 +379,8 @@ impl WorkerConfig {
         set_usize!(exchange_flush_floor_bytes);
         set_usize!(exchange_flush_ceiling_bytes);
         set_usize!(exchange_initial_credits);
+        set_usize!(result_cache_bytes);
+        set_usize!(fragment_cache_bytes);
         if let Some(v) = get("pinned_pool") {
             self.pinned_pool = v.as_bool()?;
         }
@@ -539,6 +568,18 @@ impl WorkerConfig {
                  could never send the first data frame)"
                     .into(),
             ));
+        }
+        for (name, bytes) in [
+            ("result_cache_bytes", self.result_cache_bytes),
+            ("fragment_cache_bytes", self.fragment_cache_bytes),
+        ] {
+            if bytes != 0 && bytes < 1024 {
+                return Err(Error::Config(format!(
+                    "{name} ({bytes}) must be 0 (cache off) or >= 1 KiB: a \
+                     smaller budget cannot hold any result and every insert \
+                     would be refused"
+                )));
+            }
         }
         if self.pinned_pool && (self.pinned_buf_size == 0 || self.pinned_buffers == 0) {
             return Err(Error::Config("pinned pool dimensions must be >= 1".into()));
@@ -762,6 +803,28 @@ mod tests {
         .unwrap();
         let mut cfg = WorkerConfig::default();
         assert!(cfg.apply(&doc).is_err());
+    }
+
+    #[test]
+    fn cache_knobs_default_off_and_validate() {
+        let cfg = WorkerConfig::default();
+        assert_eq!(cfg.result_cache_bytes, 0, "serving cache off by default");
+        assert_eq!(cfg.fragment_cache_bytes, 0);
+        cfg.validate().unwrap();
+        let doc = TomlLite::parse(
+            "result_cache_bytes = 1048576\nfragment_cache_bytes = 2097152\n",
+        )
+        .unwrap();
+        let mut cfg = WorkerConfig::default();
+        cfg.apply(&doc).unwrap();
+        assert_eq!(cfg.result_cache_bytes, 1 << 20);
+        assert_eq!(cfg.fragment_cache_bytes, 2 << 20);
+        let mut cfg = WorkerConfig::default();
+        cfg.result_cache_bytes = 100; // nonzero but below any useful size
+        assert!(cfg.validate().is_err());
+        let mut cfg = WorkerConfig::default();
+        cfg.fragment_cache_bytes = 1;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -19,8 +19,8 @@
 use std::sync::Arc;
 
 use crate::exec::operators::{
-    ExchangeOp, FilterOp, HashAggOp, HashJoinOp, LimitOp, Operator, ProjectOp, ScanOp,
-    SortOp,
+    ExchangeOp, FilterOp, FragmentOp, HashAggOp, HashJoinOp, LimitOp, Operator,
+    ProjectOp, ScanOp, SortOp,
 };
 use crate::exec::plan::{ExchangeRole, OpSpec, PhysicalPlan};
 use crate::exec::{Task, WorkerCtx};
@@ -237,6 +237,12 @@ impl QueryDag {
                     outputs[node.inputs[0]].clone(),
                     out.clone(),
                     *n,
+                )),
+                OpSpec::Fragment { data } => Arc::new(FragmentOp::new(
+                    node.id,
+                    prio,
+                    out.clone(),
+                    data.clone(),
                 )),
             };
             outputs.push(out);

@@ -1,0 +1,141 @@
+//! Fragment operator: materializes a cache-resident subplan result
+//! (serving layer, see [`crate::cache`]) into the DAG in place of the
+//! scan→filter→agg pipeline that originally produced it.
+//!
+//! The fragment bytes travel inside the plan ([`OpSpec::Fragment`]);
+//! every worker holds the full batch but emits only its disjoint row
+//! slice `[wid·n/W, (wid+1)·n/W)`, so downstream operators and the
+//! client-side gather see exactly one copy of every row — the same
+//! contract a Scan's file assignment provides.
+//!
+//! [`OpSpec::Fragment`]: crate::exec::plan::OpSpec::Fragment
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::exec::operators::{OpCommon, Operator};
+use crate::exec::task::Task;
+use crate::exec::WorkerCtx;
+use crate::memory::BatchHolder;
+use crate::types::RecordBatch;
+use crate::Result;
+
+pub struct FragmentOp {
+    common: Arc<OpCommon>,
+    output: BatchHolder,
+    /// Encoded [`RecordBatch`] (the gathered fragment result).
+    data: Arc<Vec<u8>>,
+    issued: AtomicBool,
+}
+
+impl FragmentOp {
+    pub fn new(
+        id: usize,
+        base_priority: i64,
+        output: BatchHolder,
+        data: Arc<Vec<u8>>,
+    ) -> FragmentOp {
+        FragmentOp {
+            common: Arc::new(OpCommon::new(id, base_priority, 1)),
+            output,
+            data,
+            issued: AtomicBool::new(false),
+        }
+    }
+
+    /// This worker's half-open row range of an `n`-row fragment.
+    pub fn slice_bounds(n: usize, wid: usize, workers: usize) -> (usize, usize) {
+        (wid * n / workers, (wid + 1) * n / workers)
+    }
+}
+
+impl Operator for FragmentOp {
+    fn id(&self) -> usize {
+        self.common.id
+    }
+
+    fn name(&self) -> &'static str {
+        "fragment"
+    }
+
+    fn poll(&self, ctx: &WorkerCtx) -> Result<Vec<Task>> {
+        if self.common.is_done() {
+            return Ok(Vec::new());
+        }
+        let mut tasks = Vec::new();
+        if !self.issued.swap(true, Ordering::AcqRel) {
+            self.common.issue();
+            let output = self.output.clone();
+            let data = self.data.clone();
+            let wid = ctx.worker_id;
+            let workers = ctx.num_workers();
+            let run = self.common.track(move |_ctx| {
+                let batch = RecordBatch::decode(&data)?;
+                let (lo, hi) = FragmentOp::slice_bounds(batch.rows(), wid, workers);
+                if hi > lo {
+                    output.push_batch(batch.slice(lo, hi - lo)?)?;
+                }
+                output.finish();
+                Ok(())
+            });
+            tasks.push(Task::new(self.common.id, self.common.base_priority, run));
+        }
+        if self.issued.load(Ordering::Acquire) && self.common.inflight() == 0 {
+            self.common.mark_done();
+        }
+        Ok(tasks)
+    }
+
+    fn is_done(&self) -> bool {
+        self.common.is_done()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::batch_holder::MemEnv;
+    use crate::types::Column;
+
+    fn drive(op: &dyn Operator, ctx: &WorkerCtx) {
+        for _ in 0..50 {
+            for t in op.poll(ctx).unwrap() {
+                (t.run)(ctx).unwrap();
+            }
+            if op.is_done() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn slices_cover_rows_disjointly() {
+        for n in [0usize, 1, 7, 100] {
+            for workers in [1usize, 2, 3, 8] {
+                let mut covered = 0;
+                for w in 0..workers {
+                    let (lo, hi) = FragmentOp::slice_bounds(n, w, workers);
+                    assert!(lo <= hi && hi <= n);
+                    assert_eq!(lo, covered, "gap/overlap at worker {w}");
+                    covered = hi;
+                }
+                assert_eq!(covered, n, "rows dropped for n={n} W={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn emits_this_workers_slice_and_finishes() {
+        let ctx = WorkerCtx::test(); // worker 0 of 1
+        let env = MemEnv::test(8 << 20);
+        let out = BatchHolder::new("out", env);
+        let batch =
+            RecordBatch::new(vec![Column::i64("k", (0..10).collect())]).unwrap();
+        let op = FragmentOp::new(0, 0, out.clone(), Arc::new(batch.encode()));
+        drive(&op, &ctx);
+        assert!(op.is_done());
+        let got = out.pop_device().unwrap().unwrap();
+        assert_eq!(got.batch.encode(), batch.encode());
+        assert!(out.is_exhausted());
+    }
+}

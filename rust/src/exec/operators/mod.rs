@@ -11,6 +11,7 @@
 pub mod agg;
 pub mod exchange;
 pub mod filter;
+pub mod fragment;
 pub mod join;
 pub mod kernels;
 pub mod scan;
@@ -19,6 +20,7 @@ pub mod sort;
 pub use agg::HashAggOp;
 pub use exchange::{ExchangeOp, ShuffleCoalescer};
 pub use filter::{FilterOp, ProjectOp};
+pub use fragment::FragmentOp;
 pub use join::HashJoinOp;
 pub use scan::ScanOp;
 pub use sort::{LimitOp, SortOp};

@@ -5,6 +5,8 @@
 //! of [`PlanNode`]s in topological order (inputs precede users); binary
 //! serde lets the Gateway ship it to workers in a control frame.
 
+use std::sync::Arc;
+
 use crate::types::schema::DType;
 use crate::util::bytes::{Reader, Writer};
 use crate::{Error, Result};
@@ -195,6 +197,12 @@ pub enum OpSpec {
     Sort { by: String, desc: bool },
     /// Keep the first `n` rows.
     Limit { n: u64 },
+    /// Cache-resident materialized subplan (serving layer): `data` is an
+    /// encoded [`crate::types::RecordBatch`] — the gathered output of a
+    /// previously executed scan→filter→agg fragment. A leaf like Scan;
+    /// each worker emits its disjoint row slice so downstream operators
+    /// (and the client gather) see exactly one copy of every row.
+    Fragment { data: Arc<Vec<u8>> },
 }
 
 impl OpSpec {
@@ -208,13 +216,14 @@ impl OpSpec {
             OpSpec::HashJoin { .. } => "hash_join",
             OpSpec::Sort { .. } => "sort",
             OpSpec::Limit { .. } => "limit",
+            OpSpec::Fragment { .. } => "fragment",
         }
     }
 
     /// How many inputs this operator requires.
     pub fn arity(&self) -> usize {
         match self {
-            OpSpec::Scan { .. } => 0,
+            OpSpec::Scan { .. } | OpSpec::Fragment { .. } => 0,
             OpSpec::HashJoin { .. } => 2,
             _ => 1,
         }
@@ -281,6 +290,10 @@ impl OpSpec {
                 w.u8(7);
                 w.u64(*n);
             }
+            OpSpec::Fragment { data } => {
+                w.u8(8);
+                w.bytes(data);
+            }
         }
     }
 
@@ -329,6 +342,7 @@ impl OpSpec {
             },
             6 => OpSpec::Sort { by: r.str()?, desc: r.u8()? != 0 },
             7 => OpSpec::Limit { n: r.u64()? },
+            8 => OpSpec::Fragment { data: Arc::new(r.bytes()?.to_vec()) },
             t => return Err(Error::Format(format!("bad opspec tag {t}"))),
         })
     }
@@ -560,6 +574,21 @@ mod tests {
         let buf = p.encode();
         let got = PhysicalPlan::decode(&buf).unwrap();
         assert_eq!(got, p);
+    }
+
+    #[test]
+    fn fragment_roundtrips_and_is_a_leaf() {
+        let mut p = PhysicalPlan::new();
+        let f = p.add(
+            OpSpec::Fragment { data: Arc::new(vec![1u8, 2, 3, 255]) },
+            vec![],
+        );
+        p.add(OpSpec::Limit { n: 2 }, vec![f]);
+        p.validate().unwrap();
+        let got = PhysicalPlan::decode(&p.encode()).unwrap();
+        assert_eq!(got, p);
+        assert_eq!(p.nodes[0].spec.arity(), 0);
+        assert_eq!(p.nodes[0].spec.name(), "fragment");
     }
 
     #[test]

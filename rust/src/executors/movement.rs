@@ -412,6 +412,16 @@ impl DataMovementExecutor {
         if let Some(pool) = &self.env.pinned {
             pool.publish_metrics(&self.metrics);
         }
+        // Idle sweeps (no pressure) are the natural moment to compact
+        // mostly-dead spill segments — writers aren't contending for
+        // the segments lock, and the reclaimed disk shrinks the next
+        // demotion's seek span.
+        if snap.is_empty() {
+            let _ = self.env.spill.compact();
+            self.metrics
+                .gauge("spill.compacted_bytes")
+                .set(self.env.spill.compacted_bytes() as i64);
+        }
         let threshold =
             (self.env.arena.capacity() as f64 * self.cfg.spill_watermark) as usize;
         let overage = self.env.arena.in_use().saturating_sub(threshold);

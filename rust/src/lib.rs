@@ -24,6 +24,7 @@
 //! bandwidth+latency simulator (`sim` module). See DESIGN.md
 //! §Hardware-Adaptation for the mapping.
 
+pub mod cache;
 pub mod cli;
 pub mod cluster;
 pub mod config;

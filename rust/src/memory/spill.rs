@@ -14,12 +14,22 @@
 //! Segments rotate at a configurable size; a sealed segment whose
 //! payloads have all been freed is deleted on the spot, so long-running
 //! workers reclaim disk incrementally instead of only at drop.
+//!
+//! Long-lived *mostly*-dead segments (a few stubborn payloads pinning
+//! hundreds of megabytes of dead file) are handled by
+//! [`SpillStore::compact`]: live extents are copied forward into the
+//! current segment, a remap entry redirects the old slot (holders keep
+//! their `SpillSlot` by value — every read/free resolves through the
+//! remap first), and the old file is deleted. Compaction runs under the
+//! segments write lock, so in-flight writers and readers (who hold the
+//! read side across their positional I/O resolution) are excluded.
 
+use std::collections::HashMap;
 use std::fs::{File, OpenOptions};
 use std::os::unix::fs::FileExt;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::memory::pinned::{PinnedPool, PinnedSlab, SlabWriter};
 use crate::{Error, Result};
@@ -45,6 +55,9 @@ struct Segment {
     write_off: AtomicU64,
     live_bytes: AtomicU64,
     reclaimed: AtomicBool,
+    /// Live payload extents (`offset → len`) — what compaction copies
+    /// forward. Inserted on write, removed on free/move.
+    slots: Mutex<HashMap<u64, u64>>,
 }
 
 /// Segmented spill-file manager.
@@ -55,10 +68,15 @@ pub struct SpillStore {
     /// Append-only: slot indices stay valid after rotation; reclaimed
     /// segments keep their entry (file deleted, flag set).
     segments: RwLock<Vec<Arc<Segment>>>,
+    /// Where a compacted payload went: `(old segment, old offset)` →
+    /// its new slot. Chains (a payload moved twice) are followed by
+    /// [`SpillStore::resolve_locked`]; a freed slot drops its chain.
+    remap: RwLock<HashMap<(u32, u64), SpillSlot>>,
     live_bytes: AtomicU64,
     spill_ops: AtomicU64,
     reload_ops: AtomicU64,
     rotations: AtomicU64,
+    compacted: AtomicU64,
 }
 
 impl SpillStore {
@@ -84,10 +102,12 @@ impl SpillStore {
             worker_id,
             segment_bytes: segment_bytes.max(1),
             segments: RwLock::new(vec![Arc::new(first)]),
+            remap: RwLock::new(HashMap::new()),
             live_bytes: AtomicU64::new(0),
             spill_ops: AtomicU64::new(0),
             reload_ops: AtomicU64::new(0),
             rotations: AtomicU64::new(0),
+            compacted: AtomicU64::new(0),
         })
     }
 
@@ -120,6 +140,7 @@ impl SpillStore {
             write_off: AtomicU64::new(0),
             live_bytes: AtomicU64::new(0),
             reclaimed: AtomicBool::new(false),
+            slots: Mutex::new(HashMap::new()),
         })
     }
 
@@ -147,6 +168,11 @@ impl SpillStore {
 
     pub fn rotations(&self) -> u64 {
         self.rotations.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime bytes copied forward by [`SpillStore::compact`].
+    pub fn compacted_bytes(&self) -> u64 {
+        self.compacted.load(Ordering::Relaxed)
     }
 
     /// Rotate if `observed_last` is still the last segment (another
@@ -204,6 +230,7 @@ impl SpillStore {
                         at += p.len() as u64;
                     }
                     seg.live_bytes.fetch_add(len, Ordering::AcqRel);
+                    seg.slots.lock().unwrap().insert(offset, len);
                     self.live_bytes.fetch_add(len, Ordering::Relaxed);
                     self.spill_ops.fetch_add(1, Ordering::Relaxed);
                     return Ok(SpillSlot { segment: idx as u32, offset, len });
@@ -217,13 +244,26 @@ impl SpillStore {
         }
     }
 
-    /// The live segment behind a slot, with reclaim/bounds checks.
-    fn checked_segment(&self, slot: SpillSlot) -> Result<Arc<Segment>> {
-        let seg = self
-            .segments
-            .read()
-            .unwrap()
-            .get(slot.segment as usize)
+    /// Follow the compaction remap chain. Callers must hold (at least)
+    /// the segments read lock so compaction cannot move the resolved
+    /// payload between resolution and use.
+    fn resolve_locked(&self, slot: SpillSlot) -> SpillSlot {
+        let remap = self.remap.read().unwrap();
+        let mut cur = slot;
+        while let Some(next) = remap.get(&(cur.segment, cur.offset)) {
+            cur = *next;
+        }
+        cur
+    }
+
+    /// The live segment behind a slot (post-remap), with reclaim/bounds
+    /// checks. Returns the resolved slot — file offsets must come from
+    /// it, not from the caller's (possibly pre-compaction) handle.
+    fn checked_segment(&self, slot: SpillSlot) -> Result<(Arc<Segment>, SpillSlot)> {
+        let segs = self.segments.read().unwrap();
+        let resolved = self.resolve_locked(slot);
+        let seg = segs
+            .get(resolved.segment as usize)
             .cloned()
             .ok_or_else(|| {
                 Error::internal(format!("spill slot {slot:?}: no such segment"))
@@ -234,17 +274,17 @@ impl SpillStore {
             )));
         }
         let end = seg.write_off.load(Ordering::Acquire);
-        if slot.offset + slot.len > end {
+        if resolved.offset + resolved.len > end {
             return Err(Error::internal(format!(
-                "spill slot {slot:?} beyond write offset {end}"
+                "spill slot {resolved:?} beyond write offset {end}"
             )));
         }
-        Ok(seg)
+        Ok((seg, resolved))
     }
 
     /// Read a slot back (positional; concurrent with writers).
     pub fn read(&self, slot: SpillSlot) -> Result<Vec<u8>> {
-        let seg = self.checked_segment(slot)?;
+        let (seg, slot) = self.checked_segment(slot)?;
         let mut buf = vec![0u8; slot.len as usize];
         seg.file.read_exact_at(&mut buf, slot.offset)?;
         self.reload_ops.fetch_add(1, Ordering::Relaxed);
@@ -259,7 +299,7 @@ impl SpillStore {
                 "spill peek {skip}+{len} beyond slot {slot:?}"
             )));
         }
-        let seg = self.checked_segment(slot)?;
+        let (seg, slot) = self.checked_segment(slot)?;
         let mut buf = vec![0u8; len];
         seg.file.read_exact_at(&mut buf, slot.offset + skip)?;
         Ok(buf)
@@ -282,7 +322,7 @@ impl SpillStore {
         }
         let n = (slot.len - skip) as usize;
         let mut w = SlabWriter::with_capacity(pool, n)?;
-        let seg = self.checked_segment(slot)?;
+        let (seg, slot) = self.checked_segment(slot)?;
         let base = slot.offset + skip;
         w.fill_positional(n, |off, buf| seg.file.read_exact_at(buf, base + off))?;
         self.reload_ops.fetch_add(1, Ordering::Relaxed);
@@ -294,24 +334,97 @@ impl SpillStore {
     /// while still current is reclaimed by the rotation that seals it.
     pub fn free(&self, slot: SpillSlot) {
         self.live_bytes.fetch_sub(slot.len, Ordering::Relaxed);
-        // Decrement under the read lock: rotation (write lock) then
-        // observes either the pre-free liveness (and this path
-        // reclaims) or the post-free zero (and rotation reclaims) —
-        // never a gap where both skip.
-        let (seg, sealed, before) = {
+        // Resolve + decrement under the read lock: compaction and
+        // rotation (write lock) then observe either the pre-free
+        // liveness (and this path reclaims) or the post-free zero (and
+        // they reclaim) — never a gap where both skip.
+        let (seg, sealed, before, resolved) = {
             let segs = self.segments.read().unwrap();
-            match segs.get(slot.segment as usize) {
-                Some(s) => (
-                    s.clone(),
-                    (slot.segment as usize) < segs.len() - 1,
-                    s.live_bytes.fetch_sub(slot.len, Ordering::AcqRel),
-                ),
+            let resolved = self.resolve_locked(slot);
+            match segs.get(resolved.segment as usize) {
+                Some(s) => {
+                    s.slots.lock().unwrap().remove(&resolved.offset);
+                    (
+                        s.clone(),
+                        (resolved.segment as usize) < segs.len() - 1,
+                        s.live_bytes.fetch_sub(resolved.len, Ordering::AcqRel),
+                        resolved,
+                    )
+                }
                 None => return,
             }
         };
-        if sealed && before == slot.len && !seg.reclaimed.swap(true, Ordering::AcqRel) {
+        // the chain is dead with its payload — stop the remap growing
+        if resolved != slot {
+            let mut remap = self.remap.write().unwrap();
+            let mut k = (slot.segment, slot.offset);
+            while let Some(next) = remap.remove(&k) {
+                k = (next.segment, next.offset);
+            }
+        }
+        if sealed
+            && before == resolved.len
+            && !seg.reclaimed.swap(true, Ordering::AcqRel)
+        {
             let _ = std::fs::remove_file(&seg.path);
         }
+    }
+
+    /// Compact sealed, mostly-dead segments: copy each live extent into
+    /// the current segment, remap the old slots (holders resolve
+    /// through the remap on every read/free), and delete the old file.
+    /// A segment qualifies when less than half of its written bytes are
+    /// still live. Runs under the segments write lock — in-flight
+    /// writers hold the read side across their `pwrite`, so no write
+    /// can land in a segment being retired. Returns bytes moved.
+    pub fn compact(&self) -> Result<u64> {
+        let segs = self.segments.write().unwrap();
+        let last = segs.len() - 1;
+        let target = segs[last].clone();
+        let mut moved_total = 0u64;
+        for (idx, seg) in segs.iter().enumerate().take(last) {
+            if seg.reclaimed.load(Ordering::Acquire) {
+                continue;
+            }
+            let live = seg.live_bytes.load(Ordering::Acquire);
+            let written = seg.write_off.load(Ordering::Acquire);
+            if live == 0 {
+                // fully dead: plain reclaim, nothing to copy
+                if !seg.reclaimed.swap(true, Ordering::AcqRel) {
+                    let _ = std::fs::remove_file(&seg.path);
+                }
+                continue;
+            }
+            if live * 2 > written {
+                continue; // mostly live: copying would churn, not save
+            }
+            let extents: Vec<(u64, u64)> = {
+                let slots = seg.slots.lock().unwrap();
+                slots.iter().map(|(&o, &l)| (o, l)).collect()
+            };
+            let mut remap = self.remap.write().unwrap();
+            for (off, len) in extents {
+                let mut buf = vec![0u8; len as usize];
+                seg.file.read_exact_at(&mut buf, off)?;
+                let dst = target.write_off.fetch_add(len, Ordering::AcqRel);
+                target.file.write_all_at(&buf, dst)?;
+                target.live_bytes.fetch_add(len, Ordering::AcqRel);
+                target.slots.lock().unwrap().insert(dst, len);
+                remap.insert(
+                    (idx as u32, off),
+                    SpillSlot { segment: last as u32, offset: dst, len },
+                );
+                moved_total += len;
+            }
+            drop(remap);
+            seg.slots.lock().unwrap().clear();
+            seg.live_bytes.store(0, Ordering::Release);
+            if !seg.reclaimed.swap(true, Ordering::AcqRel) {
+                let _ = std::fs::remove_file(&seg.path);
+            }
+        }
+        self.compacted.fetch_add(moved_total, Ordering::Relaxed);
+        Ok(moved_total)
     }
 }
 
@@ -491,6 +604,56 @@ mod tests {
             s.read_into_slab(slot, 0, &pool),
             Err(Error::PinnedExhausted { .. })
         ));
+    }
+
+    #[test]
+    fn compaction_moves_live_extents_and_retires_the_segment() {
+        // 100-byte segments: 3 payloads of 40 — two fill seg 0, the
+        // third rotates (leaving a 40-byte abandoned reservation, so
+        // seg 0's written = 120 while its content is 80).
+        let s = SpillStore::temp_with("compact", 100).unwrap();
+        let a = s.write(&[1u8; 40]).unwrap();
+        let b = s.write(&[2u8; 40]).unwrap();
+        let c = s.write(&[3u8; 40]).unwrap();
+        assert_eq!((a.segment, b.segment, c.segment), (0, 0, 1));
+        // fully live (80 of 120 written): above half, kept as-is
+        assert_eq!(s.compact().unwrap(), 0, "mostly-live segment kept");
+        s.free(b); // 40/120 live: now qualifies
+        let seg0_path = {
+            let segs = s.segments.read().unwrap();
+            segs[0].path.clone()
+        };
+        assert!(seg0_path.exists());
+        let moved = s.compact().unwrap();
+        assert_eq!(moved, 40, "only the live extent is copied");
+        assert_eq!(s.compacted_bytes(), 40);
+        assert!(!seg0_path.exists(), "mostly-dead segment retired");
+        // the stale handle still resolves through the remap
+        assert_eq!(s.read(a).unwrap(), vec![1u8; 40]);
+        assert_eq!(s.read(c).unwrap(), vec![3u8; 40]);
+        // freeing through the stale handle frees the moved payload
+        let live_before = s.live_bytes();
+        s.free(a);
+        assert_eq!(s.live_bytes(), live_before - 40);
+        assert!(s.remap.read().unwrap().is_empty(), "dead chain pruned");
+    }
+
+    #[test]
+    fn compaction_chains_resolve_after_repeated_moves() {
+        let s = SpillStore::temp_with("chain", 100).unwrap();
+        let dead = s.write(&[0u8; 60]).unwrap();
+        let live = s.write(&[8u8; 20]).unwrap(); // seg 0: 80 written
+        let _r1 = s.write(&[1u8; 90]).unwrap(); // rotates to seg 1
+        s.free(dead);
+        assert_eq!(s.compact().unwrap(), 20, "live moves into seg 1");
+        // now make seg 1 mostly dead too and move on to seg 2
+        s.free(_r1);
+        let _r2 = s.write(&[2u8; 90]).unwrap(); // rotates to seg 2
+        assert_eq!(s.compact().unwrap(), 20, "live moves again");
+        assert_eq!(s.read(live).unwrap(), vec![8u8; 20], "two-hop chain");
+        assert_eq!(s.compacted_bytes(), 40);
+        s.free(live);
+        assert!(s.remap.read().unwrap().is_empty());
     }
 
     #[test]

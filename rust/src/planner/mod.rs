@@ -13,11 +13,13 @@
 //! * **Sort / Limit** — executed per worker; the Client gather-merges
 //!   (re-sorts / re-limits) worker outputs.
 
+use std::sync::Arc;
+
 use crate::exec::plan::{AggSpec, ExchangeRole, OpSpec, PhysicalPlan, Pred};
 use crate::Result;
 
 /// Logical query tree (what a SQL frontend would produce).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Logical {
     Scan { table: String, cols: Vec<String>, pred: Option<Pred> },
     Filter { input: Box<Logical>, pred: Pred },
@@ -26,6 +28,10 @@ pub enum Logical {
     Join { left: Box<Logical>, right: Box<Logical>, left_on: String, right_on: String, lip: bool },
     Sort { input: Box<Logical>, by: String, desc: bool },
     Limit { input: Box<Logical>, n: u64 },
+    /// Cache-resident materialized subplan (see [`crate::cache`]): the
+    /// encoded `RecordBatch` a scan→filter→agg frontier produced on an
+    /// earlier execution. Lowered to [`OpSpec::Fragment`].
+    Fragment { data: Arc<Vec<u8>> },
 }
 
 impl Logical {
@@ -87,6 +93,113 @@ impl Logical {
 
     pub fn limit(self, n: u64) -> Logical {
         Logical::Limit { input: Box::new(self), n }
+    }
+
+    // ------------------------------------- serving-layer tree surgery
+
+    /// Tables this query reads, sorted + deduped (cache invalidation
+    /// tracks per-table datasource versions against this set).
+    pub fn tables(&self) -> Vec<String> {
+        fn walk(q: &Logical, out: &mut Vec<String>) {
+            match q {
+                Logical::Scan { table, .. } => out.push(table.clone()),
+                Logical::Fragment { .. } => {}
+                Logical::Filter { input, .. }
+                | Logical::Project { input, .. }
+                | Logical::Aggregate { input, .. }
+                | Logical::Sort { input, .. }
+                | Logical::Limit { input, .. } => walk(input, out),
+                Logical::Join { left, right, .. } => {
+                    walk(left, out);
+                    walk(right, out);
+                }
+            }
+        }
+        let mut out = Vec::new();
+        walk(self, &mut out);
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Outermost scan→filter→agg frontiers: every `Aggregate`-rooted
+    /// subtree whose input is a pure Scan/Filter/Project pipeline. These
+    /// are the materialization points of the fragment cache — the
+    /// pre-aggregated "cube" later drilldowns re-slice without
+    /// re-scanning.
+    pub fn fragment_frontiers(&self) -> Vec<&Logical> {
+        fn pipeline(q: &Logical) -> bool {
+            match q {
+                Logical::Scan { .. } => true,
+                Logical::Filter { input, .. } | Logical::Project { input, .. } => {
+                    pipeline(input)
+                }
+                _ => false,
+            }
+        }
+        fn walk<'a>(q: &'a Logical, out: &mut Vec<&'a Logical>) {
+            if let Logical::Aggregate { input, .. } = q {
+                if pipeline(input) {
+                    out.push(q);
+                    return;
+                }
+            }
+            match q {
+                Logical::Scan { .. } | Logical::Fragment { .. } => {}
+                Logical::Filter { input, .. }
+                | Logical::Project { input, .. }
+                | Logical::Aggregate { input, .. }
+                | Logical::Sort { input, .. }
+                | Logical::Limit { input, .. } => walk(input, out),
+                Logical::Join { left, right, .. } => {
+                    walk(left, out);
+                    walk(right, out);
+                }
+            }
+        }
+        let mut out = Vec::new();
+        walk(self, &mut out);
+        out
+    }
+
+    /// Rewrite: replace every subtree structurally equal to `target`
+    /// with a [`Logical::Fragment`] leaf over `data`.
+    pub fn substitute(&self, target: &Logical, data: &Arc<Vec<u8>>) -> Logical {
+        if self == target {
+            return Logical::Fragment { data: data.clone() };
+        }
+        match self {
+            Logical::Scan { .. } | Logical::Fragment { .. } => self.clone(),
+            Logical::Filter { input, pred } => Logical::Filter {
+                input: Box::new(input.substitute(target, data)),
+                pred: pred.clone(),
+            },
+            Logical::Project { input, cols } => Logical::Project {
+                input: Box::new(input.substitute(target, data)),
+                cols: cols.clone(),
+            },
+            Logical::Aggregate { input, group_by, aggs } => Logical::Aggregate {
+                input: Box::new(input.substitute(target, data)),
+                group_by: group_by.clone(),
+                aggs: aggs.clone(),
+            },
+            Logical::Join { left, right, left_on, right_on, lip } => Logical::Join {
+                left: Box::new(left.substitute(target, data)),
+                right: Box::new(right.substitute(target, data)),
+                left_on: left_on.clone(),
+                right_on: right_on.clone(),
+                lip: *lip,
+            },
+            Logical::Sort { input, by, desc } => Logical::Sort {
+                input: Box::new(input.substitute(target, data)),
+                by: by.clone(),
+                desc: *desc,
+            },
+            Logical::Limit { input, n } => Logical::Limit {
+                input: Box::new(input.substitute(target, data)),
+                n: *n,
+            },
+        }
     }
 }
 
@@ -185,6 +298,9 @@ impl Planner {
                 let i = self.lower(input, plan)?;
                 plan.add(OpSpec::Limit { n: *n }, vec![i])
             }
+            Logical::Fragment { data } => {
+                plan.add(OpSpec::Fragment { data: data.clone() }, vec![])
+            }
         })
     }
 }
@@ -282,6 +398,33 @@ mod tests {
             .plan(&Logical::scan("t", &["a"]))
             .unwrap();
         assert_eq!(gather_mode(&plain), GatherMode::Concat);
+    }
+
+    #[test]
+    fn fragment_frontier_extraction_and_substitution() {
+        // q()'s aggregate sits on a join — not a pure pipeline — so it
+        // has no frontier.
+        assert!(q().fragment_frontiers().is_empty());
+        let drill = Logical::scan("t", &["a", "b"])
+            .filter(Pred::RangeI64 { col: "b".into(), lo: 0, hi: 10 })
+            .aggregate("a", vec![AggSpec::new(AggFn::Sum, "b")])
+            .sort("a", false)
+            .limit(3);
+        let fr = drill.fragment_frontiers();
+        assert_eq!(fr.len(), 1);
+        assert!(matches!(fr[0], Logical::Aggregate { .. }));
+        assert_eq!(drill.tables(), vec!["t".to_string()]);
+        let target = fr[0].clone();
+        let data = Arc::new(vec![9u8]);
+        let rewritten = drill.substitute(&target, &data);
+        assert!(rewritten.fragment_frontiers().is_empty());
+        let plan = Planner::new(2).plan(&rewritten).unwrap();
+        assert!(
+            plan.nodes.iter().any(|n| matches!(n.spec, OpSpec::Fragment { .. })),
+            "{}",
+            plan.render()
+        );
+        assert!(!plan.nodes.iter().any(|n| matches!(n.spec, OpSpec::Scan { .. })));
     }
 
     #[test]

@@ -14,12 +14,70 @@
 //! merged ranges via [`plan_ranges`] and fetches them ahead of compute.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::memory::{PinnedPool, SlabSlice, SlabWriter, StagedBytes};
 use crate::storage::format::{FileFooter, RowGroupMeta};
 use crate::storage::object_store::ObjectStore;
 use crate::Result;
+
+/// Monotone datasource versions: every mutation of a table's objects
+/// bumps a global counter and stamps the table with it. Consumers that
+/// cache anything derived from stored bytes (the gateway's serving
+/// caches, the custom datasource's footer cache) snapshot versions at
+/// fill time and compare at serve time — a mismatch means the bytes
+/// under the entry changed and the entry must be dropped. Versions only
+/// grow, so a stale reader can never be fooled by an ABA pattern.
+#[derive(Clone, Default)]
+pub struct SourceVersion {
+    inner: Arc<VersionInner>,
+}
+
+#[derive(Default)]
+struct VersionInner {
+    global: AtomicU64,
+    tables: Mutex<HashMap<String, u64>>,
+}
+
+impl SourceVersion {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a mutation of `table`: advance the global clock and stamp
+    /// the table with the new value. Returns the stamp.
+    pub fn bump(&self, table: &str) -> u64 {
+        let v = self.inner.global.fetch_add(1, Ordering::AcqRel) + 1;
+        self.inner
+            .tables
+            .lock()
+            .unwrap()
+            .insert(table.to_string(), v);
+        v
+    }
+
+    /// The global mutation clock (0 = nothing ever written).
+    pub fn global(&self) -> u64 {
+        self.inner.global.load(Ordering::Acquire)
+    }
+
+    /// The last stamp of `table` (0 = never mutated).
+    pub fn of(&self, table: &str) -> u64 {
+        self.inner
+            .tables
+            .lock()
+            .unwrap()
+            .get(table)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Version stamps for a set of tables, for cache-entry validation.
+    pub fn snapshot(&self, tables: &[String]) -> Vec<(String, u64)> {
+        tables.iter().map(|t| (t.clone(), self.of(t))).collect()
+    }
+}
 
 /// A contiguous byte range within one object.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -170,6 +228,12 @@ pub struct CustomObjectStoreDatasource {
     /// ... and pre-loading data for table scans" (§3.4).
     pinned: Option<PinnedPool>,
     stats: Mutex<CustomDsStats>,
+    /// Store mutation clock (None when the store doesn't track one).
+    version: Option<SourceVersion>,
+    /// Global clock value the footer cache was filled against; a bump
+    /// anywhere flushes the whole cache (footers are cheap to refetch,
+    /// correctness is not).
+    seen_global: AtomicU64,
 }
 
 impl CustomObjectStoreDatasource {
@@ -178,12 +242,27 @@ impl CustomObjectStoreDatasource {
         coalesce_gap: u64,
         pinned: Option<PinnedPool>,
     ) -> Self {
+        let version = store.source_version();
+        let seen = version.as_ref().map(|v| v.global()).unwrap_or(0);
         CustomObjectStoreDatasource {
             store,
             footers: Mutex::new(HashMap::new()),
             coalesce_gap,
             pinned,
             stats: Mutex::new(CustomDsStats::default()),
+            version,
+            seen_global: AtomicU64::new(seen),
+        }
+    }
+
+    /// Drop cached footers if the store advanced past what we cached
+    /// against (serving-cache invalidation contract: version bump →
+    /// dependent cached state flushes before the next read).
+    fn flush_stale_footers(&self) {
+        let Some(v) = &self.version else { return };
+        let now = v.global();
+        if self.seen_global.swap(now, Ordering::AcqRel) != now {
+            self.footers.lock().unwrap().clear();
         }
     }
 
@@ -252,6 +331,7 @@ impl CustomObjectStoreDatasource {
 
 impl Datasource for CustomObjectStoreDatasource {
     fn footer(&self, key: &str) -> Result<Arc<FileFooter>> {
+        self.flush_stale_footers();
         if let Some(f) = self.footers.lock().unwrap().get(key) {
             self.stats.lock().unwrap().footer_hits += 1;
             return Ok(f.clone());
@@ -454,6 +534,37 @@ mod tests {
         let pages = cust.fetch_group("t.ths", &footer, 0, &[0, 1]).unwrap();
         assert!(pages.iter().all(|p| !p.is_pinned()), "exhausted pool degrades to heap");
         assert!(!pages[0].is_empty());
+    }
+
+    #[test]
+    fn source_version_bumps_monotonically_per_table() {
+        let v = SourceVersion::new();
+        assert_eq!(v.global(), 0);
+        assert_eq!(v.of("lineitem"), 0);
+        let a = v.bump("lineitem");
+        let b = v.bump("orders");
+        let c = v.bump("lineitem");
+        assert!(a < b && b < c, "global clock strictly grows");
+        assert_eq!(v.of("lineitem"), c);
+        assert_eq!(v.of("orders"), b);
+        assert_eq!(v.global(), c);
+        let snap = v.snapshot(&["lineitem".into(), "nope".into()]);
+        assert_eq!(snap, vec![("lineitem".to_string(), c), ("nope".to_string(), 0)]);
+    }
+
+    #[test]
+    fn footer_cache_flushes_on_version_bump() {
+        let (s, _) = store_with_file();
+        let cust = CustomObjectStoreDatasource::new(s.clone(), 0, None);
+        cust.footer("t.ths").unwrap();
+        cust.footer("t.ths").unwrap();
+        assert_eq!(cust.stats().footer_hits, 1);
+        // rewrite the object: same key, one extra row group's worth
+        s.put("t.ths", &test_file(2000, 256)).unwrap();
+        let f = cust.footer("t.ths").unwrap();
+        let st = cust.stats();
+        assert_eq!(st.footer_misses, 2, "stale footer served after bump");
+        assert_eq!(f.row_groups.len(), 2000usize.div_ceil(256));
     }
 
     #[test]

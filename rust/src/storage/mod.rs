@@ -7,6 +7,8 @@ pub mod format;
 pub mod object_store;
 
 pub use compression::Codec;
-pub use datasource::{CustomObjectStoreDatasource, Datasource, GenericDatasource};
+pub use datasource::{
+    CustomObjectStoreDatasource, Datasource, GenericDatasource, SourceVersion,
+};
 pub use format::{ColumnChunkMeta, FileFooter, FileReader, FileWriter, RowGroupMeta};
 pub use object_store::{ObjectStore, SimObjectStore};

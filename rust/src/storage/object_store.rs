@@ -15,6 +15,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 use crate::sim::{SimContext, Throttle};
+use crate::storage::datasource::SourceVersion;
 use crate::{Error, Result};
 
 /// Byte-range read interface (the only way to touch stored bytes).
@@ -54,6 +55,14 @@ pub trait ObjectStore: Send + Sync {
 
     /// Lifetime bytes served.
     fn bytes_served(&self) -> u64;
+
+    /// The store's mutation clock, when it tracks one. Writes through
+    /// [`ObjectStore::put`] bump the table the key belongs to (the
+    /// prefix before the first `/`); caches derived from stored bytes
+    /// validate against these stamps. Default: no tracking.
+    fn source_version(&self) -> Option<SourceVersion> {
+        None
+    }
 }
 
 /// Simulated store: objects on the local filesystem (or in memory),
@@ -71,6 +80,7 @@ pub struct SimObjectStore {
     requests: AtomicU64,
     bytes: AtomicU64,
     waits: AtomicU64,
+    version: SourceVersion,
 }
 
 impl SimObjectStore {
@@ -95,6 +105,7 @@ impl SimObjectStore {
             requests: AtomicU64::new(0),
             bytes: AtomicU64::new(0),
             waits: AtomicU64::new(0),
+            version: SourceVersion::new(),
         }
         .into()
     }
@@ -231,6 +242,10 @@ impl ObjectStore for SimObjectStore {
                 .unwrap()
                 .insert(key.to_string(), Arc::new(data.to_vec()));
         }
+        // bytes are in place — now advertise the change (readers that
+        // validate after this see the new stamp and refetch)
+        let table = key.split('/').next().unwrap_or(key);
+        self.version.bump(table);
         Ok(())
     }
 
@@ -271,6 +286,10 @@ impl ObjectStore for SimObjectStore {
 
     fn bytes_served(&self) -> u64 {
         self.bytes.load(Ordering::Relaxed)
+    }
+
+    fn source_version(&self) -> Option<SourceVersion> {
+        Some(self.version.clone())
     }
 }
 

@@ -4,9 +4,11 @@
 
 pub mod baseline;
 pub mod queries;
+pub mod serving;
 pub mod tpcds;
 pub mod tpch;
 
 pub use baseline::CpuEngine;
 pub use queries::{tpcds_lite_suite, tpch_suite, QueryDef};
+pub use serving::{serving_mix, ServingQuery};
 pub use tpch::TpchGen;

@@ -1,0 +1,183 @@
+//! Repeat-heavy serving mix: the dashboard/drilldown traffic shape the
+//! serving cache (PR 7) is built for.
+//!
+//! Interactive analytics traffic is nothing like the sequential TPC
+//! suites: the same handful of dashboard panels refresh over and over,
+//! users re-issue semantically identical queries that differ only in
+//! authoring order (predicate conjuncts, column lists), and drilldowns
+//! re-slice one pre-aggregated frontier with different sorts and
+//! limits. This module generates that mix deterministically so the
+//! serving-cache bench (micro bench #8) and tests can measure:
+//!
+//! - **exact repeats** — the same dashboard panel every round (result
+//!   cache should serve every round after the first with zero cluster
+//!   tasks);
+//! - **equivalent rewrites** — every other round the revenue panel
+//!   arrives with its filter conjuncts and scan columns permuted; the
+//!   canonical plan key must map it onto the original's entry;
+//! - **drilldowns** — per-round variations over one shared
+//!   scan→filter→aggregate frontier, differing only above the
+//!   aggregate (sort direction, limit); the fragment cache should
+//!   serve the frontier so only the cheap re-slice executes.
+//!
+//! Queries run against the TPC-H-lite tables ([`crate::workload::tpch`])
+//! so benches reuse the same generated data.
+
+use crate::exec::plan::{AggFn, AggSpec, Pred};
+use crate::planner::Logical;
+use crate::workload::tpch::{DATE_HI, DATE_LO};
+
+/// One request in the serving stream.
+pub struct ServingQuery {
+    /// Stable id: `<kind>@<round>` plus a variant suffix.
+    pub id: String,
+    /// Zero-based round this request belongs to.
+    pub round: usize,
+    /// Traffic class: `"dashboard"`, `"dashboard-rewrite"`, or
+    /// `"drilldown"`.
+    pub kind: &'static str,
+    pub query: Logical,
+}
+
+fn date(frac: f64) -> i64 {
+    DATE_LO + ((DATE_HI - DATE_LO) as f64 * frac) as i64
+}
+
+/// Revenue panel: filter + low-cardinality agg over lineitem.
+fn revenue_panel() -> Logical {
+    Logical::scan("lineitem", &["l_returnflag", "l_extendedprice", "l_shipdate", "l_discount"])
+        .filter(
+            Pred::RangeI64 { col: "l_shipdate".into(), lo: DATE_LO, hi: date(0.8) }
+                .and(Pred::RangeI64 { col: "l_discount".into(), lo: 0, hi: 8 }),
+        )
+        .aggregate("l_returnflag", vec![AggSpec::new(AggFn::Sum, "l_extendedprice")])
+        .sort("l_returnflag", false)
+}
+
+/// The revenue panel as a client with different authoring habits sends
+/// it: conjuncts flipped, scan columns shuffled. Canonically identical
+/// to [`revenue_panel`] (both normalizations apply below an Aggregate),
+/// so it must land on the same result-cache entry.
+fn revenue_panel_rewrite() -> Logical {
+    Logical::scan("lineitem", &["l_discount", "l_shipdate", "l_extendedprice", "l_returnflag"])
+        .filter(
+            Pred::RangeI64 { col: "l_discount".into(), lo: 0, hi: 8 }
+                .and(Pred::RangeI64 { col: "l_shipdate".into(), lo: DATE_LO, hi: date(0.8) }),
+        )
+        .aggregate("l_returnflag", vec![AggSpec::new(AggFn::Sum, "l_extendedprice")])
+        .sort("l_returnflag", false)
+}
+
+/// Orders panel: priority histogram.
+fn orders_panel() -> Logical {
+    Logical::scan("orders", &["o_orderpriority", "o_orderkey"])
+        .aggregate("o_orderpriority", vec![AggSpec::new(AggFn::Count, "o_orderkey")])
+        .sort("o_orderpriority", false)
+}
+
+/// The shared drilldown frontier: per-partkey quantity cube. Every
+/// drilldown re-slices this aggregate, so it is the subtree the
+/// fragment cache materializes once.
+fn drill_frontier() -> Logical {
+    Logical::scan("lineitem", &["l_partkey", "l_quantity", "l_shipdate"])
+        .filter(Pred::RangeI64 { col: "l_shipdate".into(), lo: date(0.2), hi: date(0.9) })
+        .aggregate("l_partkey", vec![AggSpec::new(AggFn::Sum, "l_quantity")])
+}
+
+/// A drilldown over the shared frontier: top/bottom-k by the summed
+/// measure. Only the sort direction and limit vary — the aggregate
+/// subtree is byte-identical across all drilldowns.
+fn drilldown(desc: bool, k: usize) -> Logical {
+    drill_frontier().sort("sum_l_quantity", desc).limit(k)
+}
+
+/// Generate `rounds` rounds of serving traffic. Round 0 is all cold;
+/// every later round repeats the dashboard panels exactly, adds the
+/// rewrite variant on odd rounds, and issues two fresh drilldowns that
+/// share the cached frontier.
+pub fn serving_mix(rounds: usize) -> Vec<ServingQuery> {
+    let mut out = Vec::new();
+    for round in 0..rounds {
+        out.push(ServingQuery {
+            id: format!("revenue@{round}"),
+            round,
+            kind: "dashboard",
+            query: revenue_panel(),
+        });
+        out.push(ServingQuery {
+            id: format!("orders@{round}"),
+            round,
+            kind: "dashboard",
+            query: orders_panel(),
+        });
+        if round % 2 == 1 {
+            out.push(ServingQuery {
+                id: format!("revenue-rw@{round}"),
+                round,
+                kind: "dashboard-rewrite",
+                query: revenue_panel_rewrite(),
+            });
+        }
+        // two drilldowns per round; the (desc, k) pair cycles so later
+        // rounds occasionally repeat an earlier drilldown exactly
+        for (v, (desc, k)) in
+            [(true, 5 + round % 3), (false, 10 + round % 2)].into_iter().enumerate()
+        {
+            out.push(ServingQuery {
+                id: format!("drill{v}@{round}"),
+                round,
+                kind: "drilldown",
+                query: drilldown(desc, k),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::{canonicalize, fingerprint};
+    use crate::planner::Planner;
+
+    #[test]
+    fn mix_shape_per_round() {
+        let mix = serving_mix(4);
+        // rounds 0,2: 4 queries; rounds 1,3: 5 (rewrite variant)
+        assert_eq!(mix.len(), 4 + 5 + 4 + 5);
+        assert!(mix.iter().all(|q| q.round < 4));
+        assert_eq!(mix.iter().filter(|q| q.kind == "dashboard-rewrite").count(), 2);
+    }
+
+    #[test]
+    fn rewrite_variant_is_canonically_identical() {
+        let a = fingerprint(&canonicalize(&revenue_panel()));
+        let b = fingerprint(&canonicalize(&revenue_panel_rewrite()));
+        assert_eq!(a, b, "rewrite must map onto the original's cache key");
+        // ...but not textually identical pre-canonicalization
+        assert_ne!(fingerprint(&revenue_panel()), fingerprint(&revenue_panel_rewrite()));
+    }
+
+    #[test]
+    fn drilldowns_share_one_fragment_frontier() {
+        let a = drilldown(true, 5);
+        let b = drilldown(false, 10);
+        let fa = a.fragment_frontiers();
+        let fb = b.fragment_frontiers();
+        assert_eq!(fa.len(), 1);
+        assert_eq!(fb.len(), 1);
+        assert_eq!(
+            fingerprint(&canonicalize(fa[0])),
+            fingerprint(&canonicalize(fb[0])),
+            "drilldowns must hit the same cached fragment"
+        );
+    }
+
+    #[test]
+    fn serving_mix_plans_cleanly() {
+        let p = Planner::new(2);
+        for q in serving_mix(2) {
+            assert!(p.plan(&q.query).is_ok(), "{} failed to plan", q.id);
+        }
+    }
+}

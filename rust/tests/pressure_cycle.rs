@@ -591,3 +591,139 @@ fn slow_receiver_bounds_outbox_depth_via_credits() {
     );
     net.stop();
 }
+
+// ---------------------------------------------------- serving cache (PR 7)
+
+use theseus::exec::plan::Pred;
+use theseus::types::ColumnData;
+
+/// Integer-valued fact table: f64 sums of integers below 2^53 are exact
+/// and order-independent, so byte-level comparisons are deterministic.
+fn write_int_fact(store: &dyn ObjectStore, files: usize, rows: usize) {
+    let mut rng = Rng::new(SEED);
+    let schema =
+        Schema::new(vec![Field::new("k", DType::Int64), Field::new("v", DType::Int64)]);
+    for f in 0..files {
+        let batch = RecordBatch::new(vec![
+            Column::i64("k", (0..rows).map(|_| rng.gen_i64(0, 9)).collect()),
+            Column::i64("v", (0..rows).map(|_| rng.gen_i64(0, 99)).collect()),
+        ])
+        .unwrap();
+        let mut w = FileWriter::new(schema.clone(), Codec::Zstd { level: 1 }, 256);
+        w.write(batch).unwrap();
+        store.put(&format!("facts/{f}.ths"), &w.finish().unwrap()).unwrap();
+    }
+}
+
+fn sum_for_key(batch: &RecordBatch, key: i64) -> f64 {
+    let ks = match &batch.columns[0].data {
+        ColumnData::I64(v) => v,
+        other => panic!("unexpected key column {other:?}"),
+    };
+    let row = ks.iter().position(|&k| k == key).expect("key present");
+    match &batch.columns[1].data {
+        ColumnData::F64(v) => v[row],
+        other => panic!("unexpected sum column {other:?}"),
+    }
+}
+
+/// The full deterministic invalidation cycle: warm hit (zero tasks) →
+/// datasource write bumps the table version → next lookup misses and
+/// recomputes fresh bytes → the refilled entry serves warm again.
+#[test]
+fn serving_cache_invalidation_cycle() {
+    let store = SimObjectStore::in_memory(&SimContext::test());
+    write_int_fact(&*store, 2, 1200);
+    let client = connect(
+        WorkerConfig {
+            num_workers: 2,
+            result_cache_bytes: 4 << 20,
+            fragment_cache_bytes: 4 << 20,
+            ..WorkerConfig::test()
+        },
+        store.clone(),
+        None,
+    )
+    .unwrap();
+    let q = Logical::scan("facts", &["k", "v"])
+        .filter(Pred::RangeI64 { col: "k".into(), lo: 0, hi: 10 })
+        .aggregate("k", vec![AggSpec::new(AggFn::Sum, "v")])
+        .sort("k", false);
+
+    let cold = client.query(&q).unwrap();
+    assert!(!cold.worker_stats.is_empty(), "cold run must hit the cluster");
+    let warm = client.query(&q).unwrap();
+    assert!(warm.worker_stats.is_empty(), "warm exact hit must skip the cluster");
+    assert_eq!(cold.batch.encode(), warm.batch.encode());
+
+    // append 64 rows of (k=3, v=5) — bumps table "facts"
+    let add = RecordBatch::new(vec![
+        Column::i64("k", vec![3; 64]),
+        Column::i64("v", vec![5; 64]),
+    ])
+    .unwrap();
+    let schema =
+        Schema::new(vec![Field::new("k", DType::Int64), Field::new("v", DType::Int64)]);
+    let mut w = FileWriter::new(schema, Codec::Zstd { level: 1 }, 256);
+    w.write(add).unwrap();
+    store.put("facts/2.ths", &w.finish().unwrap()).unwrap();
+
+    let fresh = client.query(&q).unwrap();
+    assert!(!fresh.worker_stats.is_empty(), "version bump must force a miss");
+    assert_ne!(cold.batch.encode(), fresh.batch.encode());
+    let expect = sum_for_key(&cold.batch, 3) + 64.0 * 5.0;
+    let got = sum_for_key(&fresh.batch, 3);
+    assert!((got - expect).abs() < 1e-9, "fresh sum {got} != {expect}");
+
+    let rewarm = client.query(&q).unwrap();
+    assert!(rewarm.worker_stats.is_empty(), "refilled entry must serve warm");
+    assert_eq!(fresh.batch.encode(), rewarm.batch.encode());
+    let cache = client.gateway().cache.as_ref().unwrap();
+    assert!(cache.metrics().counter_value("cache.invalidated") >= 1);
+}
+
+/// A tiny result budget must *evict* under sustained distinct traffic —
+/// never wedge, never serve wrong bytes — and the bytes gauge must stay
+/// within the governor-backed budget.
+#[test]
+fn serving_cache_tiny_budget_evicts_instead_of_wedging() {
+    let store = SimObjectStore::in_memory(&SimContext::test());
+    write_int_fact(&*store, 2, 1200);
+    let plain = connect(
+        WorkerConfig { num_workers: 2, ..WorkerConfig::test() },
+        store.clone(),
+        None,
+    )
+    .unwrap();
+    let cached = connect(
+        WorkerConfig {
+            num_workers: 2,
+            result_cache_bytes: 1024,
+            ..WorkerConfig::test()
+        },
+        store,
+        None,
+    )
+    .unwrap();
+    // 12 distinct 10-group results: far more result bytes than the
+    // 1 KiB budget admits at once
+    for i in 0..12i64 {
+        let q = Logical::scan("facts", &["k", "v"])
+            .filter(Pred::RangeI64 { col: "v".into(), lo: i * 8, hi: i * 8 + 8 })
+            .aggregate("k", vec![AggSpec::new(AggFn::Sum, "v")])
+            .sort("k", false);
+        let want = plain.query(&q).unwrap().batch.encode();
+        let got = cached.query(&q).unwrap().batch.encode();
+        assert_eq!(want, got, "slice {i}: eviction churn corrupted a result");
+    }
+    let cache = cached.gateway().cache.as_ref().unwrap();
+    let m = cache.metrics();
+    assert!(
+        m.counter_value("cache.result_evict") >= 1,
+        "12 distinct results through 1 KiB must evict"
+    );
+    assert!(
+        m.gauge_value("cache.result_bytes") <= 1024,
+        "resident bytes above the governor budget"
+    );
+}

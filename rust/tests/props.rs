@@ -920,3 +920,271 @@ fn truncated_streams_error_instead_of_hanging_or_panicking() {
         },
     );
 }
+
+// ------------------------------------------- plan canonicalization (PR 7)
+
+use std::sync::Arc;
+
+use theseus::cache::{canonicalize, fingerprint};
+use theseus::cluster::client::connect;
+use theseus::config::WorkerConfig;
+use theseus::exec::plan::{AggFn, AggSpec, Pred};
+use theseus::planner::Logical;
+use theseus::sim::SimContext;
+use theseus::storage::format::FileWriter;
+use theseus::storage::object_store::{ObjectStore, SimObjectStore};
+use theseus::types::{DType, Field, Schema};
+
+/// Order visibility at a node — the test's independent restatement of
+/// the gating `theseus::cache` documents: which reorderings at this
+/// node are invisible in the final result.
+#[derive(Clone, Copy, PartialEq)]
+enum RVis {
+    /// Both column order and row order reach the result.
+    Both,
+    /// A name-addressed ancestor re-picks columns; row order survives.
+    Rows,
+    /// An Aggregate ancestor absorbs the input multiset entirely.
+    Nothing,
+}
+
+impl RVis {
+    fn cols_visible(self) -> bool {
+        self == RVis::Both
+    }
+}
+
+fn pick_col(rng: &mut Rng) -> String {
+    ["a", "b", "c", "d", "e"][rng.gen_range(5) as usize].to_string()
+}
+
+fn rand_leaf_pred(rng: &mut Rng) -> Pred {
+    match rng.gen_range(3) {
+        0 => Pred::RangeI64 {
+            col: pick_col(rng),
+            lo: rng.gen_i64(0, 50),
+            hi: rng.gen_i64(50, 100),
+        },
+        1 => Pred::EqI64 { col: pick_col(rng), val: rng.gen_i64(0, 9) },
+        _ => Pred::RangeF32 { col: pick_col(rng), lo: 0.0, hi: rng.gen_f32(1.0, 9.0) },
+    }
+}
+
+fn rand_pred(rng: &mut Rng) -> Pred {
+    let n = 1 + rng.gen_range(3) as usize;
+    (0..n).map(|_| rand_leaf_pred(rng)).reduce(|a, b| a.and(b)).unwrap()
+}
+
+fn shuffled<T: Clone>(rng: &mut Rng, xs: &[T]) -> Vec<T> {
+    let mut v: Vec<T> = xs.to_vec();
+    for i in (1..v.len()).rev() {
+        let j = rng.gen_range(i as u64 + 1) as usize;
+        v.swap(i, j);
+    }
+    v
+}
+
+fn rand_cols(rng: &mut Rng) -> Vec<String> {
+    let base = ["a", "b", "c", "d", "e"].map(String::from);
+    let n = 2 + rng.gen_range(3) as usize;
+    shuffled(rng, &base).into_iter().take(n).collect()
+}
+
+/// Random `Logical` tree. Column/table names are free-floating — the
+/// canonicalization property is purely structural, nothing here plans
+/// or executes.
+fn rand_tree(rng: &mut Rng, depth: usize) -> Logical {
+    if depth == 0 || rng.gen_range(4) == 0 {
+        let cols = rand_cols(rng);
+        let refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+        let table = ["t1", "t2", "t3"][rng.gen_range(3) as usize];
+        return if rng.gen_range(2) == 0 {
+            Logical::scan_where(table, &refs, rand_pred(rng))
+        } else {
+            Logical::scan(table, &refs)
+        };
+    }
+    match rng.gen_range(6) {
+        0 => rand_tree(rng, depth - 1).filter(rand_pred(rng)),
+        1 => {
+            let cols = rand_cols(rng);
+            let refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+            rand_tree(rng, depth - 1).project(&refs)
+        }
+        2 => {
+            let n = 1 + rng.gen_range(3) as usize;
+            let aggs = (0..n)
+                .map(|_| {
+                    let f = [AggFn::Sum, AggFn::Count, AggFn::Min, AggFn::Max]
+                        [rng.gen_range(4) as usize];
+                    AggSpec::new(f, pick_col(rng))
+                })
+                .collect();
+            rand_tree(rng, depth - 1).aggregate(pick_col(rng), aggs)
+        }
+        3 => {
+            let l = rand_tree(rng, depth - 1);
+            let r = rand_tree(rng, depth - 1);
+            let (lo, ro) = (pick_col(rng), pick_col(rng));
+            l.join(r, lo, ro, rng.gen_range(2) == 0)
+        }
+        4 => rand_tree(rng, depth - 1).sort(pick_col(rng), rng.gen_range(2) == 0),
+        _ => rand_tree(rng, depth - 1).limit(1 + rng.gen_range(20)),
+    }
+}
+
+/// Apply a random *equivalence-preserving* rewrite, mirroring the
+/// gating `canonicalize` documents: conjunct order is free everywhere;
+/// column-list / agg-list order is free only below a name-addressed
+/// ancestor; join inputs commute only under an Aggregate.
+fn equiv_rewrite(rng: &mut Rng, q: &Logical, vis: RVis) -> Logical {
+    let rw_pred = |rng: &mut Rng, p: &Pred| -> Pred {
+        let leaves: Vec<Pred> = p.conjuncts().into_iter().cloned().collect();
+        shuffled(rng, &leaves).into_iter().reduce(|a, b| a.and(b)).unwrap()
+    };
+    match q {
+        Logical::Scan { table, cols, pred } => Logical::Scan {
+            table: table.clone(),
+            cols: if vis.cols_visible() { cols.clone() } else { shuffled(rng, cols) },
+            pred: pred.as_ref().map(|p| rw_pred(rng, p)),
+        },
+        Logical::Filter { input, pred } => Logical::Filter {
+            input: Box::new(equiv_rewrite(rng, input, vis)),
+            pred: rw_pred(rng, pred),
+        },
+        Logical::Project { input, cols } => {
+            let child = if vis == RVis::Nothing { RVis::Nothing } else { RVis::Rows };
+            Logical::Project {
+                input: Box::new(equiv_rewrite(rng, input, child)),
+                cols: if vis.cols_visible() { cols.clone() } else { shuffled(rng, cols) },
+            }
+        }
+        Logical::Aggregate { input, group_by, aggs } => Logical::Aggregate {
+            input: Box::new(equiv_rewrite(rng, input, RVis::Nothing)),
+            group_by: group_by.clone(),
+            aggs: if vis.cols_visible() { aggs.clone() } else { shuffled(rng, aggs) },
+        },
+        Logical::Join { left, right, left_on, right_on, lip } => {
+            let l = equiv_rewrite(rng, left, vis);
+            let r = equiv_rewrite(rng, right, vis);
+            if vis == RVis::Nothing && rng.gen_range(2) == 0 {
+                Logical::Join {
+                    left: Box::new(r),
+                    right: Box::new(l),
+                    left_on: right_on.clone(),
+                    right_on: left_on.clone(),
+                    lip: *lip,
+                }
+            } else {
+                Logical::Join {
+                    left: Box::new(l),
+                    right: Box::new(r),
+                    left_on: left_on.clone(),
+                    right_on: right_on.clone(),
+                    lip: *lip,
+                }
+            }
+        }
+        Logical::Sort { input, by, desc } => Logical::Sort {
+            input: Box::new(equiv_rewrite(rng, input, vis)),
+            by: by.clone(),
+            desc: *desc,
+        },
+        Logical::Limit { input, n } => {
+            Logical::Limit { input: Box::new(equiv_rewrite(rng, input, vis)), n: *n }
+        }
+        Logical::Fragment { .. } => q.clone(),
+    }
+}
+
+#[test]
+fn equivalent_rewrites_share_a_canonical_key() {
+    check(
+        0x5E21B6,
+        400,
+        |rng| (rng.next_u64() as i64, rng.next_u64() as i64),
+        |&(tree_seed, rw_seed)| {
+            let tree = rand_tree(&mut Rng::new(tree_seed as u64), 3);
+            let rw = equiv_rewrite(&mut Rng::new(rw_seed as u64), &tree, RVis::Both);
+            let ct = canonicalize(&tree);
+            // same key for every member of the equivalence class, and
+            // canonicalization is a projection (idempotent)
+            fingerprint(&ct) == fingerprint(&canonicalize(&rw))
+                && fingerprint(&ct) == fingerprint(&canonicalize(&ct))
+        },
+    );
+}
+
+/// Integer-valued fact table (exact, order-independent f64 sums).
+fn int_fact_store(rows: usize) -> Arc<SimObjectStore> {
+    let store = SimObjectStore::in_memory(&SimContext::test());
+    let mut rng = Rng::new(23);
+    let schema =
+        Schema::new(vec![Field::new("k", DType::Int64), Field::new("v", DType::Int64)]);
+    for f in 0..2 {
+        let batch = RecordBatch::new(vec![
+            Column::i64("k", (0..rows).map(|_| rng.gen_i64(0, 19)).collect()),
+            Column::i64("v", (0..rows).map(|_| rng.gen_i64(0, 999)).collect()),
+        ])
+        .unwrap();
+        let mut w = FileWriter::new(schema.clone(), Codec::Zstd { level: 1 }, 256);
+        w.write(batch).unwrap();
+        store.put(&format!("fact/part-{f}.ths"), &w.finish().unwrap()).unwrap();
+    }
+    store
+}
+
+#[test]
+fn cached_results_are_byte_identical_to_uncached_execution() {
+    let store = int_fact_store(1500);
+    let plain = connect(
+        WorkerConfig { num_workers: 2, ..WorkerConfig::test() },
+        store.clone(),
+        None,
+    )
+    .unwrap();
+    let cached = connect(
+        WorkerConfig {
+            num_workers: 2,
+            result_cache_bytes: 4 << 20,
+            fragment_cache_bytes: 4 << 20,
+            ..WorkerConfig::test()
+        },
+        store,
+        None,
+    )
+    .unwrap();
+    // Few iterations — each runs 4 distributed queries — but every one
+    // checks cold, warm-exact, and rewritten-warm against the uncached
+    // truth, byte for byte.
+    check(
+        0xB17E5,
+        6,
+        |rng| ((rng.gen_i64(0, 9), rng.gen_i64(10, 19)), rng.gen_range(8) as usize),
+        |&((lo, hi), limit)| {
+            let base = Logical::scan("fact", &["k", "v"])
+                .filter(
+                    Pred::RangeI64 { col: "k".into(), lo, hi }
+                        .and(Pred::RangeI64 { col: "v".into(), lo: 0, hi: 900 }),
+                )
+                .aggregate("k", vec![AggSpec::new(AggFn::Sum, "v")])
+                .sort("k", false);
+            let q = if limit == 0 { base.clone() } else { base.clone().limit(limit as u64) };
+            // same query, authored differently: conjuncts flipped,
+            // scan columns swapped (both absorbed by the aggregate)
+            let rw_base = Logical::scan("fact", &["v", "k"])
+                .filter(
+                    Pred::RangeI64 { col: "v".into(), lo: 0, hi: 900 }
+                        .and(Pred::RangeI64 { col: "k".into(), lo, hi }),
+                )
+                .aggregate("k", vec![AggSpec::new(AggFn::Sum, "v")])
+                .sort("k", false);
+            let rw = if limit == 0 { rw_base } else { rw_base.limit(limit as u64) };
+            let truth = plain.query(&q).unwrap().batch.encode();
+            let cold = cached.query(&q).unwrap().batch.encode();
+            let warm = cached.query(&q).unwrap().batch.encode();
+            let warm_rw = cached.query(&rw).unwrap().batch.encode();
+            truth == cold && truth == warm && truth == warm_rw
+        },
+    );
+}

@@ -28,6 +28,11 @@
 //!    fragment-hit latency and cluster tasks executed. Asserts a warm
 //!    exact hit runs zero cluster tasks and a fragment-hit drilldown
 //!    runs strictly fewer than its cold run.
+//! 9. **Gateway concurrency** (PR 8): sustained gateway QPS at 1/4/16
+//!    concurrent sessions, cold (every query executes, gated by
+//!    admission control) vs warm (every query a result-cache hit,
+//!    which bypasses admission). Asserts warm bytes are identical to
+//!    cold and that only cold submissions consumed admissions.
 //!
 //! Run: `cargo bench --bench micro`.
 
@@ -73,6 +78,9 @@ fn main() {
     }
     if run(8) {
         serving_cache();
+    }
+    if run(9) {
+        gateway_concurrency();
     }
 }
 
@@ -756,6 +764,127 @@ fn serving_cache() {
              \"result_hits\": {},\n  \"fragment_hits\": {},\n  \"runs\": [\n{}\n  ]\n}}\n",
             m.counter_value("cache.result_hit"),
             m.counter_value("cache.fragment_hit"),
+            json_runs.join(",\n")
+        );
+        std::fs::write(&path, json).unwrap();
+        println!("wrote {path}");
+    }
+}
+
+// ------------------------------------------------------------------ 9
+fn gateway_concurrency() {
+    use std::collections::HashMap;
+    use std::sync::Mutex;
+
+    use theseus::exec::plan::{AggFn, AggSpec, Pred};
+    use theseus::planner::Logical;
+    use theseus::workload::tpch::{DATE_HI, DATE_LO};
+
+    println!("== gateway concurrency (PR 8): QPS at N sessions, cold vs warm ==");
+    const QUERIES_PER_SESSION: usize = 4;
+    let sf = std::env::var("GATEWAY_SF")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.02);
+    // one distinct dashboard panel per (session, slot): same shape,
+    // different shipdate window, so cold runs never share cache entries
+    let panel = |hi_frac: f64| -> Logical {
+        let hi = DATE_LO + ((DATE_HI - DATE_LO) as f64 * hi_frac) as i64;
+        Logical::scan("lineitem", &["l_returnflag", "l_extendedprice", "l_shipdate"])
+            .filter(Pred::RangeI64 { col: "l_shipdate".into(), lo: DATE_LO, hi })
+            .aggregate("l_returnflag", vec![AggSpec::new(AggFn::Sum, "l_extendedprice")])
+            .sort("l_returnflag", false)
+    };
+
+    println!(
+        "{:>9} {:>10} {:>10} {:>10} {:>10} {:>9} {:>8}",
+        "sessions", "cold", "cold qps", "warm", "warm qps", "admitted", "queued"
+    );
+    let mut json_runs: Vec<String> = Vec::new();
+    for sessions in [1usize, 4, 16] {
+        let cfg = WorkerConfig {
+            num_workers: 2,
+            profile: HwProfile::on_prem(),
+            time_scale: 0.1,
+            result_cache_bytes: 64 << 20,
+            fragment_cache_bytes: 64 << 20,
+            ..WorkerConfig::default()
+        };
+        let store = tpch_store(&cfg, sf);
+        let gw = gateway(cfg, store);
+        let total = sessions * QUERIES_PER_SESSION;
+        let frac = |s: usize, i: usize| {
+            0.3 + 0.6 * ((s * QUERIES_PER_SESSION + i) as f64) / (total as f64)
+        };
+
+        // one timed pass: every session thread submits its slots
+        let pass = |label: &str| -> (Duration, HashMap<(usize, usize), Vec<u8>>) {
+            let bytes: Mutex<HashMap<(usize, usize), Vec<u8>>> = Mutex::new(HashMap::new());
+            let t0 = Instant::now();
+            std::thread::scope(|scope| {
+                for s in 0..sessions {
+                    let gw = &gw;
+                    let bytes = &bytes;
+                    let (panel, frac) = (&panel, &frac);
+                    scope.spawn(move || {
+                        for i in 0..QUERIES_PER_SESSION {
+                            let r = gw
+                                .submit(&panel(frac(s, i)))
+                                .unwrap_or_else(|e| panic!("{label} s{s}q{i}: {e}"));
+                            bytes.lock().unwrap().insert((s, i), r.batch.encode());
+                        }
+                    });
+                }
+            });
+            (t0.elapsed(), bytes.into_inner().unwrap())
+        };
+
+        let (cold, cold_bytes) = pass("cold");
+        let (warm, warm_bytes) = pass("warm");
+        assert_eq!(
+            cold_bytes, warm_bytes,
+            "warm results must be byte-identical to their cold executions"
+        );
+        let m = &gw.cluster.metrics;
+        let admitted = m.counter_value("gateway.admitted");
+        let queued = m.counter_value("gateway.queued");
+        assert_eq!(
+            admitted, total as u64,
+            "only cold submissions consume admissions; warm hits bypass the queue"
+        );
+        let qps = |d: Duration| total as f64 / d.as_secs_f64().max(1e-9);
+        println!(
+            "{:>9} {:>10} {:>10.1} {:>10} {:>10.1} {:>9} {:>8}",
+            sessions,
+            secs(cold),
+            qps(cold),
+            secs(warm),
+            qps(warm),
+            admitted,
+            queued
+        );
+        for (phase, d) in [("cold", cold), ("warm", warm)] {
+            json_runs.push(format!(
+                "    {{\"sessions\": {sessions}, \"phase\": \"{phase}\", \"queries\": {total}, \
+                 \"wall_ns\": {}, \"qps\": {:.2}, \"admitted\": {admitted}, \
+                 \"queued\": {queued}}}",
+                d.as_nanos(),
+                qps(d)
+            ));
+        }
+    }
+    println!(
+        "(cold throughput is bounded by the workers — admission only queues submits the\n \
+         device budget can't hold concurrently; warm throughput is pure gateway-side\n \
+         cache service, so the cold:warm gap at 16 sessions is the serving headroom the\n \
+         session layer buys)\n"
+    );
+
+    // CI artifact: BENCH_GATEWAY_JSON=<path> writes the runs out
+    if let Ok(path) = std::env::var("BENCH_GATEWAY_JSON") {
+        let json = format!(
+            "{{\n  \"bench\": \"gateway_concurrency\",\n  \"sf\": {sf},\n  \
+             \"queries_per_session\": {QUERIES_PER_SESSION},\n  \"runs\": [\n{}\n  ]\n}}\n",
             json_runs.join(",\n")
         );
         std::fs::write(&path, json).unwrap();

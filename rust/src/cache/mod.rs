@@ -275,6 +275,10 @@ impl ServingCache {
         batch: &RecordBatch,
         versions: VersionSnapshot,
     ) {
+        if !self.versions_current(&versions) {
+            self.metrics.counter("cache.stale_insert_dropped").inc();
+            return;
+        }
         let bytes = batch.encoded_len();
         let mut lru = self.results.lock().unwrap();
         let out = lru.insert(key, batch.clone(), bytes, versions);
@@ -303,11 +307,31 @@ impl ServingCache {
         versions: VersionSnapshot,
     ) -> Arc<Vec<u8>> {
         let data = Arc::new(batch.encode());
+        if !self.versions_current(&versions) {
+            // still hand the bytes back for the requesting query's own
+            // substitution (read skew within one query matches the
+            // execution that produced it) — just never persist them
+            self.metrics.counter("cache.stale_insert_dropped").inc();
+            return data;
+        }
         let bytes = data.len();
         let mut lru = self.fragments.lock().unwrap();
         let out = lru.insert(key, data.clone(), bytes, versions);
         self.note_insert("cache.fragment", out, lru.bytes);
         data
+    }
+
+    /// Is the pre-execution snapshot still the current clock? A writer
+    /// that `put` between the gateway's snapshot and this insert makes
+    /// the executed bytes stale *at insert time*: the seed cached them
+    /// anyway, stamped with the old versions, and lookups under the
+    /// old snapshot then served pre-put data as if it were current.
+    /// Version stamps monotonically grow, so equality is sufficient.
+    fn versions_current(&self, versions: &VersionSnapshot) -> bool {
+        match &self.version {
+            Some(v) => versions.iter().all(|(t, stamp)| v.of(t) == *stamp),
+            None => true,
+        }
     }
 
     // ----------------------------------------------------- plan memo
@@ -497,6 +521,31 @@ mod tests {
         assert_eq!(*hit, b.encode());
         assert!(cache.fragments_enabled());
         assert!(!ServingCache::new(1 << 20, 0, None).fragments_enabled());
+    }
+
+    #[test]
+    fn stale_insert_is_dropped_when_version_advances_mid_query() {
+        let b = batch(8);
+        let clock = crate::storage::SourceVersion::new();
+        clock.bump("t");
+        let cache = ServingCache::new(1 << 20, 1 << 20, Some(clock.clone()));
+        // gateway snapshots before execution...
+        let snap = cache.version_snapshot(&["t".to_string()]);
+        // ...a writer puts mid-execution (version advances)...
+        clock.bump("t");
+        // ...post-execution insert must drop, not poison the cache
+        cache.insert_result(key(1), &b, snap.clone());
+        assert!(cache.lookup_result(&key(1), &snap).is_none());
+        let fresh = cache.version_snapshot(&["t".to_string()]);
+        assert!(cache.lookup_result(&key(1), &fresh).is_none());
+        // fragment path: bytes still returned for immediate use
+        let data = cache.insert_fragment(key(2), &b, snap);
+        assert_eq!(*data, b.encode());
+        assert!(cache.lookup_fragment(&key(2), &fresh).is_none());
+        assert_eq!(cache.metrics().counter_value("cache.stale_insert_dropped"), 2);
+        // a current-snapshot insert still lands
+        cache.insert_result(key(3), &b, fresh.clone());
+        assert!(cache.lookup_result(&key(3), &fresh).is_some());
     }
 
     #[test]

@@ -17,14 +17,16 @@ use crate::config::{TransportKind, WorkerConfig};
 use crate::exec::operators::sort::sort_batch;
 use crate::exec::plan::OpSpec;
 use crate::exec::PhysicalPlan;
+use crate::metrics::Metrics;
 use crate::network::{Endpoint, InprocHub, TcpCluster};
 use crate::planner::{gather_mode, GatherMode, Logical, Planner};
 use crate::runtime::KernelRegistry;
 use crate::sim::SimContext;
 use crate::storage::object_store::ObjectStore;
 use crate::types::RecordBatch;
-use crate::Result;
+use crate::{Error, Result};
 
+use super::session::{AdmissionController, AdmissionGrant, SessionOpts};
 use super::worker::Worker;
 
 /// Per-worker post-query statistics (bench reporting).
@@ -69,6 +71,9 @@ pub struct Cluster {
     /// The store the cluster reads — the gateway's serving cache
     /// validates entries against its mutation clock.
     pub store: Arc<dyn ObjectStore>,
+    /// Cluster-level metrics (admission, panic containment) — distinct
+    /// from the per-worker registries inside each [`Worker`].
+    pub metrics: Arc<Metrics>,
 }
 
 impl Cluster {
@@ -118,7 +123,13 @@ impl Cluster {
                 Worker::start(id, config.clone(), store.clone(), ep, registry.clone())
             })
             .collect::<Result<Vec<_>>>()?;
-        Ok(Cluster { workers, query_seq: AtomicU64::new(1), config, store })
+        Ok(Cluster {
+            workers,
+            query_seq: AtomicU64::new(1),
+            config,
+            store,
+            metrics: Arc::new(Metrics::default()),
+        })
     }
 
     /// Run one physical plan across all workers; gather per `mode`.
@@ -127,40 +138,75 @@ impl Cluster {
         plan: &PhysicalPlan,
         timeout: Duration,
     ) -> Result<QueryResult> {
+        self.run_plan_weighted(plan, timeout, 1)
+    }
+
+    /// [`run_plan`](Cluster::run_plan) with a session weight that
+    /// scales this query's residency bonus and promotion urgency on
+    /// every worker. Safe to call concurrently: each invocation gets
+    /// its own query id, and all statistics are per-qid on the
+    /// workers, so overlapping queries never read each other's
+    /// counters.
+    pub fn run_plan_weighted(
+        &self,
+        plan: &PhysicalPlan,
+        timeout: Duration,
+        weight: i64,
+    ) -> Result<QueryResult> {
         let qid = self.query_seq.fetch_add(1, Ordering::Relaxed);
         let start = Instant::now();
-        // baseline counters so stats are per-query deltas
-        let base: Vec<_> = self.workers.iter().map(|w| snapshot(w)).collect();
-
         let plan = Arc::new(plan.clone());
-        let results: Vec<Result<RecordBatch>> = std::thread::scope(|s| {
+        type Joined = std::thread::Result<Result<(RecordBatch, WorkerStats)>>;
+        let joined: Vec<(usize, Joined)> = std::thread::scope(|s| {
             let handles: Vec<_> = self
                 .workers
                 .iter()
                 .map(|w| {
                     let w = w.clone();
                     let plan = plan.clone();
-                    s.spawn(move || w.run_query(&plan, qid, timeout))
+                    s.spawn(move || w.run_query(&plan, qid, weight, timeout))
                 })
                 .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
+            handles
+                .into_iter()
+                .enumerate()
+                .map(|(i, h)| (i, h.join()))
+                .collect()
         });
         let mut parts = Vec::new();
-        for r in results {
-            parts.push(r?);
+        let mut worker_stats = Vec::new();
+        let mut first_err: Option<Error> = None;
+        for (worker_id, r) in joined {
+            match r {
+                Ok(Ok((batch, stats))) => {
+                    parts.push(batch);
+                    worker_stats.push(stats);
+                }
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(payload) => {
+                    // A worker thread panicked. The seed's
+                    // `h.join().unwrap()` re-panicked here, taking the
+                    // whole gateway down with the query that tripped
+                    // the bug; contain it as a query-scoped error so
+                    // the cluster keeps serving.
+                    self.metrics.counter("gateway.worker_panic_total").inc();
+                    let detail = panic_detail(payload);
+                    log::error!("worker {worker_id} panicked during query {qid}: {detail}");
+                    first_err.get_or_insert(Error::WorkerPanic {
+                        worker_id,
+                        query_id: qid,
+                        detail,
+                    });
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
         }
         let merged = gather(&plan, parts)?;
-        let elapsed = start.elapsed();
-        let worker_stats = self
-            .workers
-            .iter()
-            .zip(base)
-            .map(|(w, b)| delta(w, b))
-            .collect();
-        for w in &self.workers {
-            w.reset();
-        }
-        Ok(QueryResult { batch: merged, elapsed, worker_stats })
+        Ok(QueryResult { batch: merged, elapsed: start.elapsed(), worker_stats })
     }
 
     pub fn stop(&self) {
@@ -176,39 +222,14 @@ impl Drop for Cluster {
     }
 }
 
-fn snapshot(w: &Worker) -> WorkerStats {
-    let (pre, wire) = w.network.compression_ratio_inputs();
-    WorkerStats {
-        worker_id: w.ctx.worker_id,
-        tasks_executed: w.compute.executed(),
-        task_retries: w.compute.retries(),
-        // every demotion below the intended tier: OOM push fallbacks +
-        // memory-executor spills (§4.2's "spilling")
-        spills: w.ctx.env.demotions(),
-        spilled_bytes: w.movement.spilled_bytes(),
-        preload_byte_ranges: w.preload.byte_range_loads(),
-        preload_promotions: w.movement.promotions(),
-        net_bytes_precompress: pre,
-        net_bytes_wire: wire,
-        compress_time: w.network.compress_time(),
-        device_peak_bytes: w.ctx.env.arena.peak(),
-    }
-}
-
-fn delta(w: &Worker, base: WorkerStats) -> WorkerStats {
-    let now = snapshot(w);
-    WorkerStats {
-        worker_id: now.worker_id,
-        tasks_executed: now.tasks_executed - base.tasks_executed,
-        task_retries: now.task_retries - base.task_retries,
-        spills: now.spills - base.spills,
-        spilled_bytes: now.spilled_bytes - base.spilled_bytes,
-        preload_byte_ranges: now.preload_byte_ranges - base.preload_byte_ranges,
-        preload_promotions: now.preload_promotions - base.preload_promotions,
-        net_bytes_precompress: now.net_bytes_precompress - base.net_bytes_precompress,
-        net_bytes_wire: now.net_bytes_wire - base.net_bytes_wire,
-        compress_time: now.compress_time.saturating_sub(base.compress_time),
-        device_peak_bytes: now.device_peak_bytes,
+/// Human-readable panic payload (panics carry `&str` or `String`).
+fn panic_detail(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -240,28 +261,47 @@ fn gather(plan: &PhysicalPlan, parts: Vec<RecordBatch>) -> Result<RecordBatch> {
     })
 }
 
-/// Gateway: Planner + Cluster + serving cache (see [`crate::cache`]).
+/// Gateway: Planner + Cluster + serving cache (see [`crate::cache`])
+/// + admission control (see [`crate::cluster::session`]).
 pub struct Gateway {
     pub cluster: Cluster,
     pub planner: Planner,
-    /// Per-query wall-clock timeout.
+    /// Per-query wall-clock timeout (`query_timeout_ms`; sessions can
+    /// override per submission via [`SessionOpts::timeout`]).
     pub timeout: Duration,
     /// Two-level result/fragment cache; `None` when both budgets are 0
     /// (the default) — submit then always executes.
     pub cache: Option<ServingCache>,
+    /// Gate on aggregate admitted scan footprint: concurrent submits
+    /// beyond the budget queue here instead of thrashing the workers'
+    /// governors mid-flight.
+    pub admission: AdmissionController,
 }
 
 impl Gateway {
     pub fn new(cluster: Cluster) -> Gateway {
-        let planner = Planner::new(cluster.config.num_workers);
-        let (rb, fb) =
-            (cluster.config.result_cache_bytes, cluster.config.fragment_cache_bytes);
+        let cfg = &cluster.config;
+        let planner = Planner::new(cfg.num_workers);
+        let (rb, fb) = (cfg.result_cache_bytes, cfg.fragment_cache_bytes);
         let cache = if rb + fb > 0 {
             Some(ServingCache::new(rb, fb, cluster.store.source_version()))
         } else {
             None
         };
-        Gateway { cluster, planner, timeout: Duration::from_secs(300), cache }
+        let timeout = Duration::from_millis(cfg.query_timeout_ms);
+        let budget = if cfg.admission_capacity_bytes == 0 {
+            cfg.device_capacity
+        } else {
+            cfg.admission_capacity_bytes
+        };
+        let admission =
+            AdmissionController::new(budget, cfg.admission_bypass_limit, cluster.metrics.clone());
+        Gateway { cluster, planner, timeout, cache, admission }
+    }
+
+    /// Plan + execute a logical query with default session options.
+    pub fn submit(&self, q: &Logical) -> Result<QueryResult> {
+        self.submit_with(q, &SessionOpts::default())
     }
 
     /// Plan + execute a logical query. With the serving cache enabled:
@@ -270,10 +310,18 @@ impl Gateway {
     /// execute → fill the result cache. The *canonical* form is what
     /// executes, so cached bytes are byte-identical to a cache-off run
     /// of any query in the same equivalence class.
-    pub fn submit(&self, q: &Logical) -> Result<QueryResult> {
+    ///
+    /// Cache misses pass through admission before touching the
+    /// cluster: the query holds a reservation sized at its per-worker
+    /// scan footprint for its whole execution. Warm hits skip
+    /// admission entirely — they cost the cluster nothing.
+    pub fn submit_with(&self, q: &Logical, opts: &SessionOpts) -> Result<QueryResult> {
+        let timeout = opts.timeout.unwrap_or(self.timeout);
+        let weight = opts.weight.max(1);
         let Some(cache) = &self.cache else {
             let plan = self.planner.plan(q)?;
-            return self.cluster.run_plan(&plan, self.timeout);
+            let _grant = self.admit(&plan, opts, timeout)?;
+            return self.cluster.run_plan_weighted(&plan, timeout, weight);
         };
         let start = Instant::now();
         let canon = canonicalize(q);
@@ -288,7 +336,8 @@ impl Gateway {
                 worker_stats: Vec::new(),
             });
         }
-        let res = self.execute_with_fragments(cache, &canon, &plan)?;
+        let _grant = self.admit(&plan, opts, timeout)?;
+        let res = self.execute_with_fragments(cache, &canon, &plan, timeout, weight)?;
         cache.insert_result(key, &res.batch, versions);
         Ok(res)
     }
@@ -302,9 +351,11 @@ impl Gateway {
         cache: &ServingCache,
         canon: &Logical,
         plan: &PhysicalPlan,
+        timeout: Duration,
+        weight: i64,
     ) -> Result<QueryResult> {
         if !cache.fragments_enabled() {
-            return self.cluster.run_plan(plan, self.timeout);
+            return self.cluster.run_plan_weighted(plan, timeout, weight);
         }
         let mut rewritten = canon.clone();
         let mut rewrote = false;
@@ -317,7 +368,7 @@ impl Gateway {
                     // fill: run the frontier as its own query and keep
                     // the materialized batch for future drill-downs
                     let fplan = cache.plan_for(&self.planner, frontier)?;
-                    let fres = self.cluster.run_plan(&fplan, self.timeout)?;
+                    let fres = self.cluster.run_plan_weighted(&fplan, timeout, weight)?;
                     let data = cache.insert_fragment(fkey, &fres.batch, fversions);
                     if frontier == canon {
                         // the whole query IS the frontier — done
@@ -331,17 +382,19 @@ impl Gateway {
         }
         if rewrote {
             let plan = self.planner.plan(&rewritten)?;
-            self.cluster.run_plan(&plan, self.timeout)
+            self.cluster.run_plan_weighted(&plan, timeout, weight)
         } else {
-            self.cluster.run_plan(plan, self.timeout)
+            self.cluster.run_plan_weighted(plan, timeout, weight)
         }
     }
 
     /// Execute a pre-built physical plan (bench harness path). Fronted
     /// by the exact-result cache only — fragments need the logical
-    /// tree.
+    /// tree. Cache misses go through admission like `submit_with`.
     pub fn submit_plan(&self, plan: &PhysicalPlan) -> Result<QueryResult> {
+        let opts = SessionOpts::default();
         let Some(cache) = &self.cache else {
+            let _grant = self.admit(plan, &opts, self.timeout)?;
             return self.cluster.run_plan(plan, self.timeout);
         };
         let start = Instant::now();
@@ -354,9 +407,43 @@ impl Gateway {
                 worker_stats: Vec::new(),
             });
         }
+        let _grant = self.admit(plan, &opts, self.timeout)?;
         let res = self.cluster.run_plan(plan, self.timeout)?;
         cache.insert_result(key, &res.batch, versions);
         Ok(res)
+    }
+
+    /// Take an admission reservation sized at the plan's per-worker
+    /// scan footprint. Blocks (FIFO within priority class, bounded
+    /// bypassing across classes) while the aggregate admitted
+    /// footprint would exceed the budget; times out with a retryable
+    /// `ReservationTimeout { tier: "admission" }`.
+    fn admit(
+        &self,
+        plan: &PhysicalPlan,
+        opts: &SessionOpts,
+        timeout: Duration,
+    ) -> Result<AdmissionGrant> {
+        self.admission
+            .admit(opts.priority, self.scan_footprint(plan), timeout)
+    }
+
+    /// Per-worker share of the bytes `plan` scans — each worker reads
+    /// ~1/N of every table's files, and the admission budget mirrors
+    /// one worker's device capacity. Unsizable plans (no scans, or a
+    /// store that can't list) admit at 1 byte: they still serialize
+    /// behind starved waiters but don't consume budget.
+    fn scan_footprint(&self, plan: &PhysicalPlan) -> usize {
+        let mut total: u64 = 0;
+        for table in plan_tables(plan) {
+            let Ok(keys) = self.cluster.store.list(&format!("{table}/")) else {
+                continue;
+            };
+            for key in keys {
+                total += self.cluster.store.head(&key).unwrap_or(0);
+            }
+        }
+        ((total / self.cluster.config.num_workers.max(1) as u64) as usize).max(1)
     }
 }
 
@@ -387,6 +474,12 @@ impl Client {
 
     pub fn query(&self, q: &Logical) -> Result<QueryResult> {
         self.gateway.submit(q)
+    }
+
+    /// Query with explicit session options (weight, admission
+    /// priority, timeout override).
+    pub fn query_with(&self, q: &Logical, opts: &SessionOpts) -> Result<QueryResult> {
+        self.gateway.submit_with(q, opts)
     }
 
     pub fn gateway(&self) -> &Gateway {
@@ -701,5 +794,99 @@ mod tests {
         assert_eq!(r.worker_stats.len(), 2);
         assert!(r.worker_stats.iter().all(|s| s.tasks_executed > 0));
         assert!(r.total_wire_bytes() > 0, "exchange must touch the wire");
+    }
+
+    #[test]
+    fn worker_panic_becomes_query_error_and_cluster_survives() {
+        let store = store_with_tables(200);
+        let client = connect(cfg(2), store, None).unwrap();
+        let q = Logical::scan("fact", &["k", "v"])
+            .aggregate("k", vec![AggSpec::new(AggFn::Count, "v")]);
+        client.gateway().cluster.workers[1].inject_panic_next();
+        let err = client.query(&q).unwrap_err();
+        match &err {
+            crate::Error::WorkerPanic { worker_id, detail, .. } => {
+                assert_eq!(*worker_id, 1);
+                assert!(detail.contains("injected"), "payload surfaced: {detail}");
+            }
+            e => panic!("expected WorkerPanic, got {e}"),
+        }
+        assert!(!err.is_retryable(), "a panic is a bug, not pressure");
+        let m = &client.gateway().cluster.metrics;
+        assert_eq!(m.counter_value("gateway.worker_panic_total"), 1);
+        // the panicking query died alone: the same cluster serves the
+        // next submission (the seed re-panicked in the gateway here)
+        let r = client.query(&q).unwrap();
+        assert_eq!(r.batch.rows(), 50);
+        assert_eq!(
+            r.batch.column("count_v").unwrap().data.as_f64().unwrap().iter().sum::<f64>(),
+            400.0
+        );
+    }
+
+    #[test]
+    fn weighted_session_returns_identical_bytes() {
+        let store = int_store(300);
+        let plain = connect(cfg(2), store.clone(), None).unwrap();
+        let a = plain.query(&drill(0, 20)).unwrap();
+        let client = connect(cfg(2), store, None).unwrap();
+        let opts = SessionOpts { weight: 8, priority: 3, timeout: None };
+        let b = client.query_with(&drill(0, 20), &opts).unwrap();
+        assert_eq!(a.batch.encode(), b.batch.encode(), "weight is a scheduling hint only");
+        let m = &client.gateway().cluster.metrics;
+        assert_eq!(m.counter_value("gateway.admitted"), 1);
+        assert_eq!(m.counter_value("gateway.queued"), 0, "sole query admits immediately");
+    }
+
+    #[test]
+    fn put_during_execution_does_not_poison_cache() {
+        let store = int_store(200);
+        let client = connect(cached_cfg(1), store.clone(), None).unwrap();
+        let gw = client.gateway();
+        let cache = gw.cache.as_ref().unwrap();
+        let q = drill(0, 20);
+        // replay the gateway's own submit sequence deterministically:
+        // snapshot versions → execute → (concurrent writer appends) →
+        // insert. The seed inserted unconditionally, serving stale
+        // bytes for the pre-put data under a post-put version clock.
+        let canon = canonicalize(&q);
+        let plan = cache.plan_for(&gw.planner, &canon).unwrap();
+        let key = CanonicalKey::of_plan(&plan);
+        let versions = cache.version_snapshot(&canon.tables());
+        let res = gw.cluster.run_plan(&plan, gw.timeout).unwrap();
+        let schema = Schema::new(vec![
+            Field::new("k", DType::Int64),
+            Field::new("v", DType::Int64),
+        ]);
+        let batch = RecordBatch::new(vec![
+            Column::i64("k", vec![0; 50]),
+            Column::i64("v", vec![9; 50]),
+        ])
+        .unwrap();
+        let mut w = FileWriter::new(schema, Codec::None, 256);
+        w.write(batch).unwrap();
+        store.put("fact/9.ths", &w.finish().unwrap()).unwrap();
+        cache.insert_result(key.clone(), &res.batch, versions);
+        let m = cache.metrics();
+        assert_eq!(
+            m.counter_value("cache.stale_insert_dropped"),
+            1,
+            "insert must notice the version advance and drop the entry"
+        );
+        let fresh = cache.version_snapshot(&canon.tables());
+        assert!(
+            cache.lookup_result(&key, &fresh).is_none(),
+            "stale result bytes must never serve under the new version"
+        );
+        // end-to-end: the next submit recomputes over the new file
+        let after = client.query(&q).unwrap();
+        assert!(total_tasks(&after) > 0);
+        let keys = after.batch.column("k").unwrap().data.as_i64().unwrap().to_vec();
+        let sums = after.batch.column("sum_v").unwrap().data.as_f64().unwrap().to_vec();
+        let k0 = sums[keys.iter().position(|&k| k == 0).unwrap()];
+        let keys_b = res.batch.column("k").unwrap().data.as_i64().unwrap().to_vec();
+        let sums_b = res.batch.column("sum_v").unwrap().data.as_f64().unwrap().to_vec();
+        let k0_b = sums_b[keys_b.iter().position(|&k| k == 0).unwrap()];
+        assert_eq!(k0, k0_b + 450.0, "50 new rows of v=9 under k=0");
     }
 }

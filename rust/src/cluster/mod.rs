@@ -12,7 +12,11 @@
 //! [`client::Client`] is the user-facing handle.
 
 pub mod client;
+pub mod session;
 pub mod worker;
 
 pub use client::{Client, Cluster, Gateway, QueryResult, WorkerStats};
+pub use session::{
+    AdmissionController, AdmissionGrant, AdmissionQueue, QuerySession, SessionOpts,
+};
 pub use worker::Worker;

@@ -1,0 +1,543 @@
+//! Query-session layer (PR 8): one [`QuerySession`] per in-flight
+//! query, plus the admission control that makes concurrent
+//! `Gateway::submit` safe under a bounded device budget.
+//!
+//! The paper's gateway "receives queries and routes them to an
+//! available cluster"; running many queries against one cluster only
+//! works if their aggregate working sets respect the device budget the
+//! `MemoryGovernor` enforces per worker. The admission layer gates
+//! query *entry* on that budget: each query is sized by its plan's
+//! per-worker scan footprint and holds an admission [`Reservation`]
+//! for its whole execution. Refused admissions queue FIFO within a
+//! priority class; a starvation bound (`admission_bypass_limit`)
+//! guarantees a low-priority query is bypassed at most `limit` times
+//! before it becomes the head of the line and nothing may overtake it.
+//!
+//! The policy core ([`AdmissionQueue`]) is a pure, single-threaded
+//! state machine so tests (and the shrink-based property test in
+//! `tests/props.rs`) can drive every interleaving deterministically.
+//! [`AdmissionController`] wraps it with a mutex + condvar and a
+//! dedicated governor whose reservations are the proof that aggregate
+//! admitted bytes never exceed the budget.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::memory::{DeviceArena, MemoryGovernor, Reservation};
+use crate::metrics::Metrics;
+
+/// Condvar wait chunk: bounded so a missed notify can't park a
+/// submitter past its deadline (mirrors the governor's wait loop).
+const WAIT_CHUNK: Duration = Duration::from_millis(20);
+
+/// Per-submission knobs. `Default` reproduces the single-query
+/// behavior of earlier PRs exactly: weight 1 leaves the residency
+/// bonus unscaled, priority 0 is the base class, and no timeout
+/// override falls back to the gateway's `query_timeout_ms`.
+#[derive(Clone, Debug)]
+pub struct SessionOpts {
+    /// Scales the residency bonus in compute scheduling and the
+    /// promotion urgency in the movement plane. Clamped to >= 1.
+    pub weight: i64,
+    /// Admission class: higher admits first among waiters (subject to
+    /// the starvation bound). Does not affect execution, only entry.
+    pub priority: i64,
+    /// Per-session override of the gateway query timeout.
+    pub timeout: Option<Duration>,
+}
+
+impl Default for SessionOpts {
+    fn default() -> Self {
+        SessionOpts { weight: 1, priority: 0, timeout: None }
+    }
+}
+
+/// One in-flight query: identity plus the knobs it entered with. The
+/// gateway mints one per submission; its `qid` scopes every per-query
+/// counter on the workers and tags the exchange channel space.
+#[derive(Clone, Debug)]
+pub struct QuerySession {
+    pub qid: u64,
+    pub weight: i64,
+    pub priority: i64,
+    /// Wall-clock execution deadline (admission wait not included —
+    /// admission has its own deadline from the same budget).
+    pub deadline: Instant,
+}
+
+impl QuerySession {
+    pub fn new(qid: u64, opts: &SessionOpts, default_timeout: Duration) -> QuerySession {
+        let t = opts.timeout.unwrap_or(default_timeout);
+        QuerySession {
+            qid,
+            weight: opts.weight.max(1),
+            priority: opts.priority,
+            deadline: Instant::now() + t,
+        }
+    }
+}
+
+/// A waiting query in the admission queue.
+#[derive(Clone, Debug)]
+struct Ticket {
+    seq: u64,
+    priority: i64,
+    bytes: usize,
+    /// Times a younger, higher-priority ticket was admitted past this
+    /// one. Capped by construction at the bypass limit: once a ticket
+    /// reaches the limit it is *starved* and becomes the queue head —
+    /// nothing may be admitted before it.
+    bypassed: usize,
+}
+
+/// Pure admission policy: FIFO within priority class, higher class
+/// first, bounded bypassing. Strictly head-of-line: only the current
+/// [`candidate`](AdmissionQueue::candidate) may be admitted, so a
+/// small query can never slip past a starved large one (no unbounded
+/// "fit anyone who fits" starvation).
+///
+/// Byte accounting lives here too so the machine is self-contained
+/// for deterministic tests; the controller mirrors each admission
+/// with a real governor [`Reservation`] of the same size.
+pub struct AdmissionQueue {
+    capacity: usize,
+    bypass_limit: usize,
+    next_seq: u64,
+    waiting: Vec<Ticket>,
+    /// ticket seq -> bytes, for admitted-but-unfinished queries.
+    admitted: HashMap<u64, usize>,
+    admitted_bytes: usize,
+}
+
+impl AdmissionQueue {
+    /// `capacity` is the aggregate admitted-bytes budget;
+    /// `bypass_limit` the starvation bound (>= 1).
+    pub fn new(capacity: usize, bypass_limit: usize) -> AdmissionQueue {
+        AdmissionQueue {
+            capacity: capacity.max(1),
+            bypass_limit: bypass_limit.max(1),
+            next_seq: 0,
+            waiting: Vec::new(),
+            admitted: HashMap::new(),
+            admitted_bytes: 0,
+        }
+    }
+
+    /// Enqueue a query; returns its ticket id. Footprints beyond the
+    /// budget are clamped so an oversized scan degrades to "runs
+    /// alone" instead of waiting forever.
+    pub fn arrive(&mut self, priority: i64, bytes: usize) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.waiting.push(Ticket {
+            seq,
+            priority,
+            bytes: bytes.min(self.capacity),
+            bypassed: 0,
+        });
+        seq
+    }
+
+    /// The only ticket eligible for admission right now: the oldest
+    /// starved ticket if any (its bypass budget is spent), otherwise
+    /// the highest-priority ticket, oldest first within a class.
+    pub fn candidate(&self) -> Option<u64> {
+        if self.waiting.is_empty() {
+            return None;
+        }
+        let starved = self
+            .waiting
+            .iter()
+            .filter(|t| t.bypassed >= self.bypass_limit)
+            .min_by_key(|t| t.seq);
+        if let Some(t) = starved {
+            return Some(t.seq);
+        }
+        self.waiting
+            .iter()
+            .max_by_key(|t| (t.priority, std::cmp::Reverse(t.seq)))
+            .map(|t| t.seq)
+    }
+
+    /// Bytes a waiting ticket asked for.
+    pub fn bytes_of(&self, ticket: u64) -> Option<usize> {
+        self.waiting.iter().find(|t| t.seq == ticket).map(|t| t.bytes)
+    }
+
+    /// Would the candidate fit under the budget right now?
+    pub fn candidate_fits(&self) -> bool {
+        match self.candidate().and_then(|c| self.bytes_of(c)) {
+            Some(b) => self.admitted_bytes + b <= self.capacity,
+            None => false,
+        }
+    }
+
+    /// Commit an admission decided elsewhere (the controller, after
+    /// its governor reservation succeeded). `ticket` MUST be the
+    /// current candidate — admitting anything else would break the
+    /// head-of-line guarantee, so this panics in debug builds.
+    pub fn commit(&mut self, ticket: u64) {
+        debug_assert_eq!(self.candidate(), Some(ticket), "admitting a non-candidate");
+        let idx = self
+            .waiting
+            .iter()
+            .position(|t| t.seq == ticket)
+            .expect("commit of unknown ticket");
+        let t = self.waiting.remove(idx);
+        // Every older waiter was just overtaken. None of them can be
+        // at the limit already (a starved older ticket would itself
+        // have been the candidate), so bypassed never exceeds the
+        // limit.
+        for w in self.waiting.iter_mut().filter(|w| w.seq < t.seq) {
+            w.bypassed += 1;
+        }
+        self.admitted_bytes += t.bytes;
+        self.admitted.insert(t.seq, t.bytes);
+    }
+
+    /// Admit the candidate if it fits; pure-path equivalent of the
+    /// controller's reserve-then-commit. Returns the admitted ticket.
+    pub fn try_admit(&mut self) -> Option<u64> {
+        if !self.candidate_fits() {
+            return None;
+        }
+        let c = self.candidate()?;
+        self.commit(c);
+        Some(c)
+    }
+
+    /// Query finished: return its bytes to the budget.
+    pub fn release(&mut self, ticket: u64) {
+        if let Some(b) = self.admitted.remove(&ticket) {
+            self.admitted_bytes -= b;
+        }
+    }
+
+    /// Abandon a waiting ticket (admission timeout).
+    pub fn cancel(&mut self, ticket: u64) {
+        self.waiting.retain(|t| t.seq != ticket);
+    }
+
+    pub fn admitted_bytes(&self) -> usize {
+        self.admitted_bytes
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// `(seq, priority, bypassed)` of every waiter — test
+    /// introspection for the fairness invariants.
+    pub fn waiting_snapshot(&self) -> Vec<(u64, i64, usize)> {
+        self.waiting.iter().map(|t| (t.seq, t.priority, t.bypassed)).collect()
+    }
+}
+
+struct CtrlState {
+    queue: AdmissionQueue,
+    /// Admissions decided but not yet collected by their submitter:
+    /// ticket -> the governor reservation backing it.
+    ready: HashMap<u64, Reservation>,
+}
+
+struct CtrlInner {
+    state: Mutex<CtrlState>,
+    cv: Condvar,
+    governor: MemoryGovernor,
+    metrics: Arc<Metrics>,
+}
+
+/// Blocking front of the admission queue. Each admitted query holds a
+/// [`Reservation`] against a dedicated governor sized at the gateway's
+/// admission budget, so `governor.reserved() <= capacity` *is* the
+/// admission bound — the same RAII discipline the workers use for
+/// operator memory, applied one level up.
+#[derive(Clone)]
+pub struct AdmissionController {
+    inner: Arc<CtrlInner>,
+}
+
+/// RAII admission: holds the ticket and its reservation for the
+/// query's whole execution; dropping it (success or error) returns
+/// the bytes and wakes waiting submitters.
+pub struct AdmissionGrant {
+    inner: Arc<CtrlInner>,
+    ticket: u64,
+    reservation: Option<Reservation>,
+}
+
+impl AdmissionGrant {
+    /// Bytes this admission holds against the budget.
+    pub fn bytes(&self) -> usize {
+        self.reservation.as_ref().map(|r| r.bytes()).unwrap_or(0)
+    }
+}
+
+impl Drop for AdmissionGrant {
+    fn drop(&mut self) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.queue.release(self.ticket);
+        // Release the governor bytes while still holding the queue
+        // lock so a waiter pumped by notify sees both books balanced.
+        drop(self.reservation.take());
+        let ready = self.inner.pump(&mut st);
+        drop(st);
+        if ready {
+            self.inner.cv.notify_all();
+        }
+    }
+}
+
+impl CtrlInner {
+    /// Admit every candidate that now fits. Returns true if anything
+    /// became ready (callers notify outside the lock).
+    fn pump(&self, st: &mut CtrlState) -> bool {
+        let mut any = false;
+        while st.queue.candidate_fits() {
+            let c = st.queue.candidate().expect("fits implies candidate");
+            let bytes = st.queue.bytes_of(c).expect("candidate has bytes");
+            let Some(r) = self.governor.try_reserve(bytes) else {
+                // Dedicated governor disagrees with queue accounting —
+                // only possible if someone reserved against it out of
+                // band. Stop pumping; the next release retries.
+                break;
+            };
+            st.queue.commit(c);
+            st.ready.insert(c, r);
+            let g = self.metrics.gauge("gateway.admission_peak_bytes");
+            let now = self.governor.reserved() as i64;
+            if now > g.get() {
+                g.set(now);
+            }
+            any = true;
+        }
+        any
+    }
+}
+
+impl AdmissionController {
+    /// `capacity` = admission budget in bytes (the gateway passes
+    /// `admission_capacity_bytes`, or `device_capacity` when 0);
+    /// `bypass_limit` = starvation bound.
+    pub fn new(capacity: usize, bypass_limit: usize, metrics: Arc<Metrics>) -> AdmissionController {
+        let capacity = capacity.max(1);
+        AdmissionController {
+            inner: Arc::new(CtrlInner {
+                state: Mutex::new(CtrlState {
+                    queue: AdmissionQueue::new(capacity, bypass_limit),
+                    ready: HashMap::new(),
+                }),
+                cv: Condvar::new(),
+                governor: MemoryGovernor::new(DeviceArena::new(capacity)),
+                metrics,
+            }),
+        }
+    }
+
+    /// Block until admitted or `timeout` elapses. On timeout the
+    /// ticket is withdrawn and the caller gets the same
+    /// [`Error::ReservationTimeout`] shape operators see, with tier
+    /// `"admission"` so callers can tell entry pressure from
+    /// execution pressure (it is retryable).
+    pub fn admit(&self, priority: i64, bytes: usize, timeout: Duration) -> Result<AdmissionGrant> {
+        let start = Instant::now();
+        let deadline = start + timeout;
+        let inner = &self.inner;
+        let mut st = inner.state.lock().unwrap();
+        let ticket = st.queue.arrive(priority, bytes);
+        if inner.pump(&mut st) {
+            inner.cv.notify_all();
+        }
+        if !st.ready.contains_key(&ticket) {
+            inner.metrics.counter("gateway.queued").inc();
+        }
+        loop {
+            if let Some(r) = st.ready.remove(&ticket) {
+                drop(st);
+                inner.metrics.counter("gateway.admitted").inc();
+                inner
+                    .metrics
+                    .histogram("gateway.admission_wait_ms")
+                    .record(start.elapsed());
+                return Ok(AdmissionGrant {
+                    inner: inner.clone(),
+                    ticket,
+                    reservation: Some(r),
+                });
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                st.queue.cancel(ticket);
+                return Err(Error::ReservationTimeout {
+                    requested: bytes,
+                    tier: "admission",
+                    waited_ms: start.elapsed().as_millis() as u64,
+                });
+            }
+            let chunk = WAIT_CHUNK.min(deadline - now);
+            let (guard, _) = inner.cv.wait_timeout(st, chunk).unwrap();
+            st = guard;
+            // A grant may have been released without pumping our
+            // ticket in (capacity freed but notify raced): pump here
+            // so progress never depends on who woke first.
+            if inner.pump(&mut st) {
+                inner.cv.notify_all();
+            }
+        }
+    }
+
+    /// Aggregate bytes currently held by admitted queries — backed by
+    /// the governor, not the queue's shadow accounting.
+    pub fn reserved_bytes(&self) -> usize {
+        self.inner.governor.reserved()
+    }
+
+    /// Admission budget.
+    pub fn capacity(&self) -> usize {
+        self.inner.state.lock().unwrap().queue.capacity()
+    }
+
+    /// Queries waiting for admission right now.
+    pub fn waiting(&self) -> usize {
+        self.inner.state.lock().unwrap().queue.waiting_len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_within_class_and_priority_across() {
+        let mut q = AdmissionQueue::new(100, 4);
+        let a = q.arrive(0, 10);
+        let b = q.arrive(0, 10);
+        let hi = q.arrive(5, 10);
+        // higher class first, then FIFO within class 0
+        assert_eq!(q.try_admit(), Some(hi));
+        assert_eq!(q.try_admit(), Some(a));
+        assert_eq!(q.try_admit(), Some(b));
+        assert_eq!(q.try_admit(), None);
+        assert_eq!(q.admitted_bytes(), 30);
+        q.release(a);
+        assert_eq!(q.admitted_bytes(), 20);
+    }
+
+    #[test]
+    fn head_of_line_blocks_small_fits() {
+        let mut q = AdmissionQueue::new(100, 4);
+        let big = q.arrive(0, 90);
+        let small = q.arrive(0, 10);
+        assert_eq!(q.try_admit(), Some(big));
+        let big2 = q.arrive(0, 90);
+        // small is older than big2, same class: small is the candidate
+        // and fits in the remaining 10 bytes.
+        assert_eq!(q.candidate(), Some(small));
+        assert_eq!(q.try_admit(), Some(small));
+        // big2 doesn't fit (90 + 100 > 100): nothing admitted, and no
+        // later arrival may slip past it within its class.
+        let small2 = q.arrive(0, 1);
+        assert_eq!(q.candidate(), Some(big2));
+        assert_eq!(q.try_admit(), None, "strict head-of-line");
+        q.release(big);
+        q.release(small);
+        assert_eq!(q.try_admit(), Some(big2));
+        assert_eq!(q.try_admit(), Some(small2));
+    }
+
+    #[test]
+    fn starvation_bound_promotes_bypassed_ticket() {
+        let limit = 2;
+        let mut q = AdmissionQueue::new(100, limit);
+        let low = q.arrive(0, 10);
+        // high-priority arrivals keep overtaking low...
+        for i in 0..limit {
+            let hi = q.arrive(9, 10);
+            assert_eq!(q.try_admit(), Some(hi), "round {i}");
+            q.release(hi);
+        }
+        // ...until its bypass budget is spent: now it is the head and
+        // even a fresh priority-9 arrival cannot pass it.
+        let snap = q.waiting_snapshot();
+        assert_eq!(snap, vec![(low, 0, limit)]);
+        let hi = q.arrive(9, 10);
+        assert_eq!(q.candidate(), Some(low));
+        assert_eq!(q.try_admit(), Some(low));
+        assert_eq!(q.try_admit(), Some(hi));
+    }
+
+    #[test]
+    fn oversized_footprint_clamped_to_capacity() {
+        let mut q = AdmissionQueue::new(50, 4);
+        let huge = q.arrive(0, usize::MAX);
+        assert_eq!(q.bytes_of(huge), Some(50));
+        assert_eq!(q.try_admit(), Some(huge), "oversized query runs alone");
+        assert_eq!(q.admitted_bytes(), 50);
+    }
+
+    #[test]
+    fn controller_admits_within_budget_and_blocks_overflow() {
+        let m = Arc::new(Metrics::default());
+        let ctl = AdmissionController::new(100, 4, m.clone());
+        let g1 = ctl.admit(0, 60, Duration::from_secs(1)).unwrap();
+        assert_eq!(g1.bytes(), 60);
+        assert_eq!(ctl.reserved_bytes(), 60);
+        // 60 + 60 > 100: second admission must time out
+        let err = ctl.admit(0, 60, Duration::from_millis(50)).unwrap_err();
+        match err {
+            Error::ReservationTimeout { tier, requested, .. } => {
+                assert_eq!(tier, "admission");
+                assert_eq!(requested, 60);
+            }
+            e => panic!("unexpected error: {e}"),
+        }
+        assert!(err.is_retryable());
+        assert_eq!(m.counter_value("gateway.queued"), 1);
+        assert_eq!(m.counter_value("gateway.admitted"), 1);
+        // budget frees on drop; next admit is immediate
+        drop(g1);
+        assert_eq!(ctl.reserved_bytes(), 0);
+        let g2 = ctl.admit(0, 100, Duration::from_millis(50)).unwrap();
+        assert_eq!(ctl.reserved_bytes(), 100);
+        assert!(m.gauge_value("gateway.admission_peak_bytes") >= 100);
+        drop(g2);
+    }
+
+    #[test]
+    fn controller_hands_freed_budget_to_waiter() {
+        let m = Arc::new(Metrics::default());
+        let ctl = AdmissionController::new(100, 4, m.clone());
+        let g1 = ctl.admit(0, 80, Duration::from_secs(1)).unwrap();
+        let ctl2 = ctl.clone();
+        let waiter = std::thread::spawn(move || {
+            ctl2.admit(0, 80, Duration::from_secs(5)).map(|g| g.bytes())
+        });
+        // let the waiter queue up, then free the budget
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(ctl.waiting(), 1);
+        drop(g1);
+        assert_eq!(waiter.join().unwrap().unwrap(), 80);
+        assert_eq!(m.counter_value("gateway.admitted"), 2);
+        assert_eq!(m.counter_value("gateway.queued"), 1);
+        assert!(m.histogram("gateway.admission_wait_ms").count() >= 2);
+    }
+
+    #[test]
+    fn session_opts_defaults_match_single_query_behavior() {
+        let o = SessionOpts::default();
+        assert_eq!((o.weight, o.priority), (1, 0));
+        assert!(o.timeout.is_none());
+        let s = QuerySession::new(7, &o, Duration::from_secs(300));
+        assert_eq!(s.qid, 7);
+        assert_eq!(s.weight, 1);
+        // weight is clamped up so it can never zero out the bonus
+        let s = QuerySession::new(8, &SessionOpts { weight: -3, ..o }, Duration::from_secs(1));
+        assert_eq!(s.weight, 1);
+    }
+}

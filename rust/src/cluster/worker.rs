@@ -3,7 +3,7 @@
 //! endpoint. The worker's driver loop polls the query DAG for ready
 //! tasks and feeds the Compute Executor until the DAG completes.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -23,6 +23,8 @@ use crate::storage::object_store::ObjectStore;
 use crate::types::RecordBatch;
 use crate::{Error, Result};
 
+use super::client::WorkerStats;
+
 pub struct Worker {
     pub ctx: WorkerCtx,
     pub queue: Arc<TaskQueue>,
@@ -36,6 +38,9 @@ pub struct Worker {
     pub router: Arc<Router>,
     pub holders: Arc<HolderRegistry>,
     stopped: AtomicBool,
+    /// Test hook: makes the next `run_query` panic, exercising the
+    /// gateway's worker-panic containment path.
+    inject_panic: AtomicBool,
 }
 
 impl Worker {
@@ -183,32 +188,68 @@ impl Worker {
             router,
             holders,
             stopped: AtomicBool::new(false),
+            inject_panic: AtomicBool::new(false),
         }))
     }
 
-    /// Execute `plan`; returns this worker's share of the result. The
-    /// driver loop is the paper's Operator-polling: ready tasks go to
-    /// the Compute Executor's priority queue; the other three executors
-    /// work the same queue from their own angles.
+    /// Execute `plan`; returns this worker's share of the result plus
+    /// this query's statistics. The driver loop is the paper's
+    /// Operator-polling: ready tasks go to the Compute Executor's
+    /// priority queue; the other three executors work the same queue
+    /// from their own angles.
+    ///
+    /// Multi-query safe: every counter in the returned [`WorkerStats`]
+    /// is scoped to `query_id` (the earlier snapshot/delta scheme read
+    /// worker-lifetime totals, so two overlapping queries each counted
+    /// the other's work), `weight` scales this query's residency bonus
+    /// and promotion urgency, and cleanup removes only this query's
+    /// holders and counters instead of resetting the whole worker.
     pub fn run_query(
         &self,
         plan: &PhysicalPlan,
         query_id: u64,
+        weight: i64,
+        timeout: Duration,
+    ) -> Result<(RecordBatch, WorkerStats)> {
+        if self.inject_panic.swap(false, Ordering::Relaxed) {
+            panic!(
+                "injected worker panic (worker {} query {query_id})",
+                self.ctx.worker_id
+            );
+        }
+        // Per-query environment: a fresh demotion counter, so spills
+        // are attributed to the holders this query's DAG builds (the
+        // only increment paths go through holder envs), not to the
+        // worker lifetime.
+        let mut qctx = self.ctx.clone();
+        qctx.env.demotions = Arc::new(AtomicU64::new(0));
+        let res = self.drive(plan, &qctx, query_id, weight, timeout);
+        let stats = self.query_stats(&qctx, query_id);
+        self.clear_query(query_id);
+        res.map(|batch| (batch, stats))
+    }
+
+    fn drive(
+        &self,
+        plan: &PhysicalPlan,
+        qctx: &WorkerCtx,
+        query_id: u64,
+        weight: i64,
         timeout: Duration,
     ) -> Result<RecordBatch> {
-        let dag = QueryDag::build(plan, &self.ctx, &self.router, &self.holders, query_id)?;
+        let dag = QueryDag::build(plan, qctx, &self.router, &self.holders, query_id)?;
         let deadline = Instant::now() + timeout;
         loop {
             if self.stopped.load(Ordering::Relaxed) {
                 return Err(Error::Shutdown);
             }
-            if let Some(e) = self.compute.take_failure() {
+            if let Some(e) = self.compute.take_failure_for(query_id) {
                 return Err(e);
             }
-            let tasks = dag.poll(&self.ctx)?;
+            let tasks = dag.poll(qctx)?;
             let had_tasks = !tasks.is_empty();
             for t in tasks {
-                self.queue.submit(t);
+                self.queue.submit(t.with_query(query_id, weight));
             }
             if dag.all_done() && self.queue.quiescent() {
                 // drain the root holder into the result
@@ -232,11 +273,43 @@ impl Worker {
         }
     }
 
-    /// Per-query cleanup between runs (holders are per-DAG and die with
-    /// it; the registry list must be reset so stale holders don't pin
-    /// memory accounting).
-    pub fn reset(&self) {
-        self.holders.clear();
+    /// Assemble this query's statistics from the per-qid counter
+    /// scopes. `device_peak_bytes` stays a worker-level gauge — the
+    /// arena high-water mark is shared by design.
+    fn query_stats(&self, qctx: &WorkerCtx, query_id: u64) -> WorkerStats {
+        let (pre, wire, compress_time) = self.network.query_net((query_id % 65536) as u16);
+        WorkerStats {
+            worker_id: self.ctx.worker_id,
+            tasks_executed: self.compute.executed_for(query_id),
+            task_retries: self.compute.retries_for(query_id),
+            spills: qctx.env.demotions(),
+            spilled_bytes: self.movement.spilled_bytes_for(query_id),
+            preload_byte_ranges: self.preload.loads_for(query_id),
+            preload_promotions: self.movement.promotions_for(query_id),
+            net_bytes_precompress: pre,
+            net_bytes_wire: wire,
+            compress_time,
+            device_peak_bytes: self.ctx.env.arena.peak(),
+        }
+    }
+
+    /// Drop one finished query's counter scopes and any holders its
+    /// DAG left registered. Other in-flight queries are untouched —
+    /// this replaces the old cluster-wide `reset()` that cleared every
+    /// query's holders between runs.
+    fn clear_query(&self, query_id: u64) {
+        self.compute.clear_query(query_id);
+        self.movement.clear_query(query_id);
+        self.preload.clear_query(query_id);
+        self.network.clear_query((query_id % 65536) as u16);
+        self.holders.clear_query(query_id);
+    }
+
+    /// Make the next `run_query` on this worker panic (regression
+    /// harness for gateway panic containment).
+    #[doc(hidden)]
+    pub fn inject_panic_next(&self) {
+        self.inject_panic.store(true, Ordering::Relaxed);
     }
 
     pub fn stop(&self) {

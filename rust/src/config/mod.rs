@@ -39,6 +39,25 @@
 //! Nonzero budgets must be at least 1 KiB (anything smaller could never
 //! admit an entry). Cache bytes are accounted against a gateway-side
 //! memory governor; refused grows evict LRU entries rather than wedge.
+//!
+//! ## Gateway session knobs
+//!
+//! The concurrent-submission session layer (see [`crate::cluster`]) is
+//! tuned by three knobs:
+//!
+//! | knob                       | default  | constraint |
+//! |----------------------------|----------|------------|
+//! | `query_timeout_ms`         | 300000   | `>= 1`     |
+//! | `admission_capacity_bytes` | 0        | none (0 = device_capacity) |
+//! | `admission_bypass_limit`   | 4        | `>= 1`     |
+//!
+//! `query_timeout_ms` is the per-query execution deadline; sessions can
+//! override it per submission. `admission_capacity_bytes` caps the
+//! aggregate scan footprint of concurrently *admitted* queries (0 uses
+//! the worker device capacity — admission then mirrors governor
+//! headroom). `admission_bypass_limit` is the starvation bound: a
+//! queued query may be overtaken by at most this many later, higher-
+//! priority arrivals before it becomes the forced head of the queue.
 
 pub mod toml_lite;
 
@@ -196,6 +215,20 @@ pub struct WorkerConfig {
     /// reservation grow evicts LRU entries, it never wedges a query.
     pub fragment_cache_bytes: usize,
 
+    // ---- gateway session layer (see `crate::cluster::session`)
+    /// Per-query execution deadline, ms (was hardcoded to 300 s in the
+    /// gateway). Sessions can override it per submission via
+    /// `SessionOpts::timeout`. Must be >= 1.
+    pub query_timeout_ms: u64,
+    /// Aggregate scan-footprint budget for concurrently admitted
+    /// queries, bytes. `0` (the default) uses `device_capacity`, so
+    /// admission mirrors per-worker governor headroom.
+    pub admission_capacity_bytes: usize,
+    /// Starvation bound for the admission queue: a waiting query is
+    /// overtaken by at most this many later, higher-priority admissions
+    /// before it is served strictly next. Must be >= 1.
+    pub admission_bypass_limit: usize,
+
     // ---- network executor
     /// Compress batches before sending (Fig-4 B, E toggles this).
     pub net_compression: Option<Codec>,
@@ -250,6 +283,9 @@ impl Default for WorkerConfig {
             exchange_initial_credits: 32,
             result_cache_bytes: 0,
             fragment_cache_bytes: 0,
+            query_timeout_ms: 300_000,
+            admission_capacity_bytes: 0,
+            admission_bypass_limit: 4,
             net_compression: Some(Codec::Zstd { level: 1 }),
             transport: TransportKind::Inproc,
             max_frame_bytes: crate::network::frame::DEFAULT_MAX_FRAME_BYTES,
@@ -381,6 +417,11 @@ impl WorkerConfig {
         set_usize!(exchange_initial_credits);
         set_usize!(result_cache_bytes);
         set_usize!(fragment_cache_bytes);
+        set_usize!(admission_capacity_bytes);
+        set_usize!(admission_bypass_limit);
+        if let Some(v) = get("query_timeout_ms") {
+            self.query_timeout_ms = v.as_int()? as u64;
+        }
         if let Some(v) = get("pinned_pool") {
             self.pinned_pool = v.as_bool()?;
         }
@@ -580,6 +621,22 @@ impl WorkerConfig {
                      would be refused"
                 )));
             }
+        }
+        if self.query_timeout_ms == 0 {
+            return Err(Error::Config(
+                "query_timeout_ms must be >= 1 (a zero deadline would expire \
+                 every query before its first task runs)"
+                    .into(),
+            ));
+        }
+        if self.admission_bypass_limit == 0 {
+            return Err(Error::Config(
+                "admission_bypass_limit must be >= 1 (a zero bound makes the \
+                 admission queue strictly FIFO across priorities, which \
+                 defeats priority scheduling; use 1 for the tightest legal \
+                 bound)"
+                    .into(),
+            ));
         }
         if self.pinned_pool && (self.pinned_buf_size == 0 || self.pinned_buffers == 0) {
             return Err(Error::Config("pinned pool dimensions must be >= 1".into()));
@@ -825,6 +882,31 @@ mod tests {
         let mut cfg = WorkerConfig::default();
         cfg.fragment_cache_bytes = 1;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn session_knobs_default_and_validate() {
+        let cfg = WorkerConfig::default();
+        assert_eq!(cfg.query_timeout_ms, 300_000, "matches the old hardcoded 300 s");
+        assert_eq!(cfg.admission_capacity_bytes, 0, "0 = device_capacity");
+        assert_eq!(cfg.admission_bypass_limit, 4);
+        cfg.validate().unwrap();
+        let doc = TomlLite::parse(
+            "query_timeout_ms = 1500\nadmission_capacity_bytes = 1048576\n\
+             admission_bypass_limit = 2\n",
+        )
+        .unwrap();
+        let mut cfg = WorkerConfig::default();
+        cfg.apply(&doc).unwrap();
+        assert_eq!(cfg.query_timeout_ms, 1500);
+        assert_eq!(cfg.admission_capacity_bytes, 1 << 20);
+        assert_eq!(cfg.admission_bypass_limit, 2);
+        let mut cfg = WorkerConfig::default();
+        cfg.query_timeout_ms = 0;
+        assert!(cfg.validate().is_err(), "zero deadline rejected");
+        let mut cfg = WorkerConfig::default();
+        cfg.admission_bypass_limit = 0;
+        assert!(cfg.validate().is_err(), "zero bypass bound rejected");
     }
 
     #[test]

@@ -62,6 +62,16 @@ pub enum Error {
     #[error("query cancelled: {0}")]
     Cancelled(String),
 
+    /// A worker's query-driver thread panicked. Scoped to the query
+    /// that was running: the cluster itself survives and keeps serving
+    /// other sessions.
+    #[error("worker {worker_id} panicked during query {query_id}: {detail}")]
+    WorkerPanic {
+        worker_id: usize,
+        query_id: u64,
+        detail: String,
+    },
+
     #[error("{0}")]
     Internal(String),
 }

@@ -95,7 +95,7 @@ impl QueryDag {
                     format!("q{query_id}.op{}.exchange.rx", node.id),
                     ctx.env.clone(),
                 );
-                holders.register(node.id, h.clone());
+                holders.register(query_id, node.id, h.clone());
                 let rx = Arc::new(ChannelRx::new(h, ctx.num_workers()));
                 router.register(channel, rx.clone());
                 channels.push(channel);
@@ -113,7 +113,7 @@ impl QueryDag {
                 OpSpec::Exchange { .. } => rx_of[&node.id].holder.clone(),
                 _ => {
                     let h = BatchHolder::new(hname("out"), ctx.env.clone());
-                    holders.register(node.id, h.clone());
+                    holders.register(query_id, node.id, h.clone());
                     h
                 }
             };
@@ -180,7 +180,7 @@ impl QueryDag {
                     };
                     let pending =
                         BatchHolder::new(hname("pending"), ctx.env.clone());
-                    holders.register(node.id, pending.clone());
+                    holders.register(query_id, node.id, pending.clone());
                     let op = Arc::new(ExchangeOp::new(
                         node.id,
                         prio,

@@ -63,6 +63,16 @@ pub struct Task {
     pub priority: i64,
     /// Retry count so far.
     pub attempts: u32,
+    /// Query this task belongs to. Stamped by the worker's driver loop
+    /// when the task enters the queue; 0 for tasks outside any query
+    /// (unit tests, maintenance). Executors key per-query counters and
+    /// failure scopes on it so concurrent queries never bleed.
+    pub qid: u64,
+    /// Per-query priority weight (session layer): scales the residency
+    /// bonus in scheduling and the promotion urgency in the movement
+    /// plane, so a latency-sensitive query's holders win promotion over
+    /// a batch query's. 1 = neutral (single-query behavior unchanged).
+    pub weight: i64,
     /// What the pre-loader may do for this task.
     pub prefetch: Option<Prefetch>,
     /// Holders this task will pop from. The Compute Executor's queue
@@ -78,7 +88,23 @@ pub struct Task {
 
 impl Task {
     pub fn new(op: usize, priority: i64, run: TaskFn) -> Task {
-        Task { op, priority, attempts: 0, prefetch: None, inputs: Vec::new(), run }
+        Task {
+            op,
+            priority,
+            attempts: 0,
+            qid: 0,
+            weight: 1,
+            prefetch: None,
+            inputs: Vec::new(),
+            run,
+        }
+    }
+
+    /// Stamp the owning query and its session weight (chainable).
+    pub fn with_query(mut self, qid: u64, weight: i64) -> Task {
+        self.qid = qid;
+        self.weight = weight.max(1);
+        self
     }
 
     pub fn with_prefetch(mut self, p: Prefetch) -> Task {
@@ -112,7 +138,8 @@ impl std::fmt::Debug for Task {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "Task(op {}, prio {}, attempts {}, inputs {}, prefetch {})",
+            "Task(q{} op {}, prio {}, attempts {}, inputs {}, prefetch {})",
+            self.qid,
             self.op,
             self.priority,
             self.attempts,

@@ -205,11 +205,18 @@ impl TaskQueue {
         self.dirty_holders.lock().unwrap().insert(holder_id);
     }
 
+    /// Base priority plus the residency bonus, scaled by the task's
+    /// session weight (PR 8): a weight-10 interactive query's
+    /// device-resident inputs outrank a weight-1 batch query's at equal
+    /// base priority, so the shared queue serves latency-sensitive work
+    /// first exactly where residency already decides ties. Weight 1
+    /// (the default) reproduces single-query scoring bit for bit.
     fn effective_priority(&self, task: &Task, age: u32) -> i64 {
         if !self.bonus.is_enabled() || task.inputs.is_empty() {
             return task.priority;
         }
-        task.priority + self.bonus.score(&task.input_residency(), age)
+        task.priority
+            + task.weight.max(1) * self.bonus.score(&task.input_residency(), age)
     }
 
     pub fn submit(&self, task: Task) {
@@ -315,7 +322,14 @@ impl TaskQueue {
                 q.priority = if q.task.inputs.is_empty() {
                     fresh
                 } else {
-                    q.task.priority + self.bonus.age_score(fresh - q.task.priority, q.age)
+                    // (fresh - base) is exactly weight * raw_score, so
+                    // dividing by weight recovers the raw age-0 score the
+                    // decay curve operates on; the weight re-applies
+                    // after aging, keeping the decay endpoint at
+                    // weight * device_bonus for every session.
+                    let w = q.task.weight.max(1);
+                    q.task.priority
+                        + w * self.bonus.age_score((fresh - q.task.priority) / w, q.age)
                 };
             }
             q.base_score = fresh;
@@ -398,13 +412,15 @@ impl TaskQueue {
         }
     }
 
-    /// Highest queued priority per operator (Data-Movement Executor:
-    /// spill holders feeding imminent tasks last, promote them first).
-    pub fn op_priorities(&self) -> std::collections::HashMap<usize, i64> {
+    /// Highest queued priority per (query, operator) pair
+    /// (Data-Movement Executor: spill holders feeding imminent tasks
+    /// last, promote them first). Keyed by qid so two concurrent
+    /// queries' same-numbered plan nodes never share a priority slot.
+    pub fn op_priorities(&self) -> std::collections::HashMap<(u64, usize), i64> {
         let heap = self.heap.lock().unwrap();
         let mut m = std::collections::HashMap::new();
         for q in heap.iter() {
-            let e = m.entry(q.task.op).or_insert(i64::MIN);
+            let e = m.entry((q.task.qid, q.task.op)).or_insert(i64::MIN);
             *e = (*e).max(q.task.priority);
         }
         m
@@ -412,14 +428,22 @@ impl TaskQueue {
 }
 
 /// The executor: `threads` workers draining the queue.
+///
+/// Counters are kept twice: lifetime totals (`executed`, `retries` —
+/// cheap atomics, cluster-level gauges) and a per-qid map so concurrent
+/// queries report stats without bleeding into each other. Failures are
+/// a per-qid map too: query A's permanent failure must abort A alone,
+/// never a query B that shares the executor.
 pub struct ComputeExecutor {
     queue: Arc<TaskQueue>,
     shutdown: Arc<AtomicBool>,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
     executed: Arc<AtomicU64>,
     retries: Arc<AtomicU64>,
-    /// First non-retryable failure (aborts the query).
-    failure: Arc<Mutex<Option<Error>>>,
+    /// qid -> (tasks executed, retries).
+    per_query: Arc<Mutex<std::collections::HashMap<u64, (u64, u64)>>>,
+    /// First non-retryable failure per query (aborts that query only).
+    failures: Arc<Mutex<std::collections::HashMap<u64, Error>>>,
 }
 
 impl ComputeExecutor {
@@ -431,7 +455,8 @@ impl ComputeExecutor {
             handles: Mutex::new(Vec::new()),
             executed: Arc::new(AtomicU64::new(0)),
             retries: Arc::new(AtomicU64::new(0)),
-            failure: Arc::new(Mutex::new(None)),
+            per_query: Arc::new(Mutex::new(std::collections::HashMap::new())),
+            failures: Arc::new(Mutex::new(std::collections::HashMap::new())),
         });
         let mut handles = Vec::new();
         for t in 0..threads.max(1) {
@@ -440,7 +465,8 @@ impl ComputeExecutor {
             let ctx = ctx.clone();
             let executed = ex.executed.clone();
             let retries = ex.retries.clone();
-            let failure = ex.failure.clone();
+            let per_query = ex.per_query.clone();
+            let failures = ex.failures.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("theseus-compute-{}-{t}", ctx.worker_id))
@@ -455,9 +481,21 @@ impl ComputeExecutor {
                             match r {
                                 Ok(()) => {
                                     executed.fetch_add(1, Ordering::Relaxed);
+                                    per_query
+                                        .lock()
+                                        .unwrap()
+                                        .entry(task.qid)
+                                        .or_insert((0, 0))
+                                        .0 += 1;
                                 }
                                 Err(e) if e.is_retryable() && task.attempts < MAX_ATTEMPTS => {
                                     retries.fetch_add(1, Ordering::Relaxed);
+                                    per_query
+                                        .lock()
+                                        .unwrap()
+                                        .entry(task.qid)
+                                        .or_insert((0, 0))
+                                        .1 += 1;
                                     task.attempts += 1;
                                     // decay priority so other work makes
                                     // room (the movement executor gets
@@ -471,10 +509,11 @@ impl ComputeExecutor {
                                 }
                                 Err(e) => {
                                     log::error!(
-                                        "task op {} failed permanently: {e}",
+                                        "task q{} op {} failed permanently: {e}",
+                                        task.qid,
                                         task.op
                                     );
-                                    failure.lock().unwrap().get_or_insert(e);
+                                    failures.lock().unwrap().entry(task.qid).or_insert(e);
                                 }
                             }
                         }
@@ -498,13 +537,41 @@ impl ComputeExecutor {
         self.retries.load(Ordering::Relaxed)
     }
 
-    /// First permanent failure, if any (take clears it).
+    /// Tasks executed for one query.
+    pub fn executed_for(&self, qid: u64) -> u64 {
+        self.per_query.lock().unwrap().get(&qid).map_or(0, |v| v.0)
+    }
+
+    /// Retries charged to one query.
+    pub fn retries_for(&self, qid: u64) -> u64 {
+        self.per_query.lock().unwrap().get(&qid).map_or(0, |v| v.1)
+    }
+
+    /// Drop per-query counters and any unclaimed failure once the query
+    /// driver has assembled its stats (the map stays bounded under a
+    /// long-lived serving process).
+    pub fn clear_query(&self, qid: u64) {
+        self.per_query.lock().unwrap().remove(&qid);
+        self.failures.lock().unwrap().remove(&qid);
+    }
+
+    /// Any query's first permanent failure, if any (take clears it).
+    /// Single-query harnesses and tests use this; the multi-query
+    /// driver path uses [`ComputeExecutor::take_failure_for`].
     pub fn take_failure(&self) -> Option<Error> {
-        self.failure.lock().unwrap().take()
+        let mut f = self.failures.lock().unwrap();
+        let qid = f.keys().next().copied()?;
+        f.remove(&qid)
+    }
+
+    /// First permanent failure charged to `qid`, if any (take clears
+    /// it). Failures of concurrent queries are left untouched.
+    pub fn take_failure_for(&self, qid: u64) -> Option<Error> {
+        self.failures.lock().unwrap().remove(&qid)
     }
 
     pub fn has_failure(&self) -> bool {
-        self.failure.lock().unwrap().is_some()
+        !self.failures.lock().unwrap().is_empty()
     }
 
     pub fn stop(&self) {
@@ -642,8 +709,60 @@ mod tests {
         });
         assert_eq!(seen, 3);
         let prios = q.op_priorities();
-        assert_eq!(prios[&7], 100);
-        assert_eq!(prios[&2], 80);
+        assert_eq!(prios[&(0, 7)], 100);
+        assert_eq!(prios[&(0, 2)], 80);
+    }
+
+    #[test]
+    fn op_priorities_scoped_per_query() {
+        // Two queries sharing the queue: the same op id must keep a
+        // separate priority slot per qid (no cross-query override).
+        let q = TaskQueue::new();
+        q.submit(task(7, 100, |_| Ok(())).with_query(1, 1));
+        q.submit(task(7, 900, |_| Ok(())).with_query(2, 1));
+        let prios = q.op_priorities();
+        assert_eq!(prios[&(1, 7)], 100);
+        assert_eq!(prios[&(2, 7)], 900);
+    }
+
+    #[test]
+    fn per_query_counters_and_failures_do_not_bleed() {
+        let q = TaskQueue::new();
+        let ex = ComputeExecutor::start(WorkerCtx::test(), q.clone(), 2);
+        for _ in 0..3 {
+            q.submit(task(0, 0, |_| Ok(())).with_query(1, 1));
+        }
+        q.submit(task(0, 0, |_| Ok(())).with_query(2, 1));
+        q.submit(task(1, 0, |_| Err(Error::internal("q2 boom"))).with_query(2, 1));
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while (!q.quiescent() || ex.executed() < 4) && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(ex.executed_for(1), 3);
+        assert_eq!(ex.executed_for(2), 1);
+        assert_eq!(ex.executed(), 4, "lifetime total sums the queries");
+        // q2's failure is invisible to q1's scope...
+        assert!(ex.take_failure_for(1).is_none());
+        // ...and claimable exactly once by q2's
+        assert!(ex.take_failure_for(2).unwrap().to_string().contains("q2 boom"));
+        assert!(!ex.has_failure());
+        ex.clear_query(1);
+        assert_eq!(ex.executed_for(1), 0, "cleared scope reads empty");
+        ex.stop();
+    }
+
+    #[test]
+    fn session_weight_scales_residency_bonus() {
+        // Equal base priority, both device-resident: the weight-5
+        // session's bonus (5*50) beats the weight-1 session's (50) even
+        // though the weight-1 task was submitted first.
+        let env = MemEnv::test(1 << 20);
+        let dev = device_holder(&env);
+        let q = TaskQueue::with_residency(bonus(), Arc::new(crate::metrics::Metrics::default()));
+        q.submit(task(1, 1000, |_| Ok(())).with_input(dev.clone()).with_query(1, 1));
+        q.submit(task(2, 1000, |_| Ok(())).with_input(dev).with_query(2, 5));
+        assert_eq!(q.try_pop().unwrap().op, 2, "weighted session wins");
+        assert_eq!(q.try_pop().unwrap().op, 1);
     }
 
     // ---------------------------------------------- residency ordering

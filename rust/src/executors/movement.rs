@@ -68,14 +68,17 @@ const SWEEP: Duration = Duration::from_millis(250);
 /// another round.
 const PROMOTE_BATCHES_PER_ROUND: usize = 8;
 
-/// Holders under management, tagged by owning operator.
+/// Holders under management, tagged by owning (query, operator).
 ///
 /// `device_bytes`/`host_bytes` read each holder's atomic tier counters
 /// under the registry lock without cloning anything (the seed cloned
-/// the whole holder list per call on the monitor path).
+/// the whole holder list per call on the monitor path). The qid tag is
+/// what lets a multi-query worker unregister exactly one finished
+/// query's holders ([`HolderRegistry::clear_query`]) while concurrent
+/// queries' holders stay under management.
 #[derive(Default)]
 pub struct HolderRegistry {
-    holders: Mutex<Vec<(usize, BatchHolder)>>,
+    holders: Mutex<Vec<(u64, usize, BatchHolder)>>,
 }
 
 impl HolderRegistry {
@@ -83,12 +86,17 @@ impl HolderRegistry {
         Arc::new(HolderRegistry::default())
     }
 
-    pub fn register(&self, op: usize, holder: BatchHolder) {
-        self.holders.lock().unwrap().push((op, holder));
+    pub fn register(&self, qid: u64, op: usize, holder: BatchHolder) {
+        self.holders.lock().unwrap().push((qid, op, holder));
     }
 
     pub fn clear(&self) {
         self.holders.lock().unwrap().clear();
+    }
+
+    /// Unregister every holder belonging to one finished query.
+    pub fn clear_query(&self, qid: u64) {
+        self.holders.lock().unwrap().retain(|(q, _, _)| *q != qid);
     }
 
     pub fn len(&self) -> usize {
@@ -100,9 +108,9 @@ impl HolderRegistry {
     }
 
     /// Visit every registered holder without cloning the list.
-    pub fn for_each(&self, mut f: impl FnMut(usize, &BatchHolder)) {
-        for (op, h) in self.holders.lock().unwrap().iter() {
-            f(*op, h);
+    pub fn for_each(&self, mut f: impl FnMut(u64, usize, &BatchHolder)) {
+        for (qid, op, h) in self.holders.lock().unwrap().iter() {
+            f(*qid, *op, h);
         }
     }
 
@@ -110,14 +118,14 @@ impl HolderRegistry {
     /// reads under one lock, no clones).
     pub fn device_bytes(&self) -> usize {
         let mut total = 0;
-        self.for_each(|_, h| total += h.stats().device_bytes);
+        self.for_each(|_, _, h| total += h.stats().device_bytes);
         total
     }
 
     /// Total host bytes across registered holders.
     pub fn host_bytes(&self) -> usize {
         let mut total = 0;
-        self.for_each(|_, h| total += h.stats().host_bytes);
+        self.for_each(|_, _, h| total += h.stats().host_bytes);
         total
     }
 
@@ -126,7 +134,7 @@ impl HolderRegistry {
     /// currently lives).
     pub fn residency(&self) -> crate::memory::ResidencySnapshot {
         let mut snap = crate::memory::ResidencySnapshot::default();
-        self.for_each(|_, h| snap.merge(&h.residency()));
+        self.for_each(|_, _, h| snap.merge(&h.residency()));
         snap
     }
 }
@@ -141,6 +149,8 @@ pub enum Direction {
 /// One unit of planned data movement.
 pub struct MovementTask {
     pub holder: BatchHolder,
+    /// Query whose holder moves — per-qid spill/promotion attribution.
+    pub qid: u64,
     pub op: usize,
     pub direction: Direction,
     pub from: Tier,
@@ -287,6 +297,9 @@ pub struct DataMovementExecutor {
     spilled_bytes: AtomicU64,
     promotions: AtomicU64,
     plans: AtomicU64,
+    /// qid -> (device bytes spilled, promotions) — per-query movement
+    /// attribution for concurrent sessions.
+    per_query: Mutex<HashMap<u64, (u64, u64)>>,
     metrics: Arc<Metrics>,
 }
 
@@ -330,6 +343,7 @@ impl DataMovementExecutor {
             spilled_bytes: AtomicU64::new(0),
             promotions: AtomicU64::new(0),
             plans: AtomicU64::new(0),
+            per_query: Mutex::new(HashMap::new()),
             metrics,
         });
 
@@ -394,6 +408,22 @@ impl DataMovementExecutor {
 
     pub fn promotions(&self) -> u64 {
         self.promotions.load(Ordering::Relaxed)
+    }
+
+    /// Device bytes spilled for one query's holders.
+    pub fn spilled_bytes_for(&self, qid: u64) -> u64 {
+        self.per_query.lock().unwrap().get(&qid).map_or(0, |v| v.0)
+    }
+
+    /// Promotions staged for one query's holders.
+    pub fn promotions_for(&self, qid: u64) -> u64 {
+        self.per_query.lock().unwrap().get(&qid).map_or(0, |v| v.1)
+    }
+
+    /// Drop one finished query's movement counters (lifetime totals
+    /// keep counting).
+    pub fn clear_query(&self, qid: u64) {
+        self.per_query.lock().unwrap().remove(&qid);
     }
 
     /// Planner passes executed (event wakes + sweeps that found work).
@@ -491,12 +521,12 @@ impl DataMovementExecutor {
         from: Tier,
         need: usize,
         base: i64,
-        prios: &HashMap<usize, i64>,
+        prios: &HashMap<(u64, usize), i64>,
         victim_ids: &mut HashSet<usize>,
         out: &mut Vec<MovementTask>,
     ) {
-        let mut victims: Vec<(i64, usize, usize, BatchHolder)> = Vec::new();
-        self.registry.for_each(|op, h| {
+        let mut victims: Vec<(i64, usize, u64, usize, BatchHolder)> = Vec::new();
+        self.registry.for_each(|qid, op, h| {
             let st = h.stats();
             let bytes = match from {
                 Tier::Device => st.device_bytes,
@@ -504,14 +534,14 @@ impl DataMovementExecutor {
                 Tier::Disk => 0,
             };
             if bytes > 0 {
-                let prio = prios.get(&op).copied().unwrap_or(i64::MIN);
-                victims.push((prio, bytes, op, h.clone()));
+                let prio = prios.get(&(qid, op)).copied().unwrap_or(i64::MIN);
+                victims.push((prio, bytes, qid, op, h.clone()));
             }
         });
         victims.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
         let to = from.spill_target().unwrap_or(Tier::Disk);
         let mut remaining = need;
-        for (rank, (_, bytes, op, holder)) in victims.into_iter().enumerate() {
+        for (rank, (_, bytes, qid, op, holder)) in victims.into_iter().enumerate() {
             if remaining == 0 {
                 break;
             }
@@ -520,6 +550,7 @@ impl DataMovementExecutor {
             victim_ids.insert(holder.id());
             out.push(MovementTask {
                 holder,
+                qid,
                 op,
                 direction: Direction::Demote,
                 from,
@@ -533,16 +564,18 @@ impl DataMovementExecutor {
     /// Beneficiary selection: queued compute tasks advertising
     /// [`Prefetch::Promote`] whose holder has disk-tier batches —
     /// hottest first (by the op's best queued priority, the same
-    /// snapshot victim selection reads), and never a holder that is a
-    /// demotion victim in this same round.
+    /// snapshot victim selection reads, scaled by the owning session's
+    /// weight so a latency-sensitive query's holders win promotion over
+    /// a batch query's at equal plan depth), and never a holder that is
+    /// a demotion victim in this same round.
     fn plan_promotions(
         &self,
-        prios: &HashMap<usize, i64>,
+        prios: &HashMap<(u64, usize), i64>,
         victim_ids: &HashSet<usize>,
         out: &mut Vec<MovementTask>,
     ) {
         let mut seen: HashSet<usize> = HashSet::new();
-        let mut found: Vec<(i64, usize, BatchHolder)> = Vec::new();
+        let mut found: Vec<(i64, u64, usize, BatchHolder)> = Vec::new();
         self.queue.for_each_queued(|t| {
             if let Some(Prefetch::Promote { holder }) = &t.prefetch {
                 let id = holder.id();
@@ -550,14 +583,17 @@ impl DataMovementExecutor {
                     return;
                 }
                 if holder.stats().disk_batches > 0 {
-                    let prio = prios.get(&t.op).copied().unwrap_or(t.priority);
-                    found.push((prio, t.op, holder.clone()));
+                    let prio =
+                        prios.get(&(t.qid, t.op)).copied().unwrap_or(t.priority);
+                    let weighted = prio.saturating_mul(t.weight.max(1));
+                    found.push((weighted, t.qid, t.op, holder.clone()));
                 }
             }
         });
-        for (prio, op, holder) in found {
+        for (prio, qid, op, holder) in found {
             out.push(MovementTask {
                 holder,
+                qid,
                 op,
                 direction: Direction::Promote,
                 from: Tier::Disk,
@@ -568,6 +604,23 @@ impl DataMovementExecutor {
                 budget: PROMOTE_BATCHES_PER_ROUND,
             });
         }
+    }
+
+    /// Plan promotions against the live queue without enqueueing them —
+    /// returns `(qid, urgency)` in the order the mover would execute
+    /// (most urgent first). A deterministic observation point for tests
+    /// asserting that a weighted session's holders win promotion; it
+    /// ignores `promote_enabled` so harnesses can keep the live
+    /// promotion plane off while asserting on the plan.
+    #[doc(hidden)]
+    pub fn planned_promotions(&self) -> Vec<(u64, i64)> {
+        let prios = self.queue.op_priorities();
+        let mut tasks = Vec::new();
+        self.plan_promotions(&prios, &HashSet::new(), &mut tasks);
+        let mut order: Vec<(u64, i64)> =
+            tasks.into_iter().map(|t| (t.qid, t.urgency)).collect();
+        order.sort_by(|a, b| b.1.cmp(&a.1));
+        order
     }
 
     // ------------------------------------------------------- moving
@@ -595,6 +648,12 @@ impl DataMovementExecutor {
                     self.demotions.fetch_add(1, Ordering::Relaxed);
                     if mv.from == Tier::Device {
                         self.spilled_bytes.fetch_add(n as u64, Ordering::Relaxed);
+                        self.per_query
+                            .lock()
+                            .unwrap()
+                            .entry(mv.qid)
+                            .or_insert((0, 0))
+                            .0 += n as u64;
                     }
                 }
                 Err(e) => {
@@ -649,6 +708,12 @@ impl DataMovementExecutor {
                 Ok(true) => {
                     moved = true;
                     self.promotions.fetch_add(1, Ordering::Relaxed);
+                    self.per_query
+                        .lock()
+                        .unwrap()
+                        .entry(mv.qid)
+                        .or_insert((0, 0))
+                        .1 += 1;
                     self.metrics.counter("movement.promotions").inc();
                 }
                 Ok(false) => break,
@@ -757,7 +822,7 @@ mod tests {
         let reg = HolderRegistry::new();
         let queue = TaskQueue::new();
         let h = BatchHolder::new("a", env.clone());
-        reg.register(0, h.clone());
+        reg.register(0, 0, h.clone());
         h.push_batch(batch(1000)).unwrap(); // ~8 KB resident on device
         let cfg = MovementConfig { spill_watermark: 1.0, ..Default::default() };
         let (ex, governor) = start(&reg, &env, &queue, cfg);
@@ -780,7 +845,7 @@ mod tests {
         let reg = HolderRegistry::new();
         let queue = TaskQueue::new();
         let h = BatchHolder::new("a", env.clone());
-        reg.register(0, h.clone());
+        reg.register(0, 0, h.clone());
         let cfg = MovementConfig { spill_watermark: 0.5, ..Default::default() };
         let (ex, _governor) = start(&reg, &env, &queue, cfg);
         for _ in 0..12 {
@@ -811,8 +876,8 @@ mod tests {
         let queue = TaskQueue::new();
         let hot = BatchHolder::new("hot", env.clone());
         let cold = BatchHolder::new("cold", env.clone());
-        reg.register(1, hot.clone());
-        reg.register(2, cold.clone());
+        reg.register(0, 1, hot.clone());
+        reg.register(0, 2, cold.clone());
         hot.push_batch(batch(500)).unwrap();
         cold.push_batch(batch(500)).unwrap();
         // op 1 has a high-priority queued task; op 2 has none
@@ -843,7 +908,7 @@ mod tests {
         let reg = HolderRegistry::new();
         let queue = TaskQueue::new();
         let holder = BatchHolder::new("in", env.clone());
-        reg.register(1, holder.clone());
+        reg.register(0, 1, holder.clone());
         holder.push_batch_host(batch(100)).unwrap();
         holder.spill_host_one().unwrap();
         assert_eq!(holder.stats().disk_batches, 1);
@@ -869,7 +934,7 @@ mod tests {
         let reg = HolderRegistry::new();
         let queue = TaskQueue::new();
         let holder = BatchHolder::new("in", env.clone());
-        reg.register(1, holder.clone());
+        reg.register(0, 1, holder.clone());
         holder.push_batch_host(batch(100)).unwrap();
         holder.spill_host_one().unwrap();
         let cfg = MovementConfig { promote_enabled: false, ..Default::default() };
@@ -893,7 +958,7 @@ mod tests {
         let reg = HolderRegistry::new();
         let queue = TaskQueue::new();
         let h = BatchHolder::new("contended", env.clone());
-        reg.register(3, h.clone());
+        reg.register(0, 3, h.clone());
         const BATCHES: usize = 16;
         for _ in 0..BATCHES {
             h.push_batch(batch(200)).unwrap();
@@ -936,7 +1001,7 @@ mod tests {
         let queue = TaskQueue::with_residency(bonus, metrics.clone());
         let cold = BatchHolder::new("cold", env.clone());
         let hot = BatchHolder::new("hot", env.clone());
-        reg.register(2, cold.clone()); // only the cold holder is a victim
+        reg.register(0, 2, cold.clone()); // only the cold holder is a victim
         cold.push_batch(batch(400)).unwrap();
         hot.push_batch(batch(400)).unwrap();
 
@@ -969,13 +1034,60 @@ mod tests {
     }
 
     #[test]
+    fn session_weight_orders_promotions() {
+        // Two queries, equal base priority, both with a disk-resident
+        // holder advertising Prefetch::Promote: the weight-8 session's
+        // holder must be planned at higher urgency than the weight-1
+        // session's, and clear_query must drop exactly one query's
+        // holders from management.
+        let env = MemEnv::test(1 << 20);
+        let reg = HolderRegistry::new();
+        let queue = TaskQueue::new();
+        let mk = |name: &str| {
+            let h = BatchHolder::new(name, env.clone());
+            h.push_batch_host(batch(100)).unwrap();
+            h.spill_host_one().unwrap();
+            h
+        };
+        let batch_h = mk("batch");
+        let inter_h = mk("interactive");
+        reg.register(1, 4, batch_h.clone());
+        reg.register(2, 4, inter_h.clone());
+        // keep the live promotion plane off: we assert on the plan
+        let cfg = MovementConfig { promote_enabled: false, ..Default::default() };
+        let (ex, _governor) = start(&reg, &env, &queue, cfg);
+        queue.submit(
+            Task::new(4, 50, Arc::new(|_| Ok(())))
+                .with_query(1, 1)
+                .with_prefetch(Prefetch::Promote { holder: batch_h.clone() }),
+        );
+        queue.submit(
+            Task::new(4, 50, Arc::new(|_| Ok(())))
+                .with_query(2, 8)
+                .with_prefetch(Prefetch::Promote { holder: inter_h.clone() }),
+        );
+        let order = ex.planned_promotions();
+        assert_eq!(order.len(), 2);
+        assert_eq!(order[0].0, 2, "weighted session promoted first: {order:?}");
+        assert_eq!(order[1].0, 1);
+        assert!(order[0].1 > order[1].1, "urgency strictly higher: {order:?}");
+
+        reg.clear_query(1);
+        assert_eq!(reg.len(), 1, "only query 1's holders unregistered");
+        let mut left = Vec::new();
+        reg.for_each(|qid, _, _| left.push(qid));
+        assert_eq!(left, vec![2]);
+        ex.stop();
+    }
+
+    #[test]
     fn registry_residency_aggregates_holders() {
         let env = MemEnv::test(1 << 20);
         let reg = HolderRegistry::new();
         let a = BatchHolder::new("a", env.clone());
         let b = BatchHolder::new("b", env.clone());
-        reg.register(0, a.clone());
-        reg.register(1, b.clone());
+        reg.register(0, 0, a.clone());
+        reg.register(0, 1, b.clone());
         a.push_batch(batch(100)).unwrap();
         b.push_batch_host(batch(100)).unwrap();
         b.spill_host_one().unwrap();
@@ -991,8 +1103,8 @@ mod tests {
         let reg = HolderRegistry::new();
         let a = BatchHolder::new("a", env.clone());
         let b = BatchHolder::new("b", env.clone());
-        reg.register(0, a.clone());
-        reg.register(1, b.clone());
+        reg.register(0, 0, a.clone());
+        reg.register(0, 1, b.clone());
         a.push_batch(batch(100)).unwrap();
         b.push_batch(batch(200)).unwrap();
         b.push_batch_host(batch(50)).unwrap();

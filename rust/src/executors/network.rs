@@ -949,6 +949,11 @@ pub struct NetworkExecutor {
     sent_bytes_precompress: Arc<AtomicU64>,
     sent_bytes_wire: Arc<AtomicU64>,
     compress_ns: Arc<AtomicU64>,
+    /// Per-query send attribution, keyed by the query-id half of the
+    /// channel id (`channel >> 16`): (pre-compress bytes, wire bytes,
+    /// compress ns). Metric names are static, so per-qid data lives
+    /// here and the query driver reads it out by qid.
+    per_query: Arc<Mutex<std::collections::HashMap<u16, (u64, u64, u64)>>>,
 }
 
 impl NetworkExecutor {
@@ -974,6 +979,7 @@ impl NetworkExecutor {
             sent_bytes_precompress: Arc::new(AtomicU64::new(0)),
             sent_bytes_wire: Arc::new(AtomicU64::new(0)),
             compress_ns: Arc::new(AtomicU64::new(0)),
+            per_query: Arc::new(Mutex::new(std::collections::HashMap::new())),
         });
         let lanes = threads.max(1);
         let me = endpoint.worker_id();
@@ -987,6 +993,7 @@ impl NetworkExecutor {
             let pre = ex.sent_bytes_precompress.clone();
             let wire = ex.sent_bytes_wire.clone();
             let cns = ex.compress_ns.clone();
+            let per_query = ex.per_query.clone();
             let bounce = bounce.clone();
             handles.push(
                 std::thread::Builder::new()
@@ -1003,18 +1010,26 @@ impl NetworkExecutor {
                             };
                             let frame = match m {
                                 Outbound::Data { dst, channel, encoded } => {
-                                    pre.fetch_add(encoded.len() as u64, Ordering::Relaxed);
+                                    let pre_len = encoded.len() as u64;
+                                    pre.fetch_add(pre_len, Ordering::Relaxed);
                                     let t0 = std::time::Instant::now();
                                     let payload = build_data_payload(
                                         encoded,
                                         compression.unwrap_or(Codec::None),
                                         bounce.as_ref(),
                                     );
-                                    cns.fetch_add(
-                                        t0.elapsed().as_nanos() as u64,
-                                        Ordering::Relaxed,
-                                    );
+                                    let dt = t0.elapsed().as_nanos() as u64;
+                                    cns.fetch_add(dt, Ordering::Relaxed);
                                     wire.fetch_add(payload.len() as u64, Ordering::Relaxed);
+                                    {
+                                        let mut pq = per_query.lock().unwrap();
+                                        let e = pq
+                                            .entry((channel >> 16) as u16)
+                                            .or_insert((0, 0, 0));
+                                        e.0 += pre_len;
+                                        e.1 += payload.len() as u64;
+                                        e.2 += dt;
+                                    }
                                     Frame::data_payload(me, dst, channel, payload)
                                 }
                                 Outbound::Finish { dst, channel } => {
@@ -1098,6 +1113,25 @@ impl NetworkExecutor {
     /// CPU time spent compressing (the resource Fig-4 E reclaims).
     pub fn compress_time(&self) -> Duration {
         Duration::from_nanos(self.compress_ns.load(Ordering::Relaxed))
+    }
+
+    /// One query's send-side attribution: (pre-compress bytes, wire
+    /// bytes, compress time). `qid16` is the query-id half of the
+    /// channel id (`qid % 65536` — the same truncation channel ids
+    /// carry on the wire).
+    pub fn query_net(&self, qid16: u16) -> (u64, u64, Duration) {
+        self.per_query
+            .lock()
+            .unwrap()
+            .get(&qid16)
+            .map_or((0, 0, Duration::ZERO), |&(p, w, ns)| {
+                (p, w, Duration::from_nanos(ns))
+            })
+    }
+
+    /// Drop one finished query's send attribution.
+    pub fn clear_query(&self, qid16: u16) {
+        self.per_query.lock().unwrap().remove(&qid16);
     }
 
     /// Wait until the outbox drains *and* every popped message has left

@@ -33,6 +33,8 @@ pub struct PreloadExecutor {
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
     event: Arc<PressureEvent>,
     byte_range_loads: Arc<AtomicU64>,
+    /// qid -> byte-range loads completed for that query's scan tasks.
+    per_query: Arc<Mutex<std::collections::HashMap<u64, u64>>>,
 }
 
 impl PreloadExecutor {
@@ -55,6 +57,7 @@ impl PreloadExecutor {
             handles: Mutex::new(Vec::new()),
             event: event.clone(),
             byte_range_loads: Arc::new(AtomicU64::new(0)),
+            per_query: Arc::new(Mutex::new(std::collections::HashMap::new())),
         });
         if !enabled {
             return ex; // disabled: no threads (Fig-4 F)
@@ -70,6 +73,7 @@ impl PreloadExecutor {
             let stop = shutdown.clone();
             let ev = event.clone();
             let brl = ex.byte_range_loads.clone();
+            let per_query = ex.per_query.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("theseus-preload-{t}"))
@@ -83,7 +87,7 @@ impl PreloadExecutor {
                             if stop.load(Ordering::Relaxed) {
                                 return;
                             }
-                            Self::pass(&queue, &custom, &brl);
+                            Self::pass(&queue, &custom, &brl, &per_query);
                         }
                     })
                     .expect("spawn preload"),
@@ -96,17 +100,22 @@ impl PreloadExecutor {
     }
 
     /// One inspection pass over the queued byte-range prefetches.
-    fn pass(queue: &TaskQueue, custom: &Arc<CustomObjectStoreDatasource>, brl: &AtomicU64) {
+    fn pass(
+        queue: &TaskQueue,
+        custom: &Arc<CustomObjectStoreDatasource>,
+        brl: &AtomicU64,
+        per_query: &Mutex<std::collections::HashMap<u64, u64>>,
+    ) {
         // Snapshot prefetchable work from the queue (staging cells are
         // shared; tasks stay queued).
         let mut byte_ranges = Vec::new();
         queue.for_each_queued(|t| {
             if let Some(Prefetch::ByteRanges { key, ranges, staging }) = &t.prefetch {
-                byte_ranges.push((key.clone(), ranges.clone(), staging.clone()));
+                byte_ranges.push((t.qid, key.clone(), ranges.clone(), staging.clone()));
             }
         });
 
-        for (key, ranges, staging) in byte_ranges {
+        for (qid, key, ranges, staging) in byte_ranges {
             // claim the cell ("temporarily take ownership of the task",
             // §3.2) — skip if another thread or the compute task got it
             {
@@ -122,6 +131,7 @@ impl PreloadExecutor {
                 Ok(pages) => {
                     *s = StagingState::Done(pages);
                     brl.fetch_add(1, Ordering::Relaxed);
+                    *per_query.lock().unwrap().entry(qid).or_insert(0) += 1;
                 }
                 Err(e) => {
                     // release the claim; the compute task will fetch
@@ -134,6 +144,16 @@ impl PreloadExecutor {
 
     pub fn byte_range_loads(&self) -> u64 {
         self.byte_range_loads.load(Ordering::Relaxed)
+    }
+
+    /// Byte-range loads completed for one query.
+    pub fn loads_for(&self, qid: u64) -> u64 {
+        self.per_query.lock().unwrap().get(&qid).copied().unwrap_or(0)
+    }
+
+    /// Drop one finished query's load counter.
+    pub fn clear_query(&self, qid: u64) {
+        self.per_query.lock().unwrap().remove(&qid);
     }
 
     pub fn stop(&self) {

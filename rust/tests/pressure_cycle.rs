@@ -136,7 +136,7 @@ fn free_device(holders: &HolderRegistry, queue: &TaskQueue) {
     let mut freed = 0usize;
     loop {
         let mut victims = Vec::new();
-        holders.for_each(|_, h| {
+        holders.for_each(|_, _, h| {
             if h.stats().device_batches > 0 {
                 victims.push(h.clone());
             }
@@ -725,5 +725,206 @@ fn serving_cache_tiny_budget_evicts_instead_of_wedging() {
     assert!(
         m.gauge_value("cache.result_bytes") <= 1024,
         "resident bytes above the governor budget"
+    );
+}
+
+// --------------------------------------- concurrent gateway (PR 8)
+
+use std::time::{Duration, Instant};
+
+use theseus::cluster::AdmissionController;
+
+/// Distinct drill-down per index (different filter range ⇒ different
+/// plan, result, and cache key).
+fn facts_drill(i: i64) -> Logical {
+    Logical::scan("facts", &["k", "v"])
+        .filter(Pred::RangeI64 { col: "v".into(), lo: 0, hi: 20 + i * 10 })
+        .aggregate("k", vec![AggSpec::new(AggFn::Sum, "v")])
+        .sort("k", false)
+}
+
+fn facts_client(cfg: WorkerConfig) -> (Arc<SimObjectStore>, theseus::cluster::Client) {
+    let store = SimObjectStore::in_memory(&SimContext::test());
+    write_int_fact(&*store, 2, 1200);
+    let client = connect(cfg, store.clone(), None).unwrap();
+    (store, client)
+}
+
+/// N overlapping submissions must return byte-identical results to a
+/// serial run of the same queries, and the per-query WorkerStats
+/// scopes must partition the workers' global counters exactly — no
+/// cross-query bleed (the seed's snapshot/delta scheme read
+/// worker-lifetime totals, so overlapping queries double-counted each
+/// other's tasks, and its cluster-wide `reset()` dropped live holders
+/// of in-flight queries).
+#[test]
+fn concurrent_submissions_match_serial_and_stats_partition() {
+    const N: usize = 4;
+    let tasks_of = |r: &theseus::cluster::QueryResult| -> u64 {
+        r.worker_stats.iter().map(|s| s.tasks_executed).sum()
+    };
+
+    // serial reference on its own cluster
+    let (_, serial) = facts_client(WorkerConfig { num_workers: 2, ..WorkerConfig::test() });
+    let want: Vec<Vec<u8>> = (0..N)
+        .map(|i| serial.query(&facts_drill(i as i64)).unwrap().batch.encode())
+        .collect();
+
+    // the same N queries, overlapping on one fresh cluster
+    let (_, client) = facts_client(WorkerConfig { num_workers: 2, ..WorkerConfig::test() });
+    let got: Vec<(usize, theseus::cluster::QueryResult)> = std::thread::scope(|s| {
+        let client = &client;
+        let handles: Vec<_> = (0..N)
+            .map(|i| s.spawn(move || (i, client.query(&facts_drill(i as i64)).unwrap())))
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let mut per_query_total = 0u64;
+    for (i, r) in &got {
+        assert_eq!(
+            r.batch.encode(),
+            want[*i],
+            "query {i}: concurrent bytes differ from serial"
+        );
+        assert!(tasks_of(r) > 0, "query {i} must report its own tasks");
+        assert_eq!(r.worker_stats.len(), 2);
+        per_query_total += tasks_of(r);
+    }
+    // per-qid scopes partition the global executed counter exactly:
+    // every completion lands in exactly one query's scope
+    let global: u64 = client
+        .gateway()
+        .cluster
+        .workers
+        .iter()
+        .map(|w| w.compute.executed())
+        .sum();
+    assert_eq!(
+        global, per_query_total,
+        "per-query task counts must sum to the cluster total (no bleed, no loss)"
+    );
+    assert_eq!(
+        client.gateway().cluster.metrics.counter_value("gateway.admitted"),
+        N as u64
+    );
+}
+
+/// Admission under a budget that fits exactly one query: all
+/// submissions beyond the first queue (visible on `gateway.queued`),
+/// every queued query is eventually admitted and returns correct
+/// bytes, and the aggregate admitted footprint provably never exceeds
+/// the budget (`gateway.admission_peak_bytes` ≤ capacity).
+#[test]
+fn tiny_admission_budget_queues_retries_and_bounds_footprint() {
+    const N: usize = 4;
+    let store = SimObjectStore::in_memory(&SimContext::test());
+    write_int_fact(&*store, 2, 1200);
+    let total: u64 = store
+        .list("facts/")
+        .unwrap()
+        .iter()
+        .map(|k| store.head(k).unwrap())
+        .sum();
+    let per_worker = (total / 2).max(1) as usize; // == the gateway's own sizing
+    let plain = connect(
+        WorkerConfig { num_workers: 2, ..WorkerConfig::test() },
+        store.clone(),
+        None,
+    )
+    .unwrap();
+    let want: Vec<Vec<u8>> = (0..N)
+        .map(|i| plain.query(&facts_drill(i as i64)).unwrap().batch.encode())
+        .collect();
+
+    let client = connect(
+        WorkerConfig {
+            num_workers: 2,
+            admission_capacity_bytes: per_worker, // exactly one query fits
+            ..WorkerConfig::test()
+        },
+        store,
+        None,
+    )
+    .unwrap();
+    let gw = client.gateway();
+    // occupy the whole budget so every submission must queue first
+    let gate = gw.admission.admit(0, per_worker, Duration::from_secs(5)).unwrap();
+    let got: Vec<(usize, Vec<u8>)> = std::thread::scope(|s| {
+        let client = &client;
+        let handles: Vec<_> = (0..N)
+            .map(|i| {
+                s.spawn(move || {
+                    let r = client.query(&facts_drill(i as i64)).unwrap();
+                    (i, r.batch.encode())
+                })
+            })
+            .collect();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while gw.admission.waiting() < N {
+            assert!(Instant::now() < deadline, "submissions never queued");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        drop(gate); // budget frees: the queue drains one at a time
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (i, bytes) in &got {
+        assert_eq!(*bytes, want[*i], "queued query {i} returned wrong bytes");
+    }
+    let m = &gw.cluster.metrics;
+    assert_eq!(m.counter_value("gateway.queued"), N as u64, "all four parked");
+    assert_eq!(
+        m.counter_value("gateway.admitted"),
+        N as u64 + 1,
+        "the gate grant plus every queued query"
+    );
+    let peak = m.gauge_value("gateway.admission_peak_bytes");
+    assert!(
+        peak > 0 && peak <= per_worker as i64,
+        "aggregate admitted footprint must stay under the budget ({peak} vs {per_worker})"
+    );
+    assert!(m.histogram("gateway.admission_wait_ms").count() >= N as u64);
+    assert_eq!(gw.admission.reserved_bytes(), 0, "all grants returned");
+}
+
+/// A high-priority session submitted *after* a batch backlog admits
+/// first (priority classes order the queue), while the batch class
+/// itself stays FIFO. Arrival order is pinned by waiting-count
+/// barriers, admission order is observed through the serialized
+/// budget, so the assertion is deterministic.
+#[test]
+fn high_priority_session_admits_before_earlier_batch_waiters() {
+    let metrics = Arc::new(Metrics::default());
+    let ctl = AdmissionController::new(1000, 4, metrics);
+    let gate = ctl.admit(0, 1000, Duration::from_secs(5)).unwrap();
+    let order = Arc::new(std::sync::Mutex::new(Vec::<&'static str>::new()));
+    std::thread::scope(|s| {
+        let mut arrived = 0usize;
+        let mut arrive = |name: &'static str, priority: i64| {
+            let ctl = ctl.clone();
+            let order = order.clone();
+            s.spawn(move || {
+                let g = ctl.admit(priority, 1000, Duration::from_secs(10)).unwrap();
+                order.lock().unwrap().push(name);
+                drop(g);
+            });
+            arrived += 1;
+            let deadline = Instant::now() + Duration::from_secs(10);
+            while ctl.waiting() < arrived {
+                assert!(Instant::now() < deadline, "{name} never queued");
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        };
+        // two batch queries arrive first, then the interactive session
+        arrive("batch-a", 0);
+        arrive("batch-b", 0);
+        arrive("interactive", 9);
+        drop(gate);
+    });
+    let order = Arc::try_unwrap(order).unwrap().into_inner().unwrap();
+    assert_eq!(
+        order,
+        vec!["interactive", "batch-a", "batch-b"],
+        "priority admits past the backlog; the batch class stays FIFO"
     );
 }

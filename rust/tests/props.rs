@@ -1188,3 +1188,168 @@ fn cached_results_are_byte_identical_to_uncached_execution() {
         },
     );
 }
+
+// -------------------------------------------- admission fairness (PR 8)
+
+use theseus::cluster::AdmissionQueue;
+
+/// One step against the gateway's pure admission policy.
+#[derive(Clone, Debug)]
+enum AdmitOp {
+    /// A query arrives with an admission class and a scan footprint.
+    Arrive { priority: i64, bytes: usize },
+    /// The oldest admitted query finishes and returns its bytes.
+    Finish,
+}
+
+impl Shrink for AdmitOp {
+    fn shrink(&self) -> Vec<AdmitOp> {
+        match self {
+            AdmitOp::Arrive { priority, bytes } => {
+                let mut out = Vec::new();
+                if *bytes > 1 {
+                    out.push(AdmitOp::Arrive { priority: *priority, bytes: bytes / 2 });
+                }
+                if *priority > 0 {
+                    out.push(AdmitOp::Arrive { priority: priority / 2, bytes: *bytes });
+                }
+                out
+            }
+            AdmitOp::Finish => Vec::new(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+struct AdmitCase {
+    capacity: usize,
+    limit: usize,
+    ops: Vec<AdmitOp>,
+}
+
+impl Shrink for AdmitCase {
+    fn shrink(&self) -> Vec<AdmitCase> {
+        let mut out: Vec<AdmitCase> = self
+            .ops
+            .shrink()
+            .into_iter()
+            .map(|ops| AdmitCase { capacity: self.capacity, limit: self.limit, ops })
+            .collect();
+        if self.limit > 1 {
+            out.push(AdmitCase {
+                capacity: self.capacity,
+                limit: self.limit - 1,
+                ops: self.ops.clone(),
+            });
+        }
+        if self.capacity > 1 {
+            out.push(AdmitCase {
+                capacity: self.capacity / 2,
+                limit: self.limit,
+                ops: self.ops.clone(),
+            });
+        }
+        out
+    }
+}
+
+fn gen_admit_case(rng: &mut Rng) -> AdmitCase {
+    let n = rng.gen_range(24) as usize + 4;
+    let ops = (0..n)
+        .map(|_| match rng.gen_range(4) {
+            0..=2 => AdmitOp::Arrive {
+                priority: rng.gen_range(3) as i64,
+                bytes: rng.gen_range(80) as usize + 1,
+            },
+            _ => AdmitOp::Finish,
+        })
+        .collect();
+    AdmitCase {
+        capacity: rng.gen_range(96) as usize + 16,
+        limit: rng.gen_range(3) as usize + 1,
+        ops,
+    }
+}
+
+/// Admit everything that fits, checking after each admission that the
+/// budget holds, no same-class younger ticket overtook an older one,
+/// and no waiter's bypass count exceeds the starvation bound.
+fn admit_pump(
+    q: &mut AdmissionQueue,
+    limit: usize,
+    prio_of: &std::collections::HashMap<u64, i64>,
+    running: &mut std::collections::VecDeque<u64>,
+    last_in_class: &mut std::collections::HashMap<i64, u64>,
+) -> bool {
+    while let Some(t) = q.try_admit() {
+        if q.admitted_bytes() > q.capacity() {
+            return false; // aggregate admitted bytes exceeded the budget
+        }
+        let p = prio_of[&t];
+        if last_in_class.get(&p).is_some_and(|&prev| prev > t) {
+            return false; // admitted-order inversion within a class
+        }
+        last_in_class.insert(p, t);
+        running.push_back(t);
+    }
+    // starvation bound: bypassed never exceeds the limit for anyone
+    q.waiting_snapshot().iter().all(|&(_, _, by)| by <= limit)
+}
+
+fn admit_case_holds(case: &AdmitCase) -> bool {
+    let mut q = AdmissionQueue::new(case.capacity, case.limit);
+    let limit = case.limit.max(1);
+    let mut prio_of: std::collections::HashMap<u64, i64> = Default::default();
+    // admitted-but-unfinished, in admission order (Finish pops oldest)
+    let mut running: std::collections::VecDeque<u64> = Default::default();
+    let mut last_in_class: std::collections::HashMap<i64, u64> = Default::default();
+
+    for op in &case.ops {
+        match op {
+            AdmitOp::Arrive { priority, bytes } => {
+                let t = q.arrive(*priority, *bytes);
+                prio_of.insert(t, *priority);
+            }
+            AdmitOp::Finish => {
+                if let Some(t) = running.pop_front() {
+                    q.release(t);
+                }
+            }
+        }
+        if !admit_pump(&mut q, limit, &prio_of, &mut running, &mut last_in_class) {
+            return false;
+        }
+    }
+
+    // Liveness: finish the admitted queries one at a time; every
+    // waiter must be admitted along the way. Footprints are clamped
+    // to the capacity on arrival, so once the budget is empty the
+    // candidate always fits — if the queue ever stalls with nothing
+    // running, someone was starved outright.
+    let mut guard = 2 * case.ops.len() + 8;
+    while q.waiting_len() > 0 {
+        guard = match guard.checked_sub(1) {
+            Some(g) => g,
+            None => return false, // no forward progress
+        };
+        let before = q.waiting_len();
+        if !admit_pump(&mut q, limit, &prio_of, &mut running, &mut last_in_class) {
+            return false;
+        }
+        if q.waiting_len() == before {
+            match running.pop_front() {
+                Some(t) => q.release(t),
+                None => return false, // empty budget, yet nobody admitted
+            }
+        }
+    }
+    for t in running.drain(..) {
+        q.release(t);
+    }
+    q.admitted_bytes() == 0
+}
+
+#[test]
+fn admission_is_fair_bounded_and_always_drains() {
+    check(0xAD317, 400, gen_admit_case, admit_case_holds);
+}

@@ -50,7 +50,9 @@ pub mod key;
 
 pub use key::{canonicalize, fingerprint, hash_bytes, CanonicalKey};
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+
+use crate::sync::{ranks, OrderedMutex};
 
 use crate::memory::{DeviceArena, MemoryGovernor, Reservation};
 use crate::metrics::Metrics;
@@ -209,9 +211,9 @@ impl PlanMemo {
 
 /// The gateway-side serving cache (results + fragments + plan memo).
 pub struct ServingCache {
-    results: Mutex<Lru<RecordBatch>>,
-    fragments: Mutex<Lru<Arc<Vec<u8>>>>,
-    plans: Mutex<PlanMemo>,
+    results: OrderedMutex<Lru<RecordBatch>>,
+    fragments: OrderedMutex<Lru<Arc<Vec<u8>>>>,
+    plans: OrderedMutex<PlanMemo>,
     version: Option<SourceVersion>,
     metrics: Arc<Metrics>,
     fragment_budget: usize,
@@ -230,9 +232,21 @@ impl ServingCache {
         let r = gov.try_reserve(0).expect("zero-size reservation");
         let f = gov.try_reserve(0).expect("zero-size reservation");
         ServingCache {
-            results: Mutex::new(Lru::new(result_bytes, r)),
-            fragments: Mutex::new(Lru::new(fragment_bytes, f)),
-            plans: Mutex::new(PlanMemo { entries: Vec::new(), cap: 256 }),
+            results: OrderedMutex::new(
+                ranks::CACHE_RESULTS,
+                "cache.results",
+                Lru::new(result_bytes, r),
+            ),
+            fragments: OrderedMutex::new(
+                ranks::CACHE_FRAGMENTS,
+                "cache.fragments",
+                Lru::new(fragment_bytes, f),
+            ),
+            plans: OrderedMutex::new(
+                ranks::CACHE_PLANS,
+                "cache.plans",
+                PlanMemo { entries: Vec::new(), cap: 256 },
+            ),
             version,
             metrics: Arc::new(Metrics::default()),
             fragment_budget: fragment_bytes,
@@ -263,7 +277,7 @@ impl ServingCache {
         key: &CanonicalKey,
         versions: &VersionSnapshot,
     ) -> Option<RecordBatch> {
-        let mut lru = self.results.lock().unwrap();
+        let mut lru = self.results.lock();
         let (hit, dropped) = lru.lookup(key, versions);
         self.note("cache.result", hit.is_some(), dropped, lru.bytes);
         hit
@@ -280,7 +294,7 @@ impl ServingCache {
             return;
         }
         let bytes = batch.encoded_len();
-        let mut lru = self.results.lock().unwrap();
+        let mut lru = self.results.lock();
         let out = lru.insert(key, batch.clone(), bytes, versions);
         self.note_insert("cache.result", out, lru.bytes);
     }
@@ -292,7 +306,7 @@ impl ServingCache {
         key: &CanonicalKey,
         versions: &VersionSnapshot,
     ) -> Option<Arc<Vec<u8>>> {
-        let mut lru = self.fragments.lock().unwrap();
+        let mut lru = self.fragments.lock();
         let (hit, dropped) = lru.lookup(key, versions);
         self.note("cache.fragment", hit.is_some(), dropped, lru.bytes);
         hit
@@ -315,7 +329,7 @@ impl ServingCache {
             return data;
         }
         let bytes = data.len();
-        let mut lru = self.fragments.lock().unwrap();
+        let mut lru = self.fragments.lock();
         let out = lru.insert(key, data.clone(), bytes, versions);
         self.note_insert("cache.fragment", out, lru.bytes);
         data
@@ -347,13 +361,13 @@ impl ServingCache {
         fp.extend_from_slice(&(planner.num_workers as u64).to_le_bytes());
         fp.push(planner.lip_enabled as u8);
         let key = CanonicalKey::from_bytes(fp);
-        if let Some(p) = self.plans.lock().unwrap().get(&key) {
+        if let Some(p) = self.plans.lock().get(&key) {
             self.metrics.counter("cache.plan_memo_hit").inc();
             return Ok(p);
         }
         self.metrics.counter("cache.plan_memo_miss").inc();
         let plan = Arc::new(planner.plan(canon)?);
-        self.plans.lock().unwrap().put(key, plan.clone());
+        self.plans.lock().put(key, plan.clone());
         Ok(plan)
     }
 
@@ -362,12 +376,12 @@ impl ServingCache {
     pub fn invalidate_table(&self, table: &str) {
         let mut n = 0;
         {
-            let mut lru = self.results.lock().unwrap();
+            let mut lru = self.results.lock();
             n += lru.invalidate_table(table);
             self.metrics.gauge("cache.result_bytes").set(lru.bytes as i64);
         }
         {
-            let mut lru = self.fragments.lock().unwrap();
+            let mut lru = self.fragments.lock();
             n += lru.invalidate_table(table);
             self.metrics.gauge("cache.fragment_bytes").set(lru.bytes as i64);
         }

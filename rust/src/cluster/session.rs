@@ -21,7 +21,9 @@
 //! admitted bytes never exceed the budget.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
+
+use crate::sync::{ranks, OrderedCondvar, OrderedMutex};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
@@ -247,8 +249,8 @@ struct CtrlState {
 }
 
 struct CtrlInner {
-    state: Mutex<CtrlState>,
-    cv: Condvar,
+    state: OrderedMutex<CtrlState>,
+    cv: OrderedCondvar,
     governor: MemoryGovernor,
     metrics: Arc<Metrics>,
 }
@@ -281,15 +283,15 @@ impl AdmissionGrant {
 
 impl Drop for AdmissionGrant {
     fn drop(&mut self) {
-        let mut st = self.inner.state.lock().unwrap();
+        let mut st = self.inner.state.lock();
         st.queue.release(self.ticket);
         // Release the governor bytes while still holding the queue
-        // lock so a waiter pumped by notify sees both books balanced.
+        // lock so a waiter pumped by notify sees both books balanced
+        // (admission.state 100 -> governor.reserved 300, a declared
+        // descent).
         drop(self.reservation.take());
-        let ready = self.inner.pump(&mut st);
-        drop(st);
-        if ready {
-            self.inner.cv.notify_all();
+        if self.inner.pump(&mut st) {
+            self.inner.cv.notify_all(&st);
         }
     }
 }
@@ -329,11 +331,15 @@ impl AdmissionController {
         let capacity = capacity.max(1);
         AdmissionController {
             inner: Arc::new(CtrlInner {
-                state: Mutex::new(CtrlState {
-                    queue: AdmissionQueue::new(capacity, bypass_limit),
-                    ready: HashMap::new(),
-                }),
-                cv: Condvar::new(),
+                state: OrderedMutex::new(
+                    ranks::ADMISSION_STATE,
+                    "admission.state",
+                    CtrlState {
+                        queue: AdmissionQueue::new(capacity, bypass_limit),
+                        ready: HashMap::new(),
+                    },
+                ),
+                cv: OrderedCondvar::new(),
                 governor: MemoryGovernor::new(DeviceArena::new(capacity)),
                 metrics,
             }),
@@ -349,10 +355,10 @@ impl AdmissionController {
         let start = Instant::now();
         let deadline = start + timeout;
         let inner = &self.inner;
-        let mut st = inner.state.lock().unwrap();
+        let mut st = inner.state.lock();
         let ticket = st.queue.arrive(priority, bytes);
         if inner.pump(&mut st) {
-            inner.cv.notify_all();
+            inner.cv.notify_all(&st);
         }
         if !st.ready.contains_key(&ticket) {
             inner.metrics.counter("gateway.queued").inc();
@@ -381,13 +387,13 @@ impl AdmissionController {
                 });
             }
             let chunk = WAIT_CHUNK.min(deadline - now);
-            let (guard, _) = inner.cv.wait_timeout(st, chunk).unwrap();
+            let (guard, _) = inner.cv.wait_timeout(st, chunk);
             st = guard;
             // A grant may have been released without pumping our
             // ticket in (capacity freed but notify raced): pump here
             // so progress never depends on who woke first.
             if inner.pump(&mut st) {
-                inner.cv.notify_all();
+                inner.cv.notify_all(&st);
             }
         }
     }
@@ -400,12 +406,12 @@ impl AdmissionController {
 
     /// Admission budget.
     pub fn capacity(&self) -> usize {
-        self.inner.state.lock().unwrap().queue.capacity()
+        self.inner.state.lock().queue.capacity()
     }
 
     /// Queries waiting for admission right now.
     pub fn waiting(&self) -> usize {
-        self.inner.state.lock().unwrap().queue.waiting_len()
+        self.inner.state.lock().queue.waiting_len()
     }
 }
 

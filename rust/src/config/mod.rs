@@ -121,19 +121,24 @@ pub struct WorkerConfig {
     // ---- topology
     /// Workers in the cluster (every worker knows the fanout).
     pub num_workers: usize,
-    /// Executor thread counts ("All executors have a number of
+    /// Compute executor threads ("All executors have a number of
     /// configurable CPU threads", §3.3).
     pub compute_threads: usize,
+    /// Data-Movement executor threads (demotion/promotion plans).
     pub memory_threads: usize,
+    /// Pre-load executor threads (§3.3.3 byte-range / task preload).
     pub preload_threads: usize,
+    /// Network executor threads (send/recv pumps per transport).
     pub network_threads: usize,
 
     // ---- memory
     /// Device (simulated GPU) memory per worker, bytes.
     pub device_capacity: usize,
-    /// Pinned pool: enabled, buffer size, buffer count (§3.4; Fig-4 C).
+    /// Pinned pool enabled (§3.4; Fig-4 C).
     pub pinned_pool: bool,
+    /// Pinned pool: bytes per fixed-size buffer.
     pub pinned_buf_size: usize,
+    /// Pinned pool: number of buffers (pool capacity = size × count).
     pub pinned_buffers: usize,
     /// Data-Movement spill watermark (fraction of device capacity):
     /// allocations crossing it raise device pressure.
@@ -232,6 +237,7 @@ pub struct WorkerConfig {
     // ---- network executor
     /// Compress batches before sending (Fig-4 B, E toggles this).
     pub net_compression: Option<Codec>,
+    /// Wire transport: in-process channels or real TCP sockets.
     pub transport: TransportKind,
     /// Reject inbound frames whose length prefix claims more than this
     /// many bytes (header + payload). Length fields arrive from the
@@ -239,16 +245,21 @@ pub struct WorkerConfig {
     pub max_frame_bytes: usize,
 
     // ---- pre-load executor (§3.3.3; Fig-4 H, I)
+    /// Coalesce and prefetch scan byte ranges ahead of execution.
     pub byte_range_preload: bool,
+    /// Warm upcoming task inputs into host memory ahead of dispatch.
     pub task_preload: bool,
     /// Coalesce byte ranges closer than this many bytes.
     pub coalesce_gap: u64,
 
     // ---- storage
+    /// Datasource implementation scans use (§3.3.4, Fig-4 F→G).
     pub datasource: DatasourceKind,
 
     // ---- simulation
+    /// Simulated hardware speeds (on-prem / cloud / test).
     pub profile: HwProfile,
+    /// Simulated-time multiplier; `0` disables simulated delays.
     pub time_scale: f64,
 }
 
@@ -496,6 +507,16 @@ impl WorkerConfig {
                 }
             };
         }
+        if let Some(v) = get("spill_codec") {
+            self.spill_codec = match v.as_str()?.as_str() {
+                "none" | "off" => Codec::None,
+                "zstd" => Codec::Zstd { level: 1 },
+                "lz4" | "lz4like" => Codec::Lz4Like,
+                other => {
+                    return Err(Error::Config(format!("unknown codec '{other}'")))
+                }
+            };
+        }
         if let Some(v) = get("profile") {
             self.profile = match v.as_str()?.as_str() {
                 "on-prem" | "on_prem" => HwProfile::on_prem(),
@@ -525,6 +546,36 @@ impl WorkerConfig {
         }
         if self.compute_threads == 0 {
             return Err(Error::Config("compute_threads must be >= 1".into()));
+        }
+        if self.memory_threads == 0 {
+            return Err(Error::Config("memory_threads must be >= 1".into()));
+        }
+        if self.preload_threads == 0 {
+            return Err(Error::Config("preload_threads must be >= 1".into()));
+        }
+        if self.network_threads == 0 {
+            return Err(Error::Config("network_threads must be >= 1".into()));
+        }
+        if self.device_capacity == 0 {
+            return Err(Error::Config(
+                "device_capacity must be >= 1 (a zero-byte device admits no \
+                 allocation and wedges the first reservation)"
+                    .into(),
+            ));
+        }
+        if self.reservation_timeout_ms == 0 {
+            return Err(Error::Config(
+                "reservation_timeout_ms must be >= 1 (a zero deadline fails \
+                 every blocked reservation before demotion can run)"
+                    .into(),
+            ));
+        }
+        if !(self.time_scale >= 0.0) || !self.time_scale.is_finite() {
+            return Err(Error::Config(
+                "time_scale must be finite and >= 0 (0 disables simulated \
+                 delays)"
+                    .into(),
+            ));
         }
         if !(0.0..=1.0).contains(&self.spill_watermark) {
             return Err(Error::Config("spill_watermark must be in [0,1]".into()));

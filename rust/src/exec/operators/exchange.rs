@@ -100,6 +100,8 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
+use crate::sync::{ranks, OrderedMutex};
+
 use crate::exec::operators::kernels::ScatterPlan;
 use crate::exec::operators::{kernels, OpCommon, Operator};
 use crate::exec::plan::ExchangeRole;
@@ -170,7 +172,10 @@ struct DestShard {
 /// subscription, no callback plumbing, and exactly one concurrent task
 /// claims each epoch's sweep.
 pub struct ShuffleCoalescer {
-    shards: Vec<Mutex<DestShard>>,
+    /// All shards share one rank (`exchange.shard`): a task holds at
+    /// most one at a time, and the runtime checker enforces exactly
+    /// that (same-rank nesting panics).
+    shards: Vec<OrderedMutex<DestShard>>,
     /// Adaptation bounds; `floor == ceiling` pins the threshold
     /// (static mode — [`ShuffleCoalescer::new`]).
     floor: usize,
@@ -237,12 +242,16 @@ impl ShuffleCoalescer {
         ShuffleCoalescer {
             shards: (0..dests.max(1))
                 .map(|_| {
-                    Mutex::new(DestShard {
-                        builder: BatchBuilder::new(),
-                        flush_bytes: start,
-                        base_latency_ns: None,
-                        reservation: None,
-                    })
+                    OrderedMutex::new(
+                        ranks::EXCHANGE_SHARD,
+                        "exchange.shard",
+                        DestShard {
+                            builder: BatchBuilder::new(),
+                            flush_bytes: start,
+                            base_latency_ns: None,
+                            reservation: None,
+                        },
+                    )
                 })
                 .collect(),
             floor,
@@ -256,7 +265,7 @@ impl ShuffleCoalescer {
     }
 
     pub fn buffered_rows(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().builder.rows()).sum()
+        self.shards.iter().map(|s| s.lock().builder.rows()).sum()
     }
 
     /// Number of destinations this coalescer scatters to.
@@ -268,7 +277,7 @@ impl ShuffleCoalescer {
     /// observability; also published on
     /// `exchange.flush_bytes_current{dst=N}`).
     pub fn flush_threshold(&self, dst: usize) -> usize {
-        self.shards[dst].lock().unwrap().flush_bytes
+        self.shards[dst].lock().flush_bytes
     }
 
     /// Keep the worker-level `exchange.buffered_bytes` gauge in step
@@ -365,7 +374,7 @@ impl ShuffleCoalescer {
             if rows.is_empty() {
                 continue;
             }
-            let mut shard = self.shards[dst].lock().unwrap();
+            let mut shard = self.shards[dst].lock();
             let before = shard.builder.byte_size();
             shard.builder.append_gather(batch, rows)?;
             let delta = shard.builder.byte_size() - before;
@@ -400,7 +409,7 @@ impl ShuffleCoalescer {
         }
         let mut out = Vec::new();
         for (dst, slot) in self.shards.iter().enumerate() {
-            let mut shard = slot.lock().unwrap();
+            let mut shard = slot.lock();
             if !shard.builder.is_empty() {
                 self.metrics.counter("exchange.pressure_flush_total").inc();
                 let flushed = self.flush_shard(&mut shard);
@@ -415,7 +424,7 @@ impl ShuffleCoalescer {
     pub fn flush_all(&self) -> Vec<(usize, RecordBatch)> {
         let mut out = Vec::new();
         for (dst, slot) in self.shards.iter().enumerate() {
-            let mut shard = slot.lock().unwrap();
+            let mut shard = slot.lock();
             if !shard.builder.is_empty() {
                 let flushed = self.flush_shard(&mut shard);
                 out.push((dst, flushed));
@@ -433,7 +442,7 @@ impl Drop for ShuffleCoalescer {
         let left: usize = self
             .shards
             .iter()
-            .map(|s| s.lock().unwrap().builder.byte_size())
+            .map(|s| s.lock().builder.byte_size())
             .sum();
         self.note_buffered(-(left as i64));
     }

@@ -33,7 +33,9 @@
 
 use std::collections::{BinaryHeap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Mutex};
+
+use crate::sync::{ranks, OrderedCondvar, OrderedMutex};
 use std::time::Duration;
 
 use crate::exec::{Task, WorkerCtx};
@@ -136,18 +138,18 @@ impl Ord for Queued {
 /// [`crate::memory::PressureEvent`] listeners so pre-loadable
 /// submissions wake them instead of being discovered by polling.
 pub struct TaskQueue {
-    heap: Mutex<BinaryHeap<Queued>>,
-    ready: Condvar,
+    heap: OrderedMutex<BinaryHeap<Queued>>,
+    ready: OrderedCondvar,
     seq: AtomicU64,
     /// Tasks currently executing (quiescence detection).
     in_flight: AtomicU64,
     /// Marked dirty when a task with a prefetch hint is submitted.
-    listeners: Mutex<Vec<Arc<crate::memory::PressureEvent>>>,
+    listeners: OrderedMutex<Vec<Arc<crate::memory::PressureEvent>>>,
     /// Input-tier bonus table (all-zero = residency ordering off).
     bonus: ResidencyBonus,
     /// Holder ids whose residency changed since the last re-rank pass
     /// (fed by the Data-Movement executor's completed moves).
-    dirty_holders: Mutex<HashSet<usize>>,
+    dirty_holders: OrderedMutex<HashSet<usize>>,
     /// Stable resume point of a capped re-rank pass: the submission
     /// *seq* where the last pass stopped. Relevant entries are scanned
     /// in seq order starting here, so the rotation addresses the same
@@ -161,13 +163,21 @@ pub struct TaskQueue {
 impl Default for TaskQueue {
     fn default() -> Self {
         TaskQueue {
-            heap: Mutex::new(BinaryHeap::new()),
-            ready: Condvar::new(),
+            heap: OrderedMutex::new(ranks::SCHED_HEAP, "sched.heap", BinaryHeap::new()),
+            ready: OrderedCondvar::new(),
             seq: AtomicU64::new(0),
             in_flight: AtomicU64::new(0),
-            listeners: Mutex::new(Vec::new()),
+            listeners: OrderedMutex::new(
+                ranks::SCHED_LISTENERS,
+                "sched.listeners",
+                Vec::new(),
+            ),
             bonus: ResidencyBonus::default(),
-            dirty_holders: Mutex::new(HashSet::new()),
+            dirty_holders: OrderedMutex::new(
+                ranks::SCHED_DIRTY_HOLDERS,
+                "sched.dirty_holders",
+                HashSet::new(),
+            ),
             rerank_cursor: AtomicU64::new(0),
             metrics: Arc::new(Metrics::default()),
         }
@@ -191,7 +201,7 @@ impl TaskQueue {
     /// [`crate::exec::task::Prefetch`] is submitted (queue
     /// introspection without a polling loop).
     pub fn add_listener(&self, event: Arc<crate::memory::PressureEvent>) {
-        self.listeners.lock().unwrap().push(event);
+        self.listeners.lock().push(event);
     }
 
     /// The Data-Movement executor completed a promotion or demotion on
@@ -202,7 +212,7 @@ impl TaskQueue {
         if !self.bonus.is_enabled() {
             return;
         }
-        self.dirty_holders.lock().unwrap().insert(holder_id);
+        self.dirty_holders.lock().insert(holder_id);
     }
 
     /// Base priority plus the residency bonus, scaled by the task's
@@ -229,10 +239,15 @@ impl TaskQueue {
             base_score: score,
             task,
         };
-        self.heap.lock().unwrap().push(q);
-        self.ready.notify_one();
+        {
+            let mut heap = self.heap.lock();
+            heap.push(q);
+            self.ready.notify_one(&heap);
+        }
         if prefetchable {
-            for ev in self.listeners.lock().unwrap().iter() {
+            // listeners (124) held across mark_queue's pressure.state
+            // (390) acquisition — a declared descent
+            for ev in self.listeners.lock().iter() {
                 ev.mark_queue();
             }
         }
@@ -263,7 +278,7 @@ impl TaskQueue {
             return;
         }
         let dirty: HashSet<usize> = {
-            let mut d = self.dirty_holders.lock().unwrap();
+            let mut d = self.dirty_holders.lock();
             if d.is_empty() {
                 return;
             }
@@ -337,7 +352,7 @@ impl TaskQueue {
             rescored += 1;
         }
         if deferred {
-            self.dirty_holders.lock().unwrap().extend(dirty);
+            self.dirty_holders.lock().extend(dirty);
         } else {
             // full pass: rotate past the last task served so future
             // capped passes keep round-robining instead of re-serving
@@ -355,7 +370,7 @@ impl TaskQueue {
 
     fn pop(&self, timeout: Duration) -> Option<Task> {
         let deadline = std::time::Instant::now() + timeout;
-        let mut heap = self.heap.lock().unwrap();
+        let mut heap = self.heap.lock();
         loop {
             self.maybe_rerank(&mut heap);
             if let Some(q) = heap.pop() {
@@ -366,7 +381,7 @@ impl TaskQueue {
             if now >= deadline {
                 return None;
             }
-            let (guard, _) = self.ready.wait_timeout(heap, deadline - now).unwrap();
+            let (guard, _) = self.ready.wait_timeout(heap, deadline - now);
             heap = guard;
         }
     }
@@ -376,7 +391,7 @@ impl TaskQueue {
     /// deterministic test harnesses). Pending residency re-ranks are
     /// applied first, exactly as on the executor path.
     pub fn try_pop(&self) -> Option<Task> {
-        let mut heap = self.heap.lock().unwrap();
+        let mut heap = self.heap.lock();
         self.maybe_rerank(&mut heap);
         heap.pop().map(|q| q.task)
     }
@@ -386,7 +401,7 @@ impl TaskQueue {
     }
 
     pub fn len(&self) -> usize {
-        self.heap.lock().unwrap().len()
+        self.heap.lock().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -399,14 +414,14 @@ impl TaskQueue {
 
     /// Queue fully drained and nothing executing.
     pub fn quiescent(&self) -> bool {
-        let heap = self.heap.lock().unwrap();
+        let heap = self.heap.lock();
         heap.is_empty() && self.in_flight.load(Ordering::Acquire) == 0
     }
 
     /// Visit every queued (not in-flight) task — the inspection hook
     /// the Pre-load and Data-Movement Executors use. Unordered.
     pub fn for_each_queued(&self, mut f: impl FnMut(&Task)) {
-        let heap = self.heap.lock().unwrap();
+        let heap = self.heap.lock();
         for q in heap.iter() {
             f(&q.task);
         }
@@ -417,7 +432,7 @@ impl TaskQueue {
     /// last, promote them first). Keyed by qid so two concurrent
     /// queries' same-numbered plan nodes never share a priority slot.
     pub fn op_priorities(&self) -> std::collections::HashMap<(u64, usize), i64> {
-        let heap = self.heap.lock().unwrap();
+        let heap = self.heap.lock();
         let mut m = std::collections::HashMap::new();
         for q in heap.iter() {
             let e = m.entry((q.task.qid, q.task.op)).or_insert(i64::MIN);

@@ -47,7 +47,9 @@
 
 use std::collections::{BinaryHeap, HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::sync::{Arc, Mutex, Weak};
+
+use crate::sync::{ranks, OrderedCondvar, OrderedMutex};
 use std::time::Duration;
 
 use crate::exec::task::Prefetch;
@@ -76,9 +78,20 @@ const PROMOTE_BATCHES_PER_ROUND: usize = 8;
 /// what lets a multi-query worker unregister exactly one finished
 /// query's holders ([`HolderRegistry::clear_query`]) while concurrent
 /// queries' holders stay under management.
-#[derive(Default)]
 pub struct HolderRegistry {
-    holders: Mutex<Vec<(u64, usize, BatchHolder)>>,
+    holders: OrderedMutex<Vec<(u64, usize, BatchHolder)>>,
+}
+
+impl Default for HolderRegistry {
+    fn default() -> Self {
+        HolderRegistry {
+            holders: OrderedMutex::new(
+                ranks::MOVEMENT_HOLDERS,
+                "movement.holders",
+                Vec::new(),
+            ),
+        }
+    }
 }
 
 impl HolderRegistry {
@@ -87,20 +100,20 @@ impl HolderRegistry {
     }
 
     pub fn register(&self, qid: u64, op: usize, holder: BatchHolder) {
-        self.holders.lock().unwrap().push((qid, op, holder));
+        self.holders.lock().push((qid, op, holder));
     }
 
     pub fn clear(&self) {
-        self.holders.lock().unwrap().clear();
+        self.holders.lock().clear();
     }
 
     /// Unregister every holder belonging to one finished query.
     pub fn clear_query(&self, qid: u64) {
-        self.holders.lock().unwrap().retain(|(q, _, _)| *q != qid);
+        self.holders.lock().retain(|(q, _, _)| *q != qid);
     }
 
     pub fn len(&self) -> usize {
-        self.holders.lock().unwrap().len()
+        self.holders.lock().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -109,7 +122,7 @@ impl HolderRegistry {
 
     /// Visit every registered holder without cloning the list.
     pub fn for_each(&self, mut f: impl FnMut(u64, usize, &BatchHolder)) {
-        for (qid, op, h) in self.holders.lock().unwrap().iter() {
+        for (qid, op, h) in self.holders.lock().iter() {
             f(*qid, *op, h);
         }
     }
@@ -196,22 +209,26 @@ impl Ord for QueuedMove {
 /// the executor while parked (no `Arc` cycle: an executor dropped
 /// without `stop()` still signals its threads down via `Drop`).
 struct MoveQueue {
-    heap: Mutex<BinaryHeap<QueuedMove>>,
-    ready: Condvar,
+    heap: OrderedMutex<BinaryHeap<QueuedMove>>,
+    ready: OrderedCondvar,
     seq: AtomicU64,
 }
 
 impl MoveQueue {
     fn new() -> Arc<MoveQueue> {
         Arc::new(MoveQueue {
-            heap: Mutex::new(BinaryHeap::new()),
-            ready: Condvar::new(),
+            heap: OrderedMutex::new(
+                ranks::MOVEMENT_HEAP,
+                "movement.heap",
+                BinaryHeap::new(),
+            ),
+            ready: OrderedCondvar::new(),
             seq: AtomicU64::new(0),
         })
     }
 
     fn push_all(&self, tasks: Vec<MovementTask>) {
-        let mut heap = self.heap.lock().unwrap();
+        let mut heap = self.heap.lock();
         for task in tasks {
             heap.push(QueuedMove {
                 urgency: task.urgency,
@@ -219,14 +236,13 @@ impl MoveQueue {
                 task,
             });
         }
-        drop(heap);
-        self.ready.notify_all();
+        self.ready.notify_all(&heap);
     }
 
     /// Pop the most urgent task, waiting up to `timeout`.
     fn pop(&self, timeout: Duration) -> Option<MovementTask> {
         let deadline = std::time::Instant::now() + timeout;
-        let mut heap = self.heap.lock().unwrap();
+        let mut heap = self.heap.lock();
         loop {
             if let Some(q) = heap.pop() {
                 return Some(q.task);
@@ -235,16 +251,24 @@ impl MoveQueue {
             if now >= deadline {
                 return None;
             }
-            let (guard, _) = self.ready.wait_timeout(heap, deadline - now).unwrap();
+            let (guard, _) = self.ready.wait_timeout(heap, deadline - now);
             heap = guard;
         }
     }
 
     fn clear(&self) -> usize {
-        let mut heap = self.heap.lock().unwrap();
+        let mut heap = self.heap.lock();
         let n = heap.len();
         heap.clear();
         n
+    }
+
+    /// Wake every parked mover (shutdown path) — notify under the heap
+    /// lock so a mover between its emptiness check and its park cannot
+    /// miss the signal.
+    fn wake_all(&self) {
+        let heap = self.heap.lock();
+        self.ready.notify_all(&heap);
     }
 }
 
@@ -442,6 +466,7 @@ impl DataMovementExecutor {
         if let Some(pool) = &self.env.pinned {
             pool.publish_metrics(&self.metrics);
         }
+        crate::sync::publish_metrics(&self.metrics);
         // Idle sweeps (no pressure) are the natural moment to compact
         // mostly-dead spill segments — writers aren't contending for
         // the segments lock, and the reclaimed disk shrinks the next
@@ -758,9 +783,10 @@ impl DataMovementExecutor {
         if let Some(pool) = &self.env.pinned {
             pool.publish_metrics(&self.metrics);
         }
+        crate::sync::publish_metrics(&self.metrics);
         // wake the planner (parked on the event) and the movers
         self.event.mark_queue();
-        self.moves.ready.notify_all();
+        self.moves.wake_all();
         for h in self.handles.lock().unwrap().drain(..) {
             let _ = h.join();
         }
@@ -781,7 +807,7 @@ impl Drop for DataMovementExecutor {
         // (no join: the dropping thread may be one of them).
         self.shutdown.store(true, Ordering::Relaxed);
         self.event.mark_queue();
-        self.moves.ready.notify_all();
+        self.moves.wake_all();
     }
 }
 

@@ -58,6 +58,8 @@
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
+
+use crate::sync::{ranks, OrderedCondvar, OrderedMutex};
 use std::time::Duration;
 
 use crate::metrics::Metrics;
@@ -95,9 +97,9 @@ impl Outbound {
 /// buffer blocks the pushing compute task, pacing producers to the
 /// fabric's rate.
 pub struct Outbox {
-    q: Mutex<VecDeque<Outbound>>,
-    not_full: Condvar,
-    not_empty: Condvar,
+    q: OrderedMutex<VecDeque<Outbound>>,
+    not_full: OrderedCondvar,
+    not_empty: OrderedCondvar,
     capacity: usize,
     closed: AtomicBool,
     pushed: AtomicU64,
@@ -110,11 +112,11 @@ pub struct Outbox {
     /// [`Outbox::enable_credits`] — gating off, the default for tests
     /// and benches with no credit-granting receiver). Locked *after*
     /// `q` when both are held.
-    credits: Mutex<CreditState>,
+    credits: OrderedMutex<CreditState>,
     /// Per-destination EWMA of `endpoint.send` wall time, fed by the
     /// sender lanes — one of the two congestion signals the exchange's
     /// adaptive flush controller samples.
-    send_latency: Mutex<HashMap<usize, u64>>,
+    send_latency: OrderedMutex<HashMap<usize, u64>>,
     /// Credit-blocked data frames discarded by a close (the drain must
     /// complete, but dropped data must be loud).
     close_unsent: AtomicU64,
@@ -159,15 +161,23 @@ impl CreditState {
 impl Outbox {
     pub fn new(capacity: usize) -> Outbox {
         Outbox {
-            q: Mutex::new(VecDeque::new()),
-            not_full: Condvar::new(),
-            not_empty: Condvar::new(),
+            q: OrderedMutex::new(ranks::OUTBOX_Q, "outbox.q", VecDeque::new()),
+            not_full: OrderedCondvar::new(),
+            not_empty: OrderedCondvar::new(),
             capacity: capacity.max(1),
             closed: AtomicBool::new(false),
             pushed: AtomicU64::new(0),
             in_flight: AtomicUsize::new(0),
-            credits: Mutex::new(CreditState::default()),
-            send_latency: Mutex::new(HashMap::new()),
+            credits: OrderedMutex::new(
+                ranks::OUTBOX_CREDITS,
+                "outbox.credits",
+                CreditState::default(),
+            ),
+            send_latency: OrderedMutex::new(
+                ranks::OUTBOX_SEND_LATENCY,
+                "outbox.send_latency",
+                HashMap::new(),
+            ),
             close_unsent: AtomicU64::new(0),
             metrics: OnceLock::new(),
         }
@@ -178,7 +188,7 @@ impl Outbox {
     /// an outbox with no credit-granting receiver wired (unit tests,
     /// benches) never stalls.
     pub fn enable_credits(&self, window: usize) {
-        self.credits.lock().unwrap().window = Some(window.max(1) as u64);
+        self.credits.lock().window = Some(window.max(1) as u64);
     }
 
     /// Install the worker's metrics registry
@@ -191,29 +201,31 @@ impl Outbox {
     /// drained that many delivered batches) and wake any lane stalled
     /// on them.
     pub fn grant_credits(&self, dst: usize, amount: u64) {
-        self.credits.lock().unwrap().grant(dst, amount);
+        self.credits.lock().grant(dst, amount);
         // Serialize with a lane mid-scan: holding `q` while notifying
         // means the lane is either before its credit read (sees the
         // grant) or already parked (gets the wakeup) — never between.
-        let _q = self.q.lock().unwrap();
-        self.not_empty.notify_all();
+        // (The credits guard above is a statement temporary, so `q` is
+        // acquired with nothing held — no 230-before-220 inversion.)
+        let q = self.q.lock();
+        self.not_empty.notify_all(&q);
     }
 
     /// Remaining credits for `dst` (`None` = gating disabled).
     pub fn credits_remaining(&self, dst: usize) -> Option<u64> {
-        self.credits.lock().unwrap().remaining(dst)
+        self.credits.lock().remaining(dst)
     }
 
     /// Queued (not yet popped) messages addressed to `dst` — the depth
     /// signal for the adaptive flush controller.
     pub fn queued_for(&self, dst: usize) -> usize {
-        self.q.lock().unwrap().iter().filter(|m| m.dst() == dst).count()
+        self.q.lock().iter().filter(|m| m.dst() == dst).count()
     }
 
     /// Sender lanes record how long `endpoint.send` took per
     /// destination; kept as an EWMA (α = 1/4).
     fn note_send_latency(&self, dst: usize, ns: u64) {
-        let mut lat = self.send_latency.lock().unwrap();
+        let mut lat = self.send_latency.lock();
         let e = lat.entry(dst).or_insert(ns);
         *e = (*e * 3 + ns) / 4;
     }
@@ -221,7 +233,7 @@ impl Outbox {
     /// Smoothed wire latency toward `dst` in nanoseconds (None before
     /// the first send) — the second controller signal.
     pub fn send_latency_ns(&self, dst: usize) -> Option<u64> {
-        self.send_latency.lock().unwrap().get(&dst).copied()
+        self.send_latency.lock().get(&dst).copied()
     }
 
     /// Credit-blocked data frames discarded because the outbox closed
@@ -277,15 +289,12 @@ impl Outbox {
     }
 
     fn push(&self, m: Outbound) -> Result<()> {
-        let mut q = self.q.lock().unwrap();
+        let mut q = self.q.lock();
         while q.len() >= self.capacity {
             if self.closed.load(Ordering::Relaxed) {
                 return Err(Error::Shutdown);
             }
-            let (guard, _) = self
-                .not_full
-                .wait_timeout(q, Duration::from_millis(50))
-                .unwrap();
+            let (guard, _) = self.not_full.wait_timeout(q, Duration::from_millis(50));
             q = guard;
         }
         if self.closed.load(Ordering::Relaxed) {
@@ -293,8 +302,7 @@ impl Outbox {
         }
         q.push_back(m);
         self.pushed.fetch_add(1, Ordering::Relaxed);
-        drop(q);
-        self.not_empty.notify_one();
+        self.not_empty.notify_one(&q);
         Ok(())
     }
 
@@ -315,13 +323,14 @@ impl Outbox {
     /// drains the outbox through this one gate.
     pub fn pop_for_lane(&self, lane: usize, lanes: usize, timeout: Duration) -> Option<Outbound> {
         let deadline = std::time::Instant::now() + timeout;
-        let mut q = self.q.lock().unwrap();
+        let mut q = self.q.lock();
         loop {
             let closed = self.closed.load(Ordering::Relaxed);
             let mut blocked_dsts: HashSet<usize> = HashSet::new();
             let mut pos = None;
             {
-                let mut credits = self.credits.lock().unwrap();
+                // q (220) -> credits (230): the declared nesting order
+                let mut credits = self.credits.lock();
                 let mut i = 0;
                 while i < q.len() {
                     let m = &q[i];
@@ -370,8 +379,7 @@ impl Outbox {
                 // same lock, so it sees either the queued message or
                 // the in-flight count — never the gap between them
                 self.in_flight.fetch_add(1, Ordering::SeqCst);
-                drop(q);
-                self.not_full.notify_one();
+                self.not_full.notify_one(&q);
                 return Some(m);
             }
             let now = std::time::Instant::now();
@@ -379,12 +387,11 @@ impl Outbox {
                 // blocked frames may have been dropped above — anyone
                 // waiting on capacity or idleness should re-check
                 if closed {
-                    drop(q);
-                    self.not_full.notify_all();
+                    self.not_full.notify_all(&q);
                 }
                 return None;
             }
-            let (guard, _) = self.not_empty.wait_timeout(q, deadline - now).unwrap();
+            let (guard, _) = self.not_empty.wait_timeout(q, deadline - now);
             q = guard;
         }
     }
@@ -403,12 +410,12 @@ impl Outbox {
     /// the condition `flush` waits for. An empty queue alone is not
     /// enough: a popped message may still be compressing or mid-send.
     pub fn is_idle(&self) -> bool {
-        let q = self.q.lock().unwrap();
+        let q = self.q.lock();
         q.is_empty() && self.in_flight.load(Ordering::SeqCst) == 0
     }
 
     pub fn len(&self) -> usize {
-        self.q.lock().unwrap().len()
+        self.q.lock().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -421,8 +428,12 @@ impl Outbox {
 
     pub fn close(&self) {
         self.closed.store(true, Ordering::Relaxed);
-        self.not_empty.notify_all();
-        self.not_full.notify_all();
+        // Notify while holding `q`: a lane between its closed-flag read
+        // and its park would otherwise miss this wakeup for a full
+        // timeout chunk.
+        let q = self.q.lock();
+        self.not_empty.notify_all(&q);
+        self.not_full.notify_all(&q);
     }
 }
 
@@ -683,7 +694,11 @@ impl Router {
     pub fn route(&self, frame: Frame) -> Result<()> {
         match frame.kind {
             FrameKind::Control => {
-                self.control.lock().unwrap().push_back(frame);
+                // notify while the queue lock is held: recv_control
+                // re-checks emptiness under this lock, so an unlocked
+                // notify could land between its check and its park
+                let mut q = self.control.lock().unwrap();
+                q.push_back(frame);
                 self.control_ready.notify_one();
                 Ok(())
             }

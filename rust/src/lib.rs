@@ -38,6 +38,7 @@ pub mod planner;
 pub mod runtime;
 pub mod sim;
 pub mod storage;
+pub mod sync;
 pub mod testing;
 pub mod types;
 pub mod util;

@@ -294,7 +294,10 @@ impl PinnedPool {
         let mut free = self.inner.free.lock().unwrap();
         debug_assert!(!free.contains(&idx), "double release of pinned buf {idx}");
         free.push(idx);
-        drop(free);
+        // Notify while the lock is held: a waiter that has re-checked
+        // the (empty) free list but not yet parked would miss a signal
+        // sent after the guard drops (lost-wakeup defense — see
+        // CONCURRENCY.md on wait/notify pairings).
         self.inner.available.notify_one();
     }
 

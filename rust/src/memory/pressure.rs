@@ -19,8 +19,10 @@
 //! lost, and `wait` drains the accumulated state atomically.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+use crate::sync::{ranks, OrderedCondvar, OrderedMutex};
 
 /// Accumulated, undelivered pressure.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -47,10 +49,9 @@ struct State {
 
 /// Shared condition-variable event connecting the memory tiers to the
 /// Data-Movement executor.
-#[derive(Default)]
 pub struct PressureEvent {
-    state: Mutex<State>,
-    cv: Condvar,
+    state: OrderedMutex<State>,
+    cv: OrderedCondvar,
     raises: AtomicU64,
     /// Device/host raises only (not queue dirtiness): the monotonic
     /// *memory-pressure epoch*. Buffering producers — the coalescing
@@ -58,6 +59,21 @@ pub struct PressureEvent {
     /// the epoch they last observed and flush early when it advanced,
     /// so buffered state drains instead of deepening a spill cycle.
     memory_raises: AtomicU64,
+}
+
+impl Default for PressureEvent {
+    fn default() -> Self {
+        PressureEvent {
+            state: OrderedMutex::new(
+                ranks::PRESSURE_STATE,
+                "pressure.state",
+                State::default(),
+            ),
+            cv: OrderedCondvar::new(),
+            raises: AtomicU64::new(0),
+            memory_raises: AtomicU64::new(0),
+        }
+    }
 }
 
 impl PressureEvent {
@@ -79,43 +95,40 @@ impl PressureEvent {
 
     /// Signal device-tier pressure: `bytes` should be freed.
     pub fn raise_device(&self, bytes: usize) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         s.pending.device_need = s.pending.device_need.saturating_add(bytes);
         self.raises.fetch_add(1, Ordering::Relaxed);
         self.memory_raises.fetch_add(1, Ordering::Relaxed);
-        drop(s);
-        self.cv.notify_all();
+        self.cv.notify_all(&s);
     }
 
     /// Signal host-tier (pinned pool) pressure.
     pub fn raise_host(&self, bytes: usize) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         s.pending.host_need = s.pending.host_need.saturating_add(bytes);
         self.raises.fetch_add(1, Ordering::Relaxed);
         self.memory_raises.fetch_add(1, Ordering::Relaxed);
-        drop(s);
-        self.cv.notify_all();
+        self.cv.notify_all(&s);
     }
 
     /// Mark the compute queue dirty (new pre-loadable work).
     pub fn mark_queue(&self) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         s.pending.queue_dirty = true;
         self.raises.fetch_add(1, Ordering::Relaxed);
-        drop(s);
-        self.cv.notify_all();
+        self.cv.notify_all(&s);
     }
 
     /// Drain pending pressure without blocking.
     pub fn take(&self) -> PressureSnapshot {
-        std::mem::take(&mut self.state.lock().unwrap().pending)
+        std::mem::take(&mut self.state.lock().pending)
     }
 
     /// Park until pressure arrives (or `timeout`, as a safety sweep for
     /// missed edges). Returns the drained snapshot; empty on timeout.
     pub fn wait(&self, timeout: Duration) -> PressureSnapshot {
         let deadline = Instant::now() + timeout;
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         loop {
             if !s.pending.is_empty() {
                 return std::mem::take(&mut s.pending);
@@ -124,7 +137,7 @@ impl PressureEvent {
             if now >= deadline {
                 return PressureSnapshot::default();
             }
-            let (guard, _) = self.cv.wait_timeout(s, deadline - now).unwrap();
+            let (guard, _) = self.cv.wait_timeout(s, deadline - now);
             s = guard;
         }
     }

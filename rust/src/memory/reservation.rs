@@ -19,11 +19,12 @@
 //! microseconds rather than on a polling tick.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::memory::pressure::PressureEvent;
 use crate::memory::DeviceArena;
+use crate::sync::{ranks, OrderedCondvar, OrderedMutex};
 use crate::{Error, Result};
 
 /// Grants and tracks reservations against one device arena.
@@ -34,8 +35,8 @@ pub struct MemoryGovernor {
 
 struct Inner {
     arena: DeviceArena,
-    reserved: Mutex<usize>,
-    freed: Condvar,
+    reserved: OrderedMutex<usize>,
+    freed: OrderedCondvar,
     /// Raised when a reservation can't be granted; the Data-Movement
     /// executor answers by spilling, then calls `notify_freed`.
     pressure: OnceLock<Arc<PressureEvent>>,
@@ -49,8 +50,12 @@ impl MemoryGovernor {
         MemoryGovernor {
             inner: Arc::new(Inner {
                 arena,
-                reserved: Mutex::new(0),
-                freed: Condvar::new(),
+                reserved: OrderedMutex::new(
+                    ranks::GOVERNOR_RESERVED,
+                    "governor.reserved",
+                    0,
+                ),
+                freed: OrderedCondvar::new(),
                 pressure: OnceLock::new(),
                 grants: AtomicU64::new(0),
                 waits: AtomicU64::new(0),
@@ -80,8 +85,16 @@ impl MemoryGovernor {
     /// by the Data-Movement executor after demotions free arena bytes
     /// (arena frees don't pass through the governor's own lock, so the
     /// spiller delivers the wakeup).
+    ///
+    /// The notify happens *while holding* the ledger lock: a waiter
+    /// re-checks its headroom predicate under that same lock, so a
+    /// wakeup delivered without it could land between the waiter's
+    /// check and its park and be lost (the reserve would then stall a
+    /// full 20 ms re-raise chunk — the `Outbox::grant_credits` bug
+    /// class, previously latent here).
     pub fn notify_freed(&self) {
-        self.inner.freed.notify_all();
+        let reserved = self.inner.reserved.lock();
+        self.inner.freed.notify_all(&reserved);
     }
 
     pub fn arena(&self) -> &DeviceArena {
@@ -90,7 +103,7 @@ impl MemoryGovernor {
 
     /// Bytes currently promised to tasks.
     pub fn reserved(&self) -> usize {
-        *self.inner.reserved.lock().unwrap()
+        *self.inner.reserved.lock()
     }
 
     /// Headroom available for new reservations: capacity minus the
@@ -115,7 +128,7 @@ impl MemoryGovernor {
 
     /// Try to reserve immediately.
     pub fn try_reserve(&self, bytes: usize) -> Option<Reservation> {
-        let mut reserved = self.inner.reserved.lock().unwrap();
+        let mut reserved = self.inner.reserved.lock();
         let used = self.inner.arena.in_use().max(*reserved);
         if used + bytes <= self.inner.arena.capacity() {
             *reserved += bytes;
@@ -137,7 +150,7 @@ impl MemoryGovernor {
         // Ask the movement plane for help, then park on the condvar.
         self.raise_pressure(bytes);
         let deadline = Instant::now() + timeout;
-        let mut reserved = self.inner.reserved.lock().unwrap();
+        let mut reserved = self.inner.reserved.lock();
         loop {
             let used = self.inner.arena.in_use().max(*reserved);
             if used + bytes <= self.inner.arena.capacity() {
@@ -159,25 +172,23 @@ impl MemoryGovernor {
             // the movement plane (a compute task dropping its device
             // batches), re-raising in case the first spill round fell
             // short.
-            let (guard, res) = self
+            let (guard, timed_out) = self
                 .inner
                 .freed
-                .wait_timeout(reserved, (deadline - now).min(Duration::from_millis(20)))
-                .unwrap();
+                .wait_timeout(reserved, (deadline - now).min(Duration::from_millis(20)));
             reserved = guard;
-            if res.timed_out() {
+            if timed_out {
                 drop(reserved);
                 self.raise_pressure(bytes);
-                reserved = self.inner.reserved.lock().unwrap();
+                reserved = self.inner.reserved.lock();
             }
         }
     }
 
     fn release(&self, bytes: usize) {
-        let mut reserved = self.inner.reserved.lock().unwrap();
+        let mut reserved = self.inner.reserved.lock();
         *reserved -= bytes.min(*reserved);
-        drop(reserved);
-        self.inner.freed.notify_all();
+        self.inner.freed.notify_all(&reserved);
     }
 }
 

@@ -8,6 +8,8 @@ use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+pub mod registry;
+
 /// Monotonic counter.
 #[derive(Default)]
 pub struct Counter(AtomicU64);

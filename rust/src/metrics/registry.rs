@@ -1,0 +1,90 @@
+//! The metric-name registry: every counter, gauge, and histogram the
+//! engine emits, in one table.
+//!
+//! `cargo xtask lint` enforces it both ways: a literal name passed to
+//! `.counter()`/`.gauge()`/`.histogram()` anywhere in `src/` must
+//! appear here exactly once, and every entry here must appear as a
+//! string literal somewhere in `src/` (names that reach the sink
+//! through variables — eviction tuple tables, exchange-mode match
+//! arms — satisfy that weaker direction). Entries containing `*` are
+//! wildcards for `format!`-built per-instance names and are exempt
+//! from the usage check.
+//!
+//! Dashboards and tests should treat this slice as the complete metric
+//! surface; renaming a metric means editing it here in the same change
+//! or CI fails.
+
+pub const METRIC_NAMES: &[&str] = &[
+    // serving-layer caches (src/cache)
+    "cache.fragment_bytes",
+    "cache.fragment_evict",
+    "cache.fragment_hit",
+    "cache.fragment_miss",
+    "cache.fragment_refused",
+    "cache.invalidated",
+    "cache.plan_memo_hit",
+    "cache.plan_memo_miss",
+    "cache.result_bytes",
+    "cache.result_evict",
+    "cache.result_hit",
+    "cache.result_miss",
+    "cache.result_refused",
+    "cache.stale_insert_dropped",
+    // codec fallbacks (src/codec)
+    "codec.heap_fallback_bytes",
+    // coalescing shuffle (src/exec/operators/exchange.rs)
+    "exchange.broadcast",
+    "exchange.buffered_bytes",
+    "exchange.coalesced_bytes",
+    "exchange.credit_stall_total",
+    "exchange.flush_bytes_current{dst=*}",
+    "exchange.flush_total",
+    "exchange.oversize_split_total",
+    "exchange.partition",
+    "exchange.passthrough",
+    "exchange.pressure_flush_total",
+    // gateway admission + sessions (src/cluster)
+    "gateway.admission_peak_bytes",
+    "gateway.admission_wait_ms",
+    "gateway.admitted",
+    "gateway.queued",
+    "gateway.worker_panic_total",
+    // data-movement executor (src/executors/movement.rs)
+    "movement.demote_bytes",
+    "movement.plans",
+    "movement.promotions",
+    "movement.queue_depth",
+    // network executor (src/executors/network.rs)
+    "net.close_unsent_total",
+    "net.credits_granted_total",
+    // pinned host pool (src/memory/pinned.rs)
+    "pinned.acquires",
+    "pinned.bounce_bytes",
+    "pinned.exhaustions",
+    "pinned.free_buffers",
+    "pinned.waste_bytes",
+    // compute scheduler (src/executors/compute.rs)
+    "sched.residency_rerank_total",
+    "sched.spill_stall_avoided",
+    // spill files (src/memory/spill.rs)
+    "spill.compacted_bytes",
+    // ordered-lock poison recovery (src/sync/ordered.rs)
+    "sync.poison_recovered_total",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::METRIC_NAMES;
+
+    #[test]
+    fn sorted_and_unique() {
+        for pair in METRIC_NAMES.windows(2) {
+            assert!(
+                pair[0] < pair[1],
+                "METRIC_NAMES must stay sorted and duplicate-free: {} >= {}",
+                pair[0],
+                pair[1]
+            );
+        }
+    }
+}

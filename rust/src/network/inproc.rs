@@ -115,7 +115,10 @@ impl Endpoint for InprocEndpoint {
         self.bytes.fetch_add(frame.wire_len() as u64, Ordering::Relaxed);
         self.frames.fetch_add(1, Ordering::Relaxed);
         let inbox = &self.hub.inboxes[dst];
-        inbox.q.lock().unwrap().push_back(frame);
+        // notify while the queue lock is held (lost-wakeup defense —
+        // see CONCURRENCY.md on wait/notify pairings)
+        let mut q = inbox.q.lock().unwrap();
+        q.push_back(frame);
         inbox.ready.notify_one();
         Ok(())
     }

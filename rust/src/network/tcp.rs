@@ -284,7 +284,11 @@ fn reader_loop(
                 return;
             }
         };
-        inbox.q.lock().unwrap().push_back(frame);
+        // notify while the queue lock is held: the receiver re-checks
+        // emptiness under this lock, so an unlocked notify could land
+        // between its check and its park and be lost
+        let mut q = inbox.q.lock().unwrap();
+        q.push_back(frame);
         inbox.ready.notify_one();
     }
 }
@@ -367,7 +371,8 @@ impl Endpoint for TcpEndpoint {
         self.frames.fetch_add(1, Ordering::Relaxed);
         if dst == self.id {
             self.loopback_throttle.acquire(frame.wire_len());
-            self.inbox.q.lock().unwrap().push_back(frame);
+            let mut q = self.inbox.q.lock().unwrap();
+            q.push_back(frame);
             self.inbox.ready.notify_one();
             return Ok(());
         }

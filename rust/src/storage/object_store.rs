@@ -139,7 +139,8 @@ impl SimObjectStore {
         let out = f();
         let mut free = self.slot.lock().unwrap();
         free.push(idx);
-        drop(free);
+        // Notify while the lock is held (lost-wakeup defense — see
+        // CONCURRENCY.md on wait/notify pairings).
         self.slot_free.notify_one();
         out
     }

@@ -1,0 +1,15 @@
+//! Concurrency-invariant enforcement (runtime half).
+//!
+//! The declared lock hierarchy lives in `rust/lockorder.toml`; the
+//! static half is the `cargo xtask lint` pass (see `rust/xtask/`),
+//! which checks every `Mutex`/`RwLock`/`Condvar` in this crate against
+//! the same declarations. `CONCURRENCY.md` at the repo root documents
+//! the full rank table and the wait/notify pairings.
+
+pub mod ordered;
+pub mod ranks;
+
+pub use ordered::{
+    poison_recovered_total, publish_metrics, OrderedCondvar, OrderedGuard,
+    OrderedMutex,
+};

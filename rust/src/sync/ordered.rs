@@ -1,0 +1,429 @@
+//! Ordered lock primitives — the runtime twin of `cargo xtask lint`.
+//!
+//! [`OrderedMutex`] and [`OrderedCondvar`] wrap their `std::sync`
+//! counterparts with the lock hierarchy declared in
+//! `rust/lockorder.toml` (ranks re-exported as constants from
+//! [`crate::sync::ranks`]). Two guarantees ride on them:
+//!
+//! 1. **Debug-time order checking.** Under `debug_assertions` every
+//!    acquisition pushes its rank onto a thread-local held-rank stack
+//!    and panics if the new rank is not strictly greater than every
+//!    rank already held — the exact inversion class the static lint
+//!    (L1) checks for, enforced dynamically on whatever path the tests
+//!    actually execute. Release builds compile the stack away; the
+//!    wrappers are passthrough (`PERF.md` pins micro benches #7/#9 as
+//!    the no-regression witnesses).
+//! 2. **Poison containment (all builds).** A contained
+//!    [`crate::Error::WorkerPanic`] can leave a shared control-plane
+//!    mutex poisoned even though the cluster survives the panic.
+//!    `lock()` recovers the poisoned state instead of unwrap-
+//!    propagating, counts the recovery (exported as the
+//!    `sync.poison_recovered_total` counter), and logs the lock name.
+//!    The protected values are designed to stay consistent across a
+//!    holder panic: every migrated critical section either performs a
+//!    single-assignment update or re-validates its predicate under the
+//!    lock.
+//!
+//! **Condvar discipline is structural here:** `OrderedCondvar::notify_*`
+//! take a reference to the paired lock's guard, so a notify that does
+//! not hold the mutex is a compile error — the lost-wakeup class PR 6
+//! fixed by hand in `Outbox::grant_credits` cannot be reintroduced on a
+//! migrated lock. The static lint (L2) covers the raw `Condvar`s that
+//! remain.
+//!
+//! **Scope.** The checker only sees `OrderedMutex` acquisitions: a raw
+//! `Mutex` taken between two ordered ones is invisible to the runtime
+//! stack (the static lint ranks those via `lockorder.toml` instead).
+//! There is deliberately no `OrderedRwLock` — every lock in the
+//! migrated control-plane set is a `Mutex`.
+
+use std::cell::{Cell, RefCell};
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Total poisoned-lock recoveries since process start (all
+/// `OrderedMutex`/`OrderedCondvar` instances).
+static POISON_RECOVERED: AtomicU64 = AtomicU64::new(0);
+/// What `publish_metrics` has already folded into a `Metrics` counter.
+static POISON_PUBLISHED: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of poisoned-lock recoveries.
+pub fn poison_recovered_total() -> u64 {
+    POISON_RECOVERED.load(Ordering::Relaxed)
+}
+
+/// Fold recoveries since the last publish into the
+/// `sync.poison_recovered_total` counter (monotone: publishes deltas).
+pub fn publish_metrics(m: &crate::metrics::Metrics) {
+    let total = POISON_RECOVERED.load(Ordering::Relaxed);
+    let last = POISON_PUBLISHED.swap(total, Ordering::Relaxed);
+    if total > last {
+        m.counter("sync.poison_recovered_total").add(total - last);
+    }
+}
+
+fn note_poison(name: &str) {
+    POISON_RECOVERED.fetch_add(1, Ordering::Relaxed);
+    log::warn!("recovered poisoned lock `{name}` (a holder thread panicked)");
+}
+
+#[cfg(debug_assertions)]
+thread_local! {
+    /// (rank, name, token) per lock currently held by this thread.
+    static HELD: RefCell<Vec<(u16, &'static str, u64)>> =
+        const { RefCell::new(Vec::new()) };
+    /// Per-acquisition token source, so guards dropped out of creation
+    /// order release the right stack entry.
+    static NEXT_TOKEN: Cell<u64> = const { Cell::new(0) };
+}
+
+#[cfg(debug_assertions)]
+fn push_rank(rank: u16, name: &'static str) -> u64 {
+    HELD.with(|h| {
+        let mut held = h.borrow_mut();
+        if let Some((top_rank, top_name, _)) =
+            held.iter().max_by_key(|(r, _, _)| *r)
+        {
+            assert!(
+                *top_rank < rank,
+                "lock-order inversion: acquiring `{name}` (rank {rank}) while \
+                 holding `{top_name}` (rank {top_rank}); the declared \
+                 hierarchy lives in rust/lockorder.toml"
+            );
+        }
+        let token = NEXT_TOKEN.with(|t| {
+            let v = t.get().wrapping_add(1);
+            t.set(v);
+            v
+        });
+        held.push((rank, name, token));
+        token
+    })
+}
+
+#[cfg(debug_assertions)]
+fn pop_rank(token: u64) {
+    HELD.with(|h| {
+        let mut held = h.borrow_mut();
+        if let Some(i) = held.iter().rposition(|(_, _, t)| *t == token) {
+            held.remove(i);
+        }
+    });
+}
+
+/// A `Mutex` with a declared position in the global lock hierarchy.
+pub struct OrderedMutex<T> {
+    // lint: lock-ok(the wrapper itself; its rank arrives per-instance via new())
+    inner: Mutex<T>,
+    rank: u16,
+    name: &'static str,
+}
+
+impl<T> OrderedMutex<T> {
+    /// Wrap `value` at `rank` (a constant from [`crate::sync::ranks`]).
+    pub const fn new(rank: u16, name: &'static str, value: T) -> Self {
+        OrderedMutex { inner: Mutex::new(value), rank, name }
+    }
+
+    /// Acquire. Panics (debug builds only) on a rank inversion;
+    /// recovers poison in all builds.
+    pub fn lock(&self) -> OrderedGuard<'_, T> {
+        #[cfg(debug_assertions)]
+        let token = push_rank(self.rank, self.name);
+        let guard = self.inner.lock().unwrap_or_else(|p| {
+            note_poison(self.name);
+            p.into_inner()
+        });
+        OrderedGuard {
+            guard: Some(guard),
+            lock: self,
+            #[cfg(debug_assertions)]
+            token,
+        }
+    }
+
+    /// The declared rank (tests and diagnostics).
+    pub fn rank(&self) -> u16 {
+        self.rank
+    }
+
+    /// The declared hierarchy name.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for OrderedMutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OrderedMutex")
+            .field("name", &self.name)
+            .field("rank", &self.rank)
+            .field("inner", &self.inner)
+            .finish()
+    }
+}
+
+/// RAII guard for an [`OrderedMutex`]; releases the held-rank entry on
+/// drop.
+pub struct OrderedGuard<'a, T> {
+    /// `Some` except transiently while parked in an
+    /// [`OrderedCondvar`] wait.
+    guard: Option<MutexGuard<'a, T>>,
+    lock: &'a OrderedMutex<T>,
+    #[cfg(debug_assertions)]
+    token: u64,
+}
+
+impl<T> Deref for OrderedGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.guard.as_ref().expect("guard present")
+    }
+}
+
+impl<T> DerefMut for OrderedGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.guard.as_mut().expect("guard present")
+    }
+}
+
+impl<T> Drop for OrderedGuard<'_, T> {
+    fn drop(&mut self) {
+        #[cfg(debug_assertions)]
+        pop_rank(self.token);
+    }
+}
+
+/// A `Condvar` paired with one [`OrderedMutex`]. Waits release and
+/// re-take the held-rank entry around the park; notifies demand the
+/// paired guard by reference, making notify-while-held structural.
+#[derive(Default)]
+pub struct OrderedCondvar {
+    // lint: lock-ok(the wrapper itself; pairing is per-instance, enforced by the guard-taking API)
+    cv: Condvar,
+}
+
+impl OrderedCondvar {
+    pub const fn new() -> Self {
+        OrderedCondvar { cv: Condvar::new() }
+    }
+
+    /// Block until notified. Callers loop on their predicate (lint L2
+    /// checks this for raw condvars; the pattern is the same here).
+    pub fn wait<'a, T>(&self, g: OrderedGuard<'a, T>) -> OrderedGuard<'a, T> {
+        let lock = g.lock;
+        let inner = Self::detach(g);
+        let inner = self.cv.wait(inner).unwrap_or_else(|p| {
+            note_poison(lock.name);
+            p.into_inner()
+        });
+        Self::reattach(lock, inner)
+    }
+
+    /// Block until notified or `dur` elapses; returns the re-acquired
+    /// guard and whether the wait timed out.
+    pub fn wait_timeout<'a, T>(
+        &self,
+        g: OrderedGuard<'a, T>,
+        dur: Duration,
+    ) -> (OrderedGuard<'a, T>, bool) {
+        let lock = g.lock;
+        let inner = Self::detach(g);
+        let (inner, res) = self.cv.wait_timeout(inner, dur).unwrap_or_else(|p| {
+            note_poison(lock.name);
+            p.into_inner()
+        });
+        (Self::reattach(lock, inner), res.timed_out())
+    }
+
+    /// Wake one waiter. `_held` proves the paired mutex is held at the
+    /// notify, so the waiter's predicate check cannot race the state
+    /// change (the lost-wakeup class).
+    pub fn notify_one<T>(&self, _held: &OrderedGuard<'_, T>) {
+        self.cv.notify_one();
+    }
+
+    /// Wake all waiters; same held-guard contract as [`Self::notify_one`].
+    pub fn notify_all<T>(&self, _held: &OrderedGuard<'_, T>) {
+        self.cv.notify_all();
+    }
+
+    /// Take the inner `MutexGuard` out of `g`, dropping its held-rank
+    /// entry without unlocking.
+    fn detach<'a, T>(mut g: OrderedGuard<'a, T>) -> MutexGuard<'a, T> {
+        #[cfg(debug_assertions)]
+        pop_rank(g.token);
+        let inner = g.guard.take().expect("guard present");
+        std::mem::forget(g);
+        inner
+    }
+
+    /// Re-wrap a `MutexGuard` returned by the condvar, re-pushing the
+    /// rank (re-checked: waking while holding a higher rank is the same
+    /// inversion as acquiring fresh).
+    fn reattach<'a, T>(
+        lock: &'a OrderedMutex<T>,
+        inner: MutexGuard<'a, T>,
+    ) -> OrderedGuard<'a, T> {
+        #[cfg(debug_assertions)]
+        let token = push_rank(lock.rank, lock.name);
+        OrderedGuard {
+            guard: Some(inner),
+            lock,
+            #[cfg(debug_assertions)]
+            token,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_unlock_roundtrip() {
+        let m = OrderedMutex::new(10, "test.a", 1u32);
+        {
+            let mut g = m.lock();
+            *g += 1;
+        }
+        assert_eq!(*m.lock(), 2);
+        assert_eq!(m.rank(), 10);
+        assert_eq!(m.name(), "test.a");
+    }
+
+    #[test]
+    fn ascending_ranks_are_legal() {
+        let a = OrderedMutex::new(10, "test.low", ());
+        let b = OrderedMutex::new(20, "test.high", ());
+        let ga = a.lock();
+        let gb = b.lock();
+        drop(gb);
+        drop(ga);
+        // out-of-order guard drops release the right stack entries
+        let ga = a.lock();
+        let gb = b.lock();
+        drop(ga);
+        drop(gb);
+        let _again = a.lock();
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn inversion_panics_under_debug_assertions() {
+        let result = std::thread::spawn(|| {
+            let low = OrderedMutex::new(10, "test.low2", ());
+            let high = OrderedMutex::new(20, "test.high2", ());
+            let _gh = high.lock();
+            let _gl = low.lock(); // inversion: 10 acquired under 20
+        })
+        .join();
+        let err = result.expect_err("seeded inversion must panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(
+            msg.contains("lock-order inversion"),
+            "panic message names the inversion: {msg}"
+        );
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn same_rank_nesting_panics_under_debug_assertions() {
+        let result = std::thread::spawn(|| {
+            let a = OrderedMutex::new(10, "test.shard_a", ());
+            let b = OrderedMutex::new(10, "test.shard_b", ());
+            let _ga = a.lock();
+            let _gb = b.lock(); // shards share a rank: never nest them
+        })
+        .join();
+        assert!(result.is_err(), "same-rank nesting must panic");
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[test]
+    fn inversion_is_free_in_release() {
+        // the held-rank stack compiles away: the same seeded inversion
+        // that panics under debug_assertions is a plain nested lock here
+        let low = OrderedMutex::new(10, "test.low_rel", ());
+        let high = OrderedMutex::new(20, "test.high_rel", ());
+        let _gh = high.lock();
+        let _gl = low.lock();
+    }
+
+    #[test]
+    fn condvar_wait_and_notify_while_held() {
+        let pair = Arc::new((
+            OrderedMutex::new(10, "test.cv_mutex", false),
+            OrderedCondvar::new(),
+        ));
+        let waiter = {
+            let pair = pair.clone();
+            std::thread::spawn(move || {
+                let (m, cv) = &*pair;
+                let mut g = m.lock();
+                let mut rounds = 0u32;
+                while !*g {
+                    let (g2, timed_out) =
+                        cv.wait_timeout(g, Duration::from_millis(200));
+                    g = g2;
+                    rounds += 1;
+                    if timed_out && rounds > 50 {
+                        panic!("notify never arrived");
+                    }
+                }
+            })
+        };
+        std::thread::sleep(Duration::from_millis(10));
+        {
+            let (m, cv) = &*pair;
+            let mut g = m.lock();
+            *g = true;
+            cv.notify_all(&g); // state change and notify under one hold
+        }
+        waiter.join().expect("waiter saw the predicate");
+    }
+
+    #[test]
+    fn poison_is_recovered_and_counted() {
+        let before = poison_recovered_total();
+        let m = Arc::new(OrderedMutex::new(10, "test.poisoned", 7u32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("poison the lock");
+        })
+        .join();
+        // a raw Mutex would now return Err(Poisoned); OrderedMutex
+        // recovers and counts
+        assert_eq!(*m.lock(), 7);
+        assert!(poison_recovered_total() > before);
+        let metrics = crate::metrics::Metrics::default();
+        publish_metrics(&metrics);
+        assert!(metrics.counter_value("sync.poison_recovered_total") > 0);
+    }
+
+    #[test]
+    fn waiting_releases_the_held_rank() {
+        // while parked on a rank-20 condvar, acquiring rank 10 from
+        // another context of the same thread is impossible — but other
+        // threads' stacks are independent; here we check the waiter's
+        // own stack is popped during the park by re-acquiring a lower
+        // rank right after a timed-out wait returns the guard chain to
+        // us in predicate order.
+        let low = OrderedMutex::new(10, "test.low3", ());
+        let high = OrderedMutex::new(20, "test.high3", ());
+        let cv = OrderedCondvar::new();
+        let g = high.lock();
+        let (g, timed_out) = cv.wait_timeout(g, Duration::from_millis(1));
+        assert!(timed_out);
+        drop(g);
+        let _gl = low.lock(); // stack empty again: legal
+    }
+}

@@ -1,0 +1,47 @@
+//! @generated from rust/lockorder.toml — do not edit values by hand.
+//!
+//! One constant per `runtime = true` lock in `rust/lockorder.toml`,
+//! named by uppercasing the lock's hierarchy name (`.` → `_`).
+//! `cargo xtask lint` verifies this table matches the declarations
+//! (same set of names, same rank values) and fails CI on drift, so the
+//! static pass and the runtime checker can never enforce two different
+//! hierarchies.
+//!
+//! Lower rank = acquired earlier (outermost). A thread may only
+//! acquire an [`crate::sync::OrderedMutex`] whose rank is strictly
+//! greater than every rank it already holds.
+
+/// `CtrlInner.state` — admission-controller queue + ready set.
+pub const ADMISSION_STATE: u16 = 100;
+/// `ServingCache.results` — exact-result LRU.
+pub const CACHE_RESULTS: u16 = 110;
+/// `ServingCache.fragments` — fragment LRU.
+pub const CACHE_FRAGMENTS: u16 = 112;
+/// `ServingCache.plans` — plan-compile memo.
+pub const CACHE_PLANS: u16 = 114;
+/// `TaskQueue.heap` — compute-ready priority heap.
+pub const SCHED_HEAP: u16 = 120;
+/// `TaskQueue.listeners` — pressure events poked on submit.
+pub const SCHED_LISTENERS: u16 = 124;
+/// `TaskQueue.dirty_holders` — residency re-rank dirty set.
+pub const SCHED_DIRTY_HOLDERS: u16 = 128;
+/// `HolderRegistry.holders` — movement plane's holder census.
+pub const MOVEMENT_HOLDERS: u16 = 130;
+/// `MoveQueue.heap` — movement-task priority heap.
+pub const MOVEMENT_HEAP: u16 = 134;
+/// `ShuffleCoalescer.shards[i]` — per-destination builder shard (all
+/// shards share the rank: they must never nest).
+pub const EXCHANGE_SHARD: u16 = 150;
+/// `Outbox.q` — outbound frame queue.
+pub const OUTBOX_Q: u16 = 220;
+/// `Outbox.credits` — per-destination credit windows (locked after
+/// `q` when both are held).
+pub const OUTBOX_CREDITS: u16 = 230;
+/// `Outbox.send_latency` — per-destination send-latency EWMA.
+pub const OUTBOX_SEND_LATENCY: u16 = 236;
+/// `reservation::Inner.reserved` — governor's reserved-byte ledger.
+pub const GOVERNOR_RESERVED: u16 = 300;
+/// `PressureEvent.state` — pressure epoch + pending reasons. A leaf:
+/// raised while `pinned.free`, `sched.listeners`, or an exchange shard
+/// is held, and never held across another acquisition itself.
+pub const PRESSURE_STATE: u16 = 390;

@@ -1,0 +1,237 @@
+//! L3: config-knob completeness for `WorkerConfig`.
+//!
+//! Every field of `WorkerConfig` must be
+//! * documented (`///` on the field),
+//! * settable from TOML (its name appears in `apply`, as an ident or a
+//!   string — `set_usize!(foo)` and `get("foo")` both count),
+//! * range-checked in `validate` — or listed under
+//!   `[config] allow_unvalidated` in `lockorder.toml` (enums, bools,
+//!   and genuinely free-range integers).
+//!
+//! `[config] clamp_after = ["a<b"]` additionally pins *statement
+//! order* inside `apply`: the default clamp of knob `a` (the statement
+//! whose strings mention `a` and whose idents include `is_none`) must
+//! run after the TOML setter of knob `b` (the last statement
+//! mentioning `b` with no `is_none`). A clamp that reads its dependent
+//! knob before that knob's override lands clamps against the default —
+//! exactly the bug this check exists to keep fixed.
+
+use std::collections::HashSet;
+
+use syn::spanned::Spanned;
+use syn::visit::{self, Visit};
+use syn::{ImplItem, Item, Type};
+
+use crate::lockorder::ConfigRules;
+use crate::locks::suppressed_lines;
+use crate::Violation;
+
+/// Idents and string literals mentioned by one syntax node, macro
+/// token streams included (`set_usize!(batch_rows)` mentions
+/// `batch_rows`).
+#[derive(Default)]
+struct Mentions {
+    idents: HashSet<String>,
+    strings: HashSet<String>,
+}
+
+impl Mentions {
+    fn of_stmt(stmt: &syn::Stmt) -> Self {
+        let mut m = Mentions::default();
+        m.visit_stmt(stmt);
+        m
+    }
+
+    fn mentions(&self, name: &str) -> bool {
+        self.idents.contains(name) || self.strings.contains(name)
+    }
+}
+
+impl<'ast> Visit<'ast> for Mentions {
+    fn visit_ident(&mut self, i: &'ast proc_macro2::Ident) {
+        self.idents.insert(i.to_string());
+    }
+
+    fn visit_lit_str(&mut self, l: &'ast syn::LitStr) {
+        self.strings.insert(l.value());
+    }
+
+    fn visit_macro(&mut self, m: &'ast syn::Macro) {
+        collect_tokens(m.tokens.clone(), self);
+        visit::visit_macro(self, m);
+    }
+}
+
+fn collect_tokens(ts: proc_macro2::TokenStream, m: &mut Mentions) {
+    for tt in ts {
+        match tt {
+            proc_macro2::TokenTree::Group(g) => collect_tokens(g.stream(), m),
+            proc_macro2::TokenTree::Ident(i) => {
+                m.idents.insert(i.to_string());
+            }
+            proc_macro2::TokenTree::Literal(l) => {
+                let s = l.to_string();
+                if s.len() >= 2 && s.starts_with('"') && s.ends_with('"') {
+                    m.strings.insert(s[1..s.len() - 1].to_string());
+                }
+            }
+            proc_macro2::TokenTree::Punct(_) => {}
+        }
+    }
+}
+
+pub fn check_file(rel: &str, src: &str, rules: &ConfigRules, out: &mut Vec<Violation>) {
+    let suppressed = suppressed_lines(src);
+    let ast = match syn::parse_file(src) {
+        // locks.rs already reports parse failures for this file.
+        Ok(a) => a,
+        Err(_) => return,
+    };
+
+    let mut fields: Vec<(String, usize, bool)> = Vec::new(); // name, line, has_doc
+    let mut struct_line = 0usize;
+    let mut apply_stmts: Option<Vec<Mentions>> = None;
+    let mut validate_mentions: Option<Mentions> = None;
+
+    for item in &ast.items {
+        match item {
+            Item::Struct(s) if s.ident == "WorkerConfig" => {
+                struct_line = s.ident.span().start().line;
+                for f in &s.fields {
+                    let Some(ident) = &f.ident else { continue };
+                    let has_doc = f.attrs.iter().any(|a| a.path().is_ident("doc"));
+                    fields.push((ident.to_string(), f.span().start().line, has_doc));
+                }
+            }
+            Item::Impl(i) => {
+                let is_worker_cfg = match &*i.self_ty {
+                    Type::Path(tp) => tp
+                        .path
+                        .segments
+                        .last()
+                        .map(|s| s.ident == "WorkerConfig")
+                        .unwrap_or(false),
+                    _ => false,
+                };
+                if !is_worker_cfg || i.trait_.is_some() {
+                    continue;
+                }
+                for ii in &i.items {
+                    if let ImplItem::Fn(f) = ii {
+                        if f.sig.ident == "apply" {
+                            apply_stmts =
+                                Some(f.block.stmts.iter().map(Mentions::of_stmt).collect());
+                        } else if f.sig.ident == "validate" {
+                            let mut m = Mentions::default();
+                            m.visit_block(&f.block);
+                            validate_mentions = Some(m);
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    if fields.is_empty() {
+        return; // not the config file (fixture trees may lack it)
+    }
+
+    let mut push = |rule: &'static str, line: usize, msg: String| {
+        if suppressed.contains(&line) || (line > 1 && suppressed.contains(&(line - 1))) {
+            return;
+        }
+        out.push(Violation {
+            rule,
+            file: rel.to_string(),
+            line,
+            msg,
+        });
+    };
+
+    let Some(apply_stmts) = apply_stmts else {
+        push(
+            "config-setter",
+            struct_line,
+            "WorkerConfig has no inherent `apply` method".to_string(),
+        );
+        return;
+    };
+    let Some(validate_mentions) = validate_mentions else {
+        push(
+            "config-validate",
+            struct_line,
+            "WorkerConfig has no inherent `validate` method".to_string(),
+        );
+        return;
+    };
+
+    for (name, line, has_doc) in &fields {
+        if !has_doc {
+            push(
+                "config-doc",
+                *line,
+                format!("`WorkerConfig::{name}` has no doc comment"),
+            );
+        }
+        if !apply_stmts.iter().any(|m| m.mentions(name)) {
+            push(
+                "config-setter",
+                *line,
+                format!("`WorkerConfig::{name}` has no TOML setter in `apply`"),
+            );
+        }
+        if !validate_mentions.mentions(name) && !rules.allow_unvalidated.iter().any(|a| a == name)
+        {
+            push(
+                "config-validate",
+                *line,
+                format!(
+                    "`WorkerConfig::{name}` is neither checked in `validate` nor listed \
+                     under [config] allow_unvalidated"
+                ),
+            );
+        }
+    }
+
+    for (a, b) in &rules.clamp_after {
+        // The clamp statement: mentions `a` as a *string* (the
+        // `get("a").is_none()` probe) and uses `is_none`.
+        let clamp_idx = apply_stmts
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.strings.contains(a) && m.idents.contains("is_none"))
+            .map(|(i, _)| i)
+            .max();
+        // The setter statement: last mention of `b` outside any
+        // default-clamp (no `is_none`).
+        let setter_idx = apply_stmts
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.mentions(b) && !m.idents.contains("is_none"))
+            .map(|(i, _)| i)
+            .max();
+        match (clamp_idx, setter_idx) {
+            (None, _) => push(
+                "config-clamp-order",
+                struct_line,
+                format!("clamp_after `{a}<{b}`: no default clamp of `{a}` found in `apply`"),
+            ),
+            (_, None) => push(
+                "config-clamp-order",
+                struct_line,
+                format!("clamp_after `{a}<{b}`: no setter of `{b}` found in `apply`"),
+            ),
+            (Some(c), Some(s)) if c < s => push(
+                "config-clamp-order",
+                struct_line,
+                format!(
+                    "clamp_after `{a}<{b}`: the default clamp of `{a}` (stmt {c}) runs \
+                     before the setter of `{b}` (stmt {s}) — it would clamp against the \
+                     default, not the override"
+                ),
+            ),
+            _ => {}
+        }
+    }
+}

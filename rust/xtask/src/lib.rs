@@ -1,0 +1,173 @@
+//! Project lints for the engine crate (`cargo xtask lint`).
+//!
+//! Four families, all driven by `rust/lockorder.toml`:
+//!
+//! * L1 (`lock-order`, `unranked-lock`, `stale-decl`) — static
+//!   lock-hierarchy enforcement over `src/`.
+//! * L2 (`condvar-wait`, `condvar-notify`, `condvar-unpaired`) —
+//!   condvar discipline: waits loop, notifies hold the paired lock.
+//! * L3 (`config-*`) — every `WorkerConfig` knob is documented,
+//!   settable, and validated; default clamps run after the knobs they
+//!   depend on.
+//! * L4 (`metrics-registry`) — every metric name lives exactly once in
+//!   `src/metrics/registry.rs`.
+//!
+//! Plus `ranks-drift`: `src/sync/ranks.rs` (the runtime checker's rank
+//! table) must stay generated-equal to the `runtime = true` entries in
+//! `lockorder.toml`.
+//!
+//! The lint is deliberately a plain library function over a directory
+//! so the self-tests can point it at fixture trees.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+pub mod config_knobs;
+pub mod lockorder;
+pub mod locks;
+pub mod metrics_names;
+
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Stable rule slug, e.g. `lock-order`.
+    pub rule: &'static str,
+    /// Path relative to the crate root (`src/...`).
+    pub file: String,
+    /// 1-based; 0 when the violation has no anchor line.
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Lint the crate rooted at `root` (the directory holding
+/// `lockorder.toml` and `src/`). Returns violations sorted by file and
+/// line; `Err` only for infrastructure failures (unreadable files, a
+/// malformed `lockorder.toml`).
+pub fn run(root: &Path) -> Result<Vec<Violation>, String> {
+    let toml_path = root.join("lockorder.toml");
+    let text = fs::read_to_string(&toml_path)
+        .map_err(|e| format!("{}: {e}", toml_path.display()))?;
+    let order = lockorder::parse(&text)?;
+
+    let mut files = Vec::new();
+    collect_rs(&root.join("src"), &mut files)?;
+    files.sort();
+
+    let registry_rel = "src/metrics/registry.rs";
+    let has_registry = files
+        .iter()
+        .any(|p| rel_of(root, p).as_deref() == Some(registry_rel));
+
+    let mut out = Vec::new();
+    let mut metrics = metrics_names::MetricsCheck::new();
+    for path in &files {
+        let Some(rel) = rel_of(root, path) else { continue };
+        let src =
+            fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        locks::check_file(&rel, &src, &order, &mut out);
+        if rel == "src/config/mod.rs" {
+            config_knobs::check_file(&rel, &src, &order.config, &mut out);
+        }
+        if rel == "src/sync/ranks.rs" {
+            check_ranks_drift(&rel, &src, &order, &mut out);
+        }
+        if has_registry {
+            if rel == registry_rel {
+                metrics.load_registry(&rel, &src, &mut out);
+            } else {
+                metrics.collect_file(&rel, &src);
+            }
+        }
+    }
+    metrics.finish(&mut out);
+
+    out.sort_by(|a, b| (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule)));
+    Ok(out)
+}
+
+fn rel_of(root: &Path, path: &Path) -> Option<String> {
+    path.strip_prefix(root)
+        .ok()
+        .map(|p| p.to_string_lossy().replace('\\', "/"))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries = fs::read_dir(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("{}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// `src/sync/ranks.rs` must be generated-equal to the `runtime = true`
+/// declarations: same constant set (name uppercased, `.` → `_`), same
+/// values. Drift would let the static and runtime checkers enforce two
+/// different hierarchies.
+fn check_ranks_drift(rel: &str, src: &str, order: &lockorder::LockOrder, out: &mut Vec<Violation>) {
+    let ast = match syn::parse_file(src) {
+        Ok(a) => a,
+        Err(_) => return, // locks.rs reports the parse failure
+    };
+    let mut consts: HashMap<String, (u16, usize)> = HashMap::new();
+    for item in &ast.items {
+        if let syn::Item::Const(c) = item {
+            let value = match &*c.expr {
+                syn::Expr::Lit(l) => match &l.lit {
+                    syn::Lit::Int(i) => i.base10_parse::<u16>().ok(),
+                    _ => None,
+                },
+                _ => None,
+            };
+            if let Some(v) = value {
+                use syn::spanned::Spanned;
+                consts.insert(c.ident.to_string(), (v, c.ident.span().start().line));
+            }
+        }
+    }
+    let mut expected: HashMap<String, u16> = HashMap::new();
+    for d in order.locks.iter().filter(|d| d.runtime) {
+        expected.insert(d.name.to_uppercase().replace('.', "_"), d.rank);
+    }
+    for (cname, rank) in &expected {
+        match consts.get(cname) {
+            None => out.push(Violation {
+                rule: "ranks-drift",
+                file: rel.to_string(),
+                line: 1,
+                msg: format!("missing `pub const {cname}: u16 = {rank};` (runtime lock)"),
+            }),
+            Some((v, line)) if v != rank => out.push(Violation {
+                rule: "ranks-drift",
+                file: rel.to_string(),
+                line: *line,
+                msg: format!("`{cname}` is {v} but lockorder.toml declares rank {rank}"),
+            }),
+            _ => {}
+        }
+    }
+    for (cname, (_, line)) in &consts {
+        if !expected.contains_key(cname) {
+            out.push(Violation {
+                rule: "ranks-drift",
+                file: rel.to_string(),
+                line: *line,
+                msg: format!(
+                    "`{cname}` matches no `runtime = true` lock in lockorder.toml"
+                ),
+            });
+        }
+    }
+}

@@ -1,0 +1,301 @@
+//! Hand-rolled parser for `rust/lockorder.toml`.
+//!
+//! The file is deliberately a small TOML subset — `[[lock]]` array
+//! tables with scalar values, plus one `[config]` table holding string
+//! arrays — so the lint has zero parsing dependencies and the format
+//! stays too simple to rot. Anything outside that subset is a hard
+//! error, not a silent skip.
+
+/// One declared lock: the hierarchy entry for a `Mutex`/`RwLock` field.
+#[derive(Debug, Clone)]
+pub struct LockDecl {
+    /// Hierarchy name, e.g. `outbox.q`.
+    pub name: String,
+    /// Lower = acquired earlier (outermost). Strictly-greater-than is
+    /// required for every acquisition; equal ranks must never nest.
+    pub rank: u16,
+    /// Declaring file, relative to `rust/` (e.g. `src/memory/pinned.rs`).
+    pub file: String,
+    /// Declaring struct.
+    pub strukt: String,
+    /// Field name (`0`, `1`, … for tuple structs).
+    pub field: String,
+    /// `mutex` or `rwlock`.
+    pub kind: LockKind,
+    /// Condvar fields paired with this lock (same struct).
+    pub condvars: Vec<String>,
+    /// `true` when the field is wrapped in `OrderedMutex` and mirrored
+    /// as a constant in `src/sync/ranks.rs`.
+    pub runtime: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LockKind {
+    Mutex,
+    RwLock,
+}
+
+/// The `[config]` table: L3 knob rules.
+#[derive(Debug, Clone, Default)]
+pub struct ConfigRules {
+    /// `WorkerConfig` fields exempt from the must-appear-in-validate
+    /// rule (enums, bools, free-range integers).
+    pub allow_unvalidated: Vec<String>,
+    /// `a<b` pairs: the default clamp of knob `a` must run after the
+    /// TOML setter of knob `b` in `WorkerConfig::apply`.
+    pub clamp_after: Vec<(String, String)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct LockOrder {
+    pub locks: Vec<LockDecl>,
+    pub config: ConfigRules,
+}
+
+impl LockOrder {
+    /// Locks declared in `file` (path relative to the repo's `rust/`).
+    pub fn locks_in_file<'a>(&'a self, file: &str) -> Vec<&'a LockDecl> {
+        self.locks.iter().filter(|d| d.file == file).collect()
+    }
+}
+
+#[derive(Debug, Default)]
+struct PartialLock {
+    name: Option<String>,
+    rank: Option<u16>,
+    file: Option<String>,
+    strukt: Option<String>,
+    field: Option<String>,
+    kind: Option<LockKind>,
+    condvars: Vec<String>,
+    runtime: bool,
+}
+
+impl PartialLock {
+    fn finish(self, line: usize) -> Result<LockDecl, String> {
+        let need = |o: Option<String>, k: &str| {
+            o.ok_or_else(|| format!("lockorder.toml:{line}: [[lock]] missing `{k}`"))
+        };
+        Ok(LockDecl {
+            name: need(self.name, "name")?,
+            rank: self
+                .rank
+                .ok_or_else(|| format!("lockorder.toml:{line}: [[lock]] missing `rank`"))?,
+            file: need(self.file, "file")?,
+            strukt: need(self.strukt, "struct")?,
+            field: need(self.field, "field")?,
+            kind: self
+                .kind
+                .ok_or_else(|| format!("lockorder.toml:{line}: [[lock]] missing `kind`"))?,
+            condvars: self.condvars,
+            runtime: self.runtime,
+        })
+    }
+}
+
+enum Section {
+    None,
+    Lock(PartialLock, usize),
+    Config,
+}
+
+pub fn parse(text: &str) -> Result<LockOrder, String> {
+    let mut locks: Vec<LockDecl> = Vec::new();
+    let mut config = ConfigRules::default();
+    let mut section = Section::None;
+
+    // Logical lines: a `key = [` array may span physical lines until
+    // its brackets balance (strings in this file never contain `[`,
+    // `]`, or `#`, which keeps the scanner honest about staying simple).
+    let mut pending = String::new();
+    let mut pending_line = 0usize;
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let stripped = strip_comment(raw);
+        let trimmed = stripped.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        if pending.is_empty() {
+            pending_line = lineno;
+            pending.push_str(trimmed);
+        } else {
+            pending.push(' ');
+            pending.push_str(trimmed);
+        }
+        let opens = pending.matches('[').count();
+        let closes = pending.matches(']').count();
+        // Section headers contain balanced brackets; unbalanced means
+        // an array literal continues on the next line.
+        if opens > closes {
+            continue;
+        }
+        let line = std::mem::take(&mut pending);
+        handle_line(&line, pending_line, &mut section, &mut locks, &mut config)?;
+    }
+    if !pending.is_empty() {
+        return Err(format!(
+            "lockorder.toml:{pending_line}: unterminated array"
+        ));
+    }
+    if let Section::Lock(p, line) = section {
+        locks.push(p.finish(line)?);
+    }
+    validate(&locks)?;
+    Ok(LockOrder { locks, config })
+}
+
+fn handle_line(
+    line: &str,
+    lineno: usize,
+    section: &mut Section,
+    locks: &mut Vec<LockDecl>,
+    config: &mut ConfigRules,
+) -> Result<(), String> {
+    if line == "[[lock]]" || line == "[config]" {
+        if let Section::Lock(p, l) = std::mem::replace(section, Section::None) {
+            locks.push(p.finish(l)?);
+        }
+        *section = if line == "[[lock]]" {
+            Section::Lock(PartialLock::default(), lineno)
+        } else {
+            Section::Config
+        };
+        return Ok(());
+    }
+    let (key, value) = line
+        .split_once('=')
+        .ok_or_else(|| format!("lockorder.toml:{lineno}: expected `key = value`"))?;
+    let key = key.trim();
+    let value = value.trim();
+    match section {
+        Section::None => Err(format!(
+            "lockorder.toml:{lineno}: `{key}` outside any [[lock]] or [config] table"
+        )),
+        Section::Lock(p, _) => {
+            match key {
+                "name" => p.name = Some(parse_string(value, lineno)?),
+                "rank" => {
+                    p.rank = Some(value.parse::<u16>().map_err(|_| {
+                        format!("lockorder.toml:{lineno}: rank must be a u16, got `{value}`")
+                    })?)
+                }
+                "file" => p.file = Some(parse_string(value, lineno)?),
+                "struct" => p.strukt = Some(parse_string(value, lineno)?),
+                "field" => p.field = Some(parse_string(value, lineno)?),
+                "kind" => {
+                    p.kind = Some(match parse_string(value, lineno)?.as_str() {
+                        "mutex" => LockKind::Mutex,
+                        "rwlock" => LockKind::RwLock,
+                        other => {
+                            return Err(format!(
+                                "lockorder.toml:{lineno}: kind must be mutex|rwlock, got `{other}`"
+                            ))
+                        }
+                    })
+                }
+                "condvars" => p.condvars = parse_string_array(value, lineno)?,
+                "runtime" => {
+                    p.runtime = match value {
+                        "true" => true,
+                        "false" => false,
+                        other => {
+                            return Err(format!(
+                                "lockorder.toml:{lineno}: runtime must be true|false, got `{other}`"
+                            ))
+                        }
+                    }
+                }
+                other => {
+                    return Err(format!(
+                        "lockorder.toml:{lineno}: unknown [[lock]] key `{other}`"
+                    ))
+                }
+            }
+            Ok(())
+        }
+        Section::Config => {
+            match key {
+                "allow_unvalidated" => {
+                    config.allow_unvalidated = parse_string_array(value, lineno)?
+                }
+                "clamp_after" => {
+                    config.clamp_after = parse_string_array(value, lineno)?
+                        .into_iter()
+                        .map(|s| {
+                            s.split_once('<')
+                                .map(|(a, b)| (a.trim().to_string(), b.trim().to_string()))
+                                .ok_or_else(|| {
+                                    format!(
+                                        "lockorder.toml:{lineno}: clamp_after entry `{s}` \
+                                         must be `a<b`"
+                                    )
+                                })
+                        })
+                        .collect::<Result<Vec<_>, _>>()?
+                }
+                other => {
+                    return Err(format!(
+                        "lockorder.toml:{lineno}: unknown [config] key `{other}`"
+                    ))
+                }
+            }
+            Ok(())
+        }
+    }
+}
+
+fn validate(locks: &[LockDecl]) -> Result<(), String> {
+    for (i, a) in locks.iter().enumerate() {
+        for b in &locks[i + 1..] {
+            if a.name == b.name {
+                return Err(format!("lockorder.toml: duplicate lock name `{}`", a.name));
+            }
+            if a.file == b.file && a.strukt == b.strukt && a.field == b.field {
+                return Err(format!(
+                    "lockorder.toml: duplicate declaration for {}::{}.{}",
+                    a.file, a.strukt, a.field
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Drop a trailing `# comment` (no string in this file contains `#`).
+fn strip_comment(line: &str) -> &str {
+    match line.find('#') {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+fn parse_string(value: &str, lineno: usize) -> Result<String, String> {
+    let v = value.trim();
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        Ok(v[1..v.len() - 1].to_string())
+    } else {
+        Err(format!(
+            "lockorder.toml:{lineno}: expected a quoted string, got `{value}`"
+        ))
+    }
+}
+
+fn parse_string_array(value: &str, lineno: usize) -> Result<Vec<String>, String> {
+    let v = value.trim();
+    if !(v.starts_with('[') && v.ends_with(']')) {
+        return Err(format!(
+            "lockorder.toml:{lineno}: expected an array, got `{value}`"
+        ));
+    }
+    let inner = &v[1..v.len() - 1];
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let p = part.trim();
+        if p.is_empty() {
+            continue; // trailing comma
+        }
+        out.push(parse_string(p, lineno)?);
+    }
+    Ok(out)
+}

@@ -1,0 +1,787 @@
+//! L1/L2: lock-hierarchy and condvar-discipline checks.
+//!
+//! A per-file, intra-procedural walker over `syn` ASTs. It tracks
+//! which declared locks are held at every expression, resolving
+//! receivers by *trailing field name* against the locks `lockorder.toml`
+//! declares for the file being checked. The deliberate consequences:
+//!
+//! * Cross-file nesting is invisible (a method on another struct may
+//!   acquire its own locks; the runtime `OrderedMutex` twin catches
+//!   those orderings in debug builds).
+//! * A one-level call-graph expansion covers the common intra-file
+//!   case: `self.helper()` is charged with the locks `helper` acquires
+//!   directly in the same file.
+//!
+//! Checks emitted here:
+//! * `lock-order`   — an acquisition whose rank is not strictly greater
+//!                    than every held rank (same-rank nesting included).
+//! * `unranked-lock`— a `Mutex`/`RwLock`/`OrderedMutex` struct field
+//!                    with no `lockorder.toml` entry.
+//! * `condvar-wait` — a `wait`/`wait_timeout` on a declared condvar
+//!                    outside a loop (`wait_while` loops internally and
+//!                    is exempt).
+//! * `condvar-notify` — a zero-arg `notify_*` on a declared condvar
+//!                    while its paired lock is not held (the ordered
+//!                    API takes the guard, so one-arg calls are
+//!                    structurally safe).
+//! * `condvar-unpaired` — a `Condvar` field no declared lock claims.
+//! * `stale-decl`   — a `lockorder.toml` entry whose struct/field no
+//!                    longer exists in the file it names.
+//!
+//! Escape hatch: a `// lint: lock-ok(<reason>)` comment on the same or
+//! the preceding line suppresses any violation at that line.
+
+use std::collections::{HashMap, HashSet};
+
+use syn::spanned::Spanned;
+use syn::visit::{self, Visit};
+use syn::{
+    Block, Expr, ImplItem, Item, ItemStruct, Member, Pat, Stmt, TraitItem, Type,
+};
+
+use crate::lockorder::{LockDecl, LockOrder};
+use crate::Violation;
+
+/// Lint one source file. `rel` is the path relative to `rust/` (the
+/// same spelling `lockorder.toml` uses, e.g. `src/memory/pinned.rs`).
+pub fn check_file(rel: &str, src: &str, order: &LockOrder, out: &mut Vec<Violation>) {
+    let suppressed = suppressed_lines(src);
+    let ast = match syn::parse_file(src) {
+        Ok(a) => a,
+        Err(e) => {
+            out.push(Violation {
+                rule: "parse",
+                file: rel.to_string(),
+                line: e.span().start().line,
+                msg: format!("failed to parse: {e}"),
+            });
+            return;
+        }
+    };
+
+    let decls: Vec<LockDecl> = order
+        .locks_in_file(rel)
+        .into_iter()
+        .cloned()
+        .collect();
+    let mut fields: HashMap<String, Vec<LockDecl>> = HashMap::new();
+    let mut conds: HashMap<String, Vec<LockDecl>> = HashMap::new();
+    for d in &decls {
+        fields.entry(d.field.clone()).or_default().push(d.clone());
+        for c in &d.condvars {
+            conds.entry(c.clone()).or_default().push(d.clone());
+        }
+    }
+
+    // Pass 1: what does each method in this file acquire directly?
+    // Feeds the one-level `self.helper()` expansion in pass 2.
+    let mut fn_ranks: HashMap<String, Vec<(u16, String)>> = HashMap::new();
+    collect_fn_ranks(&ast.items, &fields, &mut fn_ranks);
+
+    // Pass 2: walk every non-test fn body; check every struct.
+    let mut seen: HashSet<(String, String)> = HashSet::new();
+    let mut w = Walker {
+        rel,
+        suppressed: &suppressed,
+        fields: &fields,
+        conds: &conds,
+        fn_ranks: &fn_ranks,
+        held: Vec::new(),
+        bound_stack: Vec::new(),
+        next_id: 0,
+        loop_depth: 0,
+        out,
+    };
+    lint_items(&ast.items, &mut w, &decls, &mut seen);
+
+    for d in &decls {
+        if !seen.contains(&(d.strukt.clone(), d.field.clone())) {
+            out.push(Violation {
+                rule: "stale-decl",
+                file: rel.to_string(),
+                line: 0,
+                msg: format!(
+                    "lockorder.toml declares `{}` as {}::{} but no such lock field exists",
+                    d.name, d.strukt, d.field
+                ),
+            });
+        }
+    }
+}
+
+/// Lines carrying a `// lint: lock-ok(<reason>)` marker. A marker
+/// suppresses violations on its own line and the following line.
+pub(crate) fn suppressed_lines(src: &str) -> HashSet<usize> {
+    src.lines()
+        .enumerate()
+        .filter(|(_, l)| l.contains("lint: lock-ok("))
+        .map(|(i, _)| i + 1)
+        .collect()
+}
+
+pub(crate) fn is_cfg_test(attrs: &[syn::Attribute]) -> bool {
+    attrs.iter().any(|a| {
+        a.path().is_ident("cfg")
+            && match &a.meta {
+                syn::Meta::List(l) => l.tokens.to_string().contains("test"),
+                _ => false,
+            }
+    })
+}
+
+/// The last field name in a receiver chain: `self.inner.free` → `free`,
+/// `self.shards[i]` → `shards`, a bare local → its name (covers
+/// `let q = &self.q; q.lock()` aliasing within a fn).
+fn trailing_name(e: &Expr) -> Option<String> {
+    match e {
+        Expr::Field(f) => Some(match &f.member {
+            Member::Named(i) => i.to_string(),
+            Member::Unnamed(ix) => ix.index.to_string(),
+        }),
+        Expr::Paren(p) => trailing_name(&p.expr),
+        Expr::Group(g) => trailing_name(&g.expr),
+        Expr::Reference(r) => trailing_name(&r.expr),
+        Expr::Unary(u) => trailing_name(&u.expr),
+        Expr::Index(ix) => trailing_name(&ix.expr),
+        Expr::MethodCall(m) if m.method == "clone" => trailing_name(&m.receiver),
+        Expr::Path(p) => p.path.get_ident().map(|i| i.to_string()),
+        _ => None,
+    }
+}
+
+fn is_self_path(e: &Expr) -> bool {
+    matches!(e, Expr::Path(p) if p.path.is_ident("self"))
+}
+
+fn pat_ident(pat: &Pat) -> Option<String> {
+    match pat {
+        Pat::Ident(p) => Some(p.ident.to_string()),
+        Pat::Type(t) => pat_ident(&t.pat),
+        _ => None,
+    }
+}
+
+enum FieldClass {
+    Lock,
+    Condvar,
+}
+
+/// Does this type contain a lock or condvar? Recurses through wrappers
+/// (`Arc<Mutex<T>>`, `Vec<Mutex<T>>`, `[Mutex<T>; N]`, tuples, refs).
+fn classify_type(ty: &Type) -> Option<FieldClass> {
+    match ty {
+        Type::Path(tp) => {
+            let seg = tp.path.segments.last()?;
+            match seg.ident.to_string().as_str() {
+                "Mutex" | "RwLock" | "OrderedMutex" => Some(FieldClass::Lock),
+                "Condvar" | "OrderedCondvar" => Some(FieldClass::Condvar),
+                _ => {
+                    if let syn::PathArguments::AngleBracketed(ab) = &seg.arguments {
+                        for arg in &ab.args {
+                            if let syn::GenericArgument::Type(t) = arg {
+                                if let Some(c) = classify_type(t) {
+                                    return Some(c);
+                                }
+                            }
+                        }
+                    }
+                    None
+                }
+            }
+        }
+        Type::Reference(r) => classify_type(&r.elem),
+        Type::Paren(p) => classify_type(&p.elem),
+        Type::Group(g) => classify_type(&g.elem),
+        Type::Slice(s) => classify_type(&s.elem),
+        Type::Array(a) => classify_type(&a.elem),
+        Type::Tuple(t) => t.elems.iter().find_map(classify_type),
+        _ => None,
+    }
+}
+
+/// Pass 1 visitor: direct acquisitions of a fn body, closures excluded
+/// (a closure's body runs later, under whatever is held *then*).
+struct AcqCollector<'a> {
+    fields: &'a HashMap<String, Vec<LockDecl>>,
+    acqs: Vec<(u16, String)>,
+}
+
+impl<'ast, 'a> Visit<'ast> for AcqCollector<'a> {
+    fn visit_expr_closure(&mut self, _node: &'ast syn::ExprClosure) {}
+
+    fn visit_expr_method_call(&mut self, node: &'ast syn::ExprMethodCall) {
+        if node.args.is_empty()
+            && matches!(node.method.to_string().as_str(), "lock" | "read" | "write")
+        {
+            if let Some(name) = trailing_name(&node.receiver) {
+                if let Some(v) = self.fields.get(&name) {
+                    if v.len() == 1 {
+                        self.acqs.push((v[0].rank, v[0].name.clone()));
+                    }
+                }
+            }
+        }
+        visit::visit_expr_method_call(self, node);
+    }
+}
+
+fn collect_fn_ranks(
+    items: &[Item],
+    fields: &HashMap<String, Vec<LockDecl>>,
+    map: &mut HashMap<String, Vec<(u16, String)>>,
+) {
+    for item in items {
+        match item {
+            Item::Impl(i) if !is_cfg_test(&i.attrs) => {
+                for ii in &i.items {
+                    if let ImplItem::Fn(f) = ii {
+                        if is_cfg_test(&f.attrs) {
+                            continue;
+                        }
+                        let mut c = AcqCollector { fields, acqs: Vec::new() };
+                        c.visit_block(&f.block);
+                        if !c.acqs.is_empty() {
+                            map.entry(f.sig.ident.to_string()).or_default().extend(c.acqs);
+                        }
+                    }
+                }
+            }
+            Item::Mod(m) if !is_cfg_test(&m.attrs) && m.ident != "tests" => {
+                if let Some((_, sub)) = &m.content {
+                    collect_fn_ranks(sub, fields, map);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+fn lint_items(
+    items: &[Item],
+    w: &mut Walker<'_>,
+    decls: &[LockDecl],
+    seen: &mut HashSet<(String, String)>,
+) {
+    for item in items {
+        match item {
+            Item::Struct(s) => {
+                if !is_cfg_test(&s.attrs) {
+                    check_struct(s, decls, w, seen);
+                }
+            }
+            Item::Impl(i) => {
+                if is_cfg_test(&i.attrs) {
+                    continue;
+                }
+                for ii in &i.items {
+                    if let ImplItem::Fn(f) = ii {
+                        if !is_cfg_test(&f.attrs) {
+                            w.run_fn(&f.block);
+                        }
+                    }
+                }
+            }
+            Item::Fn(f) => {
+                if !is_cfg_test(&f.attrs) {
+                    w.run_fn(&f.block);
+                }
+            }
+            Item::Trait(t) => {
+                if is_cfg_test(&t.attrs) {
+                    continue;
+                }
+                for ti in &t.items {
+                    if let TraitItem::Fn(f) = ti {
+                        if let Some(b) = &f.default {
+                            w.run_fn(b);
+                        }
+                    }
+                }
+            }
+            Item::Mod(m) => {
+                if !is_cfg_test(&m.attrs) && m.ident != "tests" {
+                    if let Some((_, sub)) = &m.content {
+                        lint_items(sub, w, decls, seen);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+fn check_struct(
+    s: &ItemStruct,
+    decls: &[LockDecl],
+    w: &mut Walker<'_>,
+    seen: &mut HashSet<(String, String)>,
+) {
+    let sname = s.ident.to_string();
+    for (idx, f) in s.fields.iter().enumerate() {
+        let fname = f
+            .ident
+            .as_ref()
+            .map(|i| i.to_string())
+            .unwrap_or_else(|| idx.to_string());
+        let line = f.span().start().line;
+        match classify_type(&f.ty) {
+            Some(FieldClass::Lock) => {
+                seen.insert((sname.clone(), fname.clone()));
+                if !decls.iter().any(|d| d.strukt == sname && d.field == fname) {
+                    w.push_violation(
+                        "unranked-lock",
+                        line,
+                        format!(
+                            "`{sname}::{fname}` is a lock with no rank in lockorder.toml \
+                             (declare it, or mark the line `// lint: lock-ok(<reason>)`)"
+                        ),
+                    );
+                }
+            }
+            Some(FieldClass::Condvar) => {
+                if !decls
+                    .iter()
+                    .any(|d| d.strukt == sname && d.condvars.iter().any(|c| c == &fname))
+                {
+                    w.push_violation(
+                        "condvar-unpaired",
+                        line,
+                        format!(
+                            "`{sname}::{fname}` is a Condvar no declared lock pairs with \
+                             (add it to a lockorder.toml `condvars` list)"
+                        ),
+                    );
+                }
+            }
+            None => {}
+        }
+    }
+}
+
+/// One held lock: `id` keys its drop scope, `var` its binding (if any).
+struct Held {
+    id: usize,
+    rank: u16,
+    name: String,
+    var: Option<String>,
+}
+
+struct Walker<'a> {
+    rel: &'a str,
+    suppressed: &'a HashSet<usize>,
+    fields: &'a HashMap<String, Vec<LockDecl>>,
+    conds: &'a HashMap<String, Vec<LockDecl>>,
+    fn_ranks: &'a HashMap<String, Vec<(u16, String)>>,
+    held: Vec<Held>,
+    /// One frame per lexical block: acquisition ids bound to `let`
+    /// guards in that block, released when the block ends.
+    bound_stack: Vec<Vec<usize>>,
+    next_id: usize,
+    loop_depth: usize,
+    out: &'a mut Vec<Violation>,
+}
+
+impl<'a> Walker<'a> {
+    fn run_fn(&mut self, block: &Block) {
+        self.held.clear();
+        self.bound_stack.clear();
+        self.loop_depth = 0;
+        self.walk_block(block);
+    }
+
+    fn push_violation(&mut self, rule: &'static str, line: usize, msg: String) {
+        if self.suppressed.contains(&line) || (line > 1 && self.suppressed.contains(&(line - 1))) {
+            return;
+        }
+        self.out.push(Violation {
+            rule,
+            file: self.rel.to_string(),
+            line,
+            msg,
+        });
+    }
+
+    fn remove_ids(&mut self, ids: &[usize]) {
+        if !ids.is_empty() {
+            self.held.retain(|h| !ids.contains(&h.id));
+        }
+    }
+
+    fn resolve_lock(&self, recv: &Expr) -> Option<(u16, String)> {
+        let name = trailing_name(recv)?;
+        let v = self.fields.get(&name)?;
+        if v.len() == 1 {
+            Some((v[0].rank, v[0].name.clone()))
+        } else {
+            None
+        }
+    }
+
+    /// Paired lock names for a condvar receiver, if it resolves.
+    fn resolve_cond(&self, recv: &Expr) -> Option<Vec<String>> {
+        let name = trailing_name(recv)?;
+        let v = self.conds.get(&name)?;
+        Some(v.iter().map(|d| d.name.clone()).collect())
+    }
+
+    fn check_order(&mut self, rank: u16, name: &str, line: usize, via: Option<&str>) {
+        let offenders: Vec<(u16, String)> = self
+            .held
+            .iter()
+            .filter(|h| h.rank >= rank)
+            .map(|h| (h.rank, h.name.clone()))
+            .collect();
+        for (hrank, hname) in offenders {
+            let via_note = via.map(|m| format!(" via `self.{m}()`")).unwrap_or_default();
+            self.push_violation(
+                "lock-order",
+                line,
+                format!(
+                    "acquiring `{name}` (rank {rank}){via_note} while `{hname}` \
+                     (rank {hrank}) is held — ranks must strictly increase inward"
+                ),
+            );
+        }
+    }
+
+    fn walk_block(&mut self, block: &Block) {
+        self.bound_stack.push(Vec::new());
+        for stmt in &block.stmts {
+            self.walk_stmt(stmt);
+        }
+        let frame = self.bound_stack.pop().unwrap_or_default();
+        self.remove_ids(&frame);
+    }
+
+    fn walk_stmt(&mut self, stmt: &Stmt) {
+        match stmt {
+            Stmt::Local(local) => {
+                if let Some(init) = &local.init {
+                    let mut temps = Vec::new();
+                    let ret = self.walk_expr(&init.expr, &mut temps);
+                    if let Some((_, div)) = &init.diverge {
+                        let mut t = Vec::new();
+                        self.walk_expr(div, &mut t);
+                        self.remove_ids(&t);
+                    }
+                    if let (Some(name), Some(id)) = (pat_ident(&local.pat), ret) {
+                        self.promote(id, name, &mut temps);
+                    }
+                    self.remove_ids(&temps);
+                }
+            }
+            Stmt::Expr(e, _) => {
+                let mut temps = Vec::new();
+                self.walk_expr(e, &mut temps);
+                self.remove_ids(&temps);
+            }
+            // Macro bodies and nested items are opaque to held-tracking.
+            Stmt::Macro(_) | Stmt::Item(_) => {}
+        }
+    }
+
+    /// Bind acquisition `id` to `var` and move it from statement-temp
+    /// scope to the enclosing block's scope.
+    fn promote(&mut self, id: usize, var: String, temps: &mut Vec<usize>) {
+        if let Some(h) = self.held.iter_mut().find(|h| h.id == id) {
+            h.var = Some(var);
+        }
+        temps.retain(|&t| t != id);
+        if let Some(frame) = self.bound_stack.last_mut() {
+            frame.push(id);
+        }
+    }
+
+    /// Walk an expression; returns the held-id the expression evaluates
+    /// to when it is (or forwards) a fresh guard.
+    fn walk_expr(&mut self, e: &Expr, temps: &mut Vec<usize>) -> Option<usize> {
+        match e {
+            Expr::MethodCall(m) => self.walk_method_call(m, temps),
+            Expr::Call(c) => {
+                // `drop(guard)` releases a named guard early.
+                if let Expr::Path(p) = &*c.func {
+                    if p.path.is_ident("drop") && c.args.len() == 1 {
+                        if let Expr::Path(arg) = &c.args[0] {
+                            if let Some(ident) = arg.path.get_ident() {
+                                let name = ident.to_string();
+                                self.held.retain(|h| h.var.as_deref() != Some(name.as_str()));
+                                return None;
+                            }
+                        }
+                    }
+                }
+                self.walk_expr(&c.func, temps);
+                for a in &c.args {
+                    self.walk_expr(a, temps);
+                }
+                None
+            }
+            Expr::Assign(a) => {
+                let ret = self.walk_expr(&a.right, temps);
+                if let Expr::Path(p) = &*a.left {
+                    if let Some(ident) = p.path.get_ident() {
+                        let name = ident.to_string();
+                        if let Some(id) = ret {
+                            // Re-binding: the old guard (if any) drops,
+                            // the fresh one takes the name.
+                            self.held
+                                .retain(|h| h.id == id || h.var.as_deref() != Some(name.as_str()));
+                            self.promote(id, name, temps);
+                        }
+                        return None;
+                    }
+                }
+                self.walk_expr(&a.left, temps);
+                None
+            }
+            Expr::If(i) => {
+                let mut cond_temps = Vec::new();
+                let is_let = matches!(&*i.cond, Expr::Let(_));
+                self.walk_expr(&i.cond, &mut cond_temps);
+                if !is_let {
+                    // Plain-if condition temporaries drop before the
+                    // branch runs; if-let scrutinee temporaries live
+                    // through both branches (Rust's extended scopes).
+                    self.remove_ids(&cond_temps);
+                    cond_temps.clear();
+                }
+                self.walk_block(&i.then_branch);
+                if let Some((_, els)) = &i.else_branch {
+                    let mut t = Vec::new();
+                    self.walk_expr(els, &mut t);
+                    self.remove_ids(&t);
+                }
+                self.remove_ids(&cond_temps);
+                None
+            }
+            Expr::Match(m) => {
+                // Scrutinee temporaries live through every arm.
+                let mut scrutinee = Vec::new();
+                self.walk_expr(&m.expr, &mut scrutinee);
+                for arm in &m.arms {
+                    if let Some((_, guard)) = &arm.guard {
+                        let mut t = Vec::new();
+                        self.walk_expr(guard, &mut t);
+                        self.remove_ids(&t);
+                    }
+                    let mut t = Vec::new();
+                    self.walk_expr(&arm.body, &mut t);
+                    self.remove_ids(&t);
+                }
+                self.remove_ids(&scrutinee);
+                None
+            }
+            Expr::While(w) => {
+                let mut t = Vec::new();
+                self.walk_expr(&w.cond, &mut t);
+                self.remove_ids(&t);
+                self.loop_depth += 1;
+                self.walk_block(&w.body);
+                self.loop_depth -= 1;
+                None
+            }
+            Expr::ForLoop(f) => {
+                // `for x in self.q.lock().iter()` holds the guard for
+                // the whole loop body.
+                let mut t = Vec::new();
+                self.walk_expr(&f.expr, &mut t);
+                self.loop_depth += 1;
+                self.walk_block(&f.body);
+                self.loop_depth -= 1;
+                self.remove_ids(&t);
+                None
+            }
+            Expr::Loop(l) => {
+                self.loop_depth += 1;
+                self.walk_block(&l.body);
+                self.loop_depth -= 1;
+                None
+            }
+            Expr::Closure(c) => {
+                // A closure body runs under unknown future context:
+                // check it standalone, with nothing held.
+                let saved_held = std::mem::take(&mut self.held);
+                let saved_depth = std::mem::replace(&mut self.loop_depth, 0);
+                let mut t = Vec::new();
+                self.walk_expr(&c.body, &mut t);
+                self.remove_ids(&t);
+                self.held = saved_held;
+                self.loop_depth = saved_depth;
+                None
+            }
+            Expr::Block(b) => {
+                self.walk_block(&b.block);
+                None
+            }
+            Expr::Unsafe(u) => {
+                self.walk_block(&u.block);
+                None
+            }
+            Expr::Paren(p) => self.walk_expr(&p.expr, temps),
+            Expr::Group(g) => self.walk_expr(&g.expr, temps),
+            Expr::Reference(r) => self.walk_expr(&r.expr, temps),
+            Expr::Try(t) => self.walk_expr(&t.expr, temps),
+            Expr::Unary(u) => self.walk_expr(&u.expr, temps),
+            Expr::Let(l) => self.walk_expr(&l.expr, temps),
+            Expr::Path(p) => {
+                // A bare reference to a named guard forwards its id
+                // (feeds `Assign`/`let` re-binding).
+                if let Some(ident) = p.path.get_ident() {
+                    let name = ident.to_string();
+                    return self
+                        .held
+                        .iter()
+                        .find(|h| h.var.as_deref() == Some(name.as_str()))
+                        .map(|h| h.id);
+                }
+                None
+            }
+            Expr::Binary(b) => {
+                self.walk_expr(&b.left, temps);
+                self.walk_expr(&b.right, temps);
+                None
+            }
+            Expr::Field(f) => {
+                self.walk_expr(&f.base, temps);
+                None
+            }
+            Expr::Index(ix) => {
+                self.walk_expr(&ix.expr, temps);
+                self.walk_expr(&ix.index, temps);
+                None
+            }
+            Expr::Cast(c) => {
+                self.walk_expr(&c.expr, temps);
+                None
+            }
+            Expr::Tuple(t) => {
+                for el in &t.elems {
+                    self.walk_expr(el, temps);
+                }
+                None
+            }
+            Expr::Array(a) => {
+                for el in &a.elems {
+                    self.walk_expr(el, temps);
+                }
+                None
+            }
+            Expr::Struct(s) => {
+                for f in &s.fields {
+                    self.walk_expr(&f.expr, temps);
+                }
+                if let Some(rest) = &s.rest {
+                    self.walk_expr(rest, temps);
+                }
+                None
+            }
+            Expr::Return(r) => {
+                if let Some(inner) = &r.expr {
+                    self.walk_expr(inner, temps);
+                }
+                None
+            }
+            Expr::Break(b) => {
+                if let Some(inner) = &b.expr {
+                    self.walk_expr(inner, temps);
+                }
+                None
+            }
+            Expr::Range(r) => {
+                if let Some(s) = &r.start {
+                    self.walk_expr(s, temps);
+                }
+                if let Some(e) = &r.end {
+                    self.walk_expr(e, temps);
+                }
+                None
+            }
+            Expr::Repeat(r) => {
+                self.walk_expr(&r.expr, temps);
+                self.walk_expr(&r.len, temps);
+                None
+            }
+            // Macro bodies are opaque; literals and the rest hold
+            // nothing.
+            _ => None,
+        }
+    }
+
+    fn walk_method_call(
+        &mut self,
+        m: &syn::ExprMethodCall,
+        temps: &mut Vec<usize>,
+    ) -> Option<usize> {
+        let recv_id = self.walk_expr(&m.receiver, temps);
+        for a in &m.args {
+            self.walk_expr(a, temps);
+        }
+        let method = m.method.to_string();
+        let line = m.method.span().start().line;
+        match method.as_str() {
+            "lock" | "read" | "write" if m.args.is_empty() => {
+                if let Some((rank, name)) = self.resolve_lock(&m.receiver) {
+                    self.check_order(rank, &name, line, None);
+                    let id = self.next_id;
+                    self.next_id += 1;
+                    self.held.push(Held {
+                        id,
+                        rank,
+                        name,
+                        var: None,
+                    });
+                    temps.push(id);
+                    return Some(id);
+                }
+                None
+            }
+            // `x.lock().unwrap()` / `.expect(..)`: still the guard.
+            "unwrap" | "expect" => recv_id,
+            "wait" | "wait_timeout" => {
+                if self.resolve_cond(&m.receiver).is_some() && self.loop_depth == 0 {
+                    self.push_violation(
+                        "condvar-wait",
+                        line,
+                        format!(
+                            "`{method}` on a declared condvar outside a loop — spurious \
+                             wakeups require re-checking the predicate"
+                        ),
+                    );
+                }
+                None
+            }
+            "notify_one" | "notify_all" if m.args.is_empty() => {
+                if let Some(paired) = self.resolve_cond(&m.receiver) {
+                    let held_paired = paired
+                        .iter()
+                        .any(|p| self.held.iter().any(|h| &h.name == p));
+                    if !held_paired {
+                        self.push_violation(
+                            "condvar-notify",
+                            line,
+                            format!(
+                                "`{method}` without holding the paired lock ({}) — a waiter \
+                                 between its re-check and its park misses this signal",
+                                paired.join(", ")
+                            ),
+                        );
+                    }
+                }
+                None
+            }
+            _ => {
+                // One-level expansion: `self.helper()` is charged with
+                // helper's own direct acquisitions.
+                if is_self_path(&m.receiver) {
+                    if let Some(acqs) = self.fn_ranks.get(&method) {
+                        let acqs = acqs.clone();
+                        for (rank, name) in &acqs {
+                            self.check_order(*rank, name, line, Some(&method));
+                        }
+                    }
+                }
+                None
+            }
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! L4: metric-name registry.
+//!
+//! Every counter/gauge/histogram name used in `src/` (a string literal
+//! as the single argument of `.counter(..)` / `.gauge(..)` /
+//! `.histogram(..)`) must appear exactly once in the `METRIC_NAMES`
+//! table in `src/metrics/registry.rs`, and every registry entry must
+//! appear somewhere in `src/` as a string literal — names that flow
+//! through variables (eviction tuple tables, exchange-mode match arms)
+//! still satisfy that weaker check. Entries containing `*` are
+//! wildcards for `format!`-built names (per-destination gauges) and
+//! skip the usage check.
+//!
+//! The registry is the single place a dashboard or test can read the
+//! full metric surface from; duplicate or dangling entries rot it.
+
+use std::collections::HashSet;
+
+use syn::spanned::Spanned;
+use syn::visit::{self, Visit};
+use syn::{Expr, Item, Lit};
+
+use crate::locks::is_cfg_test;
+use crate::Violation;
+
+#[derive(Default)]
+pub struct MetricsCheck {
+    /// (name, line) per registry entry, in table order.
+    registry: Vec<(String, usize)>,
+    registry_found: bool,
+    /// (file, name, line) per literal `.counter("x")`-style use.
+    uses: Vec<(String, String, usize)>,
+    /// Every string literal in non-test src (registry excluded).
+    literals: HashSet<String>,
+}
+
+impl MetricsCheck {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse `src/metrics/registry.rs` for the `METRIC_NAMES` table.
+    pub fn load_registry(&mut self, rel: &str, src: &str, out: &mut Vec<Violation>) {
+        let ast = match syn::parse_file(src) {
+            Ok(a) => a,
+            Err(_) => return, // locks.rs reports the parse failure
+        };
+        for item in &ast.items {
+            if let Item::Const(c) = item {
+                if c.ident == "METRIC_NAMES" {
+                    self.registry_found = true;
+                    collect_str_elems(&c.expr, &mut self.registry);
+                }
+            }
+        }
+        if !self.registry_found {
+            out.push(Violation {
+                rule: "metrics-registry",
+                file: rel.to_string(),
+                line: 1,
+                msg: "no `METRIC_NAMES` const found".to_string(),
+            });
+            // Treat as an (empty) registry so uses still get reported.
+            self.registry_found = true;
+        }
+    }
+
+    /// Collect uses and literals from one non-registry source file.
+    pub fn collect_file(&mut self, rel: &str, src: &str) {
+        let Ok(ast) = syn::parse_file(src) else { return };
+        let mut v = UseCollector {
+            file: rel,
+            check: self,
+        };
+        for item in &ast.items {
+            v.visit_item(item);
+        }
+    }
+
+    /// Run the cross-file checks. No-op unless a registry was loaded.
+    pub fn finish(self, out: &mut Vec<Violation>) {
+        if !self.registry_found {
+            return;
+        }
+        let mut seen: HashSet<&str> = HashSet::new();
+        for (name, line) in &self.registry {
+            if !seen.insert(name.as_str()) {
+                out.push(Violation {
+                    rule: "metrics-registry",
+                    file: "src/metrics/registry.rs".to_string(),
+                    line: *line,
+                    msg: format!("duplicate METRIC_NAMES entry `{name}`"),
+                });
+            }
+            if !name.contains('*') && !self.literals.contains(name) {
+                out.push(Violation {
+                    rule: "metrics-registry",
+                    file: "src/metrics/registry.rs".to_string(),
+                    line: *line,
+                    msg: format!(
+                        "METRIC_NAMES entry `{name}` never appears as a string literal in src/"
+                    ),
+                });
+            }
+        }
+        for (file, name, line) in &self.uses {
+            if !self.registry.iter().any(|(n, _)| n == name) {
+                out.push(Violation {
+                    rule: "metrics-registry",
+                    file: file.clone(),
+                    line: *line,
+                    msg: format!(
+                        "metric `{name}` is not in METRIC_NAMES (src/metrics/registry.rs)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Pull string literals out of `&["a", "b", ...]` (references, arrays,
+/// and nested groups peeled).
+fn collect_str_elems(e: &Expr, out: &mut Vec<(String, usize)>) {
+    match e {
+        Expr::Reference(r) => collect_str_elems(&r.expr, out),
+        Expr::Paren(p) => collect_str_elems(&p.expr, out),
+        Expr::Group(g) => collect_str_elems(&g.expr, out),
+        Expr::Array(a) => {
+            for el in &a.elems {
+                collect_str_elems(el, out);
+            }
+        }
+        Expr::Lit(l) => {
+            if let Lit::Str(s) = &l.lit {
+                out.push((s.value(), s.span().start().line));
+            }
+        }
+        _ => {}
+    }
+}
+
+struct UseCollector<'a> {
+    file: &'a str,
+    check: &'a mut MetricsCheck,
+}
+
+impl<'ast, 'a> Visit<'ast> for UseCollector<'a> {
+    fn visit_item_mod(&mut self, m: &'ast syn::ItemMod) {
+        if is_cfg_test(&m.attrs) || m.ident == "tests" {
+            return;
+        }
+        visit::visit_item_mod(self, m);
+    }
+
+    fn visit_item_fn(&mut self, f: &'ast syn::ItemFn) {
+        if is_cfg_test(&f.attrs) {
+            return;
+        }
+        visit::visit_item_fn(self, f);
+    }
+
+    fn visit_item_impl(&mut self, i: &'ast syn::ItemImpl) {
+        if is_cfg_test(&i.attrs) {
+            return;
+        }
+        visit::visit_item_impl(self, i);
+    }
+
+    fn visit_impl_item_fn(&mut self, f: &'ast syn::ImplItemFn) {
+        if is_cfg_test(&f.attrs) {
+            return;
+        }
+        visit::visit_impl_item_fn(self, f);
+    }
+
+    fn visit_lit_str(&mut self, l: &'ast syn::LitStr) {
+        self.check.literals.insert(l.value());
+    }
+
+    fn visit_expr_method_call(&mut self, m: &'ast syn::ExprMethodCall) {
+        if m.args.len() == 1
+            && matches!(
+                m.method.to_string().as_str(),
+                "counter" | "gauge" | "histogram"
+            )
+        {
+            if let Expr::Lit(el) = &m.args[0] {
+                if let Lit::Str(s) = &el.lit {
+                    self.check.uses.push((
+                        self.file.to_string(),
+                        s.value(),
+                        s.span().start().line,
+                    ));
+                }
+            }
+        }
+        visit::visit_expr_method_call(self, m);
+    }
+}

@@ -1,0 +1,18 @@
+use std::sync::Mutex;
+
+pub struct S {
+    pub outer: Mutex<u32>,
+    pub inner: Mutex<u32>,
+}
+
+pub struct Naked {
+    pub stray: Mutex<u8>,
+}
+
+impl S {
+    pub fn inverted(&self) -> u32 {
+        let i = self.inner.lock().unwrap();
+        let o = self.outer.lock().unwrap();
+        *i + *o
+    }
+}

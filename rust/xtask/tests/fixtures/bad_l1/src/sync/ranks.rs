@@ -1,0 +1,1 @@
+pub const A_OUTER: u16 = 11;

@@ -1,0 +1,26 @@
+use std::sync::{Condvar, Mutex};
+
+pub struct Q {
+    pub q: Mutex<Vec<u32>>,
+    pub ready: Condvar,
+}
+
+pub struct W {
+    pub w: Mutex<u8>,
+    pub orphan: Condvar,
+}
+
+impl Q {
+    pub fn bad_wait(&self) -> usize {
+        let g = self.q.lock().unwrap();
+        let g = self.ready.wait(g).unwrap();
+        g.len()
+    }
+
+    pub fn bad_notify(&self, v: u32) {
+        let mut g = self.q.lock().unwrap();
+        g.push(v);
+        drop(g);
+        self.ready.notify_one();
+    }
+}

@@ -1,0 +1,35 @@
+pub struct WorkerConfig {
+    /// Documented and validated.
+    pub alpha: usize,
+    pub beta: usize,
+    /// Clamp target for `alpha`'s default.
+    pub gamma: usize,
+}
+
+pub struct Doc;
+
+impl Doc {
+    pub fn get(&self, _k: &str) -> Option<usize> {
+        None
+    }
+}
+
+impl WorkerConfig {
+    pub fn apply(&mut self, doc: &Doc) {
+        if doc.get("alpha").is_none() {
+            self.alpha = self.alpha.min(self.gamma);
+        }
+        if let Some(v) = doc.get("gamma") {
+            self.gamma = v;
+        }
+        if let Some(v) = doc.get("alpha") {
+            self.alpha = v;
+        }
+        self.validate();
+    }
+
+    pub fn validate(&self) {
+        assert!(self.alpha > 0);
+        assert!(self.gamma > 0);
+    }
+}

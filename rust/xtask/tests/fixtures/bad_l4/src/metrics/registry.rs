@@ -1,0 +1,6 @@
+pub const METRIC_NAMES: &[&str] = &[
+    "a.used",
+    "a.unused_entry",
+    "a.dup",
+    "a.dup",
+];

@@ -1,0 +1,88 @@
+//! Lint self-tests: each fixture tree trips exactly the rule family it
+//! was built for, and the real engine tree stays clean.
+
+use std::path::{Path, PathBuf};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name)
+}
+
+fn rules_of(root: &Path) -> Vec<String> {
+    xtask::run(root)
+        .expect("lint infrastructure works")
+        .iter()
+        .map(|v| v.rule.to_string())
+        .collect()
+}
+
+fn assert_has(rules: &[String], rule: &str) {
+    assert!(
+        rules.iter().any(|r| r == rule),
+        "expected a `{rule}` violation, got: {rules:?}"
+    );
+}
+
+#[test]
+fn l1_inversion_unranked_stale_drift() {
+    let rules = rules_of(&fixture("bad_l1"));
+    assert_has(&rules, "lock-order");
+    assert_has(&rules, "unranked-lock");
+    assert_has(&rules, "stale-decl");
+    assert_has(&rules, "ranks-drift");
+}
+
+#[test]
+fn l2_wait_notify_unpaired() {
+    let rules = rules_of(&fixture("bad_l2"));
+    assert_has(&rules, "condvar-wait");
+    assert_has(&rules, "condvar-notify");
+    assert_has(&rules, "condvar-unpaired");
+}
+
+#[test]
+fn l3_config_knobs() {
+    let rules = rules_of(&fixture("bad_l3"));
+    assert_has(&rules, "config-doc");
+    assert_has(&rules, "config-setter");
+    assert_has(&rules, "config-validate");
+    assert_has(&rules, "config-clamp-order");
+}
+
+#[test]
+fn l4_metric_registry() {
+    let violations = xtask::run(&fixture("bad_l4")).expect("lint infrastructure works");
+    let msgs: Vec<String> = violations.iter().map(|v| v.to_string()).collect();
+    assert!(
+        msgs.iter().any(|m| m.contains("duplicate") && m.contains("a.dup")),
+        "missing duplicate-entry violation: {msgs:?}"
+    );
+    assert!(
+        msgs.iter().any(|m| m.contains("a.unused_entry")),
+        "missing unused-entry violation: {msgs:?}"
+    );
+    assert!(
+        msgs.iter().any(|m| m.contains("a.unregistered")),
+        "missing unregistered-use violation: {msgs:?}"
+    );
+}
+
+/// The real tree must pass its own lint: every violation either fixed
+/// or carrying an explicit `// lint: lock-ok(<reason>)` marker.
+#[test]
+fn engine_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask sits inside the engine crate");
+    let violations = xtask::run(root).expect("lint infrastructure works");
+    assert!(
+        violations.is_empty(),
+        "engine tree has lint violations:\n{}",
+        violations
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}

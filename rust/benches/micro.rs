@@ -380,6 +380,14 @@ fn spill_store_concurrency() {
          concurrent demotions/promotions no longer serialize on one file cursor)",
         scaling.0, scaling.1
     );
+    // every spill op above ran through fault::check gates; with no plan
+    // installed the disabled fast path must stay invisible — zero
+    // firings, zero extra I/O in the timed loops
+    assert_eq!(
+        theseus::fault::injected_total(),
+        0,
+        "disabled fault injector must not fire in benches"
+    );
 }
 
 // ------------------------------------------------------------------ 6
@@ -673,6 +681,15 @@ fn shuffle_coalescing() {
         std::fs::write(&path, json).unwrap();
         println!("wrote {path}");
     }
+
+    // the shuffle's send path crosses the net_send fault gate on every
+    // frame; with no plan installed the disabled-injector fast path
+    // must add nothing — zero firings across every run above
+    assert_eq!(
+        theseus::fault::injected_total(),
+        0,
+        "disabled fault injector must not fire in benches"
+    );
 }
 
 // ------------------------------------------------------------------ 8

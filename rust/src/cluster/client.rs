@@ -154,6 +154,13 @@ impl Cluster {
         weight: i64,
     ) -> Result<QueryResult> {
         let qid = self.query_seq.fetch_add(1, Ordering::Relaxed);
+        // Every exit from this function — success, worker error, worker
+        // panic, or a panic in the gather below — runs the scope's Drop,
+        // which clears per-qid state (scheduler stats, exchange channels,
+        // governor reservations) on every worker. `clear_query` is
+        // idempotent, so the double-clear on the success path (workers
+        // already clear their own state) costs nothing.
+        let _scope = QueryScope { workers: &self.workers, qid };
         let start = Instant::now();
         let plan = Arc::new(plan.clone());
         type Joined = std::thread::Result<Result<(RecordBatch, WorkerStats)>>;
@@ -219,6 +226,24 @@ impl Cluster {
 impl Drop for Cluster {
     fn drop(&mut self) {
         self.stop();
+    }
+}
+
+/// RAII guard: clears per-query state on all workers when a query
+/// leaves [`Cluster::run_plan_weighted`] by *any* path. Without it, an
+/// early-error return (or a panic unwinding through the gateway) would
+/// strand per-qid scheduler entries and exchange channels until the
+/// cluster shut down.
+struct QueryScope<'a> {
+    workers: &'a [Arc<Worker>],
+    qid: u64,
+}
+
+impl Drop for QueryScope<'_> {
+    fn drop(&mut self) {
+        for w in self.workers {
+            w.clear_query(self.qid);
+        }
     }
 }
 
@@ -321,7 +346,7 @@ impl Gateway {
         let Some(cache) = &self.cache else {
             let plan = self.planner.plan(q)?;
             let _grant = self.admit(&plan, opts, timeout)?;
-            return self.cluster.run_plan_weighted(&plan, timeout, weight);
+            return self.run_with_retry(|| self.cluster.run_plan_weighted(&plan, timeout, weight));
         };
         let start = Instant::now();
         let canon = canonicalize(q);
@@ -337,9 +362,47 @@ impl Gateway {
             });
         }
         let _grant = self.admit(&plan, opts, timeout)?;
-        let res = self.execute_with_fragments(cache, &canon, &plan, timeout, weight)?;
+        let res =
+            self.run_with_retry(|| self.execute_with_fragments(cache, &canon, &plan, timeout, weight))?;
         cache.insert_result(key, &res.batch, versions);
         Ok(res)
+    }
+
+    /// Query-level recovery: re-run `run` after a *transient* failure
+    /// (injected fault, dropped connection, timed-out read) up to
+    /// `query_retry_limit` extra times. Each re-run mints a fresh qid —
+    /// the failed attempt's per-query state was already torn down by
+    /// its [`QueryScope`] — so attempts never see each other's debris.
+    /// The admission grant is held by the caller across all attempts:
+    /// a retrying query does not re-queue behind newly arrived work.
+    /// Permanent errors (worker panics, plan bugs) pass through on the
+    /// first attempt; exhausted retries return the last transient error
+    /// as-is (still `is_retryable`, so the client may resubmit).
+    fn run_with_retry<F>(&self, mut run: F) -> Result<QueryResult>
+    where
+        F: FnMut() -> Result<QueryResult>,
+    {
+        let limit = self.cluster.config.query_retry_limit;
+        let mut reruns = 0usize;
+        loop {
+            match run() {
+                Ok(r) => return Ok(r),
+                Err(e) if e.is_transient() && reruns < limit => {
+                    reruns += 1;
+                    self.cluster.metrics.counter("gateway.query_retry_total").inc();
+                    log::warn!("transient query failure ({e}); re-running ({reruns}/{limit})");
+                }
+                Err(e) => {
+                    if e.is_transient() {
+                        self.cluster.metrics.counter("retry.exhausted_total").inc();
+                        log::error!(
+                            "query failed after {reruns} re-runs (limit {limit}): {e}"
+                        );
+                    }
+                    return Err(e);
+                }
+            }
+        }
     }
 
     /// Serve cached fragments into the plan (filling missing ones) and
@@ -395,7 +458,7 @@ impl Gateway {
         let opts = SessionOpts::default();
         let Some(cache) = &self.cache else {
             let _grant = self.admit(plan, &opts, self.timeout)?;
-            return self.cluster.run_plan(plan, self.timeout);
+            return self.run_with_retry(|| self.cluster.run_plan(plan, self.timeout));
         };
         let start = Instant::now();
         let key = CanonicalKey::of_plan(plan);
@@ -408,7 +471,7 @@ impl Gateway {
             });
         }
         let _grant = self.admit(plan, &opts, self.timeout)?;
-        let res = self.cluster.run_plan(plan, self.timeout)?;
+        let res = self.run_with_retry(|| self.cluster.run_plan(plan, self.timeout))?;
         cache.insert_result(key, &res.batch, versions);
         Ok(res)
     }

@@ -78,19 +78,31 @@ impl Worker {
             demotions: Arc::new(std::sync::atomic::AtomicU64::new(0)),
         };
         let governor = MemoryGovernor::new(arena.clone());
+        let metrics = Arc::new(crate::metrics::Metrics::default());
 
-        // ---- datasource
+        // ---- datasource. The retry policy must be set before the
+        // concrete value is Arc-shared (`set_retry_policy` needs `&mut`).
+        let retry = crate::fault::RetryPolicy {
+            limit: config.storage_retry_limit,
+            base_ms: config.storage_backoff_base_ms,
+        };
         let (datasource, custom): (Arc<dyn Datasource>, Option<Arc<CustomObjectStoreDatasource>>) =
             match config.datasource {
                 DatasourceKind::Generic => {
-                    (Arc::new(GenericDatasource::new(store.clone())), None)
+                    let mut g = GenericDatasource::new(store.clone());
+                    g.set_retry_policy(retry);
+                    g.install_metrics(metrics.clone());
+                    (Arc::new(g), None)
                 }
                 DatasourceKind::Custom => {
-                    let c = Arc::new(CustomObjectStoreDatasource::new(
+                    let mut c = CustomObjectStoreDatasource::new(
                         store.clone(),
                         config.coalesce_gap,
                         pinned.clone(),
-                    ));
+                    );
+                    c.set_retry_policy(retry);
+                    c.install_metrics(metrics.clone());
+                    let c = Arc::new(c);
                     (c.clone(), Some(c))
                 }
             };
@@ -100,7 +112,6 @@ impl Worker {
         // slabs for vectored writes, the endpoint's readers land
         // payloads in the pool, and the router decompresses compressed
         // payloads back into it.
-        let metrics = Arc::new(crate::metrics::Metrics::default());
         let outbox = Arc::new(Outbox::new(128));
         // credit-based backpressure (§3.3): senders start with the
         // configured per-destination window; receivers return credits
@@ -296,8 +307,10 @@ impl Worker {
     /// Drop one finished query's counter scopes and any holders its
     /// DAG left registered. Other in-flight queries are untouched —
     /// this replaces the old cluster-wide `reset()` that cleared every
-    /// query's holders between runs.
-    fn clear_query(&self, query_id: u64) {
+    /// query's holders between runs. Idempotent: the gateway's
+    /// `QueryScope` guard calls it again on every exit path (including
+    /// worker panics, where `run_query` never reaches its own cleanup).
+    pub(crate) fn clear_query(&self, query_id: u64) {
         self.compute.clear_query(query_id);
         self.movement.clear_query(query_id);
         self.preload.clear_query(query_id);

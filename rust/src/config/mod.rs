@@ -58,6 +58,24 @@
 //! headroom). `admission_bypass_limit` is the starvation bound: a
 //! queued query may be overtaken by at most this many later, higher-
 //! priority arrivals before it becomes the forced head of the queue.
+//!
+//! ## Fault-recovery knobs
+//!
+//! Transient-fault recovery (see FAULTS.md at the repo root) is tuned
+//! by three knobs:
+//!
+//! | knob                      | default | meaning                                  |
+//! |---------------------------|---------|------------------------------------------|
+//! | `storage_retry_limit`     | 3       | max attempts per object-store read       |
+//! | `storage_backoff_base_ms` | 10      | base of the exponential retry backoff    |
+//! | `query_retry_limit`       | 2       | gateway re-runs after a transient failure |
+//!
+//! `storage_retry_limit` counts *attempts* (a value below 1 behaves as
+//! 1 — the read always runs once); `storage_backoff_base_ms = 0` means
+//! retry immediately. `query_retry_limit` counts *re-runs* after the
+//! first attempt; `0` turns query-level retry off. All three are
+//! unconstrained — every value has a defined meaning — so they appear
+//! in `lockorder.toml`'s `allow_unvalidated` list.
 
 pub mod toml_lite;
 
@@ -234,6 +252,22 @@ pub struct WorkerConfig {
     /// before it is served strictly next. Must be >= 1.
     pub admission_bypass_limit: usize,
 
+    // ---- fault recovery (see FAULTS.md)
+    /// Max attempts per object-store read (transient failures only —
+    /// permanent errors never retry). Values below 1 behave as 1: the
+    /// read always runs at least once. Default 3.
+    pub storage_retry_limit: usize,
+    /// Base of the capped exponential backoff between storage retry
+    /// attempts, ms (the sleep before attempt `n+1` is roughly
+    /// `base * 2^(n-1)` plus deterministic jitter, capped at 32x base).
+    /// `0` retries immediately. Default 10.
+    pub storage_backoff_base_ms: u64,
+    /// Gateway re-runs after a query fails with a *transient* error
+    /// (injected fault, dropped connection) — op-level retries already
+    /// exhausted. Each re-run mints a fresh query id over torn-down
+    /// state. `0` turns query-level retry off. Default 2.
+    pub query_retry_limit: usize,
+
     // ---- network executor
     /// Compress batches before sending (Fig-4 B, E toggles this).
     pub net_compression: Option<Codec>,
@@ -297,6 +331,9 @@ impl Default for WorkerConfig {
             query_timeout_ms: 300_000,
             admission_capacity_bytes: 0,
             admission_bypass_limit: 4,
+            storage_retry_limit: 3,
+            storage_backoff_base_ms: 10,
+            query_retry_limit: 2,
             net_compression: Some(Codec::Zstd { level: 1 }),
             transport: TransportKind::Inproc,
             max_frame_bytes: crate::network::frame::DEFAULT_MAX_FRAME_BYTES,
@@ -432,6 +469,11 @@ impl WorkerConfig {
         set_usize!(admission_bypass_limit);
         if let Some(v) = get("query_timeout_ms") {
             self.query_timeout_ms = v.as_int()? as u64;
+        }
+        set_usize!(storage_retry_limit);
+        set_usize!(query_retry_limit);
+        if let Some(v) = get("storage_backoff_base_ms") {
+            self.storage_backoff_base_ms = v.as_int()? as u64;
         }
         if let Some(v) = get("pinned_pool") {
             self.pinned_pool = v.as_bool()?;
@@ -958,6 +1000,30 @@ mod tests {
         let mut cfg = WorkerConfig::default();
         cfg.admission_bypass_limit = 0;
         assert!(cfg.validate().is_err(), "zero bypass bound rejected");
+    }
+
+    #[test]
+    fn fault_recovery_knobs_default_and_apply() {
+        let cfg = WorkerConfig::default();
+        assert_eq!(cfg.storage_retry_limit, 3);
+        assert_eq!(cfg.storage_backoff_base_ms, 10);
+        assert_eq!(cfg.query_retry_limit, 2);
+        cfg.validate().unwrap();
+        let doc = TomlLite::parse(
+            "storage_retry_limit = 5\nstorage_backoff_base_ms = 0\n\
+             query_retry_limit = 0\n",
+        )
+        .unwrap();
+        let mut cfg = WorkerConfig::default();
+        cfg.apply(&doc).unwrap();
+        assert_eq!(cfg.storage_retry_limit, 5);
+        assert_eq!(cfg.storage_backoff_base_ms, 0, "0 = retry immediately");
+        assert_eq!(cfg.query_retry_limit, 0, "0 = query-level retry off");
+        // every value is legal: 0 attempts behaves as 1, large values
+        // just mean more patience — validate() has nothing to reject
+        let mut cfg = WorkerConfig::default();
+        cfg.storage_retry_limit = 0;
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -72,20 +72,54 @@ pub enum Error {
         detail: String,
     },
 
+    /// A transient fault at a named plane boundary (injected by
+    /// [`crate::fault`] or classified from a real I/O failure). The
+    /// recovery ladder — op-level retry, spill-write failover, lane
+    /// send-retry, query-level re-run — treats these as recoverable;
+    /// everything else fails the query.
+    #[error("transient fault at {site}: {detail}")]
+    Transient { site: &'static str, detail: String },
+
     #[error("{0}")]
     Internal(String),
 }
 
 impl Error {
     /// True if the Compute Executor should retry (possibly after
-    /// splitting the task) rather than fail the query.
+    /// splitting the task) rather than fail the query. Transient
+    /// plane faults are retryable too — at the query level via the
+    /// gateway's `query_retry_limit` re-run loop.
     pub fn is_retryable(&self) -> bool {
         matches!(
             self,
             Error::DeviceOom { .. }
                 | Error::PinnedExhausted { .. }
                 | Error::ReservationTimeout { .. }
-        )
+        ) || self.is_transient()
+    }
+
+    /// Transient-vs-permanent classifier (the taxonomy FAULTS.md
+    /// documents): [`Error::Transient`] wrappers are transient by
+    /// construction; raw I/O errors are transient when their kind is
+    /// one the OS can plausibly clear on retry (interrupted syscall,
+    /// timeout, reset/aborted connection, broken pipe, would-block).
+    /// Everything else — format, plan, config, OOM, panic — is
+    /// permanent at the *plane* level (OOM has its own retry ladder
+    /// via [`Error::is_retryable`]).
+    pub fn is_transient(&self) -> bool {
+        match self {
+            Error::Transient { .. } => true,
+            Error::Io(e) => matches!(
+                e.kind(),
+                std::io::ErrorKind::Interrupted
+                    | std::io::ErrorKind::TimedOut
+                    | std::io::ErrorKind::ConnectionReset
+                    | std::io::ErrorKind::ConnectionAborted
+                    | std::io::ErrorKind::BrokenPipe
+                    | std::io::ErrorKind::WouldBlock
+            ),
+            _ => false,
+        }
     }
 
     pub fn internal(msg: impl Into<String>) -> Self {
@@ -108,6 +142,36 @@ mod tests {
         let e = Error::DeviceOom { requested: 1, capacity: 0, in_use: 0 };
         assert!(e.is_retryable());
         assert!(!Error::Format("x".into()).is_retryable());
+    }
+
+    #[test]
+    fn transient_classification() {
+        let t = Error::Transient { site: "storage_get", detail: "injected".into() };
+        assert!(t.is_transient());
+        assert!(t.is_retryable(), "transient implies retryable at the query level");
+        for kind in [
+            std::io::ErrorKind::Interrupted,
+            std::io::ErrorKind::TimedOut,
+            std::io::ErrorKind::ConnectionReset,
+            std::io::ErrorKind::ConnectionAborted,
+            std::io::ErrorKind::BrokenPipe,
+            std::io::ErrorKind::WouldBlock,
+        ] {
+            assert!(
+                Error::Io(std::io::Error::new(kind, "x")).is_transient(),
+                "{kind:?} must classify transient"
+            );
+        }
+        // permanent: corrupt data, missing files, logic errors
+        assert!(!Error::Io(std::io::Error::new(std::io::ErrorKind::NotFound, "x"))
+            .is_transient());
+        assert!(!Error::Format("bad".into()).is_transient());
+        assert!(!Error::internal("bug").is_transient());
+        let p = Error::WorkerPanic { worker_id: 0, query_id: 1, detail: "d".into() };
+        assert!(!p.is_transient() && !p.is_retryable());
+        // OOM stays retryable (its own ladder) without being transient
+        let oom = Error::DeviceOom { requested: 1, capacity: 0, in_use: 0 };
+        assert!(oom.is_retryable() && !oom.is_transient());
     }
 
     #[test]

@@ -476,6 +476,9 @@ impl DataMovementExecutor {
             self.metrics
                 .gauge("spill.compacted_bytes")
                 .set(self.env.spill.compacted_bytes() as i64);
+            self.metrics
+                .gauge("spill.write_failover_total")
+                .set(self.env.spill.write_failover_total() as i64);
         }
         let threshold =
             (self.env.arena.capacity() as f64 * self.cfg.spill_watermark) as usize;

@@ -57,7 +57,7 @@
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 use crate::sync::{ranks, OrderedCondvar, OrderedMutex};
 use std::time::Duration;
@@ -578,14 +578,13 @@ impl ChannelRx {
 /// registered the channel. Such early frames are buffered (bounded) and
 /// delivered on registration — without this, a racing exchange pair
 /// deadlocks waiting for an estimate that was dropped.
-#[derive(Default)]
 pub struct Router {
     channels: RwLock<HashMap<u32, Arc<ChannelRx>>>,
     /// Early frames for channels not yet registered.
-    pending: Mutex<HashMap<u32, Vec<Frame>>>,
+    pending: OrderedMutex<HashMap<u32, Vec<Frame>>>,
     /// Control frames (plan distribution, lifecycle) for the cluster.
-    control: Mutex<VecDeque<Frame>>,
-    control_ready: Condvar,
+    control: OrderedMutex<VecDeque<Frame>>,
+    control_ready: OrderedCondvar,
     dropped: AtomicU64,
     /// §3.4 bounce pool: compressed payloads decompress straight into
     /// it (installed at worker bring-up; `None` decompresses to heap).
@@ -600,6 +599,29 @@ pub struct Router {
 /// wrong — a dead downstream — and frames are counted dropped).
 const MAX_PENDING_PER_CHANNEL: usize = 4096;
 
+impl Default for Router {
+    fn default() -> Router {
+        Router {
+            channels: RwLock::new(HashMap::new()),
+            pending: OrderedMutex::new(
+                ranks::ROUTER_PENDING,
+                "router.pending",
+                HashMap::new(),
+            ),
+            control: OrderedMutex::new(
+                ranks::ROUTER_CONTROL,
+                "router.control",
+                VecDeque::new(),
+            ),
+            control_ready: OrderedCondvar::new(),
+            dropped: AtomicU64::new(0),
+            bounce: RwLock::new(None),
+            credit_sink: RwLock::new(None),
+            metrics: OnceLock::new(),
+        }
+    }
+}
+
 impl Router {
     pub fn new() -> Router {
         Router::default()
@@ -608,7 +630,7 @@ impl Router {
     pub fn register(&self, channel: u32, rx: Arc<ChannelRx>) {
         self.channels.write().unwrap().insert(channel, rx);
         // deliver any frames that raced ahead of registration
-        let early = self.pending.lock().unwrap().remove(&channel);
+        let early = self.pending.lock().remove(&channel);
         if let Some(frames) = early {
             for f in frames {
                 if let Err(e) = self.route(f) {
@@ -670,7 +692,7 @@ impl Router {
         // Buffered early frames for the channel die here — that is data
         // loss, so it must move the `dropped` gauge (and say so), not
         // vanish silently.
-        if let Some(frames) = self.pending.lock().unwrap().remove(&channel) {
+        if let Some(frames) = self.pending.lock().remove(&channel) {
             if !frames.is_empty() {
                 self.dropped.fetch_add(frames.len() as u64, Ordering::Relaxed);
                 log::warn!(
@@ -697,9 +719,9 @@ impl Router {
                 // notify while the queue lock is held: recv_control
                 // re-checks emptiness under this lock, so an unlocked
                 // notify could land between its check and its park
-                let mut q = self.control.lock().unwrap();
+                let mut q = self.control.lock();
                 q.push_back(frame);
-                self.control_ready.notify_one();
+                self.control_ready.notify_one(&q);
                 Ok(())
             }
             // needs no registered channel: a grant for a drained (even
@@ -718,7 +740,7 @@ impl Router {
                     None => {
                         // early frame: buffer until the DAG registers
                         // the channel (bounded)
-                        let mut pending = self.pending.lock().unwrap();
+                        let mut pending = self.pending.lock();
                         let q = pending.entry(frame.channel).or_default();
                         if q.len() < MAX_PENDING_PER_CHANNEL {
                             q.push(frame);
@@ -758,7 +780,7 @@ impl Router {
     /// Next control frame, if any.
     pub fn recv_control(&self, timeout: Duration) -> Option<Frame> {
         let deadline = std::time::Instant::now() + timeout;
-        let mut q = self.control.lock().unwrap();
+        let mut q = self.control.lock();
         loop {
             if let Some(f) = q.pop_front() {
                 return Some(f);
@@ -767,7 +789,7 @@ impl Router {
             if now >= deadline {
                 return None;
             }
-            let (guard, _) = self.control_ready.wait_timeout(q, deadline - now).unwrap();
+            let (guard, _) = self.control_ready.wait_timeout(q, deadline - now);
             q = guard;
         }
     }
@@ -955,6 +977,12 @@ fn decompress_staged(
     Ok(StagedBytes::Heap(out))
 }
 
+/// Send attempts per frame before a sender lane escalates peer-down
+/// and drops the frame (`net.peer_down_total`). The pre-send fault
+/// gate retries transient faults with short deterministic backoff;
+/// attempts past the first count on `net.send_retry_total`.
+const NET_SEND_ATTEMPTS: usize = 4;
+
 /// The executor: sender lanes + one receiver thread.
 pub struct NetworkExecutor {
     outbox: Arc<Outbox>,
@@ -1056,8 +1084,53 @@ impl NetworkExecutor {
                             };
                             let dst = frame.dst;
                             let t0 = std::time::Instant::now();
-                            if let Err(e) = endpoint.send(frame) {
-                                log::warn!("netsend: {e}");
+                            // Pre-send fault gate: `endpoint.send`
+                            // consumes the frame by value, so transient
+                            // send faults must be retried *before* it —
+                            // afterwards there is nothing left to send.
+                            let mut send_err = None;
+                            for attempt in 1..=NET_SEND_ATTEMPTS {
+                                match crate::fault::check(crate::fault::FaultSite::NetSend)
+                                {
+                                    Ok(()) => break,
+                                    Err(e) if attempt == NET_SEND_ATTEMPTS => {
+                                        send_err = Some(e);
+                                    }
+                                    Err(e) => {
+                                        if let Some(m) = outbox.metrics.get() {
+                                            m.counter("net.send_retry_total").inc();
+                                            m.counter("retry.attempts_total").inc();
+                                        }
+                                        log::warn!(
+                                            "netsend to {dst} attempt {attempt}: {e}, retrying"
+                                        );
+                                        std::thread::sleep(crate::fault::backoff(
+                                            "net_send", attempt, 1,
+                                        ));
+                                    }
+                                }
+                            }
+                            match send_err {
+                                Some(e) => {
+                                    // Peer-down escalation: the frame is
+                                    // dropped loudly; the query recovers
+                                    // (if at all) at the gateway rung.
+                                    if let Some(m) = outbox.metrics.get() {
+                                        m.counter("net.peer_down_total").inc();
+                                    }
+                                    log::error!(
+                                        "netsend to {dst}: peer down after \
+                                         {NET_SEND_ATTEMPTS} attempts ({e}); frame dropped"
+                                    );
+                                }
+                                None => {
+                                    if let Err(e) = endpoint.send(frame) {
+                                        if let Some(m) = outbox.metrics.get() {
+                                            m.counter("net.peer_down_total").inc();
+                                        }
+                                        log::warn!("netsend: {e}");
+                                    }
+                                }
                             }
                             // per-destination wire latency: one of the
                             // two signals the exchange's adaptive flush
@@ -1082,7 +1155,14 @@ impl NetworkExecutor {
                         while !stop.load(Ordering::Relaxed) {
                             match endpoint.recv_timeout(Duration::from_millis(50)) {
                                 Ok(Some(f)) => {
-                                    if let Err(e) = router.route(f) {
+                                    // Injected receive fault = the frame
+                                    // was lost on the dropped connection:
+                                    // discard before routing.
+                                    if let Err(e) =
+                                        crate::fault::check(crate::fault::FaultSite::NetRecv)
+                                    {
+                                        log::warn!("netrecv: {e}, frame dropped");
+                                    } else if let Err(e) = router.route(f) {
                                         log::warn!("netrecv route: {e}");
                                     }
                                 }

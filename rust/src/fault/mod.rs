@@ -1,0 +1,442 @@
+//! Deterministic fault injection + the bounded-retry helper the
+//! recovery paths share (see FAULTS.md for the operator-facing view).
+//!
+//! A process-global [`FaultInjector`] holds at most one installed
+//! [`FaultPlan`]. Injection sites ([`FaultSite`]) are threaded through
+//! the storage, spill, and network planes as `fault::check(site)?`
+//! calls; with no plan installed the check is a single relaxed atomic
+//! load — the disabled fast path adds zero I/O and zero allocation
+//! (micro benches #5/#7 assert it stays invisible).
+//!
+//! Plans are deterministic by construction: explicit rules fire on the
+//! Nth operation of a site (a per-site op counter, 1-based), and the
+//! seeded mode drives a xorshift RNG from a caller-supplied seed — the
+//! same plan against the same workload fires at the same ops. Every
+//! firing returns [`Error::Transient`] (so the recovery ladders treat
+//! injected and real transient failures identically) and is counted on
+//! `fault.injected_total` plus a per-site counter.
+//!
+//! Install is scoped and serialized: [`install`] returns a
+//! [`FaultScope`] holding a process-wide guard, so concurrent tests
+//! installing plans queue instead of corrupting each other's
+//! schedules; dropping the scope uninstalls the plan and re-arms the
+//! no-op fast path.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::metrics::Metrics;
+use crate::sync::{ranks, OrderedMutex};
+use crate::{Error, Result};
+
+/// Named injection sites — one per plane boundary the recovery
+/// machinery defends.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    /// Object-store range read (`ObjectStore::get_range` /
+    /// `get_range_into`).
+    StorageGet,
+    /// Object-store write (`ObjectStore::put`).
+    StoragePut,
+    /// Spill-segment positional read (`SpillStore` read paths).
+    SpillRead,
+    /// Spill-segment positional write (`SpillStore::write_vectored`
+    /// attempt — fires *before* bytes land, so failover retries into a
+    /// fresh segment).
+    SpillWrite,
+    /// Endpoint / sender-lane send (checked before the frame is
+    /// consumed, so the lane can retry).
+    NetSend,
+    /// Endpoint receive / reader loop (a firing drops the frame —
+    /// modeling loss on a dying connection).
+    NetRecv,
+}
+
+impl FaultSite {
+    pub const ALL: [FaultSite; 6] = [
+        FaultSite::StorageGet,
+        FaultSite::StoragePut,
+        FaultSite::SpillRead,
+        FaultSite::SpillWrite,
+        FaultSite::NetSend,
+        FaultSite::NetRecv,
+    ];
+
+    fn index(self) -> usize {
+        match self {
+            FaultSite::StorageGet => 0,
+            FaultSite::StoragePut => 1,
+            FaultSite::SpillRead => 2,
+            FaultSite::SpillWrite => 3,
+            FaultSite::NetSend => 4,
+            FaultSite::NetRecv => 5,
+        }
+    }
+
+    /// Stable short name (error text, jitter hashing, test plans).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::StorageGet => "storage_get",
+            FaultSite::StoragePut => "storage_put",
+            FaultSite::SpillRead => "spill_read",
+            FaultSite::SpillWrite => "spill_write",
+            FaultSite::NetSend => "net_send",
+            FaultSite::NetRecv => "net_recv",
+        }
+    }
+
+    /// Per-site firing counter name (registered in
+    /// [`crate::metrics::registry`]).
+    pub fn metric(self) -> &'static str {
+        match self {
+            FaultSite::StorageGet => "fault.injected_total.storage_get",
+            FaultSite::StoragePut => "fault.injected_total.storage_put",
+            FaultSite::SpillRead => "fault.injected_total.spill_read",
+            FaultSite::SpillWrite => "fault.injected_total.spill_write",
+            FaultSite::NetSend => "fault.injected_total.net_send",
+            FaultSite::NetRecv => "fault.injected_total.net_recv",
+        }
+    }
+}
+
+/// One explicit schedule entry: fire on ops `nth ..= nth+count-1` of
+/// `site` (the per-site op counter is 1-based).
+#[derive(Clone, Copy, Debug)]
+struct Rule {
+    site: FaultSite,
+    nth: u64,
+    count: u64,
+}
+
+/// Seeded random mode: each checked op fires with probability
+/// `per_mille`/1000, up to `max_faults` total firings, driven by a
+/// xorshift64 stream — same seed, same workload, same firings.
+#[derive(Clone, Copy, Debug)]
+struct Seeded {
+    state: u64,
+    per_mille: u64,
+    max_faults: u64,
+    fired: u64,
+}
+
+/// A deterministic schedule of injected transient faults.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    rules: Vec<Rule>,
+    seeded: Option<Seeded>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Fire on the `nth` operation of `site` (1-based).
+    pub fn fail_nth(self, site: FaultSite, nth: u64) -> FaultPlan {
+        self.fail_nth_count(site, nth, 1)
+    }
+
+    /// Fire on `count` consecutive operations of `site` starting at the
+    /// `nth` (1-based) — the shape that exercises bounded retry ladders.
+    pub fn fail_nth_count(mut self, site: FaultSite, nth: u64, count: u64) -> FaultPlan {
+        self.rules.push(Rule { site, nth: nth.max(1), count });
+        self
+    }
+
+    /// Seeded random mode on top of any explicit rules: every checked
+    /// op fires with probability `per_mille`/1000 until `max_faults`
+    /// firings happened.
+    pub fn seeded(seed: u64, per_mille: u64, max_faults: u64) -> FaultPlan {
+        FaultPlan {
+            rules: Vec::new(),
+            seeded: Some(Seeded {
+                // xorshift needs a nonzero state
+                state: seed | 1,
+                per_mille: per_mille.min(1000),
+                max_faults,
+                fired: 0,
+            }),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty() && self.seeded.is_none()
+    }
+}
+
+/// Installed-plan state: the plan, per-site op counters, and an
+/// optional metrics sink the firings are mirrored into.
+struct ActivePlan {
+    plan: FaultPlan,
+    ops: [u64; 6],
+    metrics: Option<Arc<Metrics>>,
+}
+
+/// The process-global injector's lock pair — a struct rather than loose
+/// statics so the lock-hierarchy lint can key both fields in
+/// `lockorder.toml` (entries `fault.install` / `fault.state`).
+struct FaultInjector {
+    /// Serializes installers process-wide. Rank 10 — outermost: a
+    /// [`FaultScope`] holds it across whole test bodies, so every other
+    /// lock in the system must rank above it.
+    install: OrderedMutex<()>,
+    /// The installed plan + per-site op counters. Rank 950 — near-leaf:
+    /// `check` runs under locks from every plane, so only the metrics
+    /// sinks rank above it.
+    state: OrderedMutex<Option<ActivePlan>>,
+}
+
+// `ENABLED` is the whole disabled fast path: one relaxed load, no lock,
+// no branch on plan contents.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static INJECTOR: FaultInjector = FaultInjector {
+    install: OrderedMutex::new(ranks::FAULT_INSTALL, "fault.install", ()),
+    state: OrderedMutex::new(ranks::FAULT_STATE, "fault.state", None),
+};
+static INJECTED_TOTAL: AtomicU64 = AtomicU64::new(0);
+static INJECTED_BY_SITE: [AtomicU64; 6] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+
+/// RAII scope for an installed plan: holds the process-wide install
+/// guard (concurrent installers queue behind it) and uninstalls the
+/// plan on drop, restoring the no-op fast path.
+pub struct FaultScope {
+    _guard: crate::sync::ordered::OrderedGuard<'static, ()>,
+}
+
+impl Drop for FaultScope {
+    fn drop(&mut self) {
+        ENABLED.store(false, Ordering::SeqCst);
+        *INJECTOR.state.lock() = None;
+    }
+}
+
+/// Install `plan` for the lifetime of the returned scope. Serialized
+/// process-wide: a second installer blocks until the first scope drops.
+pub fn install(plan: FaultPlan) -> FaultScope {
+    install_with_metrics(plan, None)
+}
+
+/// [`install`], with firings mirrored into `metrics`
+/// (`fault.injected_total` + the per-site counters) so fault-suite
+/// artifacts show the schedule that actually ran.
+pub fn install_with_metrics(plan: FaultPlan, metrics: Option<Arc<Metrics>>) -> FaultScope {
+    let guard = INJECTOR.install.lock();
+    {
+        let mut st = INJECTOR.state.lock();
+        *st = Some(ActivePlan { plan, ops: [0; 6], metrics });
+    }
+    ENABLED.store(true, Ordering::SeqCst);
+    FaultScope { _guard: guard }
+}
+
+/// The injection gate every site calls. With no plan installed this is
+/// one relaxed atomic load. With a plan, the site's op counter advances
+/// and a scheduled op returns [`Error::Transient`].
+#[inline]
+pub fn check(site: FaultSite) -> Result<()> {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return Ok(());
+    }
+    check_slow(site)
+}
+
+#[cold]
+fn check_slow(site: FaultSite) -> Result<()> {
+    let mut st = INJECTOR.state.lock();
+    let active = match st.as_mut() {
+        Some(a) => a,
+        None => return Ok(()),
+    };
+    let idx = site.index();
+    active.ops[idx] += 1;
+    let op = active.ops[idx];
+    let mut fire = active
+        .plan
+        .rules
+        .iter()
+        .any(|r| r.site == site && op >= r.nth && op < r.nth + r.count);
+    if !fire {
+        if let Some(s) = active.plan.seeded.as_mut() {
+            if s.fired < s.max_faults {
+                // xorshift64
+                s.state ^= s.state << 13;
+                s.state ^= s.state >> 7;
+                s.state ^= s.state << 17;
+                if s.state % 1000 < s.per_mille {
+                    s.fired += 1;
+                    fire = true;
+                }
+            }
+        }
+    }
+    if !fire {
+        return Ok(());
+    }
+    INJECTED_TOTAL.fetch_add(1, Ordering::Relaxed);
+    INJECTED_BY_SITE[idx].fetch_add(1, Ordering::Relaxed);
+    if let Some(m) = active.metrics.as_ref() {
+        m.counter("fault.injected_total").inc();
+        m.counter(site.metric()).inc();
+    }
+    Err(Error::Transient {
+        site: site.name(),
+        detail: format!("injected fault at {} op {op}", site.name()),
+    })
+}
+
+/// Process-lifetime count of injected faults (all sites). Benches use
+/// this to assert the disabled injector stayed invisible.
+pub fn injected_total() -> u64 {
+    INJECTED_TOTAL.load(Ordering::Relaxed)
+}
+
+/// Process-lifetime count of injected faults at one site.
+pub fn injected_for(site: FaultSite) -> u64 {
+    INJECTED_BY_SITE[site.index()].load(Ordering::Relaxed)
+}
+
+// ----------------------------------------------------------- retry
+
+/// Bounded-retry knobs for one storage-plane caller
+/// (`storage_retry_limit` / `storage_backoff_base_ms`).
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Max attempts per operation (so `limit - 1` retries). Values
+    /// below 1 behave as 1 — a single, unretried attempt.
+    pub limit: usize,
+    /// Backoff base, ms: attempt `n` sleeps `base * 2^(n-1)` (capped at
+    /// 32x) plus deterministic jitter. 0 retries immediately.
+    pub base_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { limit: 3, base_ms: 10 }
+    }
+}
+
+/// Capped exponential backoff with deterministic jitter: the delay for
+/// a given (site, attempt) pair is a pure function, so a faulted run's
+/// timing is reproducible.
+pub fn backoff(site: &str, attempt: usize, base_ms: u64) -> Duration {
+    if base_ms == 0 {
+        return Duration::ZERO;
+    }
+    let exp = base_ms.saturating_mul(1u64 << attempt.saturating_sub(1).min(5));
+    // FNV-1a over (site, attempt): jitter in [0, base_ms/2]
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in site.bytes().chain(attempt.to_le_bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    let jitter = if base_ms < 2 { 0 } else { h % (base_ms / 2) };
+    Duration::from_millis(exp + jitter)
+}
+
+/// Run `op` with up to `policy.limit` attempts, retrying only
+/// [`Error::is_transient`] failures, sleeping [`backoff`] between
+/// attempts and counting each retry on `retry.attempts_total`. The
+/// final failure propagates as-is (still transient — query-level retry
+/// is the next rung of the ladder).
+pub fn with_retry<T>(
+    policy: RetryPolicy,
+    metrics: Option<&Arc<Metrics>>,
+    site: &str,
+    mut op: impl FnMut() -> Result<T>,
+) -> Result<T> {
+    let limit = policy.limit.max(1);
+    let mut attempt = 1;
+    loop {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) if e.is_transient() && attempt < limit => {
+                log::warn!("{site}: transient failure (attempt {attempt}/{limit}): {e}");
+                if let Some(m) = metrics {
+                    m.counter("retry.attempts_total").inc();
+                }
+                std::thread::sleep(backoff(site, attempt, policy.base_ms));
+                attempt += 1;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Plan-installing tests live in `tests/fault_injection.rs` — their
+    // own binary, so an installed plan can never leak faults into
+    // unrelated lib tests running concurrently. Only injector-free
+    // pieces (the fast path, backoff, with_retry) are tested here.
+    use super::*;
+
+    #[test]
+    fn disabled_injector_is_a_no_op() {
+        // no plan installed: every site passes and nothing is counted
+        let before = injected_total();
+        for site in FaultSite::ALL {
+            assert!(check(site).is_ok());
+        }
+        assert_eq!(injected_total(), before);
+    }
+
+    #[test]
+    fn backoff_is_deterministic_capped_and_grows() {
+        let d1 = backoff("storage_get", 1, 10);
+        let d2 = backoff("storage_get", 2, 10);
+        assert_eq!(d1, backoff("storage_get", 1, 10), "pure function");
+        assert!(d2 > d1, "exponential growth");
+        let cap = backoff("storage_get", 64, 10);
+        assert!(cap <= Duration::from_millis(10 * 32 + 5), "capped at 32x + jitter");
+        assert_eq!(backoff("x", 3, 0), Duration::ZERO, "base 0 = no sleep");
+    }
+
+    #[test]
+    fn with_retry_recovers_within_limit_and_counts() {
+        let m = Arc::new(Metrics::default());
+        let mut calls = 0;
+        let out = with_retry(
+            RetryPolicy { limit: 3, base_ms: 0 },
+            Some(&m),
+            "storage_get",
+            || {
+                calls += 1;
+                if calls < 3 {
+                    Err(Error::Transient { site: "storage_get", detail: "t".into() })
+                } else {
+                    Ok(7)
+                }
+            },
+        );
+        assert_eq!(out.unwrap(), 7);
+        assert_eq!(calls, 3);
+        assert_eq!(m.counter_value("retry.attempts_total"), 2);
+    }
+
+    #[test]
+    fn with_retry_propagates_exhaustion_and_permanent_errors() {
+        // exhausted transient: still transient on the way out
+        let out: Result<()> =
+            with_retry(RetryPolicy { limit: 2, base_ms: 0 }, None, "s", || {
+                Err(Error::Transient { site: "s", detail: "t".into() })
+            });
+        assert!(out.unwrap_err().is_transient());
+        // permanent errors are never retried
+        let mut calls = 0;
+        let out: Result<()> =
+            with_retry(RetryPolicy { limit: 5, base_ms: 0 }, None, "s", || {
+                calls += 1;
+                Err(Error::internal("permanent"))
+            });
+        assert!(!out.unwrap_err().is_transient());
+        assert_eq!(calls, 1, "permanent error must fail fast");
+    }
+}

@@ -31,6 +31,7 @@ pub mod config;
 pub mod error;
 pub mod exec;
 pub mod executors;
+pub mod fault;
 pub mod memory;
 pub mod metrics;
 pub mod network;

@@ -55,6 +55,10 @@ struct Segment {
     write_off: AtomicU64,
     live_bytes: AtomicU64,
     reclaimed: AtomicBool,
+    /// Set when a write into this segment failed: the segment is sealed
+    /// against *new* writes (the next writer rotates past it) while its
+    /// already-landed payloads stay readable. See FAULTS.md.
+    poisoned: AtomicBool,
     /// Live payload extents (`offset → len`) — what compaction copies
     /// forward. Inserted on write, removed on free/move.
     slots: Mutex<HashMap<u64, u64>>,
@@ -77,6 +81,7 @@ pub struct SpillStore {
     reload_ops: AtomicU64,
     rotations: AtomicU64,
     compacted: AtomicU64,
+    write_failover: AtomicU64,
 }
 
 impl SpillStore {
@@ -108,6 +113,7 @@ impl SpillStore {
             reload_ops: AtomicU64::new(0),
             rotations: AtomicU64::new(0),
             compacted: AtomicU64::new(0),
+            write_failover: AtomicU64::new(0),
         })
     }
 
@@ -140,6 +146,7 @@ impl SpillStore {
             write_off: AtomicU64::new(0),
             live_bytes: AtomicU64::new(0),
             reclaimed: AtomicBool::new(false),
+            poisoned: AtomicBool::new(false),
             slots: Mutex::new(HashMap::new()),
         })
     }
@@ -173,6 +180,13 @@ impl SpillStore {
     /// Lifetime bytes copied forward by [`SpillStore::compact`].
     pub fn compacted_bytes(&self) -> u64 {
         self.compacted.load(Ordering::Relaxed)
+    }
+
+    /// Times a failed segment write was retried into a fresh segment
+    /// (the old one sealed poisoned). Published as
+    /// `spill.write_failover_total`.
+    pub fn write_failover_total(&self) -> u64 {
+        self.write_failover.load(Ordering::Relaxed)
     }
 
     /// Rotate if `observed_last` is still the last segment (another
@@ -215,30 +229,69 @@ impl SpillStore {
     /// reassembled into a heap `Vec` on the way to disk.
     pub fn write_vectored(&self, parts: &[&[u8]]) -> Result<SpillSlot> {
         let len: u64 = parts.iter().map(|p| p.len() as u64).sum();
+        let mut failovers = 0u32;
         loop {
             let observed = {
                 let segs = self.segments.read().unwrap();
                 let idx = segs.len() - 1;
                 let seg = &segs[idx];
-                let offset = seg.write_off.fetch_add(len, Ordering::AcqRel);
-                // In-budget, or an oversized payload opening a fresh
-                // segment (offset 0 always accepts).
-                if offset == 0 || offset + len <= self.segment_bytes {
-                    let mut at = offset;
-                    for p in parts {
-                        seg.file.write_all_at(p, at)?;
-                        at += p.len() as u64;
+                if seg.poisoned.load(Ordering::Acquire) {
+                    // A prior write failed here: rotate past it without
+                    // reserving (existing payloads stay readable).
+                    idx
+                } else {
+                    let offset = seg.write_off.fetch_add(len, Ordering::AcqRel);
+                    // In-budget, or an oversized payload opening a fresh
+                    // segment (offset 0 always accepts).
+                    if offset == 0 || offset + len <= self.segment_bytes {
+                        // Bookkeeping happens only after every byte has
+                        // landed, so a failed attempt leaves no live
+                        // state behind — just an abandoned reservation.
+                        let attempt = (|| -> Result<()> {
+                            crate::fault::check(crate::fault::FaultSite::SpillWrite)?;
+                            let mut at = offset;
+                            for p in parts {
+                                seg.file.write_all_at(p, at)?;
+                                at += p.len() as u64;
+                            }
+                            Ok(())
+                        })();
+                        match attempt {
+                            Ok(()) => {
+                                seg.live_bytes.fetch_add(len, Ordering::AcqRel);
+                                seg.slots.lock().unwrap().insert(offset, len);
+                                self.live_bytes.fetch_add(len, Ordering::Relaxed);
+                                self.spill_ops.fetch_add(1, Ordering::Relaxed);
+                                return Ok(SpillSlot {
+                                    segment: idx as u32,
+                                    offset,
+                                    len,
+                                });
+                            }
+                            Err(e) => {
+                                // Failover: seal the segment against new
+                                // writes and retry the payload on a fresh
+                                // one. Bounded — a persistently failing
+                                // disk propagates after a few attempts.
+                                seg.poisoned.store(true, Ordering::Release);
+                                self.write_failover.fetch_add(1, Ordering::Relaxed);
+                                failovers += 1;
+                                if failovers > 3 {
+                                    return Err(e);
+                                }
+                                log::warn!(
+                                    "spill write failover #{failovers}: segment {idx} poisoned: {e}"
+                                );
+                                idx
+                            }
+                        }
+                    } else {
+                        // Segment full: the reserved range is abandoned
+                        // (the file is never extended there); retry on a
+                        // fresh segment, rotating outside the read lock.
+                        idx
                     }
-                    seg.live_bytes.fetch_add(len, Ordering::AcqRel);
-                    seg.slots.lock().unwrap().insert(offset, len);
-                    self.live_bytes.fetch_add(len, Ordering::Relaxed);
-                    self.spill_ops.fetch_add(1, Ordering::Relaxed);
-                    return Ok(SpillSlot { segment: idx as u32, offset, len });
                 }
-                // Segment full: the reserved range is abandoned (the
-                // file is never extended there); retry on a fresh
-                // segment, rotating outside the read lock.
-                idx
             };
             self.rotate(observed)?;
         }
@@ -260,6 +313,7 @@ impl SpillStore {
     /// checks. Returns the resolved slot — file offsets must come from
     /// it, not from the caller's (possibly pre-compaction) handle.
     fn checked_segment(&self, slot: SpillSlot) -> Result<(Arc<Segment>, SpillSlot)> {
+        crate::fault::check(crate::fault::FaultSite::SpillRead)?;
         let segs = self.segments.read().unwrap();
         let resolved = self.resolve_locked(slot);
         let seg = segs

@@ -43,10 +43,19 @@ pub const METRIC_NAMES: &[&str] = &[
     "exchange.partition",
     "exchange.passthrough",
     "exchange.pressure_flush_total",
+    // fault injection (src/fault)
+    "fault.injected_total",
+    "fault.injected_total.net_recv",
+    "fault.injected_total.net_send",
+    "fault.injected_total.spill_read",
+    "fault.injected_total.spill_write",
+    "fault.injected_total.storage_get",
+    "fault.injected_total.storage_put",
     // gateway admission + sessions (src/cluster)
     "gateway.admission_peak_bytes",
     "gateway.admission_wait_ms",
     "gateway.admitted",
+    "gateway.query_retry_total",
     "gateway.queued",
     "gateway.worker_panic_total",
     // data-movement executor (src/executors/movement.rs)
@@ -57,17 +66,23 @@ pub const METRIC_NAMES: &[&str] = &[
     // network executor (src/executors/network.rs)
     "net.close_unsent_total",
     "net.credits_granted_total",
+    "net.peer_down_total",
+    "net.send_retry_total",
     // pinned host pool (src/memory/pinned.rs)
     "pinned.acquires",
     "pinned.bounce_bytes",
     "pinned.exhaustions",
     "pinned.free_buffers",
     "pinned.waste_bytes",
+    // bounded-retry ladders (src/fault, src/cluster)
+    "retry.attempts_total",
+    "retry.exhausted_total",
     // compute scheduler (src/executors/compute.rs)
     "sched.residency_rerank_total",
     "sched.spill_stall_avoided",
     // spill files (src/memory/spill.rs)
     "spill.compacted_bytes",
+    "spill.write_failover_total",
     // ordered-lock poison recovery (src/sync/ordered.rs)
     "sync.poison_recovered_total",
 ];

@@ -8,17 +8,27 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::config::TransportKind;
 use crate::network::{Endpoint, Frame};
 use crate::sim::{SimContext, Throttle};
+use crate::sync::{ranks, OrderedCondvar, OrderedMutex};
 use crate::{Error, Result};
 
 struct Inbox {
-    q: Mutex<VecDeque<Frame>>,
-    ready: Condvar,
+    q: OrderedMutex<VecDeque<Frame>>,
+    ready: OrderedCondvar,
+}
+
+impl Inbox {
+    fn new() -> Inbox {
+        Inbox {
+            q: OrderedMutex::new(ranks::INBOX_INPROC_Q, "inbox.inproc_q", VecDeque::new()),
+            ready: OrderedCondvar::new(),
+        }
+    }
 }
 
 /// The shared fabric.
@@ -45,11 +55,7 @@ impl InprocHub {
             _ => ctx.profile.net_tcp.clone(),
         };
         Arc::new(InprocHub {
-            inboxes: (0..n)
-                .map(|_| {
-                    Arc::new(Inbox { q: Mutex::new(VecDeque::new()), ready: Condvar::new() })
-                })
-                .collect(),
+            inboxes: (0..n).map(|_| Arc::new(Inbox::new())).collect(),
             links: (0..n)
                 .map(|_| (0..n).map(|_| ctx.throttle(&spec)).collect())
                 .collect(),
@@ -117,16 +123,16 @@ impl Endpoint for InprocEndpoint {
         let inbox = &self.hub.inboxes[dst];
         // notify while the queue lock is held (lost-wakeup defense —
         // see CONCURRENCY.md on wait/notify pairings)
-        let mut q = inbox.q.lock().unwrap();
+        let mut q = inbox.q.lock();
         q.push_back(frame);
-        inbox.ready.notify_one();
+        inbox.ready.notify_one(&q);
         Ok(())
     }
 
     fn recv_timeout(&self, timeout: Duration) -> Result<Option<Frame>> {
         let inbox = &self.hub.inboxes[self.id];
         let deadline = std::time::Instant::now() + timeout;
-        let mut q = inbox.q.lock().unwrap();
+        let mut q = inbox.q.lock();
         loop {
             if let Some(f) = q.pop_front() {
                 return Ok(Some(f));
@@ -135,7 +141,7 @@ impl Endpoint for InprocEndpoint {
             if now >= deadline {
                 return Ok(None);
             }
-            let (guard, _) = inbox.ready.wait_timeout(q, deadline - now).unwrap();
+            let (guard, _) = inbox.ready.wait_timeout(q, deadline - now);
             q = guard;
         }
     }

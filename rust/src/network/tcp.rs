@@ -18,7 +18,7 @@ use std::collections::VecDeque;
 use std::io::{IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::config::TransportKind;
@@ -26,11 +26,21 @@ use crate::memory::{PinnedPool, PinnedSlab, SlabSlice};
 use crate::network::frame::{Payload, DEFAULT_MAX_FRAME_BYTES, FRAME_HEADER_LEN};
 use crate::network::{Endpoint, Frame, FrameKind};
 use crate::sim::{SimContext, Throttle};
+use crate::sync::{ranks, OrderedCondvar, OrderedMutex};
 use crate::{Error, Result};
 
 struct Inbox {
-    q: Mutex<VecDeque<Frame>>,
-    ready: Condvar,
+    q: OrderedMutex<VecDeque<Frame>>,
+    ready: OrderedCondvar,
+}
+
+impl Inbox {
+    fn new() -> Inbox {
+        Inbox {
+            q: OrderedMutex::new(ranks::INBOX_TCP_Q, "inbox.tcp_q", VecDeque::new()),
+            ready: OrderedCondvar::new(),
+        }
+    }
 }
 
 /// The receive-side bounce pool, installed after worker bring-up (the
@@ -108,7 +118,7 @@ impl TcpCluster {
         let shutdown = Arc::new(AtomicBool::new(false));
         let mut endpoints = Vec::with_capacity(n);
         for (i, row) in peers.into_iter().enumerate() {
-            let inbox = Arc::new(Inbox { q: Mutex::new(VecDeque::new()), ready: Condvar::new() });
+            let inbox = Arc::new(Inbox::new());
             let recv_pool = Arc::new(RecvPool::default());
             let mut peer_handles = Vec::with_capacity(n);
             for (j, sock) in row.into_iter().enumerate() {
@@ -284,12 +294,21 @@ fn reader_loop(
                 return;
             }
         };
+        // Injected receive fault = the connection died mid-frame: the
+        // decoded frame is discarded and the reader drops the
+        // connection, exactly like a real truncated stream.
+        if let Err(e) = crate::fault::check(crate::fault::FaultSite::NetRecv) {
+            if !stop.load(Ordering::Relaxed) {
+                log::warn!("tcp reader: {e}, dropping connection");
+            }
+            return;
+        }
         // notify while the queue lock is held: the receiver re-checks
         // emptiness under this lock, so an unlocked notify could land
         // between its check and its park and be lost
-        let mut q = inbox.q.lock().unwrap();
+        let mut q = inbox.q.lock();
         q.push_back(frame);
-        inbox.ready.notify_one();
+        inbox.ready.notify_one(&q);
     }
 }
 
@@ -363,6 +382,7 @@ impl Endpoint for TcpEndpoint {
     }
 
     fn send(&self, frame: Frame) -> Result<()> {
+        crate::fault::check(crate::fault::FaultSite::NetSend)?;
         let dst = frame.dst;
         if dst >= self.n {
             return Err(Error::Network(format!("no worker {dst}")));
@@ -371,9 +391,9 @@ impl Endpoint for TcpEndpoint {
         self.frames.fetch_add(1, Ordering::Relaxed);
         if dst == self.id {
             self.loopback_throttle.acquire(frame.wire_len());
-            let mut q = self.inbox.q.lock().unwrap();
+            let mut q = self.inbox.q.lock();
             q.push_back(frame);
-            self.inbox.ready.notify_one();
+            self.inbox.ready.notify_one(&q);
             return Ok(());
         }
         let peer = self.peers[dst]
@@ -400,7 +420,7 @@ impl Endpoint for TcpEndpoint {
 
     fn recv_timeout(&self, timeout: Duration) -> Result<Option<Frame>> {
         let deadline = std::time::Instant::now() + timeout;
-        let mut q = self.inbox.q.lock().unwrap();
+        let mut q = self.inbox.q.lock();
         loop {
             if let Some(f) = q.pop_front() {
                 return Ok(Some(f));
@@ -409,7 +429,7 @@ impl Endpoint for TcpEndpoint {
             if now >= deadline {
                 return Ok(None);
             }
-            let (guard, _) = self.inbox.ready.wait_timeout(q, deadline - now).unwrap();
+            let (guard, _) = self.inbox.ready.wait_timeout(q, deadline - now);
             q = guard;
         }
     }

@@ -15,9 +15,11 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
+use crate::fault::{self, RetryPolicy};
 use crate::memory::{PinnedPool, SlabSlice, SlabWriter, StagedBytes};
+use crate::metrics::Metrics;
 use crate::storage::format::{FileFooter, RowGroupMeta};
 use crate::storage::object_store::ObjectStore;
 use crate::Result;
@@ -162,22 +164,42 @@ pub trait Datasource: Send + Sync {
 /// baseline behaviour of a generic S3 filesystem adapter).
 pub struct GenericDatasource {
     store: Arc<dyn ObjectStore>,
+    retry: RetryPolicy,
+    metrics: OnceLock<Arc<Metrics>>,
 }
 
 impl GenericDatasource {
     pub fn new(store: Arc<dyn ObjectStore>) -> Self {
-        GenericDatasource { store }
+        GenericDatasource {
+            store,
+            retry: RetryPolicy::default(),
+            metrics: OnceLock::new(),
+        }
+    }
+
+    /// Override the storage-read retry knobs (`storage_retry_limit` /
+    /// `storage_backoff_base_ms`) — called at worker bring-up, before
+    /// the datasource is shared.
+    pub fn set_retry_policy(&mut self, policy: RetryPolicy) {
+        self.retry = policy;
+    }
+
+    /// Metrics sink for `retry.attempts_total` (first install wins).
+    pub fn install_metrics(&self, metrics: Arc<Metrics>) {
+        let _ = self.metrics.set(metrics);
     }
 }
 
 impl Datasource for GenericDatasource {
     fn footer(&self, key: &str) -> Result<Arc<FileFooter>> {
-        let file_len = self.store.head(key)?;
-        let (toff, tlen) = FileFooter::tail_range(file_len);
-        let tail = self.store.get_range(key, toff, tlen)?;
-        let (foff, flen) = FileFooter::footer_range(&tail, file_len)?;
-        let fbytes = self.store.get_range(key, foff, flen)?;
-        Ok(Arc::new(FileFooter::decode(&fbytes)?))
+        fault::with_retry(self.retry, self.metrics.get(), "storage_get", || {
+            let file_len = self.store.head(key)?;
+            let (toff, tlen) = FileFooter::tail_range(file_len);
+            let tail = self.store.get_range(key, toff, tlen)?;
+            let (foff, flen) = FileFooter::footer_range(&tail, file_len)?;
+            let fbytes = self.store.get_range(key, foff, flen)?;
+            Ok(Arc::new(FileFooter::decode(&fbytes)?))
+        })
     }
 
     fn fetch_group(
@@ -191,9 +213,11 @@ impl Datasource for GenericDatasource {
         cols.iter()
             .map(|&c| {
                 let ch = &g.chunks[c];
-                self.store
-                    .get_range(key, ch.offset, ch.len)
-                    .map(StagedBytes::Heap)
+                fault::with_retry(self.retry, self.metrics.get(), "storage_get", || {
+                    self.store
+                        .get_range(key, ch.offset, ch.len)
+                        .map(StagedBytes::Heap)
+                })
             })
             .collect()
     }
@@ -228,6 +252,8 @@ pub struct CustomObjectStoreDatasource {
     /// ... and pre-loading data for table scans" (§3.4).
     pinned: Option<PinnedPool>,
     stats: Mutex<CustomDsStats>,
+    retry: RetryPolicy,
+    metrics: OnceLock<Arc<Metrics>>,
     /// Store mutation clock (None when the store doesn't track one).
     version: Option<SourceVersion>,
     /// Global clock value the footer cache was filled against; a bump
@@ -250,9 +276,23 @@ impl CustomObjectStoreDatasource {
             coalesce_gap,
             pinned,
             stats: Mutex::new(CustomDsStats::default()),
+            retry: RetryPolicy::default(),
+            metrics: OnceLock::new(),
             version,
             seen_global: AtomicU64::new(seen),
         }
+    }
+
+    /// Override the storage-read retry knobs (`storage_retry_limit` /
+    /// `storage_backoff_base_ms`) — called at worker bring-up, before
+    /// the datasource is shared.
+    pub fn set_retry_policy(&mut self, policy: RetryPolicy) {
+        self.retry = policy;
+    }
+
+    /// Metrics sink for `retry.attempts_total` (first install wins).
+    pub fn install_metrics(&self, metrics: Arc<Metrics>) {
+        let _ = self.metrics.set(metrics);
     }
 
     /// Drop cached footers if the store advanced past what we cached
@@ -292,17 +332,26 @@ impl CustomObjectStoreDatasource {
         // fetch merged ranges into slabs (heap when the pool is dry)
         let mut blocks: Vec<(u64, StagedBytes)> = Vec::with_capacity(merged.len());
         for m in &merged {
-            let staged = match &self.pinned {
-                Some(pool) => SlabWriter::with_capacity(pool, m.len as usize).ok(),
-                None => None,
-            };
-            let block = match staged {
-                Some(mut w) => {
-                    self.store.get_range_into(key, m.offset, m.len, &mut w)?;
-                    StagedBytes::Pinned(SlabSlice::whole(w.finish()))
-                }
-                None => StagedBytes::Heap(self.store.get_range(key, m.offset, m.len)?),
-            };
+            // The whole request is inside the retry closure: a fresh
+            // `SlabWriter` per attempt, so a fault that fires after a
+            // partial `get_range_into` can never leave torn bytes in a
+            // slab that a later attempt would append to.
+            let block =
+                fault::with_retry(self.retry, self.metrics.get(), "storage_get", || {
+                    let staged = match &self.pinned {
+                        Some(pool) => SlabWriter::with_capacity(pool, m.len as usize).ok(),
+                        None => None,
+                    };
+                    Ok(match staged {
+                        Some(mut w) => {
+                            self.store.get_range_into(key, m.offset, m.len, &mut w)?;
+                            StagedBytes::Pinned(SlabSlice::whole(w.finish()))
+                        }
+                        None => {
+                            StagedBytes::Heap(self.store.get_range(key, m.offset, m.len)?)
+                        }
+                    })
+                })?;
             blocks.push((m.offset, block));
         }
         // slice each requested range out of its merged block
@@ -337,12 +386,15 @@ impl Datasource for CustomObjectStoreDatasource {
             return Ok(f.clone());
         }
         self.stats.lock().unwrap().footer_misses += 1;
-        let file_len = self.store.head(key)?;
-        let (toff, tlen) = FileFooter::tail_range(file_len);
-        let tail = self.store.get_range(key, toff, tlen)?;
-        let (foff, flen) = FileFooter::footer_range(&tail, file_len)?;
-        let fbytes = self.store.get_range(key, foff, flen)?;
-        let footer = Arc::new(FileFooter::decode(&fbytes)?);
+        let footer =
+            fault::with_retry(self.retry, self.metrics.get(), "storage_get", || {
+                let file_len = self.store.head(key)?;
+                let (toff, tlen) = FileFooter::tail_range(file_len);
+                let tail = self.store.get_range(key, toff, tlen)?;
+                let (foff, flen) = FileFooter::footer_range(&tail, file_len)?;
+                let fbytes = self.store.get_range(key, foff, flen)?;
+                Ok(Arc::new(FileFooter::decode(&fbytes)?))
+            })?;
         self.footers
             .lock()
             .unwrap()

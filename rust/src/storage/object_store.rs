@@ -164,6 +164,7 @@ impl ObjectStore for SimObjectStore {
     }
 
     fn get_range(&self, key: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+        crate::fault::check(crate::fault::FaultSite::StorageGet)?;
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.bytes.fetch_add(len, Ordering::Relaxed);
         self.with_conn(len as usize, || {
@@ -197,6 +198,7 @@ impl ObjectStore for SimObjectStore {
         len: u64,
         out: &mut dyn std::io::Write,
     ) -> Result<()> {
+        crate::fault::check(crate::fault::FaultSite::StorageGet)?;
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.bytes.fetch_add(len, Ordering::Relaxed);
         self.with_conn(len as usize, || {
@@ -232,6 +234,7 @@ impl ObjectStore for SimObjectStore {
     }
 
     fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+        crate::fault::check(crate::fault::FaultSite::StoragePut)?;
         if let Some(p) = self.path_of(key) {
             if let Some(dir) = p.parent() {
                 std::fs::create_dir_all(dir)?;

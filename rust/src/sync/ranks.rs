@@ -11,6 +11,11 @@
 //! acquire an [`crate::sync::OrderedMutex`] whose rank is strictly
 //! greater than every rank it already holds.
 
+/// `FaultInjector.install` — serializes fault-plan installers
+/// process-wide.
+/// Rank 0 territory: a `FaultScope` holds it across whole test bodies,
+/// so every other lock in the crate must rank above it.
+pub const FAULT_INSTALL: u16 = 10;
 /// `CtrlInner.state` — admission-controller queue + ready set.
 pub const ADMISSION_STATE: u16 = 100;
 /// `ServingCache.results` — exact-result LRU.
@@ -32,6 +37,10 @@ pub const MOVEMENT_HEAP: u16 = 134;
 /// `ShuffleCoalescer.shards[i]` — per-destination builder shard (all
 /// shards share the rank: they must never nest).
 pub const EXCHANGE_SHARD: u16 = 150;
+/// `Router.pending` — frames parked for not-yet-registered channels.
+pub const ROUTER_PENDING: u16 = 208;
+/// `Router.control` — control-plane frame queue (estimates, plans).
+pub const ROUTER_CONTROL: u16 = 210;
 /// `Outbox.q` — outbound frame queue.
 pub const OUTBOX_Q: u16 = 220;
 /// `Outbox.credits` — per-destination credit windows (locked after
@@ -39,9 +48,18 @@ pub const OUTBOX_Q: u16 = 220;
 pub const OUTBOX_CREDITS: u16 = 230;
 /// `Outbox.send_latency` — per-destination send-latency EWMA.
 pub const OUTBOX_SEND_LATENCY: u16 = 236;
+/// `Inbox.q` (tcp back-end) — per-worker received-frame queue.
+pub const INBOX_TCP_Q: u16 = 250;
+/// `Inbox.q` (inproc back-end) — per-worker received-frame queue.
+pub const INBOX_INPROC_Q: u16 = 252;
 /// `reservation::Inner.reserved` — governor's reserved-byte ledger.
 pub const GOVERNOR_RESERVED: u16 = 300;
 /// `PressureEvent.state` — pressure epoch + pending reasons. A leaf:
 /// raised while `pinned.free`, `sched.listeners`, or an exchange shard
 /// is held, and never held across another acquisition itself.
 pub const PRESSURE_STATE: u16 = 390;
+/// `FaultInjector.state` — the installed fault plan + per-site op
+/// counters.
+/// Near-leaf: taken briefly inside `fault::check` (which can run under
+/// almost any lock in the crate); only the metrics sinks rank above.
+pub const FAULT_STATE: u16 = 950;

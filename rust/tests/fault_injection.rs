@@ -1,0 +1,545 @@
+//! Deterministic fault-injection suite (see FAULTS.md).
+//!
+//! These tests install process-global [`theseus::fault`] plans, so they
+//! live in their own test binary: an installed plan can never leak
+//! faults into unrelated lib or integration tests running in other
+//! processes. *Within* this binary the tests serialize on `SERIAL` —
+//! fault-free baselines must run with no plan installed, and the
+//! injector's per-site op counters are process-wide, so two tests
+//! interleaving would corrupt each other's schedules.
+//!
+//! Every test snapshots its metrics into
+//! `target/fault_injection_metrics.txt` *before* asserting, so a CI
+//! failure uploads the schedule that actually ran.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use theseus::cluster::client::{connect, Client};
+use theseus::config::WorkerConfig;
+use theseus::exec::plan::{AggFn, AggSpec, Pred};
+use theseus::fault::{self, FaultPlan, FaultSite};
+use theseus::memory::spill::SpillStore;
+use theseus::metrics::Metrics;
+use theseus::planner::Logical;
+use theseus::sim::SimContext;
+use theseus::storage::compression::Codec;
+use theseus::storage::format::FileWriter;
+use theseus::storage::object_store::{ObjectStore, SimObjectStore};
+use theseus::types::{Column, DType, Field, RecordBatch, Schema};
+use theseus::util::rng::Rng;
+
+/// Serializes the whole suite: baselines need a fault-free process and
+/// the injector's op counters are global. (The install guard alone is
+/// not enough — it only covers the scope's lifetime, not the fault-free
+/// phases around it.)
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Write the per-test metrics artifact before any assertion can panic.
+fn artifact(test: &str, detail: &str, metrics: &Metrics) {
+    let _ = std::fs::create_dir_all("target");
+    let _ = std::fs::write(
+        "target/fault_injection_metrics.txt",
+        format!("test: {test}\n{detail}\n\n{}", metrics.snapshot()),
+    );
+}
+
+// ---------------------------------------------------------- injector
+
+/// Explicit nth-op rules fire exactly on schedule, firings are mirrored
+/// into the installed metrics sink, and dropping the scope restores the
+/// no-op fast path.
+#[test]
+fn nth_schedule_fires_exactly_and_scope_restores() {
+    let _g = serial();
+    let m = Arc::new(Metrics::default());
+    let plan = FaultPlan::new()
+        .fail_nth(FaultSite::StorageGet, 2)
+        .fail_nth_count(FaultSite::SpillRead, 1, 2);
+    let scope = fault::install_with_metrics(plan, Some(m.clone()));
+    let total0 = fault::injected_total();
+    let get0 = fault::injected_for(FaultSite::StorageGet);
+
+    assert!(fault::check(FaultSite::StorageGet).is_ok(), "op 1: before nth");
+    let err = fault::check(FaultSite::StorageGet).unwrap_err();
+    assert!(err.is_transient(), "injected faults must classify transient");
+    assert!(err.is_retryable());
+    assert!(err.to_string().contains("storage_get"), "site named in error: {err}");
+    assert!(fault::check(FaultSite::StorageGet).is_ok(), "op 3: past nth");
+
+    assert!(fault::check(FaultSite::SpillRead).is_err(), "count window op 1");
+    assert!(fault::check(FaultSite::SpillRead).is_err(), "count window op 2");
+    assert!(fault::check(FaultSite::SpillRead).is_ok(), "count window closed");
+    // an unscheduled site never fires
+    assert!(fault::check(FaultSite::NetRecv).is_ok());
+
+    artifact("nth_schedule", "explicit rules: storage_get@2, spill_read@1..2", &m);
+    assert_eq!(fault::injected_total() - total0, 3);
+    assert_eq!(fault::injected_for(FaultSite::StorageGet) - get0, 1);
+    assert_eq!(m.counter_value("fault.injected_total"), 3);
+    assert_eq!(m.counter_value("fault.injected_total.storage_get"), 1);
+    assert_eq!(m.counter_value("fault.injected_total.spill_read"), 2);
+
+    drop(scope);
+    let after = fault::injected_total();
+    for site in FaultSite::ALL {
+        assert!(fault::check(site).is_ok(), "uninstalled injector must pass");
+    }
+    assert_eq!(fault::injected_total(), after, "no counting once uninstalled");
+}
+
+/// The seeded mode is a pure function of (seed, op sequence): two
+/// installs of the same plan fire on exactly the same ops.
+#[test]
+fn seeded_plans_replay_identically() {
+    let _g = serial();
+    let run = || {
+        let _scope = fault::install(FaultPlan::seeded(0xFEED_FACE, 400, 8));
+        (0..64)
+            .map(|_| fault::check(FaultSite::StorageGet).is_err())
+            .collect::<Vec<bool>>()
+    };
+    let a = run();
+    let b = run();
+    artifact(
+        "seeded_replay",
+        &format!("firings: {}", a.iter().filter(|f| **f).count()),
+        &Metrics::default(),
+    );
+    assert_eq!(a, b, "same seed + same workload must fire on the same ops");
+    let fired = a.iter().filter(|f| **f).count();
+    assert!(fired > 0, "per-mille 400 over 64 ops must fire at least once");
+    assert!(fired <= 8, "max_faults must cap the seeded mode");
+}
+
+// ------------------------------------------------------------- spill
+
+/// An injected segment-write fault fails over into a fresh segment: the
+/// old one is sealed poisoned, the payload lands byte-identically, and
+/// the failover is counted. A sustained write storm (more faults than
+/// the failover ladder tolerates) surfaces as a transient error instead
+/// of looping forever.
+#[test]
+fn spill_write_failover_rotates_and_preserves_bytes() {
+    let _g = serial();
+    let store = SpillStore::temp("fault-failover").unwrap();
+    let m = Arc::new(Metrics::default());
+
+    let scope = fault::install_with_metrics(
+        FaultPlan::new()
+            .fail_nth(FaultSite::SpillWrite, 1)
+            .fail_nth(FaultSite::SpillRead, 2),
+        Some(m.clone()),
+    );
+    let slot = store.write_vectored(&[b"hello ", b"spilled ", b"world"]).unwrap();
+    artifact(
+        "spill_failover",
+        &format!("failovers: {}", store.write_failover_total()),
+        &m,
+    );
+    assert_eq!(store.write_failover_total(), 1, "one fault, one failover");
+    assert_eq!(store.read(slot).unwrap(), b"hello spilled world");
+    // spill_read op 2 is scheduled: the second read fails transient,
+    // the third sees the same bytes again — reads are idempotent
+    let err = store.read(slot).unwrap_err();
+    assert!(err.is_transient(), "injected spill read: {err}");
+    assert_eq!(store.read(slot).unwrap(), b"hello spilled world");
+    drop(scope);
+
+    // a storm longer than the failover ladder (> 3 rotations) must
+    // give up loudly rather than rotate segments forever
+    let _scope = fault::install(FaultPlan::new().fail_nth_count(FaultSite::SpillWrite, 1, 16));
+    let err = store.write_vectored(&[b"doomed"]).unwrap_err();
+    assert!(err.is_transient(), "exhausted failover stays transient: {err}");
+    assert!(store.write_failover_total() > 1, "storm must have rotated segments");
+}
+
+// ----------------------------------------------------------- cluster
+
+const SEED: u64 = 42;
+
+/// Integer-valued fact table (f64 sums of small integers are exact and
+/// order-independent, so results compare byte-for-byte).
+fn write_facts(store: &dyn ObjectStore, files: usize, rows: usize) {
+    let mut rng = Rng::new(SEED);
+    let schema =
+        Schema::new(vec![Field::new("k", DType::Int64), Field::new("v", DType::Int64)]);
+    for f in 0..files {
+        let batch = RecordBatch::new(vec![
+            Column::i64("k", (0..rows).map(|_| rng.gen_i64(0, 9)).collect()),
+            Column::i64("v", (0..rows).map(|_| rng.gen_i64(0, 99)).collect()),
+        ])
+        .unwrap();
+        let mut w = FileWriter::new(schema.clone(), Codec::Zstd { level: 1 }, 256);
+        w.write(batch).unwrap();
+        store.put(&format!("facts/{f}.ths"), &w.finish().unwrap()).unwrap();
+    }
+}
+
+fn facts_query() -> Logical {
+    Logical::scan("facts", &["k", "v"])
+        .filter(Pred::RangeI64 { col: "k".into(), lo: 0, hi: 10 })
+        .aggregate("k", vec![AggSpec::new(AggFn::Sum, "v")])
+        .sort("k", false)
+}
+
+fn facts_client(cfg: WorkerConfig) -> (Client, Arc<SimObjectStore>) {
+    let store = SimObjectStore::in_memory(&SimContext::test());
+    write_facts(&*store, 4, 600);
+    let client = connect(cfg, store.clone(), None).unwrap();
+    (client, store)
+}
+
+/// The acceptance schedule: one deterministic plan covering a transient
+/// object-store read fault (absorbed by the storage retry ladder), a
+/// spill-segment write fault (absorbed by failover), and a dropped
+/// first network send (absorbed by the lane's send-retry) — and the
+/// query result stays byte-identical to the fault-free baseline.
+#[test]
+fn three_plane_schedule_recovers_byte_identically() {
+    let _g = serial();
+    let (client, _store) = facts_client(WorkerConfig {
+        num_workers: 2,
+        storage_backoff_base_ms: 0,
+        ..WorkerConfig::test()
+    });
+    let q = facts_query();
+    let baseline = client.query(&q).unwrap();
+
+    let metrics = client.gateway().cluster.metrics.clone();
+    let spill = SpillStore::temp("fault-three-plane").unwrap();
+    let scope = fault::install_with_metrics(
+        FaultPlan::new()
+            // ops 2 and 3 of storage_get fail: whatever call sites they
+            // land on see at most 2 consecutive failures, within the
+            // default storage_retry_limit of 3
+            .fail_nth_count(FaultSite::StorageGet, 2, 2)
+            // the very first frame send fails once; the sender lane
+            // retries it in place (4 attempts before peer-down)
+            .fail_nth(FaultSite::NetSend, 1)
+            // the first spill-segment write fails; failover rotates
+            .fail_nth(FaultSite::SpillWrite, 1),
+        Some(metrics.clone()),
+    );
+
+    // spill plane: same installed schedule, exercised directly
+    let slot = spill.write_vectored(&[b"three-plane"]).unwrap();
+    assert_eq!(spill.read(slot).unwrap(), b"three-plane");
+
+    // storage + network planes: the full cluster query under faults
+    let faulted = client.query(&q).unwrap();
+
+    artifact(
+        "three_plane",
+        &format!(
+            "injected: {} (storage_get {}, net_send {}, spill_write {})",
+            metrics.counter_value("fault.injected_total"),
+            metrics.counter_value("fault.injected_total.storage_get"),
+            metrics.counter_value("fault.injected_total.net_send"),
+            metrics.counter_value("fault.injected_total.spill_write"),
+        ),
+        &metrics,
+    );
+    assert_eq!(
+        faulted.batch.encode(),
+        baseline.batch.encode(),
+        "recovered run must be byte-identical to the fault-free baseline"
+    );
+    assert_eq!(metrics.counter_value("fault.injected_total.spill_write"), 1);
+    assert_eq!(metrics.counter_value("fault.injected_total.storage_get"), 2);
+    assert_eq!(metrics.counter_value("fault.injected_total.net_send"), 1);
+    assert!(
+        metrics.counter_value("retry.attempts_total") > 0,
+        "recovery must have gone through the bounded-retry ladder"
+    );
+    assert_eq!(
+        metrics.counter_value("gateway.query_retry_total"),
+        0,
+        "op-level ladders must absorb this schedule before the gateway rung"
+    );
+
+    drop(scope);
+    let clean = client.query(&q).unwrap();
+    assert_eq!(clean.batch.encode(), baseline.batch.encode());
+}
+
+/// A storage-fault window longer than the op-level retry ladder
+/// escalates to the gateway rung: the whole query is torn down and
+/// re-run (fresh qid, fresh per-query state) until the schedule is
+/// exhausted, and the final result is still byte-identical.
+#[test]
+fn storage_exhaustion_escalates_to_query_retry() {
+    let _g = serial();
+    let (client, _store) = facts_client(WorkerConfig {
+        num_workers: 2,
+        storage_retry_limit: 2,
+        storage_backoff_base_ms: 0,
+        query_retry_limit: 6,
+        ..WorkerConfig::test()
+    });
+    let q = facts_query();
+    let baseline = client.query(&q).unwrap();
+
+    let metrics = client.gateway().cluster.metrics.clone();
+    // 8 consecutive storage failures: every op-level ladder (limit 2)
+    // exhausts, each failed run burns >= 2 ops, so the gateway recovers
+    // within at most 4 re-runs — inside query_retry_limit = 6
+    let scope = fault::install_with_metrics(
+        FaultPlan::new().fail_nth_count(FaultSite::StorageGet, 1, 8),
+        Some(metrics.clone()),
+    );
+    let faulted = client.query(&q).unwrap();
+    drop(scope);
+
+    artifact(
+        "query_retry",
+        &format!(
+            "query re-runs: {}",
+            metrics.counter_value("gateway.query_retry_total")
+        ),
+        &metrics,
+    );
+    assert_eq!(faulted.batch.encode(), baseline.batch.encode());
+    assert!(
+        metrics.counter_value("gateway.query_retry_total") >= 1,
+        "an exhausted storage ladder must escalate to a query re-run"
+    );
+    assert!(metrics.counter_value("retry.attempts_total") > 0);
+    assert_eq!(
+        client.gateway().admission.reserved_bytes(),
+        0,
+        "admission grant returned after the retried query"
+    );
+}
+
+/// A schedule that outlasts `query_retry_limit` fails *cleanly*: the
+/// caller gets a retryable error, no admission reservation leaks, and
+/// the next query (fault scope dropped) succeeds byte-identically.
+#[test]
+fn retry_exhaustion_is_clean_and_leak_free() {
+    let _g = serial();
+    let (client, _store) = facts_client(WorkerConfig {
+        num_workers: 2,
+        storage_retry_limit: 2,
+        storage_backoff_base_ms: 0,
+        query_retry_limit: 1,
+        ..WorkerConfig::test()
+    });
+    let q = facts_query();
+    let baseline = client.query(&q).unwrap();
+
+    let metrics = client.gateway().cluster.metrics.clone();
+    // an effectively-permanent storage storm: every attempt of every
+    // run fails, so op-level retry, then the single allowed re-run,
+    // then the gateway give up in order
+    let scope = fault::install_with_metrics(
+        FaultPlan::new().fail_nth_count(FaultSite::StorageGet, 1, 100_000),
+        Some(metrics.clone()),
+    );
+    let err = client.query(&q).unwrap_err();
+    drop(scope);
+
+    artifact("retry_exhausted", &format!("error: {err}"), &metrics);
+    assert!(err.is_transient(), "exhaustion must stay transient: {err}");
+    assert!(err.is_retryable(), "callers may resubmit: {err}");
+    assert!(
+        metrics.counter_value("gateway.query_retry_total") >= 1,
+        "the re-run budget must have been spent before giving up"
+    );
+    assert!(
+        metrics.counter_value("retry.exhausted_total") >= 1,
+        "giving up must be counted"
+    );
+    assert_eq!(
+        client.gateway().admission.reserved_bytes(),
+        0,
+        "failed query must not leak its admission reservation"
+    );
+    // the cluster is still healthy: same client, next query succeeds
+    let after = client.query(&q).unwrap();
+    assert_eq!(after.batch.encode(), baseline.batch.encode());
+}
+
+// ----------------------------------------------------------- network
+
+/// Injected mid-frame disconnect (satellite of FAULTS.md §network): a
+/// send-fault storm longer than the lane's attempt budget drops the
+/// frame with peer-down escalation; the dropped frame's credit never
+/// comes back, so the rest of the data stays credit-blocked — and
+/// [`Outbox::close`] must discard those frames loudly
+/// (`net.close_unsent_total`), let the Finish drain, and leave
+/// [`NetworkExecutor::flush`] returning instead of hanging.
+#[test]
+fn outbox_close_discards_blocked_frames_after_peer_down() {
+    use theseus::config::TransportKind;
+    use theseus::exec::WorkerCtx;
+    use theseus::executors::network::{ChannelRx, NetworkExecutor, Outbox, Router};
+    use theseus::memory::BatchHolder;
+    use theseus::network::InprocHub;
+
+    let _g = serial();
+    let ctx = WorkerCtx::test();
+    let hub = InprocHub::new(1, &SimContext::test(), TransportKind::Tcp);
+    let ep = hub.endpoints().remove(0);
+    let metrics = Arc::new(Metrics::default());
+    let router = Arc::new(Router::new());
+    router.install_metrics(metrics.clone());
+    let outbox = Arc::new(Outbox::new(64));
+    outbox.enable_credits(1);
+    outbox.install_metrics(metrics.clone());
+
+    // the first frame's send dies on all 4 lane attempts
+    // (NET_SEND_ATTEMPTS) -> peer-down, frame dropped
+    let scope = fault::install_with_metrics(
+        FaultPlan::new().fail_nth_count(FaultSite::NetSend, 1, 4),
+        Some(metrics.clone()),
+    );
+
+    let net = NetworkExecutor::start(Arc::new(ep), outbox.clone(), router.clone(), None, None, 1);
+    let rx_holder = BatchHolder::new("rx", ctx.env.clone());
+    let rx = Arc::new(ChannelRx::new(rx_holder.clone(), 1));
+    router.register(9, rx.clone());
+
+    for i in 0..3i64 {
+        let b = RecordBatch::new(vec![Column::i64("k", vec![i; 8])]).unwrap();
+        outbox.send_encoded(0, 9, b.encode()).unwrap();
+    }
+    outbox.send_finish(0, 9).unwrap();
+
+    // frame 1 consumes the only credit, then dies mid-send
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while metrics.counter_value("net.peer_down_total") < 1 {
+        assert!(std::time::Instant::now() < deadline, "peer-down never escalated");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // frames 2 and 3 are credit-blocked forever (their credit died with
+    // frame 1); close must discard them and surface the Finish
+    outbox.close();
+    assert!(net.flush(Duration::from_secs(10)), "flush must not hang after close");
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while !rx_holder.is_finished() {
+        assert!(std::time::Instant::now() < deadline, "Finish never drained");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    drop(scope);
+
+    artifact(
+        "outbox_close",
+        &format!(
+            "close_unsent: {} peer_down: {} send_retry: {}",
+            outbox.close_unsent(),
+            metrics.counter_value("net.peer_down_total"),
+            metrics.counter_value("net.send_retry_total"),
+        ),
+        &metrics,
+    );
+    let stats = rx_holder.stats();
+    assert_eq!(
+        stats.device_batches + stats.host_batches + stats.disk_batches,
+        0,
+        "the dropped frame must not have been delivered"
+    );
+    assert_eq!(outbox.close_unsent(), 2, "both blocked data frames discarded");
+    assert_eq!(metrics.counter_value("net.close_unsent_total"), 2);
+    assert_eq!(metrics.counter_value("net.peer_down_total"), 1);
+    assert_eq!(
+        metrics.counter_value("net.send_retry_total"),
+        3,
+        "attempts 2..4 of the doomed frame count as retries"
+    );
+    assert_eq!(metrics.counter_value("fault.injected_total.net_send"), 4);
+    assert!(outbox.is_empty(), "drain completed");
+    net.stop();
+}
+
+// ---------------------------------------------------------- property
+
+/// One random schedule entry. Site 3 (net_send) is generated with
+/// `count <= 2` — below the lane's 4-attempt budget — so a frame is
+/// never dropped outright; `net_recv` is excluded entirely (a dropped
+/// frame wedges the exchange until the query deadline, which is a
+/// liveness scenario, not a recovery one).
+#[derive(Clone, Debug)]
+struct SchedRule {
+    site: u8,
+    nth: u64,
+    count: u64,
+}
+
+impl theseus::testing::Shrink for SchedRule {
+    fn shrink(&self) -> Vec<SchedRule> {
+        let mut out = Vec::new();
+        if self.count > 1 {
+            out.push(SchedRule { count: self.count / 2, ..*self });
+        }
+        if self.nth > 1 {
+            out.push(SchedRule { nth: self.nth / 2, ..*self });
+        }
+        out
+    }
+}
+
+fn sched_site(tag: u8) -> FaultSite {
+    match tag % 4 {
+        0 => FaultSite::StorageGet,
+        1 => FaultSite::SpillRead,
+        2 => FaultSite::SpillWrite,
+        _ => FaultSite::NetSend,
+    }
+}
+
+fn gen_sched(rng: &mut Rng) -> Vec<SchedRule> {
+    let n = 1 + rng.gen_range(3) as usize;
+    (0..n)
+        .map(|_| {
+            let site = rng.gen_range(4) as u8;
+            let count = if site % 4 == 3 {
+                1 + rng.gen_range(2)
+            } else {
+                1 + rng.gen_range(5)
+            };
+            SchedRule { site, nth: 1 + rng.gen_range(10), count }
+        })
+        .collect()
+}
+
+/// Every generated schedule must land in one of exactly two end states:
+/// the recovery ladders absorb it and the result is byte-identical to
+/// the fault-free baseline, or the gateway gives up with a *retryable*
+/// error. Either way no admission reservation may leak.
+#[test]
+fn random_schedules_recover_or_fail_retryably() {
+    let _g = serial();
+    let (client, _store) = facts_client(WorkerConfig {
+        num_workers: 2,
+        storage_retry_limit: 2,
+        storage_backoff_base_ms: 0,
+        query_retry_limit: 3,
+        query_timeout_ms: 15_000,
+        ..WorkerConfig::test()
+    });
+    let q = facts_query();
+    let baseline = client.query(&q).unwrap().batch.encode();
+    let metrics = client.gateway().cluster.metrics.clone();
+
+    theseus::testing::check(0x5C4ED, 6, gen_sched, |rules: &Vec<SchedRule>| {
+        let mut plan = FaultPlan::new();
+        for r in rules {
+            plan = plan.fail_nth_count(sched_site(r.site), r.nth, r.count);
+        }
+        let scope = fault::install_with_metrics(plan, Some(metrics.clone()));
+        let res = client.query(&q);
+        drop(scope);
+        artifact("random_schedules", &format!("rules: {rules:?}"), &metrics);
+        let outcome_ok = match res {
+            Ok(r) => r.batch.encode() == baseline,
+            Err(e) => e.is_retryable(),
+        };
+        outcome_ok && client.gateway().admission.reserved_bytes() == 0
+    });
+}

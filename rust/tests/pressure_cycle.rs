@@ -928,3 +928,66 @@ fn high_priority_session_admits_before_earlier_batch_waiters() {
         "priority admits past the backlog; the batch class stays FIFO"
     );
 }
+
+/// RAII per-query cleanup (PR 10's `QueryScope`): a worker panic
+/// mid-query must tear down every per-query trace on the error path —
+/// the admission reservation comes back, every worker's governor ledger
+/// returns to zero — and the same cluster must then answer the same
+/// query byte-identically. The seed's failure path returned early and
+/// left the panicked query's holders and reservations behind.
+#[test]
+fn mid_query_panic_leaves_no_residue() {
+    let (_store, client) =
+        facts_client(WorkerConfig { num_workers: 2, ..WorkerConfig::test() });
+    let q = facts_drill(0);
+    let baseline = client.query(&q).unwrap();
+    let gw = client.gateway();
+
+    gw.cluster.workers[1].inject_panic_next();
+    let err = client.query(&q).unwrap_err();
+
+    // the panicked query's reservations drain as its tasks unwind;
+    // poll briefly instead of racing the executor threads
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let leaked = |gw: &theseus::cluster::Gateway| -> usize {
+        gw.admission.reserved_bytes() as usize
+            + gw.cluster.workers.iter().map(|w| w.ctx.governor.reserved()).sum::<usize>()
+    };
+    while leaked(gw) != 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // CI failure artifact, written before any assertion can panic
+    let _ = std::fs::create_dir_all("target");
+    let _ = std::fs::write(
+        "target/query_scope_residue_metrics.txt",
+        format!(
+            "error: {err}\nadmission reserved: {}\ngovernor reserved: {:?}\n\n{}",
+            gw.admission.reserved_bytes(),
+            gw.cluster.workers.iter().map(|w| w.ctx.governor.reserved()).collect::<Vec<_>>(),
+            gw.cluster.metrics.snapshot()
+        ),
+    );
+
+    assert!(
+        matches!(err, theseus::Error::WorkerPanic { .. }),
+        "panic must surface as WorkerPanic (not retried): {err}"
+    );
+    assert_eq!(gw.admission.reserved_bytes(), 0, "admission grant leaked");
+    for w in &gw.cluster.workers {
+        assert_eq!(
+            w.ctx.governor.reserved(),
+            0,
+            "worker {} governor ledger leaked",
+            w.ctx.worker_id
+        );
+    }
+    assert!(gw.cluster.metrics.counter_value("gateway.worker_panic_total") >= 1);
+
+    let after = client.query(&q).unwrap();
+    assert_eq!(
+        after.batch.encode(),
+        baseline.batch.encode(),
+        "cluster must stay healthy after the contained panic"
+    );
+}

@@ -1353,3 +1353,122 @@ fn admit_case_holds(case: &AdmitCase) -> bool {
 fn admission_is_fair_bounded_and_always_drains() {
     check(0xAD317, 400, gen_admit_case, admit_case_holds);
 }
+
+// ---------------------------------------------- bounded retry (PR 10)
+
+use theseus::fault::{self, RetryPolicy};
+
+/// Scripted attempt outcomes for one `with_retry` call: 0 = success,
+/// 1 = transient failure, 2 = permanent failure (ops past the script's
+/// end succeed).
+#[derive(Clone, Debug)]
+struct RetryCase {
+    limit: usize,
+    script: Vec<u8>,
+}
+
+impl Shrink for RetryCase {
+    fn shrink(&self) -> Vec<RetryCase> {
+        let mut out: Vec<RetryCase> = self
+            .script
+            .shrink()
+            .into_iter()
+            .map(|script| RetryCase { limit: self.limit, script })
+            .collect();
+        if self.limit > 0 {
+            out.push(RetryCase { limit: self.limit - 1, script: self.script.clone() });
+        }
+        out
+    }
+}
+
+fn gen_retry_case(rng: &mut Rng) -> RetryCase {
+    let n = rng.gen_range(8) as usize;
+    RetryCase {
+        limit: rng.gen_range(5) as usize,
+        script: (0..n).map(|_| rng.gen_range(3) as u8).collect(),
+    }
+}
+
+/// `with_retry` against an attempt-by-attempt model: transient failures
+/// retry (each one counted) up to the limit, the first success or
+/// permanent failure stops the ladder, classification survives the way
+/// out, and the op is called exactly as many times as the model says.
+fn retry_case_holds(case: &RetryCase) -> bool {
+    let metrics = Arc::new(Metrics::default());
+    let mut calls = 0usize;
+    let res: theseus::Result<u32> = fault::with_retry(
+        RetryPolicy { limit: case.limit, base_ms: 0 },
+        Some(&metrics),
+        "prop",
+        || {
+            let out = case.script.get(calls).copied().unwrap_or(0);
+            calls += 1;
+            match out {
+                0 => Ok(7),
+                1 => Err(Error::Transient { site: "prop", detail: "scripted".into() }),
+                _ => Err(theseus::Error::internal("scripted permanent")),
+            }
+        },
+    );
+
+    // the model: attempts run 1..=max(limit, 1); a transient outcome
+    // retries (counted) unless it was the last allowed attempt
+    let limit = case.limit.max(1);
+    let mut want_calls = 0usize;
+    let mut want_retries = 0u64;
+    let mut want = 0u8;
+    for attempt in 1..=limit {
+        want_calls = attempt;
+        want = case.script.get(attempt - 1).copied().unwrap_or(0);
+        match want {
+            1 if attempt < limit => want_retries += 1,
+            _ => break,
+        }
+    }
+
+    if calls != want_calls {
+        return false;
+    }
+    if metrics.counter_value("retry.attempts_total") != want_retries {
+        return false;
+    }
+    match (want, res) {
+        (0, Ok(7)) => true,
+        // exhausted transient stays transient (the gateway rung decides)
+        (1, Err(e)) => e.is_transient() && e.is_retryable(),
+        // permanent failures are never retried and never retryable
+        (2, Err(e)) => !e.is_transient() && !e.is_retryable(),
+        _ => false,
+    }
+}
+
+#[test]
+fn retry_ladder_matches_scripted_model() {
+    check(0xFA017, 300, gen_retry_case, retry_case_holds);
+}
+
+#[test]
+fn backoff_is_a_pure_growing_capped_function() {
+    check(
+        0xBAC0FF,
+        200,
+        |rng| (rng.gen_range(50) + 1, rng.gen_range(5) as usize + 1),
+        |&(base, attempt)| {
+            let d = fault::backoff("prop", attempt, base);
+            // pure: same (site, attempt, base) -> same delay
+            if d != fault::backoff("prop", attempt, base) {
+                return false;
+            }
+            // zero base never sleeps
+            if fault::backoff("prop", attempt, 0) != std::time::Duration::ZERO {
+                return false;
+            }
+            // strictly grows below the 32x cap, and never exceeds
+            // cap + jitter
+            let next = fault::backoff("prop", attempt + 1, base);
+            (attempt >= 6 || next > d)
+                && d <= std::time::Duration::from_millis(base * 32 + base / 2)
+        },
+    );
+}
